@@ -1,0 +1,76 @@
+//! GLUE-sim suite across PEFT methods — the Table 2 workflow as a library
+//! consumer would run it: pretrain (or load) a backbone, build the job
+//! grid, fan it over the coordinator, and print the paper-style table.
+//!
+//! ```bash
+//! cargo run --release --example glue_suite -- --seeds 1,2 --epochs 3
+//! ```
+
+use psoft::config::{DataConfig, MethodKind, ModelConfig, PeftConfig, TrainConfig};
+use psoft::coordinator::{aggregate, grid, report, DeviceBudget, SuiteRunner};
+use psoft::data::suite_tasks;
+use psoft::model::Backbone;
+use psoft::util::cli::Args;
+use psoft::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let cfg = ModelConfig::encoder_small();
+    let mut rng = Rng::new(42);
+    let backbone = match args.get("backbone") {
+        Some(p) => Backbone::load(std::path::Path::new(p))?,
+        None => Backbone::random(&cfg, &mut rng),
+    };
+
+    let seeds: Vec<u64> = if args.get("seeds").is_some() {
+        args.usize_list("seeds")?.into_iter().map(|s| s as u64).collect()
+    } else {
+        vec![1, 2]
+    };
+
+    let tasks: Vec<DataConfig> = suite_tasks("glue")
+        .into_iter()
+        .map(|t| {
+            let mut d = DataConfig::new("glue", t);
+            d.n_train = args.usize("n-train", 200).unwrap();
+            d.n_val = 64;
+            d.n_test = 64;
+            d.seq_len = 24;
+            d
+        })
+        .collect();
+
+    let methods: Vec<(String, PeftConfig)> = [
+        (MethodKind::Psoft, 46),
+        (MethodKind::Lora, 8),
+        (MethodKind::Pissa, 8),
+        (MethodKind::LoraXs, 46),
+        (MethodKind::OftV2, 0),
+        (MethodKind::Dora, 8),
+    ]
+    .into_iter()
+    .map(|(m, r)| {
+        let mut p = PeftConfig::new(m, r.max(1));
+        p.modules = backbone.cfg.modules();
+        p.oft_block_size = 32;
+        (format!("{}_r{}", m.name(), r.max(1)), p)
+    })
+    .collect();
+
+    let mut tc = TrainConfig::default();
+    tc.epochs = args.usize("epochs", 3)?;
+    tc.batch_size = 32;
+    tc.lr = 2e-3;
+    tc.head_lr = 2e-3;
+
+    let jobs = grid(&tasks, &methods, &tc, &seeds);
+    println!("running {} jobs…", jobs.len());
+    let runner = Arc::new(SuiteRunner::new(backbone, DeviceBudget::unlimited()));
+    let results = runner.run_all(jobs, psoft::util::threadpool::default_parallelism());
+    let cells = aggregate(&results);
+    let table = report::Table::from_cells("GLUE-sim (Table 2 workflow)", &suite_tasks("glue"), &cells);
+    println!("{}", table.to_markdown());
+    report::write_bundle(std::path::Path::new("reports"), "example_glue_suite", &table)?;
+    Ok(())
+}

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: OFTv2 input-centric block-diagonal rotation.
+
+z = x · diag(R_1 … R_k) with equal b×b blocks stacked as rots [k, b, b].
+Grid runs over (token block, feature block); each step is one [T_blk, b] ×
+[b, b] matmul with the block's rotation pinned in VMEM — the input-centric
+trick of OFTv2 (rotate activations, never materialize R·W).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blockdiag_kernel(x_ref, rot_ref, out_ref):
+    x = x_ref[...]  # [T_blk, b]
+    r = rot_ref[...]  # [1, b, b]
+    out_ref[...] = jnp.dot(x, r[0], preferred_element_type=jnp.float32)
+
+
+# Reverse-mode support: VJP via the pure-jnp equivalent (the interpret-mode
+# pallas_call has no transpose rule).
+@jax.custom_vjp
+def blockdiag_rotate_ad(x, rots):
+    return blockdiag_rotate(x, rots)
+
+
+def _bd_ref(x, rots):
+    k, b, _ = rots.shape
+    xb = x.reshape(x.shape[0], k, b)
+    return jnp.einsum("tkb,kbc->tkc", xb, rots).reshape(x.shape)
+
+
+def _bd_fwd(x, rots):
+    return blockdiag_rotate(x, rots), (x, rots)
+
+
+def _bd_bwd(res, g):
+    _, vjp = jax.vjp(_bd_ref, *res)
+    return vjp(g)
+
+
+blockdiag_rotate_ad.defvjp(_bd_fwd, _bd_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def blockdiag_rotate(x, rots, block_t: int = 128):
+    """x: [T, d]; rots: [k, b, b] with k·b == d. Returns x·blockdiag(rots)."""
+    t, d = x.shape
+    k, b, b2 = rots.shape
+    assert b == b2 and k * b == d, f"blocks {k}x{b} must tile d={d}"
+    blk = min(block_t, t)
+    grid = (pl.cdiv(t, blk), k)
+    return pl.pallas_call(
+        _blockdiag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, b), lambda i, j: (i, j)),
+            pl.BlockSpec((1, b, b), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, rots)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: one butterfly stage (GOFT / BOFT with b = 2).
+
+Stage j pairs feature i with i ⊕ 2^j and applies a per-pair 2×2 matrix:
+[z_i, z_j] = [x_i, x_j] @ M_p. Implemented as a gather into (lo, hi) lanes,
+two fused multiply-adds, and a scatter back — one grid step per token
+block, the [n_pairs, 2, 2] parameter tensor pinned in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _butterfly_kernel(x_ref, mats_ref, lo_ref, hi_ref, out_ref):
+    x = x_ref[...]  # [T_blk, d]
+    mats = mats_ref[...]  # [P, 2, 2]
+    lo = lo_ref[...]  # [P]
+    hi = hi_ref[...]  # [P]
+    xl = x[:, lo]  # [T, P]
+    xh = x[:, hi]
+    zl = xl * mats[:, 0, 0][None, :] + xh * mats[:, 1, 0][None, :]
+    zh = xl * mats[:, 0, 1][None, :] + xh * mats[:, 1, 1][None, :]
+    out = x
+    out = out.at[:, lo].set(zl)
+    out = out.at[:, hi].set(zh)
+    out_ref[...] = out
+
+
+# Reverse-mode support: lo/hi are static tuples here (hashable for
+# nondiff_argnums); the VJP routes through the jnp scatter/gather oracle.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def butterfly_stage_ad(x, mats, lo: tuple, hi: tuple):
+    return butterfly_stage(x, mats, jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32))
+
+
+def _bf_ref(x, mats, lo, hi):
+    lo_a = jnp.asarray(lo, jnp.int32)
+    hi_a = jnp.asarray(hi, jnp.int32)
+    xl, xh = x[:, lo_a], x[:, hi_a]
+    zl = xl * mats[:, 0, 0][None, :] + xh * mats[:, 1, 0][None, :]
+    zh = xl * mats[:, 0, 1][None, :] + xh * mats[:, 1, 1][None, :]
+    return x.at[:, lo_a].set(zl).at[:, hi_a].set(zh)
+
+
+def _bf_fwd(x, mats, lo, hi):
+    return butterfly_stage_ad(x, mats, lo, hi), (x, mats)
+
+
+def _bf_bwd(lo, hi, res, g):
+    x, mats = res
+    _, vjp = jax.vjp(lambda xx, mm: _bf_ref(xx, mm, lo, hi), x, mats)
+    return vjp(g)
+
+
+butterfly_stage_ad.defvjp(_bf_fwd, _bf_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def butterfly_stage(x, mats, lo, hi, block_t: int = 128):
+    """x: [T, d]; mats: [P, 2, 2]; lo/hi: [P] int32 pair indices."""
+    t, d = x.shape
+    p = mats.shape[0]
+    blk = min(block_t, t)
+    grid = (pl.cdiv(t, blk),)
+    return pl.pallas_call(
+        _butterfly_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((p, 2, 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, mats, lo, hi)
+
+
+def stage_pairs(d: int, stage: int):
+    """Index pairs (i, i ⊕ 2^stage) — matches the Rust `build_stages`."""
+    stride = 1 << stage
+    lo = [i for i in range(d) if (i & stride) == 0 and (i | stride) < d]
+    hi = [i | stride for i in lo]
+    return lo, hi

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: fused PSOFT subspace linear (paper Eq. 8).
+
+    y = x·W_res + (((x·A')·diag(α))·R)·diag(β)·B'
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid runs over token
+blocks; for each [T_blk, d] tile of x the whole subspace chain
+([T_blk, r] × three r-sized tensors) lives in VMEM — A' (d×r), R (r×r),
+B' (r×n), α, β are broadcast to every grid step and pinned, while W_res
+streams through like a plain dense matmul. The r-dim intermediates never
+reach HBM, which is exactly the activation-memory claim of Appendix E
+(+72·b·s·r instead of +4·b·s·h per adapter).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _psoft_kernel(x_ref, w_res_ref, a_ref, b_ref, rot_ref, alpha_ref, beta_ref, out_ref):
+    x = x_ref[...]  # [T_blk, d]
+    # Dense residual path — the same HBM traffic as the frozen base layer.
+    acc = jnp.dot(x, w_res_ref[...], preferred_element_type=jnp.float32)
+    # Subspace chain, all r-sized, VMEM-resident.
+    p = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)  # [T, r]
+    u = p * alpha_ref[...][None, :]
+    v = jnp.dot(u, rot_ref[...], preferred_element_type=jnp.float32)
+    w = v * beta_ref[...][None, :]
+    acc = acc + jnp.dot(w, b_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def psoft_linear(x, w_res, a, b, rot, alpha, beta, block_t: int = 128):
+    """Fused PSOFT linear.
+
+    x: [T, d]; w_res: [d, n]; a: [d, r]; b: [r, n]; rot: [r, r];
+    alpha, beta: [r]. Returns [T, n].
+    """
+    t, d = x.shape
+    n = w_res.shape[1]
+    r = a.shape[1]
+    blk = min(block_t, t)
+    grid = (pl.cdiv(t, blk),)
+    return pl.pallas_call(
+        _psoft_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+            pl.BlockSpec((d, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, n), lambda i: (0, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=True,
+    )(x, w_res, a, b, rot, alpha, beta)
+
+
+# Reverse-mode support: pallas_call (interpret) has no transpose rule, so
+# the VJP is supplied explicitly via the pure-jnp oracle — forward runs the
+# kernel, backward differentiates ref.psoft_linear_ref (numerically the
+# same computation).
+@jax.custom_vjp
+def psoft_linear_ad(x, w_res, a, b, rot, alpha, beta):
+    return psoft_linear(x, w_res, a, b, rot, alpha, beta)
+
+
+def _psoft_fwd(x, w_res, a, b, rot, alpha, beta):
+    y = psoft_linear(x, w_res, a, b, rot, alpha, beta)
+    return y, (x, w_res, a, b, rot, alpha, beta)
+
+
+def _psoft_bwd(res, g):
+    from . import ref
+
+    _, vjp = jax.vjp(ref.psoft_linear_ref, *res)
+    return vjp(g)
+
+
+psoft_linear_ad.defvjp(_psoft_fwd, _psoft_bwd)
+
+
+def vmem_bytes(d: int, n: int, r: int, block_t: int = 128) -> int:
+    """Estimated VMEM working set of one grid step (fp32) — used by the
+    §Perf roofline estimate in DESIGN.md/EXPERIMENTS.md."""
+    tiles = (
+        block_t * d  # x tile
+        + d * n  # W_res tile (streamed; worst case resident)
+        + d * r
+        + r * n
+        + r * r
+        + 2 * r
+        + block_t * n  # out tile
+        + block_t * r  # chain intermediate
+    )
+    return 4 * tiles

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each kernel matches
+its oracle (`assert_allclose`), and the oracles themselves are checked
+against algebraic identities (orthogonality of the Cayley image, identity
+at zero skew, PSOFT forward == merged-weight forward).
+"""
+
+import jax.numpy as jnp
+
+
+def skew_from_params(r: int, theta):
+    """Skew-symmetric Q from its strictly-lower-triangular entries.
+
+    Entry order matches the Rust side (`linalg::cayley::skew_from_params`):
+    row-major over i > j — (1,0), (2,0), (2,1), (3,0) …
+    """
+    theta = jnp.asarray(theta)
+    rows, cols = jnp.tril_indices(r, k=-1)
+    q = jnp.zeros((r, r), dtype=theta.dtype)
+    q = q.at[rows, cols].set(theta)
+    q = q.at[cols, rows].set(-theta)
+    return q
+
+
+def cayley_neumann_ref(q, terms: int):
+    """R = (I − Q) · Σ_{k=0..K} (−Q)^k  (truncated-Neumann Cayley)."""
+    r = q.shape[0]
+    eye = jnp.eye(r, dtype=q.dtype)
+    s = eye
+    power = eye
+    for _ in range(terms):
+        power = power @ (-q)
+        s = s + power
+    return (eye - q) @ s
+
+
+def cayley_exact_ref(q):
+    """R = (I − Q)(I + Q)^{-1} — exact Cayley transform."""
+    r = q.shape[0]
+    eye = jnp.eye(r, dtype=q.dtype)
+    return jnp.linalg.solve((eye + q).T, (eye - q).T).T
+
+
+def psoft_linear_ref(x, w_res, a, b, rot, alpha, beta):
+    """PSOFT forward (paper Eq. 8):
+
+        y = x·W_res + (((x·A')·diag(α))·R)·diag(β)·B'
+    """
+    p = x @ a
+    u = p * alpha[None, :]
+    v = u @ rot
+    w = v * beta[None, :]
+    return x @ w_res + w @ b
+
+
+def blockdiag_rotate_ref(x, rots):
+    """OFTv2 input-centric rotation: z = x·diag(R_1 … R_k).
+
+    `rots` is a list of (b_i × b_i) blocks covering the feature dim.
+    """
+    outs = []
+    off = 0
+    for r in rots:
+        b = r.shape[0]
+        outs.append(x[:, off : off + b] @ r)
+        off += b
+    assert off == x.shape[1], "blocks must tile the feature dim"
+    return jnp.concatenate(outs, axis=1)
+
+
+def butterfly_stage_ref(x, pairs, mats):
+    """One GOFT/BOFT(b=2) butterfly stage.
+
+    `pairs`: list of (i, j) index pairs; `mats`: [n_pairs, 2, 2] per-pair
+    matrices applied as [x_i, x_j] @ M.
+    """
+    z = x
+    for p, (i, j) in enumerate(pairs):
+        xi, xj = z[:, i], z[:, j]
+        m = mats[p]
+        z = z.at[:, i].set(xi * m[0, 0] + xj * m[1, 0])
+        z = z.at[:, j].set(xi * m[0, 1] + xj * m[1, 1])
+    return z
+
+
+def orthogonality_defect_ref(r):
+    """‖RᵀR − I‖_F — the paper's Table 6 regularizer target."""
+    eye = jnp.eye(r.shape[0], dtype=r.dtype)
+    return jnp.linalg.norm(r.T @ r - eye)

@@ -1,0 +1,447 @@
+"""L2 JAX model: transformer backbone with PEFT adapters on its linears.
+
+Two architectures (paper §5):
+- ``encoder`` — bidirectional, pre-LayerNorm, CLS-token head (DeBERTaV3 /
+  ViT stand-in; classification or regression).
+- ``decoder`` — causal, pre-RMSNorm, gated MLP, frozen LM head (LLaMA
+  stand-in; masked next-token loss).
+
+### Interchange contract (mirrored by `rust/src/model/schema.rs`)
+
+The compiled HLO takes two flat f32 vectors:
+
+``frozen``   = tok_emb ‖ pos_emb ‖ per layer [ norm1 ‖ per-module frozen
+               tensors (see peft_jax.frozen_specs; dense ``w`` when the
+               module is not adapted) ‖ norm2 ] ‖ final norm ‖
+               (decoder: lm_head)
+``trainable`` = per layer [ per inserted module: peft_jax.trainable_specs ]
+               ‖ (encoder: head_w ‖ head_b)
+
+Module order: encoder Q,K,V,O,U,D — decoder Q,K,V,O,G,U,D. Norms are
+(g, b) pairs for the encoder's LayerNorm, (g,) for the decoder's RMSNorm.
+
+The AdamW step runs **inside the artifact** (fused fwd+bwd+update): Rust
+owns the three state vectors and streams batches; Python never runs at
+training time.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import peft_jax
+
+ENCODER_MODULES = ["q", "k", "v", "o", "u", "d"]
+DECODER_MODULES = ["q", "k", "v", "o", "g", "u", "d"]
+
+
+def arch_modules(arch: str):
+    return ENCODER_MODULES if arch == "encoder" else DECODER_MODULES
+
+
+def module_shape(spec: dict, m: str):
+    d, f = spec["d_model"], spec["d_ff"]
+    return {
+        "q": (d, d),
+        "k": (d, d),
+        "v": (d, d),
+        "o": (d, d),
+        "u": (d, f),
+        "g": (d, f),
+        "d": (f, d),
+    }[m]
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+def frozen_layout(spec: dict):
+    """Ordered (name, shape) list for the frozen flat vector."""
+    d = spec["d_model"]
+    out = [("tok_emb", (spec["vocab"], d)), ("pos_emb", (spec["max_seq"], d))]
+    enc = spec["arch"] == "encoder"
+    for l in range(spec["n_layers"]):
+        out.append((f"l{l}.ln1.g", (d,)))
+        if enc:
+            out.append((f"l{l}.ln1.b", (d,)))
+        for m in arch_modules(spec["arch"]):
+            din, dout = module_shape(spec, m)
+            if m in spec["modules"]:
+                for name, shape in peft_jax.frozen_specs(spec["method"], din, dout, spec):
+                    out.append((f"l{l}.{m}.{name}", shape))
+            else:
+                out.append((f"l{l}.{m}.w", (din, dout)))
+        out.append((f"l{l}.ln2.g", (d,)))
+        if enc:
+            out.append((f"l{l}.ln2.b", (d,)))
+    out.append(("final.g", (d,)))
+    if enc:
+        out.append(("final.b", (d,)))
+    else:
+        out.append(("lm_head", (d, spec["vocab"])))
+    return out
+
+
+def trainable_layout(spec: dict):
+    """Ordered (name, shape) list for the trainable flat vector."""
+    out = []
+    for l in range(spec["n_layers"]):
+        for m in arch_modules(spec["arch"]):
+            if m in spec["modules"]:
+                din, dout = module_shape(spec, m)
+                for name, shape in peft_jax.trainable_specs(spec["method"], din, dout, spec):
+                    out.append((f"l{l}.{m}.{name}", shape))
+    if spec["arch"] == "encoder":
+        out.append(("head.w", (spec["d_model"], spec["n_classes"])))
+        out.append(("head.b", (spec["n_classes"],)))
+    return out
+
+
+def head_param_count(spec: dict) -> int:
+    if spec["arch"] == "encoder":
+        return spec["d_model"] * spec["n_classes"] + spec["n_classes"]
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _module_tensors(params: dict, layer: int, module: str):
+    prefix = f"l{layer}.{module}."
+    return {k[len(prefix) :]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _linear(spec, fr, tr, layer, module, x2d):
+    """Adapted (or dense-frozen) linear on flattened tokens [T, din]."""
+    if module in spec["modules"]:
+        fr_mod = _module_tensors(fr, layer, module)
+        tr_mod = _module_tensors(tr, layer, module)
+        return peft_jax.forward(spec["method"], x2d, fr_mod, tr_mod, spec)
+    return x2d @ fr[f"l{layer}.{module}.w"]
+
+
+def _layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _rmsnorm(x, g):
+    ms = (x**2).mean(-1, keepdims=True)
+    return x / jnp.sqrt(ms + 1e-5) * g
+
+
+def _attention(spec, q, k, v, pad_mask, causal):
+    bsz, s, d = q.shape
+    h = spec["n_heads"]
+    hd = d // h
+
+    def split(t):
+        return t.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)  # [B,h,S,hd]
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / np.sqrt(hd)
+    neg = jnp.asarray(-1e9, scores.dtype)
+    if pad_mask is not None:
+        scores = jnp.where(pad_mask[:, None, None, :] > 0.5, scores, neg)
+    if causal:
+        cm = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(cm[None, None], scores, neg)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+    return out.transpose(0, 2, 1, 3).reshape(bsz, s, d)
+
+
+def apply_model(spec: dict, fr: dict, tr: dict, tokens, pad_mask):
+    """Backbone forward → final hidden states [B, S, d]."""
+    enc = spec["arch"] == "encoder"
+    bsz, s = tokens.shape
+    d = spec["d_model"]
+    x = fr["tok_emb"][tokens] + fr["pos_emb"][:s][None, :, :]
+
+    def lin(layer, module, t3d):
+        t2d = t3d.reshape(-1, t3d.shape[-1])
+        y = _linear(spec, fr, tr, layer, module, t2d)
+        return y.reshape(bsz, s, -1)
+
+    for l in range(spec["n_layers"]):
+        if enc:
+            h = _layernorm(x, fr[f"l{l}.ln1.g"], fr[f"l{l}.ln1.b"])
+        else:
+            h = _rmsnorm(x, fr[f"l{l}.ln1.g"])
+        q = lin(l, "q", h)
+        k = lin(l, "k", h)
+        v = lin(l, "v", h)
+        att = _attention(spec, q, k, v, pad_mask, causal=not enc)
+        x = x + lin(l, "o", att)
+
+        if enc:
+            h2 = _layernorm(x, fr[f"l{l}.ln2.g"], fr[f"l{l}.ln2.b"])
+            mid = jax.nn.gelu(lin(l, "u", h2))
+            x = x + lin(l, "d", mid)
+        else:
+            h2 = _rmsnorm(x, fr[f"l{l}.ln2.g"])
+            gate = jax.nn.silu(lin(l, "g", h2))
+            up = lin(l, "u", h2)
+            x = x + lin(l, "d", gate * up)
+
+    if enc:
+        return _layernorm(x, fr["final.g"], fr["final.b"])
+    return _rmsnorm(x, fr["final.g"])
+
+
+# ---------------------------------------------------------------------------
+# Losses and metrics
+# ---------------------------------------------------------------------------
+
+
+def _orth_penalty(spec: dict, tr: dict):
+    """Σ ‖RᵀR − I‖_F² over square-R adapters (Table 6 regularizer)."""
+    if spec["method"] not in ("lora_xs",):
+        return jnp.asarray(0.0, jnp.float32)
+    total = jnp.asarray(0.0, jnp.float32)
+    for name, t in tr.items():
+        if name.endswith(".r"):
+            eye = jnp.eye(t.shape[0], dtype=t.dtype)
+            g = t.T @ t - eye
+            total = total + jnp.sum(g * g)
+    return total
+
+
+def loss_and_metrics(spec: dict, fr: dict, tr: dict, batch: dict, gamma):
+    """Returns (loss, metric, preds).
+
+    encoder-cls : metric = #correct, preds = argmax class per example
+    encoder-reg : metric = −Σ sq.err, preds = regression value
+    decoder     : metric = #exact-match sequences, preds = per-example EM
+    """
+    hidden = apply_model(spec, fr, tr, batch["tokens"], batch.get("pad_mask"))
+    if spec["arch"] == "encoder":
+        cls = hidden[:, 0, :]
+        logits = cls @ tr["head.w"] + tr["head.b"]
+        if spec["n_classes"] == 1:
+            preds = logits[:, 0]
+            err = preds - batch["target_f"]
+            loss = jnp.mean(err * err)
+            metric = -jnp.sum(err * err)
+        else:
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, batch["target_i"][:, None], axis=1)[:, 0]
+            loss = jnp.mean(nll)
+            preds = jnp.argmax(logits, axis=-1).astype(jnp.float32)
+            metric = jnp.sum((preds == batch["target_i"].astype(jnp.float32)).astype(jnp.float32))
+    else:
+        # Next-token CE over masked positions: logits at t predict token t+1.
+        logits = hidden @ fr["lm_head"]  # [B,S,V]
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        targets = batch["tokens"][:, 1:]
+        mask = batch["loss_mask"][:, 1:]
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = (nll * mask).sum() / denom
+        pred_tok = jnp.argmax(logits[:, :-1], axis=-1)
+        hit = (pred_tok == targets).astype(jnp.float32) * mask
+        # Graded exact match: fraction of masked tokens predicted exactly
+        # (equals exact match for single-token answers).
+        preds = hit.sum(1) / jnp.maximum(mask.sum(1), 1.0)
+        metric = jnp.sum(preds)
+    loss = loss + gamma * _orth_penalty(spec, tr)
+    return loss, metric, preds
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (flat-vector interface)
+# ---------------------------------------------------------------------------
+
+
+def _unflatten_all(vec, layout):
+    return peft_jax.unflatten(vec, layout)
+
+
+def make_batch_placeholders(spec: dict, batch: int, seq: int):
+    """ShapeDtypeStructs for the batch inputs, in call order."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if spec["arch"] == "encoder":
+        if spec["n_classes"] == 1:
+            tgt = jax.ShapeDtypeStruct((batch,), jnp.float32)
+        else:
+            tgt = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        msk = jax.ShapeDtypeStruct((batch, seq), jnp.float32)
+    else:
+        tgt = jax.ShapeDtypeStruct((batch, seq), jnp.float32)  # loss mask
+        msk = jax.ShapeDtypeStruct((batch, seq), jnp.float32)
+    return tok, tgt, msk
+
+
+def _batch_dict(spec, tokens, target, pad_mask):
+    b = {"tokens": tokens, "pad_mask": pad_mask}
+    if spec["arch"] == "encoder":
+        if spec["n_classes"] == 1:
+            b["target_f"] = target
+        else:
+            b["target_i"] = target
+    else:
+        b["loss_mask"] = target
+    return b
+
+
+def build_train_step(spec: dict):
+    """train_step(trainable, m, v, step, hyper, tokens, target, pad_mask,
+    frozen) → (trainable', m', v', loss, metric).
+
+    hyper = [lr, head_lr, weight_decay, gamma_orth] (f32[4]);
+    step = f32[1] 1-based step count for Adam bias correction.
+    """
+    tr_layout = trainable_layout(spec)
+    fr_layout = frozen_layout(spec)
+    n_head = head_param_count(spec)
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    clip = spec.get("grad_clip", 1.0)
+
+    def step_fn(trainable, m, v, step, hyper, tokens, target, pad_mask, frozen):
+        fr = _unflatten_all(frozen, fr_layout)
+
+        def loss_fn(tvec):
+            tr = _unflatten_all(tvec, tr_layout)
+            batch = _batch_dict(spec, tokens, target, pad_mask)
+            loss, metric, _ = loss_and_metrics(spec, fr, tr, batch, hyper[3])
+            return loss, metric
+
+        (loss, metric), grad = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+
+        # Global-norm clip.
+        gnorm = jnp.sqrt(jnp.sum(grad * grad) + 1e-12)
+        grad = grad * jnp.minimum(1.0, clip / gnorm)
+
+        # AdamW with per-segment LR (head uses head_lr).
+        t = step[0]
+        m_new = beta1 * m + (1.0 - beta1) * grad
+        v_new = beta2 * v + (1.0 - beta2) * grad * grad
+        m_hat = m_new / (1.0 - beta1**t)
+        v_hat = v_new / (1.0 - beta2**t)
+        update = m_hat / (jnp.sqrt(v_hat) + eps)
+        p = trainable.shape[0]
+        if n_head > 0:
+            seg = jnp.concatenate(
+                [jnp.full((p - n_head,), hyper[0]), jnp.full((n_head,), hyper[1])]
+            )
+        else:
+            seg = jnp.full((p,), hyper[0])
+        decayed = trainable * (1.0 - seg * hyper[2])
+        trainable_new = decayed - seg * update
+        return trainable_new, m_new, v_new, loss, metric
+
+    return step_fn
+
+
+def build_eval_step(spec: dict):
+    """eval_step(trainable, frozen, tokens, target, pad_mask) →
+    (loss, metric, preds[B])."""
+    tr_layout = trainable_layout(spec)
+    fr_layout = frozen_layout(spec)
+
+    def step_fn(trainable, frozen, tokens, target, pad_mask):
+        fr = _unflatten_all(frozen, fr_layout)
+        tr = _unflatten_all(trainable, tr_layout)
+        batch = _batch_dict(spec, tokens, target, pad_mask)
+        loss, metric, preds = loss_and_metrics(spec, fr, tr, batch, jnp.asarray(0.0))
+        return loss, metric, preds
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# NumPy initialization of the full model (tests + fixtures; Rust mirrors it)
+# ---------------------------------------------------------------------------
+
+
+def init_frozen_and_trainable(spec: dict, seed: int = 0):
+    """Random 'pre-trained' backbone + adapter init — used by pytest and by
+    the fixture export (Rust re-derives the same structure from its own
+    pretrained checkpoints at runtime)."""
+    rng = np.random.default_rng(seed)
+    d = spec["d_model"]
+
+    def dense(shape, scale=None):
+        scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    pre_weights = {}
+    for l in range(spec["n_layers"]):
+        for m in arch_modules(spec["arch"]):
+            pre_weights[(l, m)] = dense(module_shape(spec, m))
+
+    def is_norm(name):
+        part = name.split(".")[-2] if "." in name else ""
+        return part in ("ln1", "ln2") or name.startswith("final.")
+
+    # Per-module adapter state (frozen + trainable) derived once per module
+    # so both vectors stay consistent.
+    module_init = {}
+    for l in range(spec["n_layers"]):
+        for m in arch_modules(spec["arch"]):
+            if m in spec["modules"]:
+                module_init[(l, m)] = peft_jax.init_module(
+                    spec["method"], pre_weights[(l, m)], spec, rng
+                )
+
+    fr = {}
+    tr = {}
+    for name, shape in frozen_layout(spec):
+        if is_norm(name) and name.endswith(".g"):
+            fr[name] = np.ones(shape, np.float32)
+        elif is_norm(name) and name.endswith(".b"):
+            fr[name] = np.zeros(shape, np.float32)
+        elif name in ("tok_emb", "pos_emb", "lm_head"):
+            fr[name] = dense(shape, 0.02)
+        else:
+            # Per-module frozen tensors.
+            l, m, field = name.split(".", 2)
+            l = int(l[1:])
+            if field == "w":
+                fr[name] = pre_weights[(l, m)]
+            else:
+                fr[name] = np.asarray(module_init[(l, m)][0][field], np.float32)
+
+    for name, shape in trainable_layout(spec):
+        if name == "head.w":
+            tr[name] = dense(shape, 0.02)
+        elif name == "head.b":
+            tr[name] = np.zeros(shape, np.float32)
+        else:
+            l, m, field = name.split(".", 2)
+            l = int(l[1:])
+            tr[name] = np.asarray(module_init[(l, m)][1][field], np.float32)
+
+    fr_flat = peft_jax.flatten(fr, frozen_layout(spec))
+    tr_flat = peft_jax.flatten(tr, trainable_layout(spec))
+    return fr_flat, tr_flat
+
+
+def default_spec(**overrides):
+    spec = {
+        "arch": "encoder",
+        "vocab": 64,
+        "d_model": 32,
+        "n_layers": 2,
+        "n_heads": 2,
+        "d_ff": 64,
+        "max_seq": 16,
+        "n_classes": 2,
+        "method": "psoft",
+        "rank": 4,
+        "modules": ["q", "v"],
+        "neumann_terms": 5,
+        "use_alpha": True,
+        "use_beta": True,
+        "oft_block_size": 8,
+        "boft_m": 2,
+        "boft_b": 4,
+        "grad_clip": 1.0,
+    }
+    spec.update(overrides)
+    return spec

@@ -1,0 +1,350 @@
+"""L2 PEFT parameterizations — the JAX mirror of `rust/src/peft/`.
+
+Every method defines, for one linear layer W_pre (d×n, forward y = x @ W):
+
+- ``frozen_specs`` / ``trainable_specs``: ordered (name, shape) lists. The
+  concatenation order is the **interchange contract** with the Rust
+  coordinator: Rust flattens its adapter state in exactly this order into
+  the `frozen` / `trainable` buffers passed to the compiled HLO. The per-
+  method orders below match the `params()` implementations in
+  `rust/src/peft/*.rs` field-for-field.
+- ``forward(x, fr, tr, cfg)``: structured forward (PSOFT/OFT run through
+  the L1 Pallas kernels).
+- ``init_frozen_from_w`` / ``init_trainable``: NumPy-side initialization
+  used by pytest and fixture export (at runtime Rust owns initialization).
+
+All methods start training exactly at W_pre (identity/zero inits).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import blockdiag as k_blockdiag
+from .kernels import butterfly as k_butterfly
+from .kernels import cayley as k_cayley
+from .kernels import psoft as k_psoft
+from .kernels import ref
+
+
+def skew_count(r: int) -> int:
+    return r * (r - 1) // 2
+
+
+# ---------------------------------------------------------------------------
+# Shared shape helpers
+# ---------------------------------------------------------------------------
+
+
+def block_partition(d: int, b: int):
+    """Equal blocks of size b, last block smaller if b ∤ d (matches Rust)."""
+    b = max(2, min(b, d))
+    blocks = [b] * (d // b)
+    if d % b:
+        blocks.append(d % b)
+    return blocks
+
+
+def goft_stages(d: int):
+    """Butterfly pairing stages (i, i ⊕ 2^j) — matches Rust build_stages."""
+    n_stages = int(np.log2(d)) if d >= 2 else 0
+    return [k_butterfly.stage_pairs(d, j) for j in range(n_stages)]
+
+
+def riffle(d: int):
+    half = (d + 1) // 2
+    out = []
+    for i in range(half):
+        out.append(i)
+        if half + i < d:
+            out.append(half + i)
+    return out
+
+
+def perm_power(p, k):
+    out = list(range(len(p)))
+    for _ in range(k):
+        out = [p[i] for i in out]
+    return out
+
+
+def invert_perm(p):
+    inv = [0] * len(p)
+    for i, pi in enumerate(p):
+        inv[pi] = i
+    return inv
+
+
+# ---------------------------------------------------------------------------
+# Spec tables
+# ---------------------------------------------------------------------------
+
+
+def frozen_specs(method: str, d: int, n: int, cfg: dict):
+    r = cfg.get("rank", 8)
+    k = min(d, n)
+    return {
+        "fft": [],
+        "lora": [("w0", (d, n))],
+        "pissa": [("w0", (d, n))],
+        "dora": [("w0", (d, n))],
+        "lora_xs": [("w0", (d, n)), ("a", (d, r)), ("b", (r, n))],
+        "vera": [("w0", (d, n)), ("a_f", (d, r)), ("b_f", (r, n))],
+        "oftv2": [("w0", (d, n))],
+        "boft": [("w0", (d, n))],
+        "goftv2": [("w0", (d, n))],
+        "qgoftv2": [("w0", (d, n))],
+        "svft": [("u", (d, k)), ("sigma", (k,)), ("vt", (k, n))],
+        "psoft": [("w_res", (d, n)), ("a", (d, r)), ("b", (r, n))],
+    }[method]
+
+
+def trainable_specs(method: str, d: int, n: int, cfg: dict):
+    r = cfg.get("rank", 8)
+    k = min(d, n)
+    if method == "fft":
+        return [("w", (d, n))]
+    if method in ("lora", "pissa"):
+        return [("a", (d, r)), ("b", (r, n))]
+    if method == "dora":
+        return [("a", (d, r)), ("b", (r, n)), ("m", (n,))]
+    if method == "lora_xs":
+        return [("r", (r, r))]
+    if method == "vera":
+        return [("d_vec", (r,)), ("b_vec", (n,))]
+    if method == "oftv2":
+        blocks = block_partition(d, cfg.get("oft_block_size", 32))
+        return [("theta", (sum(skew_count(b) for b in blocks),))]
+    if method == "boft":
+        blocks = block_partition(d, cfg.get("boft_b", 8))
+        per = sum(skew_count(b) for b in blocks)
+        return [("theta", (cfg.get("boft_m", 2) * per,))]
+    if method == "goftv2":
+        n_pairs = sum(len(lo) for lo, _ in goft_stages(d))
+        return [("theta", (n_pairs,))]
+    if method == "qgoftv2":
+        n_pairs = sum(len(lo) for lo, _ in goft_stages(d))
+        return [("theta", (4 * n_pairs,))]
+    if method == "svft":
+        return [("m", (k,))]
+    if method == "psoft":
+        specs = [("theta", (skew_count(r),))]
+        if cfg.get("use_alpha", True):
+            specs.append(("alpha", (r,)))
+        if cfg.get("use_beta", True):
+            specs.append(("beta", (r,)))
+        return specs
+    raise ValueError(f"unknown method {method}")
+
+
+# ---------------------------------------------------------------------------
+# Forwards (jnp; PSOFT/OFT chains through the L1 kernels)
+# ---------------------------------------------------------------------------
+
+
+def forward(method: str, x, fr: dict, tr: dict, cfg: dict):
+    """y = x @ W_eff for one adapted linear layer. x: [T, d] → [T, n]."""
+    terms = cfg.get("neumann_terms", 5)
+    if method == "fft":
+        return x @ tr["w"]
+    if method in ("lora", "pissa"):
+        return x @ fr["w0"] + (x @ tr["a"]) @ tr["b"]
+    if method == "dora":
+        v = fr["w0"] + tr["a"] @ tr["b"]
+        norms = jnp.maximum(jnp.linalg.norm(v, axis=0), 1e-12)
+        return (x @ v) * (tr["m"] / norms)[None, :]
+    if method == "lora_xs":
+        return x @ fr["w0"] + ((x @ fr["a"]) @ tr["r"]) @ fr["b"]
+    if method == "vera":
+        xa = x @ fr["a_f"]
+        return x @ fr["w0"] + ((xa * tr["d_vec"][None, :]) @ fr["b_f"]) * tr["b_vec"][None, :]
+    if method == "oftv2":
+        return _oft_forward(x, fr, tr, cfg, terms)
+    if method == "boft":
+        return _boft_forward(x, fr, tr, cfg, terms)
+    if method in ("goftv2", "qgoftv2"):
+        return _goft_forward(method, x, fr, tr)
+    if method == "svft":
+        xu = x @ fr["u"]
+        return (xu * (fr["sigma"] + tr["m"])[None, :]) @ fr["vt"]
+    if method == "psoft":
+        r = cfg.get("rank", 8)
+        rot = k_cayley.cayley_neumann_from_theta(tr["theta"], r, terms)
+        alpha = tr.get("alpha", jnp.ones((r,), x.dtype))
+        beta = tr.get("beta", jnp.ones((r,), x.dtype))
+        return k_psoft.psoft_linear_ad(x, fr["w_res"], fr["a"], fr["b"], rot, alpha, beta)
+    raise ValueError(f"unknown method {method}")
+
+
+def _block_rots(theta, blocks, terms):
+    """Per-block rotations from the concatenated skew vector."""
+    rots = []
+    off = 0
+    for b in blocks:
+        nb = skew_count(b)
+        q = ref.skew_from_params(b, theta[off : off + nb])
+        rots.append(k_cayley.cayley_neumann_ad(q, terms))
+        off += nb
+    return rots
+
+
+def _oft_forward(x, fr, tr, cfg, terms):
+    d = x.shape[1]
+    blocks = block_partition(d, cfg.get("oft_block_size", 32))
+    rots = _block_rots(tr["theta"], blocks, terms)
+    if len(set(blocks)) == 1:
+        z = k_blockdiag.blockdiag_rotate_ad(x, jnp.stack(rots))
+    else:
+        z = ref.blockdiag_rotate_ref(x, rots)
+    return z @ fr["w0"]
+
+
+def _boft_forward(x, fr, tr, cfg, terms):
+    d = x.shape[1]
+    m = cfg.get("boft_m", 2)
+    blocks = block_partition(d, cfg.get("boft_b", 8))
+    per = sum(skew_count(b) for b in blocks)
+    base = riffle(d)
+    z = x
+    for j in range(m):
+        perm = perm_power(base, j)
+        inv = invert_perm(perm)
+        rots = _block_rots(tr["theta"][j * per : (j + 1) * per], blocks, terms)
+        zp = z[:, jnp.array(perm)]
+        if len(set(blocks)) == 1:
+            zp = k_blockdiag.blockdiag_rotate_ad(zp, jnp.stack(rots))
+        else:
+            zp = ref.blockdiag_rotate_ref(zp, rots)
+        z = zp[:, jnp.array(inv)]
+    return z @ fr["w0"]
+
+
+def _goft_forward(method, x, fr, tr):
+    d = x.shape[1]
+    stages = goft_stages(d)
+    theta = tr["theta"]
+    z = x
+    off = 0
+    for lo, hi in stages:
+        p = len(lo)
+        if method == "goftv2":
+            ang = theta[off : off + p]
+            c, s = jnp.cos(ang), jnp.sin(ang)
+            # M = [[c, s], [−s, c]] per pair (matches Rust pair_mat).
+            mats = jnp.stack(
+                [jnp.stack([c, s], axis=-1), jnp.stack([-s, c], axis=-1)], axis=-2
+            )
+            off += p
+        else:
+            mats = theta[off : off + 4 * p].reshape(p, 2, 2)
+            off += 4 * p
+        z = k_butterfly.butterfly_stage_ad(z, mats, tuple(lo), tuple(hi))
+    return z @ fr["w0"]
+
+
+# ---------------------------------------------------------------------------
+# NumPy initialization (pytest + fixture export; Rust owns runtime init)
+# ---------------------------------------------------------------------------
+
+
+def init_frozen_from_w(method: str, w: np.ndarray, cfg: dict, rng: np.random.Generator):
+    d, n = w.shape
+    r = cfg.get("rank", 8)
+    if method == "fft":
+        return {}
+    if method in ("lora", "dora", "oftv2", "boft", "goftv2", "qgoftv2"):
+        return {"w0": w.copy()}
+    if method == "pissa":
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        a = u[:, :r] * np.sqrt(s[:r])[None, :]
+        b = np.sqrt(s[:r])[:, None] * vt[:r]
+        return {"w0": w - a @ b}
+    if method == "lora_xs":
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        a = u[:, :r] * np.sqrt(s[:r])[None, :]
+        b = np.sqrt(s[:r])[:, None] * vt[:r]
+        return {"w0": w - a @ b, "a": a, "b": b}
+    if method == "vera":
+        bound_a = 1.0 / np.sqrt(d)
+        bound_b = 1.0 / np.sqrt(r)
+        return {
+            "w0": w.copy(),
+            "a_f": rng.uniform(-bound_a, bound_a, (d, r)).astype(np.float32),
+            "b_f": rng.uniform(-bound_b, bound_b, (r, n)).astype(np.float32),
+        }
+    if method == "svft":
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        return {"u": u, "sigma": s, "vt": vt}
+    if method == "psoft":
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        a = u[:, :r]
+        b = s[:r, None] * vt[:r]
+        return {"w_res": w - a @ b, "a": a, "b": b}
+    raise ValueError(f"unknown method {method}")
+
+
+def init_trainable(method: str, d: int, n: int, cfg: dict, rng: np.random.Generator):
+    out = {}
+    for name, shape in trainable_specs(method, d, n, cfg):
+        if method == "fft" and name == "w":
+            raise ValueError("fft trainable init needs W_pre; use init from weights")
+        if name in ("alpha", "beta"):
+            out[name] = np.ones(shape, np.float32)
+        elif name == "m" and method == "dora":
+            raise ValueError("dora magnitude init needs W_pre")
+        elif name == "d_vec":
+            out[name] = np.full(shape, 0.1, np.float32)
+        elif name == "r":
+            out[name] = np.eye(shape[0], dtype=np.float32)
+        elif name == "a" and method in ("lora", "dora"):
+            bound = 1.0 / np.sqrt(d)
+            out[name] = rng.uniform(-bound, bound, shape).astype(np.float32)
+        elif name == "theta" and method == "qgoftv2":
+            eye = np.tile(np.eye(2, dtype=np.float32).reshape(1, 4), (shape[0] // 4, 1))
+            out[name] = eye.reshape(-1)
+        else:
+            out[name] = np.zeros(shape, np.float32)
+    return out
+
+
+def init_module(method: str, w: np.ndarray, cfg: dict, rng: np.random.Generator):
+    """Combined (frozen, trainable) initialization for one module from its
+    pre-trained weight — identity start for every method."""
+    d, n = w.shape
+    r = cfg.get("rank", 8)
+    fr = init_frozen_from_w(method, w, cfg, rng)
+    if method == "fft":
+        tr = {"w": w.copy()}
+    elif method == "pissa":
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        tr = {
+            "a": (u[:, :r] * np.sqrt(s[:r])[None, :]).astype(np.float32),
+            "b": (np.sqrt(s[:r])[:, None] * vt[:r]).astype(np.float32),
+        }
+    elif method == "dora":
+        tr = init_trainable("lora", d, n, cfg, rng)
+        tr["m"] = np.linalg.norm(w, axis=0).astype(np.float32)
+    else:
+        tr = init_trainable(method, d, n, cfg, rng)
+    return fr, tr
+
+
+def flat_size(specs) -> int:
+    return sum(int(np.prod(s)) for _, s in specs)
+
+
+def unflatten(vec, specs):
+    """Slice a flat vector into the named tensors of a spec list."""
+    out = {}
+    off = 0
+    for name, shape in specs:
+        size = int(np.prod(shape))
+        out[name] = vec[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def flatten(tensors: dict, specs) -> np.ndarray:
+    return np.concatenate(
+        [np.asarray(tensors[name], np.float32).reshape(-1) for name, _ in specs]
+        or [np.zeros(0, np.float32)]
+    )

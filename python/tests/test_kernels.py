@@ -1,0 +1,169 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeps over shapes and parameter scales."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import blockdiag, butterfly, cayley, psoft, ref
+
+
+# ---------------------------------------------------------------------------
+# Cayley–Neumann
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(2, 24),
+    scale=st.floats(0.01, 0.3),
+    terms=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cayley_kernel_matches_ref(r, scale, terms, seed):
+    rng = np.random.default_rng(seed)
+    theta = (rng.standard_normal(r * (r - 1) // 2) * scale).astype(np.float32)
+    q = ref.skew_from_params(r, theta)
+    got = cayley.cayley_neumann(q, terms)
+    want = ref.cayley_neumann_ref(q, terms)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_cayley_zero_skew_is_identity():
+    q = jnp.zeros((6, 6), jnp.float32)
+    assert_allclose(np.asarray(cayley.cayley_neumann(q, 5)), np.eye(6), atol=1e-7)
+
+
+def test_cayley_neumann_approaches_orthogonality():
+    rng = np.random.default_rng(3)
+    theta = (rng.standard_normal(28) * 0.05).astype(np.float32)
+    q = ref.skew_from_params(8, theta)
+    defects = [
+        float(ref.orthogonality_defect_ref(cayley.cayley_neumann(q, k))) for k in (1, 3, 5, 9)
+    ]
+    assert defects[-1] < 1e-5  # f32 floor
+    assert defects[-1] < defects[0]
+
+
+def test_cayley_matches_exact_for_small_q():
+    rng = np.random.default_rng(4)
+    theta = (rng.standard_normal(10) * 0.05).astype(np.float32)
+    q = ref.skew_from_params(5, theta)
+    approx = cayley.cayley_neumann(q, 12)
+    exact = ref.cayley_exact_ref(q)
+    assert_allclose(np.asarray(approx), np.asarray(exact), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PSOFT fused linear
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 70),
+    d=st.integers(2, 24),
+    n=st.integers(2, 24),
+    r_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_psoft_kernel_matches_ref(t, d, n, r_frac, seed):
+    r = max(1, int(min(d, n) * r_frac))
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((t, d)).astype(np.float32)
+    w_res = rng.standard_normal((d, n)).astype(np.float32) * 0.1
+    a = rng.standard_normal((d, r)).astype(np.float32) * 0.3
+    b = rng.standard_normal((r, n)).astype(np.float32) * 0.3
+    rot = rng.standard_normal((r, r)).astype(np.float32) * 0.2 + np.eye(r, dtype=np.float32)
+    alpha = rng.standard_normal(r).astype(np.float32) * 0.1 + 1.0
+    beta = rng.standard_normal(r).astype(np.float32) * 0.1 + 1.0
+    got = psoft.psoft_linear(x, w_res, a, b, rot, alpha, beta, block_t=32)
+    want = ref.psoft_linear_ref(x, w_res, a, b, rot, alpha, beta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_psoft_kernel_identity_transform_recovers_merged():
+    # α = β = 1, R = I ⇒ y = x (W_res + A B).
+    rng = np.random.default_rng(5)
+    t, d, n, r = 33, 12, 10, 4
+    x = rng.standard_normal((t, d)).astype(np.float32)
+    w_res = rng.standard_normal((d, n)).astype(np.float32)
+    a = rng.standard_normal((d, r)).astype(np.float32)
+    b = rng.standard_normal((r, n)).astype(np.float32)
+    y = psoft.psoft_linear(
+        x, w_res, a, b, np.eye(r, dtype=np.float32), np.ones(r, np.float32), np.ones(r, np.float32)
+    )
+    assert_allclose(np.asarray(y), x @ (w_res + a @ b), rtol=2e-4, atol=2e-4)
+
+
+def test_psoft_vmem_estimate_reasonable():
+    # The r-dim chain should keep VMEM well under 16 MiB for paper-scale r.
+    assert psoft.vmem_bytes(d=4096, n=4096, r=352, block_t=128) < 128 * 1024 * 1024
+    assert psoft.vmem_bytes(d=128, n=128, r=46) < 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal rotation (OFTv2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 50),
+    k=st.integers(1, 6),
+    b=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blockdiag_kernel_matches_ref(t, k, b, seed):
+    rng = np.random.default_rng(seed)
+    d = k * b
+    x = rng.standard_normal((t, d)).astype(np.float32)
+    rots = rng.standard_normal((k, b, b)).astype(np.float32)
+    got = blockdiag.blockdiag_rotate(x, jnp.asarray(rots), block_t=16)
+    want = ref.blockdiag_rotate_ref(x, [rots[i] for i in range(k)])
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Butterfly stage (GOFT / BOFT b=2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    log_d=st.integers(1, 5),
+    stage=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_butterfly_kernel_matches_ref(t, log_d, stage, seed):
+    d = 2**log_d
+    if stage >= log_d:
+        stage = log_d - 1
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((t, d)).astype(np.float32)
+    lo, hi = butterfly.stage_pairs(d, stage)
+    mats = rng.standard_normal((len(lo), 2, 2)).astype(np.float32)
+    got = butterfly.butterfly_stage(
+        jnp.asarray(x), jnp.asarray(mats), jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32)
+    )
+    want = ref.butterfly_stage_ref(jnp.asarray(x), list(zip(lo, hi)), jnp.asarray(mats))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_butterfly_rotation_preserves_norms():
+    rng = np.random.default_rng(6)
+    d = 16
+    x = rng.standard_normal((9, d)).astype(np.float32)
+    z = jnp.asarray(x)
+    for stage in range(4):
+        lo, hi = butterfly.stage_pairs(d, stage)
+        ang = rng.standard_normal(len(lo)).astype(np.float32)
+        c, s = np.cos(ang), np.sin(ang)
+        mats = np.stack([np.stack([c, s], -1), np.stack([-s, c], -1)], axis=-2).astype(np.float32)
+        z = butterfly.butterfly_stage(z, jnp.asarray(mats), jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32))
+    assert_allclose(
+        np.linalg.norm(np.asarray(z), axis=1), np.linalg.norm(x, axis=1), rtol=1e-5
+    )

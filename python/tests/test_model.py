@@ -1,0 +1,191 @@
+"""L2 model: layouts, loss behaviour, and the fused AdamW train step.
+
+The key integration signals: train_step reduces the loss on a learnable
+synthetic task for both architectures, and the flat-vector interface
+(Rust's view of the model) is internally consistent.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import peft_jax as P
+
+
+def tiny_encoder(method="psoft", **kw):
+    base = dict(
+        arch="encoder", vocab=32, d_model=16, n_layers=2, n_heads=2,
+        d_ff=32, max_seq=12, n_classes=2, method=method, rank=3,
+        modules=["q", "v"],
+    )
+    base.update(kw)
+    return M.default_spec(**base)
+
+
+def tiny_decoder(method="psoft", **kw):
+    base = dict(
+        arch="decoder", vocab=32, d_model=16, n_layers=2, n_heads=2,
+        d_ff=32, max_seq=12, n_classes=0, method=method, rank=3,
+        modules=["q", "v"],
+    )
+    base.update(kw)
+    return M.default_spec(**base)
+
+
+def make_cls_batch(spec, batch, seq, seed=0):
+    """Learnable rule: label = (first token < vocab/2)."""
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, spec["vocab"], (batch, seq)).astype(np.int32)
+    target = (tokens[:, 0] < spec["vocab"] // 2).astype(np.int32)
+    pad = np.ones((batch, seq), np.float32)
+    return tokens, target, pad
+
+
+def make_lm_batch(spec, batch, seq, seed=0):
+    """Learnable rule: token t+1 = token t + 1 (mod vocab) on masked tail."""
+    rng = np.random.default_rng(seed)
+    start = rng.integers(0, spec["vocab"], (batch, 1))
+    ramp = (start + np.arange(seq)[None, :]) % spec["vocab"]
+    tokens = ramp.astype(np.int32)
+    mask = np.zeros((batch, seq), np.float32)
+    mask[:, seq // 2 :] = 1.0
+    pad = np.ones((batch, seq), np.float32)
+    return tokens, mask, pad
+
+
+def test_layout_sizes_consistent():
+    spec = tiny_encoder()
+    fr, tr = M.init_frozen_and_trainable(spec, seed=1)
+    assert fr.shape[0] == P.flat_size(M.frozen_layout(spec))
+    assert tr.shape[0] == P.flat_size(M.trainable_layout(spec))
+    # Head params counted at the tail.
+    assert M.head_param_count(spec) == 16 * 2 + 2
+
+
+@pytest.mark.parametrize("method", ["psoft", "lora", "oftv2", "fft"])
+def test_encoder_train_step_reduces_loss(method):
+    spec = tiny_encoder(method=method, oft_block_size=8)
+    batch, seq = 16, 8
+    fr, tr = M.init_frozen_and_trainable(spec, seed=2)
+    m = np.zeros_like(tr)
+    v = np.zeros_like(tr)
+    step_fn = jax.jit(M.build_train_step(spec))
+    tokens, target, pad = make_cls_batch(spec, batch, seq, seed=3)
+    hyper = np.array([5e-3, 5e-3, 0.0, 0.0], np.float32)
+    losses = []
+    tr_j, m_j, v_j = jnp.asarray(tr), jnp.asarray(m), jnp.asarray(v)
+    for t in range(1, 61):
+        tr_j, m_j, v_j, loss, metric = step_fn(
+            tr_j, m_j, v_j, jnp.asarray([float(t)]), hyper, tokens, target, pad, fr
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.75, f"{method}: {losses[0]} -> {losses[-1]}"
+
+
+def test_decoder_train_step_reduces_loss():
+    spec = tiny_decoder(method="psoft", rank=6, modules=["q", "k", "v", "o", "g", "u", "d"])
+    batch, seq = 8, 10
+    fr, tr = M.init_frozen_and_trainable(spec, seed=4)
+    step_fn = jax.jit(M.build_train_step(spec))
+    tokens, mask, pad = make_lm_batch(spec, batch, seq, seed=5)
+    hyper = np.array([2e-2, 2e-2, 0.0, 0.0], np.float32)
+    tr_j = jnp.asarray(tr)
+    m_j = jnp.zeros_like(tr_j)
+    v_j = jnp.zeros_like(tr_j)
+    losses = []
+    for t in range(1, 81):
+        tr_j, m_j, v_j, loss, metric = step_fn(
+            tr_j, m_j, v_j, jnp.asarray([float(t)]), hyper, tokens, mask, pad, fr
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.05, f"{losses[0]} -> {losses[-1]}"
+    assert losses[-1] == min(losses), "loss should trend down"
+
+
+def test_eval_step_consistent_with_train_metrics():
+    spec = tiny_encoder()
+    batch, seq = 12, 8
+    fr, tr = M.init_frozen_and_trainable(spec, seed=6)
+    tokens, target, pad = make_cls_batch(spec, batch, seq, seed=7)
+    ev = jax.jit(M.build_eval_step(spec))
+    loss, metric, preds = ev(tr, fr, tokens, target, pad)
+    assert preds.shape == (batch,)
+    # Metric equals count of preds == target.
+    agree = float(np.sum(np.asarray(preds).astype(np.int32) == target))
+    assert abs(float(metric) - agree) < 1e-6
+    assert np.isfinite(float(loss))
+
+
+def test_regression_head():
+    spec = tiny_encoder(n_classes=1)
+    batch, seq = 8, 8
+    fr, tr = M.init_frozen_and_trainable(spec, seed=8)
+    rng = np.random.default_rng(9)
+    tokens = rng.integers(0, spec["vocab"], (batch, seq)).astype(np.int32)
+    target = rng.standard_normal(batch).astype(np.float32)
+    pad = np.ones((batch, seq), np.float32)
+    ev = jax.jit(M.build_eval_step(spec))
+    loss, metric, preds = ev(tr, fr, tokens, target, pad)
+    assert preds.shape == (batch,)
+    # loss = mean squared error of preds.
+    mse = float(np.mean((np.asarray(preds) - target) ** 2))
+    assert abs(float(loss) - mse) < 1e-5
+
+
+def test_gamma_orth_regularizer_changes_loss_for_lora_xs():
+    spec = tiny_encoder(method="lora_xs")
+    batch, seq = 4, 8
+    fr, tr = M.init_frozen_and_trainable(spec, seed=10)
+    tokens, target, pad = make_cls_batch(spec, batch, seq, seed=11)
+    # Perturb R off orthogonality.
+    tr2 = tr + 0.3 * np.random.default_rng(12).standard_normal(tr.shape).astype(np.float32)
+    step_fn = jax.jit(M.build_train_step(spec))
+    zeros = np.zeros_like(tr2)
+    out0 = step_fn(
+        tr2, zeros, zeros, np.array([1.0], np.float32),
+        np.array([0.0, 0.0, 0.0, 0.0], np.float32), tokens, target, pad, fr,
+    )
+    out1 = step_fn(
+        tr2, zeros, zeros, np.array([1.0], np.float32),
+        np.array([0.0, 0.0, 0.0, 1.0], np.float32), tokens, target, pad, fr,
+    )
+    assert float(out1[3]) > float(out0[3]), "γ>0 must add the orthogonality penalty"
+
+
+def test_pad_mask_blocks_attention():
+    # Changing a padded token must not change the CLS prediction.
+    spec = tiny_encoder()
+    batch, seq = 2, 8
+    fr, tr = M.init_frozen_and_trainable(spec, seed=13)
+    rng = np.random.default_rng(14)
+    tokens = rng.integers(0, spec["vocab"], (batch, seq)).astype(np.int32)
+    target = np.zeros(batch, np.int32)
+    pad = np.ones((batch, seq), np.float32)
+    pad[:, -2:] = 0.0
+    ev = jax.jit(M.build_eval_step(spec))
+    loss0, _, preds0 = ev(tr, fr, tokens, target, pad)
+    tokens2 = tokens.copy()
+    tokens2[:, -1] = (tokens2[:, -1] + 5) % spec["vocab"]
+    loss1, _, preds1 = ev(tr, fr, tokens2, target, pad)
+    np.testing.assert_allclose(float(loss0), float(loss1), rtol=1e-5)
+
+
+def test_causal_mask_in_decoder():
+    # Changing a future token must not affect earlier logits' loss when the
+    # mask only covers early positions.
+    spec = tiny_decoder()
+    batch, seq = 2, 10
+    fr, tr = M.init_frozen_and_trainable(spec, seed=15)
+    rng = np.random.default_rng(16)
+    tokens = rng.integers(0, spec["vocab"], (batch, seq)).astype(np.int32)
+    mask = np.zeros((batch, seq), np.float32)
+    mask[:, 1:4] = 1.0  # loss only on predicting tokens 1..3
+    pad = np.ones((batch, seq), np.float32)
+    ev = jax.jit(M.build_eval_step(spec))
+    loss0 = float(ev(tr, fr, tokens, mask, pad)[0])
+    tokens2 = tokens.copy()
+    tokens2[:, -1] = (tokens2[:, -1] + 7) % spec["vocab"]
+    loss1 = float(ev(tr, fr, tokens2, mask, pad)[0])
+    assert abs(loss0 - loss1) < 1e-6

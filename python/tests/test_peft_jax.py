@@ -1,0 +1,152 @@
+"""L2 PEFT parameterizations: identity start, spec sizes (Table 8),
+structured-forward vs merged-weight consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import peft_jax as P
+
+METHODS = [
+    "fft",
+    "lora",
+    "pissa",
+    "dora",
+    "lora_xs",
+    "vera",
+    "oftv2",
+    "boft",
+    "goftv2",
+    "qgoftv2",
+    "svft",
+    "psoft",
+]
+
+CFG = {
+    "rank": 4,
+    "oft_block_size": 8,
+    "boft_m": 2,
+    "boft_b": 4,
+    "neumann_terms": 5,
+    "use_alpha": True,
+    "use_beta": True,
+}
+
+
+def make_w(d, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((d, n)) / np.sqrt(d)).astype(np.float32)
+
+
+def init_all(method, w, seed=1):
+    rng = np.random.default_rng(seed)
+    fr, tr = P.init_module(method, w, CFG, rng)
+    fr = {k: jnp.asarray(v) for k, v in fr.items()}
+    tr = {k: jnp.asarray(v) for k, v in tr.items()}
+    return fr, tr
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_identity_start(method):
+    """Every method must begin training exactly at W_pre."""
+    d, n = 16, 12
+    w = make_w(d, n)
+    fr, tr = init_all(method, w)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((7, d)).astype(np.float32)
+    y = P.forward(method, jnp.asarray(x), fr, tr, CFG)
+    assert_allclose(np.asarray(y), x @ w, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_spec_sizes_positive_and_consistent(method):
+    d, n = 16, 12
+    fr_specs = P.frozen_specs(method, d, n, CFG)
+    tr_specs = P.trainable_specs(method, d, n, CFG)
+    assert P.flat_size(tr_specs) > 0
+    # Flatten/unflatten roundtrip.
+    rng = np.random.default_rng(3)
+    tensors = {name: rng.standard_normal(shape).astype(np.float32) for name, shape in tr_specs}
+    flat = P.flatten(tensors, tr_specs)
+    back = P.unflatten(flat, tr_specs)
+    for name, shape in tr_specs:
+        assert back[name].shape == tuple(shape)
+        assert_allclose(back[name], tensors[name])
+    assert isinstance(fr_specs, list)
+
+
+def test_table8_parameter_formulas():
+    """Trainable sizes match the paper's Table 8 closed forms."""
+    d, n, r = 32, 24, 4
+    cases = {
+        "lora": d * r + r * n,
+        "dora": d * r + r * n + n,
+        "vera": r + n,
+        "lora_xs": r * r,
+        "svft": min(d, n),
+        "psoft": r * (r - 1) // 2 + 2 * r,
+        "oftv2": (d // 8) * (8 * 7 // 2),
+        "boft": 2 * (d // 4) * (4 * 3 // 2),
+        "goftv2": int(np.log2(d)) * (d // 2),
+        "qgoftv2": int(np.log2(d)) * (d // 2) * 4,
+    }
+    cfg = dict(CFG)
+    for method, expect in cases.items():
+        got = P.flat_size(P.trainable_specs(method, d, n, cfg))
+        assert got == expect, f"{method}: {got} vs {expect}"
+
+
+def test_psoft_forward_matches_merged_weight():
+    d, n, r = 16, 12, 4
+    w = make_w(d, n)
+    fr, tr = init_all("psoft", w)
+    # Perturb all trainables.
+    rng = np.random.default_rng(5)
+    tr = {k: v + 0.1 * rng.standard_normal(v.shape).astype(np.float32) for k, v in tr.items()}
+    x = rng.standard_normal((9, d)).astype(np.float32)
+    y = P.forward("psoft", jnp.asarray(x), fr, tr, CFG)
+
+    from compile.kernels import ref, cayley
+
+    rot = cayley.cayley_neumann(ref.skew_from_params(r, tr["theta"]), CFG["neumann_terms"])
+    c = np.diag(np.asarray(tr["alpha"])) @ np.asarray(rot) @ np.diag(np.asarray(tr["beta"]))
+    w_eff = np.asarray(fr["w_res"]) + np.asarray(fr["a"]) @ c @ np.asarray(fr["b"])
+    assert_allclose(np.asarray(y), x @ w_eff, rtol=2e-3, atol=2e-3)
+
+
+def test_psoft_strict_preserves_column_geometry():
+    """Theorem 4.1 at the L2 level: strict PSOFT keeps the principal
+    component's column angles/norms."""
+    d, n, r = 24, 16, 6
+    w = make_w(d, n, seed=7)
+    cfg = dict(CFG, rank=r, use_alpha=False, use_beta=False, neumann_terms=12)
+    rng = np.random.default_rng(8)
+    fr = {k: jnp.asarray(v) for k, v in P.init_frozen_from_w("psoft", w, cfg, rng).items()}
+    theta = (0.08 * rng.standard_normal(r * (r - 1) // 2)).astype(np.float32)
+
+    from compile.kernels import ref, cayley
+
+    rot = np.asarray(cayley.cayley_neumann(ref.skew_from_params(r, theta), 12))
+    w_pri = np.asarray(fr["a"]) @ np.asarray(fr["b"])
+    w_tuned = np.asarray(fr["a"]) @ rot @ np.asarray(fr["b"])
+    n0 = np.linalg.norm(w_pri, axis=0)
+    n1 = np.linalg.norm(w_tuned, axis=0)
+    assert_allclose(n1, n0, rtol=2e-3)
+    # Pairwise cosines.
+    c0 = (w_pri.T @ w_pri) / np.outer(n0, n0)
+    c1 = (w_tuned.T @ w_tuned) / np.outer(n1, n1)
+    assert_allclose(c1, c0, atol=2e-3)
+
+
+def test_goft_stages_cover_non_power_of_two():
+    stages = P.goft_stages(12)
+    for lo, hi in stages:
+        for i, j in zip(lo, hi):
+            assert 0 <= i < j < 12
+
+
+def test_boft_riffle_matches_rust_semantics():
+    # riffle(8) deals [0..3] into even slots, [4..7] into odd slots.
+    assert P.riffle(8) == [0, 4, 1, 5, 2, 6, 3, 7]
+    assert P.invert_perm(P.riffle(8))[P.riffle(8)[3]] == 3

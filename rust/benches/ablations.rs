@@ -1,0 +1,229 @@
+//! Ablation benches: Table 6 (orthogonality of R), Table 7 (init scheme),
+//! Table 16 (SVD n_iter), Fig 3 (tunable vectors), Fig 8a (inserted
+//! modules), Fig 8b (Neumann terms).
+
+use psoft::bench::{bench_decoder, bench_encoder, pretrained_backbone, time_ms, write_csv};
+use psoft::config::{DataConfig, MethodKind, ModuleKind, PeftConfig, PsoftInit, TrainConfig};
+use psoft::data::load_task;
+use psoft::linalg::{cayley_exact, cayley_neumann, skew_from_params, skew_param_count, DMat};
+use psoft::model::NativeModel;
+use psoft::peft::decomp::principal_split;
+use psoft::runtime::NativeBackend;
+use psoft::train::train;
+use psoft::util::rng::Rng;
+
+fn fast() -> bool {
+    std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    table6_orthogonality();
+    table7_init();
+    table16_svd_iters();
+    fig3_tunable_vectors();
+    fig8a_modules();
+    fig8b_neumann();
+}
+
+fn run_decoder_job(peft: PeftConfig, task: &str, epochs: usize) -> (usize, f64, f64) {
+    let cfg = bench_decoder();
+    let bb = pretrained_backbone(&cfg, "dec", 200);
+    let mut rng = Rng::new(77);
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    let params = model.num_adapter_params();
+    let mut be = NativeBackend::new(model);
+    let mut dc = DataConfig::new("mathqa", task);
+    dc.n_train = if fast() { 48 } else { 256 };
+    dc.n_val = 48;
+    dc.n_test = 48;
+    dc.seq_len = 32;
+    let data = load_task(&dc, cfg.vocab_size).unwrap();
+    let mut tc = TrainConfig::default();
+    tc.epochs = epochs;
+    tc.batch_size = 16;
+    tc.lr = 2e-3;
+    tc.head_lr = 2e-3;
+    let report = train(&mut be, &data, &tc, peft.gamma_orth).unwrap();
+    (params, report.test_metric, be.model.orth_defect())
+}
+
+/// Table 6: PiSSA+LoRA-XS with γ-regularized unconstrained R vs PSOFT with
+/// strict Cayley orthogonality (half the parameters at equal rank).
+fn table6_orthogonality() {
+    println!("\n=== Table 6 (sim): effect of the orthogonality of R ===");
+    let epochs = if fast() { 1 } else { 4 };
+    let mut rows = Vec::new();
+    for gamma in [0.0, 0.01, 0.1, 1.0] {
+        let mut p = PeftConfig::new(MethodKind::LoraXs, 24);
+        p.modules = bench_decoder().modules();
+        p.gamma_orth = gamma;
+        let (params, em, defect) = run_decoder_job(p, "gsm8k", epochs);
+        println!("pissa+lora_xs γ={gamma:<5} params={params:<8} EM={em:.1}% defect={defect:.3}");
+        rows.push(format!("lora_xs,{gamma},{params},{em:.2},{defect:.4}"));
+    }
+    for strict in [true, false] {
+        let mut p = PeftConfig::new(MethodKind::Psoft, 24);
+        p.modules = bench_decoder().modules();
+        p.use_alpha = !strict;
+        p.use_beta = !strict;
+        let (params, em, defect) = run_decoder_job(p, "gsm8k", epochs);
+        let label = if strict { "psoft_strict" } else { "psoft_relaxed" };
+        println!("{label:<18} params={params:<8} EM={em:.1}% defect={defect:.3}");
+        rows.push(format!("{label},0,{params},{em:.2},{defect:.4}"));
+    }
+    write_csv("table6_orthogonality", "config,gamma,params,exact_match,defect", &rows);
+}
+
+/// Table 7: PSOFT init variants A_orth·R·B vs A·R·B_orth vs symmetric.
+fn table7_init() {
+    println!("\n=== Table 7 (sim): effect of initialization ===");
+    let cfg = bench_encoder();
+    let bb = pretrained_backbone(&cfg, "enc", 200);
+    let mut rows = Vec::new();
+    for (label, init) in [
+        ("a_orth", PsoftInit::AOrth),
+        ("b_orth", PsoftInit::BOrth),
+        ("symmetric", PsoftInit::Symmetric),
+    ] {
+        let mut p = PeftConfig::new(MethodKind::Psoft, 24);
+        p.modules = cfg.modules();
+        p.psoft_init = init;
+        let mut rng = Rng::new(78);
+        let model = NativeModel::from_backbone(&bb, &p, &mut rng);
+        let mut be = NativeBackend::new(model);
+        let mut dc = DataConfig::new("glue", "sst2");
+        dc.n_train = if fast() { 48 } else { 256 };
+        dc.n_val = 48;
+        dc.n_test = 48;
+        dc.seq_len = 24;
+        let data = load_task(&dc, cfg.vocab_size).unwrap();
+        let mut tc = TrainConfig::default();
+        tc.epochs = if fast() { 1 } else { 4 };
+        tc.batch_size = 32;
+        tc.lr = 2e-3;
+        tc.head_lr = 2e-3;
+        let report = train(&mut be, &data, &tc, 0.0).unwrap();
+        println!("{label:<10} sst2-sim accuracy = {:.1}", report.test_metric);
+        rows.push(format!("{label},{:.2}", report.test_metric));
+    }
+    write_csv("table7_init", "init,accuracy", &rows);
+}
+
+/// Table 16: randomized-SVD n_iter — init time vs subspace accuracy
+/// (relative reconstruction error of the rank-r principal part).
+fn table16_svd_iters() {
+    println!("\n=== Table 16 (sim): effect of SVD n_iter ===");
+    let mut rng = Rng::new(79);
+    // A weight with a decaying spectrum, like a pretrained layer.
+    let d = 192;
+    let n = 192;
+    let r = 32;
+    let u = psoft::linalg::orthonormal_columns(&DMat::randn(d, r * 2, 1.0, &mut rng));
+    let v = psoft::linalg::orthonormal_columns(&DMat::randn(n, r * 2, 1.0, &mut rng));
+    let mut w = DMat::zeros(d, n);
+    for k in 0..r * 2 {
+        let sigma = 8.0 * (-(k as f64) / 10.0).exp() + 0.05;
+        for i in 0..d {
+            for j in 0..n {
+                w[(i, j)] += sigma * u[(i, k)] * v[(j, k)];
+            }
+        }
+    }
+    let w32: psoft::linalg::Mat = w.cast();
+    let exact = principal_split(&w32, r, None, &mut rng);
+    let exact_pri = {
+        let (a, b) = exact.asymmetric_factors();
+        psoft::linalg::matmul(&a, &b)
+    };
+    let mut rows = Vec::new();
+    for n_iter in [0usize, 5, 10, 20] {
+        let mut rng2 = Rng::new(80);
+        let ms = time_ms(3, || {
+            let _ = principal_split(&w32, r, Some(n_iter), &mut rng2);
+        });
+        let split = principal_split(&w32, r, Some(n_iter), &mut Rng::new(81));
+        let (a, b) = split.asymmetric_factors();
+        let pri = psoft::linalg::matmul(&a, &b);
+        let rel = pri.dist(&exact_pri) / exact_pri.frobenius_norm();
+        println!("n_iter={n_iter:<3} init={ms:>8.2} ms  rel-error vs exact SVD = {rel:.2e}");
+        rows.push(format!("{n_iter},{ms:.3},{rel:.3e}"));
+    }
+    let mut rng3 = Rng::new(82);
+    let ms_exact = time_ms(3, || {
+        let _ = principal_split(&w32, r, None, &mut rng3);
+    });
+    println!("exact      init={ms_exact:>8.2} ms  (reference)");
+    rows.push(format!("exact,{ms_exact:.3},0"));
+    write_csv("table16_svd_iters", "n_iter,init_ms,rel_error", &rows);
+}
+
+/// Fig 3: tunable vectors α/β ablation on GSM-8K-sim.
+fn fig3_tunable_vectors() {
+    println!("\n=== Fig 3 (sim): effect of tunable vectors ===");
+    let epochs = if fast() { 1 } else { 4 };
+    let mut rows = Vec::new();
+    for (label, ua, ub) in [
+        ("none", false, false),
+        ("alpha_only", true, false),
+        ("beta_only", false, true),
+        ("both", true, true),
+    ] {
+        let mut p = PeftConfig::new(MethodKind::Psoft, 24);
+        p.modules = bench_decoder().modules();
+        p.use_alpha = ua;
+        p.use_beta = ub;
+        let (params, em, _) = run_decoder_job(p, "gsm8k", epochs);
+        println!("{label:<12} params={params:<8} EM={em:.1}%");
+        rows.push(format!("{label},{params},{em:.2}"));
+    }
+    write_csv("fig3_tunable_vectors", "variant,params,exact_match", &rows);
+}
+
+/// Fig 8a: inserted modules × rank on GSM-8K-sim.
+fn fig8a_modules() {
+    println!("\n=== Fig 8a (sim): effect of inserted modules ===");
+    let epochs = if fast() { 1 } else { 3 };
+    let qkv = vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V];
+    let qkvud =
+        vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V, ModuleKind::U, ModuleKind::D];
+    let all = bench_decoder().modules();
+    let mut rows = Vec::new();
+    for (label, modules) in [("qkv", qkv), ("qkvud", qkvud), ("all", all)] {
+        for rank in [8usize, 24] {
+            let mut p = PeftConfig::new(MethodKind::Psoft, rank);
+            p.modules = modules.clone();
+            let (params, em, _) = run_decoder_job(p, "gsm8k", epochs);
+            println!("{label:<6} r={rank:<3} params={params:<8} EM={em:.1}%");
+            rows.push(format!("{label},{rank},{params},{em:.2}"));
+        }
+    }
+    write_csv("fig8a_modules", "modules,rank,params,exact_match", &rows);
+}
+
+/// Fig 8b: Neumann terms — orthogonality defect and per-transform cost vs
+/// K, compared with the exact Cayley transform.
+fn fig8b_neumann() {
+    println!("\n=== Fig 8b (sim): effect of Neumann terms ===");
+    let r = 46;
+    let mut rng = Rng::new(83);
+    let params: Vec<f64> = (0..skew_param_count(r)).map(|_| 0.05 * rng.normal()).collect();
+    let q = skew_from_params(r, &params);
+    let exact = cayley_exact(&q);
+    let mut rows = Vec::new();
+    for k in [1usize, 2, 3, 4, 5, 6, 8] {
+        let ms = time_ms(5, || {
+            let _ = cayley_neumann(&q, k);
+        });
+        let approx = cayley_neumann(&q, k);
+        let err = approx.dist(&exact);
+        let defect = psoft::linalg::orthogonality_defect(&approx);
+        println!("K={k:<2} {ms:>7.3} ms  ‖R−R_exact‖={err:.2e}  defect={defect:.2e}");
+        rows.push(format!("{k},{ms:.4},{err:.3e},{defect:.3e}"));
+    }
+    let ms_exact = time_ms(5, || {
+        let _ = cayley_exact(&q);
+    });
+    println!("exact {ms_exact:>7.3} ms");
+    rows.push(format!("exact,{ms_exact:.4},0,0"));
+    write_csv("fig8b_neumann", "terms,ms,err_vs_exact,defect", &rows);
+}

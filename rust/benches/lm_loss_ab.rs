@@ -1,0 +1,58 @@
+//! §Perf A/B microbench: the decoder LM-loss hot path, scalar loops vs
+//! the gather+matmul rewrite (EXPERIMENTS.md §Perf).
+// quick honest measurement: decoder train step + isolated scalar-vs-matmul LM loss
+use psoft::bench::time_ms;
+use psoft::config::*;
+use psoft::model::native::{Batch, Target};
+use psoft::model::{Backbone, NativeModel};
+use psoft::runtime::{Backend, Hyper, NativeBackend};
+use psoft::util::rng::Rng;
+use psoft::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+
+fn main() {
+    let cfg = ModelConfig::decoder_small();
+    let mut rng = Rng::new(1);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let mut p = PeftConfig::new(MethodKind::Psoft, 32);
+    p.modules = cfg.modules();
+    let model = NativeModel::from_backbone(&bb, &p, &mut rng);
+    let mut be = NativeBackend::new(model);
+    let (bsz, seq) = (16usize, 32usize);
+    let tokens: Vec<i32> = (0..bsz*seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let mut mask = vec![0.0f32; bsz*seq];
+    for b in 0..bsz { for s in seq/2..seq { mask[b*seq+s] = 1.0; } }
+    let batch = Batch { batch: bsz, seq, tokens: tokens.clone(), pad: vec![1.0; bsz*seq], target: Target::LmMask(mask) };
+    let hyper = Hyper::default();
+    let t = time_ms(5, || { be.train_step(&batch, &hyper).unwrap(); });
+    println!("decoder train_step (matmul LM loss): {t:.1} ms");
+
+    // Isolated LM-loss cost comparison at the same shape.
+    let d = cfg.d_model; let v = cfg.vocab_size; let m = bsz*seq/2;
+    let hidden = Mat::randn(m, d, 1.0, &mut rng);
+    let lm = Mat::randn(d, v, 0.05, &mut rng);
+    let t_mat = time_ms(5, || {
+        let logits = matmul(&hidden, &lm);
+        let dl = logits.clone();
+        let _dlm = matmul_tn(&hidden, &dl);
+        let _dh = matmul_nt(&dl, &lm);
+    });
+    let t_scalar = time_ms(3, || {
+        let mut d_lm = Mat::zeros(d, v);
+        let mut acc = 0.0f32;
+        for t in 0..m {
+            let hrow = hidden.row(t);
+            let mut logits = vec![0.0f32; v];
+            for i in 0..d {
+                let hv = hrow[i];
+                let lrow = lm.row(i);
+                for (lo, &lv) in logits.iter_mut().zip(lrow) { *lo += hv * lv; }
+            }
+            for j in 0..v {
+                acc += logits[j];
+                for i in 0..d { d_lm[(i,j)] += logits[j] * hrow[i]; }
+            }
+        }
+        std::hint::black_box((acc, d_lm));
+    });
+    println!("LM loss fwd+bwd isolated: scalar {t_scalar:.1} ms vs matmul {t_mat:.1} ms ({:.1}x)", t_scalar / t_mat);
+}

@@ -1,0 +1,237 @@
+//! Performance benches: Tables 19/20 (single linear layer / transformer
+//! block FP+BP time and live-activation accounting per method), Tables
+//! 21/22 (whole-model projections vs sequence length / batch), Fig 4b
+//! (training speed per method), plus substrate microbenches (matmul,
+//! Cayley–Neumann, SVD) used by the §Perf iteration log.
+
+use psoft::bench::{bench_encoder, pretrained_backbone, time_ms, write_csv};
+use psoft::config::{MethodKind, ModelConfig, PeftConfig};
+use psoft::linalg::{matmul, svd, DMat, Mat};
+use psoft::memmodel::{activation::ActShape, peak_memory_estimate, PaperModel};
+use psoft::model::native::{Batch, Target};
+use psoft::model::NativeModel;
+use psoft::peft::build_adapter;
+use psoft::runtime::{Backend, Hyper, NativeBackend};
+use psoft::util::rng::Rng;
+
+fn fast() -> bool {
+    std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    micro_substrates();
+    table19_single_layer();
+    table20_block();
+    table21_22_model_memory();
+    fig4b_training_speed();
+}
+
+/// Substrate microbenches (the §Perf baselines).
+fn micro_substrates() {
+    println!("\n=== microbenches ===");
+    let mut rng = Rng::new(91);
+    let a = Mat::randn(256, 256, 1.0, &mut rng);
+    let b = Mat::randn(256, 256, 1.0, &mut rng);
+    let t_mm = time_ms(10, || {
+        let _ = matmul(&a, &b);
+    });
+    let flops = 2.0 * 256f64.powi(3);
+    println!("matmul 256³: {t_mm:.3} ms ({:.2} GFLOP/s)", flops / t_mm / 1e6);
+
+    let q = psoft::linalg::skew_from_params(
+        46,
+        &(0..46 * 45 / 2).map(|i| 0.01 * ((i % 7) as f64 - 3.0)).collect::<Vec<_>>(),
+    );
+    let t_cn = time_ms(20, || {
+        let _ = psoft::linalg::cayley_neumann(&q, 5);
+    });
+    println!("cayley_neumann r=46 K=5: {t_cn:.3} ms");
+
+    let w = DMat::randn(128, 128, 1.0, &mut rng);
+    let t_svd = time_ms(3, || {
+        let _ = svd(&w);
+    });
+    println!("jacobi svd 128×128: {t_svd:.1} ms");
+    write_csv(
+        "perf_micro",
+        "kernel,ms",
+        &[
+            format!("matmul256,{t_mm:.4}"),
+            format!("cayley_neumann_r46,{t_cn:.4}"),
+            format!("svd128,{t_svd:.3}"),
+        ],
+    );
+}
+
+/// Table 19: FP/BP wall-time of a single adapted linear layer per method,
+/// plus its retained-activation accounting (floats/token).
+fn table19_single_layer() {
+    println!("\n=== Table 19 (sim): single linear layer FP/BP per method ===");
+    let (d, n) = (192, 192);
+    let tokens = if fast() { 64 } else { 512 };
+    let mut rng = Rng::new(92);
+    let w = Mat::randn(d, n, 1.0 / (d as f64).sqrt(), &mut rng);
+    let x = Mat::randn(tokens, d, 1.0, &mut rng);
+    let dy = Mat::randn(tokens, n, 1.0, &mut rng);
+    let mut rows = Vec::new();
+    for m in MethodKind::ALL {
+        let rank = match m {
+            MethodKind::Psoft => 32,
+            MethodKind::LoraXs => 32,
+            _ => 8,
+        };
+        let mut cfg = PeftConfig::new(m, rank);
+        cfg.oft_block_size = 32;
+        cfg.boft_b = 2;
+        cfg.boft_m = 4;
+        let adapter = build_adapter(&cfg, &w, &mut rng);
+        let fp = time_ms(5, || {
+            let _ = adapter.forward(&x);
+        });
+        let bp = time_ms(5, || {
+            let _ = adapter.backward(&x, &dy);
+        });
+        let act = adapter.act_floats_per_token();
+        println!("{:<10} FP={fp:>8.3} ms  BP={bp:>8.3} ms  act/token={act}", m.name());
+        rows.push(format!("{},{fp:.4},{bp:.4},{act}", m.name()));
+    }
+    write_csv("table19_single_layer", "method,fp_ms,bp_ms,act_floats_per_token", &rows);
+}
+
+/// Table 20: full transformer-block FP+BP per method (native backend,
+/// one train-step without the optimizer update isolated per layer count 1).
+fn table20_block() {
+    println!("\n=== Table 20 (sim): transformer block FP+BP per method ===");
+    let mut cfg = bench_encoder();
+    cfg.n_layers = 1;
+    let bsz = if fast() { 4 } else { 16 };
+    let seq = 24;
+    let mut rows = Vec::new();
+    for m in [
+        MethodKind::Psoft,
+        MethodKind::Lora,
+        MethodKind::Dora,
+        MethodKind::OftV2,
+        MethodKind::Boft,
+        MethodKind::Goft,
+        MethodKind::LoraXs,
+    ] {
+        let rank = if m == MethodKind::Psoft || m == MethodKind::LoraXs { 32 } else { 8 };
+        let mut p = PeftConfig::new(m, rank);
+        p.modules = cfg.modules();
+        p.boft_b = 2;
+        p.boft_m = 4;
+        let mut rng = Rng::new(93);
+        let bb = psoft::model::Backbone::random(&cfg, &mut rng);
+        let model = NativeModel::from_backbone(&bb, &p, &mut rng);
+        let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+        let batch = Batch {
+            batch: bsz,
+            seq,
+            tokens,
+            pad: vec![1.0; bsz * seq],
+            target: Target::Class(labels),
+        };
+        let ms = time_ms(3, || {
+            let _ = psoft::model::native::train_grads(&model, &batch, 0.0);
+        });
+        // Live activation accounting at this shape (batch×seq tokens).
+        let extra_floats: usize = model
+            .layers
+            .iter()
+            .flat_map(|l| &l.modules)
+            .filter_map(|(_, op)| match op {
+                psoft::model::ModuleOp::Adapted(a) => Some(a.act_floats_per_token()),
+                _ => None,
+            })
+            .sum();
+        let extra_mb = (extra_floats * bsz * seq * 4) as f64 / 1e6;
+        println!("{:<10} fwd+bwd = {ms:>8.2} ms   adapter-activations = {extra_mb:.3} MB", m.name());
+        rows.push(format!("{},{ms:.3},{extra_mb:.4}", m.name()));
+    }
+    write_csv("table20_block", "method,fwdbwd_ms,adapter_act_mb", &rows);
+}
+
+/// Tables 21/22: whole-model projected peaks at paper scale across
+/// sequence lengths (DeBERTa) and batch sizes (ViT) — including the OOM
+/// boundaries.
+fn table21_22_model_memory() {
+    println!("\n=== Tables 21/22: projected peak memory at paper scale ===");
+    let mut rows = Vec::new();
+    let deberta = PaperModel::deberta_v3_base().config();
+    for s in [64usize, 128, 256] {
+        for (label, m, r) in
+            [("goftv2", MethodKind::Goft, 1), ("boft", MethodKind::Boft, 1), ("psoft", MethodKind::Psoft, 46)]
+        {
+            let mut p = PeftConfig::new(m, r);
+            p.modules = deberta.modules();
+            let mem = peak_memory_estimate(&deberta, &p, 64, s);
+            println!("deberta s={s:<4} {label:<8} {:.1} GiB", mem / 1.074e9);
+            rows.push(format!("deberta,{s},{label},{mem:.0}"));
+        }
+    }
+    let vit = PaperModel::vit_b16().config();
+    for b in [16usize, 32, 64] {
+        for (label, m, r) in
+            [("goftv2", MethodKind::Goft, 1), ("boft", MethodKind::Boft, 1), ("psoft", MethodKind::Psoft, 46)]
+        {
+            let mut p = PeftConfig::new(m, r);
+            p.modules = vit.modules();
+            let mem = peak_memory_estimate(&vit, &p, b, 197);
+            let oom = psoft::memmodel::would_oom(mem, psoft::memmodel::RTX4090_BYTES);
+            println!("vit b={b:<3} {label:<8} {:.1} GiB {}", mem / 1.074e9, if oom { "OOM@24G" } else { "" });
+            rows.push(format!("vit,{b},{label},{mem:.0}"));
+        }
+    }
+    // Paper boundary: GOFT OOMs at b=64 on ViT; PSOFT stays far below.
+    let shape = ActShape { batch: 64, seq: 197, hidden: 768, heads: 12, ffn_mult: 4.0 };
+    let _ = shape;
+    write_csv("table21_22_memory", "model,shape,method,mem_bytes", &rows);
+}
+
+/// Fig 4b: end-to-end training-speed comparison (steps/sec per method on
+/// the same workload).
+fn fig4b_training_speed() {
+    println!("\n=== Fig 4b (sim): training speed per method ===");
+    let cfg: ModelConfig = bench_encoder();
+    let bb = pretrained_backbone(&cfg, "enc", 200);
+    let bsz = if fast() { 8 } else { 16 };
+    let seq = 24;
+    let steps = if fast() { 2 } else { 5 };
+    let mut rows = Vec::new();
+    for m in [
+        MethodKind::Psoft,
+        MethodKind::Lora,
+        MethodKind::Dora,
+        MethodKind::OftV2,
+        MethodKind::Boft,
+        MethodKind::Goft,
+        MethodKind::QGoft,
+    ] {
+        let rank = if m == MethodKind::Psoft { 32 } else { 8 };
+        let mut p = PeftConfig::new(m, rank);
+        p.modules = cfg.modules();
+        p.boft_b = 2;
+        p.boft_m = 4;
+        let mut rng = Rng::new(94);
+        let model = NativeModel::from_backbone(&bb, &p, &mut rng);
+        let mut be = NativeBackend::new(model);
+        let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+        let batch = Batch {
+            batch: bsz,
+            seq,
+            tokens,
+            pad: vec![1.0; bsz * seq],
+            target: Target::Class(labels),
+        };
+        let hyper = Hyper::default();
+        let ms = time_ms(steps, || {
+            be.train_step(&batch, &hyper).unwrap();
+        });
+        println!("{:<10} {:>8.2} ms/step ({:.2} steps/s)", m.name(), ms, 1000.0 / ms);
+        rows.push(format!("{},{ms:.3}", m.name()));
+    }
+    write_csv("fig4b_training_speed", "method,ms_per_step", &rows);
+}

@@ -1,0 +1,109 @@
+//! Bench-harness support: cached pretrained backbones, timing loops, and
+//! CSV emission shared by the `rust/benches/*` table/figure regenerators.
+
+use crate::config::{Arch, DataConfig, ModelConfig};
+use crate::model::native::Target;
+use crate::model::{Backbone, NativeModel};
+use crate::runtime::{Backend, Hyper, NativeBackend};
+use crate::util::rng::Rng;
+use crate::util::stats::Stopwatch;
+use std::path::PathBuf;
+
+/// Standard bench models.
+pub fn bench_encoder() -> ModelConfig {
+    ModelConfig::encoder_small()
+}
+
+pub fn bench_vit() -> ModelConfig {
+    ModelConfig::vit_small()
+}
+
+pub fn bench_decoder() -> ModelConfig {
+    ModelConfig::decoder_small()
+}
+
+fn cache_path(tag: &str) -> PathBuf {
+    PathBuf::from("checkpoints").join(format!("bench_{tag}.bin"))
+}
+
+/// Pretrain (or load a cached) backbone for benches so method comparisons
+/// run on weights with genuine structure. Cached on disk keyed by `tag`.
+pub fn pretrained_backbone(cfg: &ModelConfig, tag: &str, steps: usize) -> Backbone {
+    let path = cache_path(tag);
+    if let Ok(bb) = Backbone::load(&path) {
+        if bb.cfg == *cfg {
+            return bb;
+        }
+    }
+    let mut rng = Rng::new(0xBEEFCAFE);
+    let model = NativeModel::for_pretraining(cfg, &mut rng);
+    let mut backend = NativeBackend::new(model);
+    let mut dc = DataConfig::new("pretext", "corpus");
+    dc.n_train = steps * 16;
+    dc.n_val = 1;
+    dc.n_test = 1;
+    dc.seq_len = cfg.max_seq.min(32);
+    let task = crate::data::load_task(&dc, cfg.vocab_size).expect("pretext");
+    let batches = task.batches(&task.train, 16, &mut rng);
+    let hyper = Hyper { lr: 3e-3, head_lr: 3e-3, ..Default::default() };
+    for b in batches.iter().take(steps) {
+        let b = if cfg.arch == Arch::Encoder {
+            let labels: Vec<usize> =
+                (0..b.batch).map(|k| (b.tokens[k * b.seq] as usize) % 2).collect();
+            let mut b2 = b.clone();
+            b2.target = Target::Class(labels);
+            b2
+        } else {
+            b.clone()
+        };
+        backend.train_step(&b, &hyper).expect("pretrain step");
+    }
+    let bb = backend.model.to_backbone();
+    std::fs::create_dir_all("checkpoints").ok();
+    bb.save(&path).ok();
+    bb
+}
+
+/// Median wall-clock of `f` over `reps` runs after one warmup (ms).
+pub fn time_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.ms());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Write a CSV report under reports/.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    std::fs::create_dir_all("reports").ok();
+    let mut out = String::from(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    let path = format!("reports/{name}.csv");
+    std::fs::write(&path, out).expect("write csv");
+    eprintln!("wrote {path}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive() {
+        let t = time_ms(3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(t >= 0.0);
+    }
+}

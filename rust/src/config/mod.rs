@@ -1,0 +1,622 @@
+//! Typed experiment configuration.
+//!
+//! A `RunConfig` fully describes one fine-tuning job: the backbone model
+//! shape, the PEFT method + hyperparameters, the optimizer schedule, and the
+//! dataset. Configs load from TOML-subset files (`configs/*.toml`), from the
+//! CLI, or are constructed programmatically by the suite runners.
+
+pub mod toml;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Backbone architecture family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    /// Bidirectional encoder with a classification/regression head
+    /// (DeBERTaV3 / ViT stand-in).
+    Encoder,
+    /// Causal decoder language model (LLaMA stand-in, gated MLP).
+    Decoder,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Arch> {
+        match s {
+            "encoder" => Ok(Arch::Encoder),
+            "decoder" => Ok(Arch::Decoder),
+            _ => bail!("unknown arch {s:?} (expected encoder|decoder)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Encoder => "encoder",
+            Arch::Decoder => "decoder",
+        }
+    }
+}
+
+/// Linear sub-modules PEFT adapters can be inserted into (paper notation:
+/// Q, K, V attention projections, O attention output, U/D the MLP
+/// up/down projections, G the gated-MLP gate — decoder only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ModuleKind {
+    Q,
+    K,
+    V,
+    O,
+    U,
+    D,
+    G,
+}
+
+impl ModuleKind {
+    pub const ALL: [ModuleKind; 7] =
+        [ModuleKind::Q, ModuleKind::K, ModuleKind::V, ModuleKind::O, ModuleKind::U, ModuleKind::D, ModuleKind::G];
+
+    pub fn parse(s: &str) -> Result<ModuleKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "Q" => Ok(ModuleKind::Q),
+            "K" => Ok(ModuleKind::K),
+            "V" => Ok(ModuleKind::V),
+            "O" => Ok(ModuleKind::O),
+            "U" => Ok(ModuleKind::U),
+            "D" => Ok(ModuleKind::D),
+            "G" => Ok(ModuleKind::G),
+            _ => bail!("unknown module {s:?} (expected one of Q,K,V,O,U,D,G)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModuleKind::Q => "Q",
+            ModuleKind::K => "K",
+            ModuleKind::V => "V",
+            ModuleKind::O => "O",
+            ModuleKind::U => "U",
+            ModuleKind::D => "D",
+            ModuleKind::G => "G",
+        }
+    }
+
+    pub fn parse_list(s: &str) -> Result<Vec<ModuleKind>> {
+        s.split(',').map(|p| ModuleKind::parse(p.trim())).collect()
+    }
+}
+
+/// Model backbone shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// Output classes for encoder heads (1 ⇒ regression, STS-B style).
+    pub n_classes: usize,
+}
+
+impl ModelConfig {
+    /// DeBERTaV3-base stand-in at CPU-feasible width.
+    pub fn encoder_small() -> Self {
+        ModelConfig {
+            arch: Arch::Encoder,
+            vocab_size: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 64,
+            n_classes: 2,
+        }
+    }
+
+    /// ViT-B/16 stand-in: patch-token encoder (vocab = quantized patch ids).
+    pub fn vit_small() -> Self {
+        ModelConfig {
+            arch: Arch::Encoder,
+            vocab_size: 1024,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 65, // 64 patches + CLS
+            n_classes: 10,
+        }
+    }
+
+    /// LLaMA stand-in: causal decoder with gated MLP.
+    pub fn decoder_small() -> Self {
+        ModelConfig {
+            arch: Arch::Decoder,
+            vocab_size: 512,
+            d_model: 192,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 96,
+            n_classes: 0,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0, "d_model must divide n_heads");
+        self.d_model / self.n_heads
+    }
+
+    /// The linear modules this architecture actually has.
+    pub fn modules(&self) -> Vec<ModuleKind> {
+        match self.arch {
+            Arch::Encoder => vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V, ModuleKind::O, ModuleKind::U, ModuleKind::D],
+            Arch::Decoder => ModuleKind::ALL.to_vec(),
+        }
+    }
+
+    /// (input_dim, output_dim) of a given linear module.
+    pub fn module_shape(&self, m: ModuleKind) -> (usize, usize) {
+        let d = self.d_model;
+        let f = self.d_ff;
+        match m {
+            ModuleKind::Q | ModuleKind::K | ModuleKind::V | ModuleKind::O => (d, d),
+            ModuleKind::U | ModuleKind::G => (d, f),
+            ModuleKind::D => (f, d),
+        }
+    }
+
+    /// Total backbone parameter count (embeddings + blocks + head).
+    pub fn backbone_params(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let per_block = match self.arch {
+            // Q,K,V,O + U,D + 2 layernorm (scale+bias)
+            Arch::Encoder => 4 * d * d + 2 * d * f + 4 * d,
+            // Q,K,V,O + U,G,D + 2 rmsnorm scales
+            Arch::Decoder => 4 * d * d + 3 * d * f + 2 * d,
+        };
+        let emb = self.vocab_size * d + self.max_seq * d;
+        let head = match self.arch {
+            Arch::Encoder => d * self.n_classes + self.n_classes,
+            Arch::Decoder => d * self.vocab_size,
+        };
+        emb + self.n_layers * per_block + head
+    }
+}
+
+/// PEFT method selector (all baselines from the paper §5 + PSOFT).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MethodKind {
+    Fft,
+    Lora,
+    Pissa,
+    Dora,
+    LoraXs,
+    Vera,
+    OftV2,
+    Boft,
+    Goft,
+    QGoft,
+    Svft,
+    Psoft,
+}
+
+impl MethodKind {
+    pub const ALL: [MethodKind; 12] = [
+        MethodKind::Fft,
+        MethodKind::Lora,
+        MethodKind::Pissa,
+        MethodKind::Dora,
+        MethodKind::LoraXs,
+        MethodKind::Vera,
+        MethodKind::OftV2,
+        MethodKind::Boft,
+        MethodKind::Goft,
+        MethodKind::QGoft,
+        MethodKind::Svft,
+        MethodKind::Psoft,
+    ];
+
+    pub fn parse(s: &str) -> Result<MethodKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fft" => Ok(MethodKind::Fft),
+            "lora" => Ok(MethodKind::Lora),
+            "pissa" => Ok(MethodKind::Pissa),
+            "dora" => Ok(MethodKind::Dora),
+            "lora_xs" | "lora-xs" | "loraxs" => Ok(MethodKind::LoraXs),
+            "vera" => Ok(MethodKind::Vera),
+            "oftv2" | "oft" => Ok(MethodKind::OftV2),
+            "boft" => Ok(MethodKind::Boft),
+            "goft" | "goftv2" => Ok(MethodKind::Goft),
+            "qgoft" | "qgoftv2" => Ok(MethodKind::QGoft),
+            "svft" => Ok(MethodKind::Svft),
+            "psoft" => Ok(MethodKind::Psoft),
+            _ => bail!("unknown PEFT method {s:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Fft => "fft",
+            MethodKind::Lora => "lora",
+            MethodKind::Pissa => "pissa",
+            MethodKind::Dora => "dora",
+            MethodKind::LoraXs => "lora_xs",
+            MethodKind::Vera => "vera",
+            MethodKind::OftV2 => "oftv2",
+            MethodKind::Boft => "boft",
+            MethodKind::Goft => "goftv2",
+            MethodKind::QGoft => "qgoftv2",
+            MethodKind::Svft => "svft",
+            MethodKind::Psoft => "psoft",
+        }
+    }
+}
+
+/// PSOFT initialization scheme (paper Table 7 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PsoftInit {
+    /// A_orth R_orth B — the paper's winning scheme (Eq. 6): A' = U,
+    /// B' = ΣVᵀ.
+    AOrth,
+    /// A R_orth B_orth — orthogonality forced onto B instead.
+    BOrth,
+    /// A R_orth B — PiSSA-style symmetric √Σ split, no normalization.
+    Symmetric,
+}
+
+impl PsoftInit {
+    pub fn parse(s: &str) -> Result<PsoftInit> {
+        match s {
+            "a_orth" | "aorth" => Ok(PsoftInit::AOrth),
+            "b_orth" | "borth" => Ok(PsoftInit::BOrth),
+            "symmetric" | "sym" => Ok(PsoftInit::Symmetric),
+            _ => bail!("unknown psoft init {s:?}"),
+        }
+    }
+}
+
+/// PEFT hyperparameters.
+#[derive(Clone, Debug)]
+pub struct PeftConfig {
+    pub method: MethodKind,
+    /// Rank r (LoRA-family, PSOFT, LoRA-XS), or ignored by FFT.
+    pub rank: usize,
+    /// OFTv2 block size b.
+    pub oft_block_size: usize,
+    /// BOFT butterfly: number of factors m and block size b.
+    pub boft_m: usize,
+    pub boft_b: usize,
+    /// Modules adapters are inserted into.
+    pub modules: Vec<ModuleKind>,
+    /// Truncated Neumann terms K for Cayley (paper: K = 5).
+    pub neumann_terms: usize,
+    /// PSOFT tunable vectors (Fig 3 ablation).
+    pub use_alpha: bool,
+    pub use_beta: bool,
+    /// PSOFT init scheme (Table 7 ablation).
+    pub psoft_init: PsoftInit,
+    /// Orthogonality regularizer weight γ (Table 6; 0 disables).
+    pub gamma_orth: f64,
+    /// Randomized-SVD power iterations; None ⇒ exact SVD (Table 16).
+    pub svd_n_iter: Option<usize>,
+}
+
+impl PeftConfig {
+    pub fn new(method: MethodKind, rank: usize) -> Self {
+        PeftConfig {
+            method,
+            rank,
+            oft_block_size: 32,
+            boft_m: 2,
+            boft_b: 8,
+            modules: vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V],
+            neumann_terms: 5,
+            use_alpha: true,
+            use_beta: true,
+            psoft_init: PsoftInit::AOrth,
+            gamma_orth: 0.0,
+            svd_n_iter: None,
+        }
+    }
+
+    pub fn with_modules(mut self, modules: Vec<ModuleKind>) -> Self {
+        self.modules = modules;
+        self
+    }
+}
+
+/// Learning-rate schedule shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Constant,
+    Linear,
+    Cosine,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Result<Schedule> {
+        match s {
+            "constant" => Ok(Schedule::Constant),
+            "linear" => Ok(Schedule::Linear),
+            "cosine" => Ok(Schedule::Cosine),
+            _ => bail!("unknown schedule {s:?}"),
+        }
+    }
+}
+
+/// Optimizer / loop hyperparameters (paper Tables 10–12, 14).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub lr: f64,
+    /// Separate head LR (paper: fixed 5e-4 head LR on GLUE).
+    pub head_lr: f64,
+    pub weight_decay: f64,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub warmup_ratio: f64,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub grad_clip: f64,
+    /// Optional hard cap on optimizer steps (benches use this).
+    pub max_steps: Option<usize>,
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 4e-4,
+            head_lr: 5e-4,
+            weight_decay: 0.0,
+            epochs: 10,
+            batch_size: 32,
+            warmup_ratio: 0.1,
+            schedule: Schedule::Linear,
+            seed: 42,
+            grad_clip: 1.0,
+            max_steps: None,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            adam_eps: 1e-8,
+        }
+    }
+}
+
+/// Dataset selector.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// Suite: glue | vtab | mathqa | commonsense | pretext.
+    pub suite: String,
+    /// Task name inside the suite (e.g. "cola", "cifar100", "gsm8k").
+    pub task: String,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl DataConfig {
+    pub fn new(suite: &str, task: &str) -> Self {
+        DataConfig {
+            suite: suite.to_string(),
+            task: task.to_string(),
+            n_train: 800,
+            n_val: 200,
+            n_test: 200,
+            seq_len: 32,
+            seed: 1234,
+        }
+    }
+}
+
+/// A complete fine-tuning job description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub peft: PeftConfig,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file; missing keys fall back to the preset
+    /// defaults for the declared arch.
+    pub fn from_toml(tree: &Json) -> Result<RunConfig> {
+        let m = tree.get("model");
+        let arch = Arch::parse(m.get("arch").as_str().unwrap_or("encoder"))?;
+        let mut model = match arch {
+            Arch::Encoder => ModelConfig::encoder_small(),
+            Arch::Decoder => ModelConfig::decoder_small(),
+        };
+        read_usize(m, "vocab_size", &mut model.vocab_size);
+        read_usize(m, "d_model", &mut model.d_model);
+        read_usize(m, "n_layers", &mut model.n_layers);
+        read_usize(m, "n_heads", &mut model.n_heads);
+        read_usize(m, "d_ff", &mut model.d_ff);
+        read_usize(m, "max_seq", &mut model.max_seq);
+        read_usize(m, "n_classes", &mut model.n_classes);
+
+        let p = tree.get("peft");
+        let method = MethodKind::parse(p.get("method").as_str().unwrap_or("psoft"))?;
+        let rank = p.get("rank").as_usize().unwrap_or(8);
+        let mut peft = PeftConfig::new(method, rank);
+        read_usize(p, "oft_block_size", &mut peft.oft_block_size);
+        read_usize(p, "boft_m", &mut peft.boft_m);
+        read_usize(p, "boft_b", &mut peft.boft_b);
+        read_usize(p, "neumann_terms", &mut peft.neumann_terms);
+        if let Some(arr) = p.get("modules").as_arr() {
+            peft.modules = arr
+                .iter()
+                .map(|v| ModuleKind::parse(v.as_str().ok_or_else(|| anyhow!("modules entries must be strings"))?))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(b) = p.get("use_alpha").as_bool() {
+            peft.use_alpha = b;
+        }
+        if let Some(b) = p.get("use_beta").as_bool() {
+            peft.use_beta = b;
+        }
+        if let Some(s) = p.get("init").as_str() {
+            peft.psoft_init = PsoftInit::parse(s)?;
+        }
+        if let Some(g) = p.get("gamma_orth").as_f64() {
+            peft.gamma_orth = g;
+        }
+        if let Some(n) = p.get("svd_n_iter").as_usize() {
+            peft.svd_n_iter = Some(n);
+        }
+
+        let t = tree.get("train");
+        let mut train = TrainConfig::default();
+        read_f64(t, "lr", &mut train.lr);
+        read_f64(t, "head_lr", &mut train.head_lr);
+        read_f64(t, "weight_decay", &mut train.weight_decay);
+        read_usize(t, "epochs", &mut train.epochs);
+        read_usize(t, "batch_size", &mut train.batch_size);
+        read_f64(t, "warmup_ratio", &mut train.warmup_ratio);
+        read_f64(t, "grad_clip", &mut train.grad_clip);
+        if let Some(s) = t.get("schedule").as_str() {
+            train.schedule = Schedule::parse(s)?;
+        }
+        if let Some(s) = t.get("seed").as_i64() {
+            train.seed = s as u64;
+        }
+        if let Some(n) = t.get("max_steps").as_usize() {
+            train.max_steps = Some(n);
+        }
+
+        let d = tree.get("data");
+        let mut data = DataConfig::new(
+            d.get("suite").as_str().unwrap_or("glue"),
+            d.get("task").as_str().unwrap_or("cola"),
+        );
+        read_usize(d, "n_train", &mut data.n_train);
+        read_usize(d, "n_val", &mut data.n_val);
+        read_usize(d, "n_test", &mut data.n_test);
+        read_usize(d, "seq_len", &mut data.seq_len);
+        if let Some(s) = d.get("seed").as_i64() {
+            data.seed = s as u64;
+        }
+
+        if data.seq_len > model.max_seq {
+            bail!("data.seq_len {} exceeds model.max_seq {}", data.seq_len, model.max_seq);
+        }
+        Ok(RunConfig { model, peft, train, data })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig> {
+        Self::from_toml(&toml::parse_file(path)?)
+    }
+}
+
+fn read_usize(obj: &Json, key: &str, out: &mut usize) {
+    if let Some(v) = obj.get(key).as_usize() {
+        *out = v;
+    }
+}
+
+fn read_f64(obj: &Json, key: &str, out: &mut f64) {
+    if let Some(v) = obj.get(key).as_f64() {
+        *out = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_shapes() {
+        let m = ModelConfig::decoder_small();
+        assert_eq!(m.module_shape(ModuleKind::Q), (m.d_model, m.d_model));
+        assert_eq!(m.module_shape(ModuleKind::U), (m.d_model, m.d_ff));
+        assert_eq!(m.module_shape(ModuleKind::D), (m.d_ff, m.d_model));
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+            [model]
+            arch = "decoder"
+            d_model = 64
+            n_layers = 2
+            n_heads = 2
+            d_ff = 128
+            max_seq = 48
+
+            [peft]
+            method = "psoft"
+            rank = 16
+            modules = ["Q", "V"]
+            neumann_terms = 3
+            use_alpha = false
+
+            [train]
+            lr = 1e-3
+            epochs = 5
+            seed = 7
+
+            [data]
+            suite = "mathqa"
+            task = "gsm8k"
+            seq_len = 48
+        "#;
+        let tree = toml::parse(text).unwrap();
+        let rc = RunConfig::from_toml(&tree).unwrap();
+        assert_eq!(rc.model.arch, Arch::Decoder);
+        assert_eq!(rc.model.d_model, 64);
+        assert_eq!(rc.peft.method, MethodKind::Psoft);
+        assert_eq!(rc.peft.modules, vec![ModuleKind::Q, ModuleKind::V]);
+        assert!(!rc.peft.use_alpha && rc.peft.use_beta);
+        assert_eq!(rc.train.seed, 7);
+        assert_eq!(rc.data.task, "gsm8k");
+    }
+
+    #[test]
+    fn seq_len_validation() {
+        let text = "[model]\nmax_seq = 16\n[data]\nseq_len = 32\n";
+        let tree = toml::parse(text).unwrap();
+        assert!(RunConfig::from_toml(&tree).is_err());
+    }
+
+    #[test]
+    fn method_parsing_all() {
+        for m in MethodKind::ALL {
+            assert_eq!(MethodKind::parse(m.name()).unwrap(), m);
+        }
+        assert!(MethodKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn backbone_params_positive_and_monotone() {
+        let small = ModelConfig::encoder_small();
+        let mut big = small.clone();
+        big.n_layers *= 2;
+        assert!(big.backbone_params() > small.backbone_params());
+    }
+}
+
+#[cfg(test)]
+mod preset_tests {
+    use super::*;
+
+    #[test]
+    fn shipped_presets_parse() {
+        for name in
+            ["glue_psoft", "vtab_psoft", "mathqa_psoft", "commonsense_psoft"]
+        {
+            let path = std::path::PathBuf::from(format!("configs/{name}.toml"));
+            if !path.exists() {
+                continue; // tests may run from another cwd
+            }
+            let rc = RunConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(rc.peft.method, MethodKind::Psoft, "{name}");
+            assert!(rc.peft.rank >= 1);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supports the constructs the `configs/` presets use: top-level and
+//! dotted `[section.subsection]` tables, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays, plus `#` comments. Values
+//! land in the same `Json` tree used by the meta files, so downstream
+//! typed-config code has a single access API.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse TOML-subset text into a Json object tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(section) = line.strip_prefix('[') {
+            let section = section.strip_suffix(']').ok_or_else(|| err("unclosed section header"))?;
+            if section.is_empty() {
+                return Err(err("empty section name"));
+            }
+            path = section.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty path component"));
+            }
+            // Materialize the table path.
+            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+        } else if let Some((key, value)) = line.split_once('=') {
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+            let table = ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            table.insert(key.to_string(), value);
+        } else {
+            return Err(err("expected `key = value` or `[section]`"));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Parse a file from disk.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur.entry(part.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(map) => cur = map,
+            _ => return Err(format!("`{part}` is both a value and a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("missing value".to_string());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        // Basic escapes.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    // Numbers (allow underscores like 1_000).
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned.parse::<f64>().map(Json::Num).map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let t = parse("a = 1\nb = \"x\"\nc = true\nd = 2.5").unwrap();
+        assert_eq!(t.get("a").as_usize(), Some(1));
+        assert_eq!(t.get("b").as_str(), Some("x"));
+        assert_eq!(t.get("c").as_bool(), Some(true));
+        assert_eq!(t.get("d").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn parses_sections_and_dots() {
+        let t = parse("[model]\nd = 128\n[train.opt]\nlr = 4e-4\n").unwrap();
+        assert_eq!(t.get("model").get("d").as_usize(), Some(128));
+        assert_eq!(t.get("train").get("opt").get("lr").as_f64(), Some(4e-4));
+    }
+
+    #[test]
+    fn parses_arrays_and_comments() {
+        let t = parse("# comment\nmods = [\"q\", \"k\", \"v\"] # trailing\nranks = [8, 16, 32]").unwrap();
+        assert_eq!(t.get("mods").at(1).as_str(), Some("k"));
+        assert_eq!(t.get("ranks").at(2).as_usize(), Some(32));
+    }
+
+    #[test]
+    fn hash_inside_string_ok() {
+        let t = parse("s = \"a#b\"").unwrap();
+        assert_eq!(t.get("s").as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let t = parse("n = 40_000").unwrap();
+        assert_eq!(t.get("n").as_usize(), Some(40_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("k = ").is_err());
+    }
+
+    #[test]
+    fn escaped_strings() {
+        let t = parse(r#"s = "line1\nline2\t\"q\"""#).unwrap();
+        assert_eq!(t.get("s").as_str(), Some("line1\nline2\t\"q\""));
+    }
+}

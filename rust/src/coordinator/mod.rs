@@ -1,0 +1,329 @@
+//! Coordinator: the multi-job suite runner.
+//!
+//! A paper table is a grid of fine-tuning jobs — task × method × seed. The
+//! coordinator materializes the grid as [`JobSpec`]s, shares the pretrained
+//! [`Backbone`] across workers, fans jobs over the thread pool, collects
+//! [`JobResult`]s (including per-job failures, which become table cells
+//! rather than crashes — the "OOM" cells of Tables 2–5 work the same way),
+//! and aggregates seed averages into report tables.
+
+pub mod report;
+
+use crate::config::{DataConfig, ModelConfig, PeftConfig, TrainConfig};
+use crate::data::load_task;
+use crate::memmodel;
+use crate::model::{Backbone, NativeModel};
+use crate::runtime::NativeBackend;
+use crate::train::{train, TrainReport};
+use crate::util::stats::Stopwatch;
+use crate::util::threadpool::ThreadPool;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+/// One fine-tuning job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: usize,
+    /// Display label, e.g. "psoft_r46".
+    pub label: String,
+    pub data: DataConfig,
+    pub peft: PeftConfig,
+    pub train: TrainConfig,
+}
+
+/// Outcome of one job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: usize,
+    pub label: String,
+    pub task: String,
+    pub seed: u64,
+    pub metric: f64,
+    pub final_loss: f64,
+    pub wall_secs: f64,
+    pub trainable_params: usize,
+    /// Projected activation+state footprint at this model's shape (bytes).
+    pub mem_bytes: f64,
+    /// Populated when the job failed (the table cell shows the reason).
+    pub error: Option<String>,
+    pub loss_curve: Vec<f64>,
+}
+
+/// Device budget simulation: jobs whose projected footprint exceeds the
+/// budget are reported as OOM without running (how the paper's OOM cells
+/// arise at paper-scale shapes; disabled by default at CPU scale).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceBudget {
+    pub bytes: Option<f64>,
+}
+
+impl DeviceBudget {
+    pub fn unlimited() -> Self {
+        DeviceBudget { bytes: None }
+    }
+}
+
+/// Suite runner over a shared backbone.
+pub struct SuiteRunner {
+    pub model: ModelConfig,
+    pub backbone: Arc<Backbone>,
+    pub budget: DeviceBudget,
+}
+
+impl SuiteRunner {
+    pub fn new(backbone: Backbone, budget: DeviceBudget) -> Self {
+        SuiteRunner { model: backbone.cfg.clone(), backbone: Arc::new(backbone), budget }
+    }
+
+    /// Run one job synchronously.
+    pub fn run_job(&self, spec: &JobSpec) -> JobResult {
+        let sw = Stopwatch::start();
+        let mem = memmodel::peak_memory_estimate(
+            &self.model,
+            &spec.peft,
+            spec.train.batch_size,
+            spec.data.seq_len,
+        );
+        let mut base = JobResult {
+            id: spec.id,
+            label: spec.label.clone(),
+            task: spec.data.task.clone(),
+            seed: spec.train.seed,
+            metric: f64::NAN,
+            final_loss: f64::NAN,
+            wall_secs: 0.0,
+            trainable_params: 0,
+            mem_bytes: mem,
+            error: None,
+            loss_curve: Vec::new(),
+        };
+        if let Some(budget) = self.budget.bytes {
+            if mem > budget {
+                base.error = Some(format!(
+                    "OOM: projected {:.1} GiB > budget {:.1} GiB",
+                    mem / (1u64 << 30) as f64,
+                    budget / (1u64 << 30) as f64
+                ));
+                return base;
+            }
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_job_inner(spec)));
+        match outcome {
+            Ok(Ok(report)) => {
+                base.metric = report.test_metric;
+                base.final_loss = report.final_loss;
+                base.trainable_params = report.trainable_params;
+                base.loss_curve = report.loss_curve;
+                base.wall_secs = sw.secs();
+            }
+            Ok(Err(e)) => base.error = Some(format!("{e:#}")),
+            Err(_) => base.error = Some("panic in training job".to_string()),
+        }
+        base
+    }
+
+    fn run_job_inner(&self, spec: &JobSpec) -> anyhow::Result<TrainReport> {
+        let mut rng = crate::util::rng::Rng::new(spec.train.seed ^ 0x5EED_AD0F);
+        let task = load_task(&spec.data, self.model.vocab_size)?;
+        let mut model = NativeModel::from_backbone(&self.backbone, &spec.peft, &mut rng);
+        // Task-appropriate head (regression ⇒ 1 output; VTAB ⇒ 10 classes).
+        let n = if task.regression { 1 } else { task.n_classes.max(2) };
+        model.set_head_classes(n, &mut rng);
+        let mut backend = NativeBackend::new(model);
+        train(&mut backend, &task, &spec.train, spec.peft.gamma_orth)
+    }
+
+    /// Run a grid of jobs across `threads` workers.
+    pub fn run_all(self: &Arc<Self>, jobs: Vec<JobSpec>, threads: usize) -> Vec<JobResult> {
+        let pool = ThreadPool::new(threads);
+        let runner = Arc::clone(self);
+        let mut results = pool.map(jobs, move |spec| runner.run_job(&spec));
+        results.sort_by_key(|r| r.id);
+        results
+    }
+}
+
+/// Build the job grid for a (tasks × methods × seeds) table.
+pub fn grid(
+    tasks: &[DataConfig],
+    methods: &[(String, PeftConfig)],
+    train: &TrainConfig,
+    seeds: &[u64],
+) -> Vec<JobSpec> {
+    let mut jobs = Vec::new();
+    let mut id = 0;
+    for data in tasks {
+        for (label, peft) in methods {
+            for &seed in seeds {
+                let mut tc = train.clone();
+                tc.seed = seed;
+                jobs.push(JobSpec {
+                    id,
+                    label: label.clone(),
+                    data: data.clone(),
+                    peft: peft.clone(),
+                    train: tc,
+                });
+                id += 1;
+            }
+        }
+    }
+    jobs
+}
+
+/// Mean metric per (label, task) cell across seeds; failed jobs collapse
+/// the cell to the error string.
+pub fn aggregate(results: &[JobResult]) -> Vec<report::Cell> {
+    use std::collections::BTreeMap;
+    let mut cells: BTreeMap<(String, String), Vec<&JobResult>> = BTreeMap::new();
+    for r in results {
+        cells.entry((r.label.clone(), r.task.clone())).or_default().push(r);
+    }
+    cells
+        .into_iter()
+        .map(|((label, task), rs)| {
+            let errors: Vec<&str> = rs.iter().filter_map(|r| r.error.as_deref()).collect();
+            if !errors.is_empty() {
+                return report::Cell {
+                    label,
+                    task,
+                    value: f64::NAN,
+                    std: 0.0,
+                    n: rs.len(),
+                    error: Some(errors[0].to_string()),
+                    params: rs[0].trainable_params,
+                    mem_bytes: rs[0].mem_bytes,
+                    wall_secs: 0.0,
+                };
+            }
+            let vals: Vec<f64> = rs.iter().map(|r| r.metric).collect();
+            let s = crate::util::stats::Summary::of(&vals);
+            report::Cell {
+                label,
+                task,
+                value: s.mean,
+                std: s.std,
+                n: rs.len(),
+                error: None,
+                params: rs[0].trainable_params,
+                mem_bytes: rs[0].mem_bytes,
+                wall_secs: rs.iter().map(|r| r.wall_secs).sum::<f64>() / rs.len() as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, MethodKind, ModuleKind};
+    use crate::util::rng::Rng;
+
+    fn tiny_model_cfg() -> ModelConfig {
+        ModelConfig {
+            arch: Arch::Encoder,
+            vocab_size: 64,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 12,
+            n_classes: 2,
+        }
+    }
+
+    fn tiny_runner() -> Arc<SuiteRunner> {
+        let mut rng = Rng::new(501);
+        let bb = Backbone::random(&tiny_model_cfg(), &mut rng);
+        Arc::new(SuiteRunner::new(bb, DeviceBudget::unlimited()))
+    }
+
+    fn tiny_jobs(tasks: &[&str], methods: &[MethodKind], seeds: &[u64]) -> Vec<JobSpec> {
+        let task_cfgs: Vec<DataConfig> = tasks
+            .iter()
+            .map(|t| {
+                let mut d = DataConfig::new("glue", t);
+                d.n_train = 32;
+                d.n_val = 16;
+                d.n_test = 16;
+                d.seq_len = 10;
+                d
+            })
+            .collect();
+        let method_cfgs: Vec<(String, PeftConfig)> = methods
+            .iter()
+            .map(|&m| {
+                (
+                    m.name().to_string(),
+                    PeftConfig::new(m, 3).with_modules(vec![ModuleKind::Q, ModuleKind::V]),
+                )
+            })
+            .collect();
+        let mut tc = TrainConfig::default();
+        tc.epochs = 1;
+        tc.batch_size = 8;
+        tc.max_steps = Some(3);
+        grid(&task_cfgs, &method_cfgs, &tc, seeds)
+    }
+
+    #[test]
+    fn grid_covers_every_combination_once() {
+        let jobs = tiny_jobs(&["sst2", "rte"], &[MethodKind::Psoft, MethodKind::Lora], &[1, 2, 3]);
+        assert_eq!(jobs.len(), 2 * 2 * 3);
+        // Unique ids, all combinations present.
+        let mut ids: Vec<usize> = jobs.iter().map(|j| j.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 12);
+    }
+
+    #[test]
+    fn run_all_completes_every_job() {
+        let runner = tiny_runner();
+        let jobs = tiny_jobs(&["sst2"], &[MethodKind::Psoft, MethodKind::Lora], &[1, 2]);
+        let n = jobs.len();
+        let results = runner.run_all(jobs, 2);
+        assert_eq!(results.len(), n);
+        for r in &results {
+            assert!(r.error.is_none(), "job {} failed: {:?}", r.id, r.error);
+            assert!(r.metric.is_finite());
+        }
+        // Results sorted by id.
+        for w in results.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn oom_budget_short_circuits() {
+        let mut rng = Rng::new(502);
+        let bb = Backbone::random(&tiny_model_cfg(), &mut rng);
+        let runner =
+            Arc::new(SuiteRunner::new(bb, DeviceBudget { bytes: Some(1.0) /* 1 byte */ }));
+        let jobs = tiny_jobs(&["sst2"], &[MethodKind::Psoft], &[1]);
+        let results = runner.run_all(jobs, 1);
+        assert!(results[0].error.as_deref().unwrap_or("").contains("OOM"));
+    }
+
+    #[test]
+    fn aggregate_means_over_seeds() {
+        let runner = tiny_runner();
+        let jobs = tiny_jobs(&["sst2"], &[MethodKind::Lora], &[1, 2, 3]);
+        let results = runner.run_all(jobs, 3);
+        let cells = aggregate(&results);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].n, 3);
+        assert!(cells[0].value.is_finite());
+    }
+
+    #[test]
+    fn failed_job_becomes_cell_error_not_crash() {
+        let runner = tiny_runner();
+        let mut jobs = tiny_jobs(&["sst2"], &[MethodKind::Psoft], &[1]);
+        jobs[0].data.task = "no_such_task".to_string();
+        let results = runner.run_all(jobs, 1);
+        assert!(results[0].error.is_some());
+        let cells = aggregate(&results);
+        assert!(cells[0].error.is_some());
+    }
+}

@@ -1,0 +1,243 @@
+//! Report tables: render aggregated suite results in the paper's layout
+//! (methods as rows; #Params, memory, per-task columns, average) as
+//! markdown and CSV, plus JSON for machine consumption.
+
+use crate::util::json::Json;
+use crate::util::stats::human_bytes;
+use std::collections::BTreeMap;
+
+/// One aggregated (method, task) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub label: String,
+    pub task: String,
+    pub value: f64,
+    pub std: f64,
+    pub n: usize,
+    pub error: Option<String>,
+    pub params: usize,
+    pub mem_bytes: f64,
+    pub wall_secs: f64,
+}
+
+/// Paper-style table: one row per method label, one column per task, plus
+/// #Params / Memory / Avg columns.
+pub struct Table {
+    pub title: String,
+    pub task_order: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub params: usize,
+    pub mem_bytes: f64,
+    pub cells: Vec<Option<f64>>,
+    pub errors: Vec<Option<String>>,
+    pub avg: f64,
+}
+
+impl Table {
+    pub fn from_cells(title: &str, task_order: &[&str], cells: &[Cell]) -> Table {
+        let mut by_label: BTreeMap<String, Vec<&Cell>> = BTreeMap::new();
+        for c in cells {
+            by_label.entry(c.label.clone()).or_default().push(c);
+        }
+        let rows = by_label
+            .into_iter()
+            .map(|(label, cs)| {
+                let find = |task: &str| cs.iter().find(|c| c.task == task);
+                let mut row_cells = Vec::new();
+                let mut errors = Vec::new();
+                let mut vals = Vec::new();
+                for &task in task_order {
+                    match find(task) {
+                        Some(c) if c.error.is_none() => {
+                            row_cells.push(Some(c.value));
+                            errors.push(None);
+                            vals.push(c.value);
+                        }
+                        Some(c) => {
+                            row_cells.push(None);
+                            errors.push(c.error.clone());
+                        }
+                        None => {
+                            row_cells.push(None);
+                            errors.push(None);
+                        }
+                    }
+                }
+                let avg = if vals.is_empty() {
+                    f64::NAN
+                } else {
+                    vals.iter().sum::<f64>() / vals.len() as f64
+                };
+                Row {
+                    label,
+                    params: cs[0].params,
+                    mem_bytes: cs[0].mem_bytes,
+                    cells: row_cells,
+                    errors,
+                    avg,
+                }
+            })
+            .collect();
+        Table { title: title.to_string(), task_order: task_order.iter().map(|s| s.to_string()).collect(), rows }
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str("| Method | #Params | Memory |");
+        for t in &self.task_order {
+            out.push_str(&format!(" {t} |"));
+        }
+        out.push_str(" Avg. |\n|---|---|---|");
+        for _ in &self.task_order {
+            out.push_str("---|");
+        }
+        out.push_str("---|\n");
+        for row in &self.rows {
+            out.push_str(&format!(
+                "| {} | {} | {} |",
+                row.label,
+                fmt_params(row.params),
+                human_bytes(row.mem_bytes)
+            ));
+            for (v, e) in row.cells.iter().zip(&row.errors) {
+                match (v, e) {
+                    (Some(v), _) => out.push_str(&format!(" {v:.2} |")),
+                    (None, Some(e)) if e.contains("OOM") => out.push_str(" OOM |"),
+                    (None, Some(_)) => out.push_str(" ERR |"),
+                    (None, None) => out.push_str(" — |"),
+                }
+            }
+            if row.avg.is_nan() {
+                out.push_str(" N/A |\n");
+            } else {
+                out.push_str(&format!(" {:.2} |\n", row.avg));
+            }
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("method,params,mem_bytes");
+        for t in &self.task_order {
+            out.push_str(&format!(",{t}"));
+        }
+        out.push_str(",avg\n");
+        for row in &self.rows {
+            out.push_str(&format!("{},{},{:.0}", row.label, row.params, row.mem_bytes));
+            for v in &row.cells {
+                match v {
+                    Some(v) => out.push_str(&format!(",{v:.4}")),
+                    None => out.push_str(",NA"),
+                }
+            }
+            out.push_str(&format!(",{:.4}\n", row.avg));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("tasks", Json::Arr(self.task_order.iter().map(|t| Json::Str(t.clone())).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("method", Json::Str(r.label.clone())),
+                                ("params", Json::Num(r.params as f64)),
+                                ("mem_bytes", Json::Num(r.mem_bytes)),
+                                (
+                                    "cells",
+                                    Json::Arr(
+                                        r.cells
+                                            .iter()
+                                            .map(|c| match c {
+                                                Some(v) => Json::Num(*v),
+                                                None => Json::Null,
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                                ("avg", Json::Num(r.avg)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn fmt_params(p: usize) -> String {
+    if p >= 1_000_000_000 {
+        format!("{:.2}B", p as f64 / 1e9)
+    } else if p >= 1_000_000 {
+        format!("{:.2}M", p as f64 / 1e6)
+    } else if p >= 1_000 {
+        format!("{:.2}K", p as f64 / 1e3)
+    } else {
+        p.to_string()
+    }
+}
+
+/// Write a report bundle (md + csv + json) under `dir`.
+pub fn write_bundle(dir: &std::path::Path, name: &str, table: &Table) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.md")), table.to_markdown())?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+    std::fs::write(dir.join(format!("{name}.json")), table.to_json().dump_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(label: &str, task: &str, value: f64, error: Option<&str>) -> Cell {
+        Cell {
+            label: label.to_string(),
+            task: task.to_string(),
+            value,
+            std: 0.1,
+            n: 3,
+            error: error.map(|s| s.to_string()),
+            params: 80_000,
+            mem_bytes: 4.1e9,
+            wall_secs: 10.0,
+        }
+    }
+
+    #[test]
+    fn markdown_layout() {
+        let cells = vec![
+            cell("psoft", "cola", 70.4, None),
+            cell("psoft", "sst2", 95.5, None),
+            cell("goftv2", "cola", f64::NAN, Some("OOM: projected 18 GiB")),
+            cell("goftv2", "sst2", f64::NAN, Some("OOM: projected 18 GiB")),
+        ];
+        let t = Table::from_cells("Table 2 (sim)", &["cola", "sst2"], &cells);
+        let md = t.to_markdown();
+        assert!(md.contains("| psoft |"));
+        assert!(md.contains("OOM"));
+        assert!(md.contains("70.40"));
+        // psoft average.
+        assert!(md.contains("82.95"));
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let cells = vec![cell("lora", "rte", 84.9, None)];
+        let t = Table::from_cells("t", &["rte"], &cells);
+        assert!(t.to_csv().contains("lora,80000"));
+        let j = t.to_json();
+        assert_eq!(j.get("rows").at(0).get("method").as_str(), Some("lora"));
+    }
+}

@@ -1,0 +1,637 @@
+//! Task generators: planted-structure synthetic stand-ins for GLUE,
+//! VTAB-1K, MetaMathQA/GSM-8K/MATH, and Commonsense-15K.
+//!
+//! Design principles (DESIGN.md §4):every task is (a) deterministic in
+//! (task, split, seed), (b) *learnable* — the label is a function of the
+//! tokens realizable by a small transformer, (c) difficulty-graded so
+//! per-task spreads exist (capacity-limited methods fall behind on the
+//! harder tasks, reproducing the method-ranking dynamics of the paper's
+//! tables), and (d) shaped like the original (classification vs regression
+//! vs masked-answer LM; metric; split sizes).
+
+use super::{Example, Metric, Split, TaskData};
+use crate::config::DataConfig;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+pub const VTAB_TASKS: [&str; 19] = [
+    "cifar100",
+    "caltech101",
+    "dtd",
+    "flowers102",
+    "pets",
+    "svhn",
+    "sun397",
+    "camelyon",
+    "eurosat",
+    "resisc45",
+    "retinopathy",
+    "clevr_count",
+    "clevr_dist",
+    "dmlab",
+    "kitti_dist",
+    "dsprites_loc",
+    "dsprites_ori",
+    "snorb_azim",
+    "snorb_elev",
+];
+
+const PAD: i32 = 0;
+const SEP: i32 = 1;
+/// First "content" token id (0 = pad, 1 = sep, 2.. = content).
+const BASE: usize = 2;
+
+pub fn build(cfg: &DataConfig, vocab: usize) -> Result<TaskData> {
+    let gen: Box<dyn TaskGen> = match (cfg.suite.as_str(), cfg.task.as_str()) {
+        ("glue", "cola") => Box::new(Cola),
+        ("glue", "stsb") => Box::new(Stsb),
+        ("glue", "rte") => Box::new(PairTask { hard: true, name: "rte" }),
+        ("glue", "mrpc") => Box::new(PairTask { hard: false, name: "mrpc" }),
+        ("glue", "sst2") => Box::new(Sst2),
+        ("glue", "qnli") => Box::new(Qnli),
+        ("vtab", t) => {
+            let idx = VTAB_TASKS.iter().position(|&x| x == t);
+            match idx {
+                Some(i) => Box::new(Vtab { task_idx: i }),
+                None => bail!("unknown vtab task {t:?}"),
+            }
+        }
+        ("mathqa", "gsm8k") => Box::new(MathQa { hard: false }),
+        ("mathqa", "math") => Box::new(MathQa { hard: true }),
+        ("commonsense", t) => {
+            let tasks = ["boolq", "piqa", "siqa", "hellaswag", "winogrande", "arc_e", "arc_c", "obqa"];
+            match tasks.iter().position(|&x| x == t) {
+                Some(i) => Box::new(Commonsense { task_idx: i }),
+                None => bail!("unknown commonsense task {t:?}"),
+            }
+        }
+        ("pretext", _) => Box::new(Pretext),
+        (s, t) => bail!("unknown suite/task {s:?}/{t:?}"),
+    };
+
+    // Split seeds: train/val/test streams are independent; the val/test
+    // pair follows the paper's "split the original validation set with a
+    // fixed seed" protocol (same generator, distinct substreams).
+    let mut root = Rng::new(cfg.seed ^ hash_name(&cfg.suite, &cfg.task));
+    let mut make_split = |n: usize, stream: u64| -> Split {
+        let mut rng = root.child(stream);
+        let examples = (0..n).map(|_| gen.example(cfg.seq_len, vocab, &mut rng)).collect();
+        Split { examples, seq: cfg.seq_len }
+    };
+    let train = make_split(cfg.n_train, 1);
+    let val = make_split(cfg.n_val, 2);
+    let test = make_split(cfg.n_test, 3);
+
+    Ok(TaskData {
+        suite: cfg.suite.clone(),
+        task: cfg.task.clone(),
+        metric: gen.metric(),
+        n_classes: gen.n_classes(),
+        regression: gen.metric() == Metric::Pearson,
+        lm: gen.is_lm(),
+        train,
+        val,
+        test,
+    })
+}
+
+fn hash_name(suite: &str, task: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in suite.bytes().chain(task.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+trait TaskGen {
+    fn metric(&self) -> Metric;
+    fn n_classes(&self) -> usize;
+    fn is_lm(&self) -> bool {
+        false
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example;
+}
+
+fn blank(seq: usize) -> Example {
+    Example {
+        tokens: vec![PAD; seq],
+        pad: vec![0.0; seq],
+        label_class: 0,
+        label_reg: 0.0,
+        lm_mask: vec![0.0; seq],
+    }
+}
+
+fn fill(ex: &mut Example, toks: &[i32]) {
+    let n = toks.len().min(ex.tokens.len());
+    ex.tokens[..n].copy_from_slice(&toks[..n]);
+    for p in ex.pad[..n].iter_mut() {
+        *p = 1.0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GLUE-sim
+// ---------------------------------------------------------------------------
+
+/// CoLA-sim: "grammatical" = tokens follow a class-transition grammar
+/// (token class = id mod 8; valid successor classes = {c, c+1, c+3}).
+/// Ungrammatical = one random transposition. Metric: Matthews (hard task —
+/// the violation can be anywhere).
+struct Cola;
+
+impl TaskGen for Cola {
+    fn metric(&self) -> Metric {
+        Metric::Matthews
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let len = seq.min(6 + rng.below(seq.saturating_sub(6).max(1)));
+        let content = vocab - BASE;
+        let mut toks = Vec::with_capacity(len);
+        let mut class = rng.below(8);
+        for _ in 0..len {
+            // Pick a token of the current class, then step the grammar.
+            let tok = BASE + (rng.below(content / 8) * 8 + class) % content;
+            toks.push(tok as i32);
+            class = (class + if rng.bool(0.5) { 1 } else { 3 }) % 8;
+        }
+        let grammatical = rng.bool(0.5);
+        if !grammatical && len >= 3 {
+            let i = 1 + rng.below(len - 2);
+            toks.swap(i, i + 1);
+        }
+        let mut ex = blank(seq);
+        fill(&mut ex, &toks);
+        ex.label_class = grammatical as usize;
+        ex
+    }
+}
+
+/// STS-B-sim: two segments around SEP; target = 5 × overlap fraction of
+/// content-token sets. Metric: Pearson.
+struct Stsb;
+
+impl TaskGen for Stsb {
+    fn metric(&self) -> Metric {
+        Metric::Pearson
+    }
+    fn n_classes(&self) -> usize {
+        1
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let half = (seq - 1) / 2;
+        let content = vocab - BASE;
+        let a: Vec<usize> = (0..half).map(|_| BASE + rng.below(content)).collect();
+        // Second segment copies a fraction p of the first.
+        let p = rng.f64();
+        let b: Vec<usize> = (0..half)
+            .map(|i| if rng.f64() < p { a[i] } else { BASE + rng.below(content) })
+            .collect();
+        let overlap = a.iter().zip(&b).filter(|(x, y)| x == y).count() as f32 / half as f32;
+        let mut toks: Vec<i32> = a.iter().map(|&t| t as i32).collect();
+        toks.push(SEP);
+        toks.extend(b.iter().map(|&t| t as i32));
+        let mut ex = blank(seq);
+        fill(&mut ex, &toks);
+        ex.label_reg = 5.0 * overlap;
+        ex
+    }
+}
+
+/// RTE/MRPC-sim: sentence-pair tasks. Positive pairs share content
+/// (entailment: subset; paraphrase: permutation); negatives are fresh
+/// draws. `hard` (RTE) shrinks the signal by adding distractor overlap.
+struct PairTask {
+    hard: bool,
+    name: &'static str,
+}
+
+impl TaskGen for PairTask {
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let _ = self.name;
+        let half = (seq - 1) / 2;
+        let content = vocab - BASE;
+        let a: Vec<usize> = (0..half).map(|_| BASE + rng.below(content)).collect();
+        let positive = rng.bool(0.5);
+        let b: Vec<usize> = if positive {
+            // Permutation (paraphrase) or subset+noise (entailment-hard).
+            let mut b = a.clone();
+            rng.shuffle(&mut b);
+            if self.hard {
+                for v in b.iter_mut() {
+                    if rng.bool(0.3) {
+                        *v = BASE + rng.below(content);
+                    }
+                }
+            }
+            b
+        } else {
+            let mut b: Vec<usize> = (0..half).map(|_| BASE + rng.below(content)).collect();
+            if self.hard {
+                // Distractor overlap makes negatives look similar.
+                for (i, v) in b.iter_mut().enumerate() {
+                    if rng.bool(0.3) {
+                        *v = a[i % a.len()];
+                    }
+                }
+            }
+            b
+        };
+        let mut toks: Vec<i32> = a.iter().map(|&t| t as i32).collect();
+        toks.push(SEP);
+        toks.extend(b.iter().map(|&t| t as i32));
+        let mut ex = blank(seq);
+        fill(&mut ex, &toks);
+        ex.label_class = positive as usize;
+        ex
+    }
+}
+
+/// SST-2-sim: planted token valence; label = sign of total valence.
+/// Valence of token t = +1 if (t·2654435761 mod 64) < 32 else −1 — a fixed
+/// pseudo-random table the model must learn. Easy task (paper: ~95%).
+struct Sst2;
+
+fn valence(tok: usize) -> i32 {
+    if (tok.wrapping_mul(2654435761)) % 64 < 32 {
+        1
+    } else {
+        -1
+    }
+}
+
+impl TaskGen for Sst2 {
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let content = vocab - BASE;
+        let len = seq.min(5 + rng.below(seq.saturating_sub(5).max(1)));
+        loop {
+            let toks: Vec<usize> = (0..len).map(|_| BASE + rng.below(content)).collect();
+            let total: i32 = toks.iter().map(|&t| valence(t)).sum();
+            if total == 0 {
+                continue; // redraw ties
+            }
+            let mut ex = blank(seq);
+            let t32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+            fill(&mut ex, &t32);
+            ex.label_class = (total > 0) as usize;
+            return ex;
+        }
+    }
+}
+
+/// QNLI-sim: "question" = first quarter; label = does any question content
+/// token reappear in the "answer" remainder.
+struct Qnli;
+
+impl TaskGen for Qnli {
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let content = vocab - BASE;
+        let qlen = (seq / 4).max(2);
+        let alen = seq - qlen - 1;
+        let q: Vec<usize> = (0..qlen).map(|_| BASE + rng.below(content)).collect();
+        let positive = rng.bool(0.5);
+        let mut a: Vec<usize> = (0..alen).map(|_| BASE + rng.below(content)).collect();
+        // Scrub accidental overlap, then plant one if positive.
+        for v in a.iter_mut() {
+            while q.contains(v) {
+                *v = BASE + rng.below(content);
+            }
+        }
+        if positive {
+            let pos = rng.below(alen);
+            a[pos] = q[rng.below(qlen)];
+        }
+        let mut toks: Vec<i32> = q.iter().map(|&t| t as i32).collect();
+        toks.push(SEP);
+        toks.extend(a.iter().map(|&t| t as i32));
+        let mut ex = blank(seq);
+        fill(&mut ex, &toks);
+        ex.label_class = positive as usize;
+        ex
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VTAB-sim
+// ---------------------------------------------------------------------------
+
+/// 19 patch-classification tasks in three structural groups. 10 classes.
+struct Vtab {
+    task_idx: usize,
+}
+
+impl TaskGen for Vtab {
+    fn metric(&self) -> Metric {
+        Metric::Accuracy
+    }
+    fn n_classes(&self) -> usize {
+        10
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let content = vocab - BASE;
+        let class = rng.below(10);
+        let group = match self.task_idx {
+            0..=6 => 0,  // natural
+            7..=10 => 1, // specialized
+            _ => 2,      // structured
+        };
+        // Per-task difficulty: later tasks in each group are noisier.
+        let noise = 0.05 + 0.05 * (self.task_idx % 7) as f64;
+        let toks: Vec<i32> = match group {
+            0 => {
+                // Natural: class-conditional token distribution — token ids
+                // cluster around a class centroid with task-specific spread.
+                let centroid = (self.task_idx * 131 + class * content / 10) % content;
+                (0..seq)
+                    .map(|_| {
+                        if rng.bool(noise) {
+                            (BASE + rng.below(content)) as i32
+                        } else {
+                            let jitter = rng.below(content / 10);
+                            (BASE + (centroid + jitter) % content) as i32
+                        }
+                    })
+                    .collect()
+            }
+            1 => {
+                // Specialized: class = quantized count of marker tokens.
+                let marker = BASE + (self.task_idx * 977) % content;
+                let count = class * seq / 10 + rng.below((seq / 10).max(1));
+                let mut toks: Vec<i32> = (0..seq)
+                    .map(|_| {
+                        let mut t = BASE + rng.below(content);
+                        while t == marker {
+                            t = BASE + rng.below(content);
+                        }
+                        t as i32
+                    })
+                    .collect();
+                let mut idxs: Vec<usize> = (0..seq).collect();
+                rng.shuffle(&mut idxs);
+                for &i in idxs.iter().take(count.min(seq)) {
+                    toks[i] = marker as i32;
+                }
+                toks
+            }
+            _ => {
+                // Structured: class = positional property of a marker
+                // (location bin, or distance between two markers).
+                let marker = BASE + (self.task_idx * 613) % content;
+                let mut toks: Vec<i32> = (0..seq)
+                    .map(|_| {
+                        let mut t = BASE + rng.below(content);
+                        while t == marker {
+                            t = BASE + rng.below(content);
+                        }
+                        t as i32
+                    })
+                    .collect();
+                if self.task_idx % 2 == 0 {
+                    // Location task: marker position encodes the class.
+                    let pos = class * seq / 10 + rng.below((seq / 10).max(1));
+                    toks[pos.min(seq - 1)] = marker as i32;
+                } else {
+                    // Distance task: two markers at class-scaled separation.
+                    let dist = 1 + class * (seq - 2) / 10;
+                    let p1 = rng.below(seq - dist.min(seq - 1));
+                    toks[p1] = marker as i32;
+                    toks[(p1 + dist).min(seq - 1)] = marker as i32;
+                }
+                toks
+            }
+        };
+        let mut ex = blank(seq);
+        fill(&mut ex, &toks);
+        ex.label_class = class;
+        ex
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MathQA-sim / Commonsense-sim (decoder LM tasks)
+// ---------------------------------------------------------------------------
+
+/// Token scheme for LM tasks: digits 0-9 → BASE..BASE+10; operators and
+/// keywords above them.
+const DIGIT0: usize = BASE;
+const T_PLUS: usize = BASE + 10;
+const T_TIMES: usize = BASE + 11;
+const T_EQ: usize = BASE + 12;
+const T_Q: usize = BASE + 13; // "question" marker
+const T_WORD0: usize = BASE + 16; // narrative filler tokens
+
+/// GSM-8K-sim / MATH-sim: modular-arithmetic word problems. The prompt is
+/// narrative filler + the expression; the answer digits follow `=` and are
+/// the loss-masked span (exact match ⇒ problem solved).
+struct MathQa {
+    hard: bool,
+}
+
+fn push_number(toks: &mut Vec<i32>, n: usize) {
+    if n >= 10 {
+        push_number(toks, n / 10);
+    }
+    toks.push((DIGIT0 + n % 10) as i32);
+}
+
+impl TaskGen for MathQa {
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn n_classes(&self) -> usize {
+        0
+    }
+    fn is_lm(&self) -> bool {
+        true
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let content_words = (vocab - T_WORD0).max(8);
+        let mut toks: Vec<i32> = Vec::new();
+        // Narrative filler (models must learn to skip it).
+        let filler = if self.hard { 4 } else { 2 } + rng.below(3);
+        for _ in 0..filler {
+            toks.push((T_WORD0 + rng.below(content_words)) as i32);
+        }
+        let (a, b, c) = if self.hard {
+            (rng.below(30), rng.below(30), rng.below(10))
+        } else {
+            (rng.below(10), rng.below(10), 0)
+        };
+        push_number(&mut toks, a);
+        toks.push(T_PLUS as i32);
+        push_number(&mut toks, b);
+        let answer = if self.hard {
+            toks.push(T_TIMES as i32);
+            push_number(&mut toks, c);
+            (a + b) * c % 100
+        } else {
+            (a + b) % 10
+        };
+        toks.push(T_EQ as i32);
+        let ans_start = toks.len();
+        push_number(&mut toks, answer);
+        let ans_end = toks.len();
+
+        let mut ex = blank(seq);
+        let n = toks.len().min(seq);
+        fill(&mut ex, &toks[..n]);
+        for i in ans_start..ans_end.min(seq) {
+            ex.lm_mask[i] = 1.0;
+        }
+        // Guarantee at least one masked position.
+        if ex.lm_mask.iter().sum::<f32>() == 0.0 {
+            ex.lm_mask[n.saturating_sub(1)] = 1.0;
+        }
+        ex
+    }
+}
+
+/// Commonsense-sim: 8 cloze tasks. A context is followed by the question
+/// marker and a single-token answer determined by a task-specific
+/// relational rule over the context.
+struct Commonsense {
+    task_idx: usize,
+}
+
+impl TaskGen for Commonsense {
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn n_classes(&self) -> usize {
+        0
+    }
+    fn is_lm(&self) -> bool {
+        true
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let content = (vocab - T_WORD0).max(16);
+        let ctx_len = (seq - 3).max(4);
+        let ctx: Vec<usize> = (0..ctx_len).map(|_| T_WORD0 + rng.below(content)).collect();
+        // Task rules of graded difficulty.
+        let answer: usize = match self.task_idx {
+            // boolq-sim: parity of high-valence tokens → yes/no token.
+            0 => DIGIT0 + (ctx.iter().filter(|&&t| valence(t) > 0).count() % 2),
+            // piqa-sim: the token following the maximum token.
+            1 => ctx[(ctx.iter().enumerate().max_by_key(|(_, &t)| t).unwrap().0 + 1) % ctx_len],
+            // siqa-sim: the most frequent token (ties → first).
+            2 => {
+                let mut best = (0usize, 0usize);
+                for &t in &ctx {
+                    let c = ctx.iter().filter(|&&u| u == t).count();
+                    if c > best.1 {
+                        best = (t, c);
+                    }
+                }
+                best.0
+            }
+            // hellaswag-sim: continuation = ctx[0] (learn long dependency).
+            3 => ctx[0],
+            // winogrande-sim: token at the position indexed by first digit.
+            4 => ctx[ctx[0] % ctx_len],
+            // arc_e-sim: min token.
+            5 => *ctx.iter().min().unwrap(),
+            // arc_c-sim: second-largest token (harder).
+            6 => {
+                let mut s = ctx.clone();
+                s.sort_unstable();
+                s.dedup();
+                if s.len() >= 2 {
+                    s[s.len() - 2]
+                } else {
+                    s[0]
+                }
+            }
+            // obqa-sim: max token.
+            _ => *ctx.iter().max().unwrap(),
+        };
+        let mut toks: Vec<i32> = ctx.iter().map(|&t| t as i32).collect();
+        toks.push(T_Q as i32);
+        let ans_pos = toks.len();
+        toks.push(answer as i32);
+        let mut ex = blank(seq);
+        let n = toks.len().min(seq);
+        fill(&mut ex, &toks[..n]);
+        if ans_pos < seq {
+            ex.lm_mask[ans_pos] = 1.0;
+        } else {
+            ex.lm_mask[seq - 1] = 1.0;
+        }
+        ex
+    }
+}
+
+/// Pretext corpus for pretraining: mixed structured sequences (arithmetic
+/// ramps, grammar walks, repeated motifs) with full-sequence LM loss for
+/// decoders / and usable as encoder inputs. Gives the pretrained weights a
+/// non-isotropic spectrum and genuine angular structure.
+struct Pretext;
+
+impl TaskGen for Pretext {
+    fn metric(&self) -> Metric {
+        Metric::ExactMatch
+    }
+    fn n_classes(&self) -> usize {
+        0
+    }
+    fn is_lm(&self) -> bool {
+        true
+    }
+    fn example(&self, seq: usize, vocab: usize, rng: &mut Rng) -> Example {
+        let content = vocab - BASE;
+        let kind = rng.below(3);
+        let toks: Vec<i32> = match kind {
+            0 => {
+                // Arithmetic ramp with random stride.
+                let start = rng.below(content);
+                let stride = 1 + rng.below(7);
+                (0..seq).map(|i| (BASE + (start + i * stride) % content) as i32).collect()
+            }
+            1 => {
+                // Repeated motif.
+                let m = 2 + rng.below(6);
+                let motif: Vec<usize> = (0..m).map(|_| BASE + rng.below(content)).collect();
+                (0..seq).map(|i| motif[i % m] as i32).collect()
+            }
+            _ => {
+                // Grammar walk (same transition structure as CoLA-sim).
+                let mut class = rng.below(8);
+                (0..seq)
+                    .map(|_| {
+                        let tok = BASE + (rng.below(content / 8) * 8 + class) % content;
+                        class = (class + if rng.bool(0.5) { 1 } else { 3 }) % 8;
+                        tok as i32
+                    })
+                    .collect()
+            }
+        };
+        let mut ex = blank(seq);
+        fill(&mut ex, &toks);
+        // Full-sequence LM loss (mask everything after position 0).
+        for i in 1..seq {
+            ex.lm_mask[i] = 1.0;
+        }
+        ex
+    }
+}

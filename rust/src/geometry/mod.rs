@@ -1,0 +1,199 @@
+//! Geometric analysis of weight matrices — the paper's "semantic
+//! representation" machinery.
+//!
+//! Semantic representations are operationalized as the pairwise angles and
+//! norms among weight columns (§1). This module computes those quantities,
+//! verifies Theorem 4.1 (`RᵀGR = G` ⟺ angle+norm preservation) on concrete
+//! matrices, computes hyperspherical energy (Liu et al. 2021), and exports
+//! the angle heatmaps of Figs 9/10.
+
+use crate::linalg::{matmul, matmul_tn, DMat, Mat};
+
+/// Pairwise-angle matrix (radians) among the first `k` columns.
+pub fn pairwise_angles(w: &Mat, k: usize) -> DMat {
+    let k = k.min(w.cols);
+    let cols: Vec<Vec<f64>> =
+        (0..k).map(|j| (0..w.rows).map(|i| w[(i, j)] as f64).collect()).collect();
+    let norms: Vec<f64> =
+        cols.iter().map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300)).collect();
+    DMat::from_fn(k, k, |i, j| {
+        if i == j {
+            return 0.0;
+        }
+        let dot: f64 = cols[i].iter().zip(&cols[j]).map(|(&a, &b)| a * b).sum();
+        (dot / (norms[i] * norms[j])).clamp(-1.0, 1.0).acos()
+    })
+}
+
+/// Column norms.
+pub fn column_norms(w: &Mat) -> Vec<f64> {
+    w.col_norms()
+}
+
+/// Maximum deviation between two matrices' column geometries:
+/// (max |Δangle| over pairs among the first k columns, max relative |Δnorm|).
+pub fn geometry_deviation(w0: &Mat, w1: &Mat, k: usize) -> (f64, f64) {
+    assert_eq!(w0.shape(), w1.shape());
+    let a0 = pairwise_angles(w0, k);
+    let a1 = pairwise_angles(w1, k);
+    let mut d_angle = 0.0f64;
+    for i in 0..a0.rows {
+        for j in 0..a0.cols {
+            d_angle = d_angle.max((a0[(i, j)] - a1[(i, j)]).abs());
+        }
+    }
+    let mut d_norm = 0.0f64;
+    for j in 0..w0.cols {
+        let n0 = w0.col_norm(j).max(1e-300);
+        d_norm = d_norm.max((w0.col_norm(j) - w1.col_norm(j)).abs() / n0);
+    }
+    (d_angle, d_norm)
+}
+
+/// Theorem 4.1 residual: ‖RᵀGR − G‖_F / ‖G‖_F with G = AᵀA.
+/// Zero ⟺ the transform is a symmetry of the principal-subspace geometry.
+pub fn gram_condition_residual(a: &Mat, r: &Mat) -> f64 {
+    let ad: DMat = a.cast();
+    let rd: DMat = r.cast();
+    let g = matmul_tn(&ad, &ad);
+    let rg = matmul(&matmul(&rd.transpose(), &g), &rd);
+    rg.dist(&g) / g.frobenius_norm().max(1e-300)
+}
+
+/// Hyperspherical energy (Liu et al. 2021): Σ_{i≠j} ‖ŵ_i − ŵ_j‖⁻¹ over the
+/// first k unit-normalized columns — the quantity OFT preserves.
+pub fn hyperspherical_energy(w: &Mat, k: usize) -> f64 {
+    let k = k.min(w.cols);
+    let units: Vec<Vec<f64>> = (0..k)
+        .map(|j| {
+            let n = w.col_norm(j).max(1e-300);
+            (0..w.rows).map(|i| w[(i, j)] as f64 / n).collect()
+        })
+        .collect();
+    let mut e = 0.0;
+    for i in 0..k {
+        for j in 0..k {
+            if i == j {
+                continue;
+            }
+            let dist2: f64 =
+                units[i].iter().zip(&units[j]).map(|(&a, &b)| (a - b) * (a - b)).sum();
+            e += 1.0 / dist2.sqrt().max(1e-9);
+        }
+    }
+    e
+}
+
+/// CSV export of an angle heatmap (degrees) — the Fig 9/10 artifacts.
+pub fn angles_to_csv(angles: &DMat) -> String {
+    let mut out = String::new();
+    for i in 0..angles.rows {
+        let row: Vec<String> =
+            (0..angles.cols).map(|j| format!("{:.3}", angles[(i, j)].to_degrees())).collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cayley_exact, skew_from_params, skew_param_count};
+    use crate::util::check::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn angles_of_orthogonal_columns() {
+        let w = Mat::eye(4);
+        let a = pairwise_angles(&w, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = if i == j { 0.0 } else { std::f64::consts::FRAC_PI_2 };
+                assert!((a[(i, j)] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn theorem_4_1_sufficiency_property() {
+        // For orthonormal A and orthogonal R: RᵀGR = G (G = I), and the
+        // transformed matrix A·R·B preserves B-column geometry through A.
+        forall(
+            161,
+            15,
+            |rng| {
+                let d = 8 + rng.below(8);
+                let r = 2 + rng.below(4);
+                let n = 4 + rng.below(6);
+                let a_rand = DMat::randn(d, r, 1.0, rng);
+                let a: Mat = crate::linalg::orthonormal_columns(&a_rand).cast();
+                let params: Vec<f64> =
+                    (0..skew_param_count(r)).map(|_| rng.normal() * 0.5).collect();
+                let rot: Mat = cayley_exact(&skew_from_params(r, &params)).cast();
+                let b = Mat::randn(r, n, 1.0, rng);
+                (a, rot, b)
+            },
+            |(a, rot, b)| {
+                ensure(
+                    gram_condition_residual(a, rot) < 1e-5,
+                    format!("Gram residual {}", gram_condition_residual(a, rot)),
+                )?;
+                let w_pri = matmul(a, b);
+                let w_tuned = matmul(&matmul(a, rot), b);
+                let (d_angle, d_norm) = geometry_deviation(&w_pri, &w_tuned, b.cols);
+                ensure(d_angle < 1e-4, format!("angle deviation {d_angle}"))?;
+                ensure(d_norm < 1e-4, format!("norm deviation {d_norm}"))
+            },
+        );
+    }
+
+    #[test]
+    fn theorem_4_1_necessity_violated_by_nonisometry() {
+        // A non-orthogonal R (anisotropic scaling) breaks the Gram condition
+        // AND the geometry — the necessity direction of the theorem.
+        let mut rng = Rng::new(162);
+        let a_rand = DMat::randn(10, 3, 1.0, &mut rng);
+        let a: Mat = crate::linalg::orthonormal_columns(&a_rand).cast();
+        let mut r = Mat::eye(3);
+        r[(0, 0)] = 2.0;
+        let b = Mat::randn(3, 6, 1.0, &mut rng);
+        assert!(gram_condition_residual(&a, &r) > 0.1);
+        let w_pri = matmul(&a, &b);
+        let w_tuned = matmul(&matmul(&a, &r), &b);
+        let (d_angle, d_norm) = geometry_deviation(&w_pri, &w_tuned, 6);
+        assert!(d_angle > 1e-3 || d_norm > 1e-3, "geometry should move: {d_angle} {d_norm}");
+    }
+
+    #[test]
+    fn uniform_scaling_preserves_angles_not_norms() {
+        // §4.3 special case: diag(α) = λI preserves angles, scales norms.
+        let mut rng = Rng::new(163);
+        let w = Mat::randn(8, 5, 1.0, &mut rng);
+        let scaled = w.scale(1.7);
+        let (d_angle, d_norm) = geometry_deviation(&w, &scaled, 5);
+        assert!(d_angle < 1e-5, "{d_angle}");
+        assert!((d_norm - 0.7).abs() < 1e-4, "{d_norm}");
+    }
+
+    #[test]
+    fn hyperspherical_energy_invariant_under_rotation() {
+        let mut rng = Rng::new(164);
+        let w = Mat::randn(12, 6, 1.0, &mut rng);
+        let params: Vec<f64> = (0..skew_param_count(12)).map(|_| rng.normal() * 0.4).collect();
+        let rot: Mat = cayley_exact(&skew_from_params(12, &params)).cast();
+        let w_rot = matmul(&rot.transpose(), &w); // rotate the row space
+        let e0 = hyperspherical_energy(&w, 6);
+        let e1 = hyperspherical_energy(&w_rot, 6);
+        assert!((e0 - e1).abs() < 1e-4 * e0, "{e0} vs {e1}");
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let mut rng = Rng::new(165);
+        let w = Mat::randn(6, 4, 1.0, &mut rng);
+        let csv = angles_to_csv(&pairwise_angles(&w, 4));
+        assert_eq!(csv.lines().count(), 4);
+        assert_eq!(csv.lines().next().unwrap().split(',').count(), 4);
+    }
+}

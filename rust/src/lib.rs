@@ -1,0 +1,32 @@
+//! # PSOFT — Efficient Orthogonal Fine-Tuning with Principal Subspace Adaptation
+//!
+//! Full-system reproduction of the PSOFT paper (Wu et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the fine-tuning framework: config system, PEFT
+//!   method registry, synthetic benchmark suites, trainer, multi-job
+//!   coordinator, memory/parameter accounting, and the bench harness that
+//!   regenerates every table and figure in the paper.
+//! - **L2 (`python/compile/model.py`)** — the JAX transformer + PEFT
+//!   parameterizations, AOT-lowered to HLO text once at build time.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the PSOFT
+//!   subspace chain and the Cayley–Neumann transform.
+//!
+//! Python never runs on the training path: the Rust binary loads
+//! `artifacts/*.hlo.txt` via PJRT and owns all parameter/optimizer state.
+//! A pure-Rust native backend mirrors the compute for tests and ablations.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod geometry;
+pub mod linalg;
+pub mod memmodel;
+pub mod model;
+pub mod peft;
+pub mod runtime;
+pub mod train;
+pub mod util;

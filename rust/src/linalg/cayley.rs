@@ -1,0 +1,377 @@
+//! Cayley parameterization of the orthogonal group (paper §4.2, Appendix C)
+//! and its truncated-Neumann approximation (OFTv2 / paper §5).
+//!
+//! A skew-symmetric Q (Qᵀ = −Q) maps to an orthogonal R via
+//!     R = (I − Q)(I + Q)⁻¹.
+//! PSOFT stores only the r(r−1)/2 strictly-lower-triangular entries of Q and
+//! approximates the inverse with the Neumann series Σ_{k=0..K} (−Q)^k
+//! (K = 5 in the paper's experiments), trading exactness of R's
+//! orthogonality for a chain of small matmuls.
+
+use super::matrix::{DMat, Matrix, Scalar};
+use super::matmul::matmul;
+
+/// Number of free parameters in a skew-symmetric r×r matrix.
+pub fn skew_param_count(r: usize) -> usize {
+    r * (r - 1) / 2
+}
+
+/// Build skew-symmetric Q from its strictly-lower-triangular entries, read
+/// row-major: q[(i,j)] for i > j in order (1,0), (2,0), (2,1), (3,0)…
+pub fn skew_from_params<T: Scalar>(r: usize, params: &[T]) -> Matrix<T> {
+    assert_eq!(params.len(), skew_param_count(r), "skew param count for r={r}");
+    let mut q = Matrix::zeros(r, r);
+    let mut idx = 0;
+    for i in 1..r {
+        for j in 0..i {
+            q[(i, j)] = params[idx];
+            q[(j, i)] = -params[idx];
+            idx += 1;
+        }
+    }
+    q
+}
+
+/// Inverse map: extract the strictly-lower-triangular entries of Q.
+pub fn params_from_skew<T: Scalar>(q: &Matrix<T>) -> Vec<T> {
+    assert!(q.is_square());
+    let r = q.rows;
+    let mut out = Vec::with_capacity(skew_param_count(r));
+    for i in 1..r {
+        for j in 0..i {
+            out.push(q[(i, j)]);
+        }
+    }
+    out
+}
+
+/// Exact Cayley transform R = (I − Q)(I + Q)⁻¹ via Gauss–Jordan solve of
+/// (I + Q) Xᵀ-free system. Panics if (I + Q) is singular (cannot happen for
+/// real skew-symmetric Q: eigenvalues of Q are imaginary, so det(I+Q) ≥ 1).
+pub fn cayley_exact(q: &DMat) -> DMat {
+    assert!(q.is_square());
+    let r = q.rows;
+    let i_plus = DMat::from_fn(r, r, |i, j| if i == j { 1.0 + q[(i, j)] } else { q[(i, j)] });
+    let i_minus = DMat::from_fn(r, r, |i, j| if i == j { 1.0 - q[(i, j)] } else { -q[(i, j)] });
+    // R = (I − Q)(I + Q)⁻¹  ⇔  R (I + Q) = (I − Q)
+    //  ⇔ (I + Q)ᵀ Rᵀ = (I − Q)ᵀ — solve the transposed system column-wise.
+    let x = solve(&i_plus.transpose(), &i_minus.transpose());
+    x.transpose()
+}
+
+/// Truncated-Neumann Cayley: R ≈ (I − Q) Σ_{k=0..K} (−Q)^k.
+/// This is the OFTv2 "Cayley–Neumann parameterization" used by PSOFT.
+pub fn cayley_neumann(q: &DMat, terms: usize) -> DMat {
+    assert!(q.is_square());
+    let r = q.rows;
+    // S = Σ (−Q)^k, accumulated with a running power.
+    let mut s = DMat::eye(r);
+    let neg_q = q.scale(-1.0);
+    let mut power = DMat::eye(r);
+    for _ in 1..=terms {
+        power = matmul(&power, &neg_q);
+        s.add_assign(&power);
+    }
+    let i_minus = DMat::from_fn(r, r, |i, j| if i == j { 1.0 - q[(i, j)] } else { -q[(i, j)] });
+    matmul(&i_minus, &s)
+}
+
+/// Backward pass of `cayley_neumann`: given dL/dR, return dL/dQ.
+///
+/// R = (I − Q)·S with S = Σ_{k=0..K} N^k, N = −Q. Differentiating the
+/// matrix power series gives
+///   dL/dN = Σ_{j=0}^{K−1} (Nᵀ)^j · dS · (Σ_{i=0}^{K−1−j} N^i)ᵀ,
+/// with dS = (I − Q)ᵀ·dR, plus the −dR·Sᵀ term from the (I − Q) factor,
+/// and dL/dQ = −dL/dN − dR·Sᵀ.
+pub fn cayley_neumann_backward(q: &DMat, terms: usize, d_r: &DMat) -> DMat {
+    assert!(q.is_square());
+    assert_eq!(q.shape(), d_r.shape());
+    let r = q.rows;
+    let n = q.scale(-1.0);
+
+    // Powers N^0..N^{K-1} and prefix sums C_m = Σ_{i<=m} N^i.
+    let mut powers: Vec<DMat> = Vec::with_capacity(terms.max(1));
+    powers.push(DMat::eye(r));
+    for _k in 1..terms {
+        let next = matmul(powers.last().unwrap(), &n);
+        powers.push(next);
+    }
+    let mut prefix: Vec<DMat> = Vec::with_capacity(terms.max(1));
+    for (m, p) in powers.iter().enumerate() {
+        let mut c = p.clone();
+        if m > 0 {
+            c.add_assign(&prefix[m - 1]);
+        }
+        prefix.push(c);
+    }
+    // S = C_{K-1} + N^K.
+    let mut s = prefix.last().cloned().unwrap_or_else(|| DMat::eye(r));
+    if terms >= 1 {
+        let n_k = matmul(powers.last().unwrap(), &n);
+        s.add_assign(&n_k);
+    }
+
+    let i_minus_t = DMat::from_fn(r, r, |i, j| if i == j { 1.0 - q[(j, i)] } else { -q[(j, i)] });
+    let d_s = matmul(&i_minus_t, d_r);
+
+    // dN = Σ_j P_jᵀ · dS · C_{K-1-j}ᵀ.
+    let mut d_n = DMat::zeros(r, r);
+    for j in 0..terms {
+        let left = matmul(&powers[j].transpose(), &d_s);
+        let contrib = matmul(&left, &prefix[terms - 1 - j].transpose());
+        d_n.add_assign(&contrib);
+    }
+
+    // dQ = −dN − dR·Sᵀ.
+    let mut d_q = d_n.scale(-1.0);
+    let d_from_factor = matmul(d_r, &s.transpose());
+    d_q.axpy(-1.0, &d_from_factor);
+    d_q
+}
+
+/// Backward pass of the exact Cayley transform: with M = (I + Q)⁻¹ and
+/// R = (I − Q)·M, one gets dR = −(I + R)·dQ·M, hence
+/// dL/dQ = −(I + R)ᵀ · dL/dR · Mᵀ.
+pub fn cayley_exact_backward(q: &DMat, d_r: &DMat) -> DMat {
+    let r = q.rows;
+    let i_plus = DMat::from_fn(r, r, |i, j| if i == j { 1.0 + q[(i, j)] } else { q[(i, j)] });
+    let m = inverse(&i_plus);
+    let rot = cayley_exact(q);
+    let i_plus_r_t = DMat::from_fn(r, r, |i, j| if i == j { 1.0 + rot[(j, i)] } else { rot[(j, i)] });
+    matmul(&matmul(&i_plus_r_t, d_r), &m.transpose()).scale(-1.0)
+}
+
+/// Project a dense dL/dQ onto the skew parameter vector: since
+/// Q(θ)_{ij} = θ_a and Q(θ)_{ji} = −θ_a for i > j, dθ_a = dQ_{ij} − dQ_{ji}.
+pub fn skew_param_grad(d_q: &DMat) -> Vec<f64> {
+    assert!(d_q.is_square());
+    let r = d_q.rows;
+    let mut out = Vec::with_capacity(skew_param_count(r));
+    for i in 1..r {
+        for j in 0..i {
+            out.push(d_q[(i, j)] - d_q[(j, i)]);
+        }
+    }
+    out
+}
+
+/// Gauss–Jordan solve A X = B with partial pivoting. A must be square and
+/// nonsingular; B may have any number of columns.
+pub fn solve(a: &DMat, b: &DMat) -> DMat {
+    assert!(a.is_square());
+    assert_eq!(a.rows, b.rows);
+    let n = a.rows;
+    let m = b.cols;
+    // Augmented [A | B].
+    let mut aug = DMat::zeros(n, n + m);
+    for i in 0..n {
+        for j in 0..n {
+            aug[(i, j)] = a[(i, j)];
+        }
+        for j in 0..m {
+            aug[(i, n + j)] = b[(i, j)];
+        }
+    }
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        for row in (col + 1)..n {
+            if aug[(row, col)].abs() > aug[(piv, col)].abs() {
+                piv = row;
+            }
+        }
+        assert!(aug[(piv, col)].abs() > 1e-300, "singular system at column {col}");
+        if piv != col {
+            for j in 0..(n + m) {
+                let tmp = aug[(col, j)];
+                aug[(col, j)] = aug[(piv, j)];
+                aug[(piv, j)] = tmp;
+            }
+        }
+        let inv = 1.0 / aug[(col, col)];
+        for j in 0..(n + m) {
+            aug[(col, j)] *= inv;
+        }
+        for row in 0..n {
+            if row == col {
+                continue;
+            }
+            let factor = aug[(row, col)];
+            if factor == 0.0 {
+                continue;
+            }
+            for j in 0..(n + m) {
+                aug[(row, j)] -= factor * aug[(col, j)];
+            }
+        }
+    }
+    DMat::from_fn(n, m, |i, j| aug[(i, n + j)])
+}
+
+/// Matrix inverse via `solve(A, I)`.
+pub fn inverse(a: &DMat) -> DMat {
+    solve(a, &DMat::eye(a.rows))
+}
+
+/// Orthogonality defect ‖RᵀR − I‖_F — the quantity the paper's Table 6
+/// regularizer penalizes and that Neumann truncation leaves nonzero.
+pub fn orthogonality_defect(r: &DMat) -> f64 {
+    assert!(r.is_square());
+    let n = r.rows;
+    let mut acc = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let dot: f64 = (0..n).map(|k| r[(k, i)] * r[(k, j)]).sum();
+            let target = if i == j { 1.0 } else { 0.0 };
+            acc += (dot - target) * (dot - target);
+        }
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{ensure, forall};
+    use crate::util::rng::Rng;
+
+    fn random_skew(r: usize, scale: f64, rng: &mut Rng) -> DMat {
+        let params: Vec<f64> = (0..skew_param_count(r)).map(|_| rng.normal() * scale).collect();
+        skew_from_params(r, &params)
+    }
+
+    #[test]
+    fn skew_roundtrip() {
+        let mut rng = Rng::new(21);
+        let q = random_skew(7, 1.0, &mut rng);
+        // Skew-symmetry.
+        for i in 0..7 {
+            assert_eq!(q[(i, i)], 0.0);
+            for j in 0..7 {
+                assert_eq!(q[(i, j)], -q[(j, i)]);
+            }
+        }
+        let p = params_from_skew(&q);
+        assert_eq!(skew_from_params(7, &p), q);
+    }
+
+    #[test]
+    fn exact_cayley_is_orthogonal_property() {
+        forall(
+            22,
+            25,
+            |rng| {
+                let r = 2 + rng.below(14);
+                random_skew(r, 0.5 + rng.f64(), rng)
+            },
+            |q| {
+                let r = cayley_exact(q);
+                ensure(orthogonality_defect(&r) < 1e-9, format!("defect={}", orthogonality_defect(&r)))
+            },
+        );
+    }
+
+    #[test]
+    fn zero_skew_gives_identity() {
+        let q = DMat::zeros(5, 5);
+        assert!(cayley_exact(&q).dist(&DMat::eye(5)) < 1e-14);
+        assert!(cayley_neumann(&q, 5).dist(&DMat::eye(5)) < 1e-14);
+    }
+
+    #[test]
+    fn neumann_converges_to_exact() {
+        let mut rng = Rng::new(23);
+        // Series converges for spectral radius < 1; small Q suffices.
+        let q = random_skew(8, 0.05, &mut rng);
+        let exact = cayley_exact(&q);
+        let mut last = f64::MAX;
+        for &k in &[1usize, 2, 3, 5, 8, 12] {
+            let approx = cayley_neumann(&q, k);
+            let err = approx.dist(&exact);
+            assert!(err <= last + 1e-12, "err not decreasing at K={k}");
+            last = err;
+        }
+        assert!(last < 1e-9, "K=12 error {last}");
+    }
+
+    #[test]
+    fn neumann_defect_shrinks_with_terms() {
+        // Fig 8b mechanism: more Neumann terms → closer to orthogonal.
+        // The remainder alternates in parity, so compare same-parity
+        // truncations (K and K+2).
+        let mut rng = Rng::new(24);
+        let q = random_skew(16, 0.08, &mut rng);
+        let d2 = orthogonality_defect(&cayley_neumann(&q, 2));
+        let d4 = orthogonality_defect(&cayley_neumann(&q, 4));
+        let d8 = orthogonality_defect(&cayley_neumann(&q, 8));
+        assert!(d4 < d2 && d8 < d4, "{d2} {d4} {d8}");
+        let d3 = orthogonality_defect(&cayley_neumann(&q, 3));
+        let d5 = orthogonality_defect(&cayley_neumann(&q, 5));
+        assert!(d5 < d3, "{d3} {d5}");
+    }
+
+    #[test]
+    fn solve_and_inverse() {
+        let mut rng = Rng::new(25);
+        let a = DMat::randn(9, 9, 1.0, &mut rng);
+        let inv = inverse(&a);
+        assert!(matmul(&a, &inv).dist(&DMat::eye(9)) < 1e-9);
+        let b = DMat::randn(9, 3, 1.0, &mut rng);
+        let x = solve(&a, &b);
+        assert!(matmul(&a, &x).dist(&b) < 1e-9);
+    }
+
+    /// Central-difference gradient check for the two Cayley backwards.
+    #[test]
+    fn backward_matches_numerical_gradient() {
+        let mut rng = Rng::new(26);
+        let r = 6;
+        let q = random_skew(r, 0.2, &mut rng);
+        // Loss L = Σ W ⊙ R for a fixed random weighting W ⇒ dL/dR = W.
+        let w = DMat::randn(r, r, 1.0, &mut rng);
+        let loss = |q: &DMat, terms: Option<usize>| -> f64 {
+            let rot = match terms {
+                Some(k) => cayley_neumann(q, k),
+                None => cayley_exact(q),
+            };
+            rot.data.iter().zip(&w.data).map(|(&a, &b)| a * b).sum()
+        };
+
+        for (terms, d_q) in [
+            (Some(5), cayley_neumann_backward(&q, 5, &w)),
+            (Some(2), cayley_neumann_backward(&q, 2, &w)),
+            (None, cayley_exact_backward(&q, &w)),
+        ] {
+            let analytic = skew_param_grad(&d_q);
+            let params = params_from_skew(&q);
+            let eps = 1e-6;
+            for a in 0..params.len() {
+                let mut pp = params.clone();
+                pp[a] += eps;
+                let lp = loss(&skew_from_params(r, &pp), terms);
+                pp[a] -= 2.0 * eps;
+                let lm = loss(&skew_from_params(r, &pp), terms);
+                let numeric = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (analytic[a] - numeric).abs() < 1e-5 * (1.0 + numeric.abs()),
+                    "terms={terms:?} param {a}: analytic {} vs numeric {}",
+                    analytic[a],
+                    numeric
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cayley_determinant_plus_one_rotation() {
+        // Cayley images are rotations (det +1): check via 2x2 known case.
+        // Q = [[0, -t], [t, 0]] ⇒ R is rotation by angle 2·atan(t).
+        let t = 0.3;
+        let q = skew_from_params(2, &[t]);
+        let r = cayley_exact(&q);
+        let det = r[(0, 0)] * r[(1, 1)] - r[(0, 1)] * r[(1, 0)];
+        assert!((det - 1.0).abs() < 1e-12);
+        let angle = (2.0 * t.atan()).cos();
+        assert!((r[(0, 0)] - angle).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,397 @@
+//! Dense row-major matrices, generic over f32 (model compute) and f64
+//! (initialization / geometry numerics, where SVD accuracy matters).
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Element trait for the two float widths used in the library.
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialOrd
+    + fmt::Debug
+    + fmt::Display
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+}
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix<T: Scalar> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+/// f32 matrix — model weights/activations.
+pub type Mat = Matrix<f32>;
+/// f64 matrix — SVD / Cayley / geometry numerics.
+pub type DMat = Matrix<f64>;
+
+impl<T: Scalar> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: T) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = T::ONE;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape {}x{} vs data {}", rows, cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(v: &[T]) -> Self {
+        let mut m = Self::zeros(v.len(), v.len());
+        for (i, &x) in v.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    /// Standard-normal entries scaled by `std`.
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = T::from_f64(rng.normal() * std);
+        }
+        m
+    }
+
+    /// Kaiming-uniform init, the LoRA-A default: U(-1/sqrt(fan_in), +).
+    pub fn kaiming_uniform(rows: usize, cols: usize, fan_in: usize, rng: &mut Rng) -> Self {
+        let bound = 1.0 / (fan_in as f64).sqrt();
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = T::from_f64(rng.uniform(-bound, bound));
+        }
+        m
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[T]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Column slice [j0, j1).
+    pub fn cols_range(&self, j0: usize, j1: usize) -> Self {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        Self::from_fn(self.rows, j1 - j0, |i, j| self[(i, j0 + j)])
+    }
+
+    /// Row slice [i0, i1).
+    pub fn rows_range(&self, i0: usize, i1: usize) -> Self {
+        assert!(i0 <= i1 && i1 <= self.rows);
+        Self { rows: i1 - i0, cols: self.cols, data: self.data[i0 * self.cols..i1 * self.cols].to_vec() }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| a + b).collect();
+        Self { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| a - b).collect();
+        Self { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: T) -> Self {
+        let data = self.data.iter().map(|&a| a * s).collect();
+        Self { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add_assign(&mut self, other: &Self) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += alpha * other (axpy).
+    pub fn axpy(&mut self, alpha: T, other: &Self) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale row i by s[i] — i.e. diag(s) @ self.
+    pub fn scale_rows(&self, s: &[T]) -> Self {
+        assert_eq!(s.len(), self.rows);
+        Self::from_fn(self.rows, self.cols, |i, j| self[(i, j)] * s[i])
+    }
+
+    /// Scale col j by s[j] — i.e. self @ diag(s).
+    pub fn scale_cols(&self, s: &[T]) -> Self {
+        assert_eq!(s.len(), self.cols);
+        Self::from_fn(self.rows, self.cols, |i, j| self[(i, j)] * s[j])
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|v| v.to_f64() * v.to_f64()).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|v| v.to_f64().abs()).fold(0.0, f64::max)
+    }
+
+    /// Euclidean norm of column j.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self[(i, j)].to_f64().powi(2)).sum::<f64>().sqrt()
+    }
+
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.cols).map(|j| self.col_norm(j)).collect()
+    }
+
+    /// ‖self − other‖_F.
+    pub fn dist(&self, other: &Self) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = a.to_f64() - b.to_f64();
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Convert precision.
+    pub fn cast<U: Scalar>(&self) -> Matrix<U> {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect() }
+    }
+}
+
+impl<T: Scalar> std::ops::Index<(usize, usize)> for Matrix<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> std::ops::IndexMut<(usize, usize)> for Matrix<T> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> fmt::Debug for Matrix<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)].to_f64())?;
+            }
+            if self.cols > 8 {
+                write!(f, "…")?;
+            }
+            writeln!(f)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = DMat::eye(3);
+        assert_eq!(i3[(1, 1)], 1.0);
+        assert_eq!(i3[(0, 1)], 0.0);
+        let d = DMat::diag(&[1.0, 2.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn slicing() {
+        let m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let c = m.cols_range(1, 3);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c[(2, 0)], m[(2, 1)]);
+        let r = m.rows_range(1, 2);
+        assert_eq!(r.shape(), (1, 4));
+        assert_eq!(r[(0, 3)], m[(1, 3)]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::filled(2, 2, 2.0);
+        let b = Mat::eye(2);
+        assert_eq!(a.add(&b)[(0, 0)], 3.0);
+        assert_eq!(a.sub(&b)[(1, 1)], 1.0);
+        assert_eq!(a.scale(0.5)[(0, 1)], 1.0);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c[(0, 0)], 4.0);
+        assert_eq!(c[(0, 1)], 2.0);
+    }
+
+    #[test]
+    fn row_col_scaling() {
+        let m = Mat::filled(2, 3, 1.0);
+        let r = m.scale_rows(&[2.0, 3.0]);
+        assert_eq!(r[(0, 0)], 2.0);
+        assert_eq!(r[(1, 2)], 3.0);
+        let c = m.scale_cols(&[1.0, 2.0, 3.0]);
+        assert_eq!(c[(1, 2)], 3.0);
+    }
+
+    #[test]
+    fn norms() {
+        let m = DMat::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-12);
+        assert!((m.col_norm(0) - 5.0).abs() < 1e-12);
+        assert_eq!(m.col_norm(1), 0.0);
+    }
+
+    #[test]
+    fn cast_precision() {
+        let m = DMat::from_vec(1, 2, vec![1.5, -2.25]);
+        let f: Mat = m.cast();
+        assert_eq!(f.data, vec![1.5f32, -2.25]);
+    }
+}

@@ -1,0 +1,24 @@
+//! Linear-algebra substrate (dependency-free, f32/f64).
+//!
+//! Provides everything the PEFT registry and the native training backend
+//! need: dense matrices, blocked multi-threaded matmul, Householder QR,
+//! one-sided Jacobi SVD (exact), randomized SVD (Halko; the paper's fast-SVD
+//! initialization, Table 16), and the Cayley parameterization with its
+//! truncated-Neumann approximation (paper §4.2/§5, Appendix C).
+
+pub mod cayley;
+pub mod matmul;
+pub mod matrix;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use cayley::{
+    cayley_exact, cayley_exact_backward, cayley_neumann, cayley_neumann_backward,
+    orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad,
+};
+pub use matmul::{matmul, matmul_acc, matmul_into, matmul_nt, matmul_tn, matvec};
+pub use matrix::{DMat, Mat, Matrix, Scalar};
+pub use qr::{orthonormal_columns, qr_thin};
+pub use rsvd::rsvd;
+pub use svd::{svd, Svd};

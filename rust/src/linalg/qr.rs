@@ -1,0 +1,159 @@
+//! Householder QR decomposition (f64).
+//!
+//! Used by the randomized SVD's range finder (Halko et al. 2011) and by the
+//! orthogonal-initialization ablation (paper Table 7: `A_orth R B`).
+
+use super::matrix::DMat;
+
+/// Thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal columns) · R (n×n, upper
+/// triangular with non-negative diagonal).
+pub fn qr_thin(a: &DMat) -> (DMat, DMat) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin expects m >= n, got {m}x{n}");
+    let mut r = a.clone();
+    // Householder vectors stored per-column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the Householder reflector for column k below the diagonal.
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        if alpha.abs() < 1e-300 {
+            // Zero column: identity reflector.
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply reflector to R's trailing block: R -= 2 v (vᵀ R) / vᵀv.
+        for j in k..n {
+            let dot: f64 = (k..m).map(|i| v[i - k] * r[(i, j)]).sum();
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= scale * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Accumulate Q by applying reflectors (in reverse) to the thin identity.
+    let mut q = DMat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let dot: f64 = (k..m).map(|i| v[i - k] * q[(i, j)]).sum();
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= scale * v[i - k];
+            }
+        }
+    }
+
+    // Zero out numerical noise below R's diagonal and make diag(R) >= 0.
+    let mut r_thin = DMat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin[(i, j)] = r[(i, j)];
+        }
+    }
+    for i in 0..n {
+        if r_thin[(i, i)] < 0.0 {
+            for j in i..n {
+                r_thin[(i, j)] = -r_thin[(i, j)];
+            }
+            for row in 0..m {
+                q[(row, i)] = -q[(row, i)];
+            }
+        }
+    }
+    (q, r_thin)
+}
+
+/// Orthonormalize the columns of A (the randomized-SVD range finder step).
+pub fn orthonormal_columns(a: &DMat) -> DMat {
+    qr_thin(a).0
+}
+
+/// ‖QᵀQ − I‖_max — orthonormality defect, used in tests and geometry checks.
+pub fn orthonormality_error(q: &DMat) -> f64 {
+    let n = q.cols;
+    let mut err: f64 = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let dot: f64 = (0..q.rows).map(|r| q[(r, i)] * q[(r, j)]).sum();
+            let target = if i == j { 1.0 } else { 0.0 };
+            err = err.max((dot - target).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Rng::new(7);
+        for &(m, n) in &[(4, 4), (10, 6), (25, 25), (40, 8)] {
+            let a = DMat::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            assert_eq!(q.shape(), (m, n));
+            assert_eq!(r.shape(), (n, n));
+            let qr = matmul(&q, &r);
+            assert!(qr.dist(&a) < 1e-10, "{m}x{n}: dist={}", qr.dist(&a));
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Rng::new(8);
+        let a = DMat::randn(30, 12, 1.0, &mut rng);
+        let (q, _) = qr_thin(&a);
+        assert!(orthonormality_error(&q) < 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular_nonneg_diag() {
+        let mut rng = Rng::new(9);
+        let a = DMat::randn(12, 12, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..12 {
+            assert!(r[(i, i)] >= 0.0);
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        // Column 2 = column 0 + column 1.
+        let mut a = DMat::zeros(6, 3);
+        let mut rng = Rng::new(10);
+        for i in 0..6 {
+            a[(i, 0)] = rng.normal();
+            a[(i, 1)] = rng.normal();
+            a[(i, 2)] = a[(i, 0)] + a[(i, 1)];
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(matmul(&q, &r).dist(&a) < 1e-10);
+    }
+}

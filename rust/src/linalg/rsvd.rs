@@ -1,0 +1,118 @@
+//! Randomized truncated SVD (Halko, Martinsson & Tropp 2011).
+//!
+//! PSOFT constructs each layer's principal subspace with a *fast* SVD whose
+//! accuracy/latency is governed by the number of power iterations `n_iter`
+//! (paper Appendix J.1, Table 16). This module reproduces that knob:
+//! random range sketch → `n_iter` power iterations with QR re-orthogonalization
+//! → small exact SVD on the projected matrix.
+
+use super::matrix::DMat;
+use super::matmul::{matmul, matmul_tn};
+use super::qr::orthonormal_columns;
+use super::svd::{svd, Svd};
+use crate::util::rng::Rng;
+
+/// Randomized rank-`r` SVD with `n_iter` power iterations and the standard
+/// oversampling of `p` extra columns (default 10 in Halko et al.).
+pub fn rsvd(a: &DMat, r: usize, n_iter: usize, oversample: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = a.shape();
+    let k_min = m.min(n);
+    let l = (r + oversample).min(k_min);
+    assert!(r >= 1 && r <= k_min, "rank {r} out of range for {m}x{n}");
+
+    // Stage A: range finder. Y = A Ω, then power iterations with QR
+    // re-orthonormalization for numerical stability.
+    let omega = DMat::randn(n, l, 1.0, rng);
+    let mut q = orthonormal_columns(&matmul(a, &omega));
+    for _ in 0..n_iter {
+        let z = orthonormal_columns(&matmul_tn(a, &q)); // Aᵀ Q
+        q = orthonormal_columns(&matmul(a, &z)); // A Z
+    }
+
+    // Stage B: project and take the exact SVD of the small matrix.
+    let b = matmul_tn(&q, a); // l × n
+    let small = svd(&b);
+    let u = matmul(&q, &small.u); // m × l
+
+    Svd {
+        u: u.cols_range(0, r),
+        s: small.s[..r].to_vec(),
+        vt: small.vt.rows_range(0, r),
+    }
+}
+
+/// Relative rank-r reconstruction error ‖A − A_r‖_F / ‖A‖_F — the accuracy
+/// measure reported alongside `n_iter` in Table 16.
+pub fn truncation_error(a: &DMat, approx: &Svd) -> f64 {
+    let rec = approx.reconstruct(approx.s.len());
+    rec.dist(a) / a.frobenius_norm().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_error;
+
+    /// A test matrix with a decaying spectrum like a pre-trained weight.
+    fn decaying(m: usize, n: usize, rng: &mut Rng) -> DMat {
+        let k = m.min(n);
+        let u = orthonormal_columns(&DMat::randn(m, k, 1.0, rng));
+        let v = orthonormal_columns(&DMat::randn(n, k, 1.0, rng));
+        let mut a = DMat::zeros(m, n);
+        for kk in 0..k {
+            let sigma = (1.0f64).max(10.0 * (-(kk as f64) / 8.0).exp());
+            for i in 0..m {
+                for j in 0..n {
+                    a[(i, j)] += sigma * u[(i, kk)] * v[(j, kk)];
+                }
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn approaches_exact_svd() {
+        let mut rng = Rng::new(11);
+        let a = decaying(48, 32, &mut rng);
+        let exact = svd(&a);
+        let approx = rsvd(&a, 8, 10, 10, &mut rng);
+        for k in 0..8 {
+            let rel = (approx.s[k] - exact.s[k]).abs() / exact.s[k];
+            assert!(rel < 1e-6, "sigma_{k}: {} vs {}", approx.s[k], exact.s[k]);
+        }
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Rng::new(12);
+        let a = decaying(40, 24, &mut rng);
+        let approx = rsvd(&a, 6, 5, 10, &mut rng);
+        assert!(orthonormality_error(&approx.u) < 1e-9);
+        assert!(orthonormality_error(&approx.vt.transpose()) < 1e-9);
+    }
+
+    #[test]
+    fn more_iterations_not_worse() {
+        // Monotone-ish improvement in truncation error with n_iter —
+        // the Table 16 trend.
+        let mut rng = Rng::new(13);
+        let a = decaying(64, 48, &mut rng);
+        let mut errs = Vec::new();
+        for &it in &[0usize, 2, 5, 10] {
+            let mut r2 = Rng::new(99); // same sketch per run
+            let approx = rsvd(&a, 8, it, 6, &mut r2);
+            errs.push(truncation_error(&a, &approx));
+        }
+        assert!(errs[3] <= errs[0] + 1e-9, "errors {errs:?}");
+    }
+
+    #[test]
+    fn exact_on_lowrank_input() {
+        let mut rng = Rng::new(14);
+        let u = DMat::randn(30, 4, 1.0, &mut rng);
+        let v = DMat::randn(4, 20, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let approx = rsvd(&a, 4, 3, 8, &mut rng);
+        assert!(truncation_error(&a, &approx) < 1e-8);
+    }
+}

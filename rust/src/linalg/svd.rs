@@ -1,0 +1,247 @@
+//! Singular value decomposition — one-sided Jacobi (f64).
+//!
+//! The exact SVD is the substrate behind PSOFT/PiSSA/LoRA-XS/SVFT
+//! initialization (Eq. 6: A' = U[:, :r], B' = Σ[:r,:r] V[:, :r]ᵀ,
+//! W_res = W_pre − A'B') and behind the spectra of the synthetic pre-trained
+//! weights. One-sided Jacobi is simple, accurate to machine precision, and
+//! fast enough at the layer widths we train (≤ 1024).
+
+use super::matrix::DMat;
+
+/// Thin SVD result: `a = u · diag(s) · vt` with `u: m×k`, `s: k`, `vt: k×n`,
+/// `k = min(m, n)`, singular values descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: DMat,
+    pub s: Vec<f64>,
+    pub vt: DMat,
+}
+
+impl Svd {
+    /// Reconstruct `u[:, :r] · diag(s[:r]) · vt[:r, :]`.
+    pub fn reconstruct(&self, r: usize) -> DMat {
+        let r = r.min(self.s.len());
+        let (m, n) = (self.u.rows, self.vt.cols);
+        let mut out = DMat::zeros(m, n);
+        for k in 0..r {
+            let sk = self.s[k];
+            for i in 0..m {
+                let uik = self.u[(i, k)] * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += uik * self.vt[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Full reconstruction (all singular values).
+    pub fn reconstruct_full(&self) -> DMat {
+        self.reconstruct(self.s.len())
+    }
+}
+
+/// Compute the thin SVD by one-sided Jacobi.
+pub fn svd(a: &DMat) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // A = U Σ Vᵀ  ⇔  Aᵀ = V Σ Uᵀ.
+        let s = svd_tall(&a.transpose());
+        Svd { u: s.vt.transpose(), s: s.s, vt: s.u.transpose() }
+    }
+}
+
+/// One-sided Jacobi on a tall (m ≥ n) matrix: right-rotations orthogonalize
+/// column pairs of a working copy G (= U·Σ at convergence) while the same
+/// rotations accumulate into V.
+fn svd_tall(a: &DMat) -> Svd {
+    let (m, n) = a.shape();
+    assert!(m >= n);
+    let mut g = a.clone();
+    let mut v = DMat::eye(n);
+
+    let tol = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for the (p, q) column pair.
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let gp = g[(i, p)];
+                    let gq = g[(i, q)];
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                let denom = (app * aqq).sqrt();
+                if denom <= 0.0 || apq.abs() <= tol * denom {
+                    continue;
+                }
+                off = off.max(apq.abs() / denom);
+
+                // Jacobi rotation zeroing the off-diagonal Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let gp = g[(i, p)];
+                    let gq = g[(i, q)];
+                    g[(i, p)] = c * gp - s * gq;
+                    g[(i, q)] = s * gp + c * gq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < tol {
+            break;
+        }
+    }
+
+    // Column norms of G are the singular values; normalize to get U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n).map(|j| g.col_norm(j)).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = DMat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = DMat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sigma = norms[old_j];
+        s.push(sigma);
+        if sigma > 1e-300 {
+            for i in 0..m {
+                u[(i, new_j)] = g[(i, old_j)] / sigma;
+            }
+        } else {
+            // Null direction: leave U column zero (caller never uses it with
+            // sigma=0 weight); keep V orthonormal regardless.
+            u[(new_j.min(m - 1), new_j)] = 1.0;
+        }
+        for i in 0..n {
+            vt[(new_j, i)] = v[(i, old_j)];
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Spectral norm (largest singular value) via a few power iterations —
+/// cheaper than a full SVD when only σ₁ is needed.
+pub fn spectral_norm(a: &DMat, iters: usize, seed: u64) -> f64 {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let n = a.cols;
+    let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let mut sigma = 0.0;
+    for _ in 0..iters.max(1) {
+        // y = Aᵀ (A x)
+        let mut ax = vec![0.0; a.rows];
+        for i in 0..a.rows {
+            ax[i] = a.row(i).iter().zip(&x).map(|(&aij, &xj)| aij * xj).sum();
+        }
+        let mut y = vec![0.0; n];
+        for i in 0..a.rows {
+            let axi = ax[i];
+            for (j, yj) in y.iter_mut().enumerate() {
+                *yj += a[(i, j)] * axi;
+            }
+        }
+        let ny = norm(&y);
+        if ny < 1e-300 {
+            return 0.0;
+        }
+        sigma = ny.sqrt();
+        for (xj, yj) in x.iter_mut().zip(&y) {
+            *xj = yj / ny;
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::linalg::qr::orthonormality_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        let mut rng = Rng::new(5);
+        for &(m, n) in &[(4, 4), (12, 7), (7, 12), (32, 16), (16, 33)] {
+            let a = DMat::randn(m, n, 1.0, &mut rng);
+            let d = svd(&a);
+            assert!(d.reconstruct_full().dist(&a) < 1e-9, "{m}x{n}");
+            // Descending singular values.
+            for w in d.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let mut rng = Rng::new(6);
+        let a = DMat::randn(20, 9, 1.0, &mut rng);
+        let d = svd(&a);
+        assert!(orthonormality_error(&d.u) < 1e-10);
+        assert!(orthonormality_error(&d.vt.transpose()) < 1e-10);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = DMat::diag(&[3.0, 1.0, 2.0]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-12);
+        assert!((d.s[1] - 2.0).abs() < 1e-12);
+        assert!((d.s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_rank_truncation_is_best_approx() {
+        // Rank-2 matrix: truncating at r=2 reconstructs exactly.
+        let mut rng = Rng::new(7);
+        let u = DMat::randn(10, 2, 1.0, &mut rng);
+        let v = DMat::randn(2, 8, 1.0, &mut rng);
+        let a = matmul(&u, &v);
+        let d = svd(&a);
+        assert!(d.reconstruct(2).dist(&a) < 1e-9);
+        assert!(d.s[2].abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_exact_zero_sigma() {
+        let mut a = DMat::zeros(5, 3);
+        for i in 0..5 {
+            a[(i, 0)] = (i + 1) as f64;
+            a[(i, 1)] = 2.0 * (i + 1) as f64; // col1 = 2*col0
+            a[(i, 2)] = (i as f64).sin();
+        }
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-10);
+        assert!(d.reconstruct_full().dist(&a) < 1e-9);
+    }
+
+    #[test]
+    fn spectral_norm_close_to_sigma1() {
+        let mut rng = Rng::new(8);
+        let a = DMat::randn(15, 10, 1.0, &mut rng);
+        let d = svd(&a);
+        let sn = spectral_norm(&a, 50, 123);
+        assert!((sn - d.s[0]).abs() / d.s[0] < 1e-6, "{sn} vs {}", d.s[0]);
+    }
+}

@@ -1,0 +1,462 @@
+//! `psoft` — the PSOFT fine-tuning framework CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! - `pretrain`  — pretrain a backbone on the pretext corpus, save checkpoint
+//! - `train`     — fine-tune one task with one PEFT method (native or PJRT)
+//! - `suite`     — run a full benchmark suite grid (task × method × seed)
+//! - `memmodel`  — print parameter/memory projections at paper scale
+//! - `geometry`  — angle-preservation probe (Figs 9/10)
+//! - `inspect`   — list artifacts and their metadata
+//!
+//! Examples:
+//!
+//! ```text
+//! psoft pretrain --arch encoder --out checkpoints/enc.bin --steps 300
+//! psoft train --suite glue --task cola --method psoft --rank 46 \
+//!       --backbone checkpoints/enc.bin
+//! psoft train --backend pjrt --artifact glue_cls_psoft_r46 ...
+//! psoft suite --suite glue --methods psoft,lora,oftv2 --seeds 1,2,3
+//! psoft memmodel --paper-model llama31-8b --method psoft --rank 424
+//! ```
+
+use anyhow::{bail, Context, Result};
+use psoft::config::{
+    Arch, DataConfig, MethodKind, ModelConfig, ModuleKind, PeftConfig, TrainConfig,
+};
+use psoft::coordinator::{aggregate, grid, report, DeviceBudget, SuiteRunner};
+use psoft::data::{load_task, suite_tasks};
+use psoft::geometry;
+use psoft::memmodel::{self, PaperModel};
+use psoft::model::{Backbone, NativeModel};
+use psoft::runtime::{pjrt::PjrtBackend, Backend, NativeBackend};
+use psoft::train::train;
+use psoft::util::cli::Args;
+use psoft::util::rng::Rng;
+use psoft::util::stats::{human_bytes, human_duration, Stopwatch};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "quiet", "pjrt"]);
+    if args.has_flag("verbose") {
+        psoft::util::log::set_level(psoft::util::log::Level::Debug);
+    } else if args.has_flag("quiet") {
+        psoft::util::log::set_level(psoft::util::log::Level::Warn);
+    }
+    let code = match args.subcommand.as_deref() {
+        Some("pretrain") => run(cmd_pretrain(&args)),
+        Some("train") => run(cmd_train(&args)),
+        Some("suite") => run(cmd_suite(&args)),
+        Some("memmodel") => run(cmd_memmodel(&args)),
+        Some("geometry") => run(cmd_geometry(&args)),
+        Some("inspect") => run(cmd_inspect(&args)),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: psoft <pretrain|train|suite|memmodel|geometry|inspect> [options]\n\
+         see README.md for the full option reference"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shared option parsing
+// ---------------------------------------------------------------------------
+
+fn model_cfg_from(args: &Args) -> Result<ModelConfig> {
+    let arch = Arch::parse(args.get_or("arch", "encoder"))?;
+    let mut cfg = match arch {
+        Arch::Encoder => ModelConfig::encoder_small(),
+        Arch::Decoder => ModelConfig::decoder_small(),
+    };
+    cfg.vocab_size = args.usize("vocab", cfg.vocab_size)?;
+    cfg.d_model = args.usize("d-model", cfg.d_model)?;
+    cfg.n_layers = args.usize("layers", cfg.n_layers)?;
+    cfg.n_heads = args.usize("heads", cfg.n_heads)?;
+    cfg.d_ff = args.usize("d-ff", cfg.d_ff)?;
+    cfg.max_seq = args.usize("max-seq", cfg.max_seq)?;
+    cfg.n_classes = args.usize("classes", cfg.n_classes)?;
+    Ok(cfg)
+}
+
+fn peft_cfg_from(args: &Args, model: &ModelConfig) -> Result<PeftConfig> {
+    let method = MethodKind::parse(args.get_or("method", "psoft"))?;
+    let mut peft = PeftConfig::new(method, args.usize("rank", 8)?);
+    peft.modules = match args.get("modules") {
+        Some(s) if s == "all" => model.modules(),
+        Some(s) => ModuleKind::parse_list(s)?,
+        None => vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V],
+    };
+    peft.neumann_terms = args.usize("neumann", 5)?;
+    peft.oft_block_size = args.usize("oft-block", 32)?;
+    peft.boft_m = args.usize("boft-m", 2)?;
+    peft.boft_b = args.usize("boft-b", 8)?;
+    peft.use_alpha = args.get_or("alpha", "on") != "off";
+    peft.use_beta = args.get_or("beta", "on") != "off";
+    peft.gamma_orth = args.f64("gamma", 0.0)?;
+    if let Some(n) = args.get("svd-iters") {
+        peft.svd_n_iter = Some(n.parse().context("--svd-iters")?);
+    }
+    Ok(peft)
+}
+
+fn train_cfg_from(args: &Args) -> Result<TrainConfig> {
+    let mut tc = TrainConfig::default();
+    tc.lr = args.f64("lr", tc.lr)?;
+    tc.head_lr = args.f64("head-lr", tc.head_lr)?;
+    tc.weight_decay = args.f64("weight-decay", tc.weight_decay)?;
+    tc.epochs = args.usize("epochs", tc.epochs)?;
+    tc.batch_size = args.usize("batch", tc.batch_size)?;
+    tc.warmup_ratio = args.f64("warmup", tc.warmup_ratio)?;
+    tc.seed = args.u64("seed", tc.seed)?;
+    if let Some(ms) = args.get("max-steps") {
+        tc.max_steps = Some(ms.parse().context("--max-steps")?);
+    }
+    Ok(tc)
+}
+
+fn data_cfg_from(args: &Args) -> Result<DataConfig> {
+    let mut dc =
+        DataConfig::new(args.get_or("suite", "glue"), args.get_or("task", "cola"));
+    dc.n_train = args.usize("n-train", dc.n_train)?;
+    dc.n_val = args.usize("n-val", dc.n_val)?;
+    dc.n_test = args.usize("n-test", dc.n_test)?;
+    dc.seq_len = args.usize("seq", 32)?;
+    dc.seed = args.u64("data-seed", dc.seed)?;
+    Ok(dc)
+}
+
+fn load_or_make_backbone(args: &Args, cfg: &ModelConfig) -> Result<Backbone> {
+    match args.get("backbone") {
+        Some(path) => {
+            let bb = Backbone::load(Path::new(path))?;
+            Ok(bb)
+        }
+        None => {
+            psoft::info!("no --backbone given; using a fresh random backbone");
+            let mut rng = Rng::new(args.u64("seed", 42)?);
+            Ok(Backbone::random(cfg, &mut rng))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Subcommands
+// ---------------------------------------------------------------------------
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    use psoft::model::native::Target;
+    let cfg = model_cfg_from(args)?;
+    let steps = args.usize("steps", 300)?;
+    let batch = args.usize("batch", 16)?;
+    let lr = args.f64("lr", 3e-3)?;
+    let out = args.get_or("out", "checkpoints/backbone.bin").to_string();
+    let seed = args.u64("seed", 42)?;
+
+    let mut rng = Rng::new(seed);
+    let model = NativeModel::for_pretraining(&cfg, &mut rng);
+    psoft::info!(
+        "pretraining {} ({} params, {} trainable) for {steps} steps",
+        cfg.arch.name(),
+        cfg.backbone_params(),
+        model.num_trainable()
+    );
+    let mut backend = NativeBackend::new(model);
+
+    let mut dc = DataConfig::new("pretext", "corpus");
+    dc.n_train = steps * batch;
+    dc.n_val = 1;
+    dc.n_test = 1;
+    dc.seq_len = cfg.max_seq.min(args.usize("seq", 32)?);
+    dc.seed = seed;
+    let task = load_task(&dc, cfg.vocab_size)?;
+    let batches = task.batches(&task.train, batch, &mut rng);
+
+    let sw = Stopwatch::start();
+    let hyper = psoft::runtime::Hyper { lr, head_lr: lr, ..Default::default() };
+    let mut losses = Vec::new();
+    for (i, b) in batches.iter().take(steps).enumerate() {
+        // Encoder pretraining reuses the LM-style pretext data as a
+        // classification pretext: predict first-token parity.
+        let b = if cfg.arch == Arch::Encoder {
+            let labels: Vec<usize> =
+                (0..b.batch).map(|k| (b.tokens[k * b.seq] as usize) % 2).collect();
+            let mut b2 = b.clone();
+            b2.target = Target::Class(labels);
+            b2
+        } else {
+            b.clone()
+        };
+        let out_step = backend.train_step(&b, &hyper)?;
+        losses.push(out_step.loss);
+        if (i + 1) % 50 == 0 {
+            psoft::info!("step {:>5}: loss {:.4}", i + 1, out_step.loss);
+        }
+    }
+    let bb = backend.model.to_backbone();
+    if let Some(parent) = Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    bb.save(Path::new(&out))?;
+    println!(
+        "pretrained {} steps in {} — loss {:.4} -> {:.4}; saved to {}",
+        losses.len(),
+        human_duration(sw.secs()),
+        losses.first().unwrap_or(&f64::NAN),
+        losses.last().unwrap_or(&f64::NAN),
+        out
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = model_cfg_from(args)?;
+    let peft = peft_cfg_from(args, &cfg)?;
+    let tc = train_cfg_from(args)?;
+    let dc = data_cfg_from(args)?;
+
+    let bb = load_or_make_backbone(args, &cfg)?;
+    let cfg = bb.cfg.clone();
+    let mut rng = Rng::new(tc.seed ^ 0x5EED_AD0F);
+    let task = load_task(&dc, cfg.vocab_size)?;
+    let mut model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    if cfg.arch == Arch::Encoder {
+        let n = if task.regression { 1 } else { task.n_classes.max(2) };
+        model.set_head_classes(n, &mut rng);
+    }
+
+    let backend_kind = args.get_or("backend", "native");
+    let mut backend: Box<dyn Backend> = match backend_kind {
+        "native" => Box::new(NativeBackend::new(model)),
+        "pjrt" => {
+            let name = args
+                .get("artifact")
+                .context("--backend pjrt requires --artifact <name>")?;
+            let dir = Path::new(args.get_or("artifacts-dir", "artifacts"));
+            Box::new(PjrtBackend::from_artifact(dir, name, &model)?)
+        }
+        other => bail!("unknown backend {other:?}"),
+    };
+
+    psoft::info!(
+        "fine-tuning {}/{} with {} (rank {}) on backend {} — {} trainable params",
+        dc.suite,
+        dc.task,
+        peft.method.name(),
+        peft.rank,
+        backend.name(),
+        backend.num_trainable()
+    );
+    let report = train(backend.as_mut(), &task, &tc, peft.gamma_orth)?;
+    println!(
+        "task={} method={} rank={} backend={} params={} steps={} wall={} {}={:.2} (val {:.2}) final_loss={:.4}",
+        dc.task,
+        peft.method.name(),
+        peft.rank,
+        backend.name(),
+        report.trainable_params,
+        report.steps,
+        human_duration(report.wall_secs),
+        task.metric.name(),
+        report.test_metric,
+        report.val_metric,
+        report.final_loss
+    );
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let suite = args.get_or("suite", "glue").to_string();
+    let cfg = model_cfg_from(args)?;
+    let bb = load_or_make_backbone(args, &cfg)?;
+    let cfg = bb.cfg.clone();
+
+    let method_names = if args.get("methods").is_some() {
+        args.list("methods")
+    } else {
+        vec!["psoft".into(), "lora".into(), "oftv2".into(), "lora_xs".into()]
+    };
+    let seeds = if args.get("seeds").is_some() {
+        args.usize_list("seeds")?.into_iter().map(|s| s as u64).collect()
+    } else {
+        vec![1u64, 2, 3]
+    };
+    let tc = train_cfg_from(args)?;
+    let seq = args.usize("seq", 24)?;
+
+    let tasks: Vec<DataConfig> = suite_tasks(&suite)
+        .into_iter()
+        .map(|t| {
+            let mut d = DataConfig::new(&suite, t);
+            d.seq_len = seq.min(cfg.max_seq);
+            d.n_train = args.usize("n-train", 200).unwrap_or(200);
+            d.n_val = args.usize("n-val", 64).unwrap_or(64);
+            d.n_test = args.usize("n-test", 64).unwrap_or(64);
+            d
+        })
+        .collect();
+    if tasks.is_empty() {
+        bail!("unknown suite {suite:?}");
+    }
+
+    let methods: Vec<(String, PeftConfig)> = method_names
+        .iter()
+        .map(|name| -> Result<(String, PeftConfig)> {
+            let method = MethodKind::parse(name)?;
+            let rank = args.usize("rank", default_rank(method))?;
+            let mut p = PeftConfig::new(method, rank);
+            p.modules = match args.get("modules") {
+                Some(s) if s == "all" => cfg.modules(),
+                Some(s) => ModuleKind::parse_list(s)?,
+                None => cfg.modules(),
+            };
+            Ok((format!("{}_r{rank}", method.name()), p))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let jobs = grid(&tasks, &methods, &tc, &seeds);
+    let n_jobs = jobs.len();
+    psoft::info!("suite {suite}: {} tasks × {} methods × {} seeds = {n_jobs} jobs", tasks.len(), methods.len(), seeds.len());
+    let runner = Arc::new(SuiteRunner::new(bb, DeviceBudget::unlimited()));
+    let threads = args.usize("threads", psoft::util::threadpool::default_parallelism())?;
+    let sw = Stopwatch::start();
+    let results = runner.run_all(jobs, threads);
+    let cells = aggregate(&results);
+    let task_names: Vec<&str> = suite_tasks(&suite);
+    let table = report::Table::from_cells(
+        &format!("{suite} suite ({} seeds, {} wall)", seeds.len(), human_duration(sw.secs())),
+        &task_names,
+        &cells,
+    );
+    println!("{}", table.to_markdown());
+    let out_dir = Path::new(args.get_or("out", "reports"));
+    report::write_bundle(out_dir, &format!("suite_{suite}"), &table)?;
+    psoft::info!("wrote reports to {}", out_dir.display());
+    Ok(())
+}
+
+fn default_rank(method: MethodKind) -> usize {
+    match method {
+        MethodKind::Psoft => 46,
+        MethodKind::LoraXs => 136,
+        _ => 8,
+    }
+}
+
+fn cmd_memmodel(args: &Args) -> Result<()> {
+    let paper = match args.get_or("paper-model", "deberta") {
+        "deberta" => PaperModel::deberta_v3_base(),
+        "vit" => PaperModel::vit_b16(),
+        "llama32-3b" | "llama3b" => PaperModel::llama32_3b(),
+        "llama31-8b" | "llama8b" => PaperModel::llama31_8b(),
+        other => bail!("unknown paper model {other:?}"),
+    };
+    let model = paper.config();
+    let batch = args.usize("batch", 32)?;
+    let seq = args.usize("seq", 64)?;
+    println!("{} (h={}, L={}): batch={batch} seq={seq}", paper.name, paper.hidden, paper.layers);
+    println!("{:<12} {:>10} {:>14} {:>8}", "method", "#params", "peak-mem", "oom@24G");
+    for m in MethodKind::ALL {
+        let mut p = PeftConfig::new(m, args.usize("rank", default_rank(m))?);
+        p.modules = model.modules();
+        let params = memmodel::model_trainable_params(&model, &p);
+        let mem = memmodel::peak_memory_estimate(&model, &p, batch, seq);
+        println!(
+            "{:<12} {:>10} {:>14} {:>8}",
+            m.name(),
+            params,
+            human_bytes(mem),
+            if memmodel::would_oom(mem, memmodel::RTX4090_BYTES) { "OOM" } else { "fits" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_geometry(args: &Args) -> Result<()> {
+    let cfg = model_cfg_from(args)?;
+    let bb = load_or_make_backbone(args, &cfg)?;
+    let rank = args.usize("rank", 8)?;
+    let k = args.usize("columns", 8)?;
+    let layer = args.usize("layer", bb.cfg.n_layers / 2)?;
+
+    let w = bb.weight(layer, ModuleKind::Q);
+    let mut peft = PeftConfig::new(MethodKind::Psoft, rank);
+    peft.modules = vec![ModuleKind::Q];
+    let mut rng = Rng::new(7);
+    let mut model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+
+    // Random rotation step to probe preservation.
+    let mut p = model.trainable_flat();
+    let nt = rank * (rank - 1) / 2;
+    for v in p.iter_mut().take(nt) {
+        *v += 0.1 * rng.normal() as f32;
+    }
+    model.set_trainable_flat(&p);
+    let merged = model.to_backbone();
+    let w_tuned = merged.weight(layer, ModuleKind::Q);
+
+    let (d_angle, d_norm) = geometry::geometry_deviation(w, w_tuned, k);
+    println!("layer {layer} Q matrix, rank {rank}, first {k} columns:");
+    println!("  max |Δangle| = {:.3}°  max relΔnorm = {:.5}", d_angle.to_degrees(), d_norm);
+    println!("  hyperspherical energy: {:.6} -> {:.6}",
+        geometry::hyperspherical_energy(w, k),
+        geometry::hyperspherical_energy(w_tuned, k));
+    let csv = geometry::angles_to_csv(&geometry::pairwise_angles(w_tuned, k));
+    let out = args.get_or("out", "reports/angles.csv");
+    if let Some(parent) = Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(out, csv)?;
+    println!("  wrote angle heatmap to {out}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = Path::new(args.get_or("artifacts-dir", "artifacts"));
+    let mut found = 0;
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.extension().map(|e| e == "json").unwrap_or(false)
+            && path.file_name().map(|n| n.to_string_lossy().ends_with(".meta.json")).unwrap_or(false)
+        {
+            let name = path
+                .file_name()
+                .unwrap()
+                .to_string_lossy()
+                .trim_end_matches(".meta.json")
+                .to_string();
+            let meta = psoft::runtime::pjrt::ArtifactMeta::load(dir, &name)?;
+            println!(
+                "{:<28} arch={:<8} P={:>8} F={:>9} batch={} seq={}",
+                meta.name, meta.arch, meta.trainable_size, meta.frozen_size, meta.batch, meta.seq
+            );
+            found += 1;
+        }
+    }
+    if found == 0 {
+        println!("no artifacts found in {} — run `make artifacts`", dir.display());
+    }
+    Ok(())
+}

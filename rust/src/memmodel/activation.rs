@@ -1,0 +1,162 @@
+//! Activation-memory model (paper Appendix E, Table 9).
+//!
+//! Base cost of one transformer layer in bytes (FP32, a heads, micro-batch
+//! b, sequence s, hidden h):
+//!
+//! ```text
+//! ACT_base = 66·b·s·h + 9·a·b·s²
+//! ```
+//!
+//! Per-method deltas (Table 9, for adapters on all six encoder linears):
+//!
+//! | method  | delta |
+//! |---------|-------------------------------|
+//! | FFT     | 0 |
+//! | LoRA    | +24·b·s·r |
+//! | DoRA    | +24·b·s·r + 36·b·s·h |
+//! | VeRA    | −28·b·s·h + 16·b·s·r + 36·b·s·h |
+//! | OFT     | +36·b·s·h |
+//! | BOFT    | +36·m·b·s·h |
+//! | GOFT    | +36·b·s·h·log₂h |
+//! | SVFT    | −28·b·s·h + 24·b·s·h |
+//! | LoRA-XS | −28·b·s·h + 24·b·s·r |
+//! | PSOFT   | −28·b·s·h + 72·b·s·r |
+//!
+//! The "−28bsh" terms are the removed input activations of the six linear
+//! layers (their inputs need not be stored when the trainable path does not
+//! require ∂L/∂W of the dense weight).
+
+use crate::config::{MethodKind, PeftConfig};
+
+/// Shape parameters of the activation model.
+#[derive(Clone, Copy, Debug)]
+pub struct ActShape {
+    pub batch: usize,
+    pub seq: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// FFN expansion factor (4 in the paper's derivation).
+    pub ffn_mult: f64,
+}
+
+impl ActShape {
+    fn bsh(&self) -> f64 {
+        (self.batch * self.seq * self.hidden) as f64
+    }
+
+    fn abs2(&self) -> f64 {
+        (self.heads * self.batch * self.seq * self.seq) as f64
+    }
+
+    fn bsr(&self, r: usize) -> f64 {
+        (self.batch * self.seq * r) as f64
+    }
+}
+
+/// ACT_base in bytes: 66·b·s·h + 9·a·b·s² (Eq. 10).
+pub fn act_base_bytes(s: &ActShape) -> f64 {
+    66.0 * s.bsh() + 9.0 * s.abs2()
+}
+
+/// Per-method delta in bytes for one transformer layer (Table 9).
+pub fn method_delta_bytes(s: &ActShape, peft: &PeftConfig) -> f64 {
+    let r = peft.rank;
+    let bsh = s.bsh();
+    match peft.method {
+        MethodKind::Fft => 0.0,
+        MethodKind::Lora | MethodKind::Pissa => 24.0 * s.bsr(r),
+        MethodKind::Dora => 24.0 * s.bsr(r) + 36.0 * bsh,
+        MethodKind::Vera => -28.0 * bsh + 16.0 * s.bsr(r) + 36.0 * bsh,
+        MethodKind::OftV2 => 36.0 * bsh,
+        MethodKind::Boft => 36.0 * peft.boft_m as f64 * bsh,
+        MethodKind::Goft | MethodKind::QGoft => 36.0 * bsh * (s.hidden as f64).log2(),
+        MethodKind::Svft => -28.0 * bsh + 24.0 * bsh,
+        MethodKind::LoraXs => -28.0 * bsh + 24.0 * s.bsr(r),
+        MethodKind::Psoft => -28.0 * bsh + 72.0 * s.bsr(r),
+    }
+}
+
+/// Activation bytes of one transformer layer under a PEFT method.
+pub fn transformer_layer_bytes(s: &ActShape, peft: &PeftConfig) -> f64 {
+    (act_base_bytes(s) + method_delta_bytes(s, peft)).max(0.0)
+}
+
+/// Whole-model activations: layers × per-layer (embeddings/head are <0.1%
+/// per Korthikanti et al. 2023, ignored as in the paper).
+pub fn model_activation_bytes(s: &ActShape, n_layers: usize, peft: &PeftConfig) -> f64 {
+    n_layers as f64 * transformer_layer_bytes(s, peft)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PeftConfig;
+
+    fn shape() -> ActShape {
+        ActShape { batch: 64, seq: 512, hidden: 4096, heads: 32, ffn_mult: 4.0 }
+    }
+
+    #[test]
+    fn base_formula_exact() {
+        let s = shape();
+        let expect = 66.0 * (64 * 512 * 4096) as f64 + 9.0 * (32 * 64 * 512 * 512) as f64;
+        assert_eq!(act_base_bytes(&s), expect);
+    }
+
+    #[test]
+    fn table9_ordering() {
+        // GOFT > BOFT > DoRA > OFT > LoRA > FFT > VeRA+ > SVFT > LoRA-XS ≈ PSOFT.
+        let s = shape();
+        let layer = |method: MethodKind, r: usize, m: usize| {
+            let mut p = PeftConfig::new(method, r);
+            p.boft_m = m;
+            transformer_layer_bytes(&s, &p)
+        };
+        let goft = layer(MethodKind::Goft, 0, 0);
+        let boft = layer(MethodKind::Boft, 0, 2);
+        let dora = layer(MethodKind::Dora, 8, 0);
+        let oft = layer(MethodKind::OftV2, 0, 0);
+        let lora = layer(MethodKind::Lora, 8, 0);
+        let fft = layer(MethodKind::Fft, 0, 0);
+        let xs = layer(MethodKind::LoraXs, 136, 0);
+        let psoft = layer(MethodKind::Psoft, 46, 0);
+        assert!(goft > boft && boft > dora && dora > oft);
+        assert!(oft > lora && lora > fft);
+        assert!(fft > xs && fft > psoft);
+        // PSOFT within 2% of LoRA-XS at r ≪ h (Appendix E's "comparable").
+        assert!((psoft - xs).abs() / xs < 0.02, "psoft {psoft} vs xs {xs}");
+    }
+
+    #[test]
+    fn psoft_delta_is_72bsr_minus_28bsh() {
+        let s = shape();
+        let p = PeftConfig::new(MethodKind::Psoft, 64);
+        let d = method_delta_bytes(&s, &p);
+        let expect = -28.0 * (64 * 512 * 4096) as f64 + 72.0 * (64 * 512 * 64) as f64;
+        assert_eq!(d, expect);
+    }
+
+    #[test]
+    fn goft_scaling_is_log_h() {
+        // Fig 4a mechanism: doubling h multiplies GOFT's delta by
+        // 2·log(2h)/log(h) — superlinear, driving the batch-64 OOM.
+        let mut s = shape();
+        let p = PeftConfig::new(MethodKind::Goft, 0);
+        let d1 = method_delta_bytes(&s, &p);
+        s.hidden *= 2;
+        let d2 = method_delta_bytes(&s, &p);
+        let expect_ratio = 2.0 * (2.0 * 4096.0f64).log2() / (4096.0f64).log2();
+        assert!((d2 / d1 - expect_ratio).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activation_grows_linearly_with_batch() {
+        let p = PeftConfig::new(MethodKind::Psoft, 46);
+        let mut s = shape();
+        s.batch = 16;
+        let m16 = transformer_layer_bytes(&s, &p);
+        s.batch = 32;
+        let m32 = transformer_layer_bytes(&s, &p);
+        assert!((m32 / m16 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,109 @@
+//! Parameter and memory accounting (paper Appendices D & E).
+//!
+//! The paper's memory story — OFT variants OOM where PSOFT fits — is argued
+//! through an analytic activation-memory model and measured CUDA peaks. We
+//! reproduce the analytic model exactly (Tables 8, 9) and use it, plus
+//! weight/gradient/optimizer terms, to project peak footprints at
+//! paper-scale shapes (Tables 2–5, 19–22, Fig 4a) including the OOM
+//! boundaries at the 24 GB / 80 GB device budgets.
+
+pub mod activation;
+pub mod params;
+
+pub use activation::{
+    act_base_bytes, method_delta_bytes, model_activation_bytes, transformer_layer_bytes, ActShape,
+};
+pub use params::{model_trainable_params, PaperModel};
+
+use crate::config::{MethodKind, ModelConfig, PeftConfig};
+
+/// Bytes per FP32 scalar (all experiments run FP32, §5).
+pub const F32: f64 = 4.0;
+
+/// Peak-memory estimate (bytes) for fine-tuning: frozen weights + trainable
+/// params (grad + AdamW moments) + activations across layers + head.
+pub fn peak_memory_estimate(model: &ModelConfig, peft: &PeftConfig, batch: usize, seq: usize) -> f64 {
+    let weights = model.backbone_params() as f64 * F32;
+    let trainable = model_trainable_params(model, peft) as f64;
+    // grad + m + v for AdamW.
+    let opt = trainable * F32 * 3.0;
+    let shape = ActShape {
+        batch,
+        seq,
+        hidden: model.d_model,
+        heads: model.n_heads,
+        ffn_mult: (model.d_ff as f64 / model.d_model as f64).max(1.0),
+    };
+    let act = model_activation_bytes(&shape, model.n_layers, peft);
+    weights + opt + act
+}
+
+/// Device budgets from the paper's hardware (§5).
+pub const RTX4090_BYTES: f64 = 24.0 * 1024.0 * 1024.0 * 1024.0;
+pub const H100_BYTES: f64 = 80.0 * 1024.0 * 1024.0 * 1024.0;
+
+/// Whether a projected footprint OOMs a device — the mechanism behind the
+/// paper's "OOM" table cells.
+pub fn would_oom(bytes: f64, device_bytes: f64) -> bool {
+    bytes > device_bytes
+}
+
+/// Per-method qualitative memory ranking the paper reports; used by bench
+/// assertions ("GOFT ≫ BOFT > DoRA > PSOFT ≈ LoRA-XS").
+pub fn method_memory_rank(m: MethodKind) -> u8 {
+    match m {
+        MethodKind::Goft | MethodKind::QGoft => 5,
+        MethodKind::Boft => 4,
+        MethodKind::Dora => 3,
+        MethodKind::Fft | MethodKind::OftV2 => 2,
+        MethodKind::Lora | MethodKind::Pissa | MethodKind::Vera | MethodKind::Svft => 1,
+        MethodKind::LoraXs | MethodKind::Psoft => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MethodKind, ModelConfig, PeftConfig};
+
+    #[test]
+    fn peak_memory_ordering_matches_paper() {
+        // At DeBERTa-scale shapes, the analytic model must reproduce the
+        // Table 2 ordering: GOFT ≫ BOFT > (LoRA ≈ OFTv2) ≥ PSOFT.
+        let model = PaperModel::deberta_v3_base().config();
+        let b = 64;
+        let s = 64;
+        let mem = |method: MethodKind, rank: usize| {
+            let mut p = PeftConfig::new(method, rank);
+            p.modules = model.modules();
+            peak_memory_estimate(&model, &p, b, s)
+        };
+        let goft = mem(MethodKind::Goft, 0);
+        let boft = mem(MethodKind::Boft, 0);
+        let lora = mem(MethodKind::Lora, 8);
+        let psoft = mem(MethodKind::Psoft, 46);
+        let dora = mem(MethodKind::Dora, 8);
+        assert!(goft > boft, "GOFT {goft} vs BOFT {boft}");
+        assert!(boft > lora, "BOFT {boft} vs LoRA {lora}");
+        assert!(dora > lora, "DoRA {dora} vs LoRA {lora}");
+        assert!(psoft < lora, "PSOFT {psoft} vs LoRA {lora}");
+    }
+
+    #[test]
+    fn goft_ooms_at_vit_batch64_but_psoft_fits() {
+        // Tables 3/22: GOFT OOMs on ViT-B/16 at batch 64 on the paper's
+        // 24 GB encoder-model device (and, measured, even on an H100 —
+        // allocator overheads push the analytic projection further up);
+        // PSOFT stays in the single-digit GiB range.
+        let model = PaperModel::vit_b16().config();
+        let mut goft = PeftConfig::new(MethodKind::Goft, 0);
+        goft.modules = model.modules();
+        let mut psoft = PeftConfig::new(MethodKind::Psoft, 46);
+        psoft.modules = model.modules();
+        let goft_mem = peak_memory_estimate(&model, &goft, 64, 197);
+        let psoft_mem = peak_memory_estimate(&model, &psoft, 64, 197);
+        assert!(would_oom(goft_mem, RTX4090_BYTES), "GOFT projected {} GiB", goft_mem / 1e9);
+        assert!(!would_oom(psoft_mem, RTX4090_BYTES), "PSOFT projected {} GiB", psoft_mem / 1e9);
+        assert!(goft_mem / psoft_mem > 5.0, "ratio {}", goft_mem / psoft_mem);
+    }
+}

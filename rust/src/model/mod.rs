@@ -1,0 +1,539 @@
+//! Model substrate: the Rust-side transformer.
+//!
+//! `Backbone` is a plain pre-trained checkpoint (dense weights only).
+//! `NativeModel` wraps a backbone with PEFT adapters on the configured
+//! modules and exposes the two flat parameter vectors of the interchange
+//! contract (`python/compile/model.py`):
+//!
+//! - `trainable_flat()` — per layer, per inserted module (arch order
+//!   Q,K,V,O[,G],U,D), each adapter's `params()`; then the encoder head.
+//! - `frozen_flat()` — tok_emb ‖ pos_emb ‖ per layer [norm1 ‖ per-module
+//!   frozen (adapter `frozen()` or dense W) ‖ norm2] ‖ final norm ‖
+//!   (decoder) lm_head.
+//!
+//! The native forward/backward lives in [`native`]; the same flat vectors
+//! drive the PJRT artifacts.
+
+pub mod native;
+
+use crate::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use crate::linalg::Mat;
+use crate::peft::{build_adapter, Adapter};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Pre-trained dense weights (the checkpoint format produced by
+/// pretraining and consumed by every fine-tuning job).
+pub struct Backbone {
+    pub cfg: ModelConfig,
+    pub tok_emb: Mat,
+    pub pos_emb: Mat,
+    /// Per layer: dense weight per module, in arch order.
+    pub layer_weights: Vec<Vec<(ModuleKind, Mat)>>,
+    pub lm_head: Option<Mat>,
+}
+
+impl Backbone {
+    /// Random initialization (the starting point for pretraining).
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Backbone {
+        let d = cfg.d_model;
+        let tok_emb = Mat::randn(cfg.vocab_size, d, 0.02, rng);
+        let pos_emb = Mat::randn(cfg.max_seq, d, 0.02, rng);
+        let layer_weights = (0..cfg.n_layers)
+            .map(|_| {
+                cfg.modules()
+                    .into_iter()
+                    .map(|m| {
+                        let (din, dout) = cfg.module_shape(m);
+                        (m, Mat::randn(din, dout, 1.0 / (din as f64).sqrt(), rng))
+                    })
+                    .collect()
+            })
+            .collect();
+        let lm_head = match cfg.arch {
+            Arch::Decoder => Some(Mat::randn(d, cfg.vocab_size, 0.02, rng)),
+            Arch::Encoder => None,
+        };
+        Backbone { cfg: cfg.clone(), tok_emb, pos_emb, layer_weights, lm_head }
+    }
+
+    pub fn weight(&self, layer: usize, module: ModuleKind) -> &Mat {
+        &self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module").1
+    }
+
+    /// Binary checkpoint: magic, config ints, then raw f32 LE tensors in
+    /// declaration order.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"PSOFTBB1")?;
+        let cfg = &self.cfg;
+        let header: Vec<u32> = vec![
+            match cfg.arch {
+                Arch::Encoder => 0,
+                Arch::Decoder => 1,
+            },
+            cfg.vocab_size as u32,
+            cfg.d_model as u32,
+            cfg.n_layers as u32,
+            cfg.n_heads as u32,
+            cfg.d_ff as u32,
+            cfg.max_seq as u32,
+            cfg.n_classes as u32,
+        ];
+        for v in header {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        let write_mat = |f: &mut dyn Write, m: &Mat| -> Result<()> {
+            for v in &m.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            Ok(())
+        };
+        write_mat(&mut f, &self.tok_emb)?;
+        write_mat(&mut f, &self.pos_emb)?;
+        for layer in &self.layer_weights {
+            for (_, w) in layer {
+                write_mat(&mut f, w)?;
+            }
+        }
+        if let Some(h) = &self.lm_head {
+            write_mat(&mut f, h)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Backbone> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"PSOFTBB1" {
+            bail!("{}: not a PSOFT backbone checkpoint", path.display());
+        }
+        let mut ints = [0u32; 8];
+        for v in ints.iter_mut() {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            *v = u32::from_le_bytes(b);
+        }
+        let cfg = ModelConfig {
+            arch: if ints[0] == 0 { Arch::Encoder } else { Arch::Decoder },
+            vocab_size: ints[1] as usize,
+            d_model: ints[2] as usize,
+            n_layers: ints[3] as usize,
+            n_heads: ints[4] as usize,
+            d_ff: ints[5] as usize,
+            max_seq: ints[6] as usize,
+            n_classes: ints[7] as usize,
+        };
+        let read_mat = |f: &mut dyn Read, rows: usize, cols: usize| -> Result<Mat> {
+            let mut data = vec![0f32; rows * cols];
+            let mut buf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            Ok(Mat::from_vec(rows, cols, data))
+        };
+        let tok_emb = read_mat(&mut f, cfg.vocab_size, cfg.d_model)?;
+        let pos_emb = read_mat(&mut f, cfg.max_seq, cfg.d_model)?;
+        let mut layer_weights = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let mut mods = Vec::new();
+            for m in cfg.modules() {
+                let (din, dout) = cfg.module_shape(m);
+                mods.push((m, read_mat(&mut f, din, dout)?));
+            }
+            layer_weights.push(mods);
+        }
+        let lm_head = match cfg.arch {
+            Arch::Decoder => Some(read_mat(&mut f, cfg.d_model, cfg.vocab_size)?),
+            Arch::Encoder => None,
+        };
+        Ok(Backbone { cfg, tok_emb, pos_emb, layer_weights, lm_head })
+    }
+}
+
+/// One transformer layer with adapters installed.
+pub struct Layer {
+    /// Modules in arch order; adapted or frozen-dense.
+    pub modules: Vec<(ModuleKind, ModuleOp)>,
+}
+
+pub enum ModuleOp {
+    Dense(Mat),
+    Adapted(Box<dyn Adapter>),
+}
+
+impl ModuleOp {
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            ModuleOp::Dense(w) => crate::linalg::matmul(x, w),
+            ModuleOp::Adapted(a) => a.forward(x),
+        }
+    }
+}
+
+/// The runnable model: backbone + adapters + head.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub peft: PeftConfig,
+    pub tok_emb: Mat,
+    pub pos_emb: Mat,
+    pub layers: Vec<Layer>,
+    pub lm_head: Option<Mat>,
+    /// Encoder classification/regression head (always trainable).
+    pub head_w: Mat,
+    pub head_b: Vec<f32>,
+    /// Pretraining mode: embeddings (and decoder lm_head) join the
+    /// trainable vector. Native backend only — never exported to HLO.
+    pub train_embeddings: bool,
+}
+
+impl NativeModel {
+    /// Install adapters from `peft` onto a backbone.
+    pub fn from_backbone(bb: &Backbone, peft: &PeftConfig, rng: &mut Rng) -> NativeModel {
+        let cfg = bb.cfg.clone();
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut modules = Vec::new();
+            for m in cfg.modules() {
+                let w = bb.weight(l, m);
+                let op = if peft.modules.contains(&m) {
+                    ModuleOp::Adapted(build_adapter(peft, w, &mut rng.child((l * 16 + m as usize) as u64)))
+                } else {
+                    ModuleOp::Dense(w.clone())
+                };
+                modules.push((m, op));
+            }
+            layers.push(Layer { modules });
+        }
+        let head_w = Mat::randn(cfg.d_model, cfg.n_classes.max(1), 0.02, rng);
+        let head_b = vec![0.0; cfg.n_classes.max(1)];
+        NativeModel {
+            cfg: cfg.clone(),
+            peft: peft.clone(),
+            tok_emb: bb.tok_emb.clone(),
+            pos_emb: bb.pos_emb.clone(),
+            layers,
+            lm_head: bb.lm_head.clone(),
+            head_w,
+            head_b,
+            train_embeddings: false,
+        }
+    }
+
+    /// FFT-on-everything model used for pretraining.
+    pub fn for_pretraining(cfg: &ModelConfig, rng: &mut Rng) -> NativeModel {
+        let bb = Backbone::random(cfg, rng);
+        let mut peft = PeftConfig::new(MethodKind::Fft, 0);
+        peft.modules = cfg.modules();
+        let mut m = NativeModel::from_backbone(&bb, &peft, rng);
+        m.train_embeddings = true;
+        m
+    }
+
+    /// Extract the (merged) dense backbone — used to save a pretrained
+    /// checkpoint after pretraining, and to hand fine-tuned weights to
+    /// deployment.
+    pub fn to_backbone(&self) -> Backbone {
+        let layer_weights = self
+            .layers
+            .iter()
+            .map(|layer| {
+                layer
+                    .modules
+                    .iter()
+                    .map(|(m, op)| {
+                        let w = match op {
+                            ModuleOp::Dense(w) => w.clone(),
+                            ModuleOp::Adapted(a) => a.materialize(),
+                        };
+                        (*m, w)
+                    })
+                    .collect()
+            })
+            .collect();
+        Backbone {
+            cfg: self.cfg.clone(),
+            tok_emb: self.tok_emb.clone(),
+            pos_emb: self.pos_emb.clone(),
+            layer_weights,
+            lm_head: self.lm_head.clone(),
+        }
+    }
+
+    fn has_head(&self) -> bool {
+        self.cfg.arch == Arch::Encoder
+    }
+
+    /// Resize the classification/regression head for a task (regression ⇒
+    /// 1 output). Reinitializes head weights; call before training.
+    pub fn set_head_classes(&mut self, n_classes: usize, rng: &mut Rng) {
+        let n = n_classes.max(1);
+        if self.cfg.n_classes == n {
+            return;
+        }
+        self.cfg.n_classes = n;
+        self.head_w = Mat::randn(self.cfg.d_model, n, 0.02, rng);
+        self.head_b = vec![0.0; n];
+    }
+
+    /// Number of trainable parameters (adapters + head [+ embeddings]).
+    pub fn num_trainable(&self) -> usize {
+        let mut n = 0;
+        for layer in &self.layers {
+            for (_, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    n += a.num_params();
+                }
+            }
+        }
+        if self.has_head() {
+            n += self.head_w.data.len() + self.head_b.len();
+        }
+        if self.train_embeddings {
+            n += self.tok_emb.data.len() + self.pos_emb.data.len();
+            if let Some(h) = &self.lm_head {
+                n += h.data.len();
+            }
+        }
+        n
+    }
+
+    /// Adapter-only parameter count (the paper's `#Params` columns).
+    pub fn num_adapter_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.modules)
+            .filter_map(|(_, op)| match op {
+                ModuleOp::Adapted(a) => Some(a.num_params()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Flatten trainables in the interchange order.
+    pub fn trainable_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_trainable());
+        for layer in &self.layers {
+            for (_, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    out.extend(a.params());
+                }
+            }
+        }
+        if self.has_head() {
+            out.extend_from_slice(&self.head_w.data);
+            out.extend_from_slice(&self.head_b);
+        }
+        if self.train_embeddings {
+            out.extend_from_slice(&self.tok_emb.data);
+            out.extend_from_slice(&self.pos_emb.data);
+            if let Some(h) = &self.lm_head {
+                out.extend_from_slice(&h.data);
+            }
+        }
+        out
+    }
+
+    /// Load trainables from a flat vector (inverse of `trainable_flat`).
+    pub fn set_trainable_flat(&mut self, p: &[f32]) {
+        let mut off = 0;
+        for layer in &mut self.layers {
+            for (_, op) in &mut layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    let n = a.num_params();
+                    a.set_params(&p[off..off + n]);
+                    off += n;
+                }
+            }
+        }
+        if self.has_head() {
+            let nw = self.head_w.data.len();
+            self.head_w.data.copy_from_slice(&p[off..off + nw]);
+            off += nw;
+            let nb = self.head_b.len();
+            self.head_b.copy_from_slice(&p[off..off + nb]);
+            off += nb;
+        }
+        if self.train_embeddings {
+            let nt = self.tok_emb.data.len();
+            self.tok_emb.data.copy_from_slice(&p[off..off + nt]);
+            off += nt;
+            let np = self.pos_emb.data.len();
+            self.pos_emb.data.copy_from_slice(&p[off..off + np]);
+            off += np;
+            if let Some(h) = &mut self.lm_head {
+                let nh = h.data.len();
+                h.data.copy_from_slice(&p[off..off + nh]);
+                off += nh;
+            }
+        }
+        assert_eq!(off, p.len(), "trainable vector length mismatch");
+    }
+
+    /// Index of the first head parameter in the flat vector (the trainer
+    /// applies `head_lr` from here; matches the HLO artifact's convention).
+    pub fn head_offset(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.modules)
+            .filter_map(|(_, op)| match op {
+                ModuleOp::Adapted(a) => Some(a.num_params()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Flatten frozen tensors in the interchange order of
+    /// `python/compile/model.py::frozen_layout` (norm parameters are the
+    /// constant 1/0 vectors — norms are untrained in this reproduction).
+    pub fn frozen_flat(&self) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let enc = self.cfg.arch == Arch::Encoder;
+        let mut out = Vec::new();
+        out.extend_from_slice(&self.tok_emb.data);
+        out.extend_from_slice(&self.pos_emb.data);
+        for layer in &self.layers {
+            out.extend(std::iter::repeat(1.0f32).take(d)); // ln1.g
+            if enc {
+                out.extend(std::iter::repeat(0.0f32).take(d)); // ln1.b
+            }
+            for (_, op) in &layer.modules {
+                match op {
+                    ModuleOp::Dense(w) => out.extend_from_slice(&w.data),
+                    ModuleOp::Adapted(a) => out.extend(a.frozen()),
+                }
+            }
+            out.extend(std::iter::repeat(1.0f32).take(d)); // ln2.g
+            if enc {
+                out.extend(std::iter::repeat(0.0f32).take(d)); // ln2.b
+            }
+        }
+        out.extend(std::iter::repeat(1.0f32).take(d)); // final.g
+        if enc {
+            out.extend(std::iter::repeat(0.0f32).take(d)); // final.b
+        } else {
+            out.extend_from_slice(&self.lm_head.as_ref().expect("decoder lm_head").data);
+        }
+        out
+    }
+
+    /// Sum of orthogonality defects over adapters that define one
+    /// (Table 6 / geometry probes).
+    pub fn orth_defect(&self) -> f64 {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.modules)
+            .filter_map(|(_, op)| match op {
+                ModuleOp::Adapted(a) => a.orth_defect(),
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MethodKind, ModelConfig, PeftConfig};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            arch: Arch::Encoder,
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 12,
+            n_classes: 2,
+        }
+    }
+
+    #[test]
+    fn backbone_checkpoint_roundtrip() {
+        let mut rng = Rng::new(201);
+        let bb = Backbone::random(&tiny_cfg(), &mut rng);
+        let path = std::env::temp_dir().join("psoft_test_bb.bin");
+        bb.save(&path).unwrap();
+        let bb2 = Backbone::load(&path).unwrap();
+        assert_eq!(bb2.cfg, bb.cfg);
+        assert_eq!(bb2.tok_emb, bb.tok_emb);
+        assert_eq!(bb2.weight(1, ModuleKind::V), bb.weight(1, ModuleKind::V));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trainable_flat_roundtrip() {
+        let mut rng = Rng::new(202);
+        let bb = Backbone::random(&tiny_cfg(), &mut rng);
+        let peft = PeftConfig::new(MethodKind::Psoft, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let mut model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        let p = model.trainable_flat();
+        assert_eq!(p.len(), model.num_trainable());
+        let mut p2 = p.clone();
+        for v in p2.iter_mut() {
+            *v += 0.01;
+        }
+        model.set_trainable_flat(&p2);
+        let p3 = model.trainable_flat();
+        for (a, b) in p2.iter().zip(&p3) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn frozen_flat_matches_meta_size() {
+        // Size formula cross-check against the python layout: psoft on Q,V
+        // with rank 4 on the tiny config.
+        let mut rng = Rng::new(203);
+        let cfg = tiny_cfg();
+        let bb = Backbone::random(&cfg, &mut rng);
+        let peft = PeftConfig::new(MethodKind::Psoft, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        let f = model.frozen_flat();
+        let d = cfg.d_model;
+        let per_adapted = d * d + d * 4 + 4 * d; // w_res + A' + B'
+        let per_dense: usize =
+            [(d, d), (d, cfg.d_ff), (cfg.d_ff, d), (d, d)].iter().map(|(a, b)| a * b).sum::<usize>();
+        let per_layer = 4 * d + 2 * per_adapted + per_dense;
+        let expect = cfg.vocab_size * d + cfg.max_seq * d + cfg.n_layers * per_layer + 2 * d;
+        assert_eq!(f.len(), expect);
+    }
+
+    #[test]
+    fn num_adapter_params_matches_accounting() {
+        let mut rng = Rng::new(204);
+        let cfg = tiny_cfg();
+        let bb = Backbone::random(&cfg, &mut rng);
+        let peft = PeftConfig::new(MethodKind::Psoft, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        assert_eq!(
+            model.num_adapter_params(),
+            crate::memmodel::model_trainable_params(&cfg, &peft)
+        );
+    }
+
+    #[test]
+    fn merged_backbone_keeps_shape_and_start_point() {
+        let mut rng = Rng::new(205);
+        let cfg = tiny_cfg();
+        let bb = Backbone::random(&cfg, &mut rng);
+        let peft = PeftConfig::new(MethodKind::Psoft, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        let merged = model.to_backbone();
+        // At identity init, merging recovers the pretrained weights.
+        let d0 = merged.weight(0, ModuleKind::Q).dist(bb.weight(0, ModuleKind::Q));
+        assert!(d0 < 1e-3, "dist {d0}");
+        // Dense (un-adapted) modules are bit-identical.
+        assert_eq!(merged.weight(0, ModuleKind::K), bb.weight(0, ModuleKind::K));
+    }
+}

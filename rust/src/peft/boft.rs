@@ -1,0 +1,335 @@
+//! BOFT (Liu et al. 2024): orthogonal fine-tuning via butterfly
+//! factorization.
+//!
+//! `R = Π_{j=1}^{m} P_jᵀ·D_j·P_j` with each `D_j` block-diagonal (b×b Cayley
+//! rotations) and `P_j` a butterfly stride permutation (perfect shuffle
+//! applied j times; for b = 2 and m = log₂d this is exactly the FFT
+//! butterfly network). Chaining m full-width factors is what restores
+//! expressiveness over block-diagonal OFT — and what creates the m
+//! intermediate activations the paper charges BOFT for (Appendix E:
+//! +4·m·bsh).
+
+use super::oft::block_partition;
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{
+    cayley_neumann, cayley_neumann_backward, matmul, matmul_nt, matmul_tn, skew_from_params,
+    skew_param_count, skew_param_grad, DMat, Mat,
+};
+
+pub struct BoftAdapter {
+    w0: Mat,
+    /// Per-factor block partition (identical across factors).
+    blocks: Vec<usize>,
+    /// m factors × per-factor skew params, concatenated.
+    theta: Vec<f32>,
+    /// Cached rotations: rots[j][k] = block k of factor j.
+    rots: Vec<Vec<Mat>>,
+    /// Column permutation applied before factor j (and inverted after).
+    perms: Vec<Vec<usize>>,
+    m: usize,
+    neumann_terms: usize,
+}
+
+/// Perfect-shuffle permutation σ(i): deal the first half into even slots
+/// and the second half into odd slots.
+fn riffle(d: usize) -> Vec<usize> {
+    let half = d.div_ceil(2);
+    let mut out = Vec::with_capacity(d);
+    for i in 0..half {
+        out.push(i);
+        if half + i < d {
+            out.push(half + i);
+        }
+    }
+    out
+}
+
+/// Compose permutation `p` with itself `k` times.
+fn perm_power(p: &[usize], k: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (0..p.len()).collect();
+    for _ in 0..k {
+        out = out.iter().map(|&i| p[i]).collect();
+    }
+    out
+}
+
+fn invert_perm(p: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; p.len()];
+    for (i, &pi) in p.iter().enumerate() {
+        inv[pi] = i;
+    }
+    inv
+}
+
+fn permute_cols(x: &Mat, perm: &[usize]) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for t in 0..x.rows {
+        let src = x.row(t);
+        let dst = out.row_mut(t);
+        for (j, &pj) in perm.iter().enumerate() {
+            dst[j] = src[pj];
+        }
+    }
+    out
+}
+
+impl BoftAdapter {
+    pub fn new(w_pre: &Mat, block_size: usize, m: usize, neumann_terms: usize) -> Self {
+        let d = w_pre.rows;
+        let blocks = block_partition(d, block_size);
+        let per_factor: usize = blocks.iter().map(|&b| skew_param_count(b)).sum();
+        let base = riffle(d);
+        let perms: Vec<Vec<usize>> = (0..m).map(|j| perm_power(&base, j)).collect();
+        let mut adapter = Self {
+            w0: w_pre.clone(),
+            blocks,
+            theta: vec![0.0; m * per_factor],
+            rots: Vec::new(),
+            perms,
+            m,
+            neumann_terms,
+        };
+        adapter.recompute_rotations();
+        adapter
+    }
+
+    fn per_factor_params(&self) -> usize {
+        self.blocks.iter().map(|&b| skew_param_count(b)).sum()
+    }
+
+    fn recompute_rotations(&mut self) {
+        let per = self.per_factor_params();
+        self.rots.clear();
+        for j in 0..self.m {
+            let mut factor = Vec::with_capacity(self.blocks.len());
+            let mut off = j * per;
+            for &b in &self.blocks {
+                let np = skew_param_count(b);
+                let params: Vec<f64> = self.theta[off..off + np].iter().map(|&v| v as f64).collect();
+                let q = skew_from_params(b, &params);
+                factor.push(cayley_neumann(&q, self.neumann_terms).cast());
+                off += np;
+            }
+            self.rots.push(factor);
+        }
+    }
+
+    /// Apply one factor: z = permuteᵀ( blockdiag( permute(x) ) ).
+    fn apply_factor(&self, x: &Mat, j: usize) -> Mat {
+        let perm = &self.perms[j];
+        let xp = permute_cols(x, perm);
+        let mut zp = Mat::zeros(x.rows, x.cols);
+        let mut off = 0;
+        for (bi, &b) in self.blocks.iter().enumerate() {
+            let xb = xp.cols_range(off, off + b);
+            let zb = matmul(&xb, &self.rots[j][bi]);
+            for t in 0..x.rows {
+                zp.row_mut(t)[off..off + b].copy_from_slice(zb.row(t));
+            }
+            off += b;
+        }
+        permute_cols(&zp, &invert_perm(perm))
+    }
+
+    /// Forward through all factors, returning every intermediate (the m
+    /// retained activations of the Appendix E accounting).
+    fn chain(&self, x: &Mat) -> Vec<Mat> {
+        let mut zs = Vec::with_capacity(self.m + 1);
+        zs.push(x.clone());
+        for j in 0..self.m {
+            let z = self.apply_factor(zs.last().unwrap(), j);
+            zs.push(z);
+        }
+        zs
+    }
+}
+
+impl Adapter for BoftAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Boft
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w0.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.theta.clone()
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.theta.len());
+        self.theta.copy_from_slice(p);
+        self.recompute_rotations();
+    }
+
+    fn materialize(&self) -> Mat {
+        // W_eff = R W₀ where x·R is the factor chain: feed the identity.
+        let eye = Mat::eye(self.w0.rows);
+        let r = self.chain(&eye).pop().unwrap(); // rows are xᵀ·R for unit x ⇒ R itself? (I·R = R)
+        matmul(&r, &self.w0)
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        let z = self.chain(x).pop().unwrap();
+        matmul(&z, &self.w0)
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        let zs = self.chain(x);
+        // dz_m = dy · W₀ᵀ.
+        let mut dz = matmul_nt(dy, &self.w0);
+        let per = self.per_factor_params();
+        let mut d_params = vec![0.0f32; self.theta.len()];
+        // Walk factors backwards.
+        for j in (0..self.m).rev() {
+            let perm = &self.perms[j];
+            let z_in = &zs[j];
+            let zp = permute_cols(z_in, perm);
+            let dzp = permute_cols(&dz, perm);
+            let mut dz_prev_p = Mat::zeros(dz.rows, dz.cols);
+            let mut off_c = 0;
+            let mut off_t = j * per;
+            for (bi, &b) in self.blocks.iter().enumerate() {
+                let xb = zp.cols_range(off_c, off_c + b);
+                let dzb = dzp.cols_range(off_c, off_c + b);
+                let dr: DMat = matmul_tn(&xb, &dzb).cast();
+                let np = skew_param_count(b);
+                let params: Vec<f64> = self.theta[off_t..off_t + np].iter().map(|&v| v as f64).collect();
+                let q = skew_from_params(b, &params);
+                let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
+                for (a, g) in skew_param_grad(&dq).iter().enumerate() {
+                    d_params[off_t + a] += *g as f32;
+                }
+                let dxb = matmul_nt(&dzb, &self.rots[j][bi]);
+                for t in 0..dz.rows {
+                    dz_prev_p.row_mut(t)[off_c..off_c + b].copy_from_slice(dxb.row(t));
+                }
+                off_c += b;
+                off_t += np;
+            }
+            dz = permute_cols(&dz_prev_p, &invert_perm(perm));
+        }
+        AdapterGrads { d_params, dx: dz }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // m chained intermediates of width d — the BOFT memory blow-up
+        // (Appendix E: +4·m·bsh).
+        self.m * self.w0.rows
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        self.w0.data.clone()
+    }
+
+    fn orth_defect(&self) -> Option<f64> {
+        let mut acc = 0.0;
+        for factor in &self.rots {
+            for r in factor {
+                let rd: DMat = r.cast();
+                let d = crate::linalg::orthogonality_defect(&rd);
+                acc += d * d;
+            }
+        }
+        Some(acc.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn riffle_is_permutation() {
+        for d in [4usize, 7, 16, 12] {
+            let p = riffle(d);
+            let mut seen = vec![false; d];
+            for &i in &p {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn identity_init_starts_at_pretrained() {
+        let mut rng = Rng::new(131);
+        let w = Mat::randn(16, 10, 0.2, &mut rng);
+        let a = BoftAdapter::new(&w, 4, 2, 5);
+        assert!(a.materialize().dist(&w) < 1e-6);
+    }
+
+    #[test]
+    fn param_count_matches_table8() {
+        let mut rng = Rng::new(132);
+        let w = Mat::randn(16, 8, 0.2, &mut rng);
+        let a = BoftAdapter::new(&w, 4, 2, 5);
+        // m × (d/b) × b(b−1)/2 = 2 × 4 × 6 = 48
+        assert_eq!(a.num_params(), 48);
+    }
+
+    #[test]
+    fn gradcheck_boft() {
+        let mut rng = Rng::new(133);
+        let w = Mat::randn(8, 6, 0.3, &mut rng);
+        let mut a = BoftAdapter::new(&w, 2, 3, 5);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(4, 8, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn factors_mix_across_blocks() {
+        // With m=2 factors and the riffle permutation, coordinates from
+        // different b-blocks interact — the expressiveness BOFT adds over
+        // block-diagonal OFT. Verify the effective R is NOT block-diagonal.
+        let mut rng = Rng::new(134);
+        let w = Mat::eye(8);
+        let mut a = BoftAdapter::new(&w, 2, 3, 8);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v = 0.3 + 0.1 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let r = a.materialize(); // = R for W₀ = I
+        let mut off_block_energy = 0.0f64;
+        for i in 0..8 {
+            for j in 0..8 {
+                if i / 2 != j / 2 {
+                    off_block_energy += (r[(i, j)] as f64).powi(2);
+                }
+            }
+        }
+        assert!(off_block_energy > 1e-3, "butterfly factors failed to mix: {off_block_energy}");
+    }
+
+    #[test]
+    fn orthogonality_near_exact_with_many_terms() {
+        let mut rng = Rng::new(135);
+        let w = Mat::randn(8, 5, 0.2, &mut rng);
+        let mut a = BoftAdapter::new(&w, 4, 2, 12);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        assert!(a.orth_defect().unwrap() < 1e-6);
+        // Column norms of W_eff match W₀ (isometry).
+        let w_eff = a.materialize();
+        for j in 0..5 {
+            assert!((w_eff.col_norm(j) - w.col_norm(j)).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Shared SVD-based weight decomposition used by the principal-subspace
+//! methods (PSOFT, PiSSA, LoRA-XS, SVFT).
+//!
+//! Splits `W_pre = W_pri + W_res` with `W_pri` the rank-r principal part
+//! (paper Eqs. 3–4/6). Uses the exact Jacobi SVD by default, or the
+//! randomized SVD with `n_iter` power iterations when configured (paper
+//! Table 16).
+
+use crate::linalg::{rsvd, svd, DMat, Mat, Svd};
+use crate::util::rng::Rng;
+
+/// Rank-r principal/residual split of a pre-trained weight.
+pub struct Split {
+    /// U[:, :r] — orthonormal columns (d×r).
+    pub u: DMat,
+    /// Top singular values (r).
+    pub s: Vec<f64>,
+    /// Vᵀ[:r, :] — orthonormal rows (r×n).
+    pub vt: DMat,
+    /// W_res = W_pre − U Σ Vᵀ (d×n).
+    pub w_res: DMat,
+}
+
+/// Compute the split. `n_iter = None` ⇒ exact SVD; `Some(k)` ⇒ randomized
+/// SVD with k power iterations (oversampling 10, Halko defaults).
+pub fn principal_split(w_pre: &Mat, r: usize, n_iter: Option<usize>, rng: &mut Rng) -> Split {
+    let wd: DMat = w_pre.cast();
+    let k_max = wd.rows.min(wd.cols);
+    assert!(r >= 1 && r <= k_max, "rank {r} out of range for {}x{}", wd.rows, wd.cols);
+
+    let dec: Svd = match n_iter {
+        None => {
+            let full = svd(&wd);
+            Svd { u: full.u.cols_range(0, r), s: full.s[..r].to_vec(), vt: full.vt.rows_range(0, r) }
+        }
+        Some(it) => rsvd(&wd, r, it, 10, rng),
+    };
+
+    // W_res = W_pre − U_r Σ_r Vᵀ_r.
+    let w_pri = dec.reconstruct(r);
+    let w_res = wd.sub(&w_pri);
+    Split { u: dec.u, s: dec.s, vt: dec.vt, w_res }
+}
+
+impl Split {
+    /// PiSSA/Eq. 3 symmetric factors: A = U√Σ (d×r), B = √Σ Vᵀ (r×n).
+    pub fn symmetric_factors(&self) -> (Mat, Mat) {
+        let sqrt_s: Vec<f64> = self.s.iter().map(|&x| x.sqrt()).collect();
+        let a = self.u.scale_cols(&sqrt_s).cast();
+        let b = self.vt.scale_rows(&sqrt_s).cast();
+        (a, b)
+    }
+
+    /// PSOFT/Eq. 6 asymmetric factors: A' = U (d×r), B' = Σ Vᵀ (r×n).
+    pub fn asymmetric_factors(&self) -> (Mat, Mat) {
+        let a = self.u.cast();
+        let b = self.vt.scale_rows(&self.s).cast();
+        (a, b)
+    }
+
+    /// Table 7 "B_orth" variant: A = UΣ (d×r), B = Vᵀ (r×n).
+    pub fn b_orth_factors(&self) -> (Mat, Mat) {
+        let a = self.u.scale_cols(&self.s).cast();
+        let b = self.vt.cast();
+        (a, b)
+    }
+
+    pub fn w_res_f32(&self) -> Mat {
+        self.w_res.cast()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    fn pretrained(d: usize, n: usize, rng: &mut Rng) -> Mat {
+        // Decaying spectrum, like a real pre-trained weight.
+        Mat::randn(d, n, 0.05, rng)
+    }
+
+    #[test]
+    fn split_reconstructs_w_pre() {
+        let mut rng = Rng::new(51);
+        let w = pretrained(24, 16, &mut rng);
+        for factors in ["sym", "asym", "borth"] {
+            let split = principal_split(&w, 6, None, &mut rng);
+            let (a, b) = match factors {
+                "sym" => split.symmetric_factors(),
+                "asym" => split.asymmetric_factors(),
+                _ => split.b_orth_factors(),
+            };
+            let w_rebuilt = matmul(&a, &b).add(&split.w_res_f32());
+            assert!(w_rebuilt.dist(&w) < 1e-4, "{factors}: dist {}", w_rebuilt.dist(&w));
+        }
+    }
+
+    #[test]
+    fn asymmetric_a_is_orthonormal() {
+        let mut rng = Rng::new(52);
+        let w = pretrained(32, 20, &mut rng);
+        let split = principal_split(&w, 8, None, &mut rng);
+        let (a, _) = split.asymmetric_factors();
+        // AᵀA = I_r.
+        let ad: DMat = a.cast();
+        let gram = crate::linalg::matmul_tn(&ad, &ad);
+        assert!(gram.dist(&DMat::eye(8)) < 1e-5);
+    }
+
+    #[test]
+    fn randomized_split_close_to_exact() {
+        let mut rng = Rng::new(53);
+        let w = pretrained(40, 30, &mut rng);
+        let exact = principal_split(&w, 4, None, &mut rng);
+        let fast = principal_split(&w, 4, Some(10), &mut rng);
+        for k in 0..4 {
+            let rel = (exact.s[k] - fast.s[k]).abs() / exact.s[k];
+            assert!(rel < 1e-3, "sigma_{k}: {} vs {}", exact.s[k], fast.s[k]);
+        }
+        assert!(exact.w_res.dist(&fast.w_res) < 1e-2 * exact.w_res.frobenius_norm().max(1.0));
+    }
+
+    #[test]
+    fn residual_orthogonal_to_principal() {
+        // U_rᵀ W_res ≈ 0 (residual lives in the complementary subspace).
+        let mut rng = Rng::new(54);
+        let w = pretrained(30, 30, &mut rng);
+        let split = principal_split(&w, 5, None, &mut rng);
+        let proj = crate::linalg::matmul_tn(&split.u, &split.w_res);
+        assert!(proj.max_abs() < 1e-8, "max {}", proj.max_abs());
+    }
+}

@@ -1,0 +1,200 @@
+//! DoRA (Liu et al. 2024): weight-decomposed low-rank adaptation.
+//!
+//! `W_eff[:,j] = m_j · V[:,j] / ‖V[:,j]‖` with `V = W₀ + A·B`. Trainable:
+//! A (d×r), B (r×n), and the magnitude vector m (n) — initialized to the
+//! column norms of W₀ so training starts at W_pre. The column-norm
+//! computation is exactly the extra activation/compute the paper charges
+//! DoRA for (Tables 2–5: highest memory of the LoRA family).
+
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{matmul, matmul_acc, matmul_nt, matmul_tn, Mat};
+use crate::util::rng::Rng;
+
+pub struct DoraAdapter {
+    w0: Mat,
+    a: Mat,
+    b: Mat,
+    m: Vec<f32>,
+    rank: usize,
+}
+
+impl DoraAdapter {
+    pub fn new(w_pre: &Mat, rank: usize, rng: &mut Rng) -> Self {
+        let (d, n) = w_pre.shape();
+        assert!(rank >= 1 && rank <= d.min(n));
+        let a = Mat::kaiming_uniform(d, rank, d, rng);
+        let b = Mat::zeros(rank, n);
+        let m: Vec<f32> = (0..n).map(|j| w_pre.col_norm(j) as f32).collect();
+        Self { w0: w_pre.clone(), a, b, m, rank }
+    }
+
+    /// V = W₀ + AB and its column norms.
+    fn direction(&self) -> (Mat, Vec<f32>) {
+        let mut v = self.w0.clone();
+        matmul_acc(&self.a, &self.b, &mut v);
+        let norms: Vec<f32> = (0..v.cols).map(|j| (v.col_norm(j) as f32).max(1e-12)).collect();
+        (v, norms)
+    }
+}
+
+impl Adapter for DoraAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Dora
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w0.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.a.data.len() + self.b.data.len() + self.m.len()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        let mut p = self.a.data.clone();
+        p.extend_from_slice(&self.b.data);
+        p.extend_from_slice(&self.m);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        let na = self.a.data.len();
+        let nb = self.b.data.len();
+        assert_eq!(p.len(), na + nb + self.m.len());
+        self.a.data.copy_from_slice(&p[..na]);
+        self.b.data.copy_from_slice(&p[na..na + nb]);
+        self.m.copy_from_slice(&p[na + nb..]);
+    }
+
+    fn materialize(&self) -> Mat {
+        let (v, norms) = self.direction();
+        let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();
+        v.scale_cols(&scale)
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        // y = (x V) ⊙ (m/‖V‖) — needs the full V column norms each step,
+        // DoRA's overhead.
+        let (v, norms) = self.direction();
+        let mut y = matmul(x, &self.w0);
+        let xa = matmul(x, &self.a);
+        matmul_acc(&xa, &self.b, &mut y); // y = x V
+        let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();
+        let _ = v;
+        y.scale_cols(&scale)
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        let (v, norms) = self.direction();
+        let n = v.cols;
+
+        // z = x V (pre-scale output).
+        let mut z = matmul(x, &self.w0);
+        let xa = matmul(x, &self.a);
+        matmul_acc(&xa, &self.b, &mut z);
+
+        // dm_j = Σ_t dy[t,j]·z[t,j]/c_j.
+        let mut dm = vec![0.0f32; n];
+        for t in 0..dy.rows {
+            let dyr = dy.row(t);
+            let zr = z.row(t);
+            for j in 0..n {
+                dm[j] += dyr[j] * zr[j] / norms[j];
+            }
+        }
+
+        // dz = dy ⊙ (m/c); and the norm term: the scale s_j = m_j/c_j
+        // depends on V through c_j = ‖V[:,j]‖:
+        //   dL/dV[:,j] = (xᵀ dz)[:,j]  −  m_j/c_j² · (Σ_t dy[t,j] z[t,j]) · V[:,j]/c_j
+        let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();
+        let dz = dy.scale_cols(&scale);
+        let mut dv = matmul_tn(x, &dz); // d×n
+        // Per-column correction.
+        let mut col_dot = vec![0.0f32; n]; // Σ_t dy[t,j]·z[t,j]
+        for t in 0..dy.rows {
+            let dyr = dy.row(t);
+            let zr = z.row(t);
+            for j in 0..n {
+                col_dot[j] += dyr[j] * zr[j];
+            }
+        }
+        for j in 0..n {
+            let corr = self.m[j] * col_dot[j] / (norms[j] * norms[j] * norms[j]);
+            for i in 0..dv.rows {
+                let vij = v[(i, j)];
+                dv[(i, j)] -= corr * vij;
+            }
+        }
+
+        // Chain into A, B and x: V = W₀ + AB.
+        let da = matmul_nt(&dv, &self.b); // dV Bᵀ: d×r
+        let db = matmul_tn(&self.a, &dv); // Aᵀ dV: r×n
+        // dx = dz Vᵀ (x enters only through z = x V).
+        let dx = matmul_nt(&dz, &v);
+
+        let mut d_params = da.data;
+        d_params.extend_from_slice(&db.data);
+        d_params.extend_from_slice(&dm);
+        AdapterGrads { d_params, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // LoRA's r plus the pre-scale output z (n ≈ h) retained for the
+        // norm backward — Appendix E: +4bsr + 4bsh over LoRA.
+        self.rank + self.w0.cols
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        self.w0.data.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+
+    #[test]
+    fn starts_at_pretrained() {
+        let mut rng = Rng::new(111);
+        let w = Mat::randn(12, 9, 0.2, &mut rng);
+        let a = DoraAdapter::new(&w, 4, &mut rng);
+        assert!(a.materialize().dist(&w) < 1e-5, "dist {}", a.materialize().dist(&w));
+    }
+
+    #[test]
+    fn param_count_matches_table8() {
+        let mut rng = Rng::new(112);
+        let w = Mat::randn(16, 10, 0.2, &mut rng);
+        let a = DoraAdapter::new(&w, 4, &mut rng);
+        assert_eq!(a.num_params(), 16 * 4 + 4 * 10 + 10);
+    }
+
+    #[test]
+    fn gradcheck_dora() {
+        let mut rng = Rng::new(113);
+        let w = Mat::randn(10, 7, 0.3, &mut rng);
+        let mut a = DoraAdapter::new(&w, 3, &mut rng);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.02 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(5, 10, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 3e-2, &mut rng);
+    }
+
+    #[test]
+    fn magnitude_controls_column_norms() {
+        let mut rng = Rng::new(114);
+        let w = Mat::randn(10, 6, 0.3, &mut rng);
+        let mut a = DoraAdapter::new(&w, 2, &mut rng);
+        let mut p = a.params();
+        let m_off = 10 * 2 + 2 * 6;
+        p[m_off] = 2.0; // set m_0 = 2
+        a.set_params(&p);
+        let w_eff = a.materialize();
+        assert!((w_eff.col_norm(0) - 2.0).abs() < 1e-5);
+    }
+}

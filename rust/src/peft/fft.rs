@@ -1,0 +1,87 @@
+//! Full fine-tuning (FFT) baseline: every weight entry is trainable.
+//! This is the paper's upper-bound-cost baseline (Howard & Ruder 2018).
+
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+
+pub struct FftAdapter {
+    w: Mat,
+}
+
+impl FftAdapter {
+    pub fn new(w_pre: &Mat) -> Self {
+        Self { w: w_pre.clone() }
+    }
+}
+
+impl Adapter for FftAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Fft
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.w.rows * self.w.cols
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.w.data.clone()
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.w.data.len());
+        self.w.data.copy_from_slice(p);
+    }
+
+    fn materialize(&self) -> Mat {
+        self.w.clone()
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        matmul(x, &self.w)
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        // dW = xᵀ dy; dx = dy Wᵀ.
+        let dw = matmul_tn(x, dy);
+        let dx = matmul_nt(dy, &self.w);
+        AdapterGrads { d_params: dw.data, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        0 // only the module input, which the base accounting already counts
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gradients_match_numerical() {
+        let mut rng = Rng::new(61);
+        let w = Mat::randn(10, 6, 0.2, &mut rng);
+        let mut a = FftAdapter::new(&w);
+        let x = Mat::randn(4, 10, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn starts_at_pretrained() {
+        let mut rng = Rng::new(62);
+        let w = Mat::randn(8, 8, 0.2, &mut rng);
+        let a = FftAdapter::new(&w);
+        assert_eq!(a.materialize(), w);
+        assert_eq!(a.num_params(), 64);
+    }
+}

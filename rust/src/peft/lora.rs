@@ -1,0 +1,169 @@
+//! LoRA (Hu et al. 2022) and PiSSA (Meng et al. 2024).
+//!
+//! `W_eff = W₀ + A·B` with trainable `A (d×r)`, `B (r×n)`.
+//! - LoRA init: A ~ Kaiming-uniform, B = 0 (training starts at W_pre).
+//! - PiSSA init: A, B from the symmetric √Σ split of the principal
+//!   subspace, W₀ = W_res — identical start point, faster convergence.
+
+use super::decomp::principal_split;
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{matmul, matmul_acc, matmul_nt, matmul_tn, Mat};
+use crate::util::rng::Rng;
+
+pub struct LoraAdapter {
+    /// Frozen base (W_pre for LoRA; W_res for PiSSA).
+    w0: Mat,
+    a: Mat,
+    b: Mat,
+    pissa: bool,
+    rank: usize,
+}
+
+impl LoraAdapter {
+    pub fn new(w_pre: &Mat, rank: usize, pissa: bool, rng: &mut Rng) -> Self {
+        let (d, n) = w_pre.shape();
+        assert!(rank >= 1 && rank <= d.min(n), "rank {rank} out of range for {d}x{n}");
+        if pissa {
+            let split = principal_split(w_pre, rank, None, rng);
+            let (a, b) = split.symmetric_factors();
+            Self { w0: split.w_res_f32(), a, b, pissa, rank }
+        } else {
+            let a = Mat::kaiming_uniform(d, rank, d, rng);
+            let b = Mat::zeros(rank, n);
+            Self { w0: w_pre.clone(), a, b, pissa, rank }
+        }
+    }
+}
+
+impl Adapter for LoraAdapter {
+    fn kind(&self) -> MethodKind {
+        if self.pissa {
+            MethodKind::Pissa
+        } else {
+            MethodKind::Lora
+        }
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w0.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.a.data.len() + self.b.data.len()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        let mut p = self.a.data.clone();
+        p.extend_from_slice(&self.b.data);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        let na = self.a.data.len();
+        assert_eq!(p.len(), na + self.b.data.len());
+        self.a.data.copy_from_slice(&p[..na]);
+        self.b.data.copy_from_slice(&p[na..]);
+    }
+
+    fn materialize(&self) -> Mat {
+        let mut w = self.w0.clone();
+        matmul_acc(&self.a, &self.b, &mut w);
+        w
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        // y = x W₀ + (x A) B — the r-dim intermediate is the LoRA hot path.
+        let mut y = matmul(x, &self.w0);
+        let xa = matmul(x, &self.a);
+        matmul_acc(&xa, &self.b, &mut y);
+        y
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        // dA = xᵀ (dy Bᵀ); dB = (x A)ᵀ dy; dx = dy W₀ᵀ + (dy Bᵀ) Aᵀ.
+        let dy_bt = matmul_nt(dy, &self.b); // [T, r]
+        let da = matmul_tn(x, &dy_bt);
+        let xa = matmul(x, &self.a);
+        let db = matmul_tn(&xa, dy);
+        let mut dx = matmul_nt(dy, &self.w0);
+        let dx_lora = matmul_nt(&dy_bt, &self.a); // (dy Bᵀ) Aᵀ
+        dx.add_assign(&dx_lora);
+        let mut d_params = da.data;
+        d_params.extend_from_slice(&db.data);
+        AdapterGrads { d_params, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // The r-dim intermediate xA is retained for dB (Appendix E: +bsr).
+        self.rank
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        self.w0.data.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+
+    #[test]
+    fn lora_starts_at_pretrained() {
+        let mut rng = Rng::new(71);
+        let w = Mat::randn(12, 8, 0.2, &mut rng);
+        let a = LoraAdapter::new(&w, 4, false, &mut rng);
+        assert!(a.materialize().dist(&w) < 1e-6);
+    }
+
+    #[test]
+    fn pissa_starts_at_pretrained() {
+        let mut rng = Rng::new(72);
+        let w = Mat::randn(12, 8, 0.2, &mut rng);
+        let a = LoraAdapter::new(&w, 4, true, &mut rng);
+        assert!(a.materialize().dist(&w) < 1e-4, "dist {}", a.materialize().dist(&w));
+    }
+
+    #[test]
+    fn param_count_matches_table8() {
+        let mut rng = Rng::new(73);
+        let w = Mat::randn(16, 10, 0.2, &mut rng);
+        let a = LoraAdapter::new(&w, 4, false, &mut rng);
+        assert_eq!(a.num_params(), 16 * 4 + 4 * 10);
+    }
+
+    #[test]
+    fn lora_gradcheck() {
+        let mut rng = Rng::new(74);
+        let w = Mat::randn(10, 7, 0.2, &mut rng);
+        let mut a = LoraAdapter::new(&w, 3, false, &mut rng);
+        // Move B off zero so dA is nontrivial.
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.01;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(5, 10, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn pissa_gradcheck() {
+        let mut rng = Rng::new(75);
+        let w = Mat::randn(9, 11, 0.2, &mut rng);
+        let mut a = LoraAdapter::new(&w, 3, true, &mut rng);
+        let x = Mat::randn(4, 9, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn roundtrip_params() {
+        let mut rng = Rng::new(76);
+        let w = Mat::randn(8, 8, 0.2, &mut rng);
+        let mut a = LoraAdapter::new(&w, 2, false, &mut rng);
+        let p = a.params();
+        a.set_params(&p);
+        assert_eq!(a.params(), p);
+    }
+}

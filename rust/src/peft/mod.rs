@@ -1,0 +1,211 @@
+//! PEFT method registry — the paper's full baseline zoo plus PSOFT.
+//!
+//! Every method is an [`Adapter`] attached to one frozen linear layer
+//! `W_pre ∈ R^{d×n}` (the paper's convention `h = Wᵀx`; in the row-vector
+//! form used throughout this crate, `y = x @ W_eff` with `x: [tokens, d]`).
+//!
+//! An adapter owns its frozen tensors (e.g. `W_res`, `A'`, `B'`) and its
+//! trainable parameter vector, implements a *structured* forward (no d×n
+//! materialization on the hot path — this is PSOFT's efficiency claim), an
+//! analytic backward (verified against numerical gradients in the test
+//! suite), and reports parameter counts and the activation floats it must
+//! retain for backprop (the Appendix E accounting).
+
+pub mod boft;
+pub mod decomp;
+pub mod dora;
+pub mod fft;
+pub mod goft;
+pub mod lora;
+pub mod lora_xs;
+pub mod oft;
+pub mod psoft;
+pub mod svft;
+pub mod vera;
+
+use crate::config::{MethodKind, PeftConfig};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Gradients produced by one adapter backward pass.
+pub struct AdapterGrads {
+    /// dL/dθ for the adapter's trainable parameters, flattened in the same
+    /// order as [`Adapter::params`].
+    pub d_params: Vec<f32>,
+    /// dL/dx, propagated to the previous layer.
+    pub dx: Mat,
+}
+
+/// One PEFT adapter instance on a single linear layer.
+pub trait Adapter: Send {
+    fn kind(&self) -> MethodKind;
+
+    /// (input dim d, output dim n) of the wrapped layer.
+    fn shape(&self) -> (usize, usize);
+
+    /// Number of trainable parameters.
+    fn num_params(&self) -> usize;
+
+    /// Flatten trainable parameters (optimizer/artifact order).
+    fn params(&self) -> Vec<f32>;
+
+    /// Load trainable parameters from a flat slice.
+    fn set_params(&mut self, p: &[f32]);
+
+    /// Effective weight `W_eff ∈ R^{d×n}` with adapters merged — used at
+    /// deployment/merge time and by tests, never on the training hot path.
+    fn materialize(&self) -> Mat;
+
+    /// Structured forward: `y = x @ W_eff`, `x: [T, d] → y: [T, n]`.
+    fn forward(&self, x: &Mat) -> Mat;
+
+    /// Analytic backward: given `x` and `dL/dy`, produce parameter grads and
+    /// `dL/dx`.
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads;
+
+    /// Activation floats retained per token for backward, *beyond* the
+    /// module input/output themselves (Appendix E accounting; e.g. LoRA
+    /// stores the r-dim intermediate ⇒ r).
+    fn act_floats_per_token(&self) -> usize;
+
+    /// Frozen tensors flattened in the **interchange order** defined by
+    /// `python/compile/peft_jax.py::frozen_specs` — concatenated into the
+    /// `frozen` buffer the compiled HLO artifacts consume. Per method:
+    /// fft → []; lora/dora/oft/boft/goft → [W₀]; pissa → [W_res];
+    /// lora_xs → [W_res, A, B]; vera → [W₀, A_f, B_f];
+    /// svft → [U, σ, Vᵀ]; psoft → [W_res, A', B'].
+    fn frozen(&self) -> Vec<f32>;
+
+    /// Orthogonality defect ‖CᵀC − I‖_F of the method's transform, when the
+    /// method has one (PSOFT/OFT family; Table 6 / §4.3).
+    fn orth_defect(&self) -> Option<f64> {
+        None
+    }
+
+    /// dL/dθ contribution of a `γ·‖RᵀR − I‖_F²` regularizer, if the method
+    /// supports one (Table 6 ablation). Zeros by default.
+    fn orth_reg_grad(&self, _gamma: f64) -> Vec<f32> {
+        vec![0.0; self.num_params()]
+    }
+}
+
+/// Construct an adapter for `cfg.method` on a layer with pre-trained weight
+/// `w_pre` (d×n). `rng` drives any random init (LoRA-A, VeRA projections).
+pub fn build_adapter(cfg: &PeftConfig, w_pre: &Mat, rng: &mut Rng) -> Box<dyn Adapter> {
+    match cfg.method {
+        MethodKind::Fft => Box::new(fft::FftAdapter::new(w_pre)),
+        MethodKind::Lora => Box::new(lora::LoraAdapter::new(w_pre, cfg.rank, false, rng)),
+        MethodKind::Pissa => Box::new(lora::LoraAdapter::new(w_pre, cfg.rank, true, rng)),
+        MethodKind::Dora => Box::new(dora::DoraAdapter::new(w_pre, cfg.rank, rng)),
+        MethodKind::LoraXs => Box::new(lora_xs::LoraXsAdapter::new(w_pre, cfg.rank)),
+        MethodKind::Vera => Box::new(vera::VeraAdapter::new(w_pre, cfg.rank, rng)),
+        MethodKind::OftV2 => Box::new(oft::OftAdapter::new(w_pre, cfg.oft_block_size, cfg.neumann_terms)),
+        MethodKind::Boft => Box::new(boft::BoftAdapter::new(w_pre, cfg.boft_b, cfg.boft_m, cfg.neumann_terms)),
+        MethodKind::Goft => Box::new(goft::GoftAdapter::new(w_pre, false)),
+        MethodKind::QGoft => Box::new(goft::GoftAdapter::new(w_pre, true)),
+        MethodKind::Svft => Box::new(svft::SvftAdapter::new(w_pre)),
+        MethodKind::Psoft => Box::new(psoft::PsoftAdapter::new(w_pre, cfg, rng)),
+    }
+}
+
+/// Closed-form trainable-parameter count per linear layer (paper Table 8),
+/// asserted against the actual adapters in tests and used by the parameter
+/// accounting when projecting to paper-scale models.
+pub fn closed_form_params(cfg: &PeftConfig, d: usize, n: usize) -> usize {
+    let r = cfg.rank;
+    let d_min = d.min(n);
+    match cfg.method {
+        MethodKind::Fft => d * n,
+        MethodKind::Lora | MethodKind::Pissa => d * r + r * n,
+        MethodKind::Dora => d * r + r * n + n,
+        MethodKind::Vera => r + n,
+        MethodKind::LoraXs => r * r,
+        // OFT (block-diagonal, Cayley): (d/b) blocks × b(b−1)/2 skew params.
+        MethodKind::OftV2 => {
+            let b = cfg.oft_block_size.min(d);
+            (d / b) * (b * (b - 1) / 2)
+        }
+        // BOFT: m factors × (d/b) blocks × b(b−1)/2 skew params.
+        MethodKind::Boft => {
+            let b = cfg.boft_b.min(d);
+            cfg.boft_m * (d / b) * (b * (b - 1) / 2)
+        }
+        // GOFT: log2(d) stages × d/2 rotation angles.
+        MethodKind::Goft => d.ilog2() as usize * (d / 2),
+        // qGOFT: 4 params per Givens pair (general 2×2 blocks).
+        MethodKind::QGoft => d.ilog2() as usize * (d / 2) * 4,
+        // SVFT_P (plain diagonal).
+        MethodKind::Svft => d_min,
+        // PSOFT: skew params + two tunable vectors (§4.3).
+        MethodKind::Psoft => {
+            let mut p = r * (r - 1) / 2;
+            if cfg.use_alpha {
+                p += r;
+            }
+            if cfg.use_beta {
+                p += r;
+            }
+            p
+        }
+    }
+}
+
+/// Numerical gradient check shared by the per-method tests: compares
+/// `backward` against central differences of `L = Σ W ⊙ forward(x)`, and
+/// checks the structured forward against `x @ materialize()`.
+#[cfg(test)]
+pub(crate) fn gradcheck(adapter: &mut dyn Adapter, x: &Mat, tol: f64, rng: &mut Rng) {
+    let y = adapter.forward(x);
+    let w = Mat::randn(y.rows, y.cols, 1.0, rng);
+    let loss = |a: &dyn Adapter, xx: &Mat| -> f64 {
+        a.forward(xx).data.iter().zip(&w.data).map(|(&u, &v)| (u as f64) * (v as f64)).sum()
+    };
+
+    let grads = adapter.backward(x, &w);
+    assert_eq!(grads.d_params.len(), adapter.num_params(), "d_params length");
+    assert_eq!(grads.dx.shape(), x.shape(), "dx shape");
+
+    // Parameter gradients (strided subset for speed).
+    let base = adapter.params();
+    let eps = 1e-3f32;
+    let stride = (base.len() / 40).max(1);
+    for idx in (0..base.len()).step_by(stride) {
+        let mut p = base.clone();
+        p[idx] += eps;
+        adapter.set_params(&p);
+        let lp = loss(adapter, x);
+        p[idx] -= 2.0 * eps;
+        adapter.set_params(&p);
+        let lm = loss(adapter, x);
+        let numeric = (lp - lm) / (2.0 * eps as f64);
+        let analytic = grads.d_params[idx] as f64;
+        assert!(
+            (analytic - numeric).abs() <= tol * (1.0 + numeric.abs()),
+            "param {idx}: analytic {analytic} vs numeric {numeric}"
+        );
+    }
+    adapter.set_params(&base);
+
+    // Input gradients (strided subset).
+    let sx = (x.data.len() / 20).max(1);
+    for idx in (0..x.data.len()).step_by(sx) {
+        let mut x2 = x.clone();
+        x2.data[idx] += eps;
+        let lp = loss(adapter, &x2);
+        x2.data[idx] -= 2.0 * eps;
+        let lm = loss(adapter, &x2);
+        let numeric = (lp - lm) / (2.0 * eps as f64);
+        let analytic = grads.dx.data[idx] as f64;
+        assert!(
+            (analytic - numeric).abs() <= tol * (1.0 + numeric.abs()),
+            "dx[{idx}]: analytic {analytic} vs numeric {numeric}"
+        );
+    }
+
+    // Structured forward consistency with the merged weight.
+    let merged = adapter.materialize();
+    assert_eq!(merged.shape(), adapter.shape(), "materialize shape");
+    let y_merged = crate::linalg::matmul(x, &merged);
+    let d = y.dist(&y_merged);
+    assert!(d < 1e-3 * (1.0 + y.frobenius_norm()), "forward vs materialize: dist {d}");
+}

@@ -1,0 +1,248 @@
+//! OFTv2 (Qiu et al. 2023; 2025): block-diagonal orthogonal fine-tuning with
+//! the Cayley–Neumann parameterization and input-centric computation.
+//!
+//! `W_eff = R·W₀` with `R = diag(R_1 … R_{d/b})`, each `R_i ∈ O(b)` built
+//! from skew parameters via the truncated-Neumann Cayley transform. The
+//! input-centric forward computes `y = (x·R)·W₀`, rotating activations
+//! instead of materializing `R·W₀` — the OFTv2 trick this paper adopts.
+
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{
+    cayley_neumann, cayley_neumann_backward, matmul, matmul_nt, orthogonality_defect,
+    skew_from_params, skew_param_count, skew_param_grad, DMat, Mat,
+};
+
+pub struct OftAdapter {
+    w0: Mat,
+    /// Block sizes (all `b` except possibly a smaller last block when b∤d).
+    blocks: Vec<usize>,
+    /// Skew parameters, concatenated block by block.
+    theta: Vec<f32>,
+    /// Cached per-block rotations (recomputed on set_params).
+    rots: Vec<Mat>,
+    neumann_terms: usize,
+}
+
+/// Partition dimension `d` into blocks of size `b` (last block may be
+/// smaller).
+pub fn block_partition(d: usize, b: usize) -> Vec<usize> {
+    let b = b.max(2).min(d);
+    let mut blocks = vec![b; d / b];
+    if d % b != 0 {
+        blocks.push(d % b);
+    }
+    blocks
+}
+
+impl OftAdapter {
+    pub fn new(w_pre: &Mat, block_size: usize, neumann_terms: usize) -> Self {
+        let d = w_pre.rows;
+        let blocks = block_partition(d, block_size);
+        let n_theta: usize = blocks.iter().map(|&b| skew_param_count(b)).sum();
+        let mut adapter = Self {
+            w0: w_pre.clone(),
+            blocks,
+            theta: vec![0.0; n_theta],
+            rots: Vec::new(),
+            neumann_terms,
+        };
+        adapter.recompute_rotations();
+        adapter
+    }
+
+    fn recompute_rotations(&mut self) {
+        self.rots.clear();
+        let mut off = 0;
+        for &b in &self.blocks {
+            let np = skew_param_count(b);
+            let params: Vec<f64> = self.theta[off..off + np].iter().map(|&v| v as f64).collect();
+            let q = skew_from_params(b, &params);
+            let r = cayley_neumann(&q, self.neumann_terms);
+            self.rots.push(r.cast());
+            off += np;
+        }
+    }
+
+    /// Apply the block-diagonal rotation to activation columns: z = x·R.
+    fn rotate(&self, x: &Mat) -> Mat {
+        let mut z = Mat::zeros(x.rows, x.cols);
+        let mut off = 0;
+        for (bi, &b) in self.blocks.iter().enumerate() {
+            let xb = x.cols_range(off, off + b);
+            let zb = matmul(&xb, &self.rots[bi]);
+            for t in 0..x.rows {
+                z.row_mut(t)[off..off + b].copy_from_slice(zb.row(t));
+            }
+            off += b;
+        }
+        z
+    }
+}
+
+impl Adapter for OftAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::OftV2
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w0.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.theta.clone()
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.theta.len());
+        self.theta.copy_from_slice(p);
+        self.recompute_rotations();
+    }
+
+    fn materialize(&self) -> Mat {
+        // W_eff = Rᵀ? No: y = (x R) W₀ = x (R W₀) ⇒ W_eff = R W₀ with our
+        // row-vector x·R ≡ (Rᵀ x)ᵀ; consistency with forward is what tests
+        // assert. Compute block-row-wise: W_eff[blk,:] = R_kᵀ? — derive:
+        // (x R)[t, j] = Σ_i x[t,i] R[i,j]; y = Σ_j (xR)[t,j] W₀[j,:]
+        //            = x · (R W₀). So W_eff = R W₀.
+        let mut w = Mat::zeros(self.w0.rows, self.w0.cols);
+        let mut off = 0;
+        for (bi, &b) in self.blocks.iter().enumerate() {
+            let w_blk = self.w0.rows_range(off, off + b);
+            let rw = matmul(&self.rots[bi], &w_blk);
+            for i in 0..b {
+                w.row_mut(off + i).copy_from_slice(rw.row(i));
+            }
+            off += b;
+        }
+        w
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        // Input-centric: y = (x·R)·W₀.
+        let z = self.rotate(x);
+        matmul(&z, &self.w0)
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        // z = x·R; y = z·W₀. dz = dy·W₀ᵀ.
+        let dz = matmul_nt(dy, &self.w0);
+        let mut d_params = Vec::with_capacity(self.theta.len());
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        let mut off = 0;
+        for (bi, &b) in self.blocks.iter().enumerate() {
+            let xb = x.cols_range(off, off + b);
+            let dzb = dz.cols_range(off, off + b);
+            // dR_k = x_bᵀ dz_b.
+            let dr: DMat = crate::linalg::matmul_tn(&xb, &dzb).cast();
+            let np = skew_param_count(b);
+            let params: Vec<f64> = self.theta[off_theta(&self.blocks, bi)..off_theta(&self.blocks, bi) + np]
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let q = skew_from_params(b, &params);
+            let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
+            d_params.extend(skew_param_grad(&dq).iter().map(|&v| v as f32));
+            // dx_b = dz_b · R_kᵀ.
+            let dxb = matmul_nt(&dzb, &self.rots[bi]);
+            for t in 0..x.rows {
+                dx.row_mut(t)[off..off + b].copy_from_slice(dxb.row(t));
+            }
+            off += b;
+        }
+        AdapterGrads { d_params, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // The rotated input x·R (d floats) is retained — Appendix E: +4bsh.
+        self.w0.rows
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        self.w0.data.clone()
+    }
+
+    fn orth_defect(&self) -> Option<f64> {
+        let mut acc = 0.0;
+        for r in &self.rots {
+            let rd: DMat = r.cast();
+            let d = orthogonality_defect(&rd);
+            acc += d * d;
+        }
+        Some(acc.sqrt())
+    }
+}
+
+fn off_theta(blocks: &[usize], bi: usize) -> usize {
+    blocks[..bi].iter().map(|&b| skew_param_count(b)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_init_starts_at_pretrained() {
+        let mut rng = Rng::new(121);
+        let w = Mat::randn(16, 10, 0.2, &mut rng);
+        let a = OftAdapter::new(&w, 4, 5);
+        assert!(a.materialize().dist(&w) < 1e-6);
+    }
+
+    #[test]
+    fn param_count_matches_table8() {
+        let mut rng = Rng::new(122);
+        let w = Mat::randn(32, 12, 0.2, &mut rng);
+        let a = OftAdapter::new(&w, 8, 5);
+        assert_eq!(a.num_params(), (32 / 8) * (8 * 7 / 2));
+    }
+
+    #[test]
+    fn handles_non_divisible_blocks() {
+        let mut rng = Rng::new(123);
+        let w = Mat::randn(10, 6, 0.2, &mut rng);
+        let a = OftAdapter::new(&w, 4, 5); // blocks 4,4,2
+        assert_eq!(a.blocks, vec![4, 4, 2]);
+        assert!(a.materialize().dist(&w) < 1e-6);
+    }
+
+    #[test]
+    fn gradcheck_oft() {
+        let mut rng = Rng::new(124);
+        let w = Mat::randn(12, 8, 0.3, &mut rng);
+        let mut a = OftAdapter::new(&w, 4, 5);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(5, 12, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn preserves_hyperspherical_geometry() {
+        // With exact-enough Neumann (small θ), W_eff = R W₀ preserves
+        // pairwise column angles and norms of W₀ — OFT's core property.
+        let mut rng = Rng::new(125);
+        let w = Mat::randn(16, 6, 0.3, &mut rng);
+        let mut a = OftAdapter::new(&w, 16, 12);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.03 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let w_eff = a.materialize();
+        for j in 0..6 {
+            let n0 = w.col_norm(j);
+            let n1 = w_eff.col_norm(j);
+            assert!((n0 - n1).abs() < 1e-3 * n0, "col {j}: {n0} vs {n1}");
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! PSOFT — the paper's method (§4): orthogonal fine-tuning confined to the
+//! principal subspace of the pre-trained weight.
+//!
+//! Forward (Eq. 8):
+//!     y = x·W_res + (((x·A')·diag(α))·R)·diag(β)·B'
+//! with frozen `A' = U[:, :r]` (orthonormal), `B' = Σ·Vᵀ[:r, :]`,
+//! `W_res = W_pre − A'B'`, trainable skew parameters θ (via Cayley–Neumann,
+//! r(r−1)/2), and tunable vectors α, β (r each, §4.3's relaxation).
+//!
+//! Because `A'ᵀA' = I_r`, Theorem 4.1's condition `RᵀGR = G` reduces to
+//! `RᵀR = I`, which the Cayley parameterization enforces exactly (up to the
+//! Neumann truncation) — the geometry tests in `geometry/` verify the
+//! column-angle/norm preservation this buys.
+
+use super::decomp::principal_split;
+use super::{Adapter, AdapterGrads};
+use crate::config::{MethodKind, PeftConfig, PsoftInit};
+use crate::linalg::{
+    cayley_neumann, cayley_neumann_backward, matmul, matmul_nt, matmul_tn, orthogonality_defect,
+    skew_from_params, skew_param_count, skew_param_grad, DMat, Mat,
+};
+use crate::util::rng::Rng;
+
+pub struct PsoftAdapter {
+    /// Frozen residual W_res (d×n).
+    w_res: Mat,
+    /// Frozen projection A' (d×r) and reconstruction B' (r×n).
+    a: Mat,
+    b: Mat,
+    /// Skew parameters (r(r−1)/2).
+    theta: Vec<f32>,
+    /// Tunable vectors; empty when disabled (Fig 3 ablation).
+    alpha: Vec<f32>,
+    beta: Vec<f32>,
+    use_alpha: bool,
+    use_beta: bool,
+    /// Cached rotation R = CayleyNeumann(skew(θ)).
+    r_mat: Mat,
+    rank: usize,
+    neumann_terms: usize,
+}
+
+impl PsoftAdapter {
+    pub fn new(w_pre: &Mat, cfg: &PeftConfig, rng: &mut Rng) -> Self {
+        let r = cfg.rank;
+        let split = principal_split(w_pre, r, cfg.svd_n_iter, rng);
+        let (a, b) = match cfg.psoft_init {
+            PsoftInit::AOrth => split.asymmetric_factors(),
+            PsoftInit::BOrth => split.b_orth_factors(),
+            PsoftInit::Symmetric => split.symmetric_factors(),
+        };
+        let mut adapter = Self {
+            w_res: split.w_res_f32(),
+            a,
+            b,
+            theta: vec![0.0; skew_param_count(r)],
+            alpha: vec![1.0; if cfg.use_alpha { r } else { 0 }],
+            beta: vec![1.0; if cfg.use_beta { r } else { 0 }],
+            use_alpha: cfg.use_alpha,
+            use_beta: cfg.use_beta,
+            r_mat: Mat::eye(r),
+            rank: r,
+            neumann_terms: cfg.neumann_terms,
+        };
+        adapter.recompute_rotation();
+        adapter
+    }
+
+    fn recompute_rotation(&mut self) {
+        let params: Vec<f64> = self.theta.iter().map(|&v| v as f64).collect();
+        let q = skew_from_params(self.rank, &params);
+        self.r_mat = cayley_neumann(&q, self.neumann_terms).cast();
+    }
+
+    fn alpha_or_ones(&self) -> Vec<f32> {
+        if self.use_alpha {
+            self.alpha.clone()
+        } else {
+            vec![1.0; self.rank]
+        }
+    }
+
+    fn beta_or_ones(&self) -> Vec<f32> {
+        if self.use_beta {
+            self.beta.clone()
+        } else {
+            vec![1.0; self.rank]
+        }
+    }
+
+    /// The relaxed transform C = diag(α)·R·diag(β) (§4.3).
+    pub fn transform(&self) -> Mat {
+        self.r_mat.scale_rows(&self.alpha_or_ones()).scale_cols(&self.beta_or_ones())
+    }
+
+    /// Frozen factors (testing / geometry probes).
+    pub fn factors(&self) -> (&Mat, &Mat, &Mat) {
+        (&self.a, &self.b, &self.w_res)
+    }
+}
+
+impl Adapter for PsoftAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Psoft
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w_res.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.theta.len() + self.alpha.len() + self.beta.len()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        let mut p = self.theta.clone();
+        p.extend_from_slice(&self.alpha);
+        p.extend_from_slice(&self.beta);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        let nt = self.theta.len();
+        let na = self.alpha.len();
+        assert_eq!(p.len(), nt + na + self.beta.len());
+        self.theta.copy_from_slice(&p[..nt]);
+        self.alpha.copy_from_slice(&p[nt..nt + na]);
+        self.beta.copy_from_slice(&p[nt + na..]);
+        self.recompute_rotation();
+    }
+
+    fn materialize(&self) -> Mat {
+        // W_final = A'·C·B' + W_res (Algorithm 1, line 12).
+        let ac = matmul(&self.a, &self.transform());
+        let mut w = self.w_res.clone();
+        crate::linalg::matmul_acc(&ac, &self.b, &mut w);
+        w
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        // y = x·W_res + (((x·A')·α)·R)·β·B' — the whole chain stays in the
+        // r-dim subspace (the L1 Pallas kernel mirrors this exactly).
+        let mut y = matmul(x, &self.w_res);
+        let p = matmul(x, &self.a); // [T, r]
+        let u = p.scale_cols(&self.alpha_or_ones());
+        let v = matmul(&u, &self.r_mat);
+        let w = v.scale_cols(&self.beta_or_ones());
+        crate::linalg::matmul_acc(&w, &self.b, &mut y);
+        y
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        let alpha = self.alpha_or_ones();
+        let beta = self.beta_or_ones();
+
+        // Recompute the forward chain (r-dim, cheap).
+        let p = matmul(x, &self.a); // [T, r]
+        let u = p.scale_cols(&alpha);
+        let v = matmul(&u, &self.r_mat);
+
+        // Backward through y = w·B' + x·W_res, w = v·β.
+        let dw = matmul_nt(dy, &self.b); // [T, r]
+        // dβ_k = Σ_t v[t,k]·dw[t,k].
+        let mut dbeta = vec![0.0f32; self.rank];
+        for t in 0..dw.rows {
+            let vr = v.row(t);
+            let dr = dw.row(t);
+            for k in 0..self.rank {
+                dbeta[k] += vr[k] * dr[k];
+            }
+        }
+        let dv = dw.scale_cols(&beta);
+        // dR = uᵀ·dv.
+        let dr: DMat = matmul_tn(&u, &dv).cast();
+        let params: Vec<f64> = self.theta.iter().map(|&t| t as f64).collect();
+        let q = skew_from_params(self.rank, &params);
+        let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
+        let dtheta: Vec<f32> = skew_param_grad(&dq).iter().map(|&g| g as f32).collect();
+        // du = dv·Rᵀ.
+        let du = matmul_nt(&dv, &self.r_mat);
+        // dα_k = Σ_t p[t,k]·du[t,k].
+        let mut dalpha = vec![0.0f32; self.rank];
+        for t in 0..du.rows {
+            let pr = p.row(t);
+            let dr_ = du.row(t);
+            for k in 0..self.rank {
+                dalpha[k] += pr[k] * dr_[k];
+            }
+        }
+        // dx = dy·W_resᵀ + (du·α)·A'ᵀ.
+        let mut dx = matmul_nt(dy, &self.w_res);
+        let dp = du.scale_cols(&alpha);
+        let dx_sub = matmul_nt(&dp, &self.a);
+        dx.add_assign(&dx_sub);
+
+        let mut d_params = dtheta;
+        if self.use_alpha {
+            d_params.extend_from_slice(&dalpha);
+        }
+        if self.use_beta {
+            d_params.extend_from_slice(&dbeta);
+        }
+        AdapterGrads { d_params, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // Retains the r-dim chain intermediates (p, u, v ⇒ 3r; Appendix E:
+        // removes the input activation, adds 12bsr ⇒ 3r floats).
+        3 * self.rank
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        let mut v = self.w_res.data.clone();
+        v.extend_from_slice(&self.a.data);
+        v.extend_from_slice(&self.b.data);
+        v
+    }
+
+    fn orth_defect(&self) -> Option<f64> {
+        // ‖CᵀC − I‖_F for C = diag(α)·R·diag(β) (§4.3's deviation measure).
+        let c: DMat = self.transform().cast();
+        Some(orthogonality_defect(&c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+
+    fn cfg(rank: usize) -> PeftConfig {
+        PeftConfig::new(MethodKind::Psoft, rank)
+    }
+
+    #[test]
+    fn starts_at_pretrained() {
+        let mut rng = Rng::new(151);
+        let w = Mat::randn(14, 10, 0.2, &mut rng);
+        let a = PsoftAdapter::new(&w, &cfg(5), &mut rng);
+        assert!(a.materialize().dist(&w) < 1e-4, "dist {}", a.materialize().dist(&w));
+    }
+
+    #[test]
+    fn param_count_matches_paper_formula() {
+        let mut rng = Rng::new(152);
+        let w = Mat::randn(20, 16, 0.2, &mut rng);
+        let r = 6;
+        let a = PsoftAdapter::new(&w, &cfg(r), &mut rng);
+        assert_eq!(a.num_params(), r * (r - 1) / 2 + 2 * r);
+
+        let mut c = cfg(r);
+        c.use_alpha = false;
+        c.use_beta = false;
+        let strict = PsoftAdapter::new(&w, &c, &mut rng);
+        assert_eq!(strict.num_params(), r * (r - 1) / 2);
+    }
+
+    #[test]
+    fn gradcheck_full() {
+        let mut rng = Rng::new(153);
+        let w = Mat::randn(12, 9, 0.3, &mut rng);
+        let mut a = PsoftAdapter::new(&w, &cfg(4), &mut rng);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(5, 12, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn gradcheck_strict_orthogonality() {
+        let mut rng = Rng::new(154);
+        let w = Mat::randn(10, 8, 0.3, &mut rng);
+        let mut c = cfg(4);
+        c.use_alpha = false;
+        c.use_beta = false;
+        let mut a = PsoftAdapter::new(&w, &c, &mut rng);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.08 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(4, 10, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn gradcheck_alpha_only() {
+        let mut rng = Rng::new(155);
+        let w = Mat::randn(10, 8, 0.3, &mut rng);
+        let mut c = cfg(3);
+        c.use_beta = false;
+        let mut a = PsoftAdapter::new(&w, &c, &mut rng);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(4, 10, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn strict_mode_preserves_principal_geometry() {
+        // Theorem 4.1 in action: with α = β = 1 and near-exact Neumann, the
+        // principal part A'·R·B' preserves column norms & pairwise angles of
+        // A'·B'.
+        let mut rng = Rng::new(156);
+        let w = Mat::randn(20, 12, 0.3, &mut rng);
+        let mut c = cfg(6);
+        c.use_alpha = false;
+        c.use_beta = false;
+        c.neumann_terms = 14;
+        let mut a = PsoftAdapter::new(&w, &c, &mut rng);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.1 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+
+        let (af, bf, _) = a.factors();
+        let w_pri = matmul(af, bf);
+        let tuned = matmul(&matmul(af, &a.transform()), bf);
+        for j in 0..12 {
+            let n0 = w_pri.col_norm(j);
+            let n1 = tuned.col_norm(j);
+            assert!((n0 - n1).abs() < 1e-3 * n0.max(1e-6), "col {j}: {n0} vs {n1}");
+        }
+        // A couple of pairwise angles.
+        let angle = |m: &Mat, i: usize, j: usize| -> f64 {
+            let ci = m.col(i);
+            let cj = m.col(j);
+            let dot: f64 = ci.iter().zip(&cj).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+            (dot / (m.col_norm(i) * m.col_norm(j))).clamp(-1.0, 1.0).acos()
+        };
+        for (i, j) in [(0, 1), (2, 7), (4, 11)] {
+            let a0 = angle(&w_pri, i, j);
+            let a1 = angle(&tuned, i, j);
+            assert!((a0 - a1).abs() < 1e-3, "angle ({i},{j}): {a0} vs {a1}");
+        }
+    }
+
+    #[test]
+    fn relaxation_breaks_geometry_controllably() {
+        // With α ≠ 1 the transform is no longer an isometry — the §4.3
+        // relaxation. Defect grows with deviation.
+        let mut rng = Rng::new(157);
+        let w = Mat::randn(16, 10, 0.3, &mut rng);
+        let mut a = PsoftAdapter::new(&w, &cfg(5), &mut rng);
+        assert!(a.orth_defect().unwrap() < 1e-6, "identity start should be orthogonal");
+        let mut p = a.params();
+        let nt = 5 * 4 / 2;
+        p[nt] = 1.5; // α_0
+        a.set_params(&p);
+        let d1 = a.orth_defect().unwrap();
+        p[nt] = 2.5;
+        a.set_params(&p);
+        let d2 = a.orth_defect().unwrap();
+        assert!(d2 > d1 && d1 > 0.1, "{d1} {d2}");
+    }
+
+    #[test]
+    fn init_variants_all_start_at_pretrained() {
+        let mut rng = Rng::new(158);
+        let w = Mat::randn(12, 12, 0.3, &mut rng);
+        for init in [PsoftInit::AOrth, PsoftInit::BOrth, PsoftInit::Symmetric] {
+            let mut c = cfg(4);
+            c.psoft_init = init;
+            let a = PsoftAdapter::new(&w, &c, &mut rng);
+            assert!(a.materialize().dist(&w) < 1e-4, "{init:?}");
+        }
+    }
+
+    #[test]
+    fn update_confined_to_principal_subspace() {
+        // ΔW = A'(C − I)B' lives in span(U_r) — rows of the update are
+        // combinations of A' columns (paper §4.1).
+        let mut rng = Rng::new(159);
+        let w = Mat::randn(16, 10, 0.3, &mut rng);
+        let mut a = PsoftAdapter::new(&w, &cfg(4), &mut rng);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.3 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let delta: DMat = a.materialize().sub(&w).cast();
+        let (af, _, _) = a.factors();
+        let afd: DMat = af.cast();
+        // Energy of ΔW inside span(A') equals total energy.
+        let proj = matmul_tn(&afd, &delta);
+        let e_in = proj.frobenius_norm();
+        let e_tot = delta.frobenius_norm();
+        assert!((e_tot - e_in).abs() < 1e-4 * e_tot.max(1e-12), "in {e_in} total {e_tot}");
+    }
+}

@@ -1,0 +1,159 @@
+//! SVFT_P (Lingam et al. 2024, plain variant): trainable perturbation of the
+//! singular values.
+//!
+//! `W_eff = U (Σ + diag(m)) Vᵀ` with the full SVD factors U, Σ, Vᵀ frozen
+//! and the d_min-vector `m` trainable (initialized at zero ⇒ training starts
+//! at W_pre). This is the `SVFT_P` row of the paper's Tables 13/15.
+
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{matmul, matmul_nt, svd, DMat, Mat};
+
+pub struct SvftAdapter {
+    /// U (d×k), Vᵀ (k×n) — full thin SVD factors, frozen.
+    u: Mat,
+    vt: Mat,
+    /// Frozen singular values.
+    sigma: Vec<f32>,
+    /// Trainable diagonal perturbation.
+    m: Vec<f32>,
+}
+
+impl SvftAdapter {
+    pub fn new(w_pre: &Mat) -> Self {
+        let wd: DMat = w_pre.cast();
+        let dec = svd(&wd);
+        Self {
+            u: dec.u.cast(),
+            vt: dec.vt.cast(),
+            sigma: dec.s.iter().map(|&s| s as f32).collect(),
+            m: vec![0.0; dec.s.len()],
+        }
+    }
+
+    fn k(&self) -> usize {
+        self.sigma.len()
+    }
+}
+
+impl Adapter for SvftAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Svft
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.u.rows, self.vt.cols)
+    }
+
+    fn num_params(&self) -> usize {
+        self.k()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.m.clone()
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.m.len());
+        self.m.copy_from_slice(p);
+    }
+
+    fn materialize(&self) -> Mat {
+        let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
+        let us = self.u.scale_cols(&scale);
+        matmul(&us, &self.vt)
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        // y = ((x U)·(σ+m)) Vᵀ.
+        let xu = matmul(x, &self.u);
+        let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
+        let xus = xu.scale_cols(&scale);
+        matmul(&xus, &self.vt)
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        let xu = matmul(x, &self.u); // [T, k]
+        let dy_v = matmul_nt(dy, &self.vt); // dy Vᵀᵀ = dy V: [T, k]
+        // dm_k = Σ_t xu[t,k]·(dy V)[t,k].
+        let mut dm = vec![0.0f32; self.k()];
+        for t in 0..x.rows {
+            let a = xu.row(t);
+            let b = dy_v.row(t);
+            for k in 0..self.k() {
+                dm[k] += a[k] * b[k];
+            }
+        }
+        // dx = ((dy V)·(σ+m)) Uᵀ.
+        let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
+        let dyv_s = dy_v.scale_cols(&scale);
+        let dx = matmul_nt(&dyv_s, &self.u);
+        AdapterGrads { d_params: dm, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // Retains xU (k = d_min ≈ h) — Appendix E's "removes input, adds
+        // 4bsh" entry.
+        self.k()
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        let mut v = self.u.data.clone();
+        v.extend_from_slice(&self.sigma);
+        v.extend_from_slice(&self.vt.data);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn starts_at_pretrained() {
+        let mut rng = Rng::new(101);
+        let w = Mat::randn(10, 14, 0.2, &mut rng);
+        let a = SvftAdapter::new(&w);
+        assert!(a.materialize().dist(&w) < 1e-4, "dist {}", a.materialize().dist(&w));
+    }
+
+    #[test]
+    fn param_count_is_dmin() {
+        let mut rng = Rng::new(102);
+        let w = Mat::randn(12, 7, 0.2, &mut rng);
+        assert_eq!(SvftAdapter::new(&w).num_params(), 7);
+    }
+
+    #[test]
+    fn gradcheck_svft() {
+        let mut rng = Rng::new(103);
+        let w = Mat::randn(9, 6, 0.2, &mut rng);
+        let mut a = SvftAdapter::new(&w);
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(4, 9, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+
+    #[test]
+    fn update_only_rescales_spectrum() {
+        // Perturbing m keeps singular vectors; only σ changes.
+        let mut rng = Rng::new(104);
+        let w = Mat::randn(8, 8, 0.3, &mut rng);
+        let mut a = SvftAdapter::new(&w);
+        let mut p = a.params();
+        p[0] += 0.5;
+        a.set_params(&p);
+        let w_new: DMat = a.materialize().cast();
+        let dec = svd(&w_new);
+        let dec0 = svd(&w.cast());
+        // Top singular value shifted by ≈0.5, others unchanged.
+        assert!((dec.s[0] - (dec0.s[0] + 0.5)).abs() < 1e-3);
+        assert!((dec.s[3] - dec0.s[3]).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,172 @@
+//! VeRA (Kopiczko et al. 2024): frozen random projections with trainable
+//! scaling vectors.
+//!
+//! `W_eff = W₀ + A_f · diag(d_vec) · B_f · diag(b_vec)` with `A_f (d×r)`,
+//! `B_f (r×n)` frozen random, `d_vec (r)` and `b_vec (n)` trainable —
+//! r + n parameters (Table 8).
+
+use super::{Adapter, AdapterGrads};
+use crate::config::MethodKind;
+use crate::linalg::{matmul, matmul_nt, Mat};
+use crate::util::rng::Rng;
+
+pub struct VeraAdapter {
+    w0: Mat,
+    a_f: Mat,
+    b_f: Mat,
+    d_vec: Vec<f32>,
+    b_vec: Vec<f32>,
+    rank: usize,
+}
+
+impl VeraAdapter {
+    pub fn new(w_pre: &Mat, rank: usize, rng: &mut Rng) -> Self {
+        let (d, n) = w_pre.shape();
+        assert!(rank >= 1 && rank <= d.min(n));
+        let a_f = Mat::kaiming_uniform(d, rank, d, rng);
+        let b_f = Mat::kaiming_uniform(rank, n, rank, rng);
+        Self {
+            w0: w_pre.clone(),
+            a_f,
+            b_f,
+            // d_vec starts at a small constant, b_vec at zero (upstream
+            // default d_initial=0.1, b=0) ⇒ training starts at W_pre.
+            d_vec: vec![0.1; rank],
+            b_vec: vec![0.0; n],
+            rank,
+        }
+    }
+}
+
+impl Adapter for VeraAdapter {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Vera
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        self.w0.shape()
+    }
+
+    fn num_params(&self) -> usize {
+        self.rank + self.w0.cols
+    }
+
+    fn params(&self) -> Vec<f32> {
+        let mut p = self.d_vec.clone();
+        p.extend_from_slice(&self.b_vec);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.num_params());
+        self.d_vec.copy_from_slice(&p[..self.rank]);
+        self.b_vec.copy_from_slice(&p[self.rank..]);
+    }
+
+    fn materialize(&self) -> Mat {
+        let ad = self.a_f.scale_cols(&self.d_vec);
+        let adb = matmul(&ad, &self.b_f);
+        let delta = adb.scale_cols(&self.b_vec);
+        self.w0.add(&delta)
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        // y = x W₀ + (((x A_f)·d) B_f)·b.
+        let mut y = matmul(x, &self.w0);
+        let xa = matmul(x, &self.a_f); // [T, r]
+        let xad = xa.scale_cols(&self.d_vec);
+        let mid = matmul(&xad, &self.b_f); // [T, n]
+        let delta = mid.scale_cols(&self.b_vec);
+        y.add_assign(&delta);
+        y
+    }
+
+    fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        let xa = matmul(x, &self.a_f); // [T, r]
+        let xad = xa.scale_cols(&self.d_vec);
+        let mid = matmul(&xad, &self.b_f); // [T, n]
+
+        // db_j = Σ_t mid[t,j]·dy[t,j].
+        let n = self.w0.cols;
+        let mut db = vec![0.0f32; n];
+        for t in 0..dy.rows {
+            let m_row = mid.row(t);
+            let dy_row = dy.row(t);
+            for j in 0..n {
+                db[j] += m_row[j] * dy_row[j];
+            }
+        }
+
+        // Upstream of the b-scale: dmid = dy ⊙ b (broadcast over rows).
+        let dmid = dy.scale_cols(&self.b_vec);
+        // d(xad) = dmid B_fᵀ; dd_k = Σ_t xa[t,k]·d(xad)[t,k].
+        let dxad = matmul_nt(&dmid, &self.b_f); // [T, r]
+        let mut dd = vec![0.0f32; self.rank];
+        for t in 0..x.rows {
+            let xa_row = xa.row(t);
+            let dx_row = dxad.row(t);
+            for k in 0..self.rank {
+                dd[k] += xa_row[k] * dx_row[k];
+            }
+        }
+
+        // dx = dy W₀ᵀ + (d(xad) ⊙ d_vec) A_fᵀ.
+        let mut dx = matmul_nt(dy, &self.w0);
+        let dxa = dxad.scale_cols(&self.d_vec);
+        let dx_low = matmul_nt(&dxa, &self.a_f);
+        dx.add_assign(&dx_low);
+
+        let mut d_params = dd;
+        d_params.extend_from_slice(&db);
+        AdapterGrads { d_params, dx }
+    }
+
+    fn act_floats_per_token(&self) -> usize {
+        // Retains xA_f (r) and the pre-b intermediate (n ≈ h) — VeRA's
+        // Appendix E entry replaces the input with 4bsr and adds 4bsh.
+        self.rank + self.w0.cols
+    }
+
+    fn frozen(&self) -> Vec<f32> {
+        let mut v = self.w0.data.clone();
+        v.extend_from_slice(&self.a_f.data);
+        v.extend_from_slice(&self.b_f.data);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::peft::gradcheck;
+
+    #[test]
+    fn starts_at_pretrained() {
+        let mut rng = Rng::new(91);
+        let w = Mat::randn(12, 9, 0.2, &mut rng);
+        let a = VeraAdapter::new(&w, 4, &mut rng);
+        assert!(a.materialize().dist(&w) < 1e-6);
+    }
+
+    #[test]
+    fn param_count_matches_table8() {
+        let mut rng = Rng::new(92);
+        let w = Mat::randn(16, 10, 0.2, &mut rng);
+        assert_eq!(VeraAdapter::new(&w, 4, &mut rng).num_params(), 4 + 10);
+    }
+
+    #[test]
+    fn gradcheck_vera() {
+        let mut rng = Rng::new(93);
+        let w = Mat::randn(10, 8, 0.2, &mut rng);
+        let mut a = VeraAdapter::new(&w, 3, &mut rng);
+        // Move off the zero-b init so all paths are active.
+        let mut p = a.params();
+        for v in p.iter_mut() {
+            *v += 0.1 + 0.05 * rng.normal() as f32;
+        }
+        a.set_params(&p);
+        let x = Mat::randn(5, 10, 1.0, &mut rng);
+        gradcheck(&mut a, &x, 2e-2, &mut rng);
+    }
+}

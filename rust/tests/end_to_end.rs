@@ -1,0 +1,135 @@
+//! End-to-end integration: pretrain → checkpoint → PEFT fine-tune →
+//! merge → deploy-equivalence, all on the native backend (artifact-free).
+
+use psoft::config::{Arch, DataConfig, MethodKind, ModelConfig, PeftConfig, TrainConfig};
+use psoft::data::load_task;
+use psoft::model::{Backbone, NativeModel};
+use psoft::runtime::{Backend, Hyper, NativeBackend};
+use psoft::train::{evaluate_split, train};
+use psoft::util::rng::Rng;
+
+fn tiny_decoder_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Decoder,
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 24,
+        n_classes: 0,
+    }
+}
+
+/// The full lifecycle on a miniature decoder.
+#[test]
+fn pretrain_finetune_merge_lifecycle() {
+    let cfg = tiny_decoder_cfg();
+    let mut rng = Rng::new(2001);
+
+    // Phase 1: pretrain on the pretext corpus.
+    let model = NativeModel::for_pretraining(&cfg, &mut rng);
+    let mut pre = NativeBackend::new(model);
+    let mut dc = DataConfig::new("pretext", "corpus");
+    dc.n_train = 40 * 8;
+    dc.n_val = 1;
+    dc.n_test = 1;
+    dc.seq_len = 16;
+    let corpus = load_task(&dc, cfg.vocab_size).unwrap();
+    let batches = corpus.batches(&corpus.train, 8, &mut rng);
+    let hyper = Hyper { lr: 3e-3, head_lr: 3e-3, ..Default::default() };
+    let mut first = None;
+    let mut last = f64::NAN;
+    for b in batches.iter().take(40) {
+        let out = pre.train_step(b, &hyper).unwrap();
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    assert!(last < first.unwrap(), "pretraining should reduce loss");
+
+    // Phase 2: checkpoint roundtrip.
+    let bb = pre.model.to_backbone();
+    let path = std::env::temp_dir().join("psoft_e2e_bb.bin");
+    bb.save(&path).unwrap();
+    let bb = Backbone::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // Phase 3: PSOFT fine-tune on gsm8k-sim.
+    let mut peft = PeftConfig::new(MethodKind::Psoft, 8);
+    peft.modules = cfg.modules();
+    let mut rng2 = Rng::new(2002);
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng2);
+    let mut be = NativeBackend::new(model);
+    let mut task_cfg = DataConfig::new("mathqa", "gsm8k");
+    task_cfg.n_train = 96;
+    task_cfg.n_val = 32;
+    task_cfg.n_test = 32;
+    task_cfg.seq_len = 16;
+    let task = load_task(&task_cfg, cfg.vocab_size).unwrap();
+    let mut tc = TrainConfig::default();
+    tc.epochs = 2;
+    tc.batch_size = 16;
+    tc.lr = 3e-3;
+    tc.head_lr = 3e-3;
+    let report = train(&mut be, &task, &tc, 0.0).unwrap();
+    assert!(report.test_metric.is_finite());
+    assert!(report.final_loss < report.loss_curve[0], "fine-tuning should reduce loss");
+
+    // Phase 4: merge-and-deploy equivalence. The merged dense backbone
+    // (no adapters) must reproduce the adapted model's eval loss.
+    let merged = be.model.to_backbone();
+    let mut dense_peft = PeftConfig::new(MethodKind::Lora, 1);
+    dense_peft.modules = vec![]; // no adapters: pure dense backbone
+    let mut rng3 = Rng::new(2003);
+    let mut deployed = NativeModel::from_backbone(&merged, &dense_peft, &mut rng3);
+    // Copy the trained head state (decoder has none; lm_head travels with
+    // the backbone).
+    deployed.head_w = be.model.head_w.clone();
+    deployed.head_b = be.model.head_b.clone();
+    let mut deploy_be = NativeBackend::new(deployed);
+    let (m_adapted, loss_adapted) = evaluate_split(&mut be, &task, &task.test, 16).unwrap();
+    let (m_deployed, loss_deployed) =
+        evaluate_split(&mut deploy_be, &task, &task.test, 16).unwrap();
+    assert!(
+        (loss_adapted - loss_deployed).abs() < 1e-3 * (1.0 + loss_adapted.abs()),
+        "merged deployment must match: {loss_adapted} vs {loss_deployed}"
+    );
+    assert!((m_adapted - m_deployed).abs() < 1e-9);
+}
+
+/// Budget-matched comparison completes and produces a valid report for
+/// both methods (the §4.1 rank-matching workflow).
+#[test]
+fn budget_matched_comparison() {
+    let cfg = tiny_decoder_cfg();
+    let mut rng = Rng::new(2004);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let lora_rank = 2;
+    let psoft_rank =
+        psoft::memmodel::params::psoft_rank_for_budget(lora_rank, cfg.d_model, cfg.d_model)
+            .min(cfg.d_model);
+    let mut task_cfg = DataConfig::new("mathqa", "gsm8k");
+    task_cfg.n_train = 32;
+    task_cfg.n_val = 16;
+    task_cfg.n_test = 16;
+    task_cfg.seq_len = 16;
+    let task = load_task(&task_cfg, cfg.vocab_size).unwrap();
+    let mut tc = TrainConfig::default();
+    tc.epochs = 1;
+    tc.batch_size = 16;
+
+    let mut params = Vec::new();
+    for (m, r) in [(MethodKind::Lora, lora_rank), (MethodKind::Psoft, psoft_rank)] {
+        let mut p = PeftConfig::new(m, r);
+        p.modules = vec![psoft::config::ModuleKind::Q, psoft::config::ModuleKind::V];
+        let mut rng2 = Rng::new(2005);
+        let model = NativeModel::from_backbone(&bb, &p, &mut rng2);
+        params.push(model.num_adapter_params());
+        let mut be = NativeBackend::new(model);
+        let report = train(&mut be, &task, &tc, 0.0).unwrap();
+        assert!(report.test_metric.is_finite());
+    }
+    // Budgets within 2x of each other, PSOFT rank much larger.
+    assert!(params[1] <= params[0] * 2, "params {params:?}");
+    assert!(psoft_rank > lora_rank * 3, "psoft rank {psoft_rank}");
+}

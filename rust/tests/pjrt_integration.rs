@@ -1,0 +1,207 @@
+//! Cross-layer integration: the compiled HLO artifacts (L1/L2) executed
+//! from the Rust runtime (L3).
+//!
+//! Requires `make artifacts` to have run (skips politely otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig, TrainConfig};
+use psoft::data::load_task;
+use psoft::model::native::{Batch, Target};
+use psoft::model::{Backbone, NativeModel};
+use psoft::runtime::pjrt::{ArtifactMeta, PjrtBackend};
+use psoft::runtime::{Backend, Hyper};
+use psoft::util::json::Json;
+use psoft::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("fixture_psoft_tiny.meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Replay the python-exported fixture through the compiled eval artifact
+/// and assert the numerics match what jax computed at export time.
+#[test]
+fn fixture_replay_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let fixture = Json::parse(&std::fs::read_to_string(dir.join("fixture.json")).unwrap()).unwrap();
+    let frozen: Vec<f32> = Json::parse(&std::fs::read_to_string(dir.join("fixture_frozen.json")).unwrap())
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let trainable: Vec<f32> =
+        fixture.get("trainable").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+
+    let meta = ArtifactMeta::load(dir, "fixture_psoft_tiny").unwrap();
+    assert_eq!(meta.frozen_size, frozen.len());
+    assert_eq!(meta.trainable_size, trainable.len());
+    let mut backend = PjrtBackend::with_state(dir, meta.clone(), trainable, frozen).unwrap();
+
+    let tokens: Vec<i32> =
+        fixture.get("tokens").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    let labels: Vec<usize> =
+        fixture.get("target").as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect();
+    let batch = Batch {
+        batch: meta.batch,
+        seq: meta.seq,
+        tokens,
+        pad: vec![1.0; meta.batch * meta.seq],
+        target: Target::Class(labels),
+    };
+    let out = backend.evaluate(&batch).unwrap();
+
+    let want_loss = fixture.get("loss").as_f64().unwrap();
+    let want_metric = fixture.get("metric").as_f64().unwrap();
+    assert!(
+        (out.loss - want_loss).abs() < 1e-4 * (1.0 + want_loss.abs()),
+        "loss {} vs python {}",
+        out.loss,
+        want_loss
+    );
+    assert!((out.metric - want_metric).abs() < 1e-6, "metric {} vs {}", out.metric, want_metric);
+    let want_preds: Vec<f64> =
+        fixture.get("preds").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+    for (got, want) in out.preds.iter().zip(&want_preds) {
+        assert!((*got as f64 - want).abs() < 1e-6);
+    }
+}
+
+fn glue_model_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Encoder,
+        vocab_size: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 512,
+        max_seq: 64,
+        n_classes: 2,
+    }
+}
+
+/// Rust-initialized model state fed into the compiled artifact: shapes must
+/// line up and a few train steps must reduce the loss — the full
+/// three-layer path (Rust init → HLO train step → Rust metrics).
+#[test]
+fn pjrt_training_reduces_loss_psoft() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !dir.join("glue_cls_psoft_r46.meta.json").exists() {
+        eprintln!("SKIP: glue_cls_psoft_r46 artifact missing");
+        return;
+    }
+    let cfg = glue_model_cfg();
+    let mut rng = Rng::new(9001);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let mut peft = PeftConfig::new(MethodKind::Psoft, 46);
+    peft.modules = cfg.modules();
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    let mut backend = PjrtBackend::from_artifact(dir, "glue_cls_psoft_r46", &model).unwrap();
+
+    let mut dc = psoft::config::DataConfig::new("glue", "sst2");
+    dc.n_train = 128;
+    dc.n_val = 32;
+    dc.n_test = 32;
+    dc.seq_len = 32;
+    let task = load_task(&dc, cfg.vocab_size).unwrap();
+    let batches = task.batches(&task.train, 32, &mut rng);
+
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..3 {
+        for b in &batches {
+            let out = backend.train_step(b, &hyper).unwrap();
+            if first.is_none() {
+                first = Some(out.loss);
+            }
+            last = out.loss;
+        }
+    }
+    let first = first.unwrap();
+    assert!(last < first, "loss should decrease: {first} -> {last}");
+    assert!(backend.steps() > 0);
+}
+
+/// Native and PJRT backends agree on the initial eval numerics for the
+/// same Rust-initialized state (cross-backend consistency).
+#[test]
+fn native_and_pjrt_agree_on_eval() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !dir.join("glue_cls_lora_r8.meta.json").exists() {
+        eprintln!("SKIP: glue_cls_lora_r8 artifact missing");
+        return;
+    }
+    let cfg = glue_model_cfg();
+    let mut rng = Rng::new(9002);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let mut peft = PeftConfig::new(MethodKind::Lora, 8);
+    peft.modules = cfg.modules();
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    let mut pjrt = PjrtBackend::from_artifact(dir, "glue_cls_lora_r8", &model).unwrap();
+    let mut native = psoft::runtime::NativeBackend::new(model);
+
+    let mut dc = psoft::config::DataConfig::new("glue", "sst2");
+    dc.n_train = 32;
+    dc.n_val = 32;
+    dc.n_test = 32;
+    dc.seq_len = 32;
+    let task = load_task(&dc, cfg.vocab_size).unwrap();
+    let batch = &task.eval_batches(&task.val, 32)[0];
+
+    let out_native = native.evaluate(batch).unwrap();
+    let out_pjrt = pjrt.evaluate(batch).unwrap();
+    assert!(
+        (out_native.loss - out_pjrt.loss).abs() < 2e-3 * (1.0 + out_native.loss.abs()),
+        "native {} vs pjrt {}",
+        out_native.loss,
+        out_pjrt.loss
+    );
+    assert_eq!(out_native.preds.len() as usize, out_pjrt.preds.len());
+    let agree = out_native
+        .preds
+        .iter()
+        .zip(&out_pjrt.preds)
+        .filter(|(a, b)| (**a - **b).abs() < 0.5)
+        .count();
+    assert!(agree * 10 >= out_native.preds.len() * 9, "{agree}/{} preds agree", out_native.preds.len());
+}
+
+/// End-to-end mini-workflow through the PJRT path with the trainer.
+#[test]
+fn trainer_over_pjrt_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !dir.join("glue_cls_psoft_r46.meta.json").exists() {
+        return;
+    }
+    let cfg = glue_model_cfg();
+    let mut rng = Rng::new(9003);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let mut peft = PeftConfig::new(MethodKind::Psoft, 46);
+    peft.modules = cfg.modules();
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    let mut backend = PjrtBackend::from_artifact(dir, "glue_cls_psoft_r46", &model).unwrap();
+
+    let mut dc = psoft::config::DataConfig::new("glue", "sst2");
+    dc.n_train = 64;
+    dc.n_val = 32;
+    dc.n_test = 32;
+    dc.seq_len = 32;
+    let task = load_task(&dc, cfg.vocab_size).unwrap();
+    let mut tc = TrainConfig::default();
+    tc.epochs = 2;
+    tc.batch_size = 32;
+    tc.lr = 2e-3;
+    tc.head_lr = 2e-3;
+    let report = psoft::train::train(&mut backend, &task, &tc, 0.0).unwrap();
+    assert!(report.test_metric.is_finite());
+    assert!(report.steps > 0);
+    let _ = ModuleKind::Q; // silence unused import lint on skip paths
+}

@@ -1,0 +1,262 @@
+//! Cross-module property tests (in-repo proptest-style runner).
+//!
+//! Invariants spanning multiple subsystems: Theorem 4.1 end-to-end on
+//! adapters, parameter-count formulas vs live adapters, flatten/unflatten
+//! roundtrips across the whole model, merge-equivalence for every method,
+//! and coordinator scheduling under failure injection.
+
+use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::linalg::{matmul, Mat};
+use psoft::model::{Backbone, NativeModel};
+use psoft::peft::{build_adapter, closed_form_params};
+use psoft::util::check::{all_close, ensure, forall};
+use psoft::util::rng::Rng;
+
+const ALL_METHODS: [MethodKind; 12] = MethodKind::ALL;
+
+fn random_cfg(rng: &mut Rng, method: MethodKind) -> (PeftConfig, usize, usize) {
+    // Shapes where every method is valid (d power-of-two for GOFT).
+    let d = [8usize, 16, 32][rng.below(3)];
+    let n = [8usize, 12, 16][rng.below(3)];
+    let rank = 1 + rng.below(d.min(n).min(6));
+    let mut cfg = PeftConfig::new(method, rank);
+    cfg.oft_block_size = [4usize, 8][rng.below(2)];
+    cfg.boft_b = 2;
+    cfg.boft_m = 1 + rng.below(3);
+    cfg.use_alpha = rng.bool(0.7);
+    cfg.use_beta = rng.bool(0.7);
+    (cfg, d, n)
+}
+
+/// Every adapter's live parameter count equals the Table 8 closed form.
+#[test]
+fn prop_param_counts_match_closed_forms() {
+    forall(
+        1001,
+        60,
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let (cfg, d, n) = random_cfg(rng, method);
+            let w = Mat::randn(d, n, 0.3, rng);
+            (cfg, w)
+        },
+        |(cfg, w)| {
+            let mut rng = Rng::new(7);
+            let adapter = build_adapter(cfg, w, &mut rng);
+            let expect = closed_form_params(cfg, w.rows, w.cols);
+            ensure(
+                adapter.num_params() == expect,
+                format!("{:?}: {} vs formula {}", cfg.method, adapter.num_params(), expect),
+            )
+        },
+    );
+}
+
+/// Every method starts exactly at W_pre (identity start).
+#[test]
+fn prop_identity_start_all_methods() {
+    forall(
+        1002,
+        48,
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let (cfg, d, n) = random_cfg(rng, method);
+            let w = Mat::randn(d, n, 0.3, rng);
+            (cfg, w)
+        },
+        |(cfg, w)| {
+            let mut rng = Rng::new(8);
+            let adapter = build_adapter(cfg, w, &mut rng);
+            let merged = adapter.materialize();
+            let dist = merged.dist(w);
+            ensure(
+                dist < 2e-3 * (1.0 + w.frobenius_norm()),
+                format!("{:?}: identity-start dist {dist}", cfg.method),
+            )
+        },
+    );
+}
+
+/// Structured forward == x @ materialize() for every method at random
+/// parameter settings (merge equivalence — the no-inference-latency claim).
+#[test]
+fn prop_forward_matches_merged() {
+    forall(
+        1003,
+        48,
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let (cfg, d, n) = random_cfg(rng, method);
+            let w = Mat::randn(d, n, 0.3, rng);
+            let x = Mat::randn(3 + rng.below(5), d, 1.0, rng);
+            let scale = 0.05f64;
+            (cfg, w, x, scale)
+        },
+        |(cfg, w, x, scale)| {
+            let mut rng = Rng::new(9);
+            let mut adapter = build_adapter(cfg, w, &mut rng);
+            let mut p = adapter.params();
+            for v in p.iter_mut() {
+                *v += (*scale * rng.normal()) as f32;
+            }
+            adapter.set_params(&p);
+            let y = adapter.forward(x);
+            let y_merged = matmul(x, &adapter.materialize());
+            all_close(&y.data, &y_merged.data, 5e-3, "forward vs merged")
+        },
+    );
+}
+
+/// Theorem 4.1 through the PSOFT adapter: with strict orthogonality the
+/// transform stays orthogonal for arbitrary theta (defect ~ 0 at small
+/// angles with enough Neumann terms).
+#[test]
+fn prop_theorem_4_1_strict_psoft() {
+    forall(
+        1004,
+        25,
+        |rng| {
+            let d = 12 + rng.below(12);
+            let n = 8 + rng.below(8);
+            let rank = 2 + rng.below(4);
+            let w = Mat::randn(d, n, 0.3, rng);
+            let theta_scale = 0.02 + 0.08 * rng.f64();
+            (w, rank, theta_scale)
+        },
+        |(w, rank, theta_scale)| {
+            let mut cfg = PeftConfig::new(MethodKind::Psoft, *rank);
+            cfg.use_alpha = false;
+            cfg.use_beta = false;
+            cfg.neumann_terms = 14;
+            let mut rng = Rng::new(10);
+            let mut adapter = build_adapter(&cfg, w, &mut rng);
+            let mut p = adapter.params();
+            for v in p.iter_mut() {
+                *v = (*theta_scale * rng.normal()) as f32;
+            }
+            adapter.set_params(&p);
+            ensure(
+                adapter.orth_defect().unwrap_or(1.0) < 1e-4,
+                format!("strict PSOFT defect {:?}", adapter.orth_defect()),
+            )
+        },
+    );
+}
+
+/// Whole-model trainable flatten/unflatten roundtrip for random configs.
+#[test]
+fn prop_model_flat_roundtrip() {
+    forall(
+        1005,
+        12,
+        |rng| {
+            let arch = if rng.bool(0.5) { Arch::Encoder } else { Arch::Decoder };
+            let cfg = ModelConfig {
+                arch,
+                vocab_size: 32,
+                d_model: 16,
+                n_layers: 1 + rng.below(2),
+                n_heads: 2,
+                d_ff: 32,
+                max_seq: 10,
+                n_classes: 2,
+            };
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let mut peft = PeftConfig::new(method, 1 + rng.below(4));
+            let mods = cfg.modules();
+            peft.modules = mods.into_iter().filter(|_| rng.bool(0.6)).collect();
+            if peft.modules.is_empty() {
+                peft.modules = vec![ModuleKind::Q];
+            }
+            (cfg, peft)
+        },
+        |(cfg, peft)| {
+            let mut rng = Rng::new(11);
+            let bb = Backbone::random(cfg, &mut rng);
+            let mut model = NativeModel::from_backbone(&bb, peft, &mut rng);
+            let p0 = model.trainable_flat();
+            ensure(p0.len() == model.num_trainable(), "flat length")?;
+            let mut p1 = p0.clone();
+            for (i, v) in p1.iter_mut().enumerate() {
+                *v += (i % 13) as f32 * 1e-3;
+            }
+            model.set_trainable_flat(&p1);
+            let p2 = model.trainable_flat();
+            all_close(&p1, &p2, 1e-6, "roundtrip")
+        },
+    );
+}
+
+/// Coordinator: every job runs exactly once and failures stay contained,
+/// under randomized grids with injected failures.
+#[test]
+fn prop_coordinator_failure_containment() {
+    use psoft::config::{DataConfig, TrainConfig};
+    use psoft::coordinator::{grid, DeviceBudget, SuiteRunner};
+    use std::sync::Arc;
+
+    forall(
+        1006,
+        6,
+        |rng| {
+            let n_tasks = 1 + rng.below(2);
+            let n_seeds = 1 + rng.below(2);
+            let kill = rng.below(4); // index of the job to sabotage
+            (n_tasks, n_seeds, kill)
+        },
+        |&(n_tasks, n_seeds, kill)| {
+            let cfg = ModelConfig {
+                arch: Arch::Encoder,
+                vocab_size: 64,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                d_ff: 32,
+                max_seq: 10,
+                n_classes: 2,
+            };
+            let mut rng = Rng::new(12);
+            let bb = Backbone::random(&cfg, &mut rng);
+            let tasks: Vec<DataConfig> = ["sst2", "rte"][..n_tasks]
+                .iter()
+                .map(|t| {
+                    let mut d = DataConfig::new("glue", t);
+                    d.n_train = 16;
+                    d.n_val = 8;
+                    d.n_test = 8;
+                    d.seq_len = 8;
+                    d
+                })
+                .collect();
+            let methods = vec![(
+                "lora_r2".to_string(),
+                PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q]),
+            )];
+            let seeds: Vec<u64> = (1..=n_seeds as u64).collect();
+            let mut tc = TrainConfig::default();
+            tc.epochs = 1;
+            tc.batch_size = 8;
+            tc.max_steps = Some(2);
+            let mut jobs = grid(&tasks, &methods, &tc, &seeds);
+            let n = jobs.len();
+            if kill < n {
+                jobs[kill].data.suite = "broken".into(); // inject failure
+            }
+            let runner = Arc::new(SuiteRunner::new(bb, DeviceBudget::unlimited()));
+            let results = runner.run_all(jobs, 2);
+            ensure(results.len() == n, format!("{} results for {n} jobs", results.len()))?;
+            for (i, r) in results.iter().enumerate() {
+                ensure(r.id == i, "ordered results")?;
+                if i == kill && kill < n {
+                    ensure(r.error.is_some(), "sabotaged job must error")?;
+                } else {
+                    ensure(
+                        r.error.is_none(),
+                        format!("job {i} unexpectedly failed: {:?}", r.error),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
