@@ -23,7 +23,8 @@ fn main() {
     for b in 0..bsz { for s in seq/2..seq { mask[b*seq+s] = 1.0; } }
     let batch = Batch { batch: bsz, seq, tokens: tokens.clone(), pad: vec![1.0; bsz*seq], target: Target::LmMask(mask) };
     let hyper = Hyper::default();
-    let t = time_ms(5, || { be.train_step(&batch, &hyper).unwrap(); });
+    let mut ws = psoft::linalg::Workspace::new();
+    let t = time_ms(5, || { be.train_step(&batch, &hyper, &mut ws).unwrap(); });
     println!("decoder train_step (matmul LM loss): {t:.1} ms");
 
     // Isolated LM-loss cost comparison at the same shape.

@@ -6,24 +6,122 @@
 
 use psoft::bench::{bench_encoder, pretrained_backbone, time_ms, write_csv};
 use psoft::config::{MethodKind, ModelConfig, PeftConfig};
-use psoft::linalg::{matmul, svd, DMat, Mat};
+use psoft::linalg::{matmul, svd, DMat, Mat, Workspace};
 use psoft::memmodel::{activation::ActShape, peak_memory_estimate, PaperModel};
-use psoft::model::native::{Batch, Target};
+use psoft::model::native::{self, Batch, Target};
 use psoft::model::NativeModel;
 use psoft::peft::build_adapter;
 use psoft::runtime::{Backend, Hyper, NativeBackend};
 use psoft::util::rng::Rng;
+use psoft::util::stats::Stopwatch;
 
 fn fast() -> bool {
     std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
 fn main() {
+    hotpath_bench();
     micro_substrates();
     table19_single_layer();
     table20_block();
     table21_22_model_memory();
     fig4b_training_speed();
+}
+
+/// Peak resident set size in bytes (Linux VmHWM; 0 when unavailable).
+fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// The perf-trajectory anchor: steady-state native training step on the
+/// standard encoder workload, with a per-phase ns/step breakdown. Emits
+/// `BENCH_hotpath.json` so subsequent PRs have a baseline to beat.
+fn hotpath_bench() {
+    println!("\n=== hot path: steady-state native train step ===");
+    let cfg: ModelConfig = bench_encoder();
+    let mut rng = Rng::new(90);
+    let bb = psoft::model::Backbone::random(&cfg, &mut rng);
+    let mut peft = PeftConfig::new(MethodKind::Psoft, 32);
+    peft.modules = cfg.modules();
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    let mut be = NativeBackend::new(model);
+    let (bsz, seq) = (16usize, 24usize);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+    let batch = Batch {
+        batch: bsz,
+        seq,
+        tokens,
+        pad: vec![1.0; bsz * seq],
+        target: Target::Class(labels),
+    };
+    let hyper = Hyper::default();
+    let mut ws = Workspace::new();
+
+    // Warm the step buffers and the workspace pool.
+    for _ in 0..3 {
+        be.step_core(&batch, &hyper, &mut ws);
+    }
+    let misses_before = ws.misses();
+
+    let steps = if fast() { 10 } else { 50 };
+    // Phase A: forward + loss only.
+    let sw = Stopwatch::start();
+    for _ in 0..steps {
+        native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws);
+    }
+    let fwd_ns = sw.secs() * 1e9 / steps as f64;
+    // Phase B: forward + backward (gradients).
+    let sw = Stopwatch::start();
+    for _ in 0..steps {
+        native::train_grads_into(&be.model, &batch, 0.0, &mut be.bufs, &mut ws);
+    }
+    let grads_ns = sw.secs() * 1e9 / steps as f64;
+    // Phase C: the full optimizer step.
+    let sw = Stopwatch::start();
+    for _ in 0..steps {
+        be.step_core(&batch, &hyper, &mut ws);
+    }
+    let step_ns = sw.secs() * 1e9 / steps as f64;
+
+    let backward_ns = (grads_ns - fwd_ns).max(0.0);
+    let optimizer_ns = (step_ns - grads_ns).max(0.0);
+    let steps_per_sec = 1e9 / step_ns;
+    let pool_misses_after_warmup = ws.misses() - misses_before;
+    let rss = peak_rss_bytes();
+
+    println!(
+        "step {:.3} ms ({steps_per_sec:.2} steps/s) — fwd {:.3} ms, bwd {:.3} ms, adamw {:.3} ms; \
+         pool misses after warmup: {pool_misses_after_warmup}; peak RSS {:.1} MiB",
+        step_ns / 1e6,
+        fwd_ns / 1e6,
+        backward_ns / 1e6,
+        optimizer_ns / 1e6,
+        rss as f64 / (1024.0 * 1024.0)
+    );
+
+    let json = format!(
+        "{{\n  \"workload\": \"encoder_small psoft r32 all-modules, batch {bsz} x seq {seq}\",\n  \
+         \"steps_measured\": {steps},\n  \"steps_per_sec\": {steps_per_sec:.3},\n  \
+         \"ns_per_step\": {{\n    \"total\": {step_ns:.0},\n    \"forward_loss\": {fwd_ns:.0},\n    \
+         \"backward\": {backward_ns:.0},\n    \"optimizer\": {optimizer_ns:.0}\n  }},\n  \
+         \"workspace_pool_misses_after_warmup\": {pool_misses_after_warmup},\n  \
+         \"peak_rss_bytes\": {rss}\n}}\n"
+    );
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    eprintln!("wrote BENCH_hotpath.json");
 }
 
 /// Substrate microbenches (the §Perf baselines).
@@ -227,8 +325,9 @@ fn fig4b_training_speed() {
             target: Target::Class(labels),
         };
         let hyper = Hyper::default();
+        let mut ws = Workspace::new();
         let ms = time_ms(steps, || {
-            be.train_step(&batch, &hyper).unwrap();
+            be.train_step(&batch, &hyper, &mut ws).unwrap();
         });
         println!("{:<10} {:>8.2} ms/step ({:.2} steps/s)", m.name(), ms, 1000.0 / ms);
         rows.push(format!("{},{ms:.3}", m.name()));

@@ -46,6 +46,7 @@ pub fn pretrained_backbone(cfg: &ModelConfig, tag: &str, steps: usize) -> Backbo
     let task = crate::data::load_task(&dc, cfg.vocab_size).expect("pretext");
     let batches = task.batches(&task.train, 16, &mut rng);
     let hyper = Hyper { lr: 3e-3, head_lr: 3e-3, ..Default::default() };
+    let mut ws = crate::linalg::Workspace::new();
     for b in batches.iter().take(steps) {
         let b = if cfg.arch == Arch::Encoder {
             let labels: Vec<usize> =
@@ -56,7 +57,7 @@ pub fn pretrained_backbone(cfg: &ModelConfig, tag: &str, steps: usize) -> Backbo
         } else {
             b.clone()
         };
-        backend.train_step(&b, &hyper).expect("pretrain step");
+        backend.train_step(&b, &hyper, &mut ws).expect("pretrain step");
     }
     let bb = backend.model.to_backbone();
     std::fs::create_dir_all("checkpoints").ok();

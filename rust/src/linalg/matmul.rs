@@ -4,6 +4,21 @@
 //! XLA). Layout is row-major; the kernel uses the classic i-k-j loop order so
 //! the inner loop is a contiguous axpy over the output row — auto-vectorizes
 //! well — plus a row-panel thread split for large shapes.
+//!
+//! Every product comes in three flavours so callers can choose their
+//! allocation discipline (the zero-allocation training path uses only the
+//! `_into`/`_acc`/`_slice` forms with workspace-pooled buffers):
+//!
+//! - `matmul*`          — allocate and return the result.
+//! - `matmul*_into`     — overwrite a caller-provided buffer.
+//! - `matmul*_acc`      — accumulate (`+=`) into a caller-provided buffer.
+//! - `matmul*_acc_slice`— accumulate into a raw row-major slice, for
+//!   writing gradients directly into flat parameter-gradient storage.
+//!
+//! The transposed variants never materialize Aᵀ/Bᵀ. All of them —
+//! including `matmul_tn`, which sits on the backward hot path as
+//! `dW = xᵀ @ dy` — share the same `par_chunks` row-panel split over the
+//! output, so each thread owns a disjoint slice of C.
 
 use super::matrix::{Matrix, Scalar};
 use crate::util::threadpool::{default_parallelism, par_chunks};
@@ -13,11 +28,27 @@ const PAR_MIN_ROWS: usize = 64;
 /// Minimum FLOP count before threads are worth spawning.
 const PAR_MIN_FLOPS: usize = 1 << 22;
 
+fn threads_for(flops: usize, out_rows: usize) -> usize {
+    if flops >= PAR_MIN_FLOPS && out_rows >= PAR_MIN_ROWS {
+        default_parallelism()
+    } else {
+        1
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// C = A @ B
+// ---------------------------------------------------------------------------
+
 /// C = A @ B.
 pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?} @ {:?}", a.shape(), b.shape());
     let mut c = Matrix::zeros(a.rows, b.cols);
-    matmul_into(a, b, &mut c);
+    matmul_acc(a, b, &mut c);
     c
 }
 
@@ -25,26 +56,27 @@ pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
 pub fn matmul_into<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    c.data.iter_mut().for_each(|v| *v = T::ZERO);
+    c.fill(T::ZERO);
     matmul_acc(a, b, c);
 }
 
 /// C += A @ B.
 pub fn matmul_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
-    assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    matmul_acc_slice(a, b, &mut c.data);
+}
+
+/// C += A @ B with C a row-major `a.rows × b.cols` slice.
+pub fn matmul_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+    assert_eq!(a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let flops = m * k * n;
-    let threads = if flops >= PAR_MIN_FLOPS && m >= PAR_MIN_ROWS {
-        default_parallelism()
-    } else {
-        1
-    };
+    assert_eq!(c.len(), m * n);
+    let threads = threads_for(m * k * n, m);
 
     // Split C by row panels; each thread owns a disjoint slice of C.
     let a_data = &a.data;
     let b_data = &b.data;
-    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    let c_ptr = SendPtr(c.as_mut_ptr());
     par_chunks(m, threads, |lo, hi| {
         let c_ptr = &c_ptr;
         // SAFETY: row panels [lo, hi) are disjoint across threads.
@@ -65,44 +97,105 @@ pub fn matmul_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
     });
 }
 
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
+// ---------------------------------------------------------------------------
+// C = Aᵀ @ B (dW = xᵀ @ dy — the backward hot path)
+// ---------------------------------------------------------------------------
 
 /// C = Aᵀ @ B without materializing Aᵀ.
 pub fn matmul_tn<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch: {:?}ᵀ @ {:?}", a.shape(), b.shape());
-    let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
-    // cᵀ accumulation: for each shared row kk, outer-product a_row ⊗ b_row.
-    for kk in 0..k {
-        let a_row = a.row(kk);
-        let b_row = b.row(kk);
-        for (i, &a_ki) in a_row.iter().enumerate() {
-            if a_ki == T::ZERO {
-                continue;
-            }
-            let c_row = &mut c.data[i * n..(i + 1) * n];
-            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
-                *c_v += a_ki * b_v;
-            }
-        }
-    }
+    let mut c = Matrix::zeros(a.cols, b.cols);
+    matmul_tn_acc_slice(a, b, &mut c.data);
     c
 }
+
+/// C = Aᵀ @ B, overwriting an existing buffer.
+pub fn matmul_tn_into<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
+    c.fill(T::ZERO);
+    matmul_tn_acc_slice(a, b, &mut c.data);
+}
+
+/// C += Aᵀ @ B.
+pub fn matmul_tn_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols));
+    matmul_tn_acc_slice(a, b, &mut c.data);
+}
+
+/// C += Aᵀ @ B with C a row-major `a.cols × b.cols` slice. Parallelized
+/// over row panels of C (columns of A); within a panel the shared
+/// dimension is walked in ascending order so accumulation order — and
+/// therefore the floating-point result — is identical to the
+/// single-threaded kernel.
+pub fn matmul_tn_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch: {:?}ᵀ @ {:?}", a.shape(), b.shape());
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(c.len(), m * n);
+    let threads = threads_for(m * k * n, m);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    par_chunks(m, threads, |lo, hi| {
+        let c_ptr = &c_ptr;
+        // SAFETY: C row panels [lo, hi) are disjoint across threads.
+        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        // Outer-product accumulation: for each shared row kk, the panel's
+        // slice of a-row scales b-row into the owned C rows.
+        for kk in 0..k {
+            let a_row = &a_data[kk * m..(kk + 1) * m];
+            let b_row = &b_data[kk * n..(kk + 1) * n];
+            for (ii, i) in (lo..hi).enumerate() {
+                let a_ki = a_row[i];
+                if a_ki == T::ZERO {
+                    continue;
+                }
+                let c_row = &mut c_slice[ii * n..(ii + 1) * n];
+                for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                    *c_v += a_ki * b_v;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// C = A @ Bᵀ
+// ---------------------------------------------------------------------------
 
 /// C = A @ Bᵀ without materializing Bᵀ. Inner loop is a dot product of two
 /// contiguous rows.
 pub fn matmul_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_acc_slice(a, b, &mut c.data);
+    c
+}
+
+/// C = A @ Bᵀ, overwriting an existing buffer.
+pub fn matmul_nt_into<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    c.fill(T::ZERO);
+    matmul_nt_acc_slice(a, b, &mut c.data);
+}
+
+/// C += A @ Bᵀ.
+pub fn matmul_nt_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    matmul_nt_acc_slice(a, b, &mut c.data);
+}
+
+/// C += A @ Bᵀ with C a row-major `a.rows × b.rows` slice.
+pub fn matmul_nt_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c: Matrix<T> = Matrix::zeros(m, n);
-    let threads = if m * k * n >= PAR_MIN_FLOPS && m >= PAR_MIN_ROWS { default_parallelism() } else { 1 };
+    assert_eq!(c.len(), m * n);
+    let threads = threads_for(m * k * n, m);
     let a_data = &a.data;
     let b_data = &b.data;
-    let c_ptr = SendPtr(c.data.as_mut_ptr());
+    let c_ptr = SendPtr(c.as_mut_ptr());
     par_chunks(m, threads, |lo, hi| {
         let c_ptr = &c_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across threads.
         let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
         for (ii, i) in (lo..hi).enumerate() {
             let a_row = &a_data[i * k..(i + 1) * k];
@@ -112,11 +205,10 @@ pub fn matmul_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
                 for (&x, &y) in a_row.iter().zip(b_row) {
                     acc += x * y;
                 }
-                c_slice[ii * n + j] = acc;
+                c_slice[ii * n + j] += acc;
             }
         }
     });
-    c
 }
 
 /// y = A @ x for a vector x.
@@ -196,6 +288,58 @@ mod tests {
         let b2 = DMat::randn(4, 9, 1.0, &mut rng);
         let c2 = matmul_nt(&a2, &b2);
         assert!(c2.dist(&naive(&a2, &b2.transpose())) < 1e-12);
+    }
+
+    #[test]
+    fn tn_parallel_panel_split_matches_naive() {
+        // Shape chosen to clear both threading thresholds (output rows =
+        // a.cols ≥ 64, flops ≥ 2^22) so the par_chunks path runs.
+        let mut rng = Rng::new(37);
+        let a = Mat::randn(192, 128, 1.0, &mut rng);
+        let b = Mat::randn(192, 180, 1.0, &mut rng);
+        let c = matmul_tn(&a, &b);
+        let c0 = naive(&a.transpose(), &b);
+        assert!(c.dist(&c0) < 1e-2, "dist={}", c.dist(&c0));
+    }
+
+    #[test]
+    fn into_and_acc_variants_match() {
+        let mut rng = Rng::new(43);
+        let a = Mat::randn(9, 6, 1.0, &mut rng);
+        let b = Mat::randn(9, 7, 1.0, &mut rng); // for tn: Aᵀ(6×9) @ B(9×7)
+        let c0 = matmul_tn(&a, &b);
+        let mut c1 = Mat::filled(6, 7, 3.5); // dirty buffer
+        matmul_tn_into(&a, &b, &mut c1);
+        assert_eq!(c0.data, c1.data, "tn_into must ignore prior contents");
+        let mut c2 = Mat::filled(6, 7, 1.0);
+        matmul_tn_acc(&a, &b, &mut c2);
+        for (v2, v0) in c2.data.iter().zip(&c0.data) {
+            assert!((v2 - 1.0 - v0).abs() < 1e-5);
+        }
+
+        let d = Mat::randn(5, 6, 1.0, &mut rng); // for nt: A(5×6) @ Bᵀ(6×8)
+        let e = Mat::randn(8, 6, 1.0, &mut rng);
+        let f0 = matmul_nt(&d, &e);
+        let mut f1 = Mat::filled(5, 8, -2.0);
+        matmul_nt_into(&d, &e, &mut f1);
+        assert_eq!(f0.data, f1.data);
+        let mut f2 = Mat::filled(5, 8, 0.5);
+        matmul_nt_acc(&d, &e, &mut f2);
+        for (v2, v0) in f2.data.iter().zip(&f0.data) {
+            assert!((v2 - 0.5 - v0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn slice_variants_write_flat_storage() {
+        let mut rng = Rng::new(47);
+        let x = Mat::randn(6, 4, 1.0, &mut rng);
+        let dy = Mat::randn(6, 3, 1.0, &mut rng);
+        // Gradient-style use: accumulate dW = xᵀ dy into a flat slice.
+        let mut flat = vec![0.0f32; 4 * 3 + 5];
+        matmul_tn_acc_slice(&x, &dy, &mut flat[5..]);
+        let dw = matmul_tn(&x, &dy);
+        assert_eq!(&flat[5..], &dw.data[..]);
     }
 
     #[test]

@@ -152,6 +152,49 @@ impl<T: Scalar> Matrix<T> {
         (self.rows, self.cols)
     }
 
+    /// Set every element to `v` (no allocation).
+    pub fn fill(&mut self, v: T) {
+        for x in self.data.iter_mut() {
+            *x = v;
+        }
+    }
+
+    /// Copy `src` into self (shapes must match; no allocation).
+    pub fn copy_from(&mut self, src: &Self) {
+        assert_eq!(self.shape(), src.shape(), "copy_from shape mismatch");
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Reshape in place, reusing the existing buffer capacity. Grows the
+    /// buffer only when `rows * cols` exceeds any previous size (so a
+    /// buffer sized once at the maximum shape never reallocates).
+    /// Contents are unspecified afterwards.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, T::ZERO);
+    }
+
+    /// In-place row scaling: self ← diag(s) @ self (no allocation).
+    pub fn scale_rows_in_place(&mut self, s: &[T]) {
+        assert_eq!(s.len(), self.rows);
+        for (i, &si) in s.iter().enumerate() {
+            for v in self.row_mut(i) {
+                *v *= si;
+            }
+        }
+    }
+
+    /// In-place column scaling: self ← self @ diag(s) (no allocation).
+    pub fn scale_cols_in_place(&mut self, s: &[T]) {
+        assert_eq!(s.len(), self.cols);
+        for i in 0..self.rows {
+            for (v, &sj) in self.row_mut(i).iter_mut().zip(s) {
+                *v *= sj;
+            }
+        }
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[T] {
         &self.data[i * self.cols..(i + 1) * self.cols]
@@ -386,6 +429,31 @@ mod tests {
         assert!((m.frobenius_norm() - 5.0).abs() < 1e-12);
         assert!((m.col_norm(0) - 5.0).abs() < 1e-12);
         assert_eq!(m.col_norm(1), 0.0);
+    }
+
+    #[test]
+    fn in_place_helpers() {
+        let mut m = Mat::filled(2, 3, 1.0);
+        m.scale_rows_in_place(&[2.0, 3.0]);
+        assert_eq!(m.data, vec![2.0, 2.0, 2.0, 3.0, 3.0, 3.0]);
+        m.scale_cols_in_place(&[1.0, 0.5, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 1.5, 6.0]);
+        let src = Mat::from_fn(2, 3, |i, j| (i + j) as f32);
+        m.copy_from(&src);
+        assert_eq!(m, src);
+        m.fill(0.25);
+        assert!(m.data.iter().all(|&v| v == 0.25));
+    }
+
+    #[test]
+    fn resize_reuses_capacity() {
+        let mut m = Mat::zeros(4, 4);
+        let cap = m.data.capacity();
+        m.resize(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.data.len(), 6);
+        m.resize(4, 4);
+        assert_eq!(m.data.capacity(), cap, "shrink+grow within capacity must not reallocate");
     }
 
     #[test]

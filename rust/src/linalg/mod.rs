@@ -12,13 +12,19 @@ pub mod matrix;
 pub mod qr;
 pub mod rsvd;
 pub mod svd;
+pub mod workspace;
 
 pub use cayley::{
     cayley_exact, cayley_exact_backward, cayley_neumann, cayley_neumann_backward,
     orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad,
 };
-pub use matmul::{matmul, matmul_acc, matmul_into, matmul_nt, matmul_tn, matvec};
+pub use matmul::{
+    matmul, matmul_acc, matmul_acc_slice, matmul_into, matmul_nt, matmul_nt_acc,
+    matmul_nt_acc_slice, matmul_nt_into, matmul_tn, matmul_tn_acc, matmul_tn_acc_slice,
+    matmul_tn_into, matvec,
+};
 pub use matrix::{DMat, Mat, Matrix, Scalar};
 pub use qr::{orthonormal_columns, qr_thin};
 pub use rsvd::rsvd;
 pub use svd::{svd, Svd};
+pub use workspace::Workspace;

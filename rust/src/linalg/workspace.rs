@@ -1,0 +1,173 @@
+//! Reusable scratch-buffer arena for the training hot path.
+//!
+//! Steady-state fine-tuning repeats the same sequence of matrix shapes
+//! every optimizer step, so every temporary the forward/backward pass
+//! needs can be recycled instead of reallocated. A [`Workspace`] is a
+//! pool of `Mat` buffers keyed by **exact shape** `(rows, cols)`:
+//!
+//! - [`Workspace::acquire`] pops a free buffer of the requested shape
+//!   (or allocates one on a pool miss — the *warmup* path). Contents are
+//!   **unspecified**: callers must fully overwrite, or use
+//!   [`Workspace::acquire_zeroed`] when they accumulate into the buffer.
+//! - [`Workspace::release`] returns a buffer to the pool for reuse.
+//!
+//! # Buffer-keying scheme
+//!
+//! Keys are exact `(rows, cols)` pairs rather than raw capacities. This
+//! trades a little pool growth when shapes vary (e.g. a partial final
+//! batch) for a hard guarantee that a buffer handed out always has
+//! `data.len() == rows * cols`, so no call site can read stale elements
+//! past its logical shape. After one warmup step per distinct batch
+//! shape, `acquire` never allocates (`misses()` stops growing) — the
+//! property the counting-allocator test in `tests/zero_alloc.rs` pins.
+//!
+//! # Aliasing rules
+//!
+//! Ownership is move-based: `acquire` transfers the buffer out of the
+//! pool and `release` moves it back, so the borrow checker enforces that
+//! a live scratch buffer is never aliased by another acquire. Two rules
+//! keep the pool healthy:
+//!
+//! 1. **Release what you acquire** (in any order). A dropped-not-released
+//!    buffer is not an error — the pool simply re-allocates on the next
+//!    acquire of that shape — but it forfeits the zero-allocation
+//!    guarantee.
+//! 2. **Never release a buffer you still hold a view of.** There are no
+//!    borrowed views of pooled buffers in this crate (all kernels take
+//!    `&Mat`/`&mut Mat`), which makes this rule structural.
+//!
+//! The f64 Cayley/SVD initialization path intentionally stays off the
+//! workspace: it runs once per adapter (or on r×r matrices during
+//! rotation refresh), not per token, and keeps the arena f32-only.
+
+use super::matrix::Mat;
+use std::collections::HashMap;
+
+/// Shape-keyed pool of reusable f32 scratch matrices.
+#[derive(Default)]
+pub struct Workspace {
+    free: HashMap<(usize, usize), Vec<Mat>>,
+    acquires: u64,
+    misses: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Take a `(rows, cols)` buffer from the pool, allocating on a miss.
+    /// Contents are unspecified — overwrite before reading.
+    pub fn acquire(&mut self, rows: usize, cols: usize) -> Mat {
+        self.acquires += 1;
+        if let Some(stack) = self.free.get_mut(&(rows, cols)) {
+            if let Some(m) = stack.pop() {
+                debug_assert_eq!(m.data.len(), rows * cols);
+                return m;
+            }
+        }
+        self.misses += 1;
+        Mat::zeros(rows, cols)
+    }
+
+    /// [`Workspace::acquire`] followed by a zero fill (no allocation on a
+    /// pool hit) — for buffers that are accumulated into.
+    pub fn acquire_zeroed(&mut self, rows: usize, cols: usize) -> Mat {
+        let mut m = self.acquire(rows, cols);
+        m.fill(0.0);
+        m
+    }
+
+    /// Return a buffer to the pool for reuse by later acquires.
+    pub fn release(&mut self, m: Mat) {
+        assert_eq!(m.data.len(), m.rows * m.cols, "released buffer has inconsistent shape");
+        self.free.entry((m.rows, m.cols)).or_default().push(m);
+    }
+
+    /// Total acquires served (hits + misses).
+    pub fn acquires(&self) -> u64 {
+        self.acquires
+    }
+
+    /// Acquires that had to allocate. Constant across steps once warm.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Free buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.values().map(|v| v.len()).sum()
+    }
+
+    /// Bytes held by pooled (idle) buffers.
+    pub fn pooled_bytes(&self) -> usize {
+        self.free
+            .iter()
+            .map(|(&(r, c), v)| r * c * std::mem::size_of::<f32>() * v.len())
+            .sum()
+    }
+
+    /// Drop all pooled buffers (e.g. between jobs with disjoint shapes).
+    pub fn clear(&mut self) {
+        self.free.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_reuses_buffer() {
+        let mut ws = Workspace::new();
+        let a = ws.acquire(4, 3);
+        assert_eq!(ws.misses(), 1);
+        let ptr = a.data.as_ptr();
+        ws.release(a);
+        let b = ws.acquire(4, 3);
+        assert_eq!(ws.misses(), 1, "second acquire must hit the pool");
+        assert_eq!(b.data.as_ptr(), ptr, "same backing buffer must come back");
+        assert_eq!(b.shape(), (4, 3));
+    }
+
+    #[test]
+    fn shapes_are_keyed_exactly() {
+        let mut ws = Workspace::new();
+        let a = ws.acquire(2, 6);
+        ws.release(a);
+        // Same element count, different shape: must not be served from
+        // the (2, 6) slot.
+        let b = ws.acquire(3, 4);
+        assert_eq!(ws.misses(), 2);
+        assert_eq!(b.shape(), (3, 4));
+    }
+
+    #[test]
+    fn acquire_zeroed_clears_dirty_buffer() {
+        let mut ws = Workspace::new();
+        let mut a = ws.acquire(2, 2);
+        a.fill(7.5);
+        ws.release(a);
+        let b = ws.acquire_zeroed(2, 2);
+        assert!(b.data.iter().all(|&v| v == 0.0));
+        assert_eq!(ws.misses(), 1);
+    }
+
+    #[test]
+    fn steady_state_stops_missing() {
+        let mut ws = Workspace::new();
+        for _ in 0..10 {
+            let a = ws.acquire(8, 8);
+            let b = ws.acquire(8, 8);
+            let c = ws.acquire(1, 8);
+            ws.release(a);
+            ws.release(b);
+            ws.release(c);
+        }
+        assert_eq!(ws.misses(), 3, "only the first iteration may allocate");
+        assert_eq!(ws.pooled(), 3);
+        assert!(ws.pooled_bytes() > 0);
+        ws.clear();
+        assert_eq!(ws.pooled(), 0);
+    }
+}

@@ -196,6 +196,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 
     let sw = Stopwatch::start();
     let hyper = psoft::runtime::Hyper { lr, head_lr: lr, ..Default::default() };
+    let mut ws = psoft::linalg::Workspace::new();
     let mut losses = Vec::new();
     for (i, b) in batches.iter().take(steps).enumerate() {
         // Encoder pretraining reuses the LM-style pretext data as a
@@ -209,7 +210,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
         } else {
             b.clone()
         };
-        let out_step = backend.train_step(&b, &hyper)?;
+        let out_step = backend.train_step(&b, &hyper, &mut ws)?;
         losses.push(out_step.loss);
         if (i + 1) % 50 == 0 {
             psoft::info!("step {:>5}: loss {:.4}", i + 1, out_step.loss);

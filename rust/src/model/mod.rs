@@ -174,6 +174,23 @@ impl ModuleOp {
             ModuleOp::Adapted(a) => a.forward(x),
         }
     }
+
+    /// In-place forward into a caller-provided output buffer; scratch
+    /// comes from `ws` (the zero-allocation training path).
+    pub fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut crate::linalg::Workspace) {
+        match self {
+            ModuleOp::Dense(w) => crate::linalg::matmul_into(x, w, y),
+            ModuleOp::Adapted(a) => a.forward_into(x, y, ws),
+        }
+    }
+
+    /// Output width of this module.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            ModuleOp::Dense(w) => w.cols,
+            ModuleOp::Adapted(a) => a.shape().1,
+        }
+    }
 }
 
 /// The runnable model: backbone + adapters + head.

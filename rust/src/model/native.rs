@@ -5,10 +5,18 @@
 //! next-token loss) so the two backends are numerically comparable. Used by
 //! `cargo test`/`cargo bench` without artifacts, by ablations that need
 //! loss-level hooks (Table 6's regularizer), and by pretraining.
+//!
+//! The training hot path is allocation-free at steady state: all
+//! activations, attention probabilities, loss scratch, and the flat
+//! gradient vector live in a [`StepBuffers`] sized once per
+//! (batch-shape, model), and every transient comes from a
+//! [`Workspace`] pool (see `linalg::workspace` for the keying and
+//! aliasing rules). [`train_grads`]/[`evaluate`] remain as allocating
+//! convenience wrappers over [`train_grads_into`]/[`evaluate_into`].
 
-use super::{ModuleOp, NativeModel};
+use super::{Layer, ModuleOp, NativeModel};
 use crate::config::{Arch, ModuleKind};
-use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use crate::linalg::{matmul_into, matmul_nt_into, matmul_tn_acc_slice, Mat, Workspace};
 
 /// One batch of examples.
 #[derive(Clone, Debug)]
@@ -78,9 +86,9 @@ fn silu_grad(x: f32) -> f32 {
 
 const NORM_EPS: f32 = 1e-5;
 
-/// LayerNorm with unit gain / zero bias (norm params frozen at init).
-fn layernorm(x: &Mat) -> Mat {
-    let mut out = Mat::zeros(x.rows, x.cols);
+/// LayerNorm with unit gain / zero bias (norm params frozen at init),
+/// writing into a caller-provided buffer.
+fn layernorm_into(x: &Mat, out: &mut Mat) {
     let n = x.cols as f32;
     for t in 0..x.rows {
         let row = x.row(t);
@@ -91,12 +99,10 @@ fn layernorm(x: &Mat) -> Mat {
             *o = (v - mu) * inv;
         }
     }
-    out
 }
 
-/// Backward of unit-gain LayerNorm.
-fn layernorm_backward(x: &Mat, dy: &Mat) -> Mat {
-    let mut dx = Mat::zeros(x.rows, x.cols);
+/// Backward of unit-gain LayerNorm (no per-row temporaries).
+fn layernorm_backward_into(x: &Mat, dy: &Mat, dx: &mut Mat) {
     let n = x.cols as f32;
     for t in 0..x.rows {
         let row = x.row(t);
@@ -104,19 +110,20 @@ fn layernorm_backward(x: &Mat, dy: &Mat) -> Mat {
         let mu: f32 = row.iter().sum::<f32>() / n;
         let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
         let inv = 1.0 / (var + NORM_EPS).sqrt();
-        let xhat: Vec<f32> = row.iter().map(|&v| (v - mu) * inv).collect();
         let mean_g: f32 = g.iter().sum::<f32>() / n;
-        let mean_gx: f32 = g.iter().zip(&xhat).map(|(&a, &b)| a * b).sum::<f32>() / n;
+        let mut mean_gx = 0.0f32;
         for j in 0..x.cols {
-            dx[(t, j)] = inv * (g[j] - mean_g - xhat[j] * mean_gx);
+            mean_gx += g[j] * (row[j] - mu) * inv;
+        }
+        mean_gx /= n;
+        for j in 0..x.cols {
+            dx[(t, j)] = inv * (g[j] - mean_g - (row[j] - mu) * inv * mean_gx);
         }
     }
-    dx
 }
 
-/// RMSNorm with unit gain.
-fn rmsnorm(x: &Mat) -> Mat {
-    let mut out = Mat::zeros(x.rows, x.cols);
+/// RMSNorm with unit gain, writing into a caller-provided buffer.
+fn rmsnorm_into(x: &Mat, out: &mut Mat) {
     let n = x.cols as f32;
     for t in 0..x.rows {
         let row = x.row(t);
@@ -126,11 +133,9 @@ fn rmsnorm(x: &Mat) -> Mat {
             *o = v * inv;
         }
     }
-    out
 }
 
-fn rmsnorm_backward(x: &Mat, dy: &Mat) -> Mat {
-    let mut dx = Mat::zeros(x.rows, x.cols);
+fn rmsnorm_backward_into(x: &Mat, dy: &Mat, dx: &mut Mat) {
     let n = x.cols as f32;
     for t in 0..x.rows {
         let row = x.row(t);
@@ -143,20 +148,17 @@ fn rmsnorm_backward(x: &Mat, dy: &Mat) -> Mat {
             dx[(t, j)] = g[j] * inv - row[j] * coef;
         }
     }
-    dx
 }
 
 // ---------------------------------------------------------------------------
 // Attention
 // ---------------------------------------------------------------------------
 
-struct AttnCache {
-    /// Softmax probabilities per (batch·head): [S, S].
-    probs: Vec<Mat>,
-}
-
-/// Multi-head attention over [B·S, d] activations.
-fn attention(
+/// Multi-head attention over [B·S, d] activations. Softmax probabilities
+/// are written into `probs` (one preallocated [S, S] matrix per
+/// batch·head, fully overwritten) and the attention output into `out`.
+#[allow(clippy::too_many_arguments)]
+fn attention_into(
     q: &Mat,
     k: &Mat,
     v: &Mat,
@@ -165,17 +167,18 @@ fn attention(
     heads: usize,
     pad: &[f32],
     causal: bool,
-) -> (Mat, AttnCache) {
+    probs: &mut [Mat],
+    out: &mut Mat,
+) {
     let d = q.cols;
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = Mat::zeros(q.rows, d);
-    let mut probs = Vec::with_capacity(batch * heads);
+    out.fill(0.0);
     for b in 0..batch {
         for h in 0..heads {
             let col0 = h * hd;
+            let p = &mut probs[b * heads + h];
             // scores[s1, s2] = q_b[s1]·k_b[s2] / √hd (+ masks)
-            let mut p = Mat::zeros(seq, seq);
             for s1 in 0..seq {
                 let qrow = &q.row(b * seq + s1)[col0..col0 + hd];
                 for s2 in 0..seq {
@@ -219,35 +222,39 @@ fn attention(
                     }
                 }
             }
-            probs.push(p);
         }
     }
-    (out, AttnCache { probs })
 }
 
-/// Backward of `attention`: returns (dq, dk, dv).
-fn attention_backward(
+/// Backward of `attention_into`: overwrites (dq, dk, dv). The [S, S]
+/// softmax-gradient scratch comes from `ws`.
+#[allow(clippy::too_many_arguments)]
+fn attention_backward_into(
     q: &Mat,
     k: &Mat,
     v: &Mat,
-    cache: &AttnCache,
+    probs: &[Mat],
     d_out: &Mat,
     batch: usize,
     seq: usize,
     heads: usize,
-) -> (Mat, Mat, Mat) {
+    dq: &mut Mat,
+    dk: &mut Mat,
+    dv: &mut Mat,
+    ws: &mut Workspace,
+) {
     let d = q.cols;
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut dq = Mat::zeros(q.rows, d);
-    let mut dk = Mat::zeros(q.rows, d);
-    let mut dv = Mat::zeros(q.rows, d);
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
+    let mut dp = ws.acquire(seq, seq);
     for b in 0..batch {
         for h in 0..heads {
             let col0 = h * hd;
-            let p = &cache.probs[b * heads + h];
+            let p = &probs[b * heads + h];
             // dV[s2] += Σ_s1 P[s1,s2]·dO[s1]; dP[s1,s2] = dO[s1]·V[s2].
-            let mut dp = Mat::zeros(seq, seq);
             for s1 in 0..seq {
                 let dorow = &d_out.row(b * seq + s1)[col0..col0 + hd];
                 for s2 in 0..seq {
@@ -291,21 +298,24 @@ fn attention_backward(
             }
         }
     }
-    (dq, dk, dv)
+    ws.release(dp);
 }
 
 // ---------------------------------------------------------------------------
-// Forward with caches
+// Step buffers (preallocated per batch-shape × model)
 // ---------------------------------------------------------------------------
 
+/// Per-layer cached activations, written in place every forward pass.
 struct LayerCache {
     x_in: Mat,
     h1: Mat,
     q: Mat,
     k: Mat,
     v: Mat,
-    attn: AttnCache,
-    att_out: Mat,
+    /// Softmax probabilities per (batch·head): [S, S].
+    probs: Vec<Mat>,
+    /// Pre-O attention output (cached so backward never recomputes it).
+    att: Mat,
     x_mid: Mat,
     h2: Mat,
     up_pre: Mat,
@@ -313,135 +323,325 @@ struct LayerCache {
     ff_act: Mat,
 }
 
-struct ForwardCache {
+/// Offsets of each gradient destination inside the flat gradient vector
+/// (same layout as `NativeModel::trainable_flat`).
+#[derive(Default)]
+struct GradOffsets {
+    /// Per adapter slot (layer-major, module order), offset of its
+    /// parameter-gradient block.
+    adapters: Vec<usize>,
+    head_w: usize,
+    head_b: usize,
+    tok: usize,
+    pos: usize,
+    lm: usize,
+    total: usize,
+}
+
+impl GradOffsets {
+    fn compute(model: &NativeModel) -> GradOffsets {
+        let mut adapters = Vec::new();
+        let mut off = 0usize;
+        for layer in &model.layers {
+            for (_, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    adapters.push(off);
+                    off += a.num_params();
+                }
+            }
+        }
+        let head_w = off;
+        let mut head_b = off;
+        if model.cfg.arch == Arch::Encoder {
+            head_b = head_w + model.head_w.data.len();
+            off = head_b + model.head_b.len();
+        }
+        let tok = off;
+        let mut pos = off;
+        let mut lm = off;
+        if model.train_embeddings {
+            pos = tok + model.tok_emb.data.len();
+            off = pos + model.pos_emb.data.len();
+            lm = off;
+            if let Some(h) = &model.lm_head {
+                off += h.data.len();
+            }
+        }
+        GradOffsets { adapters, head_w, head_b, tok, pos, lm, total: off }
+    }
+}
+
+/// Loss-head scratch (encoder CLS head and decoder LM head variants).
+struct LossBufs {
+    cls: Mat,
+    logits: Mat,
+    dlogits: Mat,
+    dcls: Mat,
+    /// Gathered masked hidden rows [M, d]; resized (within capacity) to
+    /// the step's masked-row count.
+    h_sel: Mat,
+    lm_logits: Mat,
+    dh_sel: Mat,
+    /// (position, target token, weight) per masked prediction.
+    rows: Vec<(usize, usize, f32)>,
+    row_ok: Vec<bool>,
+}
+
+/// All persistent state one training/eval step needs, allocated once per
+/// (batch, seq) shape and reused across steps. Holding these here (plus a
+/// warm [`Workspace`] for transients) makes the steady-state step perform
+/// zero heap allocations — verified by `tests/zero_alloc.rs`.
+pub struct StepBuffers {
+    /// (batch, seq, n_layers, n_trainable) the buffers are sized for —
+    /// the model components guard against reuse across models.
+    key: Option<(usize, usize, usize, usize)>,
     layers: Vec<LayerCache>,
     final_in: Mat,
     hidden: Mat,
+    d_hidden: Mat,
+    dx: Mat,
+    loss: LossBufs,
+    /// Per-example predictions of the last step (class id / regression
+    /// value / EM fraction).
+    pub preds: Vec<f32>,
+    /// Flat gradient vector (layout of `NativeModel::trainable_flat`).
+    pub grads: Vec<f32>,
+    offs: GradOffsets,
+}
+
+impl Default for StepBuffers {
+    fn default() -> Self {
+        StepBuffers::new()
+    }
+}
+
+impl StepBuffers {
+    pub fn new() -> StepBuffers {
+        StepBuffers {
+            key: None,
+            layers: Vec::new(),
+            final_in: Mat::zeros(0, 0),
+            hidden: Mat::zeros(0, 0),
+            d_hidden: Mat::zeros(0, 0),
+            dx: Mat::zeros(0, 0),
+            loss: LossBufs {
+                cls: Mat::zeros(0, 0),
+                logits: Mat::zeros(0, 0),
+                dlogits: Mat::zeros(0, 0),
+                dcls: Mat::zeros(0, 0),
+                h_sel: Mat::zeros(0, 0),
+                lm_logits: Mat::zeros(0, 0),
+                dh_sel: Mat::zeros(0, 0),
+                rows: Vec::new(),
+                row_ok: Vec::new(),
+            },
+            preds: Vec::new(),
+            grads: Vec::new(),
+            offs: GradOffsets::default(),
+        }
+    }
+
+    /// (Re)allocate every buffer for this (model, batch-shape) pair. A
+    /// no-op when the shape matches the previous call — the steady-state
+    /// path.
+    fn ensure(&mut self, model: &NativeModel, batch: &Batch) {
+        let key = (batch.batch, batch.seq, model.layers.len(), model.num_trainable());
+        if self.key == Some(key) {
+            return;
+        }
+        let (bsz, seq) = (batch.batch, batch.seq);
+        let t_total = bsz * seq;
+        let cfg = &model.cfg;
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let dec = cfg.arch == Arch::Decoder;
+        self.layers = model
+            .layers
+            .iter()
+            .map(|_| LayerCache {
+                x_in: Mat::zeros(t_total, d),
+                h1: Mat::zeros(t_total, d),
+                q: Mat::zeros(t_total, d),
+                k: Mat::zeros(t_total, d),
+                v: Mat::zeros(t_total, d),
+                probs: (0..bsz * cfg.n_heads).map(|_| Mat::zeros(seq, seq)).collect(),
+                att: Mat::zeros(t_total, d),
+                x_mid: Mat::zeros(t_total, d),
+                h2: Mat::zeros(t_total, d),
+                up_pre: Mat::zeros(t_total, f),
+                gate_pre: if dec { Some(Mat::zeros(t_total, f)) } else { None },
+                ff_act: Mat::zeros(t_total, f),
+            })
+            .collect();
+        self.final_in = Mat::zeros(t_total, d);
+        self.hidden = Mat::zeros(t_total, d);
+        self.d_hidden = Mat::zeros(t_total, d);
+        self.dx = Mat::zeros(t_total, d);
+        let c = model.head_w.cols;
+        let max_m = (bsz * seq.saturating_sub(1)).max(1);
+        self.loss = LossBufs {
+            cls: Mat::zeros(bsz, d),
+            logits: Mat::zeros(bsz, c),
+            dlogits: Mat::zeros(bsz, c),
+            dcls: Mat::zeros(bsz, d),
+            h_sel: if dec { Mat::zeros(max_m, d) } else { Mat::zeros(1, 1) },
+            lm_logits: if dec { Mat::zeros(max_m, cfg.vocab_size) } else { Mat::zeros(1, 1) },
+            dh_sel: if dec { Mat::zeros(max_m, d) } else { Mat::zeros(1, 1) },
+            rows: Vec::with_capacity(if dec { max_m } else { 0 }),
+            row_ok: Vec::with_capacity(if dec { max_m } else { 0 }),
+        };
+        self.preds = Vec::with_capacity(bsz);
+        self.offs = GradOffsets::compute(model);
+        assert_eq!(self.offs.total, model.num_trainable(), "gradient layout mismatch");
+        self.grads = vec![0.0; self.offs.total];
+        self.key = Some(key);
+    }
 }
 
 fn module<'a>(layer: &'a super::Layer, kind: ModuleKind) -> &'a ModuleOp {
     &layer.modules.iter().find(|(m, _)| *m == kind).expect("module").1
 }
 
-fn forward(model: &NativeModel, batch: &Batch) -> ForwardCache {
+// ---------------------------------------------------------------------------
+// Forward (into cached buffers)
+// ---------------------------------------------------------------------------
+
+fn forward_cached(model: &NativeModel, batch: &Batch, bufs: &mut StepBuffers, ws: &mut Workspace) {
     let (bsz, seq) = (batch.batch, batch.seq);
     let d = model.cfg.d_model;
     let t_total = bsz * seq;
     let enc = model.cfg.arch == Arch::Encoder;
+    let heads = model.cfg.n_heads;
+    let nl = model.layers.len();
 
-    // Embeddings.
-    let mut x = Mat::zeros(t_total, d);
-    for b in 0..bsz {
-        for s in 0..seq {
-            let t = b * seq + s;
-            let tok = batch.tokens[t] as usize;
-            let erow = model.tok_emb.row(tok);
-            let prow = model.pos_emb.row(s);
-            for (o, (&e, &p)) in x.row_mut(t).iter_mut().zip(erow.iter().zip(prow)) {
-                *o = e + p;
+    // Embeddings into the first layer's input.
+    {
+        let x0: &mut Mat = if nl > 0 { &mut bufs.layers[0].x_in } else { &mut bufs.final_in };
+        for b in 0..bsz {
+            for s in 0..seq {
+                let t = b * seq + s;
+                let tok = batch.tokens[t] as usize;
+                let erow = model.tok_emb.row(tok);
+                let prow = model.pos_emb.row(s);
+                for (o, (&e, &p)) in x0.row_mut(t).iter_mut().zip(erow.iter().zip(prow)) {
+                    *o = e + p;
+                }
             }
         }
     }
 
-    let mut layers = Vec::with_capacity(model.layers.len());
-    for layer in &model.layers {
-        let x_in = x.clone();
-        let h1 = if enc { layernorm(&x_in) } else { rmsnorm(&x_in) };
-        let q = module(layer, ModuleKind::Q).forward(&h1);
-        let k = module(layer, ModuleKind::K).forward(&h1);
-        let v = module(layer, ModuleKind::V).forward(&h1);
-        let (att, attn) =
-            attention(&q, &k, &v, bsz, seq, model.cfg.n_heads, &batch.pad, !enc);
-        let att_out = module(layer, ModuleKind::O).forward(&att);
-        let mut x_mid = x_in.clone();
-        x_mid.add_assign(&att_out);
-
-        let h2 = if enc { layernorm(&x_mid) } else { rmsnorm(&x_mid) };
-        let up_pre = module(layer, ModuleKind::U).forward(&h2);
-        let (gate_pre, ff_act) = if enc {
-            let mut act = up_pre.clone();
-            for v in act.data.iter_mut() {
-                *v = gelu(*v);
-            }
-            (None, act)
-        } else {
-            let gate = module(layer, ModuleKind::G).forward(&h2);
-            let mut act = Mat::zeros(up_pre.rows, up_pre.cols);
-            for i in 0..act.data.len() {
-                act.data[i] = silu(gate.data[i]) * up_pre.data[i];
-            }
-            (Some(gate), act)
+    for (li, layer) in model.layers.iter().enumerate() {
+        let (cur, rest) = bufs.layers[li..].split_first_mut().unwrap();
+        let x_out: &mut Mat = match rest.first_mut() {
+            Some(next) => &mut next.x_in,
+            None => &mut bufs.final_in,
         };
-        let down = module(layer, ModuleKind::D).forward(&ff_act);
-        let mut x_out = x_mid.clone();
-        x_out.add_assign(&down);
+        if enc {
+            layernorm_into(&cur.x_in, &mut cur.h1);
+        } else {
+            rmsnorm_into(&cur.x_in, &mut cur.h1);
+        }
+        module(layer, ModuleKind::Q).forward_into(&cur.h1, &mut cur.q, ws);
+        module(layer, ModuleKind::K).forward_into(&cur.h1, &mut cur.k, ws);
+        module(layer, ModuleKind::V).forward_into(&cur.h1, &mut cur.v, ws);
+        attention_into(
+            &cur.q,
+            &cur.k,
+            &cur.v,
+            bsz,
+            seq,
+            heads,
+            &batch.pad,
+            !enc,
+            &mut cur.probs,
+            &mut cur.att,
+        );
+        let mut att_out = ws.acquire(t_total, d);
+        module(layer, ModuleKind::O).forward_into(&cur.att, &mut att_out, ws);
+        cur.x_mid.copy_from(&cur.x_in);
+        cur.x_mid.add_assign(&att_out);
+        ws.release(att_out);
 
-        layers.push(LayerCache {
-            x_in,
-            h1,
-            q,
-            k,
-            v,
-            attn,
-            att_out,
-            x_mid,
-            h2,
-            up_pre,
-            gate_pre,
-            ff_act,
-        });
-        x = x_out;
+        if enc {
+            layernorm_into(&cur.x_mid, &mut cur.h2);
+        } else {
+            rmsnorm_into(&cur.x_mid, &mut cur.h2);
+        }
+        module(layer, ModuleKind::U).forward_into(&cur.h2, &mut cur.up_pre, ws);
+        if enc {
+            for (a, &u) in cur.ff_act.data.iter_mut().zip(&cur.up_pre.data) {
+                *a = gelu(u);
+            }
+        } else {
+            let gate = cur.gate_pre.as_mut().unwrap();
+            module(layer, ModuleKind::G).forward_into(&cur.h2, gate, ws);
+            for i in 0..cur.ff_act.data.len() {
+                cur.ff_act.data[i] = silu(gate.data[i]) * cur.up_pre.data[i];
+            }
+        }
+        let mut down = ws.acquire(t_total, d);
+        module(layer, ModuleKind::D).forward_into(&cur.ff_act, &mut down, ws);
+        x_out.copy_from(&cur.x_mid);
+        x_out.add_assign(&down);
+        ws.release(down);
     }
 
-    let final_in = x;
-    let hidden = if enc { layernorm(&final_in) } else { rmsnorm(&final_in) };
-    ForwardCache { layers, final_in, hidden }
+    if enc {
+        layernorm_into(&bufs.final_in, &mut bufs.hidden);
+    } else {
+        rmsnorm_into(&bufs.final_in, &mut bufs.hidden);
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Losses
 // ---------------------------------------------------------------------------
 
-/// Loss + metric + preds + gradient w.r.t. the final hidden states, plus
-/// (encoder) head gradients.
-struct LossResult {
-    loss: f64,
-    metric: f64,
-    preds: Vec<f32>,
-    d_hidden: Mat,
-    d_head_w: Option<Mat>,
-    d_head_b: Option<Vec<f32>>,
-    d_lm_head: Option<Mat>,
-}
-
-fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult {
+/// Loss + metric + preds; with `want_grads`, also the gradient w.r.t. the
+/// final hidden states (into `d_hidden`) and the head gradients (written
+/// straight into `grads` at their flat offsets).
+#[allow(clippy::too_many_arguments)]
+fn loss_backward_into(
+    model: &NativeModel,
+    batch: &Batch,
+    hidden: &Mat,
+    lb: &mut LossBufs,
+    d_hidden: &mut Mat,
+    grads: &mut [f32],
+    offs: &GradOffsets,
+    preds: &mut Vec<f32>,
+    want_grads: bool,
+) -> (f64, f64) {
     let (bsz, seq) = (batch.batch, batch.seq);
     let d = model.cfg.d_model;
+    preds.clear();
     match (&batch.target, model.cfg.arch) {
         (Target::Class(labels), Arch::Encoder) => {
             let c = model.cfg.n_classes;
-            // CLS rows.
-            let mut cls = Mat::zeros(bsz, d);
             for b in 0..bsz {
-                cls.row_mut(b).copy_from_slice(hidden.row(b * seq));
+                lb.cls.row_mut(b).copy_from_slice(hidden.row(b * seq));
             }
-            let mut logits = matmul(&cls, &model.head_w);
+            matmul_into(&lb.cls, &model.head_w, &mut lb.logits);
             for b in 0..bsz {
                 for j in 0..c {
-                    logits[(b, j)] += model.head_b[j];
+                    lb.logits[(b, j)] += model.head_b[j];
                 }
             }
             let mut loss = 0.0f64;
             let mut correct = 0.0f64;
-            let mut preds = Vec::with_capacity(bsz);
-            let mut dlogits = Mat::zeros(bsz, c);
             for b in 0..bsz {
-                let row = logits.row(b);
+                let row = lb.logits.row(b);
                 let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
-                let z: f32 = exps.iter().sum();
                 let label = labels[b];
-                loss += -((exps[label] / z).max(1e-30) as f64).ln();
+                // exp into the dlogits row; z accumulates the partition.
+                let mut z = 0.0f32;
+                {
+                    let drow = lb.dlogits.row_mut(b);
+                    for j in 0..c {
+                        drow[j] = (row[j] - max).exp();
+                        z += drow[j];
+                    }
+                }
+                loss += -(((lb.dlogits[(b, label)] / z).max(1e-30)) as f64).ln();
                 let pred = row
                     .iter()
                     .enumerate()
@@ -452,67 +652,69 @@ fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult
                 if pred == label {
                     correct += 1.0;
                 }
-                for j in 0..c {
-                    let p = exps[j] / z;
-                    dlogits[(b, j)] = (p - if j == label { 1.0 } else { 0.0 }) / bsz as f32;
+                let drow = lb.dlogits.row_mut(b);
+                for (j, v) in drow.iter_mut().enumerate() {
+                    let p = *v / z;
+                    *v = (p - if j == label { 1.0 } else { 0.0 }) / bsz as f32;
                 }
             }
             loss /= bsz as f64;
-            let d_head_w = matmul_tn(&cls, &dlogits);
-            let d_head_b: Vec<f32> = (0..c).map(|j| (0..bsz).map(|b| dlogits[(b, j)]).sum()).collect();
-            let dcls = matmul_nt(&dlogits, &model.head_w);
-            let mut d_hidden = Mat::zeros(hidden.rows, d);
-            for b in 0..bsz {
-                d_hidden.row_mut(b * seq).copy_from_slice(dcls.row(b));
+            if want_grads {
+                let cw = model.head_w.cols;
+                matmul_tn_acc_slice(
+                    &lb.cls,
+                    &lb.dlogits,
+                    &mut grads[offs.head_w..offs.head_w + d * cw],
+                );
+                for j in 0..c {
+                    for b in 0..bsz {
+                        grads[offs.head_b + j] += lb.dlogits[(b, j)];
+                    }
+                }
+                matmul_nt_into(&lb.dlogits, &model.head_w, &mut lb.dcls);
+                d_hidden.fill(0.0);
+                for b in 0..bsz {
+                    d_hidden.row_mut(b * seq).copy_from_slice(lb.dcls.row(b));
+                }
             }
-            LossResult {
-                loss,
-                metric: correct,
-                preds,
-                d_hidden,
-                d_head_w: Some(d_head_w),
-                d_head_b: Some(d_head_b),
-                d_lm_head: None,
-            }
+            (loss, correct)
         }
         (Target::Reg(values), Arch::Encoder) => {
-            let mut cls = Mat::zeros(bsz, d);
             for b in 0..bsz {
-                cls.row_mut(b).copy_from_slice(hidden.row(b * seq));
+                lb.cls.row_mut(b).copy_from_slice(hidden.row(b * seq));
             }
-            let mut logits = matmul(&cls, &model.head_w); // [B, 1]
+            matmul_into(&lb.cls, &model.head_w, &mut lb.logits); // [B, 1]
             for b in 0..bsz {
-                logits[(b, 0)] += model.head_b[0];
+                lb.logits[(b, 0)] += model.head_b[0];
             }
             let mut loss = 0.0f64;
-            let mut preds = Vec::with_capacity(bsz);
-            let mut dlogits = Mat::zeros(bsz, 1);
             let mut neg_sq = 0.0f64;
             for b in 0..bsz {
-                let pred = logits[(b, 0)];
+                let pred = lb.logits[(b, 0)];
                 preds.push(pred);
                 let err = pred - values[b];
                 loss += (err * err) as f64;
                 neg_sq -= (err * err) as f64;
-                dlogits[(b, 0)] = 2.0 * err / bsz as f32;
+                lb.dlogits[(b, 0)] = 2.0 * err / bsz as f32;
             }
             loss /= bsz as f64;
-            let d_head_w = matmul_tn(&cls, &dlogits);
-            let d_head_b = vec![(0..bsz).map(|b| dlogits[(b, 0)]).sum::<f32>()];
-            let dcls = matmul_nt(&dlogits, &model.head_w);
-            let mut d_hidden = Mat::zeros(hidden.rows, d);
-            for b in 0..bsz {
-                d_hidden.row_mut(b * seq).copy_from_slice(dcls.row(b));
+            if want_grads {
+                let cw = model.head_w.cols;
+                matmul_tn_acc_slice(
+                    &lb.cls,
+                    &lb.dlogits,
+                    &mut grads[offs.head_w..offs.head_w + d * cw],
+                );
+                for b in 0..bsz {
+                    grads[offs.head_b] += lb.dlogits[(b, 0)];
+                }
+                matmul_nt_into(&lb.dlogits, &model.head_w, &mut lb.dcls);
+                d_hidden.fill(0.0);
+                for b in 0..bsz {
+                    d_hidden.row_mut(b * seq).copy_from_slice(lb.dcls.row(b));
+                }
             }
-            LossResult {
-                loss,
-                metric: neg_sq,
-                preds,
-                d_hidden,
-                d_head_w: Some(d_head_w),
-                d_head_b: Some(d_head_b),
-                d_lm_head: None,
-            }
+            (loss, neg_sq)
         }
         (Target::LmMask(mask), Arch::Decoder) => {
             let lm = model.lm_head.as_ref().expect("decoder lm_head");
@@ -522,30 +724,35 @@ fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult
             // one [M, d]×[d, V] matmul for logits, row softmax, then two
             // matmuls for d_hidden and d_lm_head. (§Perf L3: this replaced
             // a scalar per-position loop — see EXPERIMENTS.md.)
-            let mut rows: Vec<(usize, usize, f32)> = Vec::new(); // (t, target, w)
+            lb.rows.clear();
             let mut denom = 0.0f64;
             for b in 0..bsz {
                 for s in 0..seq - 1 {
                     let w = mask[b * seq + s + 1];
                     denom += w as f64;
                     if w > 0.0 {
-                        rows.push((b * seq + s, batch.tokens[b * seq + s + 1] as usize, w));
+                        lb.rows.push((b * seq + s, batch.tokens[b * seq + s + 1] as usize, w));
                     }
                 }
             }
             let denom = denom.max(1.0);
-            let m = rows.len();
-            let mut h_sel = Mat::zeros(m.max(1), d);
-            for (ri, &(t, _, _)) in rows.iter().enumerate() {
-                h_sel.row_mut(ri).copy_from_slice(hidden.row(t));
+            let m = lb.rows.len();
+            lb.h_sel.resize(m.max(1), d);
+            if m == 0 {
+                lb.h_sel.fill(0.0);
             }
-            let mut logits = matmul(&h_sel, lm); // [M, V]
+            for (ri, &(t, _, _)) in lb.rows.iter().enumerate() {
+                lb.h_sel.row_mut(ri).copy_from_slice(hidden.row(t));
+            }
+            lb.lm_logits.resize(m.max(1), vsz);
+            matmul_into(&lb.h_sel, lm, &mut lb.lm_logits); // [M, V]
             let mut loss = 0.0f64;
-            let mut row_ok = vec![true; m];
-            // Softmax in place → dlogits.
+            lb.row_ok.clear();
+            lb.row_ok.resize(m, true);
+            // Softmax in place → dlogits (scaled by w/denom).
             for ri in 0..m {
-                let (_, target, w) = rows[ri];
-                let row = logits.row_mut(ri);
+                let (_, target, w) = lb.rows[ri];
+                let row = lb.lm_logits.row_mut(ri);
                 let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let mut z = 0.0f32;
                 let mut argmax = 0;
@@ -559,7 +766,7 @@ fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult
                     z += *v;
                 }
                 loss += -(((row[target] / z).max(1e-30)) as f64).ln() * w as f64;
-                row_ok[ri] = argmax == target;
+                lb.row_ok[ri] = argmax == target;
                 let coef = w / denom as f32;
                 for (j, v) in row.iter_mut().enumerate() {
                     let p = *v / z;
@@ -567,26 +774,38 @@ fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult
                 }
             }
             loss /= denom;
-            let dlogits = logits; // renamed: now holds gradients
-            // d_hidden rows and d_lm via matmuls.
-            let d_lm = if m > 0 { matmul_tn(&h_sel, &dlogits) } else { Mat::zeros(d, vsz) };
-            let dh_sel = if m > 0 { matmul_nt(&dlogits, lm) } else { Mat::zeros(1, d) };
-            let mut d_hidden = Mat::zeros(hidden.rows, d);
-            for (ri, &(t, _, _)) in rows.iter().enumerate() {
-                d_hidden.row_mut(t).copy_from_slice(dh_sel.row(ri));
+            if want_grads {
+                // d_lm_head only when the LM head is trainable
+                // (pretraining); fine-tuning leaves it frozen and skips
+                // the [d × V] product entirely.
+                if model.train_embeddings && m > 0 {
+                    matmul_tn_acc_slice(
+                        &lb.h_sel,
+                        &lb.lm_logits,
+                        &mut grads[offs.lm..offs.lm + d * vsz],
+                    );
+                }
+                d_hidden.fill(0.0);
+                if m > 0 {
+                    lb.dh_sel.resize(m, d);
+                    matmul_nt_into(&lb.lm_logits, lm, &mut lb.dh_sel);
+                    for (ri, &(t, _, _)) in lb.rows.iter().enumerate() {
+                        d_hidden.row_mut(t).copy_from_slice(lb.dh_sel.row(ri));
+                    }
+                }
             }
             // Per-example answer-token accuracy (graded EM: fraction of
             // masked tokens predicted exactly; equals exact match for
             // single-token answers).
-            let mut preds = vec![0.0f32; bsz];
+            preds.resize(bsz, 0.0); // cleared above, so every slot is 0.0
             let mut em_total = 0.0f64;
             for b in 0..bsz {
                 let mut hits = 0usize;
                 let mut total = 0usize;
-                for (ri, &(t, _, _)) in rows.iter().enumerate() {
+                for (ri, &(t, _, _)) in lb.rows.iter().enumerate() {
                     if t / seq == b {
                         total += 1;
-                        hits += row_ok[ri] as usize;
+                        hits += lb.row_ok[ri] as usize;
                     }
                 }
                 if total > 0 {
@@ -594,17 +813,47 @@ fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult
                     em_total += preds[b] as f64;
                 }
             }
-            LossResult {
-                loss,
-                metric: em_total,
-                preds,
-                d_hidden,
-                d_head_w: None,
-                d_head_b: None,
-                d_lm_head: Some(d_lm),
-            }
+            (loss, em_total)
         }
         _ => panic!("target type does not match architecture"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backward helpers
+// ---------------------------------------------------------------------------
+
+/// Backward through one linear module: overwrites `dx_out` with dL/dx and
+/// accumulates adapter parameter gradients into their flat-grads block.
+#[allow(clippy::too_many_arguments)]
+fn back_module_into(
+    layer: &Layer,
+    slot_base: usize,
+    offs: &GradOffsets,
+    grads: &mut [f32],
+    kind: ModuleKind,
+    x_in: &Mat,
+    dy: &Mat,
+    dx_out: &mut Mat,
+    ws: &mut Workspace,
+) {
+    match module(layer, kind) {
+        ModuleOp::Dense(w) => matmul_nt_into(dy, w, dx_out),
+        ModuleOp::Adapted(a) => {
+            // Slot index of `kind` among this layer's adapted modules.
+            let mut idx = 0;
+            for (m, op) in &layer.modules {
+                if matches!(op, ModuleOp::Adapted(_)) {
+                    if *m == kind {
+                        break;
+                    }
+                    idx += 1;
+                }
+            }
+            let off = offs.adapters[slot_base + idx];
+            let n = a.num_params();
+            a.backward_into(x_in, dy, &mut grads[off..off + n], dx_out, ws);
+        }
     }
 }
 
@@ -612,22 +861,72 @@ fn loss_backward(model: &NativeModel, batch: &Batch, hidden: &Mat) -> LossResult
 // Public API
 // ---------------------------------------------------------------------------
 
-/// Forward-only evaluation.
-pub fn evaluate(model: &NativeModel, batch: &Batch) -> StepOutput {
-    let cache = forward(model, batch);
-    let lr = loss_backward(model, batch, &cache.hidden);
-    StepOutput { loss: lr.loss, metric: lr.metric, preds: lr.preds }
+/// Forward-only evaluation into reusable buffers; returns (loss, metric)
+/// and leaves per-example predictions in `bufs.preds`.
+pub fn evaluate_into(
+    model: &NativeModel,
+    batch: &Batch,
+    bufs: &mut StepBuffers,
+    ws: &mut Workspace,
+) -> (f64, f64) {
+    bufs.ensure(model, batch);
+    forward_cached(model, batch, bufs, ws);
+    loss_backward_into(
+        model,
+        batch,
+        &bufs.hidden,
+        &mut bufs.loss,
+        &mut bufs.d_hidden,
+        &mut bufs.grads,
+        &bufs.offs,
+        &mut bufs.preds,
+        false,
+    )
 }
 
-/// Forward + backward: returns step output and the flat gradient vector
-/// (same layout as `NativeModel::trainable_flat`). `gamma` adds the
-/// Table 6 orthogonality regularizer where the adapter supports it.
-pub fn train_grads(model: &NativeModel, batch: &Batch, gamma: f64) -> (StepOutput, Vec<f32>) {
+/// Forward-only evaluation (allocating convenience wrapper).
+pub fn evaluate(model: &NativeModel, batch: &Batch) -> StepOutput {
+    let mut bufs = StepBuffers::new();
+    let mut ws = Workspace::new();
+    let (loss, metric) = evaluate_into(model, batch, &mut bufs, &mut ws);
+    StepOutput { loss, metric, preds: bufs.preds.clone() }
+}
+
+/// Forward + backward into reusable buffers: returns (loss, metric) and
+/// leaves the flat gradient vector (layout of
+/// `NativeModel::trainable_flat`) in `bufs.grads` and the per-example
+/// predictions in `bufs.preds`. `gamma` adds the Table 6 orthogonality
+/// regularizer where the adapter supports it. Allocation-free at steady
+/// state (warm `bufs` + `ws`, γ = 0).
+pub fn train_grads_into(
+    model: &NativeModel,
+    batch: &Batch,
+    gamma: f64,
+    bufs: &mut StepBuffers,
+    ws: &mut Workspace,
+) -> (f64, f64) {
+    bufs.ensure(model, batch);
     let (bsz, seq) = (batch.batch, batch.seq);
+    let t_total = bsz * seq;
     let enc = model.cfg.arch == Arch::Encoder;
     let heads = model.cfg.n_heads;
-    let cache = forward(model, batch);
-    let mut lr = loss_backward(model, batch, &cache.hidden);
+    let d = model.cfg.d_model;
+
+    forward_cached(model, batch, bufs, ws);
+    for g in bufs.grads.iter_mut() {
+        *g = 0.0;
+    }
+    let (mut loss, metric) = loss_backward_into(
+        model,
+        batch,
+        &bufs.hidden,
+        &mut bufs.loss,
+        &mut bufs.d_hidden,
+        &mut bufs.grads,
+        &bufs.offs,
+        &mut bufs.preds,
+        true,
+    );
 
     // Regularizer contribution to the loss value.
     if gamma > 0.0 {
@@ -639,31 +938,23 @@ pub fn train_grads(model: &NativeModel, batch: &Batch, gamma: f64) -> (StepOutpu
                 ModuleOp::Adapted(a) => a.orth_defect(),
                 _ => None,
             })
-            .map(|d| d * d)
+            .map(|dd| dd * dd)
             .sum();
-        lr.loss += gamma * defect_sq;
+        loss += gamma * defect_sq;
     }
 
     // Back through the final norm.
-    let mut dx = if enc {
-        layernorm_backward(&cache.final_in, &lr.d_hidden)
+    if enc {
+        layernorm_backward_into(&bufs.final_in, &bufs.d_hidden, &mut bufs.dx);
     } else {
-        rmsnorm_backward(&cache.final_in, &lr.d_hidden)
-    };
-
-    // Adapter gradient slots in forward order.
-    let mut adapter_grads: Vec<Vec<f32>> = Vec::new();
-    for layer in &model.layers {
-        for (_, op) in &layer.modules {
-            if let ModuleOp::Adapted(a) = op {
-                adapter_grads.push(vec![0.0; a.num_params()]);
-            }
-        }
+        rmsnorm_backward_into(&bufs.final_in, &bufs.d_hidden, &mut bufs.dx);
     }
 
-    // Walk layers in reverse.
-    for (li, layer) in model.layers.iter().enumerate().rev() {
-        let lc = &cache.layers[li];
+    // Walk layers in reverse; `bufs.dx` always carries dL/d(layer output).
+    for li in (0..model.layers.len()).rev() {
+        let layer = &model.layers[li];
+        let lc = &bufs.layers[li];
+        let ff = lc.ff_act.cols;
         // Adapter slot base for this layer (adapters are ordered by layer
         // then module order).
         let slot_base: usize = model.layers[..li]
@@ -671,160 +962,206 @@ pub fn train_grads(model: &NativeModel, batch: &Batch, gamma: f64) -> (StepOutpu
             .flat_map(|l| &l.modules)
             .filter(|(_, op)| matches!(op, ModuleOp::Adapted(_)))
             .count();
-        let slot_of = |kind: ModuleKind| -> Option<usize> {
-            let mut idx = 0;
-            for (m, op) in &layer.modules {
-                if matches!(op, ModuleOp::Adapted(_)) {
-                    if *m == kind {
-                        return Some(slot_base + idx);
-                    }
-                    idx += 1;
-                }
-            }
-            None
-        };
-
-        let back_module = |kind: ModuleKind,
-                               x_in: &Mat,
-                               dy: &Mat,
-                               grads: &mut Vec<Vec<f32>>| -> Mat {
-            match module(layer, kind) {
-                ModuleOp::Dense(w) => matmul_nt(dy, w),
-                ModuleOp::Adapted(a) => {
-                    let g = a.backward(x_in, dy);
-                    let slot = slot_of(kind).expect("adapter slot");
-                    for (acc, v) in grads[slot].iter_mut().zip(&g.d_params) {
-                        *acc += v;
-                    }
-                    g.dx
-                }
-            }
-        };
 
         // FFN path: x_out = x_mid + D(ff_act).
-        let d_down_in = back_module(ModuleKind::D, &lc.ff_act, &dx, &mut adapter_grads);
-        let mut dh2;
+        let mut d_down_in = ws.acquire(t_total, ff);
+        back_module_into(
+            layer,
+            slot_base,
+            &bufs.offs,
+            &mut bufs.grads,
+            ModuleKind::D,
+            &lc.ff_act,
+            &bufs.dx,
+            &mut d_down_in,
+            ws,
+        );
+        let mut dh2 = ws.acquire(t_total, d);
         if enc {
-            // ff_act = gelu(up_pre)
-            let mut d_up = d_down_in;
-            for (g, &x) in d_up.data.iter_mut().zip(&lc.up_pre.data) {
+            // ff_act = gelu(up_pre): d_up in place on d_down_in.
+            for (g, &x) in d_down_in.data.iter_mut().zip(&lc.up_pre.data) {
                 *g *= gelu_grad(x);
             }
-            dh2 = back_module(ModuleKind::U, &lc.h2, &d_up, &mut adapter_grads);
+            back_module_into(
+                layer,
+                slot_base,
+                &bufs.offs,
+                &mut bufs.grads,
+                ModuleKind::U,
+                &lc.h2,
+                &d_down_in,
+                &mut dh2,
+                ws,
+            );
         } else {
-            // ff_act = silu(gate_pre) ⊙ up_pre
+            // ff_act = silu(gate_pre) ⊙ up_pre.
             let gate_pre = lc.gate_pre.as_ref().unwrap();
-            let mut d_up = d_down_in.clone();
-            let mut d_gate = d_down_in;
-            for i in 0..d_up.data.len() {
+            let mut d_gate = ws.acquire(t_total, ff);
+            for i in 0..d_down_in.data.len() {
                 let gp = gate_pre.data[i];
                 let up = lc.up_pre.data[i];
-                let dv = d_up.data[i];
-                d_up.data[i] = dv * silu(gp);
+                let dv = d_down_in.data[i];
                 d_gate.data[i] = dv * up * silu_grad(gp);
+                d_down_in.data[i] = dv * silu(gp); // d_up in place
             }
-            dh2 = back_module(ModuleKind::U, &lc.h2, &d_up, &mut adapter_grads);
-            let dh2_gate = back_module(ModuleKind::G, &lc.h2, &d_gate, &mut adapter_grads);
+            back_module_into(
+                layer,
+                slot_base,
+                &bufs.offs,
+                &mut bufs.grads,
+                ModuleKind::U,
+                &lc.h2,
+                &d_down_in,
+                &mut dh2,
+                ws,
+            );
+            let mut dh2_gate = ws.acquire(t_total, d);
+            back_module_into(
+                layer,
+                slot_base,
+                &bufs.offs,
+                &mut bufs.grads,
+                ModuleKind::G,
+                &lc.h2,
+                &d_gate,
+                &mut dh2_gate,
+                ws,
+            );
             dh2.add_assign(&dh2_gate);
+            ws.release(d_gate);
+            ws.release(dh2_gate);
         }
-        let d_x_mid_from_ffn = if enc {
-            layernorm_backward(&lc.x_mid, &dh2)
+        ws.release(d_down_in);
+        let mut d_x_mid_from_ffn = ws.acquire(t_total, d);
+        if enc {
+            layernorm_backward_into(&lc.x_mid, &dh2, &mut d_x_mid_from_ffn);
         } else {
-            rmsnorm_backward(&lc.x_mid, &dh2)
-        };
-        let mut d_x_mid = dx; // residual path
-        d_x_mid.add_assign(&d_x_mid_from_ffn);
+            rmsnorm_backward_into(&lc.x_mid, &dh2, &mut d_x_mid_from_ffn);
+        }
+        ws.release(dh2);
+        // d_x_mid = residual path (dx) + FFN path.
+        bufs.dx.add_assign(&d_x_mid_from_ffn);
+        ws.release(d_x_mid_from_ffn);
 
-        // Attention path: x_mid = x_in + O(att).
-        let d_att = back_module(ModuleKind::O, &{
-            // recompute att output input: att (pre-O) — we cached it? We
-            // cached att_out (post-O). Need the pre-O activations: they are
-            // the attention output. Recompute from probs·V cheaply.
-            let d = model.cfg.d_model;
-            let hd = d / heads;
-            let mut att = Mat::zeros(bsz * seq, d);
-            for b in 0..bsz {
-                for h in 0..heads {
-                    let p = &lc.attn.probs[b * heads + h];
-                    let col0 = h * hd;
-                    for s1 in 0..seq {
-                        let orow = &mut att.row_mut(b * seq + s1)[col0..col0 + hd];
-                        for s2 in 0..seq {
-                            let pv = p[(s1, s2)];
-                            if pv == 0.0 {
-                                continue;
-                            }
-                            let vrow = &lc.v.row(b * seq + s2)[col0..col0 + hd];
-                            for i in 0..hd {
-                                orow[i] += pv * vrow[i];
-                            }
-                        }
-                    }
-                }
-            }
-            att
-        }, &d_x_mid, &mut adapter_grads);
-        let (dq, dk, dv) =
-            attention_backward(&lc.q, &lc.k, &lc.v, &lc.attn, &d_att, bsz, seq, heads);
-        let mut dh1 = back_module(ModuleKind::Q, &lc.h1, &dq, &mut adapter_grads);
-        let dh1_k = back_module(ModuleKind::K, &lc.h1, &dk, &mut adapter_grads);
-        let dh1_v = back_module(ModuleKind::V, &lc.h1, &dv, &mut adapter_grads);
-        dh1.add_assign(&dh1_k);
-        dh1.add_assign(&dh1_v);
-        let d_x_in_from_attn = if enc {
-            layernorm_backward(&lc.x_in, &dh1)
+        // Attention path: x_mid = x_in + O(att), with att cached by the
+        // forward pass (no recompute).
+        let mut d_att = ws.acquire(t_total, d);
+        back_module_into(
+            layer,
+            slot_base,
+            &bufs.offs,
+            &mut bufs.grads,
+            ModuleKind::O,
+            &lc.att,
+            &bufs.dx,
+            &mut d_att,
+            ws,
+        );
+        let mut dq = ws.acquire(t_total, d);
+        let mut dk = ws.acquire(t_total, d);
+        let mut dv = ws.acquire(t_total, d);
+        attention_backward_into(
+            &lc.q, &lc.k, &lc.v, &lc.probs, &d_att, bsz, seq, heads, &mut dq, &mut dk, &mut dv,
+            ws,
+        );
+        ws.release(d_att);
+        let mut dh1 = ws.acquire(t_total, d);
+        back_module_into(
+            layer,
+            slot_base,
+            &bufs.offs,
+            &mut bufs.grads,
+            ModuleKind::Q,
+            &lc.h1,
+            &dq,
+            &mut dh1,
+            ws,
+        );
+        let mut dh1_t = ws.acquire(t_total, d);
+        back_module_into(
+            layer,
+            slot_base,
+            &bufs.offs,
+            &mut bufs.grads,
+            ModuleKind::K,
+            &lc.h1,
+            &dk,
+            &mut dh1_t,
+            ws,
+        );
+        dh1.add_assign(&dh1_t);
+        back_module_into(
+            layer,
+            slot_base,
+            &bufs.offs,
+            &mut bufs.grads,
+            ModuleKind::V,
+            &lc.h1,
+            &dv,
+            &mut dh1_t,
+            ws,
+        );
+        dh1.add_assign(&dh1_t);
+        ws.release(dh1_t);
+        ws.release(dq);
+        ws.release(dk);
+        ws.release(dv);
+        let mut d_x_in_from_attn = ws.acquire(t_total, d);
+        if enc {
+            layernorm_backward_into(&lc.x_in, &dh1, &mut d_x_in_from_attn);
         } else {
-            rmsnorm_backward(&lc.x_in, &dh1)
-        };
-        dx = d_x_mid;
-        dx.add_assign(&d_x_in_from_attn);
+            rmsnorm_backward_into(&lc.x_in, &dh1, &mut d_x_in_from_attn);
+        }
+        ws.release(dh1);
+        bufs.dx.add_assign(&d_x_in_from_attn);
+        ws.release(d_x_in_from_attn);
     }
 
-    // Assemble the flat gradient in the trainable order.
-    let mut flat = Vec::with_capacity(model.num_trainable());
-    let mut slot = 0;
-    for layer in &model.layers {
-        for (_, op) in &layer.modules {
-            if let ModuleOp::Adapted(a) = op {
-                let mut g = std::mem::take(&mut adapter_grads[slot]);
-                if gamma > 0.0 {
-                    for (gi, ri) in g.iter_mut().zip(a.orth_reg_grad(gamma)) {
+    // Regularizer gradients (γ > 0 only — off the hot path).
+    if gamma > 0.0 {
+        let mut slot = 0;
+        for layer in &model.layers {
+            for (_, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    let off = bufs.offs.adapters[slot];
+                    for (gi, ri) in
+                        bufs.grads[off..off + a.num_params()].iter_mut().zip(a.orth_reg_grad(gamma))
+                    {
                         *gi += ri;
                     }
+                    slot += 1;
                 }
-                flat.extend(g);
-                slot += 1;
             }
         }
     }
-    if enc {
-        flat.extend(lr.d_head_w.take().expect("head grads").data);
-        flat.extend(lr.d_head_b.take().expect("head bias grads"));
-    }
+
+    // Embedding gradients from dx (the gradient at the embedding output).
     if model.train_embeddings {
-        // Embedding grads from dx (the gradient at the embedding output).
-        let d = model.cfg.d_model;
-        let mut d_tok = vec![0.0f32; model.tok_emb.data.len()];
-        let mut d_pos = vec![0.0f32; model.pos_emb.data.len()];
         for b in 0..bsz {
             for s in 0..seq {
                 let t = b * seq + s;
                 let tok = batch.tokens[t] as usize;
-                let row = dx.row(t);
+                let row = bufs.dx.row(t);
                 for i in 0..d {
-                    d_tok[tok * d + i] += row[i];
-                    d_pos[s * d + i] += row[i];
+                    bufs.grads[bufs.offs.tok + tok * d + i] += row[i];
+                    bufs.grads[bufs.offs.pos + s * d + i] += row[i];
                 }
             }
         }
-        flat.extend(d_tok);
-        flat.extend(d_pos);
-        if model.lm_head.is_some() {
-            flat.extend(lr.d_lm_head.take().expect("lm head grads").data);
-        }
     }
-    assert_eq!(flat.len(), model.num_trainable());
-    (StepOutput { loss: lr.loss, metric: lr.metric, preds: lr.preds }, flat)
+
+    (loss, metric)
+}
+
+/// Forward + backward (allocating convenience wrapper): returns step
+/// output and the flat gradient vector (same layout as
+/// `NativeModel::trainable_flat`).
+pub fn train_grads(model: &NativeModel, batch: &Batch, gamma: f64) -> (StepOutput, Vec<f32>) {
+    let mut bufs = StepBuffers::new();
+    let mut ws = Workspace::new();
+    let (loss, metric) = train_grads_into(model, batch, gamma, &mut bufs, &mut ws);
+    let preds = std::mem::take(&mut bufs.preds);
+    (StepOutput { loss, metric, preds }, bufs.grads)
 }
 
 #[cfg(test)]
@@ -1057,5 +1394,50 @@ mod tests {
         let (out0, _) = train_grads(&model, &batch, 0.0);
         let (out1, _) = train_grads(&model, &batch, 1.0);
         assert!(out1.loss > out0.loss);
+    }
+
+    #[test]
+    fn reused_buffers_match_fresh_buffers() {
+        // The same StepBuffers + Workspace reused across steps (and across
+        // a shape change) must reproduce the fresh-buffer results exactly.
+        let mut rng = Rng::new(308);
+        let cfg = enc_cfg();
+        let model = model_with(&cfg, MethodKind::Psoft, 3, &mut rng);
+        let batch_a = cls_batch(&cfg, 3, 6, &mut rng);
+        let batch_b = cls_batch(&cfg, 2, 5, &mut rng);
+
+        let (out_a, grads_a) = train_grads(&model, &batch_a, 0.0);
+        let (out_b, grads_b) = train_grads(&model, &batch_b, 0.0);
+
+        let mut bufs = StepBuffers::new();
+        let mut ws = Workspace::new();
+        for _ in 0..2 {
+            let (loss, metric) = train_grads_into(&model, &batch_a, 0.0, &mut bufs, &mut ws);
+            assert_eq!(loss, out_a.loss);
+            assert_eq!(metric, out_a.metric);
+            assert_eq!(bufs.grads, grads_a);
+            assert_eq!(bufs.preds, out_a.preds);
+            // Shape change in between: buffers re-ensure and still agree.
+            let (loss_b, _) = train_grads_into(&model, &batch_b, 0.0, &mut bufs, &mut ws);
+            assert_eq!(loss_b, out_b.loss);
+            assert_eq!(bufs.grads, grads_b);
+        }
+    }
+
+    #[test]
+    fn evaluate_into_matches_evaluate() {
+        let mut rng = Rng::new(309);
+        let cfg = dec_cfg();
+        let model = model_with(&cfg, MethodKind::Lora, 2, &mut rng);
+        let batch = lm_batch(&cfg, 2, 6, &mut rng);
+        let out = evaluate(&model, &batch);
+        let mut bufs = StepBuffers::new();
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let (loss, metric) = evaluate_into(&model, &batch, &mut bufs, &mut ws);
+            assert_eq!(loss, out.loss);
+            assert_eq!(metric, out.metric);
+            assert_eq!(bufs.preds, out.preds);
+        }
     }
 }

@@ -13,8 +13,8 @@ use super::oft::block_partition;
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
 use crate::linalg::{
-    cayley_neumann, cayley_neumann_backward, matmul, matmul_nt, matmul_tn, skew_from_params,
-    skew_param_count, skew_param_grad, DMat, Mat,
+    cayley_neumann, cayley_neumann_backward, matmul, matmul_into, matmul_nt_into,
+    skew_from_params, skew_param_count, skew_param_grad, DMat, Mat, Workspace,
 };
 
 pub struct BoftAdapter {
@@ -27,6 +27,9 @@ pub struct BoftAdapter {
     rots: Vec<Vec<Mat>>,
     /// Column permutation applied before factor j (and inverted after).
     perms: Vec<Vec<usize>>,
+    /// Precomputed inverses of `perms` (hot-path: avoids re-inverting
+    /// every forward/backward).
+    inv_perms: Vec<Vec<usize>>,
     m: usize,
     neumann_terms: usize,
 }
@@ -62,8 +65,8 @@ fn invert_perm(p: &[usize]) -> Vec<usize> {
     inv
 }
 
-fn permute_cols(x: &Mat, perm: &[usize]) -> Mat {
-    let mut out = Mat::zeros(x.rows, x.cols);
+/// out = x with columns gathered through `perm` (out[:, j] = x[:, perm[j]]).
+fn permute_cols_into(x: &Mat, perm: &[usize], out: &mut Mat) {
     for t in 0..x.rows {
         let src = x.row(t);
         let dst = out.row_mut(t);
@@ -71,7 +74,6 @@ fn permute_cols(x: &Mat, perm: &[usize]) -> Mat {
             dst[j] = src[pj];
         }
     }
-    out
 }
 
 impl BoftAdapter {
@@ -81,12 +83,14 @@ impl BoftAdapter {
         let per_factor: usize = blocks.iter().map(|&b| skew_param_count(b)).sum();
         let base = riffle(d);
         let perms: Vec<Vec<usize>> = (0..m).map(|j| perm_power(&base, j)).collect();
+        let inv_perms: Vec<Vec<usize>> = perms.iter().map(|p| invert_perm(p)).collect();
         let mut adapter = Self {
             w0: w_pre.clone(),
             blocks,
             theta: vec![0.0; m * per_factor],
             rots: Vec::new(),
             perms,
+            inv_perms,
             m,
             neumann_terms,
         };
@@ -115,30 +119,44 @@ impl BoftAdapter {
         }
     }
 
-    /// Apply one factor: z = permuteᵀ( blockdiag( permute(x) ) ).
-    fn apply_factor(&self, x: &Mat, j: usize) -> Mat {
-        let perm = &self.perms[j];
-        let xp = permute_cols(x, perm);
-        let mut zp = Mat::zeros(x.rows, x.cols);
+    /// Apply one factor: out = permuteᵀ( blockdiag( permute(x) ) ).
+    /// `out` is fully overwritten; scratch comes from `ws`.
+    fn apply_factor_into(&self, x: &Mat, out: &mut Mat, j: usize, ws: &mut Workspace) {
+        let mut xp = ws.acquire(x.rows, x.cols);
+        permute_cols_into(x, &self.perms[j], &mut xp);
+        let mut zp = ws.acquire(x.rows, x.cols);
         let mut off = 0;
         for (bi, &b) in self.blocks.iter().enumerate() {
-            let xb = xp.cols_range(off, off + b);
-            let zb = matmul(&xb, &self.rots[j][bi]);
+            let rot = &self.rots[j][bi];
             for t in 0..x.rows {
-                zp.row_mut(t)[off..off + b].copy_from_slice(zb.row(t));
+                let xrow = &xp.row(t)[off..off + b];
+                let zrow = &mut zp.row_mut(t)[off..off + b];
+                for (jj, zv) in zrow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (i, &xv) in xrow.iter().enumerate() {
+                        acc += xv * rot[(i, jj)];
+                    }
+                    *zv = acc;
+                }
             }
             off += b;
         }
-        permute_cols(&zp, &invert_perm(perm))
+        permute_cols_into(&zp, &self.inv_perms[j], out);
+        ws.release(xp);
+        ws.release(zp);
     }
 
     /// Forward through all factors, returning every intermediate (the m
-    /// retained activations of the Appendix E accounting).
-    fn chain(&self, x: &Mat) -> Vec<Mat> {
-        let mut zs = Vec::with_capacity(self.m + 1);
-        zs.push(x.clone());
+    /// retained activations of the Appendix E accounting). All buffers
+    /// come from `ws`; the caller releases them.
+    fn chain(&self, x: &Mat, ws: &mut Workspace) -> Vec<Mat> {
+        let mut zs: Vec<Mat> = Vec::with_capacity(self.m + 1);
+        let mut z0 = ws.acquire(x.rows, x.cols);
+        z0.copy_from(x);
+        zs.push(z0);
         for j in 0..self.m {
-            let z = self.apply_factor(zs.last().unwrap(), j);
+            let mut z = ws.acquire(x.rows, x.cols);
+            self.apply_factor_into(zs.last().unwrap(), &mut z, j, ws);
             zs.push(z);
         }
         zs
@@ -170,52 +188,117 @@ impl Adapter for BoftAdapter {
 
     fn materialize(&self) -> Mat {
         // W_eff = R W₀ where x·R is the factor chain: feed the identity.
+        let mut ws = Workspace::new();
         let eye = Mat::eye(self.w0.rows);
-        let r = self.chain(&eye).pop().unwrap(); // rows are xᵀ·R for unit x ⇒ R itself? (I·R = R)
-        matmul(&r, &self.w0)
+        let mut zs = self.chain(&eye, &mut ws);
+        let r = zs.pop().unwrap(); // I·R = R
+        let w = matmul(&r, &self.w0);
+        ws.release(r);
+        for z in zs {
+            ws.release(z);
+        }
+        w
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        let z = self.chain(x).pop().unwrap();
-        matmul(&z, &self.w0)
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
+        y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        let zs = self.chain(x);
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // Ping-pong two buffers through the factor chain (the full set of
+        // intermediates is only needed by backward).
+        let mut cur = ws.acquire(x.rows, x.cols);
+        cur.copy_from(x);
+        let mut nxt = ws.acquire(x.rows, x.cols);
+        for j in 0..self.m {
+            self.apply_factor_into(&cur, &mut nxt, j, ws);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        matmul_into(&cur, &self.w0, y);
+        ws.release(cur);
+        ws.release(nxt);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let zs = self.chain(x, ws);
         // dz_m = dy · W₀ᵀ.
-        let mut dz = matmul_nt(dy, &self.w0);
+        let mut dz = ws.acquire(dy.rows, self.w0.rows);
+        matmul_nt_into(dy, &self.w0, &mut dz);
         let per = self.per_factor_params();
-        let mut d_params = vec![0.0f32; self.theta.len()];
         // Walk factors backwards.
         for j in (0..self.m).rev() {
-            let perm = &self.perms[j];
             let z_in = &zs[j];
-            let zp = permute_cols(z_in, perm);
-            let dzp = permute_cols(&dz, perm);
-            let mut dz_prev_p = Mat::zeros(dz.rows, dz.cols);
+            let mut zp = ws.acquire(dz.rows, dz.cols);
+            permute_cols_into(z_in, &self.perms[j], &mut zp);
+            let mut dzp = ws.acquire(dz.rows, dz.cols);
+            permute_cols_into(&dz, &self.perms[j], &mut dzp);
+            let mut dz_prev_p = ws.acquire(dz.rows, dz.cols);
             let mut off_c = 0;
             let mut off_t = j * per;
             for (bi, &b) in self.blocks.iter().enumerate() {
-                let xb = zp.cols_range(off_c, off_c + b);
-                let dzb = dzp.cols_range(off_c, off_c + b);
-                let dr: DMat = matmul_tn(&xb, &dzb).cast();
+                let rot = &self.rots[j][bi];
+                // dR_k = z_bᵀ dz_b (small b×b — the Cayley backward stays
+                // on the allocating f64 path).
+                let mut dr = DMat::zeros(b, b);
+                for t in 0..dz.rows {
+                    let zrow = &zp.row(t)[off_c..off_c + b];
+                    let grow = &dzp.row(t)[off_c..off_c + b];
+                    for (i, &zv) in zrow.iter().enumerate() {
+                        let zv = zv as f64;
+                        for (jj, &gv) in grow.iter().enumerate() {
+                            dr[(i, jj)] += zv * gv as f64;
+                        }
+                    }
+                }
                 let np = skew_param_count(b);
-                let params: Vec<f64> = self.theta[off_t..off_t + np].iter().map(|&v| v as f64).collect();
+                let params: Vec<f64> =
+                    self.theta[off_t..off_t + np].iter().map(|&v| v as f64).collect();
                 let q = skew_from_params(b, &params);
                 let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
                 for (a, g) in skew_param_grad(&dq).iter().enumerate() {
                     d_params[off_t + a] += *g as f32;
                 }
-                let dxb = matmul_nt(&dzb, &self.rots[j][bi]);
+                // dz_prev_b = dz_b · R_kᵀ.
                 for t in 0..dz.rows {
-                    dz_prev_p.row_mut(t)[off_c..off_c + b].copy_from_slice(dxb.row(t));
+                    let grow = &dzp.row(t)[off_c..off_c + b];
+                    let prow = &mut dz_prev_p.row_mut(t)[off_c..off_c + b];
+                    for (i, pv) in prow.iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        for (jj, &gv) in grow.iter().enumerate() {
+                            acc += gv * rot[(i, jj)];
+                        }
+                        *pv = acc;
+                    }
                 }
                 off_c += b;
                 off_t += np;
             }
-            dz = permute_cols(&dz_prev_p, &invert_perm(perm));
+            permute_cols_into(&dz_prev_p, &self.inv_perms[j], &mut dz);
+            ws.release(zp);
+            ws.release(dzp);
+            ws.release(dz_prev_p);
         }
-        AdapterGrads { d_params, dx: dz }
+        dx.copy_from(&dz);
+        ws.release(dz);
+        for z in zs {
+            ws.release(z);
+        }
     }
 
     fn act_floats_per_token(&self) -> usize {

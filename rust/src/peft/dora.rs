@@ -8,7 +8,10 @@
 
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_acc, matmul_nt, matmul_tn, Mat};
+use crate::linalg::{
+    matmul_acc, matmul_into, matmul_nt_acc_slice, matmul_nt_into, matmul_tn_acc_slice,
+    matmul_tn_into, Mat, Workspace,
+};
 use crate::util::rng::Rng;
 
 pub struct DoraAdapter {
@@ -74,69 +77,124 @@ impl Adapter for DoraAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // y = (x V) ⊙ (m/‖V‖) — needs the full V column norms each step,
-        // DoRA's overhead.
-        let (v, norms) = self.direction();
-        let mut y = matmul(x, &self.w0);
-        let xa = matmul(x, &self.a);
-        matmul_acc(&xa, &self.b, &mut y); // y = x V
-        let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();
-        let _ = v;
-        y.scale_cols(&scale)
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
+        y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        let (v, norms) = self.direction();
-        let n = v.cols;
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // y = (x V) ⊙ (m/‖V‖) — needs the full V column norms each step,
+        // DoRA's overhead.
+        let (d, n) = self.w0.shape();
+        let mut v = ws.acquire(d, n);
+        v.copy_from(&self.w0);
+        matmul_acc(&self.a, &self.b, &mut v);
+        let mut norms = ws.acquire(1, n);
+        for j in 0..n {
+            norms.data[j] = (v.col_norm(j) as f32).max(1e-12);
+        }
+        matmul_into(x, &self.w0, y);
+        let mut xa = ws.acquire(x.rows, self.rank);
+        matmul_into(x, &self.a, &mut xa);
+        matmul_acc(&xa, &self.b, y); // y = x V
+        for t in 0..y.rows {
+            let row = y.row_mut(t);
+            for j in 0..n {
+                row[j] *= self.m[j] / norms.data[j];
+            }
+        }
+        ws.release(v);
+        ws.release(norms);
+        ws.release(xa);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let (d, n) = self.w0.shape();
+        let na = self.a.data.len();
+        let nb = self.b.data.len();
+        let mut v = ws.acquire(d, n);
+        v.copy_from(&self.w0);
+        matmul_acc(&self.a, &self.b, &mut v);
+        let mut norms = ws.acquire(1, n);
+        for j in 0..n {
+            norms.data[j] = (v.col_norm(j) as f32).max(1e-12);
+        }
 
         // z = x V (pre-scale output).
-        let mut z = matmul(x, &self.w0);
-        let xa = matmul(x, &self.a);
+        let mut z = ws.acquire(x.rows, n);
+        matmul_into(x, &self.w0, &mut z);
+        let mut xa = ws.acquire(x.rows, self.rank);
+        matmul_into(x, &self.a, &mut xa);
         matmul_acc(&xa, &self.b, &mut z);
 
-        // dm_j = Σ_t dy[t,j]·z[t,j]/c_j.
-        let mut dm = vec![0.0f32; n];
+        // dm_j += Σ_t dy[t,j]·z[t,j]/c_j — straight into the m slice.
+        let dm = &mut d_params[na + nb..];
         for t in 0..dy.rows {
             let dyr = dy.row(t);
             let zr = z.row(t);
             for j in 0..n {
-                dm[j] += dyr[j] * zr[j] / norms[j];
+                dm[j] += dyr[j] * zr[j] / norms.data[j];
             }
         }
 
         // dz = dy ⊙ (m/c); and the norm term: the scale s_j = m_j/c_j
         // depends on V through c_j = ‖V[:,j]‖:
         //   dL/dV[:,j] = (xᵀ dz)[:,j]  −  m_j/c_j² · (Σ_t dy[t,j] z[t,j]) · V[:,j]/c_j
-        let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();
-        let dz = dy.scale_cols(&scale);
-        let mut dv = matmul_tn(x, &dz); // d×n
+        let mut dz = ws.acquire(dy.rows, n);
+        dz.copy_from(dy);
+        for t in 0..dz.rows {
+            let row = dz.row_mut(t);
+            for j in 0..n {
+                row[j] *= self.m[j] / norms.data[j];
+            }
+        }
+        let mut dv = ws.acquire(d, n);
+        matmul_tn_into(x, &dz, &mut dv);
         // Per-column correction.
-        let mut col_dot = vec![0.0f32; n]; // Σ_t dy[t,j]·z[t,j]
+        let mut col_dot = ws.acquire_zeroed(1, n); // Σ_t dy[t,j]·z[t,j]
         for t in 0..dy.rows {
             let dyr = dy.row(t);
             let zr = z.row(t);
             for j in 0..n {
-                col_dot[j] += dyr[j] * zr[j];
+                col_dot.data[j] += dyr[j] * zr[j];
             }
         }
         for j in 0..n {
-            let corr = self.m[j] * col_dot[j] / (norms[j] * norms[j] * norms[j]);
-            for i in 0..dv.rows {
+            let c = norms.data[j];
+            let corr = self.m[j] * col_dot.data[j] / (c * c * c);
+            for i in 0..d {
                 let vij = v[(i, j)];
                 dv[(i, j)] -= corr * vij;
             }
         }
 
         // Chain into A, B and x: V = W₀ + AB.
-        let da = matmul_nt(&dv, &self.b); // dV Bᵀ: d×r
-        let db = matmul_tn(&self.a, &dv); // Aᵀ dV: r×n
+        matmul_nt_acc_slice(&dv, &self.b, &mut d_params[..na]); // dV Bᵀ: d×r
+        matmul_tn_acc_slice(&self.a, &dv, &mut d_params[na..na + nb]); // Aᵀ dV: r×n
         // dx = dz Vᵀ (x enters only through z = x V).
-        let dx = matmul_nt(&dz, &v);
+        matmul_nt_into(&dz, &v, dx);
 
-        let mut d_params = da.data;
-        d_params.extend_from_slice(&db.data);
-        d_params.extend_from_slice(&dm);
-        AdapterGrads { d_params, dx }
+        ws.release(v);
+        ws.release(norms);
+        ws.release(z);
+        ws.release(xa);
+        ws.release(dz);
+        ws.release(dv);
+        ws.release(col_dot);
     }
 
     fn act_floats_per_token(&self) -> usize {

@@ -3,7 +3,7 @@
 
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use crate::linalg::{matmul, matmul_nt_into, matmul_tn_acc_slice, Mat, Workspace};
 
 pub struct FftAdapter {
     w: Mat,
@@ -46,10 +46,28 @@ impl Adapter for FftAdapter {
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        // dW = xᵀ dy; dx = dy Wᵀ.
-        let dw = matmul_tn(x, dy);
-        let dx = matmul_nt(dy, &self.w);
-        AdapterGrads { d_params: dw.data, dx }
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, _ws: &mut Workspace) {
+        crate::linalg::matmul_into(x, &self.w, y);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        _ws: &mut Workspace,
+    ) {
+        // dW = xᵀ dy accumulated straight into the flat gradient slice;
+        // dx = dy Wᵀ.
+        matmul_tn_acc_slice(x, dy, d_params);
+        matmul_nt_into(dy, &self.w, dx);
     }
 
     fn act_floats_per_token(&self) -> usize {

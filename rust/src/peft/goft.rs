@@ -14,7 +14,7 @@
 
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul_nt, Mat};
+use crate::linalg::{matmul_into, matmul_nt_into, Mat, Workspace};
 
 pub struct GoftAdapter {
     w0: Mat,
@@ -91,12 +91,16 @@ impl GoftAdapter {
     }
 
     /// Forward chain retaining every stage input (GOFT's memory cost).
-    fn chain(&self, x: &Mat) -> Vec<Mat> {
-        let mut zs = Vec::with_capacity(self.stages.len() + 1);
-        zs.push(x.clone());
+    /// All buffers come from `ws`; the caller releases them.
+    fn chain(&self, x: &Mat, ws: &mut Workspace) -> Vec<Mat> {
+        let mut zs: Vec<Mat> = Vec::with_capacity(self.stages.len() + 1);
+        let mut z0 = ws.acquire(x.rows, x.cols);
+        z0.copy_from(x);
+        zs.push(z0);
         let mut pair_base = 0;
         for j in 0..self.stages.len() {
-            let mut z = zs.last().unwrap().clone();
+            let mut z = ws.acquire(x.rows, x.cols);
+            z.copy_from(zs.last().unwrap());
             self.apply_stage(&mut z, j, pair_base);
             pair_base += self.stages[j].len();
             zs.push(z);
@@ -132,20 +136,57 @@ impl Adapter for GoftAdapter {
     }
 
     fn materialize(&self) -> Mat {
+        let mut ws = Workspace::new();
         let eye = Mat::eye(self.w0.rows);
-        let r = self.chain(&eye).pop().unwrap();
-        crate::linalg::matmul(&r, &self.w0)
+        let mut zs = self.chain(&eye, &mut ws);
+        let r = zs.pop().unwrap();
+        let w = crate::linalg::matmul(&r, &self.w0);
+        ws.release(r);
+        for z in zs {
+            ws.release(z);
+        }
+        w
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        let z = self.chain(x).pop().unwrap();
-        crate::linalg::matmul(&z, &self.w0)
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
+        y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        let zs = self.chain(x);
-        let mut dz = matmul_nt(dy, &self.w0);
-        let mut d_params = vec![0.0f32; self.theta.len()];
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // Stages compose in place: a single scratch buffer suffices (the
+        // per-stage intermediates are only retained in backward).
+        let mut z = ws.acquire(x.rows, x.cols);
+        z.copy_from(x);
+        let mut pair_base = 0;
+        for j in 0..self.stages.len() {
+            self.apply_stage(&mut z, j, pair_base);
+            pair_base += self.stages[j].len();
+        }
+        matmul_into(&z, &self.w0, y);
+        ws.release(z);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let zs = self.chain(x, ws);
+        let mut dz = ws.acquire(dy.rows, self.w0.rows);
+        matmul_nt_into(dy, &self.w0, &mut dz);
+        let mut dz_prev = ws.acquire(dy.rows, self.w0.rows);
         // Pair base offsets per stage.
         let mut bases = Vec::with_capacity(self.stages.len());
         let mut acc = 0;
@@ -156,7 +197,7 @@ impl Adapter for GoftAdapter {
         for j in (0..self.stages.len()).rev() {
             let z_in = &zs[j];
             let base = bases[j];
-            let mut dz_prev = dz.clone();
+            dz_prev.copy_from(&dz);
             for (pi, &(a, b)) in self.stages[j].iter().enumerate() {
                 let p = base + pi;
                 let m = self.pair_mat(p);
@@ -186,9 +227,14 @@ impl Adapter for GoftAdapter {
                     d_params[p] += -s * dm[0] + c * dm[1] - c * dm[2] - s * dm[3];
                 }
             }
-            dz = dz_prev;
+            std::mem::swap(&mut dz, &mut dz_prev);
         }
-        AdapterGrads { d_params, dx: dz }
+        dx.copy_from(&dz);
+        ws.release(dz);
+        ws.release(dz_prev);
+        for z in zs {
+            ws.release(z);
+        }
     }
 
     fn act_floats_per_token(&self) -> usize {

@@ -8,7 +8,9 @@
 use super::decomp::principal_split;
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_acc, matmul_nt, matmul_tn, Mat};
+use crate::linalg::{
+    matmul_acc, matmul_into, matmul_nt_acc, matmul_nt_into, matmul_tn_acc_slice, Mat, Workspace,
+};
 use crate::util::rng::Rng;
 
 pub struct LoraAdapter {
@@ -73,25 +75,47 @@ impl Adapter for LoraAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // y = x W₀ + (x A) B — the r-dim intermediate is the LoRA hot path.
-        let mut y = matmul(x, &self.w0);
-        let xa = matmul(x, &self.a);
-        matmul_acc(&xa, &self.b, &mut y);
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
         y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        // dA = xᵀ (dy Bᵀ); dB = (x A)ᵀ dy; dx = dy W₀ᵀ + (dy Bᵀ) Aᵀ.
-        let dy_bt = matmul_nt(dy, &self.b); // [T, r]
-        let da = matmul_tn(x, &dy_bt);
-        let xa = matmul(x, &self.a);
-        let db = matmul_tn(&xa, dy);
-        let mut dx = matmul_nt(dy, &self.w0);
-        let dx_lora = matmul_nt(&dy_bt, &self.a); // (dy Bᵀ) Aᵀ
-        dx.add_assign(&dx_lora);
-        let mut d_params = da.data;
-        d_params.extend_from_slice(&db.data);
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
         AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // y = x W₀ + (x A) B — the r-dim intermediate is the LoRA hot path.
+        matmul_into(x, &self.w0, y);
+        let mut xa = ws.acquire(x.rows, self.rank);
+        matmul_into(x, &self.a, &mut xa);
+        matmul_acc(&xa, &self.b, y);
+        ws.release(xa);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        // dA = xᵀ (dy Bᵀ); dB = (x A)ᵀ dy; dx = dy W₀ᵀ + (dy Bᵀ) Aᵀ.
+        let na = self.a.data.len();
+        let mut dy_bt = ws.acquire(dy.rows, self.rank); // dy Bᵀ: [T, r]
+        matmul_nt_into(dy, &self.b, &mut dy_bt);
+        matmul_tn_acc_slice(x, &dy_bt, &mut d_params[..na]);
+        let mut xa = ws.acquire(x.rows, self.rank);
+        matmul_into(x, &self.a, &mut xa);
+        matmul_tn_acc_slice(&xa, dy, &mut d_params[na..]);
+        matmul_nt_into(dy, &self.w0, dx);
+        matmul_nt_acc(&dy_bt, &self.a, dx);
+        ws.release(dy_bt);
+        ws.release(xa);
     }
 
     fn act_floats_per_token(&self) -> usize {

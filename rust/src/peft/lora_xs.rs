@@ -16,7 +16,10 @@
 use super::decomp::principal_split;
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_acc, matmul_nt, matmul_tn, DMat, Mat};
+use crate::linalg::{
+    matmul, matmul_acc, matmul_into, matmul_nt_acc, matmul_nt_into, matmul_tn_acc_slice, DMat,
+    Mat, Workspace,
+};
 use crate::util::rng::Rng;
 
 pub struct LoraXsAdapter {
@@ -76,24 +79,51 @@ impl Adapter for LoraXsAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // y = x W₀ + ((x A) R) B.
-        let mut y = matmul(x, &self.w0);
-        let xa = matmul(x, &self.a);
-        let xar = matmul(&xa, &self.r_mat);
-        matmul_acc(&xar, &self.b, &mut y);
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
         y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // y = x W₀ + ((x A) R) B.
+        matmul_into(x, &self.w0, y);
+        let mut xa = ws.acquire(x.rows, self.rank);
+        matmul_into(x, &self.a, &mut xa);
+        let mut xar = ws.acquire(x.rows, self.rank);
+        matmul_into(&xa, &self.r_mat, &mut xar);
+        matmul_acc(&xar, &self.b, y);
+        ws.release(xa);
+        ws.release(xar);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
         // dR = (x A)ᵀ (dy Bᵀ); dx = dy W₀ᵀ + ((dy Bᵀ) Rᵀ) Aᵀ.
-        let xa = matmul(x, &self.a);
-        let dy_bt = matmul_nt(dy, &self.b);
-        let dr = matmul_tn(&xa, &dy_bt);
-        let mut dx = matmul_nt(dy, &self.w0);
-        let dy_bt_rt = matmul_nt(&dy_bt, &self.r_mat);
-        let dx_low = matmul_nt(&dy_bt_rt, &self.a);
-        dx.add_assign(&dx_low);
-        AdapterGrads { d_params: dr.data, dx }
+        let mut xa = ws.acquire(x.rows, self.rank);
+        matmul_into(x, &self.a, &mut xa);
+        let mut dy_bt = ws.acquire(dy.rows, self.rank);
+        matmul_nt_into(dy, &self.b, &mut dy_bt);
+        matmul_tn_acc_slice(&xa, &dy_bt, d_params); // dR: r×r
+        matmul_nt_into(dy, &self.w0, dx);
+        let mut dy_bt_rt = ws.acquire(dy.rows, self.rank);
+        matmul_nt_into(&dy_bt, &self.r_mat, &mut dy_bt_rt);
+        matmul_nt_acc(&dy_bt_rt, &self.a, dx);
+        ws.release(xa);
+        ws.release(dy_bt);
+        ws.release(dy_bt_rt);
     }
 
     fn act_floats_per_token(&self) -> usize {

@@ -24,7 +24,7 @@ pub mod svft;
 pub mod vera;
 
 use crate::config::{MethodKind, PeftConfig};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 use crate::util::rng::Rng;
 
 /// Gradients produced by one adapter backward pass.
@@ -62,6 +62,40 @@ pub trait Adapter: Send {
     /// Analytic backward: given `x` and `dL/dy`, produce parameter grads and
     /// `dL/dx`.
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads;
+
+    /// Structured forward into a caller-provided output buffer: overwrites
+    /// `y` (shape `[T, n]`) with `x @ W_eff`, drawing every temporary from
+    /// `ws` so a warm workspace makes the call allocation-free. The default
+    /// delegates to the allocating [`Adapter::forward`]; every in-tree
+    /// method overrides it with a structured in-place kernel (and
+    /// implements `forward` on top of it, so the two are bit-identical).
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        let _ = ws;
+        let out = self.forward(x);
+        y.copy_from(&out);
+    }
+
+    /// In-place analytic backward: **accumulates** `dL/dθ` into `d_params`
+    /// (length [`Adapter::num_params`]; the model backward sums multiple
+    /// token batches into one flat gradient buffer) and **overwrites** `dx`
+    /// (shape of `x`) with `dL/dx`. Temporaries come from `ws`. The default
+    /// delegates to the allocating [`Adapter::backward`].
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let _ = ws;
+        let g = self.backward(x, dy);
+        assert_eq!(d_params.len(), g.d_params.len(), "d_params length");
+        for (acc, v) in d_params.iter_mut().zip(&g.d_params) {
+            *acc += v;
+        }
+        dx.copy_from(&g.dx);
+    }
 
     /// Activation floats retained per token for backward, *beyond* the
     /// module input/output themselves (Appendix E accounting; e.g. LoRA

@@ -9,8 +9,9 @@
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
 use crate::linalg::{
-    cayley_neumann, cayley_neumann_backward, matmul, matmul_nt, orthogonality_defect,
-    skew_from_params, skew_param_count, skew_param_grad, DMat, Mat,
+    cayley_neumann, cayley_neumann_backward, matmul, matmul_into, matmul_nt_into,
+    orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad, DMat, Mat,
+    Workspace,
 };
 
 pub struct OftAdapter {
@@ -64,19 +65,26 @@ impl OftAdapter {
         }
     }
 
-    /// Apply the block-diagonal rotation to activation columns: z = x·R.
-    fn rotate(&self, x: &Mat) -> Mat {
-        let mut z = Mat::zeros(x.rows, x.cols);
+    /// Apply the block-diagonal rotation to activation columns: z = x·R,
+    /// writing into a caller-provided buffer (fully overwritten — the
+    /// blocks partition every column).
+    fn rotate_into(&self, x: &Mat, z: &mut Mat) {
         let mut off = 0;
         for (bi, &b) in self.blocks.iter().enumerate() {
-            let xb = x.cols_range(off, off + b);
-            let zb = matmul(&xb, &self.rots[bi]);
+            let rot = &self.rots[bi];
             for t in 0..x.rows {
-                z.row_mut(t)[off..off + b].copy_from_slice(zb.row(t));
+                let xrow = &x.row(t)[off..off + b];
+                let zrow = &mut z.row_mut(t)[off..off + b];
+                for (j, zv) in zrow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (i, &xv) in xrow.iter().enumerate() {
+                        acc += xv * rot[(i, j)];
+                    }
+                    *zv = acc;
+                }
             }
             off += b;
         }
-        z
     }
 }
 
@@ -123,38 +131,77 @@ impl Adapter for OftAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // Input-centric: y = (x·R)·W₀.
-        let z = self.rotate(x);
-        matmul(&z, &self.w0)
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
+        y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        // z = x·R; y = z·W₀. dz = dy·W₀ᵀ.
-        let dz = matmul_nt(dy, &self.w0);
-        let mut d_params = Vec::with_capacity(self.theta.len());
+        let mut d_params = vec![0.0; self.num_params()];
         let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // Input-centric: y = (x·R)·W₀.
+        let mut z = ws.acquire(x.rows, x.cols);
+        self.rotate_into(x, &mut z);
+        matmul_into(&z, &self.w0, y);
+        ws.release(z);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        // z = x·R; y = z·W₀. dz = dy·W₀ᵀ.
+        let mut dz = ws.acquire(dy.rows, x.cols);
+        matmul_nt_into(dy, &self.w0, &mut dz);
         let mut off = 0;
         for (bi, &b) in self.blocks.iter().enumerate() {
-            let xb = x.cols_range(off, off + b);
-            let dzb = dz.cols_range(off, off + b);
-            // dR_k = x_bᵀ dz_b.
-            let dr: DMat = crate::linalg::matmul_tn(&xb, &dzb).cast();
+            let rot = &self.rots[bi];
+            // dR_k = x_bᵀ dz_b. The Cayley–Neumann backward stays on the
+            // allocating f64 path: it is O(b²) per block, not per token.
+            let mut dr = DMat::zeros(b, b);
+            for t in 0..x.rows {
+                let xrow = &x.row(t)[off..off + b];
+                let dzrow = &dz.row(t)[off..off + b];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    let xv = xv as f64;
+                    for (j, &gv) in dzrow.iter().enumerate() {
+                        dr[(i, j)] += xv * gv as f64;
+                    }
+                }
+            }
             let np = skew_param_count(b);
-            let params: Vec<f64> = self.theta[off_theta(&self.blocks, bi)..off_theta(&self.blocks, bi) + np]
-                .iter()
-                .map(|&v| v as f64)
-                .collect();
+            let t_off = off_theta(&self.blocks, bi);
+            let params: Vec<f64> =
+                self.theta[t_off..t_off + np].iter().map(|&v| v as f64).collect();
             let q = skew_from_params(b, &params);
             let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
-            d_params.extend(skew_param_grad(&dq).iter().map(|&v| v as f32));
+            for (pi, g) in skew_param_grad(&dq).iter().enumerate() {
+                d_params[t_off + pi] += *g as f32;
+            }
             // dx_b = dz_b · R_kᵀ.
-            let dxb = matmul_nt(&dzb, &self.rots[bi]);
             for t in 0..x.rows {
-                dx.row_mut(t)[off..off + b].copy_from_slice(dxb.row(t));
+                let dzrow = &dz.row(t)[off..off + b];
+                let dxrow = &mut dx.row_mut(t)[off..off + b];
+                for (i, xv) in dxrow.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (j, &gv) in dzrow.iter().enumerate() {
+                        acc += gv * rot[(i, j)];
+                    }
+                    *xv = acc;
+                }
             }
             off += b;
         }
-        AdapterGrads { d_params, dx }
+        ws.release(dz);
     }
 
     fn act_floats_per_token(&self) -> usize {

@@ -16,8 +16,9 @@ use super::decomp::principal_split;
 use super::{Adapter, AdapterGrads};
 use crate::config::{MethodKind, PeftConfig, PsoftInit};
 use crate::linalg::{
-    cayley_neumann, cayley_neumann_backward, matmul, matmul_nt, matmul_tn, orthogonality_defect,
-    skew_from_params, skew_param_count, skew_param_grad, DMat, Mat,
+    cayley_neumann, cayley_neumann_backward, matmul, matmul_acc, matmul_into, matmul_nt_acc,
+    matmul_nt_into, orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad,
+    DMat, Mat, Workspace,
 };
 use crate::util::rng::Rng;
 
@@ -138,69 +139,123 @@ impl Adapter for PsoftAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // y = x·W_res + (((x·A')·α)·R)·β·B' — the whole chain stays in the
-        // r-dim subspace (the L1 Pallas kernel mirrors this exactly).
-        let mut y = matmul(x, &self.w_res);
-        let p = matmul(x, &self.a); // [T, r]
-        let u = p.scale_cols(&self.alpha_or_ones());
-        let v = matmul(&u, &self.r_mat);
-        let w = v.scale_cols(&self.beta_or_ones());
-        crate::linalg::matmul_acc(&w, &self.b, &mut y);
+        let mut y = Mat::zeros(x.rows, self.w_res.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
         y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        let alpha = self.alpha_or_ones();
-        let beta = self.beta_or_ones();
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // y = x·W_res + (((x·A')·α)·R)·β·B' — the whole chain stays in the
+        // r-dim subspace (the L1 Pallas kernel mirrors this exactly).
+        matmul_into(x, &self.w_res, y);
+        let mut u = ws.acquire(x.rows, self.rank); // [T, r]
+        matmul_into(x, &self.a, &mut u);
+        if self.use_alpha {
+            u.scale_cols_in_place(&self.alpha);
+        }
+        let mut w = ws.acquire(x.rows, self.rank);
+        matmul_into(&u, &self.r_mat, &mut w);
+        if self.use_beta {
+            w.scale_cols_in_place(&self.beta);
+        }
+        matmul_acc(&w, &self.b, y);
+        ws.release(u);
+        ws.release(w);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let r = self.rank;
+        let nt = self.theta.len();
 
         // Recompute the forward chain (r-dim, cheap).
-        let p = matmul(x, &self.a); // [T, r]
-        let u = p.scale_cols(&alpha);
-        let v = matmul(&u, &self.r_mat);
+        let mut p = ws.acquire(x.rows, r); // x·A': [T, r]
+        matmul_into(x, &self.a, &mut p);
+        let mut u = ws.acquire(x.rows, r); // p·α
+        u.copy_from(&p);
+        if self.use_alpha {
+            u.scale_cols_in_place(&self.alpha);
+        }
+        let mut v = ws.acquire(x.rows, r); // u·R
+        matmul_into(&u, &self.r_mat, &mut v);
 
         // Backward through y = w·B' + x·W_res, w = v·β.
-        let dw = matmul_nt(dy, &self.b); // [T, r]
-        // dβ_k = Σ_t v[t,k]·dw[t,k].
-        let mut dbeta = vec![0.0f32; self.rank];
-        for t in 0..dw.rows {
-            let vr = v.row(t);
-            let dr = dw.row(t);
-            for k in 0..self.rank {
-                dbeta[k] += vr[k] * dr[k];
+        let mut dw = ws.acquire(dy.rows, r); // dy·B'ᵀ: [T, r]
+        matmul_nt_into(dy, &self.b, &mut dw);
+        // dβ_k += Σ_t v[t,k]·dw[t,k].
+        if self.use_beta {
+            let dbeta = &mut d_params[nt + self.alpha.len()..];
+            for t in 0..dw.rows {
+                let vr = v.row(t);
+                let dr = dw.row(t);
+                for k in 0..r {
+                    dbeta[k] += vr[k] * dr[k];
+                }
             }
         }
-        let dv = dw.scale_cols(&beta);
-        // dR = uᵀ·dv.
-        let dr: DMat = matmul_tn(&u, &dv).cast();
+        // dv = dw·β (in place — dw is not needed unscaled again).
+        if self.use_beta {
+            dw.scale_cols_in_place(&self.beta);
+        }
+        let dv = dw;
+        // dR = uᵀ·dv. The r×r Cayley–Neumann backward stays on the
+        // allocating f64 path (per-adapter, not per-token cost).
+        let mut dr = DMat::zeros(r, r);
+        for t in 0..u.rows {
+            let ur = u.row(t);
+            let gr = dv.row(t);
+            for (i, &uv) in ur.iter().enumerate() {
+                let uv = uv as f64;
+                for (j, &gv) in gr.iter().enumerate() {
+                    dr[(i, j)] += uv * gv as f64;
+                }
+            }
+        }
         let params: Vec<f64> = self.theta.iter().map(|&t| t as f64).collect();
-        let q = skew_from_params(self.rank, &params);
+        let q = skew_from_params(r, &params);
         let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
-        let dtheta: Vec<f32> = skew_param_grad(&dq).iter().map(|&g| g as f32).collect();
+        for (i, g) in skew_param_grad(&dq).iter().enumerate() {
+            d_params[i] += *g as f32;
+        }
         // du = dv·Rᵀ.
-        let du = matmul_nt(&dv, &self.r_mat);
-        // dα_k = Σ_t p[t,k]·du[t,k].
-        let mut dalpha = vec![0.0f32; self.rank];
-        for t in 0..du.rows {
-            let pr = p.row(t);
-            let dr_ = du.row(t);
-            for k in 0..self.rank {
-                dalpha[k] += pr[k] * dr_[k];
+        let mut du = ws.acquire(dy.rows, r);
+        matmul_nt_into(&dv, &self.r_mat, &mut du);
+        // dα_k += Σ_t p[t,k]·du[t,k].
+        if self.use_alpha {
+            let dalpha = &mut d_params[nt..nt + r];
+            for t in 0..du.rows {
+                let pr = p.row(t);
+                let dr_ = du.row(t);
+                for k in 0..r {
+                    dalpha[k] += pr[k] * dr_[k];
+                }
             }
         }
         // dx = dy·W_resᵀ + (du·α)·A'ᵀ.
-        let mut dx = matmul_nt(dy, &self.w_res);
-        let dp = du.scale_cols(&alpha);
-        let dx_sub = matmul_nt(&dp, &self.a);
-        dx.add_assign(&dx_sub);
-
-        let mut d_params = dtheta;
+        matmul_nt_into(dy, &self.w_res, dx);
         if self.use_alpha {
-            d_params.extend_from_slice(&dalpha);
+            du.scale_cols_in_place(&self.alpha);
         }
-        if self.use_beta {
-            d_params.extend_from_slice(&dbeta);
-        }
-        AdapterGrads { d_params, dx }
+        matmul_nt_acc(&du, &self.a, dx);
+
+        ws.release(p);
+        ws.release(u);
+        ws.release(v);
+        ws.release(dv);
+        ws.release(du);
     }
 
     fn act_floats_per_token(&self) -> usize {
@@ -389,7 +444,7 @@ mod tests {
         let (af, _, _) = a.factors();
         let afd: DMat = af.cast();
         // Energy of ΔW inside span(A') equals total energy.
-        let proj = matmul_tn(&afd, &delta);
+        let proj = crate::linalg::matmul_tn(&afd, &delta);
         let e_in = proj.frobenius_norm();
         let e_tot = delta.frobenius_norm();
         assert!((e_tot - e_in).abs() < 1e-4 * e_tot.max(1e-12), "in {e_in} total {e_tot}");

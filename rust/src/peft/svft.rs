@@ -7,7 +7,7 @@
 
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_nt, svd, DMat, Mat};
+use crate::linalg::{matmul, matmul_into, matmul_nt_into, svd, DMat, Mat, Workspace};
 
 pub struct SvftAdapter {
     /// U (d×k), Vᵀ (k×n) — full thin SVD factors, frozen.
@@ -65,30 +65,64 @@ impl Adapter for SvftAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // y = ((x U)·(σ+m)) Vᵀ.
-        let xu = matmul(x, &self.u);
-        let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
-        let xus = xu.scale_cols(&scale);
-        matmul(&xus, &self.vt)
+        let mut y = Mat::zeros(x.rows, self.vt.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
+        y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        let xu = matmul(x, &self.u); // [T, k]
-        let dy_v = matmul_nt(dy, &self.vt); // dy Vᵀᵀ = dy V: [T, k]
-        // dm_k = Σ_t xu[t,k]·(dy V)[t,k].
-        let mut dm = vec![0.0f32; self.k()];
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
+
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // y = ((x U)·(σ+m)) Vᵀ.
+        let k = self.k();
+        let mut xu = ws.acquire(x.rows, k);
+        matmul_into(x, &self.u, &mut xu);
+        for t in 0..xu.rows {
+            let row = xu.row_mut(t);
+            for j in 0..k {
+                row[j] *= self.sigma[j] + self.m[j];
+            }
+        }
+        matmul_into(&xu, &self.vt, y);
+        ws.release(xu);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let k = self.k();
+        let mut xu = ws.acquire(x.rows, k); // [T, k]
+        matmul_into(x, &self.u, &mut xu);
+        let mut dy_v = ws.acquire(dy.rows, k); // dy Vᵀᵀ = dy V: [T, k]
+        matmul_nt_into(dy, &self.vt, &mut dy_v);
+        // dm_k += Σ_t xu[t,k]·(dy V)[t,k].
         for t in 0..x.rows {
             let a = xu.row(t);
             let b = dy_v.row(t);
-            for k in 0..self.k() {
-                dm[k] += a[k] * b[k];
+            for kk in 0..k {
+                d_params[kk] += a[kk] * b[kk];
             }
         }
         // dx = ((dy V)·(σ+m)) Uᵀ.
-        let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
-        let dyv_s = dy_v.scale_cols(&scale);
-        let dx = matmul_nt(&dyv_s, &self.u);
-        AdapterGrads { d_params: dm, dx }
+        for t in 0..dy_v.rows {
+            let row = dy_v.row_mut(t);
+            for j in 0..k {
+                row[j] *= self.sigma[j] + self.m[j];
+            }
+        }
+        matmul_nt_into(&dy_v, &self.u, dx);
+        ws.release(xu);
+        ws.release(dy_v);
     }
 
     fn act_floats_per_token(&self) -> usize {

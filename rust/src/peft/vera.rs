@@ -7,7 +7,7 @@
 
 use super::{Adapter, AdapterGrads};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_nt, Mat};
+use crate::linalg::{matmul, matmul_into, matmul_nt_acc, matmul_nt_into, Mat, Workspace};
 use crate::util::rng::Rng;
 
 pub struct VeraAdapter {
@@ -71,54 +71,90 @@ impl Adapter for VeraAdapter {
     }
 
     fn forward(&self, x: &Mat) -> Mat {
-        // y = x W₀ + (((x A_f)·d) B_f)·b.
-        let mut y = matmul(x, &self.w0);
-        let xa = matmul(x, &self.a_f); // [T, r]
-        let xad = xa.scale_cols(&self.d_vec);
-        let mid = matmul(&xad, &self.b_f); // [T, n]
-        let delta = mid.scale_cols(&self.b_vec);
-        y.add_assign(&delta);
+        let mut y = Mat::zeros(x.rows, self.w0.cols);
+        self.forward_into(x, &mut y, &mut Workspace::new());
         y
     }
 
     fn backward(&self, x: &Mat, dy: &Mat) -> AdapterGrads {
-        let xa = matmul(x, &self.a_f); // [T, r]
-        let xad = xa.scale_cols(&self.d_vec);
-        let mid = matmul(&xad, &self.b_f); // [T, n]
+        let mut d_params = vec![0.0; self.num_params()];
+        let mut dx = Mat::zeros(x.rows, x.cols);
+        self.backward_into(x, dy, &mut d_params, &mut dx, &mut Workspace::new());
+        AdapterGrads { d_params, dx }
+    }
 
-        // db_j = Σ_t mid[t,j]·dy[t,j].
+    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
+        // y = x W₀ + (((x A_f)·d) B_f)·b.
         let n = self.w0.cols;
-        let mut db = vec![0.0f32; n];
+        matmul_into(x, &self.w0, y);
+        let mut xad = ws.acquire(x.rows, self.rank); // [T, r]
+        matmul_into(x, &self.a_f, &mut xad);
+        xad.scale_cols_in_place(&self.d_vec);
+        let mut mid = ws.acquire(x.rows, n); // [T, n]
+        matmul_into(&xad, &self.b_f, &mut mid);
+        for t in 0..y.rows {
+            let yrow = y.row_mut(t);
+            let mrow = mid.row(t);
+            for j in 0..n {
+                yrow[j] += mrow[j] * self.b_vec[j];
+            }
+        }
+        ws.release(xad);
+        ws.release(mid);
+    }
+
+    fn backward_into(
+        &self,
+        x: &Mat,
+        dy: &Mat,
+        d_params: &mut [f32],
+        dx: &mut Mat,
+        ws: &mut Workspace,
+    ) {
+        let n = self.w0.cols;
+        let r = self.rank;
+        let mut xa = ws.acquire(x.rows, r); // [T, r] — kept unscaled for dd
+        matmul_into(x, &self.a_f, &mut xa);
+        let mut xad = ws.acquire(x.rows, r);
+        xad.copy_from(&xa);
+        xad.scale_cols_in_place(&self.d_vec);
+        let mut mid = ws.acquire(x.rows, n); // [T, n]
+        matmul_into(&xad, &self.b_f, &mut mid);
+
+        // db_j += Σ_t mid[t,j]·dy[t,j] — into the b slice.
         for t in 0..dy.rows {
             let m_row = mid.row(t);
             let dy_row = dy.row(t);
             for j in 0..n {
-                db[j] += m_row[j] * dy_row[j];
+                d_params[r + j] += m_row[j] * dy_row[j];
             }
         }
 
         // Upstream of the b-scale: dmid = dy ⊙ b (broadcast over rows).
-        let dmid = dy.scale_cols(&self.b_vec);
-        // d(xad) = dmid B_fᵀ; dd_k = Σ_t xa[t,k]·d(xad)[t,k].
-        let dxad = matmul_nt(&dmid, &self.b_f); // [T, r]
-        let mut dd = vec![0.0f32; self.rank];
+        let mut dmid = ws.acquire(dy.rows, n);
+        dmid.copy_from(dy);
+        dmid.scale_cols_in_place(&self.b_vec);
+        // d(xad) = dmid B_fᵀ; dd_k += Σ_t xa[t,k]·d(xad)[t,k].
+        let mut dxad = ws.acquire(x.rows, r);
+        matmul_nt_into(&dmid, &self.b_f, &mut dxad);
         for t in 0..x.rows {
             let xa_row = xa.row(t);
             let dx_row = dxad.row(t);
-            for k in 0..self.rank {
-                dd[k] += xa_row[k] * dx_row[k];
+            for k in 0..r {
+                d_params[k] += xa_row[k] * dx_row[k];
             }
         }
 
         // dx = dy W₀ᵀ + (d(xad) ⊙ d_vec) A_fᵀ.
-        let mut dx = matmul_nt(dy, &self.w0);
-        let dxa = dxad.scale_cols(&self.d_vec);
-        let dx_low = matmul_nt(&dxa, &self.a_f);
-        dx.add_assign(&dx_low);
+        matmul_nt_into(dy, &self.w0, dx);
+        dxad.scale_cols_in_place(&self.d_vec);
+        matmul_nt_acc(&dxad, &self.a_f, dx);
 
-        let mut d_params = dd;
-        d_params.extend_from_slice(&db);
-        AdapterGrads { d_params, dx }
+        ws.release(xa);
+        ws.release(xad);
+        ws.release(mid);
+        ws.release(dmid);
+        ws.release(dxad);
     }
 
     fn act_floats_per_token(&self) -> usize {

@@ -5,10 +5,18 @@
 //! inside XLA, Rust owns all state buffers) or the **native backend**
 //! (pure-Rust mirror used by tests, ablations needing loss hooks, and
 //! pretraining).
+//!
+//! Every step receives the run-level [`Workspace`] owned by the caller
+//! (the trainer creates exactly one per fine-tuning run), so scratch
+//! buffers warm up once and are shared across train/eval phases. The
+//! native backend additionally owns a [`StepBuffers`] and a persistent
+//! flat parameter vector, making its steady-state `train_step`
+//! allocation-free (see `tests/zero_alloc.rs`).
 
 pub mod pjrt;
 
-use crate::model::native::{self, Batch, StepOutput};
+use crate::linalg::Workspace;
+use crate::model::native::{self, Batch, StepBuffers, StepOutput};
 use crate::model::NativeModel;
 use anyhow::Result;
 
@@ -30,10 +38,12 @@ impl Default for Hyper {
 
 pub trait Backend {
     /// One optimizer step on a batch; returns loss/metric of the batch.
-    fn train_step(&mut self, batch: &Batch, hyper: &Hyper) -> Result<StepOutput>;
+    /// `ws` is the run-owned scratch workspace.
+    fn train_step(&mut self, batch: &Batch, hyper: &Hyper, ws: &mut Workspace)
+        -> Result<StepOutput>;
 
     /// Forward-only evaluation.
-    fn evaluate(&mut self, batch: &Batch) -> Result<StepOutput>;
+    fn evaluate(&mut self, batch: &Batch, ws: &mut Workspace) -> Result<StepOutput>;
 
     fn trainable(&self) -> Vec<f32>;
     fn set_trainable(&mut self, p: &[f32]) -> Result<()>;
@@ -58,10 +68,16 @@ impl AdamState {
     }
 }
 
-/// Native backend: NativeModel + Rust AdamW.
+/// Native backend: NativeModel + Rust AdamW, with all per-step state
+/// (activations, gradients, parameter vector, optimizer moments)
+/// preallocated and updated in place.
 pub struct NativeBackend {
     pub model: NativeModel,
     pub opt: AdamState,
+    /// Reusable activation/gradient buffers (keyed by batch shape).
+    pub bufs: StepBuffers,
+    /// Persistent flat parameter vector, kept in sync with the model.
+    params: Vec<f32>,
     beta1: f64,
     beta2: f64,
     eps: f64,
@@ -70,13 +86,28 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(model: NativeModel) -> Self {
         let n = model.num_trainable();
-        NativeBackend { model, opt: AdamState::new(n), beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+        let params = model.trainable_flat();
+        NativeBackend {
+            model,
+            opt: AdamState::new(n),
+            bufs: StepBuffers::new(),
+            params,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
     }
-}
 
-impl Backend for NativeBackend {
-    fn train_step(&mut self, batch: &Batch, hyper: &Hyper) -> Result<StepOutput> {
-        let (out, mut grads) = native::train_grads(&self.model, batch, hyper.gamma_orth);
+    /// The full optimizer step without constructing a `StepOutput`:
+    /// forward + backward into `self.bufs`, global-norm clip, in-place
+    /// AdamW on the persistent parameter vector, write-back into the
+    /// model. Returns (loss, metric); per-example predictions are left in
+    /// `self.bufs.preds`. This is the allocation-free hot path the
+    /// counting-allocator test exercises.
+    pub fn step_core(&mut self, batch: &Batch, hyper: &Hyper, ws: &mut Workspace) -> (f64, f64) {
+        let (loss, metric) =
+            native::train_grads_into(&self.model, batch, hyper.gamma_orth, &mut self.bufs, ws);
+        let grads = &mut self.bufs.grads;
 
         // Global-norm clip (matches the artifact).
         let gnorm = grads.iter().map(|g| (*g as f64) * (*g as f64)).sum::<f64>().sqrt().max(1e-12);
@@ -92,8 +123,7 @@ impl Backend for NativeBackend {
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
         let head_off = self.model.head_offset();
-        let mut params = self.model.trainable_flat();
-        for i in 0..params.len() {
+        for i in 0..self.params.len() {
             let g = grads[i] as f64;
             let m = self.beta1 * self.opt.m[i] as f64 + (1.0 - self.beta1) * g;
             let v = self.beta2 * self.opt.v[i] as f64 + (1.0 - self.beta2) * g * g;
@@ -101,23 +131,37 @@ impl Backend for NativeBackend {
             self.opt.v[i] = v as f32;
             let update = (m / bc1) / ((v / bc2).sqrt() + self.eps);
             let lr = if i >= head_off { hyper.head_lr } else { hyper.lr };
-            let p = params[i] as f64;
-            params[i] = (p * (1.0 - lr * hyper.weight_decay) - lr * update) as f32;
+            let p = self.params[i] as f64;
+            self.params[i] = (p * (1.0 - lr * hyper.weight_decay) - lr * update) as f32;
         }
-        self.model.set_trainable_flat(&params);
-        Ok(out)
+        self.model.set_trainable_flat(&self.params);
+        (loss, metric)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn train_step(
+        &mut self,
+        batch: &Batch,
+        hyper: &Hyper,
+        ws: &mut Workspace,
+    ) -> Result<StepOutput> {
+        let (loss, metric) = self.step_core(batch, hyper, ws);
+        Ok(StepOutput { loss, metric, preds: self.bufs.preds.clone() })
     }
 
-    fn evaluate(&mut self, batch: &Batch) -> Result<StepOutput> {
-        Ok(native::evaluate(&self.model, batch))
+    fn evaluate(&mut self, batch: &Batch, ws: &mut Workspace) -> Result<StepOutput> {
+        let (loss, metric) = native::evaluate_into(&self.model, batch, &mut self.bufs, ws);
+        Ok(StepOutput { loss, metric, preds: self.bufs.preds.clone() })
     }
 
     fn trainable(&self) -> Vec<f32> {
-        self.model.trainable_flat()
+        self.params.clone()
     }
 
     fn set_trainable(&mut self, p: &[f32]) -> Result<()> {
         self.model.set_trainable_flat(p);
+        self.params.copy_from_slice(p);
         Ok(())
     }
 
@@ -173,11 +217,12 @@ mod tests {
     #[test]
     fn adamw_reduces_loss() {
         let (mut be, batch) = tiny();
+        let mut ws = Workspace::new();
         let hyper = Hyper { lr: 5e-3, head_lr: 5e-3, ..Default::default() };
-        let first = be.train_step(&batch, &hyper).unwrap().loss;
+        let first = be.train_step(&batch, &hyper, &mut ws).unwrap().loss;
         let mut last = first;
         for _ in 0..40 {
-            last = be.train_step(&batch, &hyper).unwrap().loss;
+            last = be.train_step(&batch, &hyper, &mut ws).unwrap().loss;
         }
         assert!(last < first * 0.8, "{first} -> {last}");
         assert_eq!(be.steps(), 41);
@@ -186,9 +231,10 @@ mod tests {
     #[test]
     fn grad_clip_bounds_update() {
         let (mut be, batch) = tiny();
+        let mut ws = Workspace::new();
         let p0 = be.trainable();
         let hyper = Hyper { lr: 1.0, head_lr: 1.0, grad_clip: 1e-8, ..Default::default() };
-        be.train_step(&batch, &hyper).unwrap();
+        be.train_step(&batch, &hyper, &mut ws).unwrap();
         let p1 = be.trainable();
         // With a vanishing clip, first-step Adam update magnitude is tiny
         // relative to lr=1 unclipped behaviour.
@@ -200,19 +246,33 @@ mod tests {
     #[test]
     fn weight_decay_shrinks_params() {
         let (mut be, batch) = tiny();
+        let mut ws = Workspace::new();
         // Isolate decay: zero LR on updates is impossible (decay is scaled
         // by lr), so compare decay vs no-decay trajectories.
         let p0 = be.trainable();
         let hyper = Hyper { lr: 1e-3, head_lr: 1e-3, weight_decay: 0.5, ..Default::default() };
-        be.train_step(&batch, &hyper).unwrap();
+        be.train_step(&batch, &hyper, &mut ws).unwrap();
         let p_decay = be.trainable();
         let (mut be2, _) = tiny();
         be2.set_trainable(&p0).unwrap();
         let hyper2 = Hyper { lr: 1e-3, head_lr: 1e-3, weight_decay: 0.0, ..Default::default() };
-        be2.train_step(&batch, &hyper2).unwrap();
+        be2.train_step(&batch, &hyper2, &mut ws).unwrap();
         let p_plain = be2.trainable();
         let norm_decay: f64 = p_decay.iter().map(|v| (*v as f64).powi(2)).sum();
         let norm_plain: f64 = p_plain.iter().map(|v| (*v as f64).powi(2)).sum();
         assert!(norm_decay < norm_plain);
+    }
+
+    #[test]
+    fn trainable_stays_in_sync_with_model() {
+        let (mut be, batch) = tiny();
+        let mut ws = Workspace::new();
+        let hyper = Hyper { lr: 5e-3, head_lr: 5e-3, ..Default::default() };
+        for _ in 0..3 {
+            be.train_step(&batch, &hyper, &mut ws).unwrap();
+        }
+        // The persistent flat vector must match a fresh flatten of the
+        // model after in-place updates.
+        assert_eq!(be.trainable(), be.model.trainable_flat());
     }
 }

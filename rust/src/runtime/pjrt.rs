@@ -5,13 +5,22 @@
 //! lowered the model once (`make artifacts`); here Rust compiles the HLO,
 //! owns the parameter/optimizer/frozen buffers, and streams batches. No
 //! Python anywhere at runtime.
+//!
+//! The XLA execution path requires the external `xla` crate, which the
+//! offline build environment does not provide; it is gated behind the
+//! `xla` cargo feature (enabling it also requires adding the dependency).
+//! Without the feature this module compiles a stub whose constructors
+//! return an error, so the CLI and trainer still build and the native
+//! backend is unaffected. [`ArtifactMeta`] (pure JSON) is always
+//! available for `psoft inspect`.
 
 use super::{Backend, Hyper};
-use crate::model::native::{Batch, StepOutput, Target};
+use crate::linalg::Workspace;
+use crate::model::native::{Batch, StepOutput};
 use crate::model::NativeModel;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 /// Parsed `<name>.meta.json`.
 #[derive(Clone, Debug)]
@@ -44,188 +53,279 @@ impl ArtifactMeta {
     }
 }
 
-/// A compiled artifact pair (train + eval executables).
-pub struct PjrtBackend {
-    meta: ArtifactMeta,
-    client: xla::PjRtClient,
-    train_exe: xla::PjRtLoadedExecutable,
-    eval_exe: xla::PjRtLoadedExecutable,
-    /// State buffers owned by Rust.
-    trainable: Vec<f32>,
-    m: Vec<f32>,
-    v: Vec<f32>,
-    step: usize,
-    frozen: Vec<f32>,
-}
+#[cfg(feature = "xla")]
+mod backend_impl {
+    use super::*;
+    use crate::model::native::Target;
+    use std::path::PathBuf;
 
-impl PjrtBackend {
-    /// Load + compile an artifact, initializing state from a Rust-side
-    /// model (which owns initialization: SVD splits, Cayley identity, …).
-    pub fn from_artifact(dir: &Path, name: &str, model: &NativeModel) -> Result<PjrtBackend> {
-        let meta = ArtifactMeta::load(dir, name)?;
-        let trainable = model.trainable_flat();
-        let frozen = model.frozen_flat();
-        if trainable.len() != meta.trainable_size {
-            bail!(
-                "trainable size mismatch: model {} vs artifact {} — model/peft config must match the manifest entry",
-                trainable.len(),
-                meta.trainable_size
-            );
-        }
-        if frozen.len() != meta.frozen_size {
-            bail!("frozen size mismatch: model {} vs artifact {}", frozen.len(), meta.frozen_size);
-        }
-        Self::with_state(dir, meta, trainable, frozen)
-    }
-
-    /// Load with explicit state vectors (fixture replay, checkpoints).
-    pub fn with_state(
-        dir: &Path,
+    /// A compiled artifact pair (train + eval executables).
+    pub struct PjrtBackend {
         meta: ArtifactMeta,
+        client: xla::PjRtClient,
+        train_exe: xla::PjRtLoadedExecutable,
+        eval_exe: xla::PjRtLoadedExecutable,
+        /// State buffers owned by Rust.
         trainable: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        step: usize,
         frozen: Vec<f32>,
-    ) -> Result<PjrtBackend> {
-        let client = xla::PjRtClient::cpu()?;
-        let load = |suffix: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path: PathBuf = dir.join(format!("{}.{suffix}.hlo.txt", meta.name));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
-        };
-        let train_exe = load("train")?;
-        let eval_exe = load("eval")?;
-        let p = trainable.len();
-        Ok(PjrtBackend {
-            meta,
-            client,
-            train_exe,
-            eval_exe,
-            trainable,
-            m: vec![0.0; p],
-            v: vec![0.0; p],
-            step: 0,
-            frozen,
-        })
     }
 
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    fn check_batch(&self, batch: &Batch) -> Result<()> {
-        if batch.batch != self.meta.batch || batch.seq != self.meta.seq {
-            bail!(
-                "batch shape ({}, {}) does not match artifact ({}, {})",
-                batch.batch,
-                batch.seq,
-                self.meta.batch,
-                self.meta.seq
-            );
-        }
-        Ok(())
-    }
-
-    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
-        let b = batch.batch as i64;
-        let s = batch.seq as i64;
-        let tokens = xla::Literal::vec1(&batch.tokens).reshape(&[b, s])?;
-        let target = match &batch.target {
-            Target::Class(labels) => {
-                let l: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
-                xla::Literal::vec1(&l)
+    impl PjrtBackend {
+        /// Load + compile an artifact, initializing state from a Rust-side
+        /// model (which owns initialization: SVD splits, Cayley identity, …).
+        pub fn from_artifact(dir: &Path, name: &str, model: &NativeModel) -> Result<PjrtBackend> {
+            let meta = ArtifactMeta::load(dir, name)?;
+            let trainable = model.trainable_flat();
+            let frozen = model.frozen_flat();
+            if trainable.len() != meta.trainable_size {
+                bail!(
+                    "trainable size mismatch: model {} vs artifact {} — model/peft config must match the manifest entry",
+                    trainable.len(),
+                    meta.trainable_size
+                );
             }
-            Target::Reg(vals) => xla::Literal::vec1(&vals[..]),
-            Target::LmMask(mask) => xla::Literal::vec1(&mask[..]).reshape(&[b, s])?,
-        };
-        let pad = xla::Literal::vec1(&batch.pad[..]).reshape(&[b, s])?;
-        Ok((tokens, target, pad))
+            if frozen.len() != meta.frozen_size {
+                bail!("frozen size mismatch: model {} vs artifact {}", frozen.len(), meta.frozen_size);
+            }
+            Self::with_state(dir, meta, trainable, frozen)
+        }
+
+        /// Load with explicit state vectors (fixture replay, checkpoints).
+        pub fn with_state(
+            dir: &Path,
+            meta: ArtifactMeta,
+            trainable: Vec<f32>,
+            frozen: Vec<f32>,
+        ) -> Result<PjrtBackend> {
+            let client = xla::PjRtClient::cpu()?;
+            let load = |suffix: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path: PathBuf = dir.join(format!("{}.{suffix}.hlo.txt", meta.name));
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+            };
+            let train_exe = load("train")?;
+            let eval_exe = load("eval")?;
+            let p = trainable.len();
+            Ok(PjrtBackend {
+                meta,
+                client,
+                train_exe,
+                eval_exe,
+                trainable,
+                m: vec![0.0; p],
+                v: vec![0.0; p],
+                step: 0,
+                frozen,
+            })
+        }
+
+        pub fn meta(&self) -> &ArtifactMeta {
+            &self.meta
+        }
+
+        fn check_batch(&self, batch: &Batch) -> Result<()> {
+            if batch.batch != self.meta.batch || batch.seq != self.meta.seq {
+                bail!(
+                    "batch shape ({}, {}) does not match artifact ({}, {})",
+                    batch.batch,
+                    batch.seq,
+                    self.meta.batch,
+                    self.meta.seq
+                );
+            }
+            Ok(())
+        }
+
+        fn batch_literals(
+            &self,
+            batch: &Batch,
+        ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+            let b = batch.batch as i64;
+            let s = batch.seq as i64;
+            let tokens = xla::Literal::vec1(&batch.tokens).reshape(&[b, s])?;
+            let target = match &batch.target {
+                Target::Class(labels) => {
+                    let l: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
+                    xla::Literal::vec1(&l)
+                }
+                Target::Reg(vals) => xla::Literal::vec1(&vals[..]),
+                Target::LmMask(mask) => xla::Literal::vec1(&mask[..]).reshape(&[b, s])?,
+            };
+            let pad = xla::Literal::vec1(&batch.pad[..]).reshape(&[b, s])?;
+            Ok((tokens, target, pad))
+        }
+    }
+
+    impl Backend for PjrtBackend {
+        fn train_step(
+            &mut self,
+            batch: &Batch,
+            hyper: &Hyper,
+            _ws: &mut Workspace,
+        ) -> Result<StepOutput> {
+            self.check_batch(batch)?;
+            self.step += 1;
+            let (tokens, target, pad) = self.batch_literals(batch)?;
+            let trainable = xla::Literal::vec1(&self.trainable[..]);
+            let m = xla::Literal::vec1(&self.m[..]);
+            let v = xla::Literal::vec1(&self.v[..]);
+            let step = xla::Literal::vec1(&[self.step as f32]);
+            let hyper_l = xla::Literal::vec1(&[
+                hyper.lr as f32,
+                hyper.head_lr as f32,
+                hyper.weight_decay as f32,
+                hyper.gamma_orth as f32,
+            ]);
+            let frozen = xla::Literal::vec1(&self.frozen[..]);
+            let result = self
+                .train_exe
+                .execute::<xla::Literal>(&[trainable, m, v, step, hyper_l, tokens, target, pad, frozen])?
+                [0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            if parts.len() != 5 {
+                bail!("train artifact returned {} outputs, expected 5", parts.len());
+            }
+            let mut it = parts.into_iter();
+            self.trainable = it.next().unwrap().to_vec::<f32>()?;
+            self.m = it.next().unwrap().to_vec::<f32>()?;
+            self.v = it.next().unwrap().to_vec::<f32>()?;
+            let loss = it.next().unwrap().to_vec::<f32>()?[0] as f64;
+            let metric = it.next().unwrap().to_vec::<f32>()?[0] as f64;
+            Ok(StepOutput { loss, metric, preds: Vec::new() })
+        }
+
+        fn evaluate(&mut self, batch: &Batch, _ws: &mut Workspace) -> Result<StepOutput> {
+            self.check_batch(batch)?;
+            let (tokens, target, pad) = self.batch_literals(batch)?;
+            let trainable = xla::Literal::vec1(&self.trainable[..]);
+            let frozen = xla::Literal::vec1(&self.frozen[..]);
+            let result = self
+                .eval_exe
+                .execute::<xla::Literal>(&[trainable, frozen, tokens, target, pad])?[0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            if parts.len() != 3 {
+                bail!("eval artifact returned {} outputs, expected 3", parts.len());
+            }
+            let mut it = parts.into_iter();
+            let loss = it.next().unwrap().to_vec::<f32>()?[0] as f64;
+            let metric = it.next().unwrap().to_vec::<f32>()?[0] as f64;
+            let preds = it.next().unwrap().to_vec::<f32>()?;
+            Ok(StepOutput { loss, metric, preds })
+        }
+
+        fn trainable(&self) -> Vec<f32> {
+            self.trainable.clone()
+        }
+
+        fn set_trainable(&mut self, p: &[f32]) -> Result<()> {
+            if p.len() != self.trainable.len() {
+                bail!("trainable length {} vs {}", p.len(), self.trainable.len());
+            }
+            self.trainable.copy_from_slice(p);
+            Ok(())
+        }
+
+        fn num_trainable(&self) -> usize {
+            self.trainable.len()
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn steps(&self) -> usize {
+            self.step
+        }
+    }
+
+    /// Mark unused field as intentionally held (client must outlive
+    /// executables).
+    impl Drop for PjrtBackend {
+        fn drop(&mut self) {
+            let _ = &self.client;
+        }
     }
 }
 
-impl Backend for PjrtBackend {
-    fn train_step(&mut self, batch: &Batch, hyper: &Hyper) -> Result<StepOutput> {
-        self.check_batch(batch)?;
-        self.step += 1;
-        let (tokens, target, pad) = self.batch_literals(batch)?;
-        let trainable = xla::Literal::vec1(&self.trainable[..]);
-        let m = xla::Literal::vec1(&self.m[..]);
-        let v = xla::Literal::vec1(&self.v[..]);
-        let step = xla::Literal::vec1(&[self.step as f32]);
-        let hyper_l = xla::Literal::vec1(&[
-            hyper.lr as f32,
-            hyper.head_lr as f32,
-            hyper.weight_decay as f32,
-            hyper.gamma_orth as f32,
-        ]);
-        let frozen = xla::Literal::vec1(&self.frozen[..]);
-        let result = self
-            .train_exe
-            .execute::<xla::Literal>(&[trainable, m, v, step, hyper_l, tokens, target, pad, frozen])?
-            [0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 5 {
-            bail!("train artifact returned {} outputs, expected 5", parts.len());
+#[cfg(not(feature = "xla"))]
+mod backend_impl {
+    use super::*;
+
+    /// Stub PJRT backend for builds without the `xla` feature. The type is
+    /// uninhabited: constructors always return an error, so every method
+    /// body is statically unreachable.
+    pub struct PjrtBackend {
+        never: std::convert::Infallible,
+    }
+
+    impl PjrtBackend {
+        pub fn from_artifact(
+            _dir: &Path,
+            _name: &str,
+            _model: &NativeModel,
+        ) -> Result<PjrtBackend> {
+            bail!(
+                "this binary was built without the `xla` feature — the PJRT backend is \
+                 unavailable (use --backend native, or rebuild with --features xla and the \
+                 xla dependency)"
+            )
         }
-        let mut it = parts.into_iter();
-        self.trainable = it.next().unwrap().to_vec::<f32>()?;
-        self.m = it.next().unwrap().to_vec::<f32>()?;
-        self.v = it.next().unwrap().to_vec::<f32>()?;
-        let loss = it.next().unwrap().to_vec::<f32>()?[0] as f64;
-        let metric = it.next().unwrap().to_vec::<f32>()?[0] as f64;
-        Ok(StepOutput { loss, metric, preds: Vec::new() })
-    }
 
-    fn evaluate(&mut self, batch: &Batch) -> Result<StepOutput> {
-        self.check_batch(batch)?;
-        let (tokens, target, pad) = self.batch_literals(batch)?;
-        let trainable = xla::Literal::vec1(&self.trainable[..]);
-        let frozen = xla::Literal::vec1(&self.frozen[..]);
-        let result = self
-            .eval_exe
-            .execute::<xla::Literal>(&[trainable, frozen, tokens, target, pad])?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 3 {
-            bail!("eval artifact returned {} outputs, expected 3", parts.len());
+        pub fn with_state(
+            _dir: &Path,
+            _meta: ArtifactMeta,
+            _trainable: Vec<f32>,
+            _frozen: Vec<f32>,
+        ) -> Result<PjrtBackend> {
+            bail!("this binary was built without the `xla` feature — the PJRT backend is unavailable")
         }
-        let mut it = parts.into_iter();
-        let loss = it.next().unwrap().to_vec::<f32>()?[0] as f64;
-        let metric = it.next().unwrap().to_vec::<f32>()?[0] as f64;
-        let preds = it.next().unwrap().to_vec::<f32>()?;
-        Ok(StepOutput { loss, metric, preds })
-    }
 
-    fn trainable(&self) -> Vec<f32> {
-        self.trainable.clone()
-    }
-
-    fn set_trainable(&mut self, p: &[f32]) -> Result<()> {
-        if p.len() != self.trainable.len() {
-            bail!("trainable length {} vs {}", p.len(), self.trainable.len());
+        pub fn meta(&self) -> &ArtifactMeta {
+            match self.never {}
         }
-        self.trainable.copy_from_slice(p);
-        Ok(())
     }
 
-    fn num_trainable(&self) -> usize {
-        self.trainable.len()
-    }
+    impl Backend for PjrtBackend {
+        fn train_step(
+            &mut self,
+            _batch: &Batch,
+            _hyper: &Hyper,
+            _ws: &mut Workspace,
+        ) -> Result<StepOutput> {
+            match self.never {}
+        }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
+        fn evaluate(&mut self, _batch: &Batch, _ws: &mut Workspace) -> Result<StepOutput> {
+            match self.never {}
+        }
 
-    fn steps(&self) -> usize {
-        self.step
+        fn trainable(&self) -> Vec<f32> {
+            match self.never {}
+        }
+
+        fn set_trainable(&mut self, _p: &[f32]) -> Result<()> {
+            match self.never {}
+        }
+
+        fn num_trainable(&self) -> usize {
+            match self.never {}
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn steps(&self) -> usize {
+            match self.never {}
+        }
     }
 }
 
-/// Mark unused field as intentionally held (client must outlive
-/// executables).
-impl Drop for PjrtBackend {
-    fn drop(&mut self) {
-        let _ = &self.client;
-    }
-}
+pub use backend_impl::PjrtBackend;

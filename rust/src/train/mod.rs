@@ -8,6 +8,7 @@
 
 use crate::config::{Schedule, TrainConfig};
 use crate::data::{compute_metric, Metric, TaskData};
+use crate::linalg::Workspace;
 use crate::runtime::{Backend, Hyper};
 use crate::util::rng::Rng;
 use crate::util::stats::Stopwatch;
@@ -48,18 +49,20 @@ pub fn schedule_factor(schedule: Schedule, t: usize, total: usize, warmup: usize
     }
 }
 
-/// Evaluate a backend over a split, computing the task metric.
+/// Evaluate a backend over a split, computing the task metric. `ws` is
+/// the run-owned scratch workspace (see [`train`]).
 pub fn evaluate_split(
     backend: &mut dyn Backend,
     task: &TaskData,
     split: &crate::data::Split,
     batch_size: usize,
+    ws: &mut Workspace,
 ) -> Result<(f64, f64)> {
     let batches = task.eval_batches(split, batch_size);
     let mut preds: Vec<f32> = Vec::with_capacity(split.examples.len());
     let mut loss_acc = 0.0;
     for b in &batches {
-        let out = backend.evaluate(b)?;
+        let out = backend.evaluate(b, ws)?;
         loss_acc += out.loss;
         preds.extend(out.preds);
     }
@@ -78,6 +81,10 @@ pub fn train(
 ) -> Result<TrainReport> {
     let sw = Stopwatch::start();
     let mut rng = Rng::new(cfg.seed);
+    // One workspace for the whole run: scratch buffers warm up during the
+    // first step of each batch shape and are reused by every subsequent
+    // train/eval step (the zero-allocation steady state).
+    let mut ws = Workspace::new();
     let steps_per_epoch = task.train.examples.len().div_ceil(cfg.batch_size);
     let mut total_steps = cfg.epochs * steps_per_epoch;
     if let Some(ms) = cfg.max_steps {
@@ -103,7 +110,7 @@ pub fn train(
                 gamma_orth,
                 grad_clip: cfg.grad_clip,
             };
-            let out = backend.train_step(batch, &hyper)?;
+            let out = backend.train_step(batch, &hyper, &mut ws)?;
             loss_curve.push(out.loss);
             final_loss = out.loss;
             step += 1;
@@ -111,7 +118,7 @@ pub fn train(
                 break 'outer;
             }
         }
-        let (val_metric, _) = evaluate_split(backend, task, &task.val, cfg.batch_size)?;
+        let (val_metric, _) = evaluate_split(backend, task, &task.val, cfg.batch_size, &mut ws)?;
         val_curve.push(val_metric);
         if val_metric > best_val {
             best_val = val_metric;
@@ -120,7 +127,7 @@ pub fn train(
     }
 
     // Final validation (covers the max_steps early exit).
-    let (val_metric, _) = evaluate_split(backend, task, &task.val, cfg.batch_size)?;
+    let (val_metric, _) = evaluate_split(backend, task, &task.val, cfg.batch_size, &mut ws)?;
     val_curve.push(val_metric);
     if val_metric > best_val {
         best_val = val_metric;
@@ -129,7 +136,7 @@ pub fn train(
     if let Some(p) = &best_params {
         backend.set_trainable(p)?;
     }
-    let (test_metric, _) = evaluate_split(backend, task, &task.test, cfg.batch_size)?;
+    let (test_metric, _) = evaluate_split(backend, task, &task.test, cfg.batch_size, &mut ws)?;
 
     Ok(TrainReport {
         test_metric,
@@ -241,7 +248,8 @@ mod tests {
         let report = train(&mut be, &task, &tc, 0.0).unwrap();
         // Backend now holds the best-val params: re-evaluating val gives
         // the reported best metric.
-        let (val_again, _) = evaluate_split(&mut be, &task, &task.val, 16).unwrap();
+        let mut ws = crate::linalg::Workspace::new();
+        let (val_again, _) = evaluate_split(&mut be, &task, &task.val, 16, &mut ws).unwrap();
         assert!((val_again - report.val_metric).abs() < 1e-9);
     }
 }

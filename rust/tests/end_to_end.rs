@@ -3,6 +3,7 @@
 
 use psoft::config::{Arch, DataConfig, MethodKind, ModelConfig, PeftConfig, TrainConfig};
 use psoft::data::load_task;
+use psoft::linalg::Workspace;
 use psoft::model::{Backbone, NativeModel};
 use psoft::runtime::{Backend, Hyper, NativeBackend};
 use psoft::train::{evaluate_split, train};
@@ -38,10 +39,11 @@ fn pretrain_finetune_merge_lifecycle() {
     let corpus = load_task(&dc, cfg.vocab_size).unwrap();
     let batches = corpus.batches(&corpus.train, 8, &mut rng);
     let hyper = Hyper { lr: 3e-3, head_lr: 3e-3, ..Default::default() };
+    let mut ws = Workspace::new();
     let mut first = None;
     let mut last = f64::NAN;
     for b in batches.iter().take(40) {
-        let out = pre.train_step(b, &hyper).unwrap();
+        let out = pre.train_step(b, &hyper, &mut ws).unwrap();
         first.get_or_insert(out.loss);
         last = out.loss;
     }
@@ -87,9 +89,10 @@ fn pretrain_finetune_merge_lifecycle() {
     deployed.head_w = be.model.head_w.clone();
     deployed.head_b = be.model.head_b.clone();
     let mut deploy_be = NativeBackend::new(deployed);
-    let (m_adapted, loss_adapted) = evaluate_split(&mut be, &task, &task.test, 16).unwrap();
+    let (m_adapted, loss_adapted) =
+        evaluate_split(&mut be, &task, &task.test, 16, &mut ws).unwrap();
     let (m_deployed, loss_deployed) =
-        evaluate_split(&mut deploy_be, &task, &task.test, 16).unwrap();
+        evaluate_split(&mut deploy_be, &task, &task.test, 16, &mut ws).unwrap();
     assert!(
         (loss_adapted - loss_deployed).abs() < 1e-3 * (1.0 + loss_adapted.abs()),
         "merged deployment must match: {loss_adapted} vs {loss_deployed}"

@@ -1,11 +1,15 @@
 //! Cross-layer integration: the compiled HLO artifacts (L1/L2) executed
 //! from the Rust runtime (L3).
 //!
-//! Requires `make artifacts` to have run (skips politely otherwise so
-//! `cargo test` stays green on a fresh checkout).
+//! Requires the `xla` cargo feature (the offline environment compiles the
+//! PJRT backend as a stub without it) and `make artifacts` to have run
+//! (skips politely otherwise so `cargo test` stays green on a fresh
+//! checkout).
+#![cfg(feature = "xla")]
 
 use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig, TrainConfig};
 use psoft::data::load_task;
+use psoft::linalg::Workspace;
 use psoft::model::native::{Batch, Target};
 use psoft::model::{Backbone, NativeModel};
 use psoft::runtime::pjrt::{ArtifactMeta, PjrtBackend};
@@ -56,7 +60,7 @@ fn fixture_replay_matches_python() {
         pad: vec![1.0; meta.batch * meta.seq],
         target: Target::Class(labels),
     };
-    let out = backend.evaluate(&batch).unwrap();
+    let out = backend.evaluate(&batch, &mut Workspace::new()).unwrap();
 
     let want_loss = fixture.get("loss").as_f64().unwrap();
     let want_metric = fixture.get("metric").as_f64().unwrap();
@@ -114,11 +118,12 @@ fn pjrt_training_reduces_loss_psoft() {
     let batches = task.batches(&task.train, 32, &mut rng);
 
     let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    let mut ws = Workspace::new();
     let mut first = None;
     let mut last = 0.0;
     for _ in 0..3 {
         for b in &batches {
-            let out = backend.train_step(b, &hyper).unwrap();
+            let out = backend.train_step(b, &hyper, &mut ws).unwrap();
             if first.is_none() {
                 first = Some(out.loss);
             }
@@ -156,8 +161,9 @@ fn native_and_pjrt_agree_on_eval() {
     let task = load_task(&dc, cfg.vocab_size).unwrap();
     let batch = &task.eval_batches(&task.val, 32)[0];
 
-    let out_native = native.evaluate(batch).unwrap();
-    let out_pjrt = pjrt.evaluate(batch).unwrap();
+    let mut ws = Workspace::new();
+    let out_native = native.evaluate(batch, &mut ws).unwrap();
+    let out_pjrt = pjrt.evaluate(batch, &mut ws).unwrap();
     assert!(
         (out_native.loss - out_pjrt.loss).abs() < 2e-3 * (1.0 + out_native.loss.abs()),
         "native {} vs pjrt {}",

@@ -1,0 +1,171 @@
+//! Property tests for the workspace refactor: every adapter's in-place
+//! `forward_into` / `backward_into` kernel must reproduce the allocating
+//! `forward` / `backward` **bit-for-bit**, across all 12 method kinds and
+//! random shapes — including when the workspace pool and output buffers
+//! are dirty from previous steps (the buffer-hygiene property the
+//! zero-allocation training path depends on).
+
+use psoft::config::{MethodKind, PeftConfig};
+use psoft::linalg::{Mat, Workspace};
+use psoft::peft::build_adapter;
+use psoft::util::check::{ensure, forall};
+use psoft::util::rng::Rng;
+
+const ALL_METHODS: [MethodKind; 12] = MethodKind::ALL;
+
+/// Random valid config per method (d power-of-two for GOFT's stages).
+fn random_cfg(rng: &mut Rng, method: MethodKind) -> (PeftConfig, usize, usize) {
+    let d = [8usize, 16, 32][rng.below(3)];
+    let n = [8usize, 12, 16][rng.below(3)];
+    let rank = 1 + rng.below(d.min(n).min(6));
+    let mut cfg = PeftConfig::new(method, rank);
+    cfg.oft_block_size = [4usize, 8][rng.below(2)];
+    cfg.boft_b = 2;
+    cfg.boft_m = 1 + rng.below(3);
+    cfg.use_alpha = rng.bool(0.7);
+    cfg.use_beta = rng.bool(0.7);
+    (cfg, d, n)
+}
+
+/// Build an adapter at a perturbed (non-identity) parameter point.
+fn perturbed_adapter(
+    cfg: &PeftConfig,
+    w: &Mat,
+    scale: f64,
+) -> Box<dyn psoft::peft::Adapter> {
+    let mut rng = Rng::new(77);
+    let mut adapter = build_adapter(cfg, w, &mut rng);
+    let mut p = adapter.params();
+    for v in p.iter_mut() {
+        *v += (scale * rng.normal()) as f32;
+    }
+    adapter.set_params(&p);
+    adapter
+}
+
+#[test]
+fn prop_forward_into_matches_forward_bitwise() {
+    forall(
+        3001,
+        48,
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let (cfg, d, n) = random_cfg(rng, method);
+            let w = Mat::randn(d, n, 0.3, rng);
+            let x = Mat::randn(2 + rng.below(6), d, 1.0, rng);
+            (cfg, w, x, n)
+        },
+        |(cfg, w, x, n)| {
+            let adapter = perturbed_adapter(cfg, w, 0.05);
+            let y0 = adapter.forward(x);
+            let mut ws = Workspace::new();
+            // First call: cold workspace.
+            let mut y1 = Mat::zeros(x.rows, *n);
+            adapter.forward_into(x, &mut y1, &mut ws);
+            ensure(y0.data == y1.data, format!("{:?}: cold forward_into differs", cfg.method))?;
+            // Second call: warm (dirty) pool buffers and a dirty output.
+            let mut y2 = Mat::filled(x.rows, *n, 7.25);
+            adapter.forward_into(x, &mut y2, &mut ws);
+            ensure(y0.data == y2.data, format!("{:?}: dirty forward_into differs", cfg.method))
+        },
+    );
+}
+
+#[test]
+fn prop_backward_into_matches_backward_bitwise() {
+    forall(
+        3002,
+        48,
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let (cfg, d, n) = random_cfg(rng, method);
+            let w = Mat::randn(d, n, 0.3, rng);
+            let t = 2 + rng.below(6);
+            let x = Mat::randn(t, d, 1.0, rng);
+            let dy = Mat::randn(t, n, 1.0, rng);
+            (cfg, w, x, dy)
+        },
+        |(cfg, w, x, dy)| {
+            let adapter = perturbed_adapter(cfg, w, 0.05);
+            let g = adapter.backward(x, dy);
+            let mut ws = Workspace::new();
+            for round in 0..2 {
+                // Round 0 cold, round 1 with dirty pool buffers; dx starts
+                // dirty both times (backward_into overwrites it).
+                let mut d_params = vec![0.0f32; adapter.num_params()];
+                let mut dx = Mat::filled(x.rows, x.cols, -3.5);
+                adapter.backward_into(x, dy, &mut d_params, &mut dx, &mut ws);
+                ensure(
+                    d_params == g.d_params,
+                    format!("{:?} round {round}: d_params differ", cfg.method),
+                )?;
+                ensure(
+                    dx.data == g.dx.data,
+                    format!("{:?} round {round}: dx differs", cfg.method),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_backward_into_accumulates_into_existing_grads() {
+    forall(
+        3003,
+        24,
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let (cfg, d, n) = random_cfg(rng, method);
+            let w = Mat::randn(d, n, 0.3, rng);
+            let t = 2 + rng.below(4);
+            let x = Mat::randn(t, d, 1.0, rng);
+            let dy = Mat::randn(t, n, 1.0, rng);
+            (cfg, w, x, dy)
+        },
+        |(cfg, w, x, dy)| {
+            let adapter = perturbed_adapter(cfg, w, 0.05);
+            let g = adapter.backward(x, dy);
+            let mut ws = Workspace::new();
+            let base = 0.5f32;
+            let mut d_params = vec![base; adapter.num_params()];
+            let mut dx = Mat::zeros(x.rows, x.cols);
+            adapter.backward_into(x, dy, &mut d_params, &mut dx, &mut ws);
+            for (i, (&acc, &gi)) in d_params.iter().zip(&g.d_params).enumerate() {
+                let want = base as f64 + gi as f64;
+                let got = acc as f64;
+                if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                    return Err(format!(
+                        "{:?}: grad {i} not accumulated: {got} vs base+{gi}",
+                        cfg.method
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn workspace_pool_stops_allocating_after_first_step() {
+    // Adapter-level statement of the steady-state guarantee: after one
+    // forward+backward, later identical calls never miss the pool.
+    let mut rng = Rng::new(3004);
+    let w = Mat::randn(16, 12, 0.3, &mut rng);
+    let cfg = PeftConfig::new(MethodKind::Psoft, 4);
+    let adapter = perturbed_adapter(&cfg, &w, 0.05);
+    let x = Mat::randn(6, 16, 1.0, &mut rng);
+    let dy = Mat::randn(6, 12, 1.0, &mut rng);
+    let mut ws = Workspace::new();
+    let mut y = Mat::zeros(6, 12);
+    let mut dx = Mat::zeros(6, 16);
+    let mut d_params = vec![0.0f32; adapter.num_params()];
+    adapter.forward_into(&x, &mut y, &mut ws);
+    adapter.backward_into(&x, &dy, &mut d_params, &mut dx, &mut ws);
+    let warm = ws.misses();
+    for _ in 0..5 {
+        adapter.forward_into(&x, &mut y, &mut ws);
+        adapter.backward_into(&x, &dy, &mut d_params, &mut dx, &mut ws);
+    }
+    assert_eq!(ws.misses(), warm, "workspace must not allocate after warmup");
+}

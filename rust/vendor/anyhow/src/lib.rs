@@ -1,0 +1,138 @@
+//! Minimal vendored subset of the `anyhow` API.
+//!
+//! The offline build environment has no crates.io access (see
+//! `psoft::util` — the same reason the main crate carries its own RNG,
+//! JSON, and thread pool). This shim provides exactly the surface the
+//! `psoft` crate uses: [`Error`], [`Result`], the [`anyhow!`] and
+//! [`bail!`] macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Errors are flattened to strings at construction; no
+//! downcasting or backtraces.
+
+use std::fmt;
+
+/// A string-backed error value, mirroring `anyhow::Error`'s role as a
+/// catch-all. Deliberately does **not** implement `std::error::Error`,
+/// so the blanket `From<E: std::error::Error>` below never overlaps the
+/// reflexive `From<Error> for Error` the `?` operator relies on.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context line (`context: inner`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context-attachment extension for `Result` and `Option`, matching the
+/// subset of `anyhow::Context` the crate uses.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("parsing number")?;
+        if n < 0 {
+            bail!("negative: {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        assert_eq!(parse_num("4").unwrap(), 4);
+        let e = parse_num("x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing number:"));
+        let e = parse_num("-2").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = Context::context(v, "missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x={}", 3).to_string(), "x=3");
+        let s = String::from("owned");
+        assert_eq!(anyhow!(s).to_string(), "owned");
+    }
+}
