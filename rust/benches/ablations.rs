@@ -2,6 +2,11 @@
 //! Table 16 (SVD n_iter), Fig 3 (tunable vectors), Fig 8a (inserted
 //! modules), Fig 8b (Neumann terms).
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::bench::{bench_decoder, bench_encoder, pretrained_backbone, time_ms, write_csv};
 use psoft::config::{DataConfig, MethodKind, ModuleKind, PeftConfig, PsoftInit, TrainConfig};
 use psoft::data::load_task;

@@ -2,6 +2,11 @@
 //! under strict vs relaxed PSOFT) and Fig 11 (loss curves across PSOFT
 //! ranks vs OFT variants).
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::bench::{bench_encoder, pretrained_backbone, write_csv};
 use psoft::config::{DataConfig, MethodKind, ModuleKind, PeftConfig, TrainConfig};
 use psoft::data::load_task;
@@ -67,7 +72,12 @@ fn fig9_10_angles() {
             angles_to_csv(&pairwise_angles(w_final, k)),
         )
         .unwrap();
-        rows.push(format!("{label},{:.4},{:.6},{:.4}", d_angle.to_degrees(), d_norm, be.model.orth_defect()));
+        rows.push(format!(
+            "{label},{:.4},{:.6},{:.4}",
+            d_angle.to_degrees(),
+            d_norm,
+            be.model.orth_defect()
+        ));
     }
     write_csv("fig9_10_summary", "variant,max_dangle_deg,max_rel_dnorm,defect", &rows);
     // Shape claim: strict preserves angles far better than relaxed moves
@@ -134,7 +144,11 @@ fn fig11_loss_curves() {
     // Shape claim: larger PSOFT ranks approach the OFT-variant loss curves
     // (Appendix L) — higher-rank final loss ≤ lower-rank final loss.
     let final_of = |label: &str| {
-        curves.iter().find(|(l, _)| l == label).and_then(|(_, c)| c.last().copied()).unwrap_or(f64::NAN)
+        curves
+            .iter()
+            .find(|(l, _)| l == label)
+            .and_then(|(_, c)| c.last().copied())
+            .unwrap_or(f64::NAN)
     };
     assert!(
         final_of("psoft_r46") <= final_of("psoft_r4") + 0.05,

@@ -1,13 +1,18 @@
 //! §Perf A/B microbench: the decoder LM-loss hot path, scalar loops vs
 //! the gather+matmul rewrite (EXPERIMENTS.md §Perf).
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 // quick honest measurement: decoder train step + isolated scalar-vs-matmul LM loss
 use psoft::bench::time_ms;
 use psoft::config::*;
+use psoft::linalg::{matmul, matmul_nt, matmul_tn, Mat};
 use psoft::model::native::{Batch, Target};
 use psoft::model::{Backbone, NativeModel};
 use psoft::runtime::{Backend, Hyper, NativeBackend};
 use psoft::util::rng::Rng;
-use psoft::linalg::{matmul, matmul_nt, matmul_tn, Mat};
 
 fn main() {
     let cfg = ModelConfig::decoder_small();
@@ -18,17 +23,31 @@ fn main() {
     let model = NativeModel::from_backbone(&bb, &p, &mut rng);
     let mut be = NativeBackend::new(model);
     let (bsz, seq) = (16usize, 32usize);
-    let tokens: Vec<i32> = (0..bsz*seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
-    let mut mask = vec![0.0f32; bsz*seq];
-    for b in 0..bsz { for s in seq/2..seq { mask[b*seq+s] = 1.0; } }
-    let batch = Batch { batch: bsz, seq, tokens: tokens.clone(), pad: vec![1.0; bsz*seq], target: Target::LmMask(mask) };
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let mut mask = vec![0.0f32; bsz * seq];
+    for b in 0..bsz {
+        for s in seq / 2..seq {
+            mask[b * seq + s] = 1.0;
+        }
+    }
+    let batch = Batch {
+        batch: bsz,
+        seq,
+        tokens: tokens.clone(),
+        pad: vec![1.0; bsz * seq],
+        target: Target::LmMask(mask),
+    };
     let hyper = Hyper::default();
     let mut ws = psoft::linalg::Workspace::new();
-    let t = time_ms(5, || { be.train_step(&batch, &hyper, &mut ws).unwrap(); });
+    let t = time_ms(5, || {
+        be.train_step(&batch, &hyper, &mut ws).unwrap();
+    });
     println!("decoder train_step (matmul LM loss): {t:.1} ms");
 
     // Isolated LM-loss cost comparison at the same shape.
-    let d = cfg.d_model; let v = cfg.vocab_size; let m = bsz*seq/2;
+    let d = cfg.d_model;
+    let v = cfg.vocab_size;
+    let m = bsz * seq / 2;
     let hidden = Mat::randn(m, d, 1.0, &mut rng);
     let lm = Mat::randn(d, v, 0.05, &mut rng);
     let t_mat = time_ms(5, || {
@@ -46,14 +65,21 @@ fn main() {
             for i in 0..d {
                 let hv = hrow[i];
                 let lrow = lm.row(i);
-                for (lo, &lv) in logits.iter_mut().zip(lrow) { *lo += hv * lv; }
+                for (lo, &lv) in logits.iter_mut().zip(lrow) {
+                    *lo += hv * lv;
+                }
             }
             for j in 0..v {
                 acc += logits[j];
-                for i in 0..d { d_lm[(i,j)] += logits[j] * hrow[i]; }
+                for i in 0..d {
+                    d_lm[(i, j)] += logits[j] * hrow[i];
+                }
             }
         }
         std::hint::black_box((acc, d_lm));
     });
-    println!("LM loss fwd+bwd isolated: scalar {t_scalar:.1} ms vs matmul {t_mat:.1} ms ({:.1}x)", t_scalar / t_mat);
+    println!(
+        "LM loss fwd+bwd isolated: scalar {t_scalar:.1} ms vs matmul {t_mat:.1} ms ({:.1}x)",
+        t_scalar / t_mat
+    );
 }

@@ -8,6 +8,11 @@
 //!
 //! Environment knobs: PSOFT_BENCH_FAST=1 shrinks the grids (CI smoke).
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::bench::{bench_decoder, bench_encoder, bench_vit, pretrained_backbone};
 use psoft::config::{DataConfig, MethodKind, PeftConfig, TrainConfig};
 use psoft::coordinator::{aggregate, grid, report, DeviceBudget, SuiteRunner};

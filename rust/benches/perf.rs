@@ -4,6 +4,11 @@
 //! (training speed per method), plus substrate microbenches (matmul,
 //! Cayley–Neumann, SVD) used by the §Perf iteration log.
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::bench::{bench_encoder, pretrained_backbone, time_ms, write_csv};
 use psoft::config::{MethodKind, ModelConfig, PeftConfig};
 use psoft::linalg::{matmul, svd, DMat, Mat, Workspace};
@@ -19,13 +24,35 @@ fn fast() -> bool {
     std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
+/// `PSOFT_BENCH_ONLY=hotpath` (etc.) restricts the run to one section —
+/// the CI smoke job runs only the hot-path anchor against the committed
+/// `BENCH_hotpath.json` baseline.
+fn enabled(name: &str) -> bool {
+    match std::env::var("PSOFT_BENCH_ONLY") {
+        Ok(only) => only == name,
+        Err(_) => true,
+    }
+}
+
 fn main() {
-    hotpath_bench();
-    micro_substrates();
-    table19_single_layer();
-    table20_block();
-    table21_22_model_memory();
-    fig4b_training_speed();
+    if enabled("hotpath") {
+        hotpath_bench();
+    }
+    if enabled("micro") {
+        micro_substrates();
+    }
+    if enabled("table19") {
+        table19_single_layer();
+    }
+    if enabled("table20") {
+        table20_block();
+    }
+    if enabled("memory") {
+        table21_22_model_memory();
+    }
+    if enabled("fig4b") {
+        fig4b_training_speed();
+    }
 }
 
 /// Peak resident set size in bytes (Linux VmHWM; 0 when unavailable).
@@ -245,7 +272,10 @@ fn table20_block() {
             })
             .sum();
         let extra_mb = (extra_floats * bsz * seq * 4) as f64 / 1e6;
-        println!("{:<10} fwd+bwd = {ms:>8.2} ms   adapter-activations = {extra_mb:.3} MB", m.name());
+        println!(
+            "{:<10} fwd+bwd = {ms:>8.2} ms   adapter-activations = {extra_mb:.3} MB",
+            m.name()
+        );
         rows.push(format!("{},{ms:.3},{extra_mb:.4}", m.name()));
     }
     write_csv("table20_block", "method,fwdbwd_ms,adapter_act_mb", &rows);
@@ -259,9 +289,11 @@ fn table21_22_model_memory() {
     let mut rows = Vec::new();
     let deberta = PaperModel::deberta_v3_base().config();
     for s in [64usize, 128, 256] {
-        for (label, m, r) in
-            [("goftv2", MethodKind::Goft, 1), ("boft", MethodKind::Boft, 1), ("psoft", MethodKind::Psoft, 46)]
-        {
+        for (label, m, r) in [
+            ("goftv2", MethodKind::Goft, 1),
+            ("boft", MethodKind::Boft, 1),
+            ("psoft", MethodKind::Psoft, 46),
+        ] {
             let mut p = PeftConfig::new(m, r);
             p.modules = deberta.modules();
             let mem = peak_memory_estimate(&deberta, &p, 64, s);
@@ -271,14 +303,20 @@ fn table21_22_model_memory() {
     }
     let vit = PaperModel::vit_b16().config();
     for b in [16usize, 32, 64] {
-        for (label, m, r) in
-            [("goftv2", MethodKind::Goft, 1), ("boft", MethodKind::Boft, 1), ("psoft", MethodKind::Psoft, 46)]
-        {
+        for (label, m, r) in [
+            ("goftv2", MethodKind::Goft, 1),
+            ("boft", MethodKind::Boft, 1),
+            ("psoft", MethodKind::Psoft, 46),
+        ] {
             let mut p = PeftConfig::new(m, r);
             p.modules = vit.modules();
             let mem = peak_memory_estimate(&vit, &p, b, 197);
             let oom = psoft::memmodel::would_oom(mem, psoft::memmodel::RTX4090_BYTES);
-            println!("vit b={b:<3} {label:<8} {:.1} GiB {}", mem / 1.074e9, if oom { "OOM@24G" } else { "" });
+            println!(
+                "vit b={b:<3} {label:<8} {:.1} GiB {}",
+                mem / 1.074e9,
+                if oom { "OOM@24G" } else { "" }
+            );
             rows.push(format!("vit,{b},{label},{mem:.0}"));
         }
     }

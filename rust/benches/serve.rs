@@ -1,0 +1,232 @@
+//! Serve bench: multi-adapter serving throughput/latency over one shared
+//! frozen backbone — 1 vs 4 vs 16 adapters on the same fixed worker pool.
+//! Emits `BENCH_serve.json`, the baseline the CI bench gate diffs against
+//! (see `tools/bench_gate`). `PSOFT_BENCH_FAST=1` switches to the short
+//! deterministic smoke mode CI runs.
+//!
+//! The per-request shapes are kept below the matmul threading thresholds
+//! so each worker runs single-threaded compute: measured scaling is pure
+//! scheduler parallelism across adapters, not nested matmul threading.
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use psoft::bench::{bench_encoder, write_csv};
+use psoft::config::{MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::coordinator::serve_report;
+use psoft::model::native::{Batch, Target};
+use psoft::model::{Backbone, NativeModel};
+use psoft::peft::AdapterId;
+use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+use psoft::runtime::Hyper;
+use psoft::util::json::Json;
+use psoft::util::rng::Rng;
+use psoft::util::stats::Stopwatch;
+use psoft::util::threadpool::default_parallelism;
+use std::sync::Arc;
+
+fn fast() -> bool {
+    std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The adapter mix cycled across registrations: the paper's method plus
+/// three baselines, all on Q,V. PSOFT uses randomized-SVD init so 16
+/// registrations stay cheap.
+fn peft_for(i: usize) -> (String, PeftConfig) {
+    let modules = vec![ModuleKind::Q, ModuleKind::V];
+    match i % 4 {
+        0 => {
+            let mut p = PeftConfig::new(MethodKind::Psoft, 16).with_modules(modules);
+            p.svd_n_iter = Some(2);
+            ("psoft_r16".to_string(), p)
+        }
+        1 => ("lora_r8".to_string(), PeftConfig::new(MethodKind::Lora, 8).with_modules(modules)),
+        2 => {
+            let mut p = PeftConfig::new(MethodKind::OftV2, 8).with_modules(modules);
+            p.oft_block_size = 16;
+            ("oftv2_b16".to_string(), p)
+        }
+        _ => {
+            let mut p = PeftConfig::new(MethodKind::Boft, 8).with_modules(modules);
+            p.boft_b = 4;
+            p.boft_m = 2;
+            ("boft_b4m2".to_string(), p)
+        }
+    }
+}
+
+fn synth_batch(cfg: &ModelConfig, bsz: usize, seq: usize, seed: u64) -> Arc<Batch> {
+    let mut rng = Rng::new(seed);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+    Arc::new(Batch {
+        batch: bsz,
+        seq,
+        tokens,
+        pad: vec![1.0; bsz * seq],
+        target: Target::Class(labels),
+    })
+}
+
+struct ConfigResult {
+    adapters: usize,
+    requests: u64,
+    wall_secs: f64,
+    reqs_per_sec: f64,
+    mean_service_ms: f64,
+    mean_latency_ms: f64,
+}
+
+fn main() {
+    let cfg = bench_encoder();
+    let mut rng = Rng::new(95);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let workers = default_parallelism().min(8);
+    let (bsz, seq) = (4usize, 12usize);
+    let rounds = if fast() { 6usize } else { 24 };
+    let hyper = Hyper::default();
+    println!(
+        "=== serve bench: {workers} workers, batch {bsz}x{seq}, \
+         {rounds} rounds of train+eval per adapter ==="
+    );
+
+    let mut results: Vec<ConfigResult> = Vec::new();
+    let mut csv_rows = Vec::new();
+    for &n_adapters in &[1usize, 4, 16] {
+        let opts = ServeOptions {
+            workers,
+            queue_cap: 2 * rounds + 4,
+            burst: 4,
+            ..Default::default()
+        };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let ids: Vec<AdapterId> = (0..n_adapters)
+            .map(|i| {
+                let (label, peft) = peft_for(i);
+                core.register(&label, &peft, 1000 + i as u64)
+            })
+            .collect();
+        let batches: Vec<Arc<Batch>> =
+            (0..n_adapters).map(|a| synth_batch(&cfg, bsz, seq, 77 + a as u64)).collect();
+
+        // Warmup: one train + one eval per adapter (sizes every buffer).
+        let warm = Ticket::new(bsz);
+        for (a, id) in ids.iter().enumerate() {
+            core.submit(*id, &batches[a], ReqKind::Train(hyper), &warm).unwrap();
+            warm.wait().unwrap();
+            core.submit(*id, &batches[a], ReqKind::Eval, &warm).unwrap();
+            warm.wait().unwrap();
+        }
+
+        let before: Vec<_> = ids.iter().map(|id| core.stats(*id).unwrap()).collect();
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(rounds * n_adapters * 2);
+        let sw = Stopwatch::start();
+        for _ in 0..rounds {
+            for (a, id) in ids.iter().enumerate() {
+                let tt = Ticket::new(bsz);
+                core.submit(*id, &batches[a], ReqKind::Train(hyper), &tt).unwrap();
+                tickets.push(tt);
+                let te = Ticket::new(bsz);
+                core.submit(*id, &batches[a], ReqKind::Eval, &te).unwrap();
+                tickets.push(te);
+            }
+        }
+        core.drain();
+        let wall_secs = sw.secs();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+
+        let requests = (rounds * n_adapters * 2) as u64;
+        let mut lat_sum = 0u64;
+        let mut svc_sum = 0u64;
+        for (id, b) in ids.iter().zip(&before) {
+            let s = core.stats(*id).unwrap();
+            lat_sum += s.total_latency_ns - b.total_latency_ns;
+            svc_sum += s.service_ns - b.service_ns;
+        }
+        let reqs_per_sec = requests as f64 / wall_secs.max(1e-9);
+        let mean_latency_ms = lat_sum as f64 / requests as f64 / 1e6;
+        let mean_service_ms = svc_sum as f64 / requests as f64 / 1e6;
+        println!(
+            "adapters {n_adapters:>2}: {requests:>5} reqs in {wall_secs:>7.3}s \
+             = {reqs_per_sec:>8.2} req/s (svc {mean_service_ms:.3} ms, lat {mean_latency_ms:.3} ms)"
+        );
+        csv_rows.push(format!(
+            "{n_adapters},{requests},{wall_secs:.4},{reqs_per_sec:.3},\
+             {mean_service_ms:.4},{mean_latency_ms:.4}"
+        ));
+        if n_adapters == 16 {
+            let report = serve_report("serve bench (16 adapters)", &core, wall_secs, workers);
+            println!("{}", report.to_markdown());
+        }
+        results.push(ConfigResult {
+            adapters: n_adapters,
+            requests,
+            wall_secs,
+            reqs_per_sec,
+            mean_service_ms,
+            mean_latency_ms,
+        });
+    }
+    write_csv(
+        "serve_bench",
+        "adapters,requests,wall_s,reqs_per_sec,mean_service_ms,mean_latency_ms",
+        &csv_rows,
+    );
+
+    // Shared-backbone accounting: frozen bytes each extra adapter
+    // references instead of copying.
+    let (_, peft0) = peft_for(0);
+    let mut mrng = Rng::new(7);
+    let probe = NativeModel::from_backbone(&bb, &peft0, &mut mrng);
+    let shared_mib = probe.shared_frozen_bytes() as f64 / (1024.0 * 1024.0);
+
+    let rps_at = |n: usize| -> f64 {
+        results.iter().find(|c| c.adapters == n).map(|c| c.reqs_per_sec).unwrap_or(0.0)
+    };
+    let scaling = if rps_at(1) > 0.0 { rps_at(16) / rps_at(1) } else { 0.0 };
+    println!(
+        "16-adapter aggregate throughput = {scaling:.2}x single-adapter; \
+         {shared_mib:.2} MiB frozen state shared per adapter"
+    );
+
+    let json = Json::obj(vec![
+        (
+            "workload",
+            Json::Str(format!(
+                "encoder_small; psoft/lora/oftv2/boft mix on Q,V; \
+                 batch {bsz} x seq {seq}; paired train+eval requests"
+            )),
+        ),
+        ("workers", Json::Num(workers as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("fast_mode", Json::Bool(fast())),
+        (
+            "configs",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("adapters", Json::Num(c.adapters as f64)),
+                            ("requests", Json::Num(c.requests as f64)),
+                            ("wall_secs", Json::Num(c.wall_secs)),
+                            ("reqs_per_sec", Json::Num(c.reqs_per_sec)),
+                            ("mean_service_ms", Json::Num(c.mean_service_ms)),
+                            ("mean_latency_ms", Json::Num(c.mean_latency_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("reqs_per_sec_1", Json::Num(rps_at(1))),
+        ("reqs_per_sec_16", Json::Num(rps_at(16))),
+        ("scaling_16x_over_1x", Json::Num(scaling)),
+        ("shared_frozen_mib_per_adapter", Json::Num(shared_mib)),
+    ]);
+    std::fs::write("BENCH_serve.json", json.dump_pretty()).expect("write BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json");
+}

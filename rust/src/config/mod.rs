@@ -52,8 +52,15 @@ pub enum ModuleKind {
 }
 
 impl ModuleKind {
-    pub const ALL: [ModuleKind; 7] =
-        [ModuleKind::Q, ModuleKind::K, ModuleKind::V, ModuleKind::O, ModuleKind::U, ModuleKind::D, ModuleKind::G];
+    pub const ALL: [ModuleKind; 7] = [
+        ModuleKind::Q,
+        ModuleKind::K,
+        ModuleKind::V,
+        ModuleKind::O,
+        ModuleKind::U,
+        ModuleKind::D,
+        ModuleKind::G,
+    ];
 
     pub fn parse(s: &str) -> Result<ModuleKind> {
         match s.to_ascii_uppercase().as_str() {
@@ -150,7 +157,14 @@ impl ModelConfig {
     /// The linear modules this architecture actually has.
     pub fn modules(&self) -> Vec<ModuleKind> {
         match self.arch {
-            Arch::Encoder => vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V, ModuleKind::O, ModuleKind::U, ModuleKind::D],
+            Arch::Encoder => vec![
+                ModuleKind::Q,
+                ModuleKind::K,
+                ModuleKind::V,
+                ModuleKind::O,
+                ModuleKind::U,
+                ModuleKind::D,
+            ],
             Arch::Decoder => ModuleKind::ALL.to_vec(),
         }
     }
@@ -414,6 +428,37 @@ impl DataConfig {
     }
 }
 
+/// Serve-mode scheduler settings (`[serve]` TOML section / `psoft serve`
+/// CLI flags; consumed by `runtime::serve::ServeOptions`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads in the fixed pool.
+    pub workers: usize,
+    /// Per-adapter queue depth cap (backpressure boundary).
+    pub queue_cap: usize,
+    /// Max consecutive requests per adapter per dispatch.
+    pub burst: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 4, queue_cap: 32, burst: 4 }
+    }
+}
+
+impl ServeConfig {
+    /// Read the `[serve]` section of a config tree; missing keys keep the
+    /// defaults.
+    pub fn from_toml(tree: &Json) -> ServeConfig {
+        let s = tree.get("serve");
+        let mut sc = ServeConfig::default();
+        read_usize(s, "workers", &mut sc.workers);
+        read_usize(s, "queue_cap", &mut sc.queue_cap);
+        read_usize(s, "burst", &mut sc.burst);
+        sc
+    }
+}
+
 /// A complete fine-tuning job description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -452,7 +497,11 @@ impl RunConfig {
         if let Some(arr) = p.get("modules").as_arr() {
             peft.modules = arr
                 .iter()
-                .map(|v| ModuleKind::parse(v.as_str().ok_or_else(|| anyhow!("modules entries must be strings"))?))
+                .map(|v| {
+                    let s =
+                        v.as_str().ok_or_else(|| anyhow!("modules entries must be strings"))?;
+                    ModuleKind::parse(s)
+                })
                 .collect::<Result<Vec<_>>>()?;
         }
         if let Some(b) = p.get("use_alpha").as_bool() {
@@ -575,6 +624,18 @@ mod tests {
         assert!(!rc.peft.use_alpha && rc.peft.use_beta);
         assert_eq!(rc.train.seed, 7);
         assert_eq!(rc.data.task, "gsm8k");
+    }
+
+    #[test]
+    fn serve_section_parses_with_defaults() {
+        let tree = toml::parse("[serve]\nworkers = 8\nqueue_cap = 64\n").unwrap();
+        let sc = ServeConfig::from_toml(&tree);
+        assert_eq!(sc.workers, 8);
+        assert_eq!(sc.queue_cap, 64);
+        assert_eq!(sc.burst, ServeConfig::default().burst);
+        // Absent section ⇒ pure defaults.
+        let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
+        assert_eq!(sc2.workers, ServeConfig::default().workers);
     }
 
     #[test]

@@ -183,7 +183,8 @@ mod tests {
 
     #[test]
     fn parses_arrays_and_comments() {
-        let t = parse("# comment\nmods = [\"q\", \"k\", \"v\"] # trailing\nranks = [8, 16, 32]").unwrap();
+        let src = "# comment\nmods = [\"q\", \"k\", \"v\"] # trailing\nranks = [8, 16, 32]";
+        let t = parse(src).unwrap();
         assert_eq!(t.get("mods").at(1).as_str(), Some("k"));
         assert_eq!(t.get("ranks").at(2).as_usize(), Some(32));
     }

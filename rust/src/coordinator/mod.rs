@@ -6,6 +6,10 @@
 //! [`JobResult`]s (including per-job failures, which become table cells
 //! rather than crashes — the "OOM" cells of Tables 2–5 work the same way),
 //! and aggregates seed averages into report tables.
+//!
+//! Serve mode (`runtime::serve`) reports through the same bundle
+//! machinery: [`serve_report`] snapshots a live core's per-adapter stats
+//! into a [`report::ServeReport`].
 
 pub mod report;
 
@@ -171,6 +175,32 @@ pub fn grid(
     jobs
 }
 
+/// Snapshot a serve core's live per-adapter stats into a serve report.
+/// `wall_secs` is the caller-measured serving window (the core itself has
+/// no notion of when the workload started).
+pub fn serve_report(
+    title: &str,
+    core: &crate::runtime::serve::ServeCore,
+    wall_secs: f64,
+    workers: usize,
+) -> report::ServeReport {
+    let rows = core
+        .adapters()
+        .into_iter()
+        .map(|(id, label, s)| report::ServeRow {
+            id: id.0,
+            label,
+            processed: s.processed,
+            train_steps: s.train_steps,
+            rejected: s.rejected,
+            mean_latency_ms: s.mean_latency_ms(),
+            max_latency_ms: s.max_latency_ms(),
+            mean_service_ms: s.mean_service_ms(),
+        })
+        .collect();
+    report::ServeReport { title: title.to_string(), workers, wall_secs, rows }
+}
+
 /// Mean metric per (label, task) cell across seeds; failed jobs collapse
 /// the cell to the error string.
 pub fn aggregate(results: &[JobResult]) -> Vec<report::Cell> {
@@ -314,6 +344,44 @@ mod tests {
         assert_eq!(cells.len(), 1);
         assert_eq!(cells[0].n, 3);
         assert!(cells[0].value.is_finite());
+    }
+
+    #[test]
+    fn serve_report_snapshots_core_stats() {
+        use crate::model::native::{Batch, Target};
+        use crate::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+
+        let mut rng = Rng::new(503);
+        let bb = Arc::new(Backbone::random(&tiny_model_cfg(), &mut rng));
+        let opts = ServeOptions { workers: 1, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let peft = PeftConfig::new(MethodKind::Lora, 3)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let id = core.register("lora_r3", &peft, 9);
+        let tokens: Vec<i32> = (0..12).map(|i| (i % 13) as i32).collect();
+        let batch = Arc::new(Batch {
+            batch: 2,
+            seq: 6,
+            tokens,
+            pad: vec![1.0; 12],
+            target: Target::Class(vec![0, 1]),
+        });
+        let ticket = Ticket::new(2);
+        for _ in 0..3 {
+            core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+            ticket.wait().unwrap();
+        }
+        let report = serve_report("serve smoke", &core, 1.0, 1);
+        assert_eq!(report.rows.len(), 1);
+        assert_eq!(report.total_requests(), 3);
+        assert!((report.throughput_rps() - 3.0).abs() < 1e-9);
+        assert!(report.to_markdown().contains("lora_r3"));
+        assert!(report.to_csv().contains("lora_r3"));
+        assert_eq!(
+            report.to_json().get("total_requests").as_usize(),
+            Some(3),
+            "json aggregate"
+        );
     }
 
     #[test]

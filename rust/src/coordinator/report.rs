@@ -83,7 +83,8 @@ impl Table {
                 }
             })
             .collect();
-        Table { title: title.to_string(), task_order: task_order.iter().map(|s| s.to_string()).collect(), rows }
+        let task_order = task_order.iter().map(|s| s.to_string()).collect();
+        Table { title: title.to_string(), task_order, rows }
     }
 
     pub fn to_markdown(&self) -> String {
@@ -194,6 +195,137 @@ pub fn write_bundle(dir: &std::path::Path, name: &str, table: &Table) -> anyhow:
     std::fs::write(dir.join(format!("{name}.md")), table.to_markdown())?;
     std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
     std::fs::write(dir.join(format!("{name}.json")), table.to_json().dump_pretty())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Serve-mode reporting
+// ---------------------------------------------------------------------------
+
+/// One adapter's service counters in a serve-mode run.
+#[derive(Clone, Debug)]
+pub struct ServeRow {
+    pub id: u64,
+    pub label: String,
+    pub processed: u64,
+    pub train_steps: u64,
+    pub rejected: u64,
+    pub mean_latency_ms: f64,
+    pub max_latency_ms: f64,
+    pub mean_service_ms: f64,
+}
+
+/// Serve-mode report: per-adapter throughput/latency rows plus run-level
+/// aggregates, rendered like the suite tables (md/csv/json bundle).
+pub struct ServeReport {
+    pub title: String,
+    pub workers: usize,
+    pub wall_secs: f64,
+    pub rows: Vec<ServeRow>,
+}
+
+impl ServeReport {
+    pub fn total_requests(&self) -> u64 {
+        self.rows.iter().map(|r| r.processed).sum()
+    }
+
+    /// Aggregate throughput over the run (completed requests / wall).
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.total_requests() as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!(
+            "### {} — {} adapters, {} workers, {:.2} req/s aggregate\n\n",
+            self.title,
+            self.rows.len(),
+            self.workers,
+            self.throughput_rps()
+        );
+        out.push_str("| Adapter | Label | Served | Train | Rejected |");
+        out.push_str(" Mean lat (ms) | Max lat (ms) | Mean svc (ms) |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} |\n",
+                r.id,
+                r.label,
+                r.processed,
+                r.train_steps,
+                r.rejected,
+                r.mean_latency_ms,
+                r.max_latency_ms,
+                r.mean_service_ms
+            ));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "adapter,label,processed,train_steps,rejected,mean_latency_ms,max_latency_ms,mean_service_ms\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.4},{:.4},{:.4}\n",
+                r.id,
+                r.label,
+                r.processed,
+                r.train_steps,
+                r.rejected,
+                r.mean_latency_ms,
+                r.max_latency_ms,
+                r.mean_service_ms
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("total_requests", Json::Num(self.total_requests() as f64)),
+            ("reqs_per_sec", Json::Num(self.throughput_rps())),
+            (
+                "adapters",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Num(r.id as f64)),
+                                ("label", Json::Str(r.label.clone())),
+                                ("processed", Json::Num(r.processed as f64)),
+                                ("train_steps", Json::Num(r.train_steps as f64)),
+                                ("rejected", Json::Num(r.rejected as f64)),
+                                ("mean_latency_ms", Json::Num(r.mean_latency_ms)),
+                                ("max_latency_ms", Json::Num(r.max_latency_ms)),
+                                ("mean_service_ms", Json::Num(r.mean_service_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a serve-report bundle (md + csv + json) under `dir`.
+pub fn write_serve_bundle(
+    dir: &std::path::Path,
+    name: &str,
+    report: &ServeReport,
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.md")), report.to_markdown())?;
+    std::fs::write(dir.join(format!("{name}.csv")), report.to_csv())?;
+    std::fs::write(dir.join(format!("{name}.json")), report.to_json().dump_pretty())?;
     Ok(())
 }
 

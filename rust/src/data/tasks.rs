@@ -59,7 +59,8 @@ pub fn build(cfg: &DataConfig, vocab: usize) -> Result<TaskData> {
         ("mathqa", "gsm8k") => Box::new(MathQa { hard: false }),
         ("mathqa", "math") => Box::new(MathQa { hard: true }),
         ("commonsense", t) => {
-            let tasks = ["boolq", "piqa", "siqa", "hellaswag", "winogrande", "arc_e", "arc_c", "obqa"];
+            let tasks =
+                ["boolq", "piqa", "siqa", "hellaswag", "winogrande", "arc_e", "arc_c", "obqa"];
             match tasks.iter().position(|&x| x == t) {
                 Some(i) => Box::new(Commonsense { task_idx: i }),
                 None => bail!("unknown commonsense task {t:?}"),

@@ -18,6 +18,17 @@
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
+// Crate-wide style allowances (clippy runs with `-D warnings` in CI):
+// index loops mirror the paper's math notation, hot-path kernels take
+// explicit buffer parameters, `Matrix::add/sub` are checked-shape APIs
+// rather than operator impls, numeric constants keep their full printed
+// precision, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::should_implement_trait)]
+#![allow(clippy::excessive_precision)]
+#![allow(clippy::field_reassign_with_default)]
+
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -8,8 +8,9 @@
 //! (K = 5 in the paper's experiments), trading exactness of R's
 //! orthogonality for a chain of small matmuls.
 
+use super::matmul::{matmul, matmul_into, matmul_nt_into, matmul_tn_into};
 use super::matrix::{DMat, Matrix, Scalar};
-use super::matmul::matmul;
+use super::workspace::DWorkspace;
 
 /// Number of free parameters in a skew-symmetric r×r matrix.
 pub fn skew_param_count(r: usize) -> usize {
@@ -30,6 +31,22 @@ pub fn skew_from_params<T: Scalar>(r: usize, params: &[T]) -> Matrix<T> {
         }
     }
     q
+}
+
+/// [`skew_from_params`] into an existing r×r buffer (no allocation — the
+/// rotation-refresh path of PSOFT/OFT/BOFT).
+pub fn skew_from_params_into(r: usize, params: &[f64], q: &mut DMat) {
+    assert_eq!(params.len(), skew_param_count(r), "skew param count for r={r}");
+    assert_eq!(q.shape(), (r, r));
+    q.fill(0.0);
+    let mut idx = 0;
+    for i in 1..r {
+        for j in 0..i {
+            q[(i, j)] = params[idx];
+            q[(j, i)] = -params[idx];
+            idx += 1;
+        }
+    }
 }
 
 /// Inverse map: extract the strictly-lower-triangular entries of Q.
@@ -61,19 +78,48 @@ pub fn cayley_exact(q: &DMat) -> DMat {
 
 /// Truncated-Neumann Cayley: R ≈ (I − Q) Σ_{k=0..K} (−Q)^k.
 /// This is the OFTv2 "Cayley–Neumann parameterization" used by PSOFT.
+/// Allocating convenience wrapper over [`cayley_neumann_into`].
 pub fn cayley_neumann(q: &DMat, terms: usize) -> DMat {
+    let mut out = DMat::zeros(q.rows, q.rows);
+    cayley_neumann_into(q, terms, &mut out, &mut DWorkspace::new());
+    out
+}
+
+/// [`cayley_neumann`] into an existing buffer, with every r×r temporary
+/// drawn from `ws` — allocation-free once the pool is warm (the rotation
+/// refresh inside `set_params` runs this every optimizer step). Performs
+/// the same accumulation order as the allocating form, so results are
+/// bit-identical.
+pub fn cayley_neumann_into(q: &DMat, terms: usize, out: &mut DMat, ws: &mut DWorkspace) {
     assert!(q.is_square());
     let r = q.rows;
+    assert_eq!(out.shape(), (r, r));
+    let mut neg_q = ws.acquire(r, r);
+    for (nv, &qv) in neg_q.data.iter_mut().zip(&q.data) {
+        *nv = -qv;
+    }
     // S = Σ (−Q)^k, accumulated with a running power.
-    let mut s = DMat::eye(r);
-    let neg_q = q.scale(-1.0);
-    let mut power = DMat::eye(r);
+    let mut s = ws.acquire(r, r);
+    s.fill_eye();
+    let mut power = ws.acquire(r, r);
+    power.fill_eye();
+    let mut tmp = ws.acquire(r, r);
     for _ in 1..=terms {
-        power = matmul(&power, &neg_q);
+        matmul_into(&power, &neg_q, &mut tmp);
+        std::mem::swap(&mut power, &mut tmp);
         s.add_assign(&power);
     }
-    let i_minus = DMat::from_fn(r, r, |i, j| if i == j { 1.0 - q[(i, j)] } else { -q[(i, j)] });
-    matmul(&i_minus, &s)
+    // out = (I − Q)·S, with (I − Q) staged in `tmp`.
+    for i in 0..r {
+        for j in 0..r {
+            tmp[(i, j)] = if i == j { 1.0 - q[(i, j)] } else { -q[(i, j)] };
+        }
+    }
+    matmul_into(&tmp, &s, out);
+    ws.release(neg_q);
+    ws.release(s);
+    ws.release(power);
+    ws.release(tmp);
 }
 
 /// Backward pass of `cayley_neumann`: given dL/dR, return dL/dQ.
@@ -83,50 +129,87 @@ pub fn cayley_neumann(q: &DMat, terms: usize) -> DMat {
 ///   dL/dN = Σ_{j=0}^{K−1} (Nᵀ)^j · dS · (Σ_{i=0}^{K−1−j} N^i)ᵀ,
 /// with dS = (I − Q)ᵀ·dR, plus the −dR·Sᵀ term from the (I − Q) factor,
 /// and dL/dQ = −dL/dN − dR·Sᵀ.
+/// Allocating convenience wrapper over [`cayley_neumann_backward_into`].
 pub fn cayley_neumann_backward(q: &DMat, terms: usize, d_r: &DMat) -> DMat {
+    let mut d_q = DMat::zeros(q.rows, q.rows);
+    cayley_neumann_backward_into(q, terms, d_r, &mut d_q, &mut DWorkspace::new());
+    d_q
+}
+
+/// [`cayley_neumann_backward`] into an existing buffer (`d_q` is
+/// overwritten), with all r×r temporaries drawn from `ws`.
+///
+/// The sum over powers is evaluated with the Horner recurrence
+/// `T ← dS·C_mᵀ + Nᵀ·T` over ascending m (descending j), so only a
+/// constant number of r×r buffers is alive at once — a warm pool makes
+/// the rotation-method backward allocation-free.
+pub fn cayley_neumann_backward_into(
+    q: &DMat,
+    terms: usize,
+    d_r: &DMat,
+    d_q: &mut DMat,
+    ws: &mut DWorkspace,
+) {
     assert!(q.is_square());
     assert_eq!(q.shape(), d_r.shape());
+    assert_eq!(q.shape(), d_q.shape());
     let r = q.rows;
-    let n = q.scale(-1.0);
-
-    // Powers N^0..N^{K-1} and prefix sums C_m = Σ_{i<=m} N^i.
-    let mut powers: Vec<DMat> = Vec::with_capacity(terms.max(1));
-    powers.push(DMat::eye(r));
-    for _k in 1..terms {
-        let next = matmul(powers.last().unwrap(), &n);
-        powers.push(next);
-    }
-    let mut prefix: Vec<DMat> = Vec::with_capacity(terms.max(1));
-    for (m, p) in powers.iter().enumerate() {
-        let mut c = p.clone();
-        if m > 0 {
-            c.add_assign(&prefix[m - 1]);
+    if terms == 0 {
+        // S = I ⇒ R = I − Q and dQ = −dR.
+        for (o, &g) in d_q.data.iter_mut().zip(&d_r.data) {
+            *o = -g;
         }
-        prefix.push(c);
+        return;
     }
-    // S = C_{K-1} + N^K.
-    let mut s = prefix.last().cloned().unwrap_or_else(|| DMat::eye(r));
-    if terms >= 1 {
-        let n_k = matmul(powers.last().unwrap(), &n);
-        s.add_assign(&n_k);
+    let mut n = ws.acquire(r, r);
+    for (nv, &qv) in n.data.iter_mut().zip(&q.data) {
+        *nv = -qv;
     }
-
-    let i_minus_t = DMat::from_fn(r, r, |i, j| if i == j { 1.0 - q[(j, i)] } else { -q[(j, i)] });
-    let d_s = matmul(&i_minus_t, d_r);
-
-    // dN = Σ_j P_jᵀ · dS · C_{K-1-j}ᵀ.
-    let mut d_n = DMat::zeros(r, r);
-    for j in 0..terms {
-        let left = matmul(&powers[j].transpose(), &d_s);
-        let contrib = matmul(&left, &prefix[terms - 1 - j].transpose());
-        d_n.add_assign(&contrib);
+    // dS = (I − Q)ᵀ·dR, with (I − Q)ᵀ staged in `tmp`.
+    let mut tmp = ws.acquire(r, r);
+    for i in 0..r {
+        for j in 0..r {
+            tmp[(i, j)] = if i == j { 1.0 - q[(j, i)] } else { -q[(j, i)] };
+        }
     }
+    let mut d_s = ws.acquire(r, r);
+    matmul_into(&tmp, d_r, &mut d_s);
 
+    // dN = Σ_{j=0}^{K−1} (Nᵀ)^j · dS · C_{K−1−j}ᵀ with C_m = Σ_{i≤m} N^i:
+    // T_j = dS·C_{K−1−j}ᵀ + Nᵀ·T_{j+1}, walked from j = K−1 (m = 0) down.
+    let mut t = ws.acquire(r, r);
+    t.copy_from(&d_s); // m = 0 term: dS·C_0ᵀ = dS
+    let mut prefix = ws.acquire(r, r);
+    prefix.fill_eye(); // C_0
+    let mut power = ws.acquire(r, r);
+    power.fill_eye(); // N^0
+    let mut a = ws.acquire(r, r);
+    for _m in 1..terms {
+        matmul_into(&power, &n, &mut tmp); // N^m
+        std::mem::swap(&mut power, &mut tmp);
+        prefix.add_assign(&power); // C_m
+        matmul_nt_into(&d_s, &prefix, &mut a); // dS·C_mᵀ
+        matmul_tn_into(&n, &t, &mut tmp); // Nᵀ·T
+        tmp.add_assign(&a);
+        std::mem::swap(&mut t, &mut tmp);
+    }
+    // S = C_{K−1} + N^K for the −dR·Sᵀ term from the (I − Q) factor.
+    let mut s = ws.acquire(r, r);
+    matmul_into(&power, &n, &mut s); // N^K
+    s.add_assign(&prefix);
+    matmul_nt_into(d_r, &s, &mut tmp); // dR·Sᵀ
     // dQ = −dN − dR·Sᵀ.
-    let mut d_q = d_n.scale(-1.0);
-    let d_from_factor = matmul(d_r, &s.transpose());
-    d_q.axpy(-1.0, &d_from_factor);
-    d_q
+    for ((o, &tv), &fv) in d_q.data.iter_mut().zip(&t.data).zip(&tmp.data) {
+        *o = -tv - fv;
+    }
+    ws.release(n);
+    ws.release(tmp);
+    ws.release(d_s);
+    ws.release(t);
+    ws.release(prefix);
+    ws.release(power);
+    ws.release(a);
+    ws.release(s);
 }
 
 /// Backward pass of the exact Cayley transform: with M = (I + Q)⁻¹ and
@@ -137,7 +220,8 @@ pub fn cayley_exact_backward(q: &DMat, d_r: &DMat) -> DMat {
     let i_plus = DMat::from_fn(r, r, |i, j| if i == j { 1.0 + q[(i, j)] } else { q[(i, j)] });
     let m = inverse(&i_plus);
     let rot = cayley_exact(q);
-    let i_plus_r_t = DMat::from_fn(r, r, |i, j| if i == j { 1.0 + rot[(j, i)] } else { rot[(j, i)] });
+    let i_plus_r_t =
+        DMat::from_fn(r, r, |i, j| if i == j { 1.0 + rot[(j, i)] } else { rot[(j, i)] });
     matmul(&matmul(&i_plus_r_t, d_r), &m.transpose()).scale(-1.0)
 }
 
@@ -153,6 +237,22 @@ pub fn skew_param_grad(d_q: &DMat) -> Vec<f64> {
         }
     }
     out
+}
+
+/// Accumulate the skew-parameter gradient into an f32 slice:
+/// `out[a] += dQ_{ij} − dQ_{ji}` — the in-place counterpart of
+/// [`skew_param_grad`] used by the allocation-free adapter backwards.
+pub fn skew_param_grad_acc(d_q: &DMat, out: &mut [f32]) {
+    assert!(d_q.is_square());
+    let r = d_q.rows;
+    assert_eq!(out.len(), skew_param_count(r));
+    let mut idx = 0;
+    for i in 1..r {
+        for j in 0..i {
+            out[idx] += (d_q[(i, j)] - d_q[(j, i)]) as f32;
+            idx += 1;
+        }
+    }
 }
 
 /// Gauss–Jordan solve A X = B with partial pivoting. A must be square and
@@ -266,7 +366,8 @@ mod tests {
             },
             |q| {
                 let r = cayley_exact(q);
-                ensure(orthogonality_defect(&r) < 1e-9, format!("defect={}", orthogonality_defect(&r)))
+                let defect = orthogonality_defect(&r);
+                ensure(defect < 1e-9, format!("defect={defect}"))
             },
         );
     }
@@ -360,6 +461,51 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms_bitwise() {
+        let mut rng = Rng::new(27);
+        let mut ws = DWorkspace::new();
+        for &r in &[3usize, 6, 11] {
+            let q = random_skew(r, 0.3, &mut rng);
+            let d_r = DMat::randn(r, r, 1.0, &mut rng);
+            let mut rot = DMat::zeros(r, r);
+            let mut d_q = DMat::zeros(r, r);
+            // Twice: the second pass runs on a warm (dirty) pool.
+            for _ in 0..2 {
+                cayley_neumann_into(&q, 5, &mut rot, &mut ws);
+                assert_eq!(rot, cayley_neumann(&q, 5), "forward r={r}");
+                cayley_neumann_backward_into(&q, 5, &d_r, &mut d_q, &mut ws);
+                assert_eq!(d_q, cayley_neumann_backward(&q, 5, &d_r), "backward r={r}");
+            }
+            // The pool is balanced: a further warm pass performs no new
+            // allocations (misses stay frozen).
+            let misses = ws.misses();
+            cayley_neumann_into(&q, 5, &mut rot, &mut ws);
+            cayley_neumann_backward_into(&q, 5, &d_r, &mut d_q, &mut ws);
+            assert_eq!(ws.misses(), misses, "warm refresh must not miss the pool (r={r})");
+            // Into-buffer skew builders agree with the allocating forms.
+            let params: Vec<f64> = params_from_skew(&q);
+            let mut q2 = DMat::zeros(r, r);
+            skew_from_params_into(r, &params, &mut q2);
+            assert_eq!(q2, q);
+            let mut acc = vec![1.0f32; skew_param_count(r)];
+            skew_param_grad_acc(&d_q, &mut acc);
+            for (a, g) in acc.iter().zip(skew_param_grad(&d_q)) {
+                assert!((*a - 1.0 - g as f32).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_into_handles_zero_terms() {
+        let mut rng = Rng::new(28);
+        let q = random_skew(4, 0.2, &mut rng);
+        let d_r = DMat::randn(4, 4, 1.0, &mut rng);
+        let mut d_q = DMat::zeros(4, 4);
+        cayley_neumann_backward_into(&q, 0, &d_r, &mut d_q, &mut DWorkspace::new());
+        assert_eq!(d_q, d_r.scale(-1.0));
     }
 
     #[test]

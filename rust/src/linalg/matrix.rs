@@ -119,6 +119,15 @@ impl<T: Scalar> Matrix<T> {
         Self { rows, cols, data }
     }
 
+    /// Reset to the identity in place (square shapes; no allocation).
+    pub fn fill_eye(&mut self) {
+        assert!(self.is_square(), "fill_eye requires a square matrix");
+        self.fill(T::ZERO);
+        for i in 0..self.rows {
+            self[(i, i)] = T::ONE;
+        }
+    }
+
     /// Diagonal matrix from a vector.
     pub fn diag(v: &[T]) -> Self {
         let mut m = Self::zeros(v.len(), v.len());
@@ -235,7 +244,11 @@ impl<T: Scalar> Matrix<T> {
     /// Row slice [i0, i1).
     pub fn rows_range(&self, i0: usize, i1: usize) -> Self {
         assert!(i0 <= i1 && i1 <= self.rows);
-        Self { rows: i1 - i0, cols: self.cols, data: self.data[i0 * self.cols..i1 * self.cols].to_vec() }
+        Self {
+            rows: i1 - i0,
+            cols: self.cols,
+            data: self.data[i0 * self.cols..i1 * self.cols].to_vec(),
+        }
     }
 
     pub fn add(&self, other: &Self) -> Self {
@@ -319,7 +332,11 @@ impl<T: Scalar> Matrix<T> {
 
     /// Convert precision.
     pub fn cast<U: Scalar>(&self) -> Matrix<U> {
-        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect() }
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| U::from_f64(v.to_f64())).collect(),
+        }
     }
 }
 

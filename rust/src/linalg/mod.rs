@@ -16,7 +16,8 @@ pub mod workspace;
 
 pub use cayley::{
     cayley_exact, cayley_exact_backward, cayley_neumann, cayley_neumann_backward,
-    orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad,
+    cayley_neumann_backward_into, cayley_neumann_into, orthogonality_defect, skew_from_params,
+    skew_from_params_into, skew_param_count, skew_param_grad, skew_param_grad_acc,
 };
 pub use matmul::{
     matmul, matmul_acc, matmul_acc_slice, matmul_into, matmul_nt, matmul_nt_acc,
@@ -27,4 +28,4 @@ pub use matrix::{DMat, Mat, Matrix, Scalar};
 pub use qr::{orthonormal_columns, qr_thin};
 pub use rsvd::rsvd;
 pub use svd::{svd, Svd};
-pub use workspace::Workspace;
+pub use workspace::{DWorkspace, Workspace, WorkspaceOf};

@@ -2,14 +2,24 @@
 //!
 //! Steady-state fine-tuning repeats the same sequence of matrix shapes
 //! every optimizer step, so every temporary the forward/backward pass
-//! needs can be recycled instead of reallocated. A [`Workspace`] is a
-//! pool of `Mat` buffers keyed by **exact shape** `(rows, cols)`:
+//! needs can be recycled instead of reallocated. A [`WorkspaceOf`] is a
+//! pool of matrix buffers keyed by **exact shape** `(rows, cols)`:
 //!
-//! - [`Workspace::acquire`] pops a free buffer of the requested shape
+//! - [`WorkspaceOf::acquire`] pops a free buffer of the requested shape
 //!   (or allocates one on a pool miss — the *warmup* path). Contents are
 //!   **unspecified**: callers must fully overwrite, or use
-//!   [`Workspace::acquire_zeroed`] when they accumulate into the buffer.
-//! - [`Workspace::release`] returns a buffer to the pool for reuse.
+//!   [`WorkspaceOf::acquire_zeroed`] when they accumulate into the buffer.
+//! - [`WorkspaceOf::release`] returns a buffer to the pool for reuse.
+//!
+//! Two instantiations cover the crate:
+//!
+//! - [`Workspace`] (`f32`) — model activations and gradients; one per
+//!   training run (or per serve worker), threaded through every
+//!   forward/backward kernel.
+//! - [`DWorkspace`] (`f64`) — the small r×r temporaries of the
+//!   Cayley–Neumann rotation refresh (PSOFT/OFT/BOFT `set_params`) and
+//!   its backward. Each rotation adapter owns one, so rotation refresh
+//!   is allocation-free at steady state too (see `peft::RotScratch`).
 //!
 //! # Buffer-keying scheme
 //!
@@ -35,30 +45,36 @@
 //! 2. **Never release a buffer you still hold a view of.** There are no
 //!    borrowed views of pooled buffers in this crate (all kernels take
 //!    `&Mat`/`&mut Mat`), which makes this rule structural.
-//!
-//! The f64 Cayley/SVD initialization path intentionally stays off the
-//! workspace: it runs once per adapter (or on r×r matrices during
-//! rotation refresh), not per token, and keeps the arena f32-only.
 
-use super::matrix::Mat;
+use super::matrix::{Matrix, Scalar};
 use std::collections::HashMap;
 
-/// Shape-keyed pool of reusable f32 scratch matrices.
-#[derive(Default)]
-pub struct Workspace {
-    free: HashMap<(usize, usize), Vec<Mat>>,
+/// Shape-keyed pool of reusable scratch matrices over one element type.
+pub struct WorkspaceOf<T: Scalar> {
+    free: HashMap<(usize, usize), Vec<Matrix<T>>>,
     acquires: u64,
     misses: u64,
 }
 
-impl Workspace {
-    pub fn new() -> Workspace {
-        Workspace::default()
+/// f32 workspace — the model-compute arena.
+pub type Workspace = WorkspaceOf<f32>;
+/// f64 workspace — the rotation-refresh (Cayley–Neumann) arena.
+pub type DWorkspace = WorkspaceOf<f64>;
+
+impl<T: Scalar> Default for WorkspaceOf<T> {
+    fn default() -> Self {
+        WorkspaceOf { free: HashMap::new(), acquires: 0, misses: 0 }
+    }
+}
+
+impl<T: Scalar> WorkspaceOf<T> {
+    pub fn new() -> WorkspaceOf<T> {
+        WorkspaceOf::default()
     }
 
     /// Take a `(rows, cols)` buffer from the pool, allocating on a miss.
     /// Contents are unspecified — overwrite before reading.
-    pub fn acquire(&mut self, rows: usize, cols: usize) -> Mat {
+    pub fn acquire(&mut self, rows: usize, cols: usize) -> Matrix<T> {
         self.acquires += 1;
         if let Some(stack) = self.free.get_mut(&(rows, cols)) {
             if let Some(m) = stack.pop() {
@@ -67,19 +83,19 @@ impl Workspace {
             }
         }
         self.misses += 1;
-        Mat::zeros(rows, cols)
+        Matrix::zeros(rows, cols)
     }
 
-    /// [`Workspace::acquire`] followed by a zero fill (no allocation on a
-    /// pool hit) — for buffers that are accumulated into.
-    pub fn acquire_zeroed(&mut self, rows: usize, cols: usize) -> Mat {
+    /// [`WorkspaceOf::acquire`] followed by a zero fill (no allocation on
+    /// a pool hit) — for buffers that are accumulated into.
+    pub fn acquire_zeroed(&mut self, rows: usize, cols: usize) -> Matrix<T> {
         let mut m = self.acquire(rows, cols);
-        m.fill(0.0);
+        m.fill(T::ZERO);
         m
     }
 
     /// Return a buffer to the pool for reuse by later acquires.
-    pub fn release(&mut self, m: Mat) {
+    pub fn release(&mut self, m: Matrix<T>) {
         assert_eq!(m.data.len(), m.rows * m.cols, "released buffer has inconsistent shape");
         self.free.entry((m.rows, m.cols)).or_default().push(m);
     }
@@ -103,7 +119,7 @@ impl Workspace {
     pub fn pooled_bytes(&self) -> usize {
         self.free
             .iter()
-            .map(|(&(r, c), v)| r * c * std::mem::size_of::<f32>() * v.len())
+            .map(|(&(r, c), v)| r * c * std::mem::size_of::<T>() * v.len())
             .sum()
     }
 
@@ -169,5 +185,19 @@ mod tests {
         assert!(ws.pooled_bytes() > 0);
         ws.clear();
         assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn f64_pool_works_identically() {
+        let mut ws = DWorkspace::new();
+        for _ in 0..5 {
+            let a = ws.acquire(6, 6);
+            let b = ws.acquire_zeroed(6, 6);
+            assert!(b.data.iter().all(|&v| v == 0.0));
+            ws.release(a);
+            ws.release(b);
+        }
+        assert_eq!(ws.misses(), 2);
+        assert_eq!(ws.pooled_bytes(), 2 * 36 * std::mem::size_of::<f64>());
     }
 }

@@ -4,6 +4,7 @@
 //!
 //! - `pretrain`  — pretrain a backbone on the pretext corpus, save checkpoint
 //! - `train`     — fine-tune one task with one PEFT method (native or PJRT)
+//! - `serve`     — multi-adapter serving: N adapters on one shared backbone
 //! - `suite`     — run a full benchmark suite grid (task × method × seed)
 //! - `memmodel`  — print parameter/memory projections at paper scale
 //! - `geometry`  — angle-preservation probe (Figs 9/10)
@@ -16,9 +17,13 @@
 //! psoft train --suite glue --task cola --method psoft --rank 46 \
 //!       --backbone checkpoints/enc.bin
 //! psoft train --backend pjrt --artifact glue_cls_psoft_r46 ...
+//! psoft serve --adapters 16 --workers 8 --rounds 32 --methods psoft,lora
 //! psoft suite --suite glue --methods psoft,lora,oftv2 --seeds 1,2,3
 //! psoft memmodel --paper-model llama31-8b --method psoft --rank 424
 //! ```
+
+// Config structs are built default-then-override from CLI flags.
+#![allow(clippy::field_reassign_with_default)]
 
 use anyhow::{bail, Context, Result};
 use psoft::config::{
@@ -47,6 +52,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("pretrain") => run(cmd_pretrain(&args)),
         Some("train") => run(cmd_train(&args)),
+        Some("serve") => run(cmd_serve(&args)),
         Some("suite") => run(cmd_suite(&args)),
         Some("memmodel") => run(cmd_memmodel(&args)),
         Some("geometry") => run(cmd_geometry(&args)),
@@ -76,7 +82,7 @@ fn run(r: Result<()>) -> i32 {
 
 fn usage() {
     eprintln!(
-        "usage: psoft <pretrain|train|suite|memmodel|geometry|inspect> [options]\n\
+        "usage: psoft <pretrain|train|serve|suite|memmodel|geometry|inspect> [options]\n\
          see README.md for the full option reference"
     );
 }
@@ -288,6 +294,126 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    use psoft::config::ServeConfig;
+    use psoft::model::native::{Batch, Target};
+    use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+
+    let cfg = model_cfg_from(args)?;
+    let bb = Arc::new(load_or_make_backbone(args, &cfg)?);
+    let cfg = bb.cfg.clone();
+
+    // Scheduler settings: [serve] section of --config, overridable by flags.
+    let mut sc = match args.get("config") {
+        Some(path) => ServeConfig::from_toml(&psoft::config::toml::parse_file(Path::new(path))?),
+        None => ServeConfig::default(),
+    };
+    sc.workers = args.usize("workers", sc.workers)?;
+    sc.queue_cap = args.usize("queue-cap", sc.queue_cap)?;
+    sc.burst = args.usize("burst", sc.burst)?;
+
+    let n_adapters = args.usize("adapters", 4)?;
+    let rounds = args.usize("rounds", 16)?;
+    let bsz = args.usize("batch", 4)?;
+    let seq = args.usize("seq", 16)?.min(cfg.max_seq);
+    let kind_sel = args.get_or("requests", "mixed"); // eval | train | mixed
+    let method_names = if args.get("methods").is_some() {
+        args.list("methods")
+    } else {
+        vec!["psoft".into(), "lora".into(), "oftv2".into(), "boft".into()]
+    };
+
+    let core = ServeCore::new(Arc::clone(&bb), ServeOptions::from(sc));
+    psoft::info!(
+        "serve: {} adapters over {} workers (queue cap {}, burst {})",
+        n_adapters,
+        sc.workers,
+        sc.queue_cap,
+        sc.burst
+    );
+
+    // Register the adapter fleet, cycling through the requested methods.
+    let mut shared_mib = 0.0;
+    let mut ids = Vec::with_capacity(n_adapters);
+    for i in 0..n_adapters {
+        let method = MethodKind::parse(&method_names[i % method_names.len()])?;
+        let rank = args.usize("rank", if method == MethodKind::Psoft { 16 } else { 8 })?;
+        let mut peft = PeftConfig::new(method, rank);
+        peft.modules = vec![ModuleKind::Q, ModuleKind::V];
+        peft.svd_n_iter = Some(2);
+        if i == 0 {
+            let mut prng = Rng::new(7);
+            let probe = NativeModel::from_backbone(&bb, &peft, &mut prng);
+            shared_mib = probe.shared_frozen_bytes() as f64 / (1024.0 * 1024.0);
+        }
+        let label = format!("{}_r{rank}", method.name());
+        ids.push(core.register(&label, &peft, args.u64("seed", 42)? ^ (i as u64 + 1)));
+    }
+
+    // Synthetic per-adapter request streams.
+    let mut rng = Rng::new(args.u64("seed", 42)?);
+    let batches: Vec<Arc<Batch>> = (0..n_adapters)
+        .map(|_| {
+            let tokens: Vec<i32> =
+                (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            let labels: Vec<usize> =
+                (0..bsz).map(|b| (tokens[b * seq] as usize) % cfg.n_classes.max(2)).collect();
+            Arc::new(Batch {
+                batch: bsz,
+                seq,
+                tokens,
+                pad: vec![1.0; bsz * seq],
+                target: Target::Class(labels),
+            })
+        })
+        .collect();
+
+    let hyper = psoft::runtime::Hyper::default();
+    let mut tickets: Vec<Ticket> = Vec::new();
+    let sw = Stopwatch::start();
+    for round in 0..rounds {
+        for (a, id) in ids.iter().enumerate() {
+            let kind = match kind_sel {
+                "eval" => ReqKind::Eval,
+                "train" => ReqKind::Train(hyper),
+                _ => {
+                    if round % 2 == 0 {
+                        ReqKind::Train(hyper)
+                    } else {
+                        ReqKind::Eval
+                    }
+                }
+            };
+            let ticket = Ticket::new(bsz);
+            // Backpressure: a full queue drains before we retry once.
+            if core.submit(*id, &batches[a], kind, &ticket).is_err() {
+                core.drain();
+                core.submit(*id, &batches[a], kind, &ticket)
+                    .map_err(|e| anyhow::anyhow!("submit after drain: {e}"))?;
+            }
+            tickets.push(ticket);
+        }
+    }
+    core.drain();
+    let wall = sw.secs();
+    for t in &tickets {
+        t.wait().map_err(|e| anyhow::anyhow!("request failed: {e}"))?;
+    }
+
+    let title = format!("serve: {n_adapters} adapters, {rounds} rounds, batch {bsz}x{seq}");
+    let serve_rep = psoft::coordinator::serve_report(&title, &core, wall, sc.workers);
+    println!("{}", serve_rep.to_markdown());
+    println!(
+        "aggregate {:.2} req/s over {} — {shared_mib:.2} MiB frozen state shared per adapter",
+        serve_rep.throughput_rps(),
+        human_duration(wall)
+    );
+    let out_dir = Path::new(args.get_or("out", "reports"));
+    report::write_serve_bundle(out_dir, "serve", &serve_rep)?;
+    psoft::info!("wrote serve reports to {}", out_dir.display());
+    Ok(())
+}
+
 fn cmd_suite(args: &Args) -> Result<()> {
     let suite = args.get_or("suite", "glue").to_string();
     let cfg = model_cfg_from(args)?;
@@ -339,7 +465,12 @@ fn cmd_suite(args: &Args) -> Result<()> {
 
     let jobs = grid(&tasks, &methods, &tc, &seeds);
     let n_jobs = jobs.len();
-    psoft::info!("suite {suite}: {} tasks × {} methods × {} seeds = {n_jobs} jobs", tasks.len(), methods.len(), seeds.len());
+    psoft::info!(
+        "suite {suite}: {} tasks × {} methods × {} seeds = {n_jobs} jobs",
+        tasks.len(),
+        methods.len(),
+        seeds.len()
+    );
     let runner = Arc::new(SuiteRunner::new(bb, DeviceBudget::unlimited()));
     let threads = args.usize("threads", psoft::util::threadpool::default_parallelism())?;
     let sw = Stopwatch::start();
@@ -439,9 +570,12 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let mut found = 0;
     for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
         let path = entry?.path();
-        if path.extension().map(|e| e == "json").unwrap_or(false)
-            && path.file_name().map(|n| n.to_string_lossy().ends_with(".meta.json")).unwrap_or(false)
-        {
+        let is_meta = path.extension().map(|e| e == "json").unwrap_or(false)
+            && path
+                .file_name()
+                .map(|n| n.to_string_lossy().ends_with(".meta.json"))
+                .unwrap_or(false);
+        if is_meta {
             let name = path
                 .file_name()
                 .unwrap()

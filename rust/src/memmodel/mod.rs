@@ -22,7 +22,12 @@ pub const F32: f64 = 4.0;
 
 /// Peak-memory estimate (bytes) for fine-tuning: frozen weights + trainable
 /// params (grad + AdamW moments) + activations across layers + head.
-pub fn peak_memory_estimate(model: &ModelConfig, peft: &PeftConfig, batch: usize, seq: usize) -> f64 {
+pub fn peak_memory_estimate(
+    model: &ModelConfig,
+    peft: &PeftConfig,
+    batch: usize,
+    seq: usize,
+) -> f64 {
     let weights = model.backbone_params() as f64 * F32;
     let trainable = model_trainable_params(model, peft) as f64;
     // grad + m + v for AdamW.

@@ -13,6 +13,15 @@
 //!
 //! The native forward/backward lives in [`native`]; the same flat vectors
 //! drive the PJRT artifacts.
+//!
+//! **Backbone sharing:** every frozen tensor (embeddings, un-adapted dense
+//! module weights, the decoder LM head) is held behind an `Arc`, so N
+//! [`NativeModel`]s built from one [`Backbone`] reference a single copy of
+//! the frozen state — the invariant the multi-adapter server
+//! (`runtime::serve`) is built on. Per-adapter state (adapter tensors, the
+//! encoder head, optimizer moments) stays owned per model. Pretraining
+//! (`train_embeddings`) uses copy-on-write (`Arc::make_mut`), which is
+//! in-place once the backbone handle is uniquely owned.
 
 pub mod native;
 
@@ -22,37 +31,39 @@ use crate::peft::{build_adapter, Adapter};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Pre-trained dense weights (the checkpoint format produced by
-/// pretraining and consumed by every fine-tuning job).
+/// pretraining and consumed by every fine-tuning job). Every tensor is
+/// `Arc`-shared: installing adapters never copies the frozen state.
 pub struct Backbone {
     pub cfg: ModelConfig,
-    pub tok_emb: Mat,
-    pub pos_emb: Mat,
+    pub tok_emb: Arc<Mat>,
+    pub pos_emb: Arc<Mat>,
     /// Per layer: dense weight per module, in arch order.
-    pub layer_weights: Vec<Vec<(ModuleKind, Mat)>>,
-    pub lm_head: Option<Mat>,
+    pub layer_weights: Vec<Vec<(ModuleKind, Arc<Mat>)>>,
+    pub lm_head: Option<Arc<Mat>>,
 }
 
 impl Backbone {
     /// Random initialization (the starting point for pretraining).
     pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Backbone {
         let d = cfg.d_model;
-        let tok_emb = Mat::randn(cfg.vocab_size, d, 0.02, rng);
-        let pos_emb = Mat::randn(cfg.max_seq, d, 0.02, rng);
+        let tok_emb = Arc::new(Mat::randn(cfg.vocab_size, d, 0.02, rng));
+        let pos_emb = Arc::new(Mat::randn(cfg.max_seq, d, 0.02, rng));
         let layer_weights = (0..cfg.n_layers)
             .map(|_| {
                 cfg.modules()
                     .into_iter()
                     .map(|m| {
                         let (din, dout) = cfg.module_shape(m);
-                        (m, Mat::randn(din, dout, 1.0 / (din as f64).sqrt(), rng))
+                        (m, Arc::new(Mat::randn(din, dout, 1.0 / (din as f64).sqrt(), rng)))
                     })
                     .collect()
             })
             .collect();
         let lm_head = match cfg.arch {
-            Arch::Decoder => Some(Mat::randn(d, cfg.vocab_size, 0.02, rng)),
+            Arch::Decoder => Some(Arc::new(Mat::randn(d, cfg.vocab_size, 0.02, rng))),
             Arch::Encoder => None,
         };
         Backbone { cfg: cfg.clone(), tok_emb, pos_emb, layer_weights, lm_head }
@@ -60,6 +71,14 @@ impl Backbone {
 
     pub fn weight(&self, layer: usize, module: ModuleKind) -> &Mat {
         &self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module").1
+    }
+
+    /// The `Arc`-shared handle of a dense module weight — used to install
+    /// frozen modules into a [`NativeModel`] without copying.
+    pub fn weight_shared(&self, layer: usize, module: ModuleKind) -> Arc<Mat> {
+        let (_, w) =
+            self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module");
+        Arc::clone(w)
     }
 
     /// Binary checkpoint: magic, config ints, then raw f32 LE tensors in
@@ -137,19 +156,19 @@ impl Backbone {
             }
             Ok(Mat::from_vec(rows, cols, data))
         };
-        let tok_emb = read_mat(&mut f, cfg.vocab_size, cfg.d_model)?;
-        let pos_emb = read_mat(&mut f, cfg.max_seq, cfg.d_model)?;
+        let tok_emb = Arc::new(read_mat(&mut f, cfg.vocab_size, cfg.d_model)?);
+        let pos_emb = Arc::new(read_mat(&mut f, cfg.max_seq, cfg.d_model)?);
         let mut layer_weights = Vec::with_capacity(cfg.n_layers);
         for _ in 0..cfg.n_layers {
             let mut mods = Vec::new();
             for m in cfg.modules() {
                 let (din, dout) = cfg.module_shape(m);
-                mods.push((m, read_mat(&mut f, din, dout)?));
+                mods.push((m, Arc::new(read_mat(&mut f, din, dout)?)));
             }
             layer_weights.push(mods);
         }
         let lm_head = match cfg.arch {
-            Arch::Decoder => Some(read_mat(&mut f, cfg.d_model, cfg.vocab_size)?),
+            Arch::Decoder => Some(Arc::new(read_mat(&mut f, cfg.d_model, cfg.vocab_size)?)),
             Arch::Encoder => None,
         };
         Ok(Backbone { cfg, tok_emb, pos_emb, layer_weights, lm_head })
@@ -163,14 +182,15 @@ pub struct Layer {
 }
 
 pub enum ModuleOp {
-    Dense(Mat),
+    /// Frozen dense module — an `Arc` handle into the shared backbone.
+    Dense(Arc<Mat>),
     Adapted(Box<dyn Adapter>),
 }
 
 impl ModuleOp {
     pub fn forward(&self, x: &Mat) -> Mat {
         match self {
-            ModuleOp::Dense(w) => crate::linalg::matmul(x, w),
+            ModuleOp::Dense(w) => crate::linalg::matmul(x, &**w),
             ModuleOp::Adapted(a) => a.forward(x),
         }
     }
@@ -179,7 +199,7 @@ impl ModuleOp {
     /// comes from `ws` (the zero-allocation training path).
     pub fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut crate::linalg::Workspace) {
         match self {
-            ModuleOp::Dense(w) => crate::linalg::matmul_into(x, w, y),
+            ModuleOp::Dense(w) => crate::linalg::matmul_into(x, &**w, y),
             ModuleOp::Adapted(a) => a.forward_into(x, y, ws),
         }
     }
@@ -193,35 +213,44 @@ impl ModuleOp {
     }
 }
 
-/// The runnable model: backbone + adapters + head.
+/// The runnable model: shared frozen backbone + per-adapter state + head.
+///
+/// Frozen tensors (`tok_emb`, `pos_emb`, `lm_head`, `Dense` modules) are
+/// `Arc` handles into the originating [`Backbone`]: N models built from
+/// one backbone hold one copy of the frozen state between them. Only the
+/// adapters, the encoder head and the pretraining-mode embedding copies
+/// are per-model.
 pub struct NativeModel {
     pub cfg: ModelConfig,
     pub peft: PeftConfig,
-    pub tok_emb: Mat,
-    pub pos_emb: Mat,
+    pub tok_emb: Arc<Mat>,
+    pub pos_emb: Arc<Mat>,
     pub layers: Vec<Layer>,
-    pub lm_head: Option<Mat>,
+    pub lm_head: Option<Arc<Mat>>,
     /// Encoder classification/regression head (always trainable).
     pub head_w: Mat,
     pub head_b: Vec<f32>,
     /// Pretraining mode: embeddings (and decoder lm_head) join the
-    /// trainable vector. Native backend only — never exported to HLO.
+    /// trainable vector (copy-on-write on first update). Native backend
+    /// only — never exported to HLO.
     pub train_embeddings: bool,
 }
 
 impl NativeModel {
-    /// Install adapters from `peft` onto a backbone.
+    /// Install adapters from `peft` onto a backbone. Frozen state is
+    /// shared with the backbone (and with every other model built from
+    /// it), never copied.
     pub fn from_backbone(bb: &Backbone, peft: &PeftConfig, rng: &mut Rng) -> NativeModel {
         let cfg = bb.cfg.clone();
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let mut modules = Vec::new();
             for m in cfg.modules() {
-                let w = bb.weight(l, m);
                 let op = if peft.modules.contains(&m) {
-                    ModuleOp::Adapted(build_adapter(peft, w, &mut rng.child((l * 16 + m as usize) as u64)))
+                    let mut child = rng.child((l * 16 + m as usize) as u64);
+                    ModuleOp::Adapted(build_adapter(peft, bb.weight(l, m), &mut child))
                 } else {
-                    ModuleOp::Dense(w.clone())
+                    ModuleOp::Dense(bb.weight_shared(l, m))
                 };
                 modules.push((m, op));
             }
@@ -232,8 +261,8 @@ impl NativeModel {
         NativeModel {
             cfg: cfg.clone(),
             peft: peft.clone(),
-            tok_emb: bb.tok_emb.clone(),
-            pos_emb: bb.pos_emb.clone(),
+            tok_emb: Arc::clone(&bb.tok_emb),
+            pos_emb: Arc::clone(&bb.pos_emb),
             layers,
             lm_head: bb.lm_head.clone(),
             head_w,
@@ -265,8 +294,8 @@ impl NativeModel {
                     .iter()
                     .map(|(m, op)| {
                         let w = match op {
-                            ModuleOp::Dense(w) => w.clone(),
-                            ModuleOp::Adapted(a) => a.materialize(),
+                            ModuleOp::Dense(w) => Arc::clone(w),
+                            ModuleOp::Adapted(a) => Arc::new(a.materialize()),
                         };
                         (*m, w)
                     })
@@ -275,8 +304,8 @@ impl NativeModel {
             .collect();
         Backbone {
             cfg: self.cfg.clone(),
-            tok_emb: self.tok_emb.clone(),
-            pos_emb: self.pos_emb.clone(),
+            tok_emb: Arc::clone(&self.tok_emb),
+            pos_emb: Arc::clone(&self.pos_emb),
             layer_weights,
             lm_head: self.lm_head.clone(),
         }
@@ -377,13 +406,16 @@ impl NativeModel {
             off += nb;
         }
         if self.train_embeddings {
-            let nt = self.tok_emb.data.len();
-            self.tok_emb.data.copy_from_slice(&p[off..off + nt]);
+            let tok = Arc::make_mut(&mut self.tok_emb);
+            let nt = tok.data.len();
+            tok.data.copy_from_slice(&p[off..off + nt]);
             off += nt;
-            let np = self.pos_emb.data.len();
-            self.pos_emb.data.copy_from_slice(&p[off..off + np]);
+            let pos = Arc::make_mut(&mut self.pos_emb);
+            let np = pos.data.len();
+            pos.data.copy_from_slice(&p[off..off + np]);
             off += np;
             if let Some(h) = &mut self.lm_head {
+                let h = Arc::make_mut(h);
                 let nh = h.data.len();
                 h.data.copy_from_slice(&p[off..off + nh]);
                 off += nh;
@@ -437,6 +469,24 @@ impl NativeModel {
             out.extend_from_slice(&self.lm_head.as_ref().expect("decoder lm_head").data);
         }
         out
+    }
+
+    /// Bytes of frozen backbone state this model *references* rather than
+    /// owns (embeddings, dense modules, decoder LM head) — the per-model
+    /// memory a multi-adapter host saves by sharing one backbone.
+    pub fn shared_frozen_bytes(&self) -> usize {
+        let mut n = self.tok_emb.data.len() + self.pos_emb.data.len();
+        if let Some(h) = &self.lm_head {
+            n += h.data.len();
+        }
+        for layer in &self.layers {
+            for (_, op) in &layer.modules {
+                if let ModuleOp::Dense(w) = op {
+                    n += w.data.len();
+                }
+            }
+        }
+        n * std::mem::size_of::<f32>()
     }
 
     /// Sum of orthogonality defects over adapters that define one
@@ -517,8 +567,8 @@ mod tests {
         let f = model.frozen_flat();
         let d = cfg.d_model;
         let per_adapted = d * d + d * 4 + 4 * d; // w_res + A' + B'
-        let per_dense: usize =
-            [(d, d), (d, cfg.d_ff), (cfg.d_ff, d), (d, d)].iter().map(|(a, b)| a * b).sum::<usize>();
+        let dense_shapes = [(d, d), (d, cfg.d_ff), (cfg.d_ff, d), (d, d)];
+        let per_dense: usize = dense_shapes.iter().map(|(a, b)| a * b).sum::<usize>();
         let per_layer = 4 * d + 2 * per_adapted + per_dense;
         let expect = cfg.vocab_size * d + cfg.max_seq * d + cfg.n_layers * per_layer + 2 * d;
         assert_eq!(f.len(), expect);
@@ -536,6 +586,44 @@ mod tests {
             model.num_adapter_params(),
             crate::memmodel::model_trainable_params(&cfg, &peft)
         );
+    }
+
+    #[test]
+    fn models_from_one_backbone_share_frozen_state() {
+        // The serve-layer invariant: N adapters on one backbone hold ONE
+        // copy of the frozen tensors (same Arc allocations), while
+        // trainable state stays per-model.
+        let mut rng = Rng::new(206);
+        let cfg = tiny_cfg();
+        let bb = Backbone::random(&cfg, &mut rng);
+        let peft = PeftConfig::new(MethodKind::Lora, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let m1 = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        let m2 = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        assert!(Arc::ptr_eq(&m1.tok_emb, &bb.tok_emb));
+        assert!(Arc::ptr_eq(&m1.tok_emb, &m2.tok_emb));
+        assert!(Arc::ptr_eq(&m1.pos_emb, &m2.pos_emb));
+        // Un-adapted modules share the backbone weight allocation.
+        let dense = |m: &NativeModel| {
+            let (_, op) =
+                m.layers[0].modules.iter().find(|(k, _)| *k == ModuleKind::O).unwrap();
+            match op {
+                ModuleOp::Dense(w) => Arc::clone(w),
+                _ => panic!("O should be dense"),
+            }
+        };
+        assert!(Arc::ptr_eq(&dense(&m1), &dense(&m2)));
+        assert!(m1.shared_frozen_bytes() > 0);
+        // Trainable state is NOT shared: training one model leaves the
+        // other (and the backbone) untouched.
+        let mut m1 = m1;
+        let mut p = m1.trainable_flat();
+        for v in p.iter_mut() {
+            *v += 0.1;
+        }
+        m1.set_trainable_flat(&p);
+        assert_eq!(m2.trainable_flat().len(), p.len());
+        assert!(m2.trainable_flat().iter().zip(&p).any(|(a, b)| a != b));
     }
 
     #[test]

@@ -717,7 +717,7 @@ fn loss_backward_into(
             (loss, neg_sq)
         }
         (Target::LmMask(mask), Arch::Decoder) => {
-            let lm = model.lm_head.as_ref().expect("decoder lm_head");
+            let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
             let vsz = model.cfg.vocab_size;
             // Positions t = b*S+s with s < S−1 predict token at s+1 with
             // weight mask[b*S+s+1]. Vectorized: gather the masked rows,
@@ -838,7 +838,7 @@ fn back_module_into(
     ws: &mut Workspace,
 ) {
     match module(layer, kind) {
-        ModuleOp::Dense(w) => matmul_nt_into(dy, w, dx_out),
+        ModuleOp::Dense(w) => matmul_nt_into(dy, &**w, dx_out),
         ModuleOp::Adapted(a) => {
             // Slot index of `kind` among this layer's adapted modules.
             let mut idx = 0;

@@ -10,12 +10,10 @@
 //! +4·m·bsh).
 
 use super::oft::block_partition;
-use super::{Adapter, AdapterGrads};
+use super::{Adapter, AdapterGrads, RotScratch};
 use crate::config::MethodKind;
-use crate::linalg::{
-    cayley_neumann, cayley_neumann_backward, matmul, matmul_into, matmul_nt_into,
-    skew_from_params, skew_param_count, skew_param_grad, DMat, Mat, Workspace,
-};
+use crate::linalg::{matmul, matmul_into, matmul_nt_into, skew_param_count, DMat, Mat, Workspace};
+use std::cell::RefCell;
 
 pub struct BoftAdapter {
     w0: Mat,
@@ -32,6 +30,11 @@ pub struct BoftAdapter {
     inv_perms: Vec<Vec<usize>>,
     m: usize,
     neumann_terms: usize,
+    /// f64 workspace for the per-block Cayley refresh/backward chain.
+    scratch: RefCell<RotScratch>,
+    /// Reusable holder for the m+1 chained intermediates backward retains
+    /// (the Mats themselves come from the caller's f32 workspace).
+    chain_buf: RefCell<Vec<Mat>>,
 }
 
 /// Perfect-shuffle permutation σ(i): deal the first half into even slots
@@ -84,15 +87,19 @@ impl BoftAdapter {
         let base = riffle(d);
         let perms: Vec<Vec<usize>> = (0..m).map(|j| perm_power(&base, j)).collect();
         let inv_perms: Vec<Vec<usize>> = perms.iter().map(|p| invert_perm(p)).collect();
+        let max_np = blocks.iter().map(|&b| skew_param_count(b)).max().unwrap_or(0);
+        let rots = (0..m).map(|_| blocks.iter().map(|&b| Mat::eye(b)).collect()).collect();
         let mut adapter = Self {
             w0: w_pre.clone(),
             blocks,
             theta: vec![0.0; m * per_factor],
-            rots: Vec::new(),
+            rots,
             perms,
             inv_perms,
             m,
             neumann_terms,
+            scratch: RefCell::new(RotScratch::with_param_capacity(max_np)),
+            chain_buf: RefCell::new(Vec::with_capacity(m + 1)),
         };
         adapter.recompute_rotations();
         adapter
@@ -104,18 +111,15 @@ impl BoftAdapter {
 
     fn recompute_rotations(&mut self) {
         let per = self.per_factor_params();
-        self.rots.clear();
+        let mut sc = self.scratch.borrow_mut();
         for j in 0..self.m {
-            let mut factor = Vec::with_capacity(self.blocks.len());
             let mut off = j * per;
-            for &b in &self.blocks {
+            for (bi, &b) in self.blocks.iter().enumerate() {
                 let np = skew_param_count(b);
-                let params: Vec<f64> = self.theta[off..off + np].iter().map(|&v| v as f64).collect();
-                let q = skew_from_params(b, &params);
-                factor.push(cayley_neumann(&q, self.neumann_terms).cast());
+                let theta = &self.theta[off..off + np];
+                sc.refresh(theta, b, self.neumann_terms, &mut self.rots[j][bi]);
                 off += np;
             }
-            self.rots.push(factor);
         }
     }
 
@@ -146,11 +150,11 @@ impl BoftAdapter {
         ws.release(zp);
     }
 
-    /// Forward through all factors, returning every intermediate (the m
-    /// retained activations of the Appendix E accounting). All buffers
-    /// come from `ws`; the caller releases them.
-    fn chain(&self, x: &Mat, ws: &mut Workspace) -> Vec<Mat> {
-        let mut zs: Vec<Mat> = Vec::with_capacity(self.m + 1);
+    /// Forward through all factors, pushing every intermediate into `zs`
+    /// (the m retained activations of the Appendix E accounting). All
+    /// buffers come from `ws`; the caller releases them.
+    fn chain_into(&self, x: &Mat, ws: &mut Workspace, zs: &mut Vec<Mat>) {
+        debug_assert!(zs.is_empty(), "chain buffer must start empty");
         let mut z0 = ws.acquire(x.rows, x.cols);
         z0.copy_from(x);
         zs.push(z0);
@@ -159,7 +163,6 @@ impl BoftAdapter {
             self.apply_factor_into(zs.last().unwrap(), &mut z, j, ws);
             zs.push(z);
         }
-        zs
     }
 }
 
@@ -190,7 +193,8 @@ impl Adapter for BoftAdapter {
         // W_eff = R W₀ where x·R is the factor chain: feed the identity.
         let mut ws = Workspace::new();
         let eye = Mat::eye(self.w0.rows);
-        let mut zs = self.chain(&eye, &mut ws);
+        let mut zs = Vec::with_capacity(self.m + 1);
+        self.chain_into(&eye, &mut ws, &mut zs);
         let r = zs.pop().unwrap(); // I·R = R
         let w = matmul(&r, &self.w0);
         ws.release(r);
@@ -236,11 +240,14 @@ impl Adapter for BoftAdapter {
         dx: &mut Mat,
         ws: &mut Workspace,
     ) {
-        let zs = self.chain(x, ws);
+        let mut zs = self.chain_buf.borrow_mut();
+        zs.clear();
+        self.chain_into(x, ws, &mut zs);
         // dz_m = dy · W₀ᵀ.
         let mut dz = ws.acquire(dy.rows, self.w0.rows);
         matmul_nt_into(dy, &self.w0, &mut dz);
         let per = self.per_factor_params();
+        let mut sc = self.scratch.borrow_mut();
         // Walk factors backwards.
         for j in (0..self.m).rev() {
             let z_in = &zs[j];
@@ -253,9 +260,9 @@ impl Adapter for BoftAdapter {
             let mut off_t = j * per;
             for (bi, &b) in self.blocks.iter().enumerate() {
                 let rot = &self.rots[j][bi];
-                // dR_k = z_bᵀ dz_b (small b×b — the Cayley backward stays
-                // on the allocating f64 path).
-                let mut dr = DMat::zeros(b, b);
+                // dR_k = z_bᵀ dz_b (small b×b — the Cayley backward runs
+                // on the adapter-owned f64 workspace).
+                let mut dr = sc.ws.acquire_zeroed(b, b);
                 for t in 0..dz.rows {
                     let zrow = &zp.row(t)[off_c..off_c + b];
                     let grow = &dzp.row(t)[off_c..off_c + b];
@@ -267,13 +274,13 @@ impl Adapter for BoftAdapter {
                     }
                 }
                 let np = skew_param_count(b);
-                let params: Vec<f64> =
-                    self.theta[off_t..off_t + np].iter().map(|&v| v as f64).collect();
-                let q = skew_from_params(b, &params);
-                let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
-                for (a, g) in skew_param_grad(&dq).iter().enumerate() {
-                    d_params[off_t + a] += *g as f32;
-                }
+                sc.backward(
+                    &self.theta[off_t..off_t + np],
+                    self.neumann_terms,
+                    &dr,
+                    &mut d_params[off_t..off_t + np],
+                );
+                sc.ws.release(dr);
                 // dz_prev_b = dz_b · R_kᵀ.
                 for t in 0..dz.rows {
                     let grow = &dzp.row(t)[off_c..off_c + b];
@@ -294,9 +301,10 @@ impl Adapter for BoftAdapter {
             ws.release(dzp);
             ws.release(dz_prev_p);
         }
+        drop(sc);
         dx.copy_from(&dz);
         ws.release(dz);
-        for z in zs {
+        for z in zs.drain(..) {
             ws.release(z);
         }
     }

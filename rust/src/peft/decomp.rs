@@ -31,7 +31,11 @@ pub fn principal_split(w_pre: &Mat, r: usize, n_iter: Option<usize>, rng: &mut R
     let dec: Svd = match n_iter {
         None => {
             let full = svd(&wd);
-            Svd { u: full.u.cols_range(0, r), s: full.s[..r].to_vec(), vt: full.vt.rows_range(0, r) }
+            Svd {
+                u: full.u.cols_range(0, r),
+                s: full.s[..r].to_vec(),
+                vt: full.vt.rows_range(0, r),
+            }
         }
         Some(it) => rsvd(&wd, r, it, 10, rng),
     };

@@ -24,8 +24,75 @@ pub mod svft;
 pub mod vera;
 
 use crate::config::{MethodKind, PeftConfig};
-use crate::linalg::{Mat, Workspace};
+use crate::linalg::{
+    cayley_neumann_backward_into, cayley_neumann_into, skew_from_params_into, skew_param_grad_acc,
+    DMat, DWorkspace, Mat, Workspace,
+};
 use crate::util::rng::Rng;
+
+/// Stable identity of one adapter registered in a multi-adapter host.
+/// `runtime::serve` hands these out at registration and uses them to route
+/// requests; eviction retires the id permanently (ids are never reused).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AdapterId(pub u64);
+
+impl std::fmt::Display for AdapterId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "adapter#{}", self.0)
+    }
+}
+
+/// Reusable f64 scratch for the Cayley–Neumann rotation refresh shared by
+/// the rotation methods (PSOFT/OFT/BOFT). Each adapter owns one behind a
+/// `RefCell` so both `set_params` (rotation refresh) and the immutable
+/// `backward_into` path can draw r×r temporaries from it; once the pool is
+/// warm, refresh and backward perform zero heap allocations (pinned by
+/// `tests/zero_alloc.rs`).
+pub(crate) struct RotScratch {
+    /// Shape-keyed pool of r×r f64 temporaries.
+    pub ws: DWorkspace,
+    /// Reusable f32→f64 widening buffer for skew parameter slices.
+    pub params: Vec<f64>,
+}
+
+impl RotScratch {
+    pub fn with_param_capacity(n: usize) -> RotScratch {
+        RotScratch { ws: DWorkspace::new(), params: Vec::with_capacity(n) }
+    }
+
+    /// Rebuild one cached f32 rotation from its skew parameters through
+    /// the pooled Cayley–Neumann chain: `out ← CayleyNeumann(skew(θ))`.
+    /// `out` must already be r×r. Allocation-free once the pool is warm.
+    pub fn refresh(&mut self, theta: &[f32], r: usize, terms: usize, out: &mut Mat) {
+        self.params.clear();
+        self.params.extend(theta.iter().map(|&v| v as f64));
+        let mut q = self.ws.acquire(r, r);
+        skew_from_params_into(r, &self.params, &mut q);
+        let mut rot = self.ws.acquire(r, r);
+        cayley_neumann_into(&q, terms, &mut rot, &mut self.ws);
+        for (dst, &src) in out.data.iter_mut().zip(&rot.data) {
+            *dst = src as f32;
+        }
+        self.ws.release(q);
+        self.ws.release(rot);
+    }
+
+    /// Backward of [`RotScratch::refresh`]: given dL/dR (`d_rot`, r×r),
+    /// **accumulate** the skew-parameter gradient into `d_params` (length
+    /// `skew_param_count(r)`). Allocation-free once the pool is warm.
+    pub fn backward(&mut self, theta: &[f32], terms: usize, d_rot: &DMat, d_params: &mut [f32]) {
+        let r = d_rot.rows;
+        self.params.clear();
+        self.params.extend(theta.iter().map(|&v| v as f64));
+        let mut q = self.ws.acquire(r, r);
+        skew_from_params_into(r, &self.params, &mut q);
+        let mut dq = self.ws.acquire(r, r);
+        cayley_neumann_backward_into(&q, terms, d_rot, &mut dq, &mut self.ws);
+        skew_param_grad_acc(&dq, d_params);
+        self.ws.release(q);
+        self.ws.release(dq);
+    }
+}
 
 /// Gradients produced by one adapter backward pass.
 pub struct AdapterGrads {
@@ -133,8 +200,12 @@ pub fn build_adapter(cfg: &PeftConfig, w_pre: &Mat, rng: &mut Rng) -> Box<dyn Ad
         MethodKind::Dora => Box::new(dora::DoraAdapter::new(w_pre, cfg.rank, rng)),
         MethodKind::LoraXs => Box::new(lora_xs::LoraXsAdapter::new(w_pre, cfg.rank)),
         MethodKind::Vera => Box::new(vera::VeraAdapter::new(w_pre, cfg.rank, rng)),
-        MethodKind::OftV2 => Box::new(oft::OftAdapter::new(w_pre, cfg.oft_block_size, cfg.neumann_terms)),
-        MethodKind::Boft => Box::new(boft::BoftAdapter::new(w_pre, cfg.boft_b, cfg.boft_m, cfg.neumann_terms)),
+        MethodKind::OftV2 => {
+            Box::new(oft::OftAdapter::new(w_pre, cfg.oft_block_size, cfg.neumann_terms))
+        }
+        MethodKind::Boft => {
+            Box::new(boft::BoftAdapter::new(w_pre, cfg.boft_b, cfg.boft_m, cfg.neumann_terms))
+        }
         MethodKind::Goft => Box::new(goft::GoftAdapter::new(w_pre, false)),
         MethodKind::QGoft => Box::new(goft::GoftAdapter::new(w_pre, true)),
         MethodKind::Svft => Box::new(svft::SvftAdapter::new(w_pre)),

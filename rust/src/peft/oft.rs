@@ -6,13 +6,13 @@
 //! input-centric forward computes `y = (x·R)·W₀`, rotating activations
 //! instead of materializing `R·W₀` — the OFTv2 trick this paper adopts.
 
-use super::{Adapter, AdapterGrads};
+use super::{Adapter, AdapterGrads, RotScratch};
 use crate::config::MethodKind;
 use crate::linalg::{
-    cayley_neumann, cayley_neumann_backward, matmul, matmul_into, matmul_nt_into,
-    orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad, DMat, Mat,
+    matmul, matmul_into, matmul_nt_into, orthogonality_defect, skew_param_count, DMat, Mat,
     Workspace,
 };
+use std::cell::RefCell;
 
 pub struct OftAdapter {
     w0: Mat,
@@ -20,9 +20,11 @@ pub struct OftAdapter {
     blocks: Vec<usize>,
     /// Skew parameters, concatenated block by block.
     theta: Vec<f32>,
-    /// Cached per-block rotations (recomputed on set_params).
+    /// Cached per-block rotations (rewritten in place on set_params).
     rots: Vec<Mat>,
     neumann_terms: usize,
+    /// f64 workspace for the per-block Cayley refresh/backward chain.
+    scratch: RefCell<RotScratch>,
 }
 
 /// Partition dimension `d` into blocks of size `b` (last block may be
@@ -41,26 +43,26 @@ impl OftAdapter {
         let d = w_pre.rows;
         let blocks = block_partition(d, block_size);
         let n_theta: usize = blocks.iter().map(|&b| skew_param_count(b)).sum();
+        let max_np = blocks.iter().map(|&b| skew_param_count(b)).max().unwrap_or(0);
+        let rots = blocks.iter().map(|&b| Mat::eye(b)).collect();
         let mut adapter = Self {
             w0: w_pre.clone(),
             blocks,
             theta: vec![0.0; n_theta],
-            rots: Vec::new(),
+            rots,
             neumann_terms,
+            scratch: RefCell::new(RotScratch::with_param_capacity(max_np)),
         };
         adapter.recompute_rotations();
         adapter
     }
 
     fn recompute_rotations(&mut self) {
-        self.rots.clear();
+        let mut sc = self.scratch.borrow_mut();
         let mut off = 0;
-        for &b in &self.blocks {
+        for (bi, &b) in self.blocks.iter().enumerate() {
             let np = skew_param_count(b);
-            let params: Vec<f64> = self.theta[off..off + np].iter().map(|&v| v as f64).collect();
-            let q = skew_from_params(b, &params);
-            let r = cayley_neumann(&q, self.neumann_terms);
-            self.rots.push(r.cast());
+            sc.refresh(&self.theta[off..off + np], b, self.neumann_terms, &mut self.rots[bi]);
             off += np;
         }
     }
@@ -162,12 +164,14 @@ impl Adapter for OftAdapter {
         // z = x·R; y = z·W₀. dz = dy·W₀ᵀ.
         let mut dz = ws.acquire(dy.rows, x.cols);
         matmul_nt_into(dy, &self.w0, &mut dz);
+        let mut sc = self.scratch.borrow_mut();
         let mut off = 0;
         for (bi, &b) in self.blocks.iter().enumerate() {
             let rot = &self.rots[bi];
-            // dR_k = x_bᵀ dz_b. The Cayley–Neumann backward stays on the
-            // allocating f64 path: it is O(b²) per block, not per token.
-            let mut dr = DMat::zeros(b, b);
+            // dR_k = x_bᵀ dz_b. The Cayley–Neumann backward runs on the
+            // adapter-owned f64 workspace: it is O(b²) per block, not per
+            // token, and allocation-free once the pool is warm.
+            let mut dr = sc.ws.acquire_zeroed(b, b);
             for t in 0..x.rows {
                 let xrow = &x.row(t)[off..off + b];
                 let dzrow = &dz.row(t)[off..off + b];
@@ -180,13 +184,13 @@ impl Adapter for OftAdapter {
             }
             let np = skew_param_count(b);
             let t_off = off_theta(&self.blocks, bi);
-            let params: Vec<f64> =
-                self.theta[t_off..t_off + np].iter().map(|&v| v as f64).collect();
-            let q = skew_from_params(b, &params);
-            let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
-            for (pi, g) in skew_param_grad(&dq).iter().enumerate() {
-                d_params[t_off + pi] += *g as f32;
-            }
+            sc.backward(
+                &self.theta[t_off..t_off + np],
+                self.neumann_terms,
+                &dr,
+                &mut d_params[t_off..t_off + np],
+            );
+            sc.ws.release(dr);
             // dx_b = dz_b · R_kᵀ.
             for t in 0..x.rows {
                 let dzrow = &dz.row(t)[off..off + b];
@@ -201,6 +205,7 @@ impl Adapter for OftAdapter {
             }
             off += b;
         }
+        drop(sc);
         ws.release(dz);
     }
 

@@ -13,14 +13,14 @@
 //! column-angle/norm preservation this buys.
 
 use super::decomp::principal_split;
-use super::{Adapter, AdapterGrads};
+use super::{Adapter, AdapterGrads, RotScratch};
 use crate::config::{MethodKind, PeftConfig, PsoftInit};
 use crate::linalg::{
-    cayley_neumann, cayley_neumann_backward, matmul, matmul_acc, matmul_into, matmul_nt_acc,
-    matmul_nt_into, orthogonality_defect, skew_from_params, skew_param_count, skew_param_grad,
-    DMat, Mat, Workspace,
+    matmul, matmul_acc, matmul_into, matmul_nt_acc, matmul_nt_into, orthogonality_defect,
+    skew_param_count, DMat, Mat, Workspace,
 };
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 
 pub struct PsoftAdapter {
     /// Frozen residual W_res (d×n).
@@ -39,6 +39,9 @@ pub struct PsoftAdapter {
     r_mat: Mat,
     rank: usize,
     neumann_terms: usize,
+    /// f64 workspace for the Cayley–Neumann refresh/backward chain, so
+    /// rotation refresh inside `set_params` is allocation-free once warm.
+    scratch: RefCell<RotScratch>,
 }
 
 impl PsoftAdapter {
@@ -62,15 +65,15 @@ impl PsoftAdapter {
             r_mat: Mat::eye(r),
             rank: r,
             neumann_terms: cfg.neumann_terms,
+            scratch: RefCell::new(RotScratch::with_param_capacity(skew_param_count(r))),
         };
         adapter.recompute_rotation();
         adapter
     }
 
     fn recompute_rotation(&mut self) {
-        let params: Vec<f64> = self.theta.iter().map(|&v| v as f64).collect();
-        let q = skew_from_params(self.rank, &params);
-        self.r_mat = cayley_neumann(&q, self.neumann_terms).cast();
+        let mut sc = self.scratch.borrow_mut();
+        sc.refresh(&self.theta, self.rank, self.neumann_terms, &mut self.r_mat);
     }
 
     fn alpha_or_ones(&self) -> Vec<f32> {
@@ -211,9 +214,11 @@ impl Adapter for PsoftAdapter {
             dw.scale_cols_in_place(&self.beta);
         }
         let dv = dw;
-        // dR = uᵀ·dv. The r×r Cayley–Neumann backward stays on the
-        // allocating f64 path (per-adapter, not per-token cost).
-        let mut dr = DMat::zeros(r, r);
+        // dR = uᵀ·dv. The r×r Cayley–Neumann backward runs on the
+        // adapter-owned f64 workspace (per-adapter, not per-token cost;
+        // allocation-free once the pool is warm).
+        let mut sc = self.scratch.borrow_mut();
+        let mut dr = sc.ws.acquire_zeroed(r, r);
         for t in 0..u.rows {
             let ur = u.row(t);
             let gr = dv.row(t);
@@ -224,12 +229,9 @@ impl Adapter for PsoftAdapter {
                 }
             }
         }
-        let params: Vec<f64> = self.theta.iter().map(|&t| t as f64).collect();
-        let q = skew_from_params(r, &params);
-        let dq = cayley_neumann_backward(&q, self.neumann_terms, &dr);
-        for (i, g) in skew_param_grad(&dq).iter().enumerate() {
-            d_params[i] += *g as f32;
-        }
+        sc.backward(&self.theta, self.neumann_terms, &dr, &mut d_params[..nt]);
+        sc.ws.release(dr);
+        drop(sc);
         // du = dv·Rᵀ.
         let mut du = ws.acquire(dy.rows, r);
         matmul_nt_into(&dv, &self.r_mat, &mut du);

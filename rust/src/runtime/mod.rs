@@ -12,13 +12,22 @@
 //! native backend additionally owns a [`StepBuffers`] and a persistent
 //! flat parameter vector, making its steady-state `train_step`
 //! allocation-free (see `tests/zero_alloc.rs`).
+//!
+//! The **multi-adapter serving core** lives in [`serve`]: one shared
+//! frozen backbone fronted by N concurrently-registered adapters, each an
+//! independent [`NativeBackend`] built via
+//! [`NativeBackend::for_adapter`].
 
 pub mod pjrt;
+pub mod serve;
 
+use crate::config::PeftConfig;
 use crate::linalg::Workspace;
 use crate::model::native::{self, Batch, StepBuffers, StepOutput};
-use crate::model::NativeModel;
+use crate::model::{Backbone, NativeModel};
+use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Per-step hyperparameters (mirrors the HLO artifact's `hyper[4]` input).
 #[derive(Clone, Copy, Debug)]
@@ -96,6 +105,17 @@ impl NativeBackend {
             beta2: 0.999,
             eps: 1e-8,
         }
+    }
+
+    /// Build a backend for one adapter on a shared frozen backbone (the
+    /// serve path): the frozen tensors stay `Arc`-shared with `backbone`
+    /// and every sibling adapter; only adapter/head/optimizer state is
+    /// owned. Identical construction to `NativeBackend::new` over
+    /// `NativeModel::from_backbone` with a seed-`seed` Rng — so serve-side
+    /// results are bit-comparable to a standalone run.
+    pub fn for_adapter(backbone: &Arc<Backbone>, peft: &PeftConfig, seed: u64) -> NativeBackend {
+        let mut rng = Rng::new(seed);
+        NativeBackend::new(NativeModel::from_backbone(backbone, peft, &mut rng))
     }
 
     /// The full optimizer step without constructing a `StepOutput`:

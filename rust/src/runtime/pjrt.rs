@@ -88,7 +88,11 @@ mod backend_impl {
                 );
             }
             if frozen.len() != meta.frozen_size {
-                bail!("frozen size mismatch: model {} vs artifact {}", frozen.len(), meta.frozen_size);
+                bail!(
+                    "frozen size mismatch: model {} vs artifact {}",
+                    frozen.len(),
+                    meta.frozen_size
+                );
             }
             Self::with_state(dir, meta, trainable, frozen)
         }
@@ -106,7 +110,9 @@ mod backend_impl {
                 let proto = xla::HloModuleProto::from_text_file(&path)
                     .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
                 let comp = xla::XlaComputation::from_proto(&proto);
-                client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+                client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
             };
             let train_exe = load("train")?;
             let eval_exe = load("eval")?;
@@ -182,11 +188,9 @@ mod backend_impl {
                 hyper.gamma_orth as f32,
             ]);
             let frozen = xla::Literal::vec1(&self.frozen[..]);
-            let result = self
-                .train_exe
-                .execute::<xla::Literal>(&[trainable, m, v, step, hyper_l, tokens, target, pad, frozen])?
-                [0][0]
-                .to_literal_sync()?;
+            let inputs = [trainable, m, v, step, hyper_l, tokens, target, pad, frozen];
+            let result =
+                self.train_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
             let parts = result.to_tuple()?;
             if parts.len() != 5 {
                 bail!("train artifact returned {} outputs, expected 5", parts.len());

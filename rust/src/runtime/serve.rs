@@ -1,0 +1,761 @@
+//! Multi-adapter serving core: one shared frozen backbone, N hot-swappable
+//! adapters, a fair request scheduler over a fixed worker pool.
+//!
+//! # Architecture
+//!
+//! A [`ServeCore`] owns:
+//!
+//! - **One `Arc<Backbone>`** — the frozen pre-trained weights, loaded once.
+//!   Every registered adapter's `NativeModel` references the *same* frozen
+//!   tensors (see `model`: embeddings, dense modules and the LM head are
+//!   `Arc`-shared), so hosting N adapters costs N × adapter-state, not
+//!   N × model. **Backbone-sharing invariant:** nothing in the serve layer
+//!   ever writes through those `Arc`s — adapters mutate only their own
+//!   trainable state, so registration and eviction never touch the
+//!   backbone and requests to different adapters can run concurrently.
+//! - **A slot table** of registered adapters. Each slot owns the full
+//!   per-adapter state: the [`NativeBackend`] (adapter tensors + optimizer
+//!   moments + its warm [`StepBuffers`](crate::model::native::StepBuffers))
+//!   and a bounded FIFO request queue.
+//! - **A fixed worker pool.** Each worker owns a warm [`Workspace`] that
+//!   serves whichever adapter it picks up (the pool is shape-keyed, so
+//!   adapters of different ranks coexist without reallocation once warm).
+//!
+//! # Scheduling
+//!
+//! Round-robin over slots with queued work, at most one worker per adapter
+//! at a time (adapter state is mutable), up to `burst` consecutive
+//! requests per dispatch to amortize cache warmth. Per-adapter queue depth
+//! is capped (`queue_cap`); a full queue rejects with
+//! [`ServeError::QueueFull`] — backpressure, not unbounded buffering. This
+//! yields the fairness property the tests pin: with equal demand, adapters
+//! are serviced in rotation regardless of arrival order.
+//!
+//! # Zero-allocation warm path
+//!
+//! A warm request round-trip — submit, dispatch, evaluate/train-step,
+//! ticket completion, wait — performs **zero heap allocations**
+//! (`tests/serve_alloc.rs`): queues are pre-sized `VecDeque`s, tickets are
+//! reusable with pre-sized `preds` buffers, batches travel as `Arc<Batch>`
+//! clones, and the compute runs the same warm-buffer hot path the trainer
+//! uses.
+//!
+//! # Hot swap
+//!
+//! [`ServeCore::register`]/[`ServeCore::register_backend`] add adapters at
+//! any time; [`ServeCore::evict`] fails that adapter's queued requests
+//! with [`ServeError::Evicted`], waits out its in-flight burst and returns
+//! the owned [`NativeBackend`] (so a fine-tuned adapter can be persisted).
+//! The backbone and every other adapter are untouched throughout.
+
+use crate::config::PeftConfig;
+use crate::linalg::Workspace;
+use crate::model::native::{self, Batch};
+use crate::model::{Backbone, NativeModel};
+use crate::peft::AdapterId;
+use crate::runtime::{Hyper, NativeBackend};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// What a request asks the adapter to do.
+#[derive(Clone, Copy, Debug)]
+pub enum ReqKind {
+    /// Forward-only evaluation of the batch.
+    Eval,
+    /// One fine-tuning optimizer step on the batch.
+    Train(Hyper),
+}
+
+/// Serve-layer errors. `Copy` so completed tickets can carry one without
+/// allocating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The adapter's queue is at its depth cap — backpressure; retry later.
+    QueueFull,
+    /// No live adapter with this id.
+    UnknownAdapter,
+    /// The adapter was evicted before the request ran.
+    Evicted,
+    /// The core is shutting down.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msg = match self {
+            ServeError::QueueFull => "adapter queue at depth cap",
+            ServeError::UnknownAdapter => "unknown adapter id",
+            ServeError::Evicted => "adapter evicted before the request ran",
+            ServeError::ShuttingDown => "serve core shutting down",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-adapter service counters (cheap plain integers — updated without
+/// allocation on the warm path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdapterStats {
+    /// Requests completed (eval + train).
+    pub processed: u64,
+    /// Optimizer steps among them.
+    pub train_steps: u64,
+    /// Submissions rejected at the queue-depth cap.
+    pub rejected: u64,
+    /// Σ enqueue→completion nanoseconds over processed requests.
+    pub total_latency_ns: u64,
+    /// Worst single enqueue→completion latency.
+    pub max_latency_ns: u64,
+    /// Σ on-worker service nanoseconds (compute only, no queueing).
+    pub service_ns: u64,
+}
+
+impl AdapterStats {
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.processed == 0 {
+            0.0
+        } else {
+            self.total_latency_ns as f64 / self.processed as f64 / 1e6
+        }
+    }
+
+    pub fn max_latency_ms(&self) -> f64 {
+        self.max_latency_ns as f64 / 1e6
+    }
+
+    pub fn mean_service_ms(&self) -> f64 {
+        if self.processed == 0 {
+            0.0
+        } else {
+            self.service_ns as f64 / self.processed as f64 / 1e6
+        }
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Worker threads (≥ 1). Each owns a warm `Workspace`.
+    pub workers: usize,
+    /// Per-adapter queue depth cap (≥ 1); submissions beyond it get
+    /// [`ServeError::QueueFull`].
+    pub queue_cap: usize,
+    /// Max consecutive requests one dispatch takes from a single adapter
+    /// (≥ 1) before the round-robin cursor moves on.
+    pub burst: usize,
+    /// Capacity of the scheduling trace (dispatch order of adapter ids,
+    /// recorded until full). 0 disables tracing; tests use it to pin
+    /// round-robin fairness.
+    pub trace_cap: usize,
+    /// Start with dispatch paused (tests enqueue a deterministic backlog,
+    /// then [`ServeCore::resume`]).
+    pub start_paused: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: crate::util::threadpool::default_parallelism(),
+            queue_cap: 32,
+            burst: 4,
+            trace_cap: 0,
+            start_paused: false,
+        }
+    }
+}
+
+/// `[serve]` config section → scheduler knobs (remaining fields keep
+/// their defaults).
+impl From<crate::config::ServeConfig> for ServeOptions {
+    fn from(sc: crate::config::ServeConfig) -> ServeOptions {
+        ServeOptions {
+            workers: sc.workers,
+            queue_cap: sc.queue_cap,
+            burst: sc.burst,
+            ..ServeOptions::default()
+        }
+    }
+}
+
+struct TicketState {
+    done: bool,
+    loss: f64,
+    metric: f64,
+    preds: Vec<f32>,
+    error: Option<ServeError>,
+}
+
+struct TicketInner {
+    state: Mutex<TicketState>,
+    cv: Condvar,
+}
+
+/// Reusable completion handle for one in-flight request.
+///
+/// A ticket may carry **one outstanding request at a time**; `submit`
+/// re-arms it. `preds` capacity is pre-sized at construction so warm
+/// completions never allocate.
+#[derive(Clone)]
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+}
+
+impl Ticket {
+    /// `max_preds` sizes the per-example prediction buffer (use the batch
+    /// size of the requests this ticket will carry).
+    pub fn new(max_preds: usize) -> Ticket {
+        Ticket {
+            inner: Arc::new(TicketInner {
+                state: Mutex::new(TicketState {
+                    done: false,
+                    loss: f64::NAN,
+                    metric: f64::NAN,
+                    preds: Vec::with_capacity(max_preds),
+                    error: None,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Block until the request completes; returns (loss, metric).
+    pub fn wait(&self) -> Result<(f64, f64), ServeError> {
+        let mut ts = self.inner.state.lock().unwrap();
+        while !ts.done {
+            ts = self.inner.cv.wait(ts).unwrap();
+        }
+        match ts.error {
+            Some(e) => Err(e),
+            None => Ok((ts.loss, ts.metric)),
+        }
+    }
+
+    /// Completed request finished?
+    pub fn is_done(&self) -> bool {
+        self.inner.state.lock().unwrap().done
+    }
+
+    /// Borrow the per-example predictions of the completed request
+    /// without copying them out.
+    pub fn with_preds<R>(&self, f: impl FnOnce(&[f32]) -> R) -> R {
+        let ts = self.inner.state.lock().unwrap();
+        f(&ts.preds)
+    }
+
+    fn arm(&self) {
+        let mut ts = self.inner.state.lock().unwrap();
+        ts.done = false;
+        ts.error = None;
+        ts.preds.clear();
+    }
+}
+
+fn complete(ticket: &TicketInner, loss: f64, metric: f64, preds: &[f32]) {
+    let mut ts = ticket.state.lock().unwrap();
+    ts.loss = loss;
+    ts.metric = metric;
+    ts.preds.clear();
+    ts.preds.extend_from_slice(preds);
+    ts.error = None;
+    ts.done = true;
+    drop(ts);
+    ticket.cv.notify_all();
+}
+
+fn fail(ticket: &TicketInner, err: ServeError) {
+    let mut ts = ticket.state.lock().unwrap();
+    ts.error = Some(err);
+    ts.done = true;
+    drop(ts);
+    ticket.cv.notify_all();
+}
+
+struct Job {
+    batch: Arc<Batch>,
+    kind: ReqKind,
+    ticket: Arc<TicketInner>,
+    enqueued: Instant,
+}
+
+struct Slot {
+    id: AdapterId,
+    /// Human-readable label (method/rank) for reporting.
+    label: String,
+    /// None while a worker runs this adapter or after eviction.
+    backend: Option<NativeBackend>,
+    queue: VecDeque<Job>,
+    busy: bool,
+    live: bool,
+    stats: AdapterStats,
+}
+
+struct ServeState {
+    slots: Vec<Slot>,
+    /// Round-robin cursor (next slot index to consider).
+    rr: usize,
+    /// Total queued (not yet dispatched) jobs across slots.
+    queued: usize,
+    next_id: u64,
+    paused: bool,
+    shutdown: bool,
+    /// Dispatch-order trace of adapter ids (test instrumentation),
+    /// truncated at `trace_cap` entries.
+    trace: Vec<AdapterId>,
+    trace_cap: usize,
+}
+
+struct Shared {
+    state: Mutex<ServeState>,
+    /// Workers wait here for runnable slots.
+    work: Condvar,
+    /// Evict/drain waiters wait here for put-backs.
+    idle: Condvar,
+}
+
+/// The multi-adapter serving core. See the module docs for the design.
+pub struct ServeCore {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    opts: ServeOptions,
+    backbone: Arc<Backbone>,
+}
+
+impl ServeCore {
+    /// Spin up the worker pool over a shared frozen backbone.
+    pub fn new(backbone: Arc<Backbone>, opts: ServeOptions) -> ServeCore {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(ServeState {
+                slots: Vec::new(),
+                rr: 0,
+                queued: 0,
+                next_id: 0,
+                paused: opts.start_paused,
+                shutdown: false,
+                trace: Vec::with_capacity(opts.trace_cap),
+                trace_cap: opts.trace_cap,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        });
+        let workers = (0..opts.workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let burst = opts.burst.max(1);
+                thread::Builder::new()
+                    .name(format!("psoft-serve-{i}"))
+                    .spawn(move || worker_loop(&shared, burst))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        ServeCore { shared, workers, opts, backbone }
+    }
+
+    /// The shared frozen backbone.
+    pub fn backbone(&self) -> &Arc<Backbone> {
+        &self.backbone
+    }
+
+    /// Build and register a fresh adapter on the shared backbone. The
+    /// construction (SVD init etc.) runs on the caller's thread; serving
+    /// of already-registered adapters continues meanwhile.
+    pub fn register(&self, label: &str, peft: &PeftConfig, seed: u64) -> AdapterId {
+        let mut rng = Rng::new(seed);
+        let model = NativeModel::from_backbone(&self.backbone, peft, &mut rng);
+        self.register_backend(label, NativeBackend::new(model))
+    }
+
+    /// Register an externally built backend (e.g. a previously evicted,
+    /// fine-tuned adapter being re-installed). Never touches the backbone.
+    pub fn register_backend(&self, label: &str, backend: NativeBackend) -> AdapterId {
+        let mut st = self.shared.state.lock().unwrap();
+        let id = AdapterId(st.next_id);
+        st.next_id += 1;
+        let slot = Slot {
+            id,
+            label: label.to_string(),
+            backend: Some(backend),
+            queue: VecDeque::with_capacity(self.opts.queue_cap.max(1)),
+            busy: false,
+            live: true,
+            stats: AdapterStats::default(),
+        };
+        // Reuse a fully-retired slot (evicted: state taken, not busy) so
+        // the table doesn't grow without bound under churn.
+        match st.slots.iter().position(|s| !s.live && !s.busy && s.backend.is_none()) {
+            Some(i) => st.slots[i] = slot,
+            None => st.slots.push(slot),
+        }
+        drop(st);
+        self.shared.work.notify_all();
+        id
+    }
+
+    /// Remove an adapter: fail its queued requests with
+    /// [`ServeError::Evicted`], wait out its in-flight burst, and return
+    /// the owned per-adapter state. The backbone is untouched.
+    pub fn evict(&self, id: AdapterId) -> Result<NativeBackend, ServeError> {
+        let mut st = self.shared.state.lock().unwrap();
+        let idx = st
+            .slots
+            .iter()
+            .position(|s| s.live && s.id == id)
+            .ok_or(ServeError::UnknownAdapter)?;
+        st.slots[idx].live = false;
+        // Unqueue the not-yet-started jobs; their tickets are failed only
+        // after the scheduler lock is released (ticket locks are never
+        // taken under the state lock — see the worker's completion path).
+        let mut failed: Vec<Job> = Vec::with_capacity(st.slots[idx].queue.len());
+        while let Some(job) = st.slots[idx].queue.pop_front() {
+            st.queued -= 1;
+            failed.push(job);
+        }
+        while st.slots[idx].busy {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+        let backend = st.slots[idx].backend.take().expect("evicted slot retains state");
+        drop(st);
+        for job in failed {
+            fail(&job.ticket, ServeError::Evicted);
+        }
+        Ok(backend)
+    }
+
+    /// Enqueue one request for `id`, re-arming `ticket` to receive the
+    /// result. The ticket is re-armed only once the request is accepted —
+    /// a failed submit leaves the ticket's previous completion intact.
+    /// Zero-allocation on the warm path: the batch travels as an `Arc`
+    /// clone and the queue is pre-sized.
+    pub fn submit(
+        &self,
+        id: AdapterId,
+        batch: &Arc<Batch>,
+        kind: ReqKind,
+        ticket: &Ticket,
+    ) -> Result<(), ServeError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return Err(ServeError::ShuttingDown);
+        }
+        let cap = self.opts.queue_cap.max(1);
+        let slot = st
+            .slots
+            .iter_mut()
+            .find(|s| s.live && s.id == id)
+            .ok_or(ServeError::UnknownAdapter)?;
+        if slot.queue.len() >= cap {
+            slot.stats.rejected += 1;
+            return Err(ServeError::QueueFull);
+        }
+        // Arm under the state lock: workers need that lock to dispatch,
+        // so the job cannot complete before it is armed. (No path ever
+        // holds a ticket lock and then takes the state lock, so this
+        // nesting is deadlock-free.)
+        ticket.arm();
+        slot.queue.push_back(Job {
+            batch: Arc::clone(batch),
+            kind,
+            ticket: Arc::clone(&ticket.inner),
+            enqueued: Instant::now(),
+        });
+        st.queued += 1;
+        drop(st);
+        self.shared.work.notify_one();
+        Ok(())
+    }
+
+    /// Block until every queued and in-flight request has completed.
+    /// (Unpauses dispatch if the core started paused.)
+    pub fn drain(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.paused {
+            st.paused = false;
+            self.shared.work.notify_all();
+        }
+        while st.queued > 0 || st.slots.iter().any(|s| s.busy) {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+    }
+
+    /// Start dispatching (cores built with `start_paused`).
+    pub fn resume(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.paused = false;
+        drop(st);
+        self.shared.work.notify_all();
+    }
+
+    /// Stats for one adapter (live or already evicted, while its slot has
+    /// not been reused).
+    pub fn stats(&self, id: AdapterId) -> Option<AdapterStats> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().find(|s| s.id == id).map(|s| s.stats)
+    }
+
+    /// (id, label, stats) of every live adapter, in slot order.
+    pub fn adapters(&self) -> Vec<(AdapterId, String, AdapterStats)> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots
+            .iter()
+            .filter(|s| s.live)
+            .map(|s| (s.id, s.label.clone(), s.stats))
+            .collect()
+    }
+
+    /// Number of live adapters.
+    pub fn num_adapters(&self) -> usize {
+        self.shared.state.lock().unwrap().slots.iter().filter(|s| s.live).count()
+    }
+
+    /// Currently queued (undispatched) requests for one adapter.
+    pub fn queue_len(&self, id: AdapterId) -> Option<usize> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().find(|s| s.live && s.id == id).map(|s| s.queue.len())
+    }
+
+    /// The recorded dispatch order (adapter id per dispatched request),
+    /// up to `trace_cap` entries.
+    pub fn trace(&self) -> Vec<AdapterId> {
+        self.shared.state.lock().unwrap().trace.clone()
+    }
+}
+
+impl Drop for ServeCore {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            st.paused = false;
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn next_runnable(st: &ServeState) -> Option<usize> {
+    let n = st.slots.len();
+    for k in 0..n {
+        let i = (st.rr + k) % n;
+        let s = &st.slots[i];
+        if s.live && !s.busy && s.backend.is_some() && !s.queue.is_empty() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+fn worker_loop(shared: &Shared, burst: usize) {
+    let mut ws = Workspace::new();
+    let mut jobs: Vec<Job> = Vec::with_capacity(burst);
+    loop {
+        // Dispatch: pick the next runnable slot round-robin and take up to
+        // `burst` of its queued jobs plus its backend.
+        let (slot_idx, mut backend) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if !st.paused {
+                    if let Some(idx) = next_runnable(&st) {
+                        let n = st.slots.len();
+                        st.rr = (idx + 1) % n;
+                        let id = st.slots[idx].id;
+                        {
+                            let slot = &mut st.slots[idx];
+                            slot.busy = true;
+                            for _ in 0..burst {
+                                match slot.queue.pop_front() {
+                                    Some(j) => jobs.push(j),
+                                    None => break,
+                                }
+                            }
+                        }
+                        st.queued -= jobs.len();
+                        // Record per entry up to the configured cap (never
+                        // past `trace_cap`, so pushes never reallocate and
+                        // the trace has no mid-stream gaps).
+                        if st.trace.len() < st.trace_cap {
+                            let room = st.trace_cap - st.trace.len();
+                            for _ in 0..jobs.len().min(room) {
+                                st.trace.push(id);
+                            }
+                        }
+                        let backend =
+                            st.slots[idx].backend.take().expect("runnable slot has its backend");
+                        break (idx, backend);
+                    }
+                }
+                if st.shutdown && st.queued == 0 {
+                    return;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+
+        // Service the burst outside the scheduler lock; other workers keep
+        // dispatching other adapters meanwhile.
+        let mut done = 0u64;
+        let mut train_steps = 0u64;
+        let mut service_ns = 0u64;
+        let mut latency_ns = 0u64;
+        let mut max_latency_ns = 0u64;
+        for job in jobs.drain(..) {
+            let svc = Instant::now();
+            let (loss, metric) = match job.kind {
+                ReqKind::Eval => {
+                    native::evaluate_into(&backend.model, &job.batch, &mut backend.bufs, &mut ws)
+                }
+                ReqKind::Train(hyper) => {
+                    train_steps += 1;
+                    backend.step_core(&job.batch, &hyper, &mut ws)
+                }
+            };
+            complete(&job.ticket, loss, metric, &backend.bufs.preds);
+            done += 1;
+            service_ns += svc.elapsed().as_nanos() as u64;
+            let lat = job.enqueued.elapsed().as_nanos() as u64;
+            latency_ns += lat;
+            max_latency_ns = max_latency_ns.max(lat);
+        }
+
+        // Put the adapter state back and publish stats.
+        {
+            let mut st = shared.state.lock().unwrap();
+            let slot = &mut st.slots[slot_idx];
+            slot.backend = Some(backend);
+            slot.busy = false;
+            slot.stats.processed += done;
+            slot.stats.train_steps += train_steps;
+            slot.stats.service_ns += service_ns;
+            slot.stats.total_latency_ns += latency_ns;
+            slot.stats.max_latency_ns = slot.stats.max_latency_ns.max(max_latency_ns);
+        }
+        shared.work.notify_all();
+        shared.idle.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arch, MethodKind, ModelConfig, ModuleKind};
+    use crate::model::native::Target;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            arch: Arch::Encoder,
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 10,
+            n_classes: 2,
+        }
+    }
+
+    fn tiny_batch(cfg: &ModelConfig, seed: u64) -> Arc<Batch> {
+        let mut rng = Rng::new(seed);
+        let (bsz, seq) = (2usize, 6usize);
+        let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+        Arc::new(Batch {
+            batch: bsz,
+            seq,
+            tokens,
+            pad: vec![1.0; bsz * seq],
+            target: Target::Class(labels),
+        })
+    }
+
+    fn lora_peft() -> PeftConfig {
+        PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q, ModuleKind::V])
+    }
+
+    #[test]
+    fn eval_roundtrip_matches_direct_backend() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(901);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts = ServeOptions { workers: 2, trace_cap: 0, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+
+        // Direct reference: same construction path, no serving.
+        let mut direct = NativeBackend::for_adapter(&bb, &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 11);
+        let mut ws = Workspace::new();
+        let (ref_loss, ref_metric) =
+            native::evaluate_into(&direct.model, &batch, &mut direct.bufs, &mut ws);
+
+        let ticket = Ticket::new(batch.batch);
+        core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+        let (loss, metric) = ticket.wait().unwrap();
+        assert_eq!(loss, ref_loss);
+        assert_eq!(metric, ref_metric);
+        ticket.with_preds(|p| assert_eq!(p, &direct.bufs.preds[..]));
+
+        let stats = core.stats(id).unwrap();
+        assert_eq!(stats.processed, 1);
+        assert_eq!(stats.train_steps, 0);
+    }
+
+    #[test]
+    fn evict_returns_state_and_fails_queued_requests() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(902);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts =
+            ServeOptions { workers: 1, start_paused: true, queue_cap: 8, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 12);
+        let ticket = Ticket::new(batch.batch);
+        core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+
+        // Paused ⇒ the job is still queued; eviction must fail it.
+        let backend = core.evict(id).unwrap();
+        assert_eq!(ticket.wait(), Err(ServeError::Evicted));
+        assert_eq!(core.num_adapters(), 0);
+        assert!(core.submit(id, &batch, ReqKind::Eval, &ticket).is_err());
+
+        // The evicted state is intact and can be re-registered (hot swap);
+        // the slot is reused rather than grown.
+        let id2 = core.register_backend("lora_r3", backend);
+        assert_ne!(id, id2, "adapter ids are never reused");
+        core.resume();
+        core.submit(id2, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(ticket.wait().is_ok());
+    }
+
+    #[test]
+    fn queue_cap_rejects_and_counts() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(903);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts =
+            ServeOptions { workers: 1, start_paused: true, queue_cap: 3, ..Default::default() };
+        let core = ServeCore::new(bb, opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 13);
+        let tickets: Vec<Ticket> = (0..4).map(|_| Ticket::new(batch.batch)).collect();
+        for t in &tickets[..3] {
+            core.submit(id, &batch, ReqKind::Eval, t).unwrap();
+        }
+        assert_eq!(core.queue_len(id), Some(3));
+        assert_eq!(
+            core.submit(id, &batch, ReqKind::Eval, &tickets[3]),
+            Err(ServeError::QueueFull)
+        );
+        assert_eq!(core.stats(id).unwrap().rejected, 1);
+        core.drain();
+        for t in &tickets[..3] {
+            assert!(t.wait().is_ok());
+        }
+    }
+}

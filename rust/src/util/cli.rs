@@ -58,21 +58,27 @@ impl Args {
     pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}"))
+            }
         }
     }
 
     pub fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}"))
+            }
         }
     }
 
     pub fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}"))
+            }
         }
     }
 
@@ -101,7 +107,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_options_flags() {
-        let a = Args::parse(v(&["train", "--method", "psoft", "--rank=46", "--verbose", "ds1"]), &["verbose"]);
+        let raw = v(&["train", "--method", "psoft", "--rank=46", "--verbose", "ds1"]);
+        let a = Args::parse(raw, &["verbose"]);
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.get("method"), Some("psoft"));
         assert_eq!(a.usize("rank", 0).unwrap(), 46);

@@ -1,6 +1,11 @@
 //! End-to-end integration: pretrain → checkpoint → PEFT fine-tune →
 //! merge → deploy-equivalence, all on the native backend (artifact-free).
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::config::{Arch, DataConfig, MethodKind, ModelConfig, PeftConfig, TrainConfig};
 use psoft::data::load_task;
 use psoft::linalg::Workspace;

@@ -5,6 +5,11 @@
 //! PJRT backend as a stub without it) and `make artifacts` to have run
 //! (skips politely otherwise so `cargo test` stays green on a fresh
 //! checkout).
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 #![cfg(feature = "xla")]
 
 use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig, TrainConfig};
@@ -34,23 +39,34 @@ fn artifacts_dir() -> Option<&'static Path> {
 fn fixture_replay_matches_python() {
     let Some(dir) = artifacts_dir() else { return };
     let fixture = Json::parse(&std::fs::read_to_string(dir.join("fixture.json")).unwrap()).unwrap();
-    let frozen: Vec<f32> = Json::parse(&std::fs::read_to_string(dir.join("fixture_frozen.json")).unwrap())
+    let frozen_text = std::fs::read_to_string(dir.join("fixture_frozen.json")).unwrap();
+    let frozen: Vec<f32> = Json::parse(&frozen_text)
         .unwrap()
         .as_arr()
         .unwrap()
         .iter()
         .map(|v| v.as_f64().unwrap() as f32)
         .collect();
-    let trainable: Vec<f32> =
-        fixture.get("trainable").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let trainable: Vec<f32> = fixture
+        .get("trainable")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
 
     let meta = ArtifactMeta::load(dir, "fixture_psoft_tiny").unwrap();
     assert_eq!(meta.frozen_size, frozen.len());
     assert_eq!(meta.trainable_size, trainable.len());
     let mut backend = PjrtBackend::with_state(dir, meta.clone(), trainable, frozen).unwrap();
 
-    let tokens: Vec<i32> =
-        fixture.get("tokens").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap() as i32).collect();
+    let tokens: Vec<i32> = fixture
+        .get("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
     let labels: Vec<usize> =
         fixture.get("target").as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect();
     let batch = Batch {
@@ -177,7 +193,8 @@ fn native_and_pjrt_agree_on_eval() {
         .zip(&out_pjrt.preds)
         .filter(|(a, b)| (**a - **b).abs() < 0.5)
         .count();
-    assert!(agree * 10 >= out_native.preds.len() * 9, "{agree}/{} preds agree", out_native.preds.len());
+    let total = out_native.preds.len();
+    assert!(agree * 10 >= total * 9, "{agree}/{total} preds agree");
 }
 
 /// End-to-end mini-workflow through the PJRT path with the trainer.

@@ -5,6 +5,11 @@
 //! roundtrips across the whole model, merge-equivalence for every method,
 //! and coordinator scheduling under failure injection.
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
 use psoft::linalg::{matmul, Mat};
 use psoft::model::{Backbone, NativeModel};

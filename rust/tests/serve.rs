@@ -1,0 +1,240 @@
+//! Scheduler-level integration tests for `runtime::serve`:
+//!
+//! - **Adapter isolation** — concurrent requests to distinct adapters on
+//!   one shared backbone produce bit-identical losses/metrics/predictions
+//!   to serial single-adapter runs of the same construction.
+//! - **Round-robin fairness** — under a synthetic burst backlog, dispatch
+//!   order rotates across adapters (exactly cyclic with a single worker),
+//!   honoring the configured burst size.
+//! - **Queue-depth caps** — covered by the unit tests in
+//!   `runtime::serve`; here we pin that a capped queue still completes
+//!   everything it accepted.
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::linalg::Workspace;
+use psoft::model::native::{self, Batch, Target};
+use psoft::model::Backbone;
+use psoft::peft::AdapterId;
+use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+use psoft::runtime::{Hyper, NativeBackend};
+use psoft::util::rng::Rng;
+use std::sync::Arc;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Encoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 10,
+        n_classes: 2,
+    }
+}
+
+fn batch_for(cfg: &ModelConfig, seed: u64) -> Arc<Batch> {
+    let mut rng = Rng::new(seed);
+    let (bsz, seq) = (2usize, 6usize);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+    Arc::new(Batch {
+        batch: bsz,
+        seq,
+        tokens,
+        pad: vec![1.0; bsz * seq],
+        target: Target::Class(labels),
+    })
+}
+
+fn methods() -> Vec<(&'static str, PeftConfig, u64)> {
+    let modules = vec![ModuleKind::Q, ModuleKind::V];
+    vec![
+        ("psoft_r4", PeftConfig::new(MethodKind::Psoft, 4).with_modules(modules.clone()), 31),
+        ("lora_r3", PeftConfig::new(MethodKind::Lora, 3).with_modules(modules.clone()), 32),
+        ("oftv2_b4", PeftConfig::new(MethodKind::OftV2, 4).with_modules(modules), 33),
+    ]
+}
+
+/// Concurrent multi-adapter serving is bit-identical to serial
+/// single-adapter execution: the backbone is read-only shared state and
+/// every adapter owns its buffers, so interleaving cannot perturb math.
+#[test]
+fn concurrent_adapters_match_serial_single_adapter_runs() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(801);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let specs = methods();
+    let steps = 4usize;
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+
+    // Serial reference: each adapter alone, steps train steps + one eval.
+    let mut reference: Vec<Vec<(f64, f64)>> = Vec::new();
+    for (_, peft, seed) in &specs {
+        let mut be = NativeBackend::for_adapter(&bb, peft, *seed);
+        let batch = batch_for(&cfg, *seed ^ 7);
+        let mut ws = Workspace::new();
+        let mut per = Vec::new();
+        for _ in 0..steps {
+            per.push(be.step_core(&batch, &hyper, &mut ws));
+        }
+        per.push(native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws));
+        reference.push(per);
+    }
+
+    // Concurrent: all adapters registered on one core, requests
+    // interleaved across adapters, two workers running them in parallel.
+    let opts = ServeOptions { workers: 2, ..Default::default() };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let ids: Vec<AdapterId> =
+        specs.iter().map(|(label, peft, seed)| core.register(label, peft, *seed)).collect();
+    let batches: Vec<Arc<Batch>> =
+        specs.iter().map(|(_, _, seed)| batch_for(&cfg, *seed ^ 7)).collect();
+    let tickets: Vec<Vec<Ticket>> = specs
+        .iter()
+        .map(|_| (0..=steps).map(|_| Ticket::new(2)).collect())
+        .collect();
+    for step in 0..steps {
+        for (a, id) in ids.iter().enumerate() {
+            core.submit(*id, &batches[a], ReqKind::Train(hyper), &tickets[a][step]).unwrap();
+        }
+    }
+    for (a, id) in ids.iter().enumerate() {
+        core.submit(*id, &batches[a], ReqKind::Eval, &tickets[a][steps]).unwrap();
+    }
+    core.drain();
+
+    for (a, (label, _, _)) in specs.iter().enumerate() {
+        for (s, expect) in reference[a].iter().enumerate() {
+            let got = tickets[a][s].wait().unwrap();
+            assert_eq!(got.0, expect.0, "{label} step {s}: loss must be bit-identical");
+            assert_eq!(got.1, expect.1, "{label} step {s}: metric must be bit-identical");
+        }
+        let stats = core.stats(ids[a]).unwrap();
+        assert_eq!(stats.processed as usize, steps + 1, "{label}");
+        assert_eq!(stats.train_steps as usize, steps, "{label}");
+    }
+}
+
+/// With a single worker and a pre-loaded backlog, dispatch is exactly
+/// cyclic over the adapters — no adapter is starved or favored.
+#[test]
+fn round_robin_is_exactly_cyclic_under_backlog() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(802);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        burst: 1,
+        start_paused: true,
+        trace_cap: 64,
+        ..Default::default()
+    };
+    let core = ServeCore::new(bb, opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let ids: Vec<AdapterId> =
+        (0..3).map(|i| core.register("lora", &peft, 40 + i as u64)).collect();
+    let batch = batch_for(&cfg, 50);
+    let per_adapter = 4usize;
+    let tickets: Vec<Ticket> = (0..ids.len() * per_adapter).map(|_| Ticket::new(2)).collect();
+    let mut t = 0;
+    for _ in 0..per_adapter {
+        for id in &ids {
+            core.submit(*id, &batch, ReqKind::Eval, &tickets[t]).unwrap();
+            t += 1;
+        }
+    }
+    core.resume();
+    core.drain();
+    let trace = core.trace();
+    assert_eq!(trace.len(), ids.len() * per_adapter);
+    for (i, id) in trace.iter().enumerate() {
+        assert_eq!(*id, ids[i % ids.len()], "dispatch {i} must follow round-robin order");
+    }
+    for ticket in &tickets {
+        assert!(ticket.wait().is_ok());
+    }
+}
+
+/// Burst dispatch takes up to `burst` consecutive requests per adapter
+/// before rotating — amortizing warm-cache runs without starving others.
+#[test]
+fn burst_groups_consecutive_requests_per_adapter() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(803);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        burst: 2,
+        start_paused: true,
+        trace_cap: 64,
+        ..Default::default()
+    };
+    let core = ServeCore::new(bb, opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let ids: Vec<AdapterId> =
+        (0..2).map(|i| core.register("lora", &peft, 60 + i as u64)).collect();
+    let batch = batch_for(&cfg, 70);
+    let tickets: Vec<Ticket> = (0..8).map(|_| Ticket::new(2)).collect();
+    let mut t = 0;
+    for _ in 0..4 {
+        for id in &ids {
+            core.submit(*id, &batch, ReqKind::Eval, &tickets[t]).unwrap();
+            t += 1;
+        }
+    }
+    core.resume();
+    core.drain();
+    let trace = core.trace();
+    // burst=2 over full queues: pairs alternate a,a,b,b,a,a,b,b.
+    let expect: Vec<AdapterId> =
+        vec![ids[0], ids[0], ids[1], ids[1], ids[0], ids[0], ids[1], ids[1]];
+    assert_eq!(trace, expect);
+    for ticket in &tickets {
+        assert!(ticket.wait().is_ok());
+    }
+}
+
+/// A queue at its cap keeps serving what it accepted; accepted requests
+/// all complete after the backlog drains (no loss, no deadlock).
+#[test]
+fn capped_queue_completes_accepted_requests() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(804);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts =
+        ServeOptions { workers: 2, queue_cap: 2, start_paused: true, ..Default::default() };
+    let core = ServeCore::new(bb, opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let id = core.register("lora", &peft, 90);
+    let batch = batch_for(&cfg, 91);
+    let tickets: Vec<Ticket> = (0..8).map(|_| Ticket::new(2)).collect();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    core.resume();
+    for ticket in &tickets {
+        match core.submit(id, &batch, ReqKind::Eval, ticket) {
+            Ok(()) => accepted += 1,
+            Err(_) => {
+                rejected += 1;
+                // Backpressure: wait the queue out, then retry once.
+                core.drain();
+                core.submit(id, &batch, ReqKind::Eval, ticket).unwrap();
+                accepted += 1;
+            }
+        }
+    }
+    core.drain();
+    assert_eq!(accepted, tickets.len());
+    for ticket in &tickets {
+        assert!(ticket.wait().is_ok());
+    }
+    let stats = core.stats(id).unwrap();
+    assert_eq!(stats.processed as usize, accepted);
+    assert_eq!(stats.rejected as usize, rejected);
+}

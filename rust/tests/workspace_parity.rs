@@ -5,6 +5,11 @@
 //! are dirty from previous steps (the buffer-hygiene property the
 //! zero-allocation training path depends on).
 
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
 use psoft::config::{MethodKind, PeftConfig};
 use psoft::linalg::{Mat, Workspace};
 use psoft::peft::build_adapter;

@@ -5,16 +5,27 @@
 //! clip, AdamW update, parameter write-back — performs **zero** heap
 //! allocations once the [`StepBuffers`] and [`Workspace`] pools are warm.
 //!
+//! Coverage:
+//! - LoRA (structured in-place low-rank path).
+//! - PSOFT, OFTv2 and BOFT: the rotation-refresh methods. Their
+//!   Cayley–Neumann chain (rotation rebuild inside `set_params` and the
+//!   r×r backward) runs on an adapter-owned f64 workspace pool
+//!   (`peft::RotScratch`), so the *full* optimizer step — including the
+//!   rotation refresh every parameter write-back — is allocation-free.
+//! - A refresh-only window (`set_trainable_flat` in a loop) pinning the
+//!   `set_params` path in isolation.
+//!
 //! Scope notes:
-//! - The workload uses LoRA adapters: their whole step is structured
-//!   in-place. Rotation-refresh methods (PSOFT/OFT/BOFT) still allocate
-//!   small r×r f64 temporaries inside the Cayley–Neumann update on
-//!   `set_params`; that is recorded as a follow-on in ROADMAP.md.
 //! - Shapes are kept below the matmul threading thresholds so the step
 //!   runs single-threaded (spawning scoped threads allocates; the
 //!   thread-pool split is a separate axis from buffer reuse).
 //! - This file contains exactly one test so no concurrent libtest thread
 //!   allocates during the measured window.
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
 
 use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
 use psoft::linalg::Workspace;
@@ -53,9 +64,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static COUNTER: CountingAlloc = CountingAlloc;
 
-#[test]
-fn steady_state_train_step_performs_zero_allocations() {
-    let cfg = ModelConfig {
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
         arch: Arch::Encoder,
         vocab_size: 32,
         d_model: 16,
@@ -64,14 +74,17 @@ fn steady_state_train_step_performs_zero_allocations() {
         d_ff: 32,
         max_seq: 10,
         n_classes: 2,
-    };
-    let mut rng = Rng::new(5001);
-    let bb = Backbone::random(&cfg, &mut rng);
-    let peft =
-        PeftConfig::new(MethodKind::Lora, 4).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
-    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
-    let mut be = NativeBackend::new(model);
+    }
+}
 
+fn backend_for(method: MethodKind, seed: u64) -> (NativeBackend, Batch) {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(seed);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let mut peft = PeftConfig::new(method, 4).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    peft.boft_b = 8;
+    peft.boft_m = 2;
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
     let (bsz, seq) = (4usize, 8usize);
     let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
     let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
@@ -82,10 +95,17 @@ fn steady_state_train_step_performs_zero_allocations() {
         pad: vec![1.0; bsz * seq],
         target: Target::Class(labels),
     };
+    (NativeBackend::new(model), batch)
+}
+
+/// Warm the buffers, then assert N further full optimizer steps allocate
+/// exactly zero times.
+fn assert_steps_alloc_free(method: MethodKind, seed: u64) {
+    let (mut be, batch) = backend_for(method, seed);
     let hyper = Hyper { lr: 1e-3, head_lr: 1e-3, ..Default::default() };
     let mut ws = Workspace::new();
 
-    // Warmup: sizes the StepBuffers and fills the workspace pool.
+    // Warmup: sizes the StepBuffers and fills the workspace pools.
     let mut warm_loss = 0.0;
     for _ in 0..3 {
         warm_loss = be.step_core(&batch, &hyper, &mut ws).0;
@@ -104,11 +124,57 @@ fn steady_state_train_step_performs_zero_allocations() {
     assert_eq!(
         after - before,
         0,
-        "steady-state train step allocated {} times in 5 steps",
+        "{method:?}: steady-state train step allocated {} times in 5 steps",
         after - before
     );
     // Same invariant from the workspace's view: no pool misses either.
     let misses_frozen = ws.misses();
     be.step_core(&batch, &hyper, &mut ws);
-    assert_eq!(ws.misses(), misses_frozen, "workspace pool must not miss after warmup");
+    assert_eq!(
+        ws.misses(),
+        misses_frozen,
+        "{method:?}: workspace pool must not miss after warmup"
+    );
+}
+
+/// Warm the rotation refresh, then assert repeated parameter write-backs
+/// (each of which rebuilds every cached rotation through the f64
+/// workspace pool) allocate exactly zero times.
+fn assert_refresh_alloc_free(method: MethodKind, seed: u64) {
+    let (mut be, _batch) = backend_for(method, seed);
+    let mut p = be.trainable();
+    // Nudge the skew parameters off zero so the refresh is generic.
+    for v in p.iter_mut().take(6) {
+        *v += 0.01;
+    }
+    // Warmup fills the adapters' f64 pools.
+    be.model.set_trainable_flat(&p);
+    be.model.set_trainable_flat(&p);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..5 {
+        be.model.set_trainable_flat(&p);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "{method:?}: rotation refresh allocated {} times in 5 set_params rounds",
+        after - before
+    );
+}
+
+#[test]
+fn steady_state_train_step_performs_zero_allocations() {
+    // Full optimizer steps: structured low-rank and all three
+    // rotation-refresh methods.
+    assert_steps_alloc_free(MethodKind::Lora, 5001);
+    assert_steps_alloc_free(MethodKind::Psoft, 5002);
+    assert_steps_alloc_free(MethodKind::OftV2, 5003);
+    assert_steps_alloc_free(MethodKind::Boft, 5004);
+
+    // Refresh-only windows: the `set_params` Cayley–Neumann chain.
+    assert_refresh_alloc_free(MethodKind::Psoft, 5005);
+    assert_refresh_alloc_free(MethodKind::OftV2, 5006);
+    assert_refresh_alloc_free(MethodKind::Boft, 5007);
 }

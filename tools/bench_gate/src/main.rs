@@ -1,0 +1,127 @@
+//! CI perf-regression gate over `BENCH_*.json` baselines.
+//!
+//! Usage (from `rust/`, after a bench run has written fresh JSON):
+//!
+//! ```text
+//! bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
+//!            --key steps_per_sec --max-regression 0.15
+//! ```
+//!
+//! The key is a dot-path into the JSON (`ns_per_step.total`, `configs.2.
+//! reqs_per_sec`, …). For higher-is-better metrics (the default) the gate
+//! fails when `current < baseline × (1 − max_regression)`; with
+//! `--lower-is-better` it fails when `current > baseline × (1 +
+//! max_regression)`. Improvements always pass — the committed baseline is
+//! a floor, refreshed by re-running the bench and committing its output.
+//!
+//! Exit codes: 0 pass, 1 regression, 2 usage/IO error.
+
+use psoft::util::json::Json;
+
+fn lookup<'a>(mut v: &'a Json, path: &str) -> Option<f64> {
+    for part in path.split('.') {
+        v = match part.parse::<usize>() {
+            Ok(i) => v.at(i),
+            Err(_) => v.get(part),
+        };
+    }
+    v.as_f64()
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+struct Opts {
+    baseline: String,
+    current: String,
+    key: String,
+    max_regression: f64,
+    lower_is_better: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut args = std::env::args().skip(1);
+    let mut baseline = None;
+    let mut current = None;
+    let mut key = "steps_per_sec".to_string();
+    let mut max_regression = 0.15;
+    let mut lower_is_better = false;
+    while let Some(arg) = args.next() {
+        let mut take = |what: &str| args.next().ok_or(format!("{what} expects a value"));
+        match arg.as_str() {
+            "--baseline" => baseline = Some(take("--baseline")?),
+            "--current" => current = Some(take("--current")?),
+            "--key" => key = take("--key")?,
+            "--max-regression" => {
+                max_regression = take("--max-regression")?
+                    .parse()
+                    .map_err(|_| "--max-regression expects a number".to_string())?;
+            }
+            "--lower-is-better" => lower_is_better = true,
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    Ok(Opts {
+        baseline: baseline.ok_or("--baseline is required")?,
+        current: current.ok_or("--current is required")?,
+        key,
+        max_regression,
+        lower_is_better,
+    })
+}
+
+fn main() {
+    std::process::exit(run());
+}
+
+fn run() -> i32 {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            return 2;
+        }
+    };
+    let (bjson, cjson) = match (load(&opts.baseline), load(&opts.current)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench_gate: {e}");
+            return 2;
+        }
+    };
+    let Some(base) = lookup(&bjson, &opts.key) else {
+        eprintln!("bench_gate: key {:?} missing in {}", opts.key, opts.baseline);
+        return 2;
+    };
+    let Some(cur) = lookup(&cjson, &opts.key) else {
+        eprintln!("bench_gate: key {:?} missing in {}", opts.key, opts.current);
+        return 2;
+    };
+    let tol = opts.max_regression;
+    let pass = if opts.lower_is_better {
+        cur <= base * (1.0 + tol)
+    } else {
+        cur >= base * (1.0 - tol)
+    };
+    let verdict = if pass { "PASS" } else { "FAIL" };
+    println!(
+        "bench_gate: {key}: baseline {base:.4}, current {cur:.4} \
+         (allowed regression {pct:.0}%, {dir}) -> {verdict}",
+        key = opts.key,
+        pct = tol * 100.0,
+        dir = if opts.lower_is_better { "lower-is-better" } else { "higher-is-better" },
+    );
+    if pass {
+        0
+    } else {
+        eprintln!(
+            "bench_gate: perf regression on {:?} — if intentional, refresh the baseline by \
+             re-running the bench and committing its {} output",
+            opts.key, opts.current
+        );
+        1
+    }
+}
