@@ -292,7 +292,7 @@ impl PsoftInit {
 }
 
 /// PEFT hyperparameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PeftConfig {
     pub method: MethodKind,
     /// Rank r (LoRA-family, PSOFT, LoRA-XS), or ignored by FFT.
@@ -438,11 +438,16 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Max consecutive requests per adapter per dispatch.
     pub burst: usize,
+    /// Resident-adapter budget: at most this many adapters keep their
+    /// state in memory; the least-recently-used idle adapter is spilled to
+    /// disk as a versioned artifact and transparently reloaded on its next
+    /// request. 0 (the default) disables eviction.
+    pub max_resident: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, queue_cap: 32, burst: 4 }
+        ServeConfig { workers: 4, queue_cap: 32, burst: 4, max_resident: 0 }
     }
 }
 
@@ -455,6 +460,7 @@ impl ServeConfig {
         read_usize(s, "workers", &mut sc.workers);
         read_usize(s, "queue_cap", &mut sc.queue_cap);
         read_usize(s, "burst", &mut sc.burst);
+        read_usize(s, "max_resident", &mut sc.max_resident);
         sc
     }
 }
@@ -628,10 +634,12 @@ mod tests {
 
     #[test]
     fn serve_section_parses_with_defaults() {
-        let tree = toml::parse("[serve]\nworkers = 8\nqueue_cap = 64\n").unwrap();
+        let tree =
+            toml::parse("[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\n").unwrap();
         let sc = ServeConfig::from_toml(&tree);
         assert_eq!(sc.workers, 8);
         assert_eq!(sc.queue_cap, 64);
+        assert_eq!(sc.max_resident, 2);
         assert_eq!(sc.burst, ServeConfig::default().burst);
         // Absent section ⇒ pure defaults.
         let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());

@@ -196,6 +196,7 @@ pub fn serve_report(
             mean_latency_ms: s.mean_latency_ms(),
             max_latency_ms: s.max_latency_ms(),
             mean_service_ms: s.mean_service_ms(),
+            artifact_bytes: core.artifact_bytes(id).unwrap_or(0),
         })
         .collect();
     report::ServeReport { title: title.to_string(), workers, wall_secs, rows }
@@ -374,6 +375,11 @@ mod tests {
         let report = serve_report("serve smoke", &core, 1.0, 1);
         assert_eq!(report.rows.len(), 1);
         assert_eq!(report.total_requests(), 3);
+        assert!(
+            report.rows[0].artifact_bytes > 0,
+            "serve report carries the per-adapter artifact size"
+        );
+        assert!(report.to_csv().contains("artifact_bytes"));
         assert!((report.throughput_rps() - 3.0).abs() < 1e-9);
         assert!(report.to_markdown().contains("lora_r3"));
         assert!(report.to_csv().contains("lora_r3"));

@@ -213,6 +213,9 @@ pub struct ServeRow {
     pub mean_latency_ms: f64,
     pub max_latency_ms: f64,
     pub mean_service_ms: f64,
+    /// Size of this adapter's persisted artifact (bytes) — the
+    /// bytes-per-adapter figure next to the shared-frozen accounting.
+    pub artifact_bytes: u64,
 }
 
 /// Serve-mode report: per-adapter throughput/latency rows plus run-level
@@ -247,11 +250,11 @@ impl ServeReport {
             self.throughput_rps()
         );
         out.push_str("| Adapter | Label | Served | Train | Rejected |");
-        out.push_str(" Mean lat (ms) | Max lat (ms) | Mean svc (ms) |\n");
-        out.push_str("|---|---|---|---|---|---|---|---|\n");
+        out.push_str(" Mean lat (ms) | Max lat (ms) | Mean svc (ms) | Artifact |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} |\n",
+                "| {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
                 r.id,
                 r.label,
                 r.processed,
@@ -259,7 +262,8 @@ impl ServeReport {
                 r.rejected,
                 r.mean_latency_ms,
                 r.max_latency_ms,
-                r.mean_service_ms
+                r.mean_service_ms,
+                human_bytes(r.artifact_bytes as f64)
             ));
         }
         out
@@ -267,11 +271,11 @@ impl ServeReport {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "adapter,label,processed,train_steps,rejected,mean_latency_ms,max_latency_ms,mean_service_ms\n",
+            "adapter,label,processed,train_steps,rejected,mean_latency_ms,max_latency_ms,mean_service_ms,artifact_bytes\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{:.4},{:.4},{:.4}\n",
+                "{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
                 r.id,
                 r.label,
                 r.processed,
@@ -279,7 +283,8 @@ impl ServeReport {
                 r.rejected,
                 r.mean_latency_ms,
                 r.max_latency_ms,
-                r.mean_service_ms
+                r.mean_service_ms,
+                r.artifact_bytes
             ));
         }
         out
@@ -307,6 +312,7 @@ impl ServeReport {
                                 ("mean_latency_ms", Json::Num(r.mean_latency_ms)),
                                 ("max_latency_ms", Json::Num(r.max_latency_ms)),
                                 ("mean_service_ms", Json::Num(r.mean_service_ms)),
+                                ("artifact_bytes", Json::Num(r.artifact_bytes as f64)),
                             ])
                         })
                         .collect(),

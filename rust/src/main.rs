@@ -5,6 +5,10 @@
 //! - `pretrain`  — pretrain a backbone on the pretext corpus, save checkpoint
 //! - `train`     — fine-tune one task with one PEFT method (native or PJRT)
 //! - `serve`     — multi-adapter serving: N adapters on one shared backbone
+//! - `export`    — fine-tune (optionally) and write a versioned adapter
+//!                 artifact; `--method all` prints artifact size per method
+//! - `import`    — reload an adapter artifact onto a matching backbone and
+//!                 evaluate it (fingerprint-checked)
 //! - `suite`     — run a full benchmark suite grid (task × method × seed)
 //! - `memmodel`  — print parameter/memory projections at paper scale
 //! - `geometry`  — angle-preservation probe (Figs 9/10)
@@ -17,7 +21,13 @@
 //! psoft train --suite glue --task cola --method psoft --rank 46 \
 //!       --backbone checkpoints/enc.bin
 //! psoft train --backend pjrt --artifact glue_cls_psoft_r46 ...
-//! psoft serve --adapters 16 --workers 8 --rounds 32 --methods psoft,lora
+//! psoft serve --adapters 16 --workers 8 --rounds 32 --methods psoft,lora \
+//!       --max-resident 4 --spill-dir /tmp/psoft_spill
+//! psoft export --method psoft --rank 8 --steps 2 --suite glue --task cola \
+//!       --seed 42 --out reports/psoft_cola.psoftad
+//! psoft import --artifact reports/psoft_cola.psoftad --suite glue \
+//!       --task cola --seed 42
+//! psoft export --method all --rank 8 --sizes-json reports/artifact_sizes.json
 //! psoft suite --suite glue --methods psoft,lora,oftv2 --seeds 1,2,3
 //! psoft memmodel --paper-model llama31-8b --method psoft --rank 424
 //! ```
@@ -53,6 +63,8 @@ fn main() {
         Some("pretrain") => run(cmd_pretrain(&args)),
         Some("train") => run(cmd_train(&args)),
         Some("serve") => run(cmd_serve(&args)),
+        Some("export") => run(cmd_export(&args)),
+        Some("import") => run(cmd_import(&args)),
         Some("suite") => run(cmd_suite(&args)),
         Some("memmodel") => run(cmd_memmodel(&args)),
         Some("geometry") => run(cmd_geometry(&args)),
@@ -82,8 +94,17 @@ fn run(r: Result<()>) -> i32 {
 
 fn usage() {
     eprintln!(
-        "usage: psoft <pretrain|train|serve|suite|memmodel|geometry|inspect> [options]\n\
-         see README.md for the full option reference"
+        "usage: psoft <pretrain|train|serve|export|import|suite|memmodel|geometry|inspect> [options]\n\
+         \n\
+         export: write a fine-tuned adapter as a versioned artifact\n\
+           psoft export --method psoft --rank 8 --steps 2 --suite glue --task cola \\\n\
+                 --seed 42 --out adapter.psoftad        (prints eval_loss=… for parity checks)\n\
+           psoft export --method all --sizes-json sizes.json   (artifact bytes per method)\n\
+         import: validate + reload an artifact onto a matching backbone and evaluate\n\
+           psoft import --artifact adapter.psoftad --suite glue --task cola --seed 42\n\
+         serve: --max-resident N spills least-recently-used adapters to --spill-dir\n\
+         \n\
+         see the module docs in src/main.rs for the full option reference"
     );
 }
 
@@ -311,6 +332,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sc.workers = args.usize("workers", sc.workers)?;
     sc.queue_cap = args.usize("queue-cap", sc.queue_cap)?;
     sc.burst = args.usize("burst", sc.burst)?;
+    sc.max_resident = args.usize("max-resident", sc.max_resident)?;
 
     let n_adapters = args.usize("adapters", 4)?;
     let rounds = args.usize("rounds", 16)?;
@@ -323,13 +345,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         vec!["psoft".into(), "lora".into(), "oftv2".into(), "boft".into()]
     };
 
-    let core = ServeCore::new(Arc::clone(&bb), ServeOptions::from(sc));
+    let mut opts = ServeOptions::from(sc);
+    if let Some(dir) = args.get("spill-dir") {
+        opts.spill_dir = Some(dir.into());
+    }
+    let core = ServeCore::new(Arc::clone(&bb), opts);
     psoft::info!(
-        "serve: {} adapters over {} workers (queue cap {}, burst {})",
+        "serve: {} adapters over {} workers (queue cap {}, burst {}, max resident {})",
         n_adapters,
         sc.workers,
         sc.queue_cap,
-        sc.burst
+        sc.burst,
+        if sc.max_resident == 0 { "unlimited".to_string() } else { sc.max_resident.to_string() }
     );
 
     // Register the adapter fleet, cycling through the requested methods.
@@ -411,6 +438,168 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let out_dir = Path::new(args.get_or("out", "reports"));
     report::write_serve_bundle(out_dir, "serve", &serve_rep)?;
     psoft::info!("wrote serve reports to {}", out_dir.display());
+    Ok(())
+}
+
+/// Deterministic eval-loss probe shared by `export` and `import`: the
+/// first test-split batch under a fixed rng. `export --steps N` followed
+/// by `import` on the same backbone/task flags prints bit-identical
+/// `eval_loss=` lines iff the artifact round-trip is exact — the CI
+/// round-trip smoke compares the two lines verbatim.
+fn artifact_eval_loss(
+    backend: &mut NativeBackend,
+    task: &psoft::data::TaskData,
+    ws: &mut psoft::linalg::Workspace,
+) -> Result<f64> {
+    let mut erng = Rng::new(0xE7A1);
+    let batches = task.batches(&task.test, 8, &mut erng);
+    let b = batches.first().context("task has no test batches")?;
+    let (loss, _) =
+        psoft::model::native::evaluate_into(&backend.model, b, &mut backend.bufs, ws);
+    Ok(loss)
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let cfg = model_cfg_from(args)?;
+    let seed = args.u64("seed", 42)?;
+    if args.get_or("method", "psoft") == "all" {
+        return export_sizes_all(args, &cfg, seed);
+    }
+    let peft = peft_cfg_from(args, &cfg)?;
+    let bb = load_or_make_backbone(args, &cfg)?;
+    let cfg = bb.cfg.clone();
+    let dc = data_cfg_from(args)?;
+    let task = load_task(&dc, cfg.vocab_size)?;
+    // Mirror of NativeBackend::from_artifact's reconstruction sequence:
+    // from_backbone then the head resize, on one seed-`seed` rng — so the
+    // artifact's recorded seed re-derives the frozen tensors exactly.
+    let mut rng = Rng::new(seed);
+    let mut model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    if cfg.arch == Arch::Encoder {
+        let n = if task.regression { 1 } else { task.n_classes.max(2) };
+        model.set_head_classes(n, &mut rng);
+    }
+    let mut backend = NativeBackend::with_seed(model, seed);
+    let steps = args.usize("steps", 0)?;
+    let mut ws = psoft::linalg::Workspace::new();
+    if steps > 0 {
+        let mut brng = Rng::new(dc.seed ^ 0xBA7C4E5);
+        let batches = task.batches(&task.train, args.usize("batch", 8)?, &mut brng);
+        if batches.is_empty() {
+            bail!("task produced no training batches");
+        }
+        let hyper = psoft::runtime::Hyper::default();
+        for b in batches.iter().cycle().take(steps) {
+            backend.step_core(b, &hyper, &mut ws);
+        }
+    }
+    let eval = artifact_eval_loss(&mut backend, &task, &mut ws)?;
+    let label = format!("{}_r{}", peft.method.name(), peft.rank);
+    let out = args.get_or("out", "reports/adapter.psoftad");
+    let art = backend.to_artifact(&label, &bb)?;
+    let bytes = art.write_to(Path::new(out))?;
+    println!(
+        "exported {label}: {} adapter params in {} sections, {} on disk -> {out} \
+         (backbone {:#018x}, opt_step {})",
+        art.adapter_param_floats(),
+        art.sections.len(),
+        human_bytes(bytes as f64),
+        art.backbone_fp,
+        art.opt_step
+    );
+    println!("eval_loss={eval:.12e}");
+    Ok(())
+}
+
+fn cmd_import(args: &Args) -> Result<()> {
+    use psoft::peft::artifact::AdapterArtifact;
+    let path = args.get("artifact").context("import requires --artifact <path>")?;
+    let art = AdapterArtifact::read_from(Path::new(path))?;
+    let cfg = model_cfg_from(args)?;
+    let bb = load_or_make_backbone(args, &cfg)?;
+    let mut backend = NativeBackend::from_artifact(&bb, &art)?;
+    let dc = data_cfg_from(args)?;
+    let task = load_task(&dc, bb.cfg.vocab_size)?;
+    let mut ws = psoft::linalg::Workspace::new();
+    let eval = artifact_eval_loss(&mut backend, &task, &mut ws)?;
+    println!(
+        "imported {} (method {}, rank {}, schema v{}, opt_step {}, {} adapter params) from {path}",
+        art.label,
+        art.method.name(),
+        art.peft.rank,
+        art.schema_version,
+        art.opt_step,
+        art.adapter_param_floats()
+    );
+    println!("eval_loss={eval:.12e}");
+    Ok(())
+}
+
+/// `psoft export --method all`: build one adapter per method on the same
+/// backbone and report artifact bytes per method — the paper-facing
+/// bytes-per-adapter numbers next to Table 8's parameter counts. With
+/// `--sizes-json`, emits the machine-readable form the CI size gate diffs
+/// against `ARTIFACT_SIZES.json`.
+fn export_sizes_all(args: &Args, cfg: &ModelConfig, seed: u64) -> Result<()> {
+    use psoft::util::json::Json;
+    use std::collections::BTreeMap;
+    let bb = Arc::new(load_or_make_backbone(args, cfg)?);
+    let rank = args.usize("rank", 8)?;
+    let mut methods: BTreeMap<String, Json> = BTreeMap::new();
+    println!("{:<10} {:>10} {:>12} {:>12}", "method", "params", "artifact", "bytes/param");
+    for m in MethodKind::ALL {
+        let mut peft = PeftConfig::new(m, rank);
+        peft.modules = match args.get("modules") {
+            Some(s) if s == "all" => bb.cfg.modules(),
+            Some(s) => ModuleKind::parse_list(s)?,
+            None => vec![ModuleKind::Q, ModuleKind::K, ModuleKind::V],
+        };
+        peft.svd_n_iter = Some(2); // randomized SVD keeps 12 constructions cheap
+        let backend = NativeBackend::for_adapter(&bb, &peft, seed);
+        let label = format!("{}_r{rank}", m.name());
+        let art = backend.to_artifact(&label, &bb)?;
+        let bytes = art.to_bytes().len();
+        let params = backend.model.num_trainable();
+        let bpp = bytes as f64 / params as f64;
+        println!(
+            "{:<10} {:>10} {:>12} {:>12.2}",
+            m.name(),
+            params,
+            human_bytes(bytes as f64),
+            bpp
+        );
+        methods.insert(
+            m.name().to_string(),
+            Json::obj(vec![
+                ("params", Json::Num(params as f64)),
+                ("bytes", Json::Num(bytes as f64)),
+                ("bytes_per_param", Json::Num(bpp)),
+            ]),
+        );
+    }
+    if let Some(out) = args.get("sizes-json") {
+        let json = Json::obj(vec![
+            (
+                "model",
+                Json::Str(format!(
+                    "{} d={} L={}",
+                    bb.cfg.arch.name(),
+                    bb.cfg.d_model,
+                    bb.cfg.n_layers
+                )),
+            ),
+            ("rank", Json::Num(rank as f64)),
+            ("seed", Json::Num(seed as f64)),
+            ("methods", Json::Obj(methods)),
+        ]);
+        if let Some(parent) = Path::new(out).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(out, json.dump_pretty())?;
+        println!("wrote artifact sizes to {out}");
+    }
     Ok(())
 }
 

@@ -43,6 +43,10 @@ pub struct Backbone {
     /// Per layer: dense weight per module, in arch order.
     pub layer_weights: Vec<Vec<(ModuleKind, Arc<Mat>)>>,
     pub lm_head: Option<Arc<Mat>>,
+    /// Lazily computed [`Backbone::fingerprint`] — the frozen state is
+    /// immutable once constructed, so the hash is computed at most once
+    /// (the serve layer fingerprints on every artifact spill/reload).
+    fp_cache: std::sync::OnceLock<u64>,
 }
 
 impl Backbone {
@@ -66,7 +70,14 @@ impl Backbone {
             Arch::Decoder => Some(Arc::new(Mat::randn(d, cfg.vocab_size, 0.02, rng))),
             Arch::Encoder => None,
         };
-        Backbone { cfg: cfg.clone(), tok_emb, pos_emb, layer_weights, lm_head }
+        Backbone {
+            cfg: cfg.clone(),
+            tok_emb,
+            pos_emb,
+            layer_weights,
+            lm_head,
+            fp_cache: std::sync::OnceLock::new(),
+        }
     }
 
     pub fn weight(&self, layer: usize, module: ModuleKind) -> &Mat {
@@ -79,6 +90,48 @@ impl Backbone {
         let (_, w) =
             self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module");
         Arc::clone(w)
+    }
+
+    /// FNV-1a 64 fingerprint over the full frozen state (config ints, then
+    /// every tensor's f32 bit patterns in declaration order). Adapter
+    /// artifacts (`peft::artifact`) record this at export and refuse to
+    /// load onto a backbone whose fingerprint differs, so a checkpoint can
+    /// never be silently applied to the wrong frozen weights. The frozen
+    /// state is immutable, so the hash is computed once and cached.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fp_cache.get_or_init(|| self.compute_fingerprint())
+    }
+
+    fn compute_fingerprint(&self) -> u64 {
+        use crate::peft::artifact::Fnv64;
+        let mut h = Fnv64::new();
+        let cfg = &self.cfg;
+        h.update_u32(match cfg.arch {
+            Arch::Encoder => 0,
+            Arch::Decoder => 1,
+        });
+        for v in [
+            cfg.vocab_size,
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.d_ff,
+            cfg.max_seq,
+            cfg.n_classes,
+        ] {
+            h.update_u32(v as u32);
+        }
+        h.update_f32s(&self.tok_emb.data);
+        h.update_f32s(&self.pos_emb.data);
+        for layer in &self.layer_weights {
+            for (_, w) in layer {
+                h.update_f32s(&w.data);
+            }
+        }
+        if let Some(head) = &self.lm_head {
+            h.update_f32s(&head.data);
+        }
+        h.finish()
     }
 
     /// Binary checkpoint: magic, config ints, then raw f32 LE tensors in
@@ -171,7 +224,14 @@ impl Backbone {
             Arch::Decoder => Some(Arc::new(read_mat(&mut f, cfg.d_model, cfg.vocab_size)?)),
             Arch::Encoder => None,
         };
-        Ok(Backbone { cfg, tok_emb, pos_emb, layer_weights, lm_head })
+        Ok(Backbone {
+            cfg,
+            tok_emb,
+            pos_emb,
+            layer_weights,
+            lm_head,
+            fp_cache: std::sync::OnceLock::new(),
+        })
     }
 }
 
@@ -308,6 +368,7 @@ impl NativeModel {
             pos_emb: Arc::clone(&self.pos_emb),
             layer_weights,
             lm_head: self.lm_head.clone(),
+            fp_cache: std::sync::OnceLock::new(),
         }
     }
 
@@ -532,6 +593,19 @@ mod tests {
         assert_eq!(bb2.tok_emb, bb.tok_emb);
         assert_eq!(bb2.weight(1, ModuleKind::V), bb.weight(1, ModuleKind::V));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_backbones() {
+        let mut rng = Rng::new(207);
+        let bb = Backbone::random(&tiny_cfg(), &mut rng);
+        let bb2 = Backbone::random(&tiny_cfg(), &mut rng);
+        assert_eq!(bb.fingerprint(), bb.fingerprint(), "fingerprint must be deterministic");
+        assert_ne!(bb.fingerprint(), bb2.fingerprint(), "different weights, same shape");
+        let mut small = tiny_cfg();
+        small.n_layers = 1;
+        let bb3 = Backbone::random(&small, &mut rng);
+        assert_ne!(bb.fingerprint(), bb3.fingerprint(), "different shape");
     }
 
     #[test]

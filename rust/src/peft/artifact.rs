@@ -1,0 +1,679 @@
+//! Versioned, self-describing adapter artifacts.
+//!
+//! A fine-tuned PEFT adapter is a *tiny* artifact relative to its frozen
+//! backbone (the paper's Table 8 parameter accounting is the whole point
+//! of PSOFT) — this module gives it a first-class on-disk form so adapters
+//! can be persisted, reloaded, and hot-swapped across process restarts.
+//! An [`AdapterArtifact`] carries everything needed to reconstruct a
+//! [`NativeBackend`](crate::runtime::NativeBackend) on a *matching* frozen
+//! backbone and nothing more:
+//!
+//! - a **schema version** so future layout changes fail loudly instead of
+//!   mis-parsing,
+//! - the **method** and a full [`PeftConfig`] + [`ModelConfig`] snapshot
+//!   (the shape contract),
+//! - the **construction seed**, from which the deterministic frozen
+//!   tensors (SVD splits, random projections) are re-derived on import —
+//!   frozen state is *never* stored, which is what keeps artifacts at
+//!   Table 8 size,
+//! - **named parameter sections** — each adapter's trainable state in its
+//!   canonical `params()` order, split into self-describing pieces
+//!   (`l0.Q.theta`, `head.w`, `adam.m`, …). Rotation methods (PSOFT / OFT
+//!   / BOFT / GOFT) round-trip their skew parameters θ, **not** the
+//!   materialized rotation, so the Cayley–Neumann refresh on import is
+//!   bit-exact,
+//! - a **backbone fingerprint** so an artifact can never be silently
+//!   loaded onto the wrong frozen weights,
+//! - a trailing **checksum** over the entire encoding.
+//!
+//! # Binary layout (schema version 1)
+//!
+//! All integers are little-endian. Floats are IEEE-754 bit patterns
+//! (`to_le_bytes`), so round-trips are bit-exact including NaN payloads.
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "PSOFTAD1"
+//! 8       4     schema_version: u32 (== 1)
+//! --- header (all offsets from byte 12 on) ---
+//!         4     method tag: u32        (index into MethodKind::ALL)
+//!         4     arch: u32              (0 = encoder, 1 = decoder)
+//!         4×7   vocab_size, d_model, n_layers, n_heads, d_ff, max_seq,
+//!               n_classes: u32 each
+//!         4     rank: u32
+//!         4     oft_block_size: u32
+//!         4     boft_m: u32
+//!         4     boft_b: u32
+//!         4     neumann_terms: u32
+//!         1     flags: u8              (bit0 use_alpha, bit1 use_beta)
+//!         1     psoft_init: u8         (0 AOrth, 1 BOrth, 2 Symmetric)
+//!         1     svd_n_iter present: u8 (0 | 1)
+//!         1     reserved: u8           (always 0)
+//!         4     svd_n_iter: u32        (0 when absent)
+//!         8     gamma_orth: f64 bits
+//!         4     n_modules: u32
+//!         1×n   module tags: u8 each   (index into ModuleKind::ALL)
+//!         8     seed: u64              (adapter construction seed)
+//!         8     backbone fingerprint: u64 (FNV-1a over config + tensors)
+//!         8     opt_step: u64          (AdamW step count)
+//!         4+n   label: u32 byte-length + UTF-8 bytes
+//!         4     n_sections: u32
+//! --- per section, n_sections times ---
+//!         4+n   name: u32 byte-length + UTF-8 bytes
+//!         4     n_floats: u32
+//!         4×n   data: f32 bit patterns
+//! --- trailer ---
+//!         8     checksum: u64 — FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! Read-side validation order: magic → schema version → checksum →
+//! field parse. A schema mismatch therefore reports
+//! [`ArtifactError::SchemaVersion`] even when the rest of the file is
+//! unreadable, and any flipped byte elsewhere reports
+//! [`ArtifactError::Corrupt`] before a single field is interpreted.
+
+use super::Section;
+use crate::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig, PsoftInit};
+use std::fmt;
+use std::path::Path;
+
+/// Current artifact schema version. Bump on any layout change.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Maximum encoded string length (labels, section names). Enforced by the
+/// reader; writers must respect it or their artifacts can never be read
+/// back ([`crate::runtime::NativeBackend::to_artifact`] rejects longer
+/// labels up front).
+pub const MAX_STR_LEN: usize = 1 << 16;
+
+/// File magic for adapter artifacts (`psoft export` / serve spill files).
+pub const MAGIC: &[u8; 8] = b"PSOFTAD1";
+
+/// Typed artifact failures. Every rejected load names *why* it was
+/// rejected — wrong-backbone and corrupted artifacts never come back as a
+/// half-loaded adapter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArtifactError {
+    /// The file does not start with the `PSOFTAD1` magic.
+    BadMagic,
+    /// The artifact was written by a different (newer/older) schema.
+    SchemaVersion { found: u32, supported: u32 },
+    /// The trailing checksum does not match the bytes read.
+    Corrupt { stored: u64, computed: u64 },
+    /// The artifact was exported against a different frozen backbone.
+    BackboneMismatch { artifact: u64, backbone: u64 },
+    /// Model-shape snapshot disagrees with the target backbone.
+    ModelMismatch(String),
+    /// A parameter section failed adapter-side validation.
+    State(super::StateError),
+    /// The byte stream ended inside the named field.
+    Truncated { at: &'static str },
+    /// A tag or length field holds an out-of-range value.
+    Invalid { what: &'static str, value: u64 },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::BadMagic => write!(f, "not a PSOFT adapter artifact (bad magic)"),
+            ArtifactError::SchemaVersion { found, supported } => write!(
+                f,
+                "artifact schema version {found} is not supported \
+                 (this build reads version {supported}); re-export the adapter"
+            ),
+            ArtifactError::Corrupt { stored, computed } => write!(
+                f,
+                "artifact checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) \
+                 — the file is corrupted"
+            ),
+            ArtifactError::BackboneMismatch { artifact, backbone } => write!(
+                f,
+                "artifact was exported against backbone {artifact:#018x} but the target \
+                 backbone fingerprints as {backbone:#018x} — refusing to load onto the \
+                 wrong frozen weights"
+            ),
+            ArtifactError::ModelMismatch(msg) => write!(f, "model shape mismatch: {msg}"),
+            ArtifactError::State(e) => write!(f, "parameter section rejected: {e}"),
+            ArtifactError::Truncated { at } => write!(f, "artifact truncated while reading {at}"),
+            ArtifactError::Invalid { what, value } => {
+                write!(f, "artifact holds invalid {what}: {value}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<super::StateError> for ArtifactError {
+    fn from(e: super::StateError) -> ArtifactError {
+        ArtifactError::State(e)
+    }
+}
+
+/// FNV-1a 64-bit hash — used for both the artifact checksum and the
+/// backbone fingerprint. Not cryptographic; it guards against corruption
+/// and accidental mismatches, not adversaries.
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv64 {
+        Fnv64 { h: Fnv64::OFFSET }
+    }
+
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(Fnv64::PRIME);
+        }
+    }
+
+    pub fn update_u32(&mut self, v: u32) {
+        self.update(&v.to_le_bytes());
+    }
+
+    pub fn update_f32s(&mut self, vs: &[f32]) {
+        for v in vs {
+            self.update(&v.to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// Hash a full byte slice in one call.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// One exported adapter: the in-memory form of the binary format above.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdapterArtifact {
+    pub schema_version: u32,
+    /// PEFT method (redundant with `peft.method`; kept as a first-class
+    /// header field so `psoft inspect`-style tooling can read it cheaply).
+    pub method: MethodKind,
+    /// Human-readable label, e.g. "psoft_r46".
+    pub label: String,
+    /// Model shape the adapter was trained in (n_classes may differ from
+    /// the backbone's when the head was resized for a task).
+    pub model: ModelConfig,
+    /// Full PEFT hyperparameter snapshot used at construction.
+    pub peft: PeftConfig,
+    /// Construction seed: `Rng::new(seed)` + the snapshot re-derive every
+    /// frozen adapter tensor on import.
+    pub seed: u64,
+    /// FNV-1a fingerprint of the frozen backbone this adapter belongs to.
+    pub backbone_fp: u64,
+    /// AdamW step count (the `adam.m` / `adam.v` sections restore the
+    /// moments themselves).
+    pub opt_step: u64,
+    /// Named parameter sections in canonical order: per layer, per adapted
+    /// module, the adapter's `state_layout()` pieces (names prefixed
+    /// `l{layer}.{module}.`), then `head.w` / `head.b` (encoder), then
+    /// `adam.m` / `adam.v`.
+    pub sections: Vec<Section>,
+}
+
+fn method_tag(m: MethodKind) -> u32 {
+    MethodKind::ALL.iter().position(|&x| x == m).expect("method in ALL") as u32
+}
+
+fn method_from_tag(t: u32) -> Option<MethodKind> {
+    MethodKind::ALL.get(t as usize).copied()
+}
+
+fn module_tag(m: ModuleKind) -> u8 {
+    ModuleKind::ALL.iter().position(|&x| x == m).expect("module in ALL") as u8
+}
+
+fn module_from_tag(t: u8) -> Option<ModuleKind> {
+    ModuleKind::ALL.get(t as usize).copied()
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, at: &'static str) -> Result<&'a [u8], ArtifactError> {
+        if self.i + n > self.b.len() {
+            return Err(ArtifactError::Truncated { at });
+        }
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, at: &'static str) -> Result<u8, ArtifactError> {
+        Ok(self.take(1, at)?[0])
+    }
+
+    fn u32(&mut self, at: &'static str) -> Result<u32, ArtifactError> {
+        let b = self.take(4, at)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, at: &'static str) -> Result<u64, ArtifactError> {
+        let b = self.take(8, at)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self, at: &'static str) -> Result<f64, ArtifactError> {
+        Ok(f64::from_bits(self.u64(at)?))
+    }
+
+    fn str(&mut self, at: &'static str) -> Result<String, ArtifactError> {
+        let n = self.u32(at)? as usize;
+        if n > MAX_STR_LEN {
+            return Err(ArtifactError::Invalid { what: "string length", value: n as u64 });
+        }
+        let bytes = self.take(n, at)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ArtifactError::Invalid { what: "utf-8 string", value: n as u64 })
+    }
+
+    fn f32s(&mut self, n: usize, at: &'static str) -> Result<Vec<f32>, ArtifactError> {
+        let bytes = self.take(n * 4, at)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+}
+
+impl AdapterArtifact {
+    /// Serialize to the schema-1 byte layout (including the trailing
+    /// checksum).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(MAGIC);
+        w.u32(self.schema_version);
+        w.u32(method_tag(self.method));
+        let m = &self.model;
+        w.u32(match m.arch {
+            Arch::Encoder => 0,
+            Arch::Decoder => 1,
+        });
+        w.u32(m.vocab_size as u32);
+        w.u32(m.d_model as u32);
+        w.u32(m.n_layers as u32);
+        w.u32(m.n_heads as u32);
+        w.u32(m.d_ff as u32);
+        w.u32(m.max_seq as u32);
+        w.u32(m.n_classes as u32);
+        let p = &self.peft;
+        w.u32(p.rank as u32);
+        w.u32(p.oft_block_size as u32);
+        w.u32(p.boft_m as u32);
+        w.u32(p.boft_b as u32);
+        w.u32(p.neumann_terms as u32);
+        let mut flags = 0u8;
+        if p.use_alpha {
+            flags |= 1;
+        }
+        if p.use_beta {
+            flags |= 2;
+        }
+        w.u8(flags);
+        w.u8(match p.psoft_init {
+            PsoftInit::AOrth => 0,
+            PsoftInit::BOrth => 1,
+            PsoftInit::Symmetric => 2,
+        });
+        w.u8(p.svd_n_iter.is_some() as u8);
+        w.u8(0);
+        w.u32(p.svd_n_iter.unwrap_or(0) as u32);
+        w.f64(p.gamma_orth);
+        w.u32(p.modules.len() as u32);
+        for &mk in &p.modules {
+            w.u8(module_tag(mk));
+        }
+        w.u64(self.seed);
+        w.u64(self.backbone_fp);
+        w.u64(self.opt_step);
+        w.str(&self.label);
+        w.u32(self.sections.len() as u32);
+        for s in &self.sections {
+            w.str(&s.name);
+            w.u32(s.data.len() as u32);
+            w.f32s(&s.data);
+        }
+        let checksum = fnv64(&w.buf);
+        w.u64(checksum);
+        w.buf
+    }
+
+    /// Parse and validate a schema-1 byte stream. Validation order:
+    /// magic → schema version → checksum → fields.
+    pub fn from_bytes(bytes: &[u8]) -> Result<AdapterArtifact, ArtifactError> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err(ArtifactError::Truncated { at: "header" });
+        }
+        if &bytes[..8] != MAGIC {
+            return Err(ArtifactError::BadMagic);
+        }
+        let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        if version != SCHEMA_VERSION {
+            return Err(ArtifactError::SchemaVersion { found: version, supported: SCHEMA_VERSION });
+        }
+        let body_end = bytes.len() - 8;
+        let stored = {
+            let t = &bytes[body_end..];
+            u64::from_le_bytes([t[0], t[1], t[2], t[3], t[4], t[5], t[6], t[7]])
+        };
+        let computed = fnv64(&bytes[..body_end]);
+        if stored != computed {
+            return Err(ArtifactError::Corrupt { stored, computed });
+        }
+
+        let mut r = Reader { b: &bytes[..body_end], i: 12 };
+        let method_tag_raw = r.u32("method")?;
+        let method = method_from_tag(method_tag_raw).ok_or(ArtifactError::Invalid {
+            what: "method tag",
+            value: method_tag_raw as u64,
+        })?;
+        let arch = match r.u32("arch")? {
+            0 => Arch::Encoder,
+            1 => Arch::Decoder,
+            other => {
+                return Err(ArtifactError::Invalid { what: "arch tag", value: other as u64 })
+            }
+        };
+        let model = ModelConfig {
+            arch,
+            vocab_size: r.u32("vocab_size")? as usize,
+            d_model: r.u32("d_model")? as usize,
+            n_layers: r.u32("n_layers")? as usize,
+            n_heads: r.u32("n_heads")? as usize,
+            d_ff: r.u32("d_ff")? as usize,
+            max_seq: r.u32("max_seq")? as usize,
+            n_classes: r.u32("n_classes")? as usize,
+        };
+        let rank = r.u32("rank")? as usize;
+        let oft_block_size = r.u32("oft_block_size")? as usize;
+        let boft_m = r.u32("boft_m")? as usize;
+        let boft_b = r.u32("boft_b")? as usize;
+        let neumann_terms = r.u32("neumann_terms")? as usize;
+        let flags = r.u8("flags")?;
+        let psoft_init = match r.u8("psoft_init")? {
+            0 => PsoftInit::AOrth,
+            1 => PsoftInit::BOrth,
+            2 => PsoftInit::Symmetric,
+            other => {
+                return Err(ArtifactError::Invalid { what: "psoft_init tag", value: other as u64 })
+            }
+        };
+        let svd_present = r.u8("svd flag")? != 0;
+        let _reserved = r.u8("reserved")?;
+        let svd_val = r.u32("svd_n_iter")? as usize;
+        let gamma_orth = r.f64("gamma_orth")?;
+        let n_modules = r.u32("n_modules")? as usize;
+        if n_modules > ModuleKind::ALL.len() {
+            return Err(ArtifactError::Invalid { what: "module count", value: n_modules as u64 });
+        }
+        let mut modules = Vec::with_capacity(n_modules);
+        for _ in 0..n_modules {
+            let t = r.u8("module tag")?;
+            modules.push(
+                module_from_tag(t)
+                    .ok_or(ArtifactError::Invalid { what: "module tag", value: t as u64 })?,
+            );
+        }
+        let peft = PeftConfig {
+            method,
+            rank,
+            oft_block_size,
+            boft_m,
+            boft_b,
+            modules,
+            neumann_terms,
+            use_alpha: flags & 1 != 0,
+            use_beta: flags & 2 != 0,
+            psoft_init,
+            gamma_orth,
+            svd_n_iter: if svd_present { Some(svd_val) } else { None },
+        };
+        let seed = r.u64("seed")?;
+        let backbone_fp = r.u64("backbone fingerprint")?;
+        let opt_step = r.u64("opt_step")?;
+        let label = r.str("label")?;
+        let n_sections = r.u32("section count")? as usize;
+        if n_sections > 1 << 24 {
+            return Err(ArtifactError::Invalid { what: "section count", value: n_sections as u64 });
+        }
+        let mut sections = Vec::with_capacity(n_sections);
+        for _ in 0..n_sections {
+            let name = r.str("section name")?;
+            let n = r.u32("section length")? as usize;
+            let data = r.f32s(n, "section data")?;
+            sections.push(Section { name, data });
+        }
+        if r.i != r.b.len() {
+            return Err(ArtifactError::Invalid {
+                what: "trailing bytes",
+                value: (r.b.len() - r.i) as u64,
+            });
+        }
+        Ok(AdapterArtifact {
+            schema_version: version,
+            method,
+            label,
+            model,
+            peft,
+            seed,
+            backbone_fp,
+            opt_step,
+            sections,
+        })
+    }
+
+    /// Write to disk; returns the number of bytes written.
+    pub fn write_to(&self, path: &Path) -> anyhow::Result<u64> {
+        let bytes = self.to_bytes();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, &bytes)
+            .map_err(|e| anyhow::anyhow!("writing artifact {}: {e}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read and fully validate an artifact file.
+    pub fn read_from(path: &Path) -> anyhow::Result<AdapterArtifact> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading artifact {}: {e}", path.display()))?;
+        Ok(AdapterArtifact::from_bytes(&bytes)?)
+    }
+
+    /// Total floats stored across *adapter* sections (excludes the head
+    /// and optimizer moments) — the Table 8-comparable payload.
+    pub fn adapter_param_floats(&self) -> usize {
+        self.sections
+            .iter()
+            .filter(|s| !s.name.starts_with("head.") && !s.name.starts_with("adam."))
+            .map(|s| s.data.len())
+            .sum()
+    }
+
+    /// Floats across every section (adapters + head + optimizer moments).
+    pub fn total_floats(&self) -> usize {
+        self.sections.iter().map(|s| s.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_artifact() -> AdapterArtifact {
+        let model = ModelConfig {
+            arch: Arch::Encoder,
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 10,
+            n_classes: 2,
+        };
+        let mut peft = PeftConfig::new(MethodKind::Psoft, 4);
+        peft.modules = vec![ModuleKind::Q, ModuleKind::V];
+        peft.svd_n_iter = Some(2);
+        AdapterArtifact {
+            schema_version: SCHEMA_VERSION,
+            method: MethodKind::Psoft,
+            label: "psoft_r4".to_string(),
+            model,
+            peft,
+            seed: 42,
+            backbone_fp: 0xDEAD_BEEF_CAFE_F00D,
+            opt_step: 3,
+            sections: vec![
+                Section::new("l0.Q.theta", vec![0.1, -0.2, f32::NAN, 0.0, 1.5, -9.25]),
+                Section::new("l0.Q.alpha", vec![1.0; 4]),
+                Section::new("l0.Q.beta", Vec::new()),
+                Section::new("head.w", vec![0.5; 8]),
+            ],
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_bit_exact() {
+        let art = tiny_artifact();
+        let bytes = art.to_bytes();
+        let back = AdapterArtifact::from_bytes(&bytes).unwrap();
+        // NaN payloads break PartialEq on the float data; compare bits.
+        assert_eq!(back.label, art.label);
+        assert_eq!(back.model, art.model);
+        assert_eq!(back.peft, art.peft);
+        assert_eq!(back.seed, art.seed);
+        assert_eq!(back.backbone_fp, art.backbone_fp);
+        assert_eq!(back.opt_step, art.opt_step);
+        assert_eq!(back.sections.len(), art.sections.len());
+        for (a, b) in art.sections.iter().zip(&back.sections) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.data.len(), b.data.len());
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_detected_anywhere() {
+        let art = tiny_artifact();
+        let bytes = art.to_bytes();
+        for at in [13usize, bytes.len() / 2, bytes.len() - 9] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            match AdapterArtifact::from_bytes(&bad) {
+                Err(ArtifactError::Corrupt { .. }) => {}
+                other => panic!("byte {at}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn schema_version_checked_before_checksum() {
+        let art = tiny_artifact();
+        let mut bytes = art.to_bytes();
+        bytes[8] = bytes[8].wrapping_add(1); // version — checksum now stale too
+        match AdapterArtifact::from_bytes(&bytes) {
+            Err(ArtifactError::SchemaVersion { found, supported }) => {
+                assert_eq!(found, SCHEMA_VERSION + 1);
+                assert_eq!(supported, SCHEMA_VERSION);
+            }
+            other => panic!("expected SchemaVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_truncation() {
+        let art = tiny_artifact();
+        let bytes = art.to_bytes();
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert_eq!(AdapterArtifact::from_bytes(&bad), Err(ArtifactError::BadMagic));
+        assert_eq!(
+            AdapterArtifact::from_bytes(&bytes[..10]),
+            Err(ArtifactError::Truncated { at: "header" })
+        );
+    }
+
+    #[test]
+    fn param_float_accounting_excludes_head_and_adam() {
+        let mut art = tiny_artifact();
+        art.sections.push(Section::new("adam.m", vec![0.0; 5]));
+        assert_eq!(art.adapter_param_floats(), 6 + 4);
+        assert_eq!(art.total_floats(), 6 + 4 + 8 + 5);
+    }
+
+    #[test]
+    fn fnv64_is_stable() {
+        // Reference values for the FNV-1a 64 test vectors.
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

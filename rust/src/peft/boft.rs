@@ -189,6 +189,16 @@ impl Adapter for BoftAdapter {
         self.recompute_rotations();
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.theta);
+    }
+
+    // All m factors' skew parameters, concatenated — rotations are
+    // re-derived from θ on import (never serialized materialized).
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("theta", self.theta.len())]
+    }
+
     fn materialize(&self) -> Mat {
         // W_eff = R W₀ where x·R is the factor chain: feed the identity.
         let mut ws = Workspace::new();

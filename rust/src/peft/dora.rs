@@ -70,6 +70,19 @@ impl Adapter for DoraAdapter {
         self.m.copy_from_slice(&p[na + nb..]);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        let na = self.a.data.len();
+        let nb = self.b.data.len();
+        assert_eq!(out.len(), self.num_params(), "params_into buffer length");
+        out[..na].copy_from_slice(&self.a.data);
+        out[na..na + nb].copy_from_slice(&self.b.data);
+        out[na + nb..].copy_from_slice(&self.m);
+    }
+
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("a", self.a.data.len()), ("b", self.b.data.len()), ("m", self.m.len())]
+    }
+
     fn materialize(&self) -> Mat {
         let (v, norms) = self.direction();
         let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();

@@ -37,6 +37,14 @@ impl Adapter for FftAdapter {
         self.w.data.copy_from_slice(p);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.w.data);
+    }
+
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("w", self.w.data.len())]
+    }
+
     fn materialize(&self) -> Mat {
         self.w.clone()
     }

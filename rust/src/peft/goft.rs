@@ -135,6 +135,16 @@ impl Adapter for GoftAdapter {
         self.theta.copy_from_slice(p);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.theta);
+    }
+
+    // Givens angles (GOFT) or per-pair 2×2 entries (qGOFT) — the rotation
+    // chain is re-applied from these on import, never stored materialized.
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("theta", self.theta.len())]
+    }
+
     fn materialize(&self) -> Mat {
         let mut ws = Workspace::new();
         let eye = Mat::eye(self.w0.rows);

@@ -68,6 +68,17 @@ impl Adapter for LoraAdapter {
         self.b.data.copy_from_slice(&p[na..]);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        let na = self.a.data.len();
+        assert_eq!(out.len(), self.num_params(), "params_into buffer length");
+        out[..na].copy_from_slice(&self.a.data);
+        out[na..].copy_from_slice(&self.b.data);
+    }
+
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("a", self.a.data.len()), ("b", self.b.data.len())]
+    }
+
     fn materialize(&self) -> Mat {
         let mut w = self.w0.clone();
         matmul_acc(&self.a, &self.b, &mut w);

@@ -71,6 +71,14 @@ impl Adapter for LoraXsAdapter {
         self.r_mat.data.copy_from_slice(p);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.r_mat.data);
+    }
+
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("r", self.r_mat.data.len())]
+    }
+
     fn materialize(&self) -> Mat {
         let ar = matmul(&self.a, &self.r_mat);
         let mut w = self.w0.clone();

@@ -11,6 +11,7 @@
 //! suite), and reports parameter counts and the activation floats it must
 //! retain for backprop (the Appendix E accounting).
 
+pub mod artifact;
 pub mod boft;
 pub mod decomp;
 pub mod dora;
@@ -94,6 +95,52 @@ impl RotScratch {
     }
 }
 
+/// One named block of adapter state inside an
+/// [`AdapterArtifact`](artifact::AdapterArtifact). Sections carry the
+/// trainable state in `params()` order, split along the method's
+/// [`Adapter::state_layout`]; the artifact layer prefixes names with the
+/// owning layer/module (`l0.Q.theta`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub data: Vec<f32>,
+}
+
+impl Section {
+    pub fn new(name: &str, data: Vec<f32>) -> Section {
+        Section { name: name.to_string(), data }
+    }
+}
+
+/// Validation failures when importing state sections into an adapter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StateError {
+    /// Section name (suffix) does not match the method's layout.
+    SectionName { expected: String, found: String },
+    /// Section holds the wrong number of floats.
+    SectionLen { name: String, expected: usize, found: usize },
+    /// Wrong number of sections for this adapter.
+    SectionCount { expected: usize, found: usize },
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::SectionName { expected, found } => {
+                write!(f, "expected section {expected:?}, found {found:?}")
+            }
+            StateError::SectionLen { name, expected, found } => {
+                write!(f, "section {name:?} holds {found} floats, expected {expected}")
+            }
+            StateError::SectionCount { expected, found } => {
+                write!(f, "adapter expects {expected} sections, artifact provides {found}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
+
 /// Gradients produced by one adapter backward pass.
 pub struct AdapterGrads {
     /// dL/dθ for the adapter's trainable parameters, flattened in the same
@@ -118,6 +165,78 @@ pub trait Adapter: Send {
 
     /// Load trainable parameters from a flat slice.
     fn set_params(&mut self, p: &[f32]);
+
+    /// Flatten trainable parameters into a caller-provided buffer of
+    /// length [`Adapter::num_params`] (same order as [`Adapter::params`])
+    /// without allocating — the artifact/checkpoint hot path. The default
+    /// delegates to `params()`; every in-tree method overrides it with
+    /// direct slice copies.
+    fn params_into(&self, out: &mut [f32]) {
+        let p = self.params();
+        assert_eq!(out.len(), p.len(), "params_into buffer length");
+        out.copy_from_slice(&p);
+    }
+
+    /// Named partition of the flat parameter vector, in `params()` order:
+    /// `(section name, float count)` pairs that concatenate to exactly
+    /// [`Adapter::num_params`]. This is the method's artifact schema —
+    /// rotation methods expose their skew parameters θ here (never a
+    /// materialized rotation), so export → import re-runs the exact
+    /// Cayley–Neumann refresh.
+    fn state_layout(&self) -> Vec<(&'static str, usize)>;
+
+    /// Export trainable state as named [`Section`]s following
+    /// [`Adapter::state_layout`]. Uses [`Adapter::params_into`] so the
+    /// only allocations are the section buffers themselves.
+    fn export_state(&self) -> Vec<Section> {
+        let n = self.num_params();
+        let mut flat = vec![0.0f32; n];
+        self.params_into(&mut flat);
+        let layout = self.state_layout();
+        let mut out = Vec::with_capacity(layout.len());
+        let mut off = 0;
+        for (name, len) in layout {
+            out.push(Section::new(name, flat[off..off + len].to_vec()));
+            off += len;
+        }
+        assert_eq!(off, n, "state_layout must partition the parameter vector");
+        out
+    }
+
+    /// Validate `sections` against [`Adapter::state_layout`] (names may be
+    /// prefixed, e.g. `l0.Q.theta`; the suffix after the last `.` must
+    /// match) and load them. Rotation methods rebuild their cached
+    /// rotations from the imported θ via `set_params`, so a round-trip is
+    /// bit-exact on `forward` and `materialize`.
+    fn import_state(&mut self, sections: &[Section]) -> Result<(), StateError> {
+        let layout = self.state_layout();
+        if sections.len() != layout.len() {
+            return Err(StateError::SectionCount {
+                expected: layout.len(),
+                found: sections.len(),
+            });
+        }
+        let mut flat = Vec::with_capacity(self.num_params());
+        for ((name, len), s) in layout.iter().zip(sections) {
+            let suffix = s.name.rsplit('.').next().unwrap_or(s.name.as_str());
+            if suffix != *name {
+                return Err(StateError::SectionName {
+                    expected: (*name).to_string(),
+                    found: s.name.clone(),
+                });
+            }
+            if s.data.len() != *len {
+                return Err(StateError::SectionLen {
+                    name: s.name.clone(),
+                    expected: *len,
+                    found: s.data.len(),
+                });
+            }
+            flat.extend_from_slice(&s.data);
+        }
+        self.set_params(&flat);
+        Ok(())
+    }
 
     /// Effective weight `W_eff ∈ R^{d×n}` with adapters merged — used at
     /// deployment/merge time and by tests, never on the training hot path.
@@ -251,6 +370,74 @@ pub fn closed_form_params(cfg: &PeftConfig, d: usize, n: usize) -> usize {
                 p += r;
             }
             p
+        }
+    }
+}
+
+#[cfg(test)]
+mod state_tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn configs() -> Vec<PeftConfig> {
+        MethodKind::ALL
+            .iter()
+            .map(|&m| {
+                let mut c = PeftConfig::new(m, 4);
+                c.oft_block_size = 4;
+                c.boft_b = 4;
+                c.boft_m = 2;
+                c
+            })
+            .collect()
+    }
+
+    /// For every method: `state_layout` partitions the parameter vector,
+    /// `params_into` matches `params()` without allocation tricks, and
+    /// `export_state` → `import_state` restores the state exactly.
+    #[test]
+    fn state_layout_partitions_and_roundtrips_for_all_methods() {
+        let mut rng = Rng::new(991);
+        let w = Mat::randn(16, 16, 0.2, &mut rng);
+        for cfg in configs() {
+            let mut a = build_adapter(&cfg, &w, &mut rng);
+            let layout = a.state_layout();
+            let total: usize = layout.iter().map(|&(_, n)| n).sum();
+            assert_eq!(total, a.num_params(), "{:?}: layout covers params", cfg.method);
+
+            let mut p = a.params();
+            for v in p.iter_mut() {
+                *v += 0.01;
+            }
+            a.set_params(&p);
+            let mut buf = vec![0.0f32; a.num_params()];
+            a.params_into(&mut buf);
+            assert_eq!(buf, a.params(), "{:?}: params_into == params", cfg.method);
+
+            let sections = a.export_state();
+            assert_eq!(sections.len(), layout.len(), "{:?}", cfg.method);
+            let zeros = vec![0.0f32; a.num_params()];
+            a.set_params(&zeros);
+            a.import_state(&sections).unwrap();
+            assert_eq!(a.params(), p, "{:?}: export/import round-trip", cfg.method);
+
+            // Mangled inputs are rejected with typed errors.
+            let mut wrong_name = sections.clone();
+            wrong_name[0].name = "bogus".to_string();
+            assert!(matches!(
+                a.import_state(&wrong_name),
+                Err(StateError::SectionName { .. })
+            ));
+            let mut wrong_len = sections.clone();
+            wrong_len[0].data.push(1.0);
+            assert!(matches!(
+                a.import_state(&wrong_len),
+                Err(StateError::SectionLen { .. })
+            ));
+            assert!(matches!(
+                a.import_state(&sections[..sections.len() - 1]),
+                Err(StateError::SectionCount { .. })
+            ));
         }
     }
 }

@@ -113,6 +113,16 @@ impl Adapter for OftAdapter {
         self.recompute_rotations();
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.theta);
+    }
+
+    // Skew parameters only — the per-block rotations are rebuilt from θ on
+    // import, keeping the Cayley refresh exact across a round-trip.
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("theta", self.theta.len())]
+    }
+
     fn materialize(&self) -> Mat {
         // W_eff = Rᵀ? No: y = (x R) W₀ = x (R W₀) ⇒ W_eff = R W₀ with our
         // row-vector x·R ≡ (Rᵀ x)ᵀ; consistency with forward is what tests

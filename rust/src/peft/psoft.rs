@@ -133,6 +133,21 @@ impl Adapter for PsoftAdapter {
         self.recompute_rotation();
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        let nt = self.theta.len();
+        let na = self.alpha.len();
+        assert_eq!(out.len(), self.num_params(), "params_into buffer length");
+        out[..nt].copy_from_slice(&self.theta);
+        out[nt..nt + na].copy_from_slice(&self.alpha);
+        out[nt + na..].copy_from_slice(&self.beta);
+    }
+
+    // Artifacts carry θ (plus the tunable vectors), never the materialized
+    // rotation: import re-runs the Cayley–Neumann refresh bit-exactly.
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("theta", self.theta.len()), ("alpha", self.alpha.len()), ("beta", self.beta.len())]
+    }
+
     fn materialize(&self) -> Mat {
         // W_final = A'·C·B' + W_res (Algorithm 1, line 12).
         let ac = matmul(&self.a, &self.transform());

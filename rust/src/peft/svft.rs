@@ -58,6 +58,14 @@ impl Adapter for SvftAdapter {
         self.m.copy_from_slice(p);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.m);
+    }
+
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("m", self.m.len())]
+    }
+
     fn materialize(&self) -> Mat {
         let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
         let us = self.u.scale_cols(&scale);

@@ -63,6 +63,16 @@ impl Adapter for VeraAdapter {
         self.b_vec.copy_from_slice(&p[self.rank..]);
     }
 
+    fn params_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.num_params(), "params_into buffer length");
+        out[..self.rank].copy_from_slice(&self.d_vec);
+        out[self.rank..].copy_from_slice(&self.b_vec);
+    }
+
+    fn state_layout(&self) -> Vec<(&'static str, usize)> {
+        vec![("d", self.d_vec.len()), ("b", self.b_vec.len())]
+    }
+
     fn materialize(&self) -> Mat {
         let ad = self.a_f.scale_cols(&self.d_vec);
         let adb = matmul(&ad, &self.b_f);

@@ -21,10 +21,12 @@
 pub mod pjrt;
 pub mod serve;
 
-use crate::config::PeftConfig;
+use crate::config::{Arch, PeftConfig};
 use crate::linalg::Workspace;
 use crate::model::native::{self, Batch, StepBuffers, StepOutput};
-use crate::model::{Backbone, NativeModel};
+use crate::model::{Backbone, ModuleOp, NativeModel};
+use crate::peft::artifact::{AdapterArtifact, ArtifactError, SCHEMA_VERSION};
+use crate::peft::{Section, StateError};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::Arc;
@@ -85,6 +87,13 @@ pub struct NativeBackend {
     pub opt: AdamState,
     /// Reusable activation/gradient buffers (keyed by batch shape).
     pub bufs: StepBuffers,
+    /// Seed the model was constructed from (`Rng::new(seed)` +
+    /// `NativeModel::from_backbone` re-derives all frozen adapter
+    /// tensors). Recorded into exported artifacts; `None` for backends
+    /// built through [`NativeBackend::new`] without a known seed — such
+    /// backends cannot be exported (their frozen tensors could not be
+    /// reconstructed), and the serve layer never spills them.
+    pub build_seed: Option<u64>,
     /// Persistent flat parameter vector, kept in sync with the model.
     params: Vec<f32>,
     beta1: f64,
@@ -100,11 +109,30 @@ impl NativeBackend {
             model,
             opt: AdamState::new(n),
             bufs: StepBuffers::new(),
+            build_seed: None,
             params,
             beta1: 0.9,
             beta2: 0.999,
             eps: 1e-8,
         }
+    }
+
+    /// [`NativeBackend::new`] with the construction seed recorded, so the
+    /// backend can be exported as a reconstructible artifact. The caller
+    /// must have built `model` via `NativeModel::from_backbone` (plus an
+    /// optional `set_head_classes`) on a fresh `Rng::new(seed)` — the
+    /// sequence [`NativeBackend::from_artifact`] replays.
+    pub fn with_seed(model: NativeModel, seed: u64) -> Self {
+        let mut be = NativeBackend::new(model);
+        be.build_seed = Some(seed);
+        be
+    }
+
+    /// Whether this backend can be round-tripped through an artifact:
+    /// its construction seed is known and it is not a pretraining-mode
+    /// model. The serve layer only spills exportable backends.
+    pub fn artifact_exportable(&self) -> bool {
+        self.build_seed.is_some() && !self.model.train_embeddings
     }
 
     /// Build a backend for one adapter on a shared frozen backbone (the
@@ -115,7 +143,202 @@ impl NativeBackend {
     /// results are bit-comparable to a standalone run.
     pub fn for_adapter(backbone: &Arc<Backbone>, peft: &PeftConfig, seed: u64) -> NativeBackend {
         let mut rng = Rng::new(seed);
-        NativeBackend::new(NativeModel::from_backbone(backbone, peft, &mut rng))
+        NativeBackend::with_seed(NativeModel::from_backbone(backbone, peft, &mut rng), seed)
+    }
+
+    /// Snapshot this backend as a versioned, self-describing artifact (see
+    /// [`crate::peft::artifact`]): per-module named parameter sections in
+    /// interchange order (via the allocation-lean `params_into` path),
+    /// then the encoder head, then the AdamW moments. Frozen tensors are
+    /// *not* stored — they re-derive from `build_seed` + the config
+    /// snapshot on a fingerprint-matching backbone, which is what keeps
+    /// artifacts at Table 8 size.
+    ///
+    /// Errors when the backend is not [`NativeBackend::artifact_exportable`]:
+    /// without a recorded construction seed the frozen tensors could not
+    /// be reconstructed on import (the artifact would silently load wrong
+    /// weights), and pretraining-mode models have trainable embeddings
+    /// with no artifact section.
+    pub fn to_artifact(&self, label: &str, backbone: &Backbone) -> Result<AdapterArtifact> {
+        if self.model.train_embeddings {
+            anyhow::bail!(
+                "adapter artifacts cover adapter+head state only, not pretraining-mode models"
+            );
+        }
+        let Some(seed) = self.build_seed else {
+            anyhow::bail!(
+                "backend has no recorded construction seed (built via NativeBackend::new); \
+                 use with_seed/for_adapter so the artifact can re-derive frozen tensors"
+            );
+        };
+        if label.len() > crate::peft::artifact::MAX_STR_LEN {
+            // The reader rejects longer strings — exporting one would
+            // produce an artifact that can never be loaded back.
+            anyhow::bail!(
+                "label is {} bytes; artifact strings are capped at {} bytes",
+                label.len(),
+                crate::peft::artifact::MAX_STR_LEN
+            );
+        }
+        let mut sections = Vec::new();
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            for (mk, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    for mut s in a.export_state() {
+                        s.name = format!("l{l}.{}.{}", mk.name(), s.name);
+                        sections.push(s);
+                    }
+                }
+            }
+        }
+        if self.model.cfg.arch == Arch::Encoder {
+            sections.push(Section::new("head.w", self.model.head_w.data.clone()));
+            sections.push(Section::new("head.b", self.model.head_b.clone()));
+        }
+        sections.push(Section::new("adam.m", self.opt.m.clone()));
+        sections.push(Section::new("adam.v", self.opt.v.clone()));
+        Ok(AdapterArtifact {
+            schema_version: SCHEMA_VERSION,
+            method: self.model.peft.method,
+            label: label.to_string(),
+            model: self.model.cfg.clone(),
+            peft: self.model.peft.clone(),
+            seed,
+            backbone_fp: backbone.fingerprint(),
+            opt_step: self.opt.step as u64,
+            sections,
+        })
+    }
+
+    /// Exact encoded size (bytes) of the artifact [`NativeBackend::to_artifact`]
+    /// would produce, computed arithmetically from the section layout —
+    /// no parameter copies or serialization. Mirrors the schema-1 writer
+    /// (`tests/artifact.rs` pins the two against each other, so layout
+    /// drift fails tests rather than silently skewing reports).
+    pub fn artifact_encoded_len(&self, label: &str) -> usize {
+        // Fixed header/trailer: magic 8, version 4, method 4, arch 4,
+        // model ints 28, peft ints 20, flag bytes 4, svd 4, gamma 8,
+        // n_modules 4, seed+fp+opt_step 24, label len-prefix 4,
+        // n_sections 4, checksum 8 = 128; plus one byte per module tag
+        // and the label bytes. Each section adds 8 (name + count
+        // prefixes) + name bytes + 4 bytes per float.
+        let mut n = 128 + self.model.peft.modules.len() + label.len();
+        let section = |name_len: usize, floats: usize| 8 + name_len + 4 * floats;
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            // "l{l}.{module}." prefix length.
+            let digits = {
+                let mut d = 1;
+                let mut v = l;
+                while v >= 10 {
+                    v /= 10;
+                    d += 1;
+                }
+                d
+            };
+            for (mk, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    let prefix = 1 + digits + 1 + mk.name().len() + 1;
+                    for (name, len) in a.state_layout() {
+                        n += section(prefix + name.len(), len);
+                    }
+                }
+            }
+        }
+        if self.model.cfg.arch == Arch::Encoder {
+            n += section("head.w".len(), self.model.head_w.data.len());
+            n += section("head.b".len(), self.model.head_b.len());
+        }
+        n += section("adam.m".len(), self.opt.m.len());
+        n += section("adam.v".len(), self.opt.v.len());
+        n
+    }
+
+    /// Reconstruct a backend from an artifact on a *matching* backbone:
+    /// validates the backbone fingerprint and model shape, re-derives the
+    /// frozen adapter tensors from the recorded seed, then imports every
+    /// parameter section (rotation methods re-run their Cayley–Neumann
+    /// refresh from the imported θ) and the optimizer moments. The result
+    /// is bit-identical to the exported backend on `forward`,
+    /// `materialize`, and subsequent train steps.
+    pub fn from_artifact(
+        backbone: &Backbone,
+        art: &AdapterArtifact,
+    ) -> std::result::Result<NativeBackend, ArtifactError> {
+        let fp = backbone.fingerprint();
+        if fp != art.backbone_fp {
+            return Err(ArtifactError::BackboneMismatch {
+                artifact: art.backbone_fp,
+                backbone: fp,
+            });
+        }
+        // The head may have been resized for a task; everything else must
+        // match the backbone exactly.
+        let mut want = art.model.clone();
+        want.n_classes = backbone.cfg.n_classes;
+        if want != backbone.cfg {
+            return Err(ArtifactError::ModelMismatch(format!(
+                "artifact model {:?} vs backbone {:?}",
+                art.model, backbone.cfg
+            )));
+        }
+        // Replays the exact construction sequence of the export side:
+        // from_backbone (frozen tensors from per-module child streams),
+        // then the optional head resize on the same parent rng.
+        let mut rng = Rng::new(art.seed);
+        let mut model = NativeModel::from_backbone(backbone, &art.peft, &mut rng);
+        if model.cfg.arch == Arch::Encoder && art.model.n_classes != model.cfg.n_classes {
+            model.set_head_classes(art.model.n_classes, &mut rng);
+        }
+
+        let mut idx = 0usize;
+        let take = |idx: &mut usize, n: usize| -> std::result::Result<usize, ArtifactError> {
+            let start = *idx;
+            if start + n > art.sections.len() {
+                return Err(ArtifactError::State(StateError::SectionCount {
+                    expected: start + n,
+                    found: art.sections.len(),
+                }));
+            }
+            *idx += n;
+            Ok(start)
+        };
+        for (l, layer) in model.layers.iter_mut().enumerate() {
+            for (mk, op) in layer.modules.iter_mut() {
+                if let ModuleOp::Adapted(a) = op {
+                    let n = a.state_layout().len();
+                    let start = take(&mut idx, n)?;
+                    let secs = &art.sections[start..start + n];
+                    let prefix = format!("l{l}.{}.", mk.name());
+                    for s in secs {
+                        if !s.name.starts_with(&prefix) {
+                            return Err(ArtifactError::State(StateError::SectionName {
+                                expected: format!("{prefix}*"),
+                                found: s.name.clone(),
+                            }));
+                        }
+                    }
+                    a.import_state(secs)?;
+                }
+            }
+        }
+        if model.cfg.arch == Arch::Encoder {
+            let start = take(&mut idx, 2)?;
+            copy_named(&art.sections[start], "head.w", &mut model.head_w.data)?;
+            copy_named(&art.sections[start + 1], "head.b", &mut model.head_b)?;
+        }
+        let start = take(&mut idx, 2)?;
+        if idx != art.sections.len() {
+            return Err(ArtifactError::State(StateError::SectionCount {
+                expected: idx,
+                found: art.sections.len(),
+            }));
+        }
+        let mut be = NativeBackend::new(model);
+        copy_named(&art.sections[start], "adam.m", &mut be.opt.m)?;
+        copy_named(&art.sections[start + 1], "adam.v", &mut be.opt.v)?;
+        be.opt.step = art.opt_step as usize;
+        be.build_seed = Some(art.seed);
+        Ok(be)
     }
 
     /// The full optimizer step without constructing a `StepOutput`:
@@ -157,6 +380,30 @@ impl NativeBackend {
         self.model.set_trainable_flat(&self.params);
         (loss, metric)
     }
+}
+
+/// Copy one artifact section into a same-length destination after
+/// validating its name — shared by the head/optimizer import paths.
+fn copy_named(
+    s: &Section,
+    name: &str,
+    dst: &mut [f32],
+) -> std::result::Result<(), ArtifactError> {
+    if s.name != name {
+        return Err(ArtifactError::State(StateError::SectionName {
+            expected: name.to_string(),
+            found: s.name.clone(),
+        }));
+    }
+    if s.data.len() != dst.len() {
+        return Err(ArtifactError::State(StateError::SectionLen {
+            name: s.name.clone(),
+            expected: dst.len(),
+            found: s.data.len(),
+        }));
+    }
+    dst.copy_from_slice(&s.data);
+    Ok(())
 }
 
 impl Backend for NativeBackend {

@@ -43,21 +43,55 @@
 //! # Hot swap
 //!
 //! [`ServeCore::register`]/[`ServeCore::register_backend`] add adapters at
-//! any time; [`ServeCore::evict`] fails that adapter's queued requests
-//! with [`ServeError::Evicted`], waits out its in-flight burst and returns
-//! the owned [`NativeBackend`] (so a fine-tuned adapter can be persisted).
-//! The backbone and every other adapter are untouched throughout.
+//! any time. Eviction semantics are explicit about pending work:
+//! [`ServeCore::evict`] is *strict* — it refuses with
+//! [`ServeError::PendingRequests`] (carrying the queued-request count)
+//! when the adapter's queue is non-empty — while
+//! [`ServeCore::evict_with`] takes an [`EvictMode`]:
+//! [`EvictMode::Reject`] fails queued requests with
+//! [`ServeError::Evicted`] and reports how many it failed,
+//! [`EvictMode::Drain`] stops accepting new submissions, serves out the
+//! queue, then evicts. Both wait out the in-flight burst and return the
+//! owned [`NativeBackend`]. The backbone and every other adapter are
+//! untouched throughout.
+//!
+//! # Persistence: checkpoint, restore, LRU evict-to-disk
+//!
+//! Adapters persist as versioned artifacts ([`crate::peft::artifact`]):
+//!
+//! - [`ServeCore::checkpoint`] snapshots a live adapter to a file without
+//!   disturbing its queue.
+//! - [`ServeCore::restore`] registers an adapter from a previously
+//!   exported artifact (fingerprint-validated against this core's
+//!   backbone).
+//! - With `max_resident = N` ([`ServeOptions::max_resident`], `[serve]
+//!   max_resident` in config), at most N adapters keep their state in
+//!   memory: registering or reloading past the budget **spills** the
+//!   least-recently-used idle adapter (empty queue, not running) to
+//!   `spill_dir` and a later submit against a spilled adapter
+//!   **transparently reloads** it — exact to the bit, including optimizer
+//!   moments, because the artifact round-trip is exact. The budget is
+//!   best-effort: busy or queued adapters are never spilled, so a burst
+//!   across more than N adapters can transiently exceed it. Spill and
+//!   reload run under the scheduler lock (reloads re-derive frozen
+//!   tensors, which may involve an SVD) — resident adapters' *compute*
+//!   proceeds, but dispatch pauses for the duration. The warm resident
+//!   path is unaffected: a submit to a resident adapter only reads one
+//!   `Option` and bumps an LRU counter (`tests/serve_alloc.rs` still
+//!   pins zero allocations).
 
 use crate::config::PeftConfig;
 use crate::linalg::Workspace;
 use crate::model::native::{self, Batch};
-use crate::model::{Backbone, NativeModel};
+use crate::model::Backbone;
+use crate::peft::artifact::AdapterArtifact;
 use crate::peft::AdapterId;
 use crate::runtime::{Hyper, NativeBackend};
-use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::Instant;
 
@@ -80,23 +114,51 @@ pub enum ServeError {
     UnknownAdapter,
     /// The adapter was evicted before the request ran.
     Evicted,
+    /// Strict [`ServeCore::evict`] refused: the adapter still has this
+    /// many queued requests. Use [`ServeCore::evict_with`] to drain or
+    /// reject them explicitly.
+    PendingRequests(usize),
+    /// Spilling or reloading the adapter's on-disk artifact failed.
+    ArtifactFailed,
     /// The core is shutting down.
     ShuttingDown,
 }
 
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let msg = match self {
-            ServeError::QueueFull => "adapter queue at depth cap",
-            ServeError::UnknownAdapter => "unknown adapter id",
-            ServeError::Evicted => "adapter evicted before the request ran",
-            ServeError::ShuttingDown => "serve core shutting down",
-        };
-        f.write_str(msg)
+        match self {
+            ServeError::QueueFull => f.write_str("adapter queue at depth cap"),
+            ServeError::UnknownAdapter => f.write_str("unknown adapter id"),
+            ServeError::Evicted => f.write_str("adapter evicted before the request ran"),
+            ServeError::PendingRequests(n) => write!(
+                f,
+                "adapter has {n} pending request(s); evict_with(Drain) or evict_with(Reject) \
+                 to resolve them explicitly"
+            ),
+            ServeError::ArtifactFailed => {
+                f.write_str("adapter artifact spill/reload failed (see warning log)")
+            }
+            ServeError::ShuttingDown => f.write_str("serve core shutting down"),
+        }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+/// What to do with queued requests when evicting an adapter
+/// ([`ServeCore::evict_with`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictMode {
+    /// Fail every queued request with [`ServeError::Evicted`] immediately;
+    /// the eviction result reports how many were failed.
+    Reject,
+    /// Stop accepting new submissions, serve the queue to completion, then
+    /// evict (reported pending count is therefore 0). Like
+    /// [`ServeCore::drain`], this unpauses a `start_paused` core for the
+    /// whole fleet — the queue could never empty otherwise — and the core
+    /// stays unpaused afterwards.
+    Drain,
+}
 
 /// Per-adapter service counters (cheap plain integers — updated without
 /// allocation on the warm path).
@@ -139,7 +201,7 @@ impl AdapterStats {
 }
 
 /// Scheduler knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Worker threads (≥ 1). Each owns a warm `Workspace`.
     pub workers: usize,
@@ -156,6 +218,13 @@ pub struct ServeOptions {
     /// Start with dispatch paused (tests enqueue a deterministic backlog,
     /// then [`ServeCore::resume`]).
     pub start_paused: bool,
+    /// Resident-adapter budget: past this many in-memory adapters, the
+    /// least-recently-used idle adapter spills to disk and reloads
+    /// transparently on its next submit. 0 disables eviction (default).
+    pub max_resident: usize,
+    /// Directory for spilled artifacts. `None` (default) picks a unique
+    /// per-core directory under the system temp dir.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ServeOptions {
@@ -166,6 +235,8 @@ impl Default for ServeOptions {
             burst: 4,
             trace_cap: 0,
             start_paused: false,
+            max_resident: 0,
+            spill_dir: None,
         }
     }
 }
@@ -178,6 +249,7 @@ impl From<crate::config::ServeConfig> for ServeOptions {
             workers: sc.workers,
             queue_cap: sc.queue_cap,
             burst: sc.burst,
+            max_resident: sc.max_resident,
             ..ServeOptions::default()
         }
     }
@@ -287,11 +359,25 @@ struct Slot {
     id: AdapterId,
     /// Human-readable label (method/rank) for reporting.
     label: String,
-    /// None while a worker runs this adapter or after eviction.
+    /// None while a worker runs this adapter, while the state is spilled
+    /// to disk, or after eviction.
     backend: Option<NativeBackend>,
     queue: VecDeque<Job>,
     busy: bool,
     live: bool,
+    /// Evict-with-drain in progress: new submissions are refused while the
+    /// queue serves out.
+    draining: bool,
+    /// Spilled-to-disk artifact. Invariant for live slots: `spill` is
+    /// `Some` iff the state is neither resident (`backend`) nor running
+    /// (`busy`); spilled slots always have an empty queue (submits reload
+    /// before enqueueing).
+    spill: Option<PathBuf>,
+    /// Logical LRU timestamp (scheduler clock at the last submit).
+    last_used: u64,
+    /// Size of this adapter's artifact encoding, cached at registration
+    /// and refreshed by checkpoint/spill (reporting: bytes-per-adapter).
+    artifact_bytes: u64,
     stats: AdapterStats,
 }
 
@@ -302,6 +388,8 @@ struct ServeState {
     /// Total queued (not yet dispatched) jobs across slots.
     queued: usize,
     next_id: u64,
+    /// Logical clock driving the LRU spill order.
+    clock: u64,
     paused: bool,
     shutdown: bool,
     /// Dispatch-order trace of adapter ids (test instrumentation),
@@ -318,23 +406,37 @@ struct Shared {
     idle: Condvar,
 }
 
+/// Monotonic suffix so concurrent cores in one process get distinct
+/// default spill directories.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
 /// The multi-adapter serving core. See the module docs for the design.
 pub struct ServeCore {
     shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
     opts: ServeOptions,
     backbone: Arc<Backbone>,
+    /// Resolved directory spilled artifacts are written to.
+    spill_dir: PathBuf,
 }
 
 impl ServeCore {
     /// Spin up the worker pool over a shared frozen backbone.
     pub fn new(backbone: Arc<Backbone>, opts: ServeOptions) -> ServeCore {
+        let spill_dir = opts.spill_dir.clone().unwrap_or_else(|| {
+            std::env::temp_dir().join(format!(
+                "psoft_spill_{}_{}",
+                std::process::id(),
+                SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+            ))
+        });
         let shared = Arc::new(Shared {
             state: Mutex::new(ServeState {
                 slots: Vec::new(),
                 rr: 0,
                 queued: 0,
                 next_id: 0,
+                clock: 0,
                 paused: opts.start_paused,
                 shutdown: false,
                 trace: Vec::with_capacity(opts.trace_cap),
@@ -353,7 +455,7 @@ impl ServeCore {
                     .expect("spawn serve worker")
             })
             .collect();
-        ServeCore { shared, workers, opts, backbone }
+        ServeCore { shared, workers, opts, backbone, spill_dir }
     }
 
     /// The shared frozen backbone.
@@ -363,19 +465,33 @@ impl ServeCore {
 
     /// Build and register a fresh adapter on the shared backbone. The
     /// construction (SVD init etc.) runs on the caller's thread; serving
-    /// of already-registered adapters continues meanwhile.
+    /// of already-registered adapters continues meanwhile. The seed is
+    /// recorded on the backend so spill/checkpoint artifacts can re-derive
+    /// the frozen adapter tensors exactly.
     pub fn register(&self, label: &str, peft: &PeftConfig, seed: u64) -> AdapterId {
-        let mut rng = Rng::new(seed);
-        let model = NativeModel::from_backbone(&self.backbone, peft, &mut rng);
-        self.register_backend(label, NativeBackend::new(model))
+        self.register_backend(label, NativeBackend::for_adapter(&self.backbone, peft, seed))
     }
 
     /// Register an externally built backend (e.g. a previously evicted,
-    /// fine-tuned adapter being re-installed). Never touches the backbone.
+    /// fine-tuned adapter being re-installed, or one restored from an
+    /// artifact). Never touches the backbone. Past the resident budget,
+    /// the least-recently-used idle adapter spills to disk. Backends
+    /// without a recorded construction seed (or in pretraining mode) are
+    /// accepted but never spilled — their frozen tensors could not be
+    /// reconstructed on reload.
     pub fn register_backend(&self, label: &str, backend: NativeBackend) -> AdapterId {
+        // Arithmetic size of the artifact encoding (no serialization) —
+        // reporting reads this cached value instead of re-encoding live
+        // state; 0 for non-exportable backends.
+        let artifact_bytes = if backend.artifact_exportable() {
+            backend.artifact_encoded_len(label) as u64
+        } else {
+            0
+        };
         let mut st = self.shared.state.lock().unwrap();
         let id = AdapterId(st.next_id);
         st.next_id += 1;
+        st.clock += 1;
         let slot = Slot {
             id,
             label: label.to_string(),
@@ -383,30 +499,96 @@ impl ServeCore {
             queue: VecDeque::with_capacity(self.opts.queue_cap.max(1)),
             busy: false,
             live: true,
+            draining: false,
+            spill: None,
+            last_used: st.clock,
+            artifact_bytes,
             stats: AdapterStats::default(),
         };
         // Reuse a fully-retired slot (evicted: state taken, not busy) so
         // the table doesn't grow without bound under churn.
-        match st.slots.iter().position(|s| !s.live && !s.busy && s.backend.is_none()) {
-            Some(i) => st.slots[i] = slot,
-            None => st.slots.push(slot),
-        }
+        let idx = match st
+            .slots
+            .iter()
+            .position(|s| !s.live && !s.busy && s.backend.is_none() && s.spill.is_none())
+        {
+            Some(i) => {
+                st.slots[i] = slot;
+                i
+            }
+            None => {
+                st.slots.push(slot);
+                st.slots.len() - 1
+            }
+        };
+        self.spill_down_to(&mut st, self.opts.max_resident, Some(idx));
         drop(st);
         self.shared.work.notify_all();
         id
     }
 
-    /// Remove an adapter: fail its queued requests with
-    /// [`ServeError::Evicted`], wait out its in-flight burst, and return
-    /// the owned per-adapter state. The backbone is untouched.
+    /// Strict eviction: remove an idle adapter, wait out its in-flight
+    /// burst, and return the owned per-adapter state. Refuses with
+    /// [`ServeError::PendingRequests`] (carrying the queued count) when
+    /// requests are still queued — callers must pick a policy via
+    /// [`ServeCore::evict_with`]. The backbone is untouched.
     pub fn evict(&self, id: AdapterId) -> Result<NativeBackend, ServeError> {
+        self.evict_impl(id, true, false).map(|(backend, _)| backend)
+    }
+
+    /// Evict with an explicit policy for queued requests; returns the
+    /// owned state and how many pending requests were failed (always 0
+    /// for [`EvictMode::Drain`]).
+    pub fn evict_with(
+        &self,
+        id: AdapterId,
+        mode: EvictMode,
+    ) -> Result<(NativeBackend, usize), ServeError> {
+        match mode {
+            EvictMode::Reject => self.evict_impl(id, false, false),
+            EvictMode::Drain => self.evict_impl(id, false, true),
+        }
+    }
+
+    fn evict_impl(
+        &self,
+        id: AdapterId,
+        strict: bool,
+        drain: bool,
+    ) -> Result<(NativeBackend, usize), ServeError> {
         let mut st = self.shared.state.lock().unwrap();
         let idx = st
             .slots
             .iter()
             .position(|s| s.live && s.id == id)
             .ok_or(ServeError::UnknownAdapter)?;
+        if st.slots[idx].draining {
+            // Another evict_with(Drain) owns this slot already.
+            return Err(ServeError::Evicted);
+        }
+        if strict && !st.slots[idx].queue.is_empty() {
+            return Err(ServeError::PendingRequests(st.slots[idx].queue.len()));
+        }
+        if drain {
+            // Refuse new submissions, let dispatch serve the queue out.
+            st.slots[idx].draining = true;
+            if st.paused {
+                st.paused = false;
+                self.shared.work.notify_all();
+            }
+            while st.slots[idx].live
+                && st.slots[idx].id == id
+                && (!st.slots[idx].queue.is_empty() || st.slots[idx].busy)
+            {
+                st = self.shared.idle.wait(st).unwrap();
+            }
+            if !st.slots[idx].live || st.slots[idx].id != id {
+                // A concurrent evict retired the slot while we drained.
+                return Err(ServeError::Evicted);
+            }
+        }
         st.slots[idx].live = false;
+        st.slots[idx].draining = false;
         // Unqueue the not-yet-started jobs; their tickets are failed only
         // after the scheduler lock is released (ticket locks are never
         // taken under the state lock — see the worker's completion path).
@@ -418,19 +600,209 @@ impl ServeCore {
         while st.slots[idx].busy {
             st = self.shared.idle.wait(st).unwrap();
         }
-        let backend = st.slots[idx].backend.take().expect("evicted slot retains state");
+        let backend = match st.slots[idx].backend.take() {
+            Some(b) => b,
+            None => {
+                // State is on disk: evicting a spilled adapter hands back
+                // its reloaded (exact) state.
+                let path = st.slots[idx].spill.take().expect("evicted slot retains state");
+                match self.load_artifact(&path) {
+                    Ok(b) => {
+                        let _ = std::fs::remove_file(&path);
+                        b
+                    }
+                    Err(e) => {
+                        crate::warn_log!(
+                            "evict {id}: reload from {} failed: {e:#}",
+                            path.display()
+                        );
+                        // Restore the slot (spill file kept, adapter back
+                        // to live+spilled) so a transient I/O failure is
+                        // retryable instead of stranding the state. We
+                        // held the lock continuously since live=false, so
+                        // nothing observed the intermediate state (a
+                        // spilled slot is never busy and its queue is
+                        // empty — `failed` is empty here).
+                        st.slots[idx].spill = Some(path);
+                        st.slots[idx].live = true;
+                        debug_assert!(failed.is_empty(), "spilled slots have empty queues");
+                        return Err(ServeError::ArtifactFailed);
+                    }
+                }
+            }
+        };
         drop(st);
+        let n_failed = failed.len();
         for job in failed {
             fail(&job.ticket, ServeError::Evicted);
         }
-        Ok(backend)
+        Ok((backend, n_failed))
+    }
+
+    /// Snapshot one live adapter to `path` as a versioned artifact without
+    /// evicting it (its queue is untouched; an in-flight burst is waited
+    /// out first). Returns the bytes written.
+    pub fn checkpoint(&self, id: AdapterId, path: &Path) -> anyhow::Result<u64> {
+        let mut st = self.shared.state.lock().unwrap();
+        let idx = st
+            .slots
+            .iter()
+            .position(|s| s.live && s.id == id)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: no live adapter {id}"))?;
+        loop {
+            if let Some(spill) = st.slots[idx].spill.clone() {
+                // Already on disk in artifact form — copy verbatim. The
+                // copy runs under the scheduler lock so a concurrent
+                // submit's reload (which deletes the spill file) cannot
+                // race it; spill files are artifact-sized (small).
+                if let Some(parent) = path.parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent)?;
+                    }
+                }
+                let bytes = std::fs::copy(&spill, path)?;
+                return Ok(bytes);
+            }
+            if !st.slots[idx].busy {
+                break;
+            }
+            st = self.shared.idle.wait(st).unwrap();
+            if !st.slots[idx].live || st.slots[idx].id != id {
+                anyhow::bail!("adapter {id} was evicted during checkpoint");
+            }
+        }
+        // Borrow the state exclusively (marked busy so dispatch and evict
+        // wait), serialize outside the scheduler lock, put it back.
+        let backend = st.slots[idx].backend.take().expect("idle live slot holds its backend");
+        st.slots[idx].busy = true;
+        let label = st.slots[idx].label.clone();
+        drop(st);
+        let result =
+            backend.to_artifact(&label, &self.backbone).and_then(|art| art.write_to(path));
+        let mut st = self.shared.state.lock().unwrap();
+        st.slots[idx].backend = Some(backend);
+        st.slots[idx].busy = false;
+        if let Ok(bytes) = &result {
+            st.slots[idx].artifact_bytes = *bytes;
+        }
+        drop(st);
+        self.shared.work.notify_all();
+        self.shared.idle.notify_all();
+        result
+    }
+
+    /// Register an adapter from an artifact file exported by
+    /// [`ServeCore::checkpoint`] / `psoft export` — validated against this
+    /// core's backbone fingerprint before anything is installed.
+    pub fn restore(&self, label: &str, path: &Path) -> anyhow::Result<AdapterId> {
+        let backend = self.load_artifact(path)?;
+        Ok(self.register_backend(label, backend))
+    }
+
+    /// Read + validate + reconstruct an artifact on this core's backbone.
+    fn load_artifact(&self, path: &Path) -> anyhow::Result<NativeBackend> {
+        let art = AdapterArtifact::read_from(path)?;
+        Ok(NativeBackend::from_artifact(&self.backbone, &art)?)
+    }
+
+    /// Spill the least-recently-used idle adapters until at most `budget`
+    /// are resident. Best-effort: adapters that are busy, draining, or
+    /// have queued work are never spilled, so the count can transiently
+    /// stay above budget. No-op when `max_resident` is 0 (unlimited).
+    fn spill_down_to(
+        &self,
+        st: &mut MutexGuard<'_, ServeState>,
+        budget: usize,
+        exempt: Option<usize>,
+    ) {
+        if self.opts.max_resident == 0 {
+            return;
+        }
+        loop {
+            let resident = st
+                .slots
+                .iter()
+                .filter(|s| s.live && (s.backend.is_some() || s.busy))
+                .count();
+            if resident <= budget {
+                return;
+            }
+            let victim = st
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| {
+                    Some(*i) != exempt
+                        && s.live
+                        && !s.busy
+                        && !s.draining
+                        && s.queue.is_empty()
+                        && s.backend.as_ref().map_or(false, |b| b.artifact_exportable())
+                })
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { return };
+            if let Err(e) = self.spill_slot(st, v) {
+                crate::warn_log!(
+                    "resident budget: spilling {} failed ({e:#}); keeping it in memory",
+                    st.slots[v].id
+                );
+                return;
+            }
+        }
+    }
+
+    /// Serialize one idle slot's state to the spill directory and drop the
+    /// in-memory copy.
+    fn spill_slot(
+        &self,
+        st: &mut MutexGuard<'_, ServeState>,
+        idx: usize,
+    ) -> anyhow::Result<()> {
+        let backend = st.slots[idx].backend.take().expect("spill victim is resident");
+        let label = st.slots[idx].label.clone();
+        let path = self.spill_dir.join(format!("adapter_{}.psoftad", st.slots[idx].id.0));
+        let written = backend
+            .to_artifact(&label, &self.backbone)
+            .and_then(|art| art.write_to(&path));
+        match written {
+            Ok(bytes) => {
+                st.slots[idx].spill = Some(path);
+                st.slots[idx].artifact_bytes = bytes;
+                Ok(())
+            }
+            Err(e) => {
+                // Keep the adapter resident rather than losing state.
+                st.slots[idx].backend = Some(backend);
+                Err(e)
+            }
+        }
+    }
+
+    /// Reload a spilled slot's state from disk (called from `submit` with
+    /// the scheduler lock held), making room under the budget first.
+    fn reload_slot(
+        &self,
+        st: &mut MutexGuard<'_, ServeState>,
+        idx: usize,
+    ) -> anyhow::Result<()> {
+        self.spill_down_to(st, self.opts.max_resident.saturating_sub(1), Some(idx));
+        let path = st.slots[idx].spill.clone().expect("reload target is spilled");
+        let backend = self.load_artifact(&path)?;
+        st.slots[idx].backend = Some(backend);
+        st.slots[idx].spill = None;
+        let _ = std::fs::remove_file(&path);
+        Ok(())
     }
 
     /// Enqueue one request for `id`, re-arming `ticket` to receive the
     /// result. The ticket is re-armed only once the request is accepted —
     /// a failed submit leaves the ticket's previous completion intact.
-    /// Zero-allocation on the warm path: the batch travels as an `Arc`
-    /// clone and the queue is pre-sized.
+    /// Zero-allocation on the warm resident path: the batch travels as an
+    /// `Arc` clone and the queue is pre-sized. A submit against a
+    /// **spilled** adapter transparently reloads it from disk first
+    /// (spilling the LRU resident if the budget requires), so callers
+    /// never observe eviction-to-disk except as latency.
     pub fn submit(
         &self,
         id: AdapterId,
@@ -443,21 +815,41 @@ impl ServeCore {
             return Err(ServeError::ShuttingDown);
         }
         let cap = self.opts.queue_cap.max(1);
-        let slot = st
+        let idx = st
             .slots
-            .iter_mut()
-            .find(|s| s.live && s.id == id)
+            .iter()
+            .position(|s| s.live && s.id == id)
             .ok_or(ServeError::UnknownAdapter)?;
-        if slot.queue.len() >= cap {
-            slot.stats.rejected += 1;
+        if st.slots[idx].draining {
+            // Evict-with-drain in progress: behaves as already evicted
+            // for new work.
+            return Err(ServeError::Evicted);
+        }
+        if st.slots[idx].queue.len() >= cap {
+            st.slots[idx].stats.rejected += 1;
             return Err(ServeError::QueueFull);
+        }
+        st.clock += 1;
+        st.slots[idx].last_used = st.clock;
+        if st.slots[idx].spill.is_some() {
+            if let Err(e) = self.reload_slot(&mut st, idx) {
+                crate::warn_log!("submit {id}: artifact reload failed: {e:#}");
+                return Err(ServeError::ArtifactFailed);
+            }
+        } else if self.opts.max_resident != 0 {
+            // Already resident: opportunistically re-enforce the budget so
+            // adapters left resident by an earlier concurrent burst (no
+            // idle victims at the time) spill once they quiesce. With the
+            // default unlimited budget this branch is a no-op, keeping the
+            // warm resident path allocation-free.
+            self.spill_down_to(&mut st, self.opts.max_resident, Some(idx));
         }
         // Arm under the state lock: workers need that lock to dispatch,
         // so the job cannot complete before it is armed. (No path ever
         // holds a ticket lock and then takes the state lock, so this
         // nesting is deadlock-free.)
         ticket.arm();
-        slot.queue.push_back(Job {
+        st.slots[idx].queue.push_back(Job {
             batch: Arc::clone(batch),
             kind,
             ticket: Arc::clone(&ticket.inner),
@@ -518,6 +910,35 @@ impl ServeCore {
         st.slots.iter().find(|s| s.live && s.id == id).map(|s| s.queue.len())
     }
 
+    /// Size of this adapter's artifact encoding in bytes (cached at
+    /// registration, refreshed by checkpoint/spill) — the bytes-per-
+    /// adapter figure reports put next to Table 8 parameter counts.
+    pub fn artifact_bytes(&self, id: AdapterId) -> Option<u64> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().find(|s| s.live && s.id == id).map(|s| s.artifact_bytes)
+    }
+
+    /// Whether the adapter's state is currently in memory (`false` ⇒
+    /// spilled to disk awaiting a transparent reload).
+    pub fn resident(&self, id: AdapterId) -> Option<bool> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots
+            .iter()
+            .find(|s| s.live && s.id == id)
+            .map(|s| s.backend.is_some() || s.busy)
+    }
+
+    /// Number of adapters whose state is resident in memory.
+    pub fn num_resident(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().filter(|s| s.live && (s.backend.is_some() || s.busy)).count()
+    }
+
+    /// The directory spilled artifacts are written to.
+    pub fn spill_dir(&self) -> &Path {
+        &self.spill_dir
+    }
+
     /// The recorded dispatch order (adapter id per dispatched request),
     /// up to `trace_cap` entries.
     pub fn trace(&self) -> Vec<AdapterId> {
@@ -536,6 +957,18 @@ impl Drop for ServeCore {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Spilled artifacts are a transparent cache, not the durability
+        // API (that is `checkpoint`): remove the files this core owns,
+        // then the spill directory if that leaves it empty. A caller-
+        // provided directory with other contents is left in place.
+        let st = self.shared.state.lock().unwrap();
+        for s in &st.slots {
+            if let Some(p) = &s.spill {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+        drop(st);
+        let _ = std::fs::remove_dir(&self.spill_dir);
     }
 }
 
@@ -645,6 +1078,7 @@ mod tests {
     use super::*;
     use crate::config::{Arch, MethodKind, ModelConfig, ModuleKind};
     use crate::model::native::Target;
+    use crate::util::rng::Rng;
 
     fn tiny_cfg() -> ModelConfig {
         ModelConfig {
@@ -718,8 +1152,13 @@ mod tests {
         let ticket = Ticket::new(batch.batch);
         core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
 
-        // Paused ⇒ the job is still queued; eviction must fail it.
-        let backend = core.evict(id).unwrap();
+        // Paused ⇒ the job is still queued; strict evict must refuse and
+        // report exactly how many requests are pending.
+        assert_eq!(core.evict(id), Err(ServeError::PendingRequests(1)));
+
+        // Explicit reject: queued requests fail, the count comes back.
+        let (backend, failed) = core.evict_with(id, EvictMode::Reject).unwrap();
+        assert_eq!(failed, 1);
         assert_eq!(ticket.wait(), Err(ServeError::Evicted));
         assert_eq!(core.num_adapters(), 0);
         assert!(core.submit(id, &batch, ReqKind::Eval, &ticket).is_err());
@@ -731,6 +1170,70 @@ mod tests {
         core.resume();
         core.submit(id2, &batch, ReqKind::Eval, &ticket).unwrap();
         assert!(ticket.wait().is_ok());
+
+        // An idle adapter evicts strictly without complaint.
+        core.drain();
+        assert!(core.evict(id2).is_ok());
+    }
+
+    #[test]
+    fn evict_drain_serves_queue_out_before_returning_state() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(905);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts =
+            ServeOptions { workers: 1, start_paused: true, queue_cap: 8, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 14);
+        let tickets: Vec<Ticket> = (0..3).map(|_| Ticket::new(batch.batch)).collect();
+        for t in &tickets {
+            core.submit(id, &batch, ReqKind::Eval, t).unwrap();
+        }
+        // Drain unpauses, serves all 3, then evicts with nothing failed.
+        let (backend, failed) = core.evict_with(id, EvictMode::Drain).unwrap();
+        assert_eq!(failed, 0);
+        for t in &tickets {
+            assert!(t.wait().is_ok(), "drained requests complete normally");
+        }
+        assert_eq!(core.num_adapters(), 0);
+        assert_eq!(backend.opt.step, 0);
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip_preserves_results() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(906);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts = ServeOptions { workers: 1, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 15);
+        let ticket = Ticket::new(batch.batch);
+        // A couple of train steps so the checkpoint carries real state.
+        for _ in 0..2 {
+            core.submit(id, &batch, ReqKind::Train(Hyper::default()), &ticket).unwrap();
+            ticket.wait().unwrap();
+        }
+        let dir = std::env::temp_dir()
+            .join(format!("psoft_ckpt_test_{}", std::process::id()));
+        let path = dir.join("lora_r3.psoftad");
+        let bytes = core.checkpoint(id, &path).unwrap();
+        assert!(bytes > 0);
+        assert_eq!(core.artifact_bytes(id), Some(bytes));
+
+        // The checkpointed adapter keeps serving...
+        core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+        let (loss_orig, _) = ticket.wait().unwrap();
+
+        // ...and its restored twin answers bit-identically.
+        let id2 = core.restore("lora_r3_restored", &path).unwrap();
+        core.submit(id2, &batch, ReqKind::Eval, &ticket).unwrap();
+        let (loss_restored, _) = ticket.wait().unwrap();
+        assert_eq!(loss_orig, loss_restored, "restore must be bit-exact");
+        let be = core.evict(id2).unwrap();
+        assert_eq!(be.opt.step, 2, "optimizer step count survives the round-trip");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Property suite for the versioned adapter-artifact lifecycle
+//! (`peft::artifact` + `NativeBackend::{to_artifact, from_artifact}`):
+//!
+//! - **Round-trip exactness, all 12 methods** — train a few steps, export,
+//!   import onto a fresh handle of the same backbone: `forward`
+//!   (loss/metric/predictions), every adapted module's `materialize`, and
+//!   a *subsequent* train step (optimizer moments included) are
+//!   bit-identical. Rotation methods (PSOFT/OFT/BOFT/GOFT) round-trip
+//!   their skew parameters θ, so the Cayley–Neumann refresh on import
+//!   reproduces the cached rotations exactly.
+//! - **Integrity** — corrupted bytes are rejected with a checksum error,
+//!   wrong-backbone loads with a fingerprint error, and schema-version
+//!   mismatches with a clear version error (checked before the checksum,
+//!   so future-format files fail with the right message).
+//! - **Self-description** — section names/layout validate on import;
+//!   mangled sections are rejected with typed state errors.
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::linalg::Workspace;
+use psoft::model::native::{self, Batch, Target};
+use psoft::model::{Backbone, ModuleOp, NativeModel};
+use psoft::peft::artifact::{AdapterArtifact, ArtifactError, SCHEMA_VERSION};
+use psoft::runtime::{Hyper, NativeBackend};
+use psoft::util::rng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Encoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 10,
+        n_classes: 2,
+    }
+}
+
+fn tiny_batch(cfg: &ModelConfig, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (bsz, seq) = (2usize, 6usize);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+    Batch { batch: bsz, seq, tokens, pad: vec![1.0; bsz * seq], target: Target::Class(labels) }
+}
+
+/// One PeftConfig per method, sized for the tiny backbone.
+fn peft_for(method: MethodKind) -> PeftConfig {
+    let mut p = PeftConfig::new(method, 4);
+    p.modules = vec![ModuleKind::Q, ModuleKind::V];
+    p.oft_block_size = 4;
+    p.boft_b = 4;
+    p.boft_m = 2;
+    p
+}
+
+/// Per-module materialized weights, for bit-exact comparison.
+fn materialized(model: &NativeModel) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for layer in &model.layers {
+        for (_, op) in &layer.modules {
+            if let ModuleOp::Adapted(a) = op {
+                out.push(a.materialize().data);
+            }
+        }
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Export → to_bytes → from_bytes → from_artifact on the same backbone is
+/// bit-identical on forward, materialize, trainable state, and a
+/// subsequent optimizer step — for every one of the 12 methods.
+#[test]
+fn roundtrip_is_bit_identical_for_all_12_methods() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7001);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let batch = tiny_batch(&cfg, 11);
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+
+    for method in MethodKind::ALL {
+        let peft = peft_for(method);
+        let label = format!("{}_t", method.name());
+        let seed = 9000 + method as u64;
+        let mut rng2 = Rng::new(seed);
+        let mut be =
+            NativeBackend::with_seed(NativeModel::from_backbone(&bb, &peft, &mut rng2), seed);
+        let mut ws = Workspace::new();
+        for _ in 0..2 {
+            be.step_core(&batch, &hyper, &mut ws);
+        }
+
+        let art = be.to_artifact(&label, &bb).unwrap();
+        assert_eq!(art.schema_version, SCHEMA_VERSION);
+        assert_eq!(art.method, method);
+        assert_eq!(
+            art.adapter_param_floats(),
+            be.model.num_adapter_params(),
+            "{label}: artifact payload is exactly the adapter parameters"
+        );
+        let bytes = art.to_bytes();
+        // The arithmetic size (used by serve reports at registration,
+        // without serializing) must match the real encoding exactly.
+        assert_eq!(
+            be.artifact_encoded_len(&label),
+            bytes.len(),
+            "{label}: artifact_encoded_len drifted from the schema-1 writer"
+        );
+        let art2 = AdapterArtifact::from_bytes(&bytes).unwrap_or_else(|e| {
+            panic!("{label}: reparse failed: {e}");
+        });
+        assert_eq!(art2, art, "{label}: byte round-trip");
+
+        let mut be2 = NativeBackend::from_artifact(&bb, &art2)
+            .unwrap_or_else(|e| panic!("{label}: import failed: {e}"));
+
+        // Trainable state (adapters + head) restored bit-exactly.
+        assert_eq!(
+            bits(&be.model.trainable_flat()),
+            bits(&be2.model.trainable_flat()),
+            "{label}: trainable state"
+        );
+        // Materialized weights — for rotation methods this exercises the
+        // θ → Cayley–Neumann refresh on import.
+        let m1 = materialized(&be.model);
+        let m2 = materialized(&be2.model);
+        assert_eq!(m1.len(), m2.len(), "{label}: adapted module count");
+        for (a, b) in m1.iter().zip(&m2) {
+            assert_eq!(bits(a), bits(b), "{label}: materialize");
+        }
+        // Forward bit-identity on a fresh evaluation.
+        let mut ws2 = Workspace::new();
+        let (l1, m1v) = native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws);
+        let (l2, m2v) = native::evaluate_into(&be2.model, &batch, &mut be2.bufs, &mut ws2);
+        assert_eq!(l1, l2, "{label}: eval loss");
+        assert_eq!(m1v, m2v, "{label}: eval metric");
+        assert_eq!(bits(&be.bufs.preds), bits(&be2.bufs.preds), "{label}: predictions");
+        // Optimizer state round-trips: the NEXT train step matches too.
+        let (sl1, _) = be.step_core(&batch, &hyper, &mut ws);
+        let (sl2, _) = be2.step_core(&batch, &hyper, &mut ws2);
+        assert_eq!(sl1, sl2, "{label}: post-import train step (Adam moments)");
+        assert_eq!(
+            bits(&be.model.trainable_flat()),
+            bits(&be2.model.trainable_flat()),
+            "{label}: params after post-import step"
+        );
+    }
+}
+
+/// Artifacts refuse to load onto a backbone whose fingerprint differs —
+/// even one with identical shape.
+#[test]
+fn wrong_backbone_is_rejected_with_fingerprint_error() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7002);
+    let bb = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    // Same shape, different weights — only the fingerprint can tell.
+    let bb_other = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    let be = NativeBackend::for_adapter(&bb, &peft_for(MethodKind::Psoft), 5);
+    let art = be.to_artifact("psoft_t", &bb).unwrap();
+    match NativeBackend::from_artifact(&bb_other, &art) {
+        Err(ArtifactError::BackboneMismatch { artifact, backbone }) => {
+            assert_ne!(artifact, backbone);
+        }
+        other => panic!("expected BackboneMismatch, got {:?}", other.map(|_| "backend")),
+    }
+    // Sanity: the right backbone accepts it.
+    assert!(NativeBackend::from_artifact(&bb, &art).is_ok());
+}
+
+/// A flipped byte anywhere in the payload fails the checksum before any
+/// field is interpreted; a bumped schema version fails with the version
+/// error even though the checksum is stale too.
+#[test]
+fn corruption_and_schema_mismatch_fail_loudly() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7003);
+    let bb = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    let be = NativeBackend::for_adapter(&bb, &peft_for(MethodKind::OftV2), 3);
+    let bytes = be.to_artifact("oft_t", &bb).unwrap().to_bytes();
+
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x10;
+    match AdapterArtifact::from_bytes(&corrupt) {
+        Err(ArtifactError::Corrupt { .. }) => {}
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+
+    let mut vbump = bytes.clone();
+    vbump[8] = vbump[8].wrapping_add(1);
+    match AdapterArtifact::from_bytes(&vbump) {
+        Err(ArtifactError::SchemaVersion { found, supported }) => {
+            assert_eq!(found, SCHEMA_VERSION + 1);
+            assert_eq!(supported, SCHEMA_VERSION);
+            // The message tells the operator what to do.
+            let msg = ArtifactError::SchemaVersion { found, supported }.to_string();
+            assert!(msg.contains("schema version"), "{msg}");
+        }
+        other => panic!("expected SchemaVersion, got {other:?}"),
+    }
+}
+
+/// Mangled section layouts (wrong name, wrong length, missing section)
+/// are rejected with typed state errors instead of mis-assigning floats.
+#[test]
+fn mangled_sections_are_rejected() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7004);
+    let bb = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    let be = NativeBackend::for_adapter(&bb, &peft_for(MethodKind::Psoft), 4);
+    let art = be.to_artifact("psoft_t", &bb).unwrap();
+
+    let mut renamed = art.clone();
+    renamed.sections[0].name = "l0.Q.not_theta".to_string();
+    assert!(matches!(
+        NativeBackend::from_artifact(&bb, &renamed),
+        Err(ArtifactError::State(_))
+    ));
+
+    let mut resized = art.clone();
+    resized.sections[0].data.push(0.0);
+    assert!(matches!(
+        NativeBackend::from_artifact(&bb, &resized),
+        Err(ArtifactError::State(_))
+    ));
+
+    let mut missing = art.clone();
+    missing.sections.pop(); // drop adam.v
+    assert!(matches!(
+        NativeBackend::from_artifact(&bb, &missing),
+        Err(ArtifactError::State(_))
+    ));
+
+    let mut shuffled = art.clone();
+    shuffled.sections.swap(0, 1); // theta <-> alpha within l0.Q
+    assert!(matches!(
+        NativeBackend::from_artifact(&bb, &shuffled),
+        Err(ArtifactError::State(_))
+    ));
+}
+
+/// PSOFT in strict mode (no α/β) has zero-length sections — they must
+/// round-trip too, and the head-resize path (task head ≠ backbone head)
+/// must reconstruct exactly.
+#[test]
+fn zero_length_sections_and_resized_head_roundtrip() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7005);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let mut peft = peft_for(MethodKind::Psoft);
+    peft.use_alpha = false;
+    peft.use_beta = false;
+
+    let seed = 77u64;
+    let mut rng2 = Rng::new(seed);
+    let mut model = NativeModel::from_backbone(&bb, &peft, &mut rng2);
+    model.set_head_classes(3, &mut rng2); // task head differs from backbone's 2
+    let mut be = NativeBackend::with_seed(model, seed);
+    let batch = tiny_batch(&cfg, 21);
+    let mut ws = Workspace::new();
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    be.step_core(&batch, &hyper, &mut ws);
+
+    let art = be.to_artifact("psoft_strict", &bb).unwrap();
+    assert_eq!(art.model.n_classes, 3, "artifact records the resized head");
+    let mut be2 = NativeBackend::from_artifact(&bb, &art).unwrap();
+    assert_eq!(be2.model.cfg.n_classes, 3);
+    let mut ws2 = Workspace::new();
+    let (l1, _) = native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws);
+    let (l2, _) = native::evaluate_into(&be2.model, &batch, &mut be2.bufs, &mut ws2);
+    assert_eq!(l1, l2, "strict-PSOFT + resized head round-trip");
+}
+
+/// A backend built without a recorded construction seed cannot be
+/// exported: its frozen tensors could not be re-derived on import, so a
+/// seed-0 artifact would silently load wrong weights. Refuse instead.
+#[test]
+fn seedless_backend_refuses_export() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7007);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let model = NativeModel::from_backbone(&bb, &peft_for(MethodKind::Lora), &mut rng);
+    let be = NativeBackend::new(model); // caller-owned rng, seed unknown
+    assert!(!be.artifact_exportable());
+    assert!(be.to_artifact("lora_t", &bb).is_err());
+}
+
+/// File-level write/read round-trip (the `psoft export` / `import` path).
+#[test]
+fn write_read_file_roundtrip() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7006);
+    let bb = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    let be = NativeBackend::for_adapter(&bb, &peft_for(MethodKind::Lora), 8);
+    let art = be.to_artifact("lora_t", &bb).unwrap();
+    let dir = std::env::temp_dir().join(format!("psoft_artifact_test_{}", std::process::id()));
+    let path = dir.join("lora_t.psoftad");
+    let bytes = art.write_to(&path).unwrap();
+    assert_eq!(bytes as usize, art.to_bytes().len());
+    let back = AdapterArtifact::read_from(&path).unwrap();
+    assert_eq!(back, art);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -18,9 +18,9 @@
 use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
 use psoft::linalg::Workspace;
 use psoft::model::native::{self, Batch, Target};
-use psoft::model::Backbone;
+use psoft::model::{Backbone, NativeModel};
 use psoft::peft::AdapterId;
-use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+use psoft::runtime::serve::{EvictMode, ReqKind, ServeCore, ServeError, ServeOptions, Ticket};
 use psoft::runtime::{Hyper, NativeBackend};
 use psoft::util::rng::Rng;
 use std::sync::Arc;
@@ -197,6 +197,203 @@ fn burst_groups_consecutive_requests_per_adapter() {
     assert_eq!(trace, expect);
     for ticket in &tickets {
         assert!(ticket.wait().is_ok());
+    }
+}
+
+/// Acceptance scenario for LRU evict-to-disk: `max_resident = 1` with 4
+/// registered adapters serving an interleaved train+eval workload. Every
+/// result must be bit-identical to serial single-adapter runs — spills
+/// and transparent reloads (including Adam moments and the θ-based
+/// rotation state) must be invisible except as latency.
+#[test]
+fn max_resident_one_spills_and_reloads_transparently() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(810);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let specs = methods(); // psoft, lora, oftv2 — rotation + LoRA families
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    let rounds = 3usize;
+
+    // Serial reference: each adapter alone, `rounds` train steps + eval.
+    let mut reference: Vec<Vec<(f64, f64)>> = Vec::new();
+    for (_, peft, seed) in &specs {
+        let mut be = NativeBackend::for_adapter(&bb, peft, *seed);
+        let batch = batch_for(&cfg, *seed ^ 7);
+        let mut ws = Workspace::new();
+        let mut per = Vec::new();
+        for _ in 0..rounds {
+            per.push(be.step_core(&batch, &hyper, &mut ws));
+        }
+        per.push(native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws));
+        reference.push(per);
+    }
+
+    let spill_dir = std::env::temp_dir()
+        .join(format!("psoft_spill_itest_{}", std::process::id()));
+    let opts = ServeOptions {
+        workers: 1,
+        max_resident: 1,
+        spill_dir: Some(spill_dir.clone()),
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let ids: Vec<AdapterId> =
+        specs.iter().map(|(label, peft, seed)| core.register(label, peft, *seed)).collect();
+    // Plus a 4th adapter to exercise churn beyond the reference trio.
+    let extra_peft = PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q]);
+    let extra = core.register("lora_extra", &extra_peft, 99);
+    assert_eq!(core.num_adapters(), 4);
+    assert!(
+        core.num_resident() <= 1,
+        "resident budget enforced after registration: {} resident",
+        core.num_resident()
+    );
+
+    // Phase A — sequential: submit → wait → drain per request, so each
+    // switch to another adapter deterministically spills the previous one.
+    let batches: Vec<Arc<Batch>> =
+        specs.iter().map(|(_, _, seed)| batch_for(&cfg, *seed ^ 7)).collect();
+    let extra_batch = batch_for(&cfg, 99 ^ 7);
+    let ticket = Ticket::new(2);
+    for (a, id) in ids.iter().enumerate() {
+        core.submit(*id, &batches[a], ReqKind::Train(hyper), &ticket).unwrap();
+        let got = ticket.wait().unwrap();
+        core.drain();
+        assert_eq!(got, reference[a][0], "round 0, adapter {a}: spill/reload must be exact");
+        // Only the adapter just served can be resident now.
+        assert_eq!(core.resident(*id), Some(true));
+        assert!(core.num_resident() <= 1, "budget violated after serving adapter {a}");
+    }
+    for id in &ids[..2] {
+        assert_eq!(core.resident(*id), Some(false), "LRU adapters are spilled to disk");
+    }
+
+    // Phase B — interleaved: fire whole rounds across all 4 adapters
+    // without draining; reloads happen inside submit as needed.
+    let tickets: Vec<Vec<Ticket>> =
+        specs.iter().map(|_| (0..rounds).map(|_| Ticket::new(2)).collect()).collect();
+    let extra_tickets: Vec<Ticket> = (0..rounds).map(|_| Ticket::new(2)).collect();
+    for round in 1..rounds {
+        for (a, id) in ids.iter().enumerate() {
+            core.submit(*id, &batches[a], ReqKind::Train(hyper), &tickets[a][round]).unwrap();
+        }
+        core.submit(extra, &extra_batch, ReqKind::Train(hyper), &extra_tickets[round]).unwrap();
+        core.drain();
+    }
+    for (a, _) in ids.iter().enumerate() {
+        for round in 1..rounds {
+            let got = tickets[a][round].wait().unwrap();
+            assert_eq!(
+                got, reference[a][round],
+                "round {round}, adapter {a}: interleaved spill/reload must be exact"
+            );
+        }
+    }
+    // Final evals, then evict everything and compare end-state params.
+    for (a, id) in ids.iter().enumerate() {
+        core.submit(*id, &batches[a], ReqKind::Eval, &ticket).unwrap();
+        let got = ticket.wait().unwrap();
+        assert_eq!(got, reference[a][rounds], "final eval, adapter {a}");
+    }
+    for (a, id) in ids.iter().enumerate() {
+        let (be, failed) = core.evict_with(*id, EvictMode::Reject).unwrap();
+        assert_eq!(failed, 0);
+        // End-state trainable parameters bit-match the serial reference.
+        let mut ref_be = NativeBackend::for_adapter(&bb, &specs[a].1, specs[a].2);
+        let batch = batch_for(&cfg, specs[a].2 ^ 7);
+        let mut ws = Workspace::new();
+        for _ in 0..rounds {
+            ref_be.step_core(&batch, &hyper, &mut ws);
+        }
+        let lhs: Vec<u32> =
+            be.model.trainable_flat().iter().map(|v| v.to_bits()).collect();
+        let rhs: Vec<u32> =
+            ref_be.model.trainable_flat().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(lhs, rhs, "adapter {a}: end-state parameters");
+    }
+    std::fs::remove_dir_all(&spill_dir).ok();
+}
+
+/// A backend registered without a recorded construction seed is served
+/// normally but never spilled (a reload could not reconstruct its frozen
+/// tensors) — the resident budget skips it rather than corrupting it.
+#[test]
+fn seedless_backends_are_never_spilled() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(812);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let spill_dir =
+        std::env::temp_dir().join(format!("psoft_spill_seedless_{}", std::process::id()));
+    let opts = ServeOptions {
+        workers: 1,
+        max_resident: 1,
+        spill_dir: Some(spill_dir.clone()),
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    // Caller-owned rng ⇒ no recorded seed ⇒ not artifact-exportable.
+    let mut srng = Rng::new(55);
+    let seedless = NativeBackend::new(NativeModel::from_backbone(&bb, &peft, &mut srng));
+    let id0 = core.register_backend("seedless", seedless);
+    let id1 = core.register("seeded", &peft, 56);
+    assert_eq!(core.resident(id0), Some(true));
+    assert_eq!(core.artifact_bytes(id0), Some(0), "no artifact size for seedless backends");
+    assert!(core.artifact_bytes(id1).unwrap() > 0);
+
+    let batch = batch_for(&cfg, 57);
+    let t = Ticket::new(2);
+    for _ in 0..2 {
+        core.submit(id0, &batch, ReqKind::Eval, &t).unwrap();
+        t.wait().unwrap();
+        core.drain();
+        core.submit(id1, &batch, ReqKind::Eval, &t).unwrap();
+        t.wait().unwrap();
+        core.drain();
+    }
+    // The seeded adapter bears all the spill churn; the seedless one must
+    // still be resident (spilling it would lose unreconstructible state).
+    assert_eq!(core.resident(id0), Some(true), "seedless adapter must remain resident");
+    std::fs::remove_dir_all(&spill_dir).ok();
+}
+
+/// Strict evict refuses with the pending count; Reject fails the queue
+/// and reports it; Drain serves the queue out first.
+#[test]
+fn evict_semantics_are_explicit_about_pending_work() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(811);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts =
+        ServeOptions { workers: 1, start_paused: true, queue_cap: 8, ..Default::default() };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let id = core.register("lora", &peft, 42);
+    let batch = batch_for(&cfg, 43);
+    let tickets: Vec<Ticket> = (0..3).map(|_| Ticket::new(2)).collect();
+    for t in &tickets {
+        core.submit(id, &batch, ReqKind::Eval, t).unwrap();
+    }
+    // Strict evict refuses while the (paused) queue holds work.
+    assert_eq!(core.evict(id), Err(ServeError::PendingRequests(3)));
+
+    // Reject: queued requests fail immediately, with the count reported.
+    let (be, failed) = core.evict_with(id, EvictMode::Reject).unwrap();
+    assert_eq!(failed, 3);
+    for t in &tickets {
+        assert_eq!(t.wait(), Err(ServeError::Evicted));
+    }
+
+    // Re-register (still paused), queue again, Drain: dispatch resumes,
+    // everything completes, nothing is failed.
+    let id2 = core.register_backend("lora", be);
+    for t in &tickets[..2] {
+        core.submit(id2, &batch, ReqKind::Eval, t).unwrap();
+    }
+    let (_, failed) = core.evict_with(id2, EvictMode::Drain).unwrap();
+    assert_eq!(failed, 0);
+    for t in &tickets[..2] {
+        assert!(t.wait().is_ok());
     }
 }
 

@@ -1,4 +1,5 @@
-//! CI perf-regression gate over `BENCH_*.json` baselines.
+//! CI perf-regression gate over `BENCH_*.json` / `ARTIFACT_SIZES.json`
+//! baselines.
 //!
 //! Usage (from `rust/`, after a bench run has written fresh JSON):
 //!
@@ -14,6 +15,20 @@
 //! max_regression)`. Improvements always pass — the committed baseline is
 //! a floor, refreshed by re-running the bench and committing its output.
 //!
+//! `--foreach <obj-path>` runs the same check once per entry of the
+//! object at `obj-path` in the *baseline*, with `--key` interpreted
+//! relative to each entry. This is how the artifact-size gate checks
+//! every PEFT method in one invocation:
+//!
+//! ```text
+//! bench_gate --baseline ../ARTIFACT_SIZES.json --current artifact_sizes.json \
+//!            --foreach methods --key bytes_per_param \
+//!            --lower-is-better --max-regression 0.0
+//! ```
+//!
+//! fails if any method's artifact bytes-per-parameter exceeds its
+//! committed ceiling (format bloat: f64 storage, duplicated tensors, …).
+//!
 //! Exit codes: 0 pass, 1 regression, 2 usage/IO error.
 
 use psoft::util::json::Json;
@@ -28,6 +43,16 @@ fn lookup<'a>(mut v: &'a Json, path: &str) -> Option<f64> {
     v.as_f64()
 }
 
+fn lookup_node<'a>(mut v: &'a Json, path: &str) -> &'a Json {
+    for part in path.split('.') {
+        v = match part.parse::<usize>() {
+            Ok(i) => v.at(i),
+            Err(_) => v.get(part),
+        };
+    }
+    v
+}
+
 fn load(path: &str) -> Result<Json, String> {
     let text =
         std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
@@ -40,6 +65,7 @@ struct Opts {
     key: String,
     max_regression: f64,
     lower_is_better: bool,
+    foreach: Option<String>,
 }
 
 fn parse_args() -> Result<Opts, String> {
@@ -49,6 +75,7 @@ fn parse_args() -> Result<Opts, String> {
     let mut key = "steps_per_sec".to_string();
     let mut max_regression = 0.15;
     let mut lower_is_better = false;
+    let mut foreach = None;
     while let Some(arg) = args.next() {
         let mut take = |what: &str| args.next().ok_or(format!("{what} expects a value"));
         match arg.as_str() {
@@ -61,6 +88,7 @@ fn parse_args() -> Result<Opts, String> {
                     .map_err(|_| "--max-regression expects a number".to_string())?;
             }
             "--lower-is-better" => lower_is_better = true,
+            "--foreach" => foreach = Some(take("--foreach")?),
             other => return Err(format!("unknown argument {other:?}")),
         }
     }
@@ -70,7 +98,25 @@ fn parse_args() -> Result<Opts, String> {
         key,
         max_regression,
         lower_is_better,
+        foreach,
     })
+}
+
+/// One comparison; prints its verdict line and returns pass/fail.
+fn check(key: &str, base: f64, cur: f64, tol: f64, lower_is_better: bool) -> bool {
+    let pass = if lower_is_better {
+        cur <= base * (1.0 + tol)
+    } else {
+        cur >= base * (1.0 - tol)
+    };
+    let verdict = if pass { "PASS" } else { "FAIL" };
+    println!(
+        "bench_gate: {key}: baseline {base:.4}, current {cur:.4} \
+         (allowed regression {pct:.0}%, {dir}) -> {verdict}",
+        pct = tol * 100.0,
+        dir = if lower_is_better { "lower-is-better" } else { "higher-is-better" },
+    );
+    pass
 }
 
 fn main() {
@@ -92,35 +138,61 @@ fn run() -> i32 {
             return 2;
         }
     };
-    let Some(base) = lookup(&bjson, &opts.key) else {
-        eprintln!("bench_gate: key {:?} missing in {}", opts.key, opts.baseline);
-        return 2;
+
+    // Collect the (display key, lookup path) pairs to check: one for the
+    // plain mode, one per baseline entry under --foreach.
+    let paths: Vec<String> = match &opts.foreach {
+        None => vec![opts.key.clone()],
+        Some(obj_path) => {
+            let Some(obj) = lookup_node(&bjson, obj_path).as_obj() else {
+                eprintln!(
+                    "bench_gate: --foreach path {obj_path:?} is not an object in {}",
+                    opts.baseline
+                );
+                return 2;
+            };
+            if obj.is_empty() {
+                eprintln!("bench_gate: --foreach object {obj_path:?} is empty");
+                return 2;
+            }
+            // Entries present in the current output but absent from the
+            // committed baseline would otherwise skip the gate entirely
+            // (e.g. a newly added method with a bloated encoding).
+            if let Some(cobj) = lookup_node(&cjson, obj_path).as_obj() {
+                let extra: Vec<&String> =
+                    cobj.keys().filter(|k| !obj.contains_key(*k)).collect();
+                if !extra.is_empty() {
+                    eprintln!(
+                        "bench_gate: {obj_path} entries {extra:?} exist in {} but not in the \
+                         baseline {} — add committed expectations for them",
+                        opts.current, opts.baseline
+                    );
+                    return 1;
+                }
+            }
+            obj.keys().map(|k| format!("{obj_path}.{k}.{}", opts.key)).collect()
+        }
     };
-    let Some(cur) = lookup(&cjson, &opts.key) else {
-        eprintln!("bench_gate: key {:?} missing in {}", opts.key, opts.current);
-        return 2;
-    };
-    let tol = opts.max_regression;
-    let pass = if opts.lower_is_better {
-        cur <= base * (1.0 + tol)
-    } else {
-        cur >= base * (1.0 - tol)
-    };
-    let verdict = if pass { "PASS" } else { "FAIL" };
-    println!(
-        "bench_gate: {key}: baseline {base:.4}, current {cur:.4} \
-         (allowed regression {pct:.0}%, {dir}) -> {verdict}",
-        key = opts.key,
-        pct = tol * 100.0,
-        dir = if opts.lower_is_better { "lower-is-better" } else { "higher-is-better" },
-    );
-    if pass {
+
+    let mut all_pass = true;
+    for path in &paths {
+        let Some(base) = lookup(&bjson, path) else {
+            eprintln!("bench_gate: key {path:?} missing in {}", opts.baseline);
+            return 2;
+        };
+        let Some(cur) = lookup(&cjson, path) else {
+            eprintln!("bench_gate: key {path:?} missing in {}", opts.current);
+            return 2;
+        };
+        all_pass &= check(path, base, cur, opts.max_regression, opts.lower_is_better);
+    }
+    if all_pass {
         0
     } else {
         eprintln!(
-            "bench_gate: perf regression on {:?} — if intentional, refresh the baseline by \
-             re-running the bench and committing its {} output",
-            opts.key, opts.current
+            "bench_gate: regression detected — if intentional, refresh the baseline by \
+             re-running the generator and committing its {} output",
+            opts.current
         );
         1
     }
