@@ -1,0 +1,235 @@
+//! Decode bench: autoregressive generation through the KV-cache path —
+//! model-level prefill and per-token latency, plus aggregate tokens/sec
+//! through the serve core at 1 vs 4 vs 16 decoder adapters on one shared
+//! frozen backbone. Emits `BENCH_decode.json`, the baseline the CI bench
+//! gate diffs against (see `tools/bench_gate`). `PSOFT_BENCH_FAST=1`
+//! switches to the short deterministic smoke mode CI runs.
+//!
+//! Per-request shapes are `[1, d]`, far below the matmul threading
+//! thresholds, so each worker decodes single-threaded: measured scaling
+//! is pure scheduler parallelism across adapters.
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use psoft::bench::{bench_decoder, write_csv};
+use psoft::config::{MethodKind, ModuleKind, PeftConfig};
+use psoft::model::native::{self, DecodeCache};
+use psoft::model::Backbone;
+use psoft::peft::AdapterId;
+use psoft::runtime::serve::{ServeCore, ServeOptions, Ticket};
+use psoft::runtime::NativeBackend;
+use psoft::util::json::Json;
+use psoft::util::rng::Rng;
+use psoft::util::stats::Stopwatch;
+use psoft::util::threadpool::default_parallelism;
+use std::sync::Arc;
+
+fn fast() -> bool {
+    std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The adapter mix cycled across registrations — the paper's method plus
+/// three baselines, all on Q,V (randomized-SVD PSOFT init keeps 16
+/// registrations cheap).
+fn peft_for(i: usize) -> (String, PeftConfig) {
+    let modules = vec![ModuleKind::Q, ModuleKind::V];
+    match i % 4 {
+        0 => {
+            let mut p = PeftConfig::new(MethodKind::Psoft, 16).with_modules(modules);
+            p.svd_n_iter = Some(2);
+            ("psoft_r16".to_string(), p)
+        }
+        1 => ("lora_r8".to_string(), PeftConfig::new(MethodKind::Lora, 8).with_modules(modules)),
+        2 => {
+            let mut p = PeftConfig::new(MethodKind::OftV2, 8).with_modules(modules);
+            p.oft_block_size = 16;
+            ("oftv2_b16".to_string(), p)
+        }
+        _ => {
+            let mut p = PeftConfig::new(MethodKind::Boft, 8).with_modules(modules);
+            p.boft_b = 4;
+            p.boft_m = 2;
+            ("boft_b4m2".to_string(), p)
+        }
+    }
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+struct ConfigResult {
+    adapters: usize,
+    generations: u64,
+    tokens: u64,
+    wall_secs: f64,
+    tokens_per_sec: f64,
+}
+
+fn main() {
+    let cfg = bench_decoder();
+    let mut rng = Rng::new(97);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let workers = default_parallelism().min(8);
+    let prompt_len = 8usize;
+    let max_new = if fast() { 16usize } else { 32 };
+    let gens_per_adapter = if fast() { 2usize } else { 6 };
+    assert!(prompt_len + max_new <= cfg.max_seq);
+    println!(
+        "=== decode bench: {workers} workers, prompt {prompt_len}, \
+         {max_new} new tokens, {gens_per_adapter} generations per adapter ==="
+    );
+
+    // --- Model-level prefill / per-token latency (single warm adapter) --
+    let backend = NativeBackend::for_adapter(&bb, &peft_for(0).1, 1000);
+    let mut ws = psoft::linalg::Workspace::new();
+    let mut cache = DecodeCache::new();
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let _warm = backend.generate(&prompt, max_new, true, &mut cache, &mut ws);
+    let reps = if fast() { 3 } else { 10 };
+    let mut srng = Rng::new(7);
+    let mut prefill_times = Vec::with_capacity(reps);
+    let mut token_times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        cache.ensure(&backend.model, &mut ws); // warm no-op + len reset
+        let sw = Stopwatch::start();
+        for &t in &prompt {
+            native::decode_step(&backend.model, &mut cache, t, &mut ws);
+        }
+        prefill_times.push(sw.ms());
+        let mut last = native::select_token(&cache, true, &mut srng);
+        let sw2 = Stopwatch::start();
+        for _ in 0..max_new {
+            native::decode_step(&backend.model, &mut cache, last, &mut ws);
+            last = native::select_token(&cache, true, &mut srng);
+        }
+        token_times.push(sw2.ms() / max_new as f64);
+    }
+    let prefill_ms = median(prefill_times);
+    let per_token_ms = median(token_times);
+    println!(
+        "model-level: prefill({prompt_len} tok) {prefill_ms:.3} ms, \
+         per-token {per_token_ms:.4} ms"
+    );
+
+    // --- Serve-level aggregate tokens/sec at 1/4/16 adapters -----------
+    let mut results: Vec<ConfigResult> = Vec::new();
+    let mut csv_rows = Vec::new();
+    for &n_adapters in &[1usize, 4, 16] {
+        let opts = ServeOptions {
+            workers,
+            queue_cap: 2 * gens_per_adapter + 4,
+            burst: 4,
+            ..Default::default()
+        };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let ids: Vec<AdapterId> = (0..n_adapters)
+            .map(|i| {
+                let (label, peft) = peft_for(i);
+                core.register(&label, &peft, 2000 + i as u64)
+            })
+            .collect();
+        let prompts: Vec<Arc<Vec<i32>>> = (0..n_adapters)
+            .map(|a| {
+                let mut prng = Rng::new(300 + a as u64);
+                Arc::new(
+                    (0..prompt_len).map(|_| prng.below(cfg.vocab_size) as i32).collect(),
+                )
+            })
+            .collect();
+
+        // Warmup: one generation per adapter sizes every KV-cache and
+        // workspace pool.
+        let warm = Ticket::new(max_new);
+        for (a, id) in ids.iter().enumerate() {
+            core.submit_generate(*id, &prompts[a], max_new, true, &warm).unwrap();
+            warm.wait().unwrap();
+        }
+
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(gens_per_adapter * n_adapters);
+        let sw = Stopwatch::start();
+        for _ in 0..gens_per_adapter {
+            for (a, id) in ids.iter().enumerate() {
+                let t = Ticket::new(max_new);
+                core.submit_generate(*id, &prompts[a], max_new, true, &t).unwrap();
+                tickets.push(t);
+            }
+        }
+        core.drain();
+        let wall_secs = sw.secs();
+        let mut tokens = 0u64;
+        for t in &tickets {
+            let (_, emitted) = t.wait().unwrap();
+            tokens += emitted as u64;
+        }
+        let generations = (gens_per_adapter * n_adapters) as u64;
+        let tokens_per_sec = tokens as f64 / wall_secs.max(1e-9);
+        println!(
+            "adapters {n_adapters:>2}: {generations:>4} generations, {tokens:>6} tokens \
+             in {wall_secs:>7.3}s = {tokens_per_sec:>9.1} tok/s"
+        );
+        csv_rows.push(format!(
+            "{n_adapters},{generations},{tokens},{wall_secs:.4},{tokens_per_sec:.2}"
+        ));
+        results.push(ConfigResult {
+            adapters: n_adapters,
+            generations,
+            tokens,
+            wall_secs,
+            tokens_per_sec,
+        });
+    }
+    write_csv(
+        "decode_bench",
+        "adapters,generations,tokens,wall_s,tokens_per_sec",
+        &csv_rows,
+    );
+
+    let tps_at = |n: usize| -> f64 {
+        results.iter().find(|c| c.adapters == n).map(|c| c.tokens_per_sec).unwrap_or(0.0)
+    };
+    let scaling = if tps_at(1) > 0.0 { tps_at(16) / tps_at(1) } else { 0.0 };
+    println!("16-adapter aggregate decode throughput = {scaling:.2}x single-adapter");
+
+    let json = Json::obj(vec![
+        (
+            "workload",
+            Json::Str(format!(
+                "decoder_small; psoft/lora/oftv2/boft mix on Q,V; greedy; \
+                 prompt {prompt_len} x {max_new} new tokens"
+            )),
+        ),
+        ("workers", Json::Num(workers as f64)),
+        ("generations_per_adapter", Json::Num(gens_per_adapter as f64)),
+        ("fast_mode", Json::Bool(fast())),
+        ("prefill_ms", Json::Num(prefill_ms)),
+        ("per_token_ms", Json::Num(per_token_ms)),
+        (
+            "configs",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("adapters", Json::Num(c.adapters as f64)),
+                            ("generations", Json::Num(c.generations as f64)),
+                            ("tokens", Json::Num(c.tokens as f64)),
+                            ("wall_secs", Json::Num(c.wall_secs)),
+                            ("tokens_per_sec", Json::Num(c.tokens_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("tokens_per_sec_1", Json::Num(tps_at(1))),
+        ("tokens_per_sec_16", Json::Num(tps_at(16))),
+        ("scaling_16x_over_1x", Json::Num(scaling)),
+    ]);
+    std::fs::write("BENCH_decode.json", json.dump_pretty()).expect("write BENCH_decode.json");
+    eprintln!("wrote BENCH_decode.json");
+}

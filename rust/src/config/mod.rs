@@ -443,11 +443,15 @@ pub struct ServeConfig {
     /// disk as a versioned artifact and transparently reloaded on its next
     /// request. 0 (the default) disables eviction.
     pub max_resident: usize,
+    /// Default token budget for generation requests (`psoft generate`
+    /// uses it when `--max-new` is not given; each request may still ask
+    /// for less, bounded by the backbone's `max_seq`).
+    pub max_new_tokens: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, queue_cap: 32, burst: 4, max_resident: 0 }
+        ServeConfig { workers: 4, queue_cap: 32, burst: 4, max_resident: 0, max_new_tokens: 16 }
     }
 }
 
@@ -461,6 +465,7 @@ impl ServeConfig {
         read_usize(s, "queue_cap", &mut sc.queue_cap);
         read_usize(s, "burst", &mut sc.burst);
         read_usize(s, "max_resident", &mut sc.max_resident);
+        read_usize(s, "max_new_tokens", &mut sc.max_new_tokens);
         sc
     }
 }
@@ -634,12 +639,15 @@ mod tests {
 
     #[test]
     fn serve_section_parses_with_defaults() {
-        let tree =
-            toml::parse("[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\n").unwrap();
+        let tree = toml::parse(
+            "[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\nmax_new_tokens = 24\n",
+        )
+        .unwrap();
         let sc = ServeConfig::from_toml(&tree);
         assert_eq!(sc.workers, 8);
         assert_eq!(sc.queue_cap, 64);
         assert_eq!(sc.max_resident, 2);
+        assert_eq!(sc.max_new_tokens, 24);
         assert_eq!(sc.burst, ServeConfig::default().burst);
         // Absent section ⇒ pure defaults.
         let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());

@@ -192,6 +192,7 @@ pub fn serve_report(
             label,
             processed: s.processed,
             train_steps: s.train_steps,
+            tokens_generated: s.tokens_generated,
             rejected: s.rejected,
             mean_latency_ms: s.mean_latency_ms(),
             max_latency_ms: s.max_latency_ms(),

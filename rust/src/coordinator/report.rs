@@ -209,6 +209,8 @@ pub struct ServeRow {
     pub label: String,
     pub processed: u64,
     pub train_steps: u64,
+    /// Tokens emitted by generation requests (decoder serving).
+    pub tokens_generated: u64,
     pub rejected: u64,
     pub mean_latency_ms: f64,
     pub max_latency_ms: f64,
@@ -249,16 +251,17 @@ impl ServeReport {
             self.workers,
             self.throughput_rps()
         );
-        out.push_str("| Adapter | Label | Served | Train | Rejected |");
+        out.push_str("| Adapter | Label | Served | Train | Tokens | Rejected |");
         out.push_str(" Mean lat (ms) | Max lat (ms) | Mean svc (ms) | Artifact |\n");
-        out.push_str("|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
+                "| {} | {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
                 r.id,
                 r.label,
                 r.processed,
                 r.train_steps,
+                r.tokens_generated,
                 r.rejected,
                 r.mean_latency_ms,
                 r.max_latency_ms,
@@ -271,15 +274,16 @@ impl ServeReport {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "adapter,label,processed,train_steps,rejected,mean_latency_ms,max_latency_ms,mean_service_ms,artifact_bytes\n",
+            "adapter,label,processed,train_steps,tokens_generated,rejected,mean_latency_ms,max_latency_ms,mean_service_ms,artifact_bytes\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
+                "{},{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
                 r.id,
                 r.label,
                 r.processed,
                 r.train_steps,
+                r.tokens_generated,
                 r.rejected,
                 r.mean_latency_ms,
                 r.max_latency_ms,
@@ -308,6 +312,7 @@ impl ServeReport {
                                 ("label", Json::Str(r.label.clone())),
                                 ("processed", Json::Num(r.processed as f64)),
                                 ("train_steps", Json::Num(r.train_steps as f64)),
+                                ("tokens_generated", Json::Num(r.tokens_generated as f64)),
                                 ("rejected", Json::Num(r.rejected as f64)),
                                 ("mean_latency_ms", Json::Num(r.mean_latency_ms)),
                                 ("max_latency_ms", Json::Num(r.max_latency_ms)),

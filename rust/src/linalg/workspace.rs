@@ -15,7 +15,11 @@
 //!
 //! - [`Workspace`] (`f32`) — model activations and gradients; one per
 //!   training run (or per serve worker), threaded through every
-//!   forward/backward kernel.
+//!   forward/backward kernel. The decode path draws on the same pool:
+//!   a `model::native::DecodeCache` acquires its per-layer `[max_seq, d]`
+//!   K/V ring buffers and `[1, *]` step scratch here and releases them
+//!   between generations, so the warm per-token decode loop is
+//!   allocation-free like the train/eval hot paths.
 //! - [`DWorkspace`] (`f64`) — the small r×r temporaries of the
 //!   Cayley–Neumann rotation refresh (PSOFT/OFT/BOFT `set_params`) and
 //!   its backward. Each rotation adapter owns one, so rotation refresh

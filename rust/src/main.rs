@@ -5,6 +5,8 @@
 //! - `pretrain`  — pretrain a backbone on the pretext corpus, save checkpoint
 //! - `train`     — fine-tune one task with one PEFT method (native or PJRT)
 //! - `serve`     — multi-adapter serving: N adapters on one shared backbone
+//! - `generate`  — autoregressive decode through the serve core: stream
+//!                 tokens from a fresh or artifact-restored decoder adapter
 //! - `export`    — fine-tune (optionally) and write a versioned adapter
 //!                 artifact; `--method all` prints artifact size per method
 //! - `import`    — reload an adapter artifact onto a matching backbone and
@@ -63,6 +65,7 @@ fn main() {
         Some("pretrain") => run(cmd_pretrain(&args)),
         Some("train") => run(cmd_train(&args)),
         Some("serve") => run(cmd_serve(&args)),
+        Some("generate") => run(cmd_generate(&args)),
         Some("export") => run(cmd_export(&args)),
         Some("import") => run(cmd_import(&args)),
         Some("suite") => run(cmd_suite(&args)),
@@ -94,7 +97,11 @@ fn run(r: Result<()>) -> i32 {
 
 fn usage() {
     eprintln!(
-        "usage: psoft <pretrain|train|serve|export|import|suite|memmodel|geometry|inspect> [options]\n\
+        "usage: psoft <pretrain|train|serve|generate|export|import|suite|memmodel|geometry|inspect> [options]\n\
+         \n\
+         generate: autoregressive decode through the serve core (decoder backbones)\n\
+           psoft generate --prompt 3,1,4 --max-new 16 [--artifact adapter.psoftad]\n\
+           psoft generate --prompt-len 4 --mode sample --config cfg.toml   ([serve] drives the scheduler)\n\
          \n\
          export: write a fine-tuned adapter as a versioned artifact\n\
            psoft export --method psoft --rank 8 --steps 2 --suite glue --task cola \\\n\
@@ -113,7 +120,13 @@ fn usage() {
 // ---------------------------------------------------------------------------
 
 fn model_cfg_from(args: &Args) -> Result<ModelConfig> {
-    let arch = Arch::parse(args.get_or("arch", "encoder"))?;
+    model_cfg_from_with(args, "encoder")
+}
+
+/// `model_cfg_from` with a caller-chosen default architecture (`psoft
+/// generate` defaults to the decoder — generation needs an LM head).
+fn model_cfg_from_with(args: &Args, default_arch: &str) -> Result<ModelConfig> {
+    let arch = Arch::parse(args.get_or("arch", default_arch))?;
     let mut cfg = match arch {
         Arch::Encoder => ModelConfig::encoder_small(),
         Arch::Decoder => ModelConfig::decoder_small(),
@@ -438,6 +451,120 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let out_dir = Path::new(args.get_or("out", "reports"));
     report::write_serve_bundle(out_dir, "serve", &serve_rep)?;
     psoft::info!("wrote serve reports to {}", out_dir.display());
+    Ok(())
+}
+
+/// `psoft generate`: autoregressive decode driven through the serving
+/// core ([`serve`] config section + flag overrides pick the scheduler
+/// knobs), streaming tokens as they are emitted. The final `tokens=` line
+/// is deterministic for a given backbone/adapter/prompt — the CI decode
+/// smoke compares it across export/import round-trips.
+fn cmd_generate(args: &Args) -> Result<()> {
+    use psoft::config::ServeConfig;
+    use psoft::peft::artifact::AdapterArtifact;
+    use psoft::runtime::serve::{ServeCore, ServeOptions, Ticket};
+
+    let cfg = model_cfg_from_with(args, "decoder")?;
+    let bb = Arc::new(load_or_make_backbone(args, &cfg)?);
+    let cfg = bb.cfg.clone();
+    if !bb.supports_decode() {
+        bail!("generate requires a decoder backbone with an LM head; got {}", cfg.arch.name());
+    }
+
+    let mut sc = match args.get("config") {
+        Some(path) => ServeConfig::from_toml(&psoft::config::toml::parse_file(Path::new(path))?),
+        None => ServeConfig::default(),
+    };
+    sc.workers = args.usize("workers", sc.workers)?;
+    sc.queue_cap = args.usize("queue-cap", sc.queue_cap)?;
+    sc.burst = args.usize("burst", sc.burst)?;
+    sc.max_resident = args.usize("max-resident", sc.max_resident)?;
+    let max_new = args.usize("max-new", sc.max_new_tokens)?;
+    let greedy = match args.get_or("mode", "greedy") {
+        "greedy" => true,
+        "sample" => false,
+        other => bail!("unknown --mode {other:?} (expected greedy|sample)"),
+    };
+
+    // Prompt: explicit token ids, or a deterministic synthetic one.
+    let prompt: Vec<i32> = if args.get("prompt").is_some() {
+        args.usize_list("prompt")?.into_iter().map(|t| t as i32).collect()
+    } else {
+        let n = args.usize("prompt-len", 4)?;
+        let mut prng = Rng::new(args.u64("seed", 42)? ^ 0x9E3779B9);
+        (0..n).map(|_| prng.below(cfg.vocab_size) as i32).collect()
+    };
+    if prompt.is_empty() {
+        bail!("--prompt must contain at least one token id");
+    }
+    if let Some(&bad) = prompt.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab_size) {
+        bail!("prompt token {bad} is outside the vocab (size {})", cfg.vocab_size);
+    }
+    if prompt.len() + max_new > cfg.max_seq {
+        bail!(
+            "prompt ({}) + max-new ({max_new}) exceeds max_seq ({}); shorten one",
+            prompt.len(),
+            cfg.max_seq
+        );
+    }
+
+    let opts = ServeOptions::from(sc);
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let id = match args.get("artifact") {
+        Some(path) => {
+            let art = AdapterArtifact::read_from(Path::new(path))?;
+            psoft::info!(
+                "restoring adapter {} (method {}, rank {}, opt_step {}) from {path}",
+                art.label,
+                art.method.name(),
+                art.peft.rank,
+                art.opt_step
+            );
+            core.restore(&art.label, Path::new(path))?
+        }
+        None => {
+            let peft = peft_cfg_from(args, &cfg)?;
+            let label = format!("{}_r{}", peft.method.name(), peft.rank);
+            psoft::info!("registering fresh adapter {label}");
+            core.register(&label, &peft, args.u64("seed", 42)?)
+        }
+    };
+
+    let prompt = Arc::new(prompt);
+    let ticket = Ticket::new(max_new);
+    let sw = Stopwatch::start();
+    core.submit_generate(id, &prompt, max_new, greedy, &ticket)
+        .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+
+    // Stream tokens as the scheduler advances the generation.
+    let mut printed = 0usize;
+    loop {
+        let n = ticket.wait_tokens(printed + 1);
+        if n > printed {
+            ticket.with_tokens(|t| {
+                for (i, &tok) in t.iter().enumerate().take(n).skip(printed) {
+                    psoft::info!("token[{i}] = {tok}");
+                }
+            });
+            printed = n;
+        } else if ticket.is_done() {
+            break;
+        }
+    }
+    let (_, emitted) = ticket.wait().map_err(|e| anyhow::anyhow!("generation failed: {e}"))?;
+    let wall = sw.secs();
+
+    let stream: Vec<String> = ticket.with_tokens(|t| t.iter().map(|v| v.to_string()).collect());
+    println!("tokens={}", stream.join(","));
+    println!(
+        "generated {} tokens from a {}-token prompt in {} ({:.1} tok/s, {}, workers {})",
+        emitted as u64,
+        prompt.len(),
+        human_duration(wall),
+        if wall > 0.0 { emitted / wall } else { 0.0 },
+        if greedy { "greedy" } else { "sampled" },
+        sc.workers
+    );
     Ok(())
 }
 

@@ -84,6 +84,14 @@ impl Backbone {
         &self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module").1
     }
 
+    /// Whether models built on this backbone can serve autoregressive
+    /// generation: a causal decoder with its LM head present. The serve
+    /// layer validates `Request::Generate` submissions against this, and
+    /// `psoft generate` checks it before building a core.
+    pub fn supports_decode(&self) -> bool {
+        self.cfg.arch == Arch::Decoder && self.lm_head.is_some()
+    }
+
     /// The `Arc`-shared handle of a dense module weight — used to install
     /// frozen modules into a [`NativeModel`] without copying.
     pub fn weight_shared(&self, layer: usize, module: ModuleKind) -> Arc<Mat> {
@@ -374,6 +382,14 @@ impl NativeModel {
 
     fn has_head(&self) -> bool {
         self.cfg.arch == Arch::Encoder
+    }
+
+    /// Whether this model can run autoregressive generation: a decoder
+    /// with its LM head present (`native::decode_step` requires both).
+    /// `native::generate_into` asserts this up front; the serve layer
+    /// checks the equivalent [`Backbone::supports_decode`] at submit.
+    pub fn supports_decode(&self) -> bool {
+        self.cfg.arch == Arch::Decoder && self.lm_head.is_some()
     }
 
     /// Resize the classification/regression head for a task (regression ⇒

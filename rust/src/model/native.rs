@@ -13,6 +13,12 @@
 //! [`Workspace`] pool (see `linalg::workspace` for the keying and
 //! aliasing rules). [`train_grads`]/[`evaluate`] remain as allocating
 //! convenience wrappers over [`train_grads_into`]/[`evaluate_into`].
+//!
+//! Autoregressive decoding lives alongside the batched path: a
+//! [`DecodeCache`] holds per-layer K/V ring buffers (workspace-pooled)
+//! and [`decode_step`] runs one position incrementally, bit-consistent
+//! with the batched `forward_cached` prefill over the same tokens — the
+//! property `tests/decode.rs` pins per PEFT method.
 
 use super::{Layer, ModuleOp, NativeModel};
 use crate::config::{Arch, ModuleKind};
@@ -157,6 +163,14 @@ fn rmsnorm_backward_into(x: &Mat, dy: &Mat, dx: &mut Mat) {
 /// Multi-head attention over [B·S, d] activations. Softmax probabilities
 /// are written into `probs` (one preallocated [S, S] matrix per
 /// batch·head, fully overwritten) and the attention output into `out`.
+///
+/// Masked scores use `-inf` so masked columns exp to exactly 0.0, and a
+/// **fully-masked row** (an all-pad example, or causal row 0 of a batch
+/// whose position 0 is padding) gets an all-zero probability row — it
+/// attends to *nothing*. With a finite mask constant such a row would
+/// survive max-subtraction with equal scores and come out uniform,
+/// silently attending to garbage (regression-pinned by
+/// `fully_padded_example_is_inert`).
 #[allow(clippy::too_many_arguments)]
 fn attention_into(
     q: &Mat,
@@ -184,7 +198,7 @@ fn attention_into(
                 for s2 in 0..seq {
                     let masked = pad[b * seq + s2] < 0.5 || (causal && s2 > s1);
                     if masked {
-                        p[(s1, s2)] = -1e9;
+                        p[(s1, s2)] = f32::NEG_INFINITY;
                         continue;
                     }
                     let krow = &k.row(b * seq + s2)[col0..col0 + hd];
@@ -195,10 +209,18 @@ fn attention_into(
                     p[(s1, s2)] = acc * scale;
                 }
             }
-            // Row softmax.
+            // Row softmax. A fully-masked row (max still -inf) attends to
+            // nothing: zero it rather than letting -inf - -inf = NaN (or,
+            // with a finite mask constant, a uniform row) through.
             for s1 in 0..seq {
                 let row = p.row_mut(s1);
                 let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                if max == f32::NEG_INFINITY {
+                    for v in row.iter_mut() {
+                        *v = 0.0;
+                    }
+                    continue;
+                }
                 let mut sum = 0.0;
                 for v in row.iter_mut() {
                     *v = (*v - max).exp();
@@ -299,6 +321,464 @@ fn attention_backward_into(
         }
     }
     ws.release(dp);
+}
+
+// ---------------------------------------------------------------------------
+// Autoregressive decoding (KV-cache)
+// ---------------------------------------------------------------------------
+
+/// Per-generation K/V cache plus every single-position scratch buffer one
+/// decode step needs.
+///
+/// All buffers are **pooled through the caller's [`Workspace`]**:
+/// [`DecodeCache::ensure`] acquires them (a pool miss only the first time
+/// a given model shape is decoded) and [`DecodeCache::release`] hands
+/// them back, so the warm per-token decode loop performs zero heap
+/// allocations (`tests/serve_alloc.rs`). The K/V buffers are `[max_seq,
+/// d]` ring stores written once per position; rows `0..len` are valid.
+///
+/// Bit-consistency contract: [`decode_step`] at position `p` produces the
+/// same activations, to the bit, as row `p` of the full-sequence
+/// [`forward_cached`] prefill over the same tokens (pinned per method by
+/// `tests/decode.rs`). This holds because every op on the path is
+/// row-local (matmuls accumulate over k in a fixed order per output row,
+/// norms and MLP activations are per-row) and the incremental attention
+/// below replays the batched kernel's exact accumulation order for one
+/// query row.
+pub struct DecodeCache {
+    /// (n_layers, d_model, d_ff, max_seq, vocab) the buffers are sized
+    /// for; `ensure` re-acquires on mismatch.
+    key: Option<(usize, usize, usize, usize, usize)>,
+    /// Per layer: cached K and V, `[max_seq, d]`, rows `0..len` valid.
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    /// Positions decoded so far (== the next absolute position).
+    len: usize,
+    // Single-position scratch, all `[1, *]`:
+    x: Mat,
+    h1: Mat,
+    q: Mat,
+    krow: Mat,
+    vrow: Mat,
+    att: Mat,
+    att_out: Mat,
+    x_mid: Mat,
+    h2: Mat,
+    up: Mat,
+    gate: Mat,
+    ff: Mat,
+    down: Mat,
+    hidden: Mat,
+    /// Next-token logits `[1, vocab]` of the most recent step.
+    pub logits: Mat,
+    /// Attention-score scratch `[1, max_seq]` (prefix `0..len` used).
+    scores: Mat,
+}
+
+impl Default for DecodeCache {
+    fn default() -> Self {
+        DecodeCache::new()
+    }
+}
+
+impl DecodeCache {
+    pub fn new() -> DecodeCache {
+        let empty = || Mat::zeros(0, 0);
+        DecodeCache {
+            key: None,
+            k: Vec::new(),
+            v: Vec::new(),
+            len: 0,
+            x: empty(),
+            h1: empty(),
+            q: empty(),
+            krow: empty(),
+            vrow: empty(),
+            att: empty(),
+            att_out: empty(),
+            x_mid: empty(),
+            h2: empty(),
+            up: empty(),
+            gate: empty(),
+            ff: empty(),
+            down: empty(),
+            hidden: empty(),
+            logits: empty(),
+            scores: empty(),
+        }
+    }
+
+    /// Size every buffer for `model`, acquiring from `ws` (no-op when the
+    /// shape already matches — the warm path). Also resets `len` to 0.
+    pub fn ensure(&mut self, model: &NativeModel, ws: &mut Workspace) {
+        let cfg = &model.cfg;
+        let key =
+            (model.layers.len(), cfg.d_model, cfg.d_ff, cfg.max_seq, cfg.vocab_size);
+        if self.key != Some(key) {
+            self.release(ws);
+            let (d, f, s, vsz) = (cfg.d_model, cfg.d_ff, cfg.max_seq, cfg.vocab_size);
+            for _ in 0..model.layers.len() {
+                self.k.push(ws.acquire(s, d));
+                self.v.push(ws.acquire(s, d));
+            }
+            self.x = ws.acquire(1, d);
+            self.h1 = ws.acquire(1, d);
+            self.q = ws.acquire(1, d);
+            self.krow = ws.acquire(1, d);
+            self.vrow = ws.acquire(1, d);
+            self.att = ws.acquire(1, d);
+            self.att_out = ws.acquire(1, d);
+            self.x_mid = ws.acquire(1, d);
+            self.h2 = ws.acquire(1, d);
+            self.up = ws.acquire(1, f);
+            self.gate = ws.acquire(1, f);
+            self.ff = ws.acquire(1, f);
+            self.down = ws.acquire(1, d);
+            self.hidden = ws.acquire(1, d);
+            self.logits = ws.acquire(1, vsz);
+            self.scores = ws.acquire(1, s);
+            self.key = Some(key);
+        }
+        self.len = 0;
+    }
+
+    /// Return every buffer to `ws` (the serve workers pool warm caches
+    /// this way between generations).
+    pub fn release(&mut self, ws: &mut Workspace) {
+        fn give(ws: &mut Workspace, m: &mut Mat) {
+            if !m.data.is_empty() {
+                let owned = std::mem::replace(m, Mat::zeros(0, 0));
+                ws.release(owned);
+            }
+        }
+        for m in self.k.drain(..) {
+            if !m.data.is_empty() {
+                ws.release(m);
+            }
+        }
+        for m in self.v.drain(..) {
+            if !m.data.is_empty() {
+                ws.release(m);
+            }
+        }
+        give(ws, &mut self.x);
+        give(ws, &mut self.h1);
+        give(ws, &mut self.q);
+        give(ws, &mut self.krow);
+        give(ws, &mut self.vrow);
+        give(ws, &mut self.att);
+        give(ws, &mut self.att_out);
+        give(ws, &mut self.x_mid);
+        give(ws, &mut self.h2);
+        give(ws, &mut self.up);
+        give(ws, &mut self.gate);
+        give(ws, &mut self.ff);
+        give(ws, &mut self.down);
+        give(ws, &mut self.hidden);
+        give(ws, &mut self.logits);
+        give(ws, &mut self.scores);
+        self.key = None;
+        self.len = 0;
+    }
+
+    /// Positions decoded so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Forget the decoded prefix (buffers stay warm for the next
+    /// generation).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// Incremental causal attention for one new query row against the cached
+/// K/V prefix `0..len`. Replays the batched kernel's accumulation order
+/// exactly (dot over head dim, max over the unmasked prefix, exp/sum in
+/// prefix order, zero-probability skip in the PV accumulation), which is
+/// what makes decode bit-consistent with `forward_cached`: the batched
+/// row's masked tail contributes exp(-inf - max) = 0.0 terms that do not
+/// perturb any partial sum.
+fn attention_step_into(
+    q: &Mat,
+    kc: &Mat,
+    vc: &Mat,
+    len: usize,
+    heads: usize,
+    scores: &mut Mat,
+    out: &mut Mat,
+) {
+    let d = q.cols;
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    out.fill(0.0);
+    for h in 0..heads {
+        let col0 = h * hd;
+        let qrow = &q.row(0)[col0..col0 + hd];
+        let srow = &mut scores.row_mut(0)[..len];
+        for s2 in 0..len {
+            let krow = &kc.row(s2)[col0..col0 + hd];
+            let mut acc = 0.0f32;
+            for i in 0..hd {
+                acc += qrow[i] * krow[i];
+            }
+            srow[s2] = acc * scale;
+        }
+        let max = srow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in srow.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in srow.iter_mut() {
+            *v /= sum;
+        }
+        let orow = &mut out.row_mut(0)[col0..col0 + hd];
+        for s2 in 0..len {
+            let pv = srow[s2];
+            if pv == 0.0 {
+                continue;
+            }
+            let vrow = &vc.row(s2)[col0..col0 + hd];
+            for i in 0..hd {
+                orow[i] += pv * vrow[i];
+            }
+        }
+    }
+}
+
+/// One autoregressive decode step: feed `token` at the next position,
+/// append its K/V to the cache, and leave next-token logits in
+/// `cache.logits`. Bit-consistent with the corresponding row of the full
+/// `forward_cached` prefill (see [`DecodeCache`]). Allocation-free once
+/// `cache` and `ws` are warm.
+pub fn decode_step(
+    model: &NativeModel,
+    cache: &mut DecodeCache,
+    token: i32,
+    ws: &mut Workspace,
+) {
+    let cfg = &model.cfg;
+    assert_eq!(cfg.arch, Arch::Decoder, "decode requires a decoder model");
+    let pos = cache.len;
+    assert!(pos < cfg.max_seq, "decode past max_seq ({})", cfg.max_seq);
+    let tok = token as usize;
+    assert!(tok < cfg.vocab_size, "token {token} out of vocab ({})", cfg.vocab_size);
+    let heads = cfg.n_heads;
+
+    // x = tok_emb[token] + pos_emb[pos].
+    {
+        let erow = model.tok_emb.row(tok);
+        let prow = model.pos_emb.row(pos);
+        for (o, (&e, &p)) in cache.x.row_mut(0).iter_mut().zip(erow.iter().zip(prow)) {
+            *o = e + p;
+        }
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        rmsnorm_into(&cache.x, &mut cache.h1);
+        module(layer, ModuleKind::Q).forward_into(&cache.h1, &mut cache.q, ws);
+        module(layer, ModuleKind::K).forward_into(&cache.h1, &mut cache.krow, ws);
+        module(layer, ModuleKind::V).forward_into(&cache.h1, &mut cache.vrow, ws);
+        cache.k[li].row_mut(pos).copy_from_slice(cache.krow.row(0));
+        cache.v[li].row_mut(pos).copy_from_slice(cache.vrow.row(0));
+        attention_step_into(
+            &cache.q,
+            &cache.k[li],
+            &cache.v[li],
+            pos + 1,
+            heads,
+            &mut cache.scores,
+            &mut cache.att,
+        );
+        module(layer, ModuleKind::O).forward_into(&cache.att, &mut cache.att_out, ws);
+        cache.x_mid.copy_from(&cache.x);
+        cache.x_mid.add_assign(&cache.att_out);
+
+        rmsnorm_into(&cache.x_mid, &mut cache.h2);
+        module(layer, ModuleKind::U).forward_into(&cache.h2, &mut cache.up, ws);
+        module(layer, ModuleKind::G).forward_into(&cache.h2, &mut cache.gate, ws);
+        for i in 0..cache.ff.data.len() {
+            cache.ff.data[i] = silu(cache.gate.data[i]) * cache.up.data[i];
+        }
+        module(layer, ModuleKind::D).forward_into(&cache.ff, &mut cache.down, ws);
+        cache.x.copy_from(&cache.x_mid);
+        cache.x.add_assign(&cache.down);
+    }
+
+    rmsnorm_into(&cache.x, &mut cache.hidden);
+    let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
+    matmul_into(&cache.hidden, lm, &mut cache.logits);
+    cache.len = pos + 1;
+}
+
+/// Pick the next token from `cache.logits`: argmax (first maximum wins,
+/// matching the loss path's tie-break) when `greedy`, otherwise a
+/// categorical sample at temperature 1 driven by `rng`. Allocation-free.
+pub fn select_token(cache: &DecodeCache, greedy: bool, rng: &mut crate::util::rng::Rng) -> i32 {
+    let row = cache.logits.row(0);
+    if greedy {
+        let mut best = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > best {
+                best = v;
+                arg = j;
+            }
+        }
+        return arg as i32;
+    }
+    // Two-pass softmax sampling without touching the logits buffer.
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for &v in row {
+        sum += ((v - max) as f64).exp();
+    }
+    let mut t = rng.f64() * sum;
+    for (j, &v) in row.iter().enumerate() {
+        t -= ((v - max) as f64).exp();
+        if t <= 0.0 {
+            return j as i32;
+        }
+    }
+    (row.len() - 1) as i32
+}
+
+/// Deterministic sampling seed for a non-greedy generation: hashed from
+/// the prompt so repeated requests over the same prompt reproduce the
+/// same stream (FNV-1a over the token ids).
+pub fn sample_seed(prompt: &[i32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &t in prompt {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The resumable decode driver: the feed-prompt-then-feed-back state
+/// machine shared by [`generate_into`] (run to completion in one call)
+/// and the serve layer's resumable generation jobs (advanced a
+/// burst-quota of steps per dispatch). Keeping it in ONE place is what
+/// guarantees the serve path and the direct path emit bit-identical
+/// streams — `tests/decode.rs` and the serve tests pin that property.
+pub struct DecodeStream {
+    /// Input tokens fed so far (prompt prefix, then emitted tokens).
+    fed: usize,
+    /// Tokens emitted so far.
+    produced: usize,
+    /// The last emitted token — the next input once the prompt is fed.
+    last: i32,
+    /// Sampling stream for non-greedy selection (prompt-seeded, so
+    /// re-running the same prompt reproduces the same tokens).
+    rng: crate::util::rng::Rng,
+}
+
+impl DecodeStream {
+    /// A fresh stream for one generation over `prompt`.
+    pub fn new(prompt: &[i32]) -> DecodeStream {
+        DecodeStream {
+            fed: 0,
+            produced: 0,
+            last: 0,
+            rng: crate::util::rng::Rng::new(sample_seed(prompt)),
+        }
+    }
+
+    /// Advance by at most `steps` decode steps, appending freshly emitted
+    /// tokens to `out`. Returns true when the generation is complete:
+    /// `max_new_tokens` emitted, or the KV-cache reached `max_seq`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance(
+        &mut self,
+        model: &NativeModel,
+        cache: &mut DecodeCache,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        greedy: bool,
+        steps: usize,
+        ws: &mut Workspace,
+        out: &mut Vec<i32>,
+    ) -> bool {
+        let max_seq = model.cfg.max_seq;
+        for _ in 0..steps {
+            if self.produced >= max_new_tokens || cache.len() >= max_seq {
+                break;
+            }
+            let inp = if self.fed < prompt.len() { prompt[self.fed] } else { self.last };
+            decode_step(model, cache, inp, ws);
+            self.fed += 1;
+            if self.fed >= prompt.len() {
+                let tok = select_token(cache, greedy, &mut self.rng);
+                out.push(tok);
+                self.produced += 1;
+                self.last = tok;
+            }
+        }
+        self.produced >= max_new_tokens || cache.len() >= max_seq
+    }
+}
+
+/// Autoregressive generation: teacher-forced prefill over `prompt` (one
+/// [`decode_step`] per prompt token — bit-identical to a batched prefill,
+/// see [`DecodeCache`]), then feed back each selected token until
+/// `max_new_tokens` tokens are emitted or the cache reaches `max_seq`.
+/// Emitted tokens are appended to `out`.
+pub fn generate_into(
+    model: &NativeModel,
+    prompt: &[i32],
+    max_new_tokens: usize,
+    greedy: bool,
+    cache: &mut DecodeCache,
+    ws: &mut Workspace,
+    out: &mut Vec<i32>,
+) {
+    assert!(!prompt.is_empty(), "generation requires a non-empty prompt");
+    assert!(model.supports_decode(), "generation requires a decoder model with an LM head");
+    cache.ensure(model, ws);
+    cache.reset();
+    let mut stream = DecodeStream::new(prompt);
+    // A single unbounded advance runs the whole generation (each step
+    // feeds one position, so it terminates at max_new_tokens/max_seq).
+    stream.advance(model, cache, prompt, max_new_tokens, greedy, usize::MAX, ws, out);
+}
+
+/// Full-forward reference for KV-cache parity: run the batched
+/// `forward_cached` prefill over `tokens` (batch 1, no padding) and
+/// return next-token logits at every position, each computed with the
+/// same `[1, d] × [d, V]` kernel call the decode path uses — so a
+/// bit-exact comparison isolates the incremental attention math.
+/// Allocates freely; test/bench utility, not a serving path.
+pub fn prefill_logits(model: &NativeModel, tokens: &[i32]) -> Vec<Mat> {
+    assert_eq!(model.cfg.arch, Arch::Decoder, "prefill_logits requires a decoder");
+    let n = tokens.len();
+    let batch = Batch {
+        batch: 1,
+        seq: n,
+        tokens: tokens.to_vec(),
+        pad: vec![1.0; n],
+        target: Target::LmMask(vec![0.0; n]),
+    };
+    let mut bufs = StepBuffers::new();
+    let mut ws = Workspace::new();
+    bufs.ensure(model, &batch);
+    forward_cached(model, &batch, &mut bufs, &mut ws);
+    let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
+    let d = model.cfg.d_model;
+    (0..n)
+        .map(|t| {
+            let mut h = Mat::zeros(1, d);
+            h.row_mut(0).copy_from_slice(bufs.hidden.row(t));
+            let mut out = Mat::zeros(1, model.cfg.vocab_size);
+            matmul_into(&h, lm, &mut out);
+            out
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -1352,6 +1832,91 @@ mod tests {
         }
         let out1 = evaluate(&model, &batch2);
         assert!((out0.loss - out1.loss).abs() < 1e-9, "{} vs {}", out0.loss, out1.loss);
+    }
+
+    #[test]
+    fn fully_padded_example_is_inert() {
+        // A fully-masked attention row must attend to NOTHING. With the
+        // old finite mask constant (-1e9), every masked score survived
+        // max-subtraction equally and the row came out uniform — an
+        // all-pad example attended to its own garbage tokens. Pin: with
+        // example 1 entirely padding, changing its non-CLS tokens cannot
+        // move the loss (its CLS hidden state flows only through the
+        // residual path).
+        let mut rng = Rng::new(310);
+        let cfg = enc_cfg();
+        let model = model_with(&cfg, MethodKind::Psoft, 3, &mut rng);
+        let mut batch = cls_batch(&cfg, 2, 6, &mut rng);
+        for s in 0..6 {
+            batch.pad[6 + s] = 0.0; // example 1: all positions padded
+        }
+        let out0 = evaluate(&model, &batch);
+        assert!(out0.loss.is_finite(), "all-pad example must not produce NaN");
+        let mut batch2 = batch.clone();
+        for s in 1..6 {
+            batch2.tokens[6 + s] = (batch2.tokens[6 + s] + 5) % cfg.vocab_size as i32;
+        }
+        let out1 = evaluate(&model, &batch2);
+        assert_eq!(out0.loss, out1.loss, "masked row attended to garbage");
+    }
+
+    #[test]
+    fn causal_row_zero_of_padded_batch_is_inert() {
+        // Decoder analogue: when position 0 is padding, causal row 0 is
+        // fully masked. The loss must stay finite and independent of the
+        // padded position's token (its prediction is mask-weighted 0).
+        let mut rng = Rng::new(311);
+        let cfg = dec_cfg();
+        let model = model_with(&cfg, MethodKind::Lora, 2, &mut rng);
+        let mut batch = lm_batch(&cfg, 2, 6, &mut rng);
+        for b in 0..2 {
+            batch.pad[b * 6] = 0.0;
+        }
+        if let Target::LmMask(m) = &mut batch.target {
+            // Score only late predictions; position 0 itself predicts
+            // nothing and is predicted with weight 0.
+            m.iter_mut().for_each(|v| *v = 0.0);
+            for b in 0..2 {
+                m[b * 6 + 4] = 1.0;
+                m[b * 6 + 5] = 1.0;
+            }
+        }
+        let out0 = evaluate(&model, &batch);
+        assert!(out0.loss.is_finite());
+        let mut batch2 = batch.clone();
+        for b in 0..2 {
+            batch2.tokens[b * 6] = (batch2.tokens[b * 6] + 9) % cfg.vocab_size as i32;
+        }
+        let out1 = evaluate(&model, &batch2);
+        assert_eq!(out0.loss, out1.loss);
+    }
+
+    #[test]
+    fn decode_step_matches_prefill_logits() {
+        // Smoke-level KV parity (the per-method sweep lives in
+        // tests/decode.rs): incremental decode over a fixed token
+        // sequence reproduces the batched forward's logits bit-for-bit.
+        let mut rng = Rng::new(312);
+        let cfg = dec_cfg();
+        let mut model = model_with(&cfg, MethodKind::Lora, 2, &mut rng);
+        let mut p = model.trainable_flat();
+        for v in p.iter_mut() {
+            *v += 0.02 * rng.normal() as f32;
+        }
+        model.set_trainable_flat(&p);
+        let tokens: Vec<i32> = (0..6).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let reference = prefill_logits(&model, &tokens);
+        let mut ws = Workspace::new();
+        let mut cache = DecodeCache::new();
+        cache.ensure(&model, &mut ws);
+        for (t, &tok) in tokens.iter().enumerate() {
+            decode_step(&model, &mut cache, tok, &mut ws);
+            assert_eq!(
+                cache.logits.data, reference[t].data,
+                "logit mismatch at position {t}"
+            );
+        }
+        cache.release(&mut ws);
     }
 
     #[test]

@@ -532,11 +532,25 @@ impl AdapterArtifact {
         let bytes = self.to_bytes();
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
             }
         }
-        std::fs::write(path, &bytes)
-            .map_err(|e| anyhow::anyhow!("writing artifact {}: {e}", path.display()))?;
+        // Write-then-rename so a failed or interrupted write can never
+        // leave a truncated artifact under the final name — the serve
+        // layer's spill path treats a successful return as "state safely
+        // on disk" before dropping the in-memory copy.
+        let tmp = path.with_extension("psoftad.tmp");
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| anyhow::anyhow!("writing artifact {}: {e}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(anyhow::anyhow!(
+                "renaming artifact {} -> {}: {e}",
+                tmp.display(),
+                path.display()
+            ));
+        }
         Ok(bytes.len() as u64)
     }
 

@@ -380,6 +380,24 @@ impl NativeBackend {
         self.model.set_trainable_flat(&self.params);
         (loss, metric)
     }
+
+    /// Autoregressive generation on this backend's model — the serve
+    /// layer's decode path as a standalone call (greedy argmax, or
+    /// deterministic prompt-seeded sampling when `greedy` is false).
+    /// Returns the emitted tokens; `cache` and `ws` stay warm for the
+    /// next generation.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        greedy: bool,
+        cache: &mut native::DecodeCache,
+        ws: &mut Workspace,
+    ) -> Vec<i32> {
+        let mut out = Vec::with_capacity(max_new_tokens);
+        native::generate_into(&self.model, prompt, max_new_tokens, greedy, cache, ws, &mut out);
+        out
+    }
 }
 
 /// Copy one artifact section into a same-length destination after

@@ -31,6 +31,52 @@
 //! yields the fairness property the tests pin: with equal demand, adapters
 //! are serviced in rotation regardless of arrival order.
 //!
+//! # Generation requests (resumable multi-step jobs)
+//!
+//! [`Request::Generate`] runs an autoregressive decode on the adapter:
+//! teacher-forced prefill over the prompt, then greedy (or deterministic
+//! prompt-seeded sampled) continuation, one KV-cached
+//! [`native::decode_step`] per position. Its lifecycle:
+//!
+//! 1. **Submit** validates against the shared backbone (decoder arch,
+//!    non-empty in-vocab prompt, `prompt + max_new_tokens ≤ max_seq`) and
+//!    enqueues a resumable `GenJob` — same queue, same depth cap as
+//!    one-shot requests.
+//! 2. **Dispatch** treats the generation as a *resumable* job: it is
+//!    dispatched alone and advanced by at most `burst` decode steps —
+//!    one dispatch consumes one burst quota whether it is `burst`
+//!    one-shot requests or `burst` decode steps — then re-enqueued at the
+//!    *front* of its adapter's queue if unfinished. Round-robin fairness
+//!    and burst caps therefore hold across adapters mid-generation; an
+//!    in-flight generation transiently holds one queue slot beyond the
+//!    submit-visible cap (the queue is pre-sized for it).
+//! 3. **Streaming**: tokens emitted during a dispatch are appended to the
+//!    ticket before the job completes — [`Ticket::wait_tokens`] /
+//!    [`Ticket::with_tokens`] observe the stream mid-request;
+//!    [`Ticket::wait`] returns (0.0, tokens_emitted) at completion.
+//! 4. **KV-caches** are pooled per worker and handed to a job on first
+//!    dispatch (buffers workspace-pooled, so the warm per-token decode
+//!    loop performs zero heap allocations — `tests/serve_alloc.rs`).
+//! 5. **Eviction**: strict [`ServeCore::evict`] counts an in-flight
+//!    generation as pending work (it cannot be "waited out");
+//!    `evict_with(Reject)` fails it with [`ServeError::Evicted`],
+//!    `evict_with(Drain)` serves it to completion.
+//!
+//! # Failure containment
+//!
+//! A panic in adapter compute is caught at the dispatch boundary (no
+//! scheduler lock is ever held across compute, so none can be poisoned):
+//! the offending adapter is retired — its in-flight and queued requests
+//! fail with the typed [`ServeError::WorkerPanicked`] — and the worker
+//! and every other adapter keep serving. Scheduler/ticket lock
+//! acquisitions additionally recover from poisoning (a client thread
+//! panicking mid-`wait` must not cascade into every later
+//! `submit`/`evict`/`Drop`). Spill-path I/O failures are never silently
+//! swallowed: a failed spill write leaves the adapter resident (state is
+//! never lost to a "successful" evict over a failed write — artifact
+//! writes go through a temp file + atomic rename), and failed spill-file
+//! cleanup is logged.
+//!
 //! # Zero-allocation warm path
 //!
 //! A warm request round-trip — submit, dispatch, evaluate/train-step,
@@ -82,18 +128,35 @@
 
 use crate::config::PeftConfig;
 use crate::linalg::Workspace;
-use crate::model::native::{self, Batch};
+use crate::model::native::{self, Batch, DecodeCache};
 use crate::model::Backbone;
 use crate::peft::artifact::AdapterArtifact;
 use crate::peft::AdapterId;
 use crate::runtime::{Hyper, NativeBackend};
 use std::collections::VecDeque;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::Instant;
+
+/// Lock acquisition that survives poisoning. A worker panic is already
+/// contained at the dispatch boundary (see `worker_loop`), but a *client*
+/// thread can still panic while holding a ticket or scheduler lock — in
+/// that case the protected data is a plain state machine whose every
+/// transition is valid, so we recover the guard instead of letting one
+/// panic cascade through every later `lock().unwrap()` in
+/// `submit`/`evict`/`Drop`.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar wait with the same poison recovery as [`relock`].
+fn rewait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// What a request asks the adapter to do.
 #[derive(Clone, Copy, Debug)]
@@ -102,6 +165,27 @@ pub enum ReqKind {
     Eval,
     /// One fine-tuning optimizer step on the batch.
     Train(Hyper),
+}
+
+/// A full serve request: the two one-shot batch kinds plus resumable
+/// autoregressive generation. [`ServeCore::submit`] remains the
+/// batch-shaped convenience; [`ServeCore::submit_request`] accepts any
+/// variant.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Forward-only evaluation of the batch.
+    Eval { batch: Arc<Batch> },
+    /// One fine-tuning optimizer step on the batch.
+    Train { batch: Arc<Batch>, hyper: Hyper },
+    /// Autoregressive decode: teacher-forced prefill over `prompt`, then
+    /// emit up to `max_new_tokens` tokens (greedy argmax, or a
+    /// deterministic prompt-seeded categorical sample). Scheduled as a
+    /// **resumable multi-step job**: each dispatch advances it by at most
+    /// `burst` decode steps before the round-robin cursor moves on, so
+    /// fairness and burst caps hold across adapters mid-generation.
+    /// Tokens stream into the ticket as they are emitted
+    /// ([`Ticket::wait_tokens`] / [`Ticket::with_tokens`]).
+    Generate { prompt: Arc<Vec<i32>>, max_new_tokens: usize, greedy: bool },
 }
 
 /// Serve-layer errors. `Copy` so completed tickets can carry one without
@@ -120,6 +204,16 @@ pub enum ServeError {
     PendingRequests(usize),
     /// Spilling or reloading the adapter's on-disk artifact failed.
     ArtifactFailed,
+    /// The request is malformed for this core's backbone (generation on
+    /// an encoder, empty prompt, out-of-vocab prompt token, or prompt +
+    /// max_new_tokens past `max_seq`).
+    InvalidRequest,
+    /// The worker servicing this request panicked. The panic is contained
+    /// (caught at the dispatch boundary, never across a held scheduler
+    /// lock): the adapter whose compute panicked is retired — its
+    /// in-flight and queued requests all fail with this error — and the
+    /// worker, pool, and every other adapter keep serving.
+    WorkerPanicked,
     /// The core is shutting down.
     ShuttingDown,
 }
@@ -137,6 +231,12 @@ impl fmt::Display for ServeError {
             ),
             ServeError::ArtifactFailed => {
                 f.write_str("adapter artifact spill/reload failed (see warning log)")
+            }
+            ServeError::InvalidRequest => {
+                f.write_str("request is malformed for this backbone (arch/prompt/length)")
+            }
+            ServeError::WorkerPanicked => {
+                f.write_str("serve worker panicked while running this adapter; adapter retired")
             }
             ServeError::ShuttingDown => f.write_str("serve core shutting down"),
         }
@@ -176,6 +276,8 @@ pub struct AdapterStats {
     pub max_latency_ns: u64,
     /// Σ on-worker service nanoseconds (compute only, no queueing).
     pub service_ns: u64,
+    /// Tokens emitted by completed-or-in-progress generation requests.
+    pub tokens_generated: u64,
 }
 
 impl AdapterStats {
@@ -260,6 +362,9 @@ struct TicketState {
     loss: f64,
     metric: f64,
     preds: Vec<f32>,
+    /// Generation requests stream their emitted tokens here (appended
+    /// after every dispatch burst, before the request completes).
+    tokens: Vec<i32>,
     error: Option<ServeError>,
 }
 
@@ -271,24 +376,29 @@ struct TicketInner {
 /// Reusable completion handle for one in-flight request.
 ///
 /// A ticket may carry **one outstanding request at a time**; `submit`
-/// re-arms it. `preds` capacity is pre-sized at construction so warm
-/// completions never allocate.
+/// re-arms it. `preds` and `tokens` capacity is pre-sized at construction
+/// so warm completions never allocate. For generation requests the ticket
+/// doubles as the **stream**: emitted tokens appear in `tokens` while the
+/// request is still running ([`Ticket::wait_tokens`] blocks for the next
+/// batch, [`Ticket::with_tokens`] reads what has arrived).
 #[derive(Clone)]
 pub struct Ticket {
     inner: Arc<TicketInner>,
 }
 
 impl Ticket {
-    /// `max_preds` sizes the per-example prediction buffer (use the batch
-    /// size of the requests this ticket will carry).
-    pub fn new(max_preds: usize) -> Ticket {
+    /// `capacity` sizes the per-example prediction buffer *and* the
+    /// generated-token stream buffer (use the batch size for eval/train
+    /// tickets, `max_new_tokens` for generation tickets).
+    pub fn new(capacity: usize) -> Ticket {
         Ticket {
             inner: Arc::new(TicketInner {
                 state: Mutex::new(TicketState {
                     done: false,
                     loss: f64::NAN,
                     metric: f64::NAN,
-                    preds: Vec::with_capacity(max_preds),
+                    preds: Vec::with_capacity(capacity),
+                    tokens: Vec::with_capacity(capacity),
                     error: None,
                 }),
                 cv: Condvar::new(),
@@ -296,11 +406,13 @@ impl Ticket {
         }
     }
 
-    /// Block until the request completes; returns (loss, metric).
+    /// Block until the request completes; returns (loss, metric). For
+    /// generation requests the metric is the number of emitted tokens
+    /// (and the loss 0.0).
     pub fn wait(&self) -> Result<(f64, f64), ServeError> {
-        let mut ts = self.inner.state.lock().unwrap();
+        let mut ts = relock(&self.inner.state);
         while !ts.done {
-            ts = self.inner.cv.wait(ts).unwrap();
+            ts = rewait(&self.inner.cv, ts);
         }
         match ts.error {
             Some(e) => Err(e),
@@ -310,26 +422,50 @@ impl Ticket {
 
     /// Completed request finished?
     pub fn is_done(&self) -> bool {
-        self.inner.state.lock().unwrap().done
+        relock(&self.inner.state).done
     }
 
     /// Borrow the per-example predictions of the completed request
     /// without copying them out.
     pub fn with_preds<R>(&self, f: impl FnOnce(&[f32]) -> R) -> R {
-        let ts = self.inner.state.lock().unwrap();
+        let ts = relock(&self.inner.state);
         f(&ts.preds)
     }
 
+    /// Borrow the tokens a generation request has streamed so far (valid
+    /// mid-request; the slice only ever grows until completion).
+    pub fn with_tokens<R>(&self, f: impl FnOnce(&[i32]) -> R) -> R {
+        let ts = relock(&self.inner.state);
+        f(&ts.tokens)
+    }
+
+    /// Tokens streamed so far.
+    pub fn tokens_ready(&self) -> usize {
+        relock(&self.inner.state).tokens.len()
+    }
+
+    /// Block until at least `n` tokens have streamed or the request
+    /// finished; returns how many tokens are available (which may be less
+    /// than `n` only when the generation completed or failed early).
+    pub fn wait_tokens(&self, n: usize) -> usize {
+        let mut ts = relock(&self.inner.state);
+        while ts.tokens.len() < n && !ts.done {
+            ts = rewait(&self.inner.cv, ts);
+        }
+        ts.tokens.len()
+    }
+
     fn arm(&self) {
-        let mut ts = self.inner.state.lock().unwrap();
+        let mut ts = relock(&self.inner.state);
         ts.done = false;
         ts.error = None;
         ts.preds.clear();
+        ts.tokens.clear();
     }
 }
 
 fn complete(ticket: &TicketInner, loss: f64, metric: f64, preds: &[f32]) {
-    let mut ts = ticket.state.lock().unwrap();
+    let mut ts = relock(&ticket.state);
     ts.loss = loss;
     ts.metric = metric;
     ts.preds.clear();
@@ -340,17 +476,90 @@ fn complete(ticket: &TicketInner, loss: f64, metric: f64, preds: &[f32]) {
     ticket.cv.notify_all();
 }
 
+/// Stream freshly emitted tokens into the ticket (mid-generation — the
+/// request is not yet done) and wake `wait_tokens` callers.
+fn stream_tokens(ticket: &TicketInner, tokens: &[i32]) {
+    let mut ts = relock(&ticket.state);
+    ts.tokens.extend_from_slice(tokens);
+    drop(ts);
+    ticket.cv.notify_all();
+}
+
+/// Complete a generation request: loss 0.0, metric = emitted tokens.
+fn complete_gen(ticket: &TicketInner) {
+    let mut ts = relock(&ticket.state);
+    ts.loss = 0.0;
+    ts.metric = ts.tokens.len() as f64;
+    ts.preds.clear();
+    ts.error = None;
+    ts.done = true;
+    drop(ts);
+    ticket.cv.notify_all();
+}
+
 fn fail(ticket: &TicketInner, err: ServeError) {
-    let mut ts = ticket.state.lock().unwrap();
+    let mut ts = relock(&ticket.state);
     ts.error = Some(err);
     ts.done = true;
     drop(ts);
     ticket.cv.notify_all();
 }
 
+/// A resumable generation in flight: consumed prompt prefix, emitted
+/// tail, and the (worker-pooled) KV-cache it decodes into. Lives inside
+/// the slot queue between dispatches, so fairness is preserved
+/// mid-generation.
+struct GenJob {
+    prompt: Arc<Vec<i32>>,
+    max_new_tokens: usize,
+    greedy: bool,
+    /// The shared resumable decode state machine — the SAME driver
+    /// `native::generate_into` runs to completion, advanced here a
+    /// burst-quota of steps per dispatch, so serve-side streams are
+    /// bit-identical to direct decodes by construction.
+    stream: native::DecodeStream,
+    /// KV-cache + step scratch; taken from the worker's cache pool on
+    /// first dispatch and returned there on completion.
+    cache: Option<DecodeCache>,
+}
+
+impl GenJob {
+    /// Advance the generation by up to `units` decode steps (the
+    /// scheduler's per-dispatch quota), pushing freshly emitted tokens
+    /// into `fresh` (a pre-sized worker buffer, streamed to the ticket
+    /// after the burst). Returns true when the generation is complete.
+    fn advance(
+        &mut self,
+        model: &crate::model::NativeModel,
+        ws: &mut Workspace,
+        units: usize,
+        fresh: &mut Vec<i32>,
+    ) -> bool {
+        let cache = self.cache.as_mut().expect("dispatched gen job holds a cache");
+        self.stream.advance(
+            model,
+            cache,
+            &self.prompt,
+            self.max_new_tokens,
+            self.greedy,
+            units,
+            ws,
+            fresh,
+        )
+    }
+}
+
+// The Gen variant is deliberately inline (not boxed): a queued job is a
+// few hundred bytes of struct, and keeping it flat means a warm
+// generation submit performs zero heap allocations.
+#[allow(clippy::large_enum_variant)]
+enum JobKind {
+    Batch { batch: Arc<Batch>, req: ReqKind },
+    Gen(GenJob),
+}
+
 struct Job {
-    batch: Arc<Batch>,
-    kind: ReqKind,
+    kind: JobKind,
     ticket: Arc<TicketInner>,
     enqueued: Instant,
 }
@@ -365,6 +574,11 @@ struct Slot {
     queue: VecDeque<Job>,
     busy: bool,
     live: bool,
+    /// A generation job is currently on a worker (in-flight, not queued).
+    /// Strict [`ServeCore::evict`] counts it as pending work: unlike a
+    /// one-shot burst, an unfinished generation cannot be "waited out"
+    /// without either failing it or draining.
+    gen_inflight: bool,
     /// Evict-with-drain in progress: new submissions are refused while the
     /// queue serves out.
     draining: bool,
@@ -390,6 +604,9 @@ struct ServeState {
     next_id: u64,
     /// Logical clock driving the LRU spill order.
     clock: u64,
+    /// Worker panics contained so far (each retires the adapter whose
+    /// compute panicked).
+    worker_panics: u64,
     paused: bool,
     shutdown: bool,
     /// Dispatch-order trace of adapter ids (test instrumentation),
@@ -409,6 +626,16 @@ struct Shared {
 /// Monotonic suffix so concurrent cores in one process get distinct
 /// default spill directories.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Delete a spill file whose state has been safely reloaded. Never
+/// silently swallowed: a failure cannot lose state (the in-memory copy is
+/// already live) but leaves a stale artifact on disk, which the operator
+/// should hear about.
+fn remove_spill_file(path: &Path, ctx: &str) {
+    if let Err(e) = std::fs::remove_file(path) {
+        crate::warn_log!("{ctx}: could not remove spill file {}: {e}", path.display());
+    }
+}
 
 /// The multi-adapter serving core. See the module docs for the design.
 pub struct ServeCore {
@@ -437,6 +664,7 @@ impl ServeCore {
                 queued: 0,
                 next_id: 0,
                 clock: 0,
+                worker_panics: 0,
                 paused: opts.start_paused,
                 shutdown: false,
                 trace: Vec::with_capacity(opts.trace_cap),
@@ -488,7 +716,7 @@ impl ServeCore {
         } else {
             0
         };
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         let id = AdapterId(st.next_id);
         st.next_id += 1;
         st.clock += 1;
@@ -496,9 +724,13 @@ impl ServeCore {
             id,
             label: label.to_string(),
             backend: Some(backend),
-            queue: VecDeque::with_capacity(self.opts.queue_cap.max(1)),
+            // +1 slot of headroom: an in-flight generation re-enqueues at
+            // the queue front after its dispatch quota, transiently
+            // holding one slot beyond the submit-visible cap.
+            queue: VecDeque::with_capacity(self.opts.queue_cap.max(1) + 1),
             busy: false,
             live: true,
+            gen_inflight: false,
             draining: false,
             spill: None,
             last_used: st.clock,
@@ -556,7 +788,7 @@ impl ServeCore {
         strict: bool,
         drain: bool,
     ) -> Result<(NativeBackend, usize), ServeError> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         let idx = st
             .slots
             .iter()
@@ -566,8 +798,13 @@ impl ServeCore {
             // Another evict_with(Drain) owns this slot already.
             return Err(ServeError::Evicted);
         }
-        if strict && !st.slots[idx].queue.is_empty() {
-            return Err(ServeError::PendingRequests(st.slots[idx].queue.len()));
+        // Strict eviction refuses pending work: queued requests, plus an
+        // in-flight *generation* — unlike a one-shot burst, it cannot be
+        // waited out (it would re-enqueue), only failed or drained.
+        if strict && (!st.slots[idx].queue.is_empty() || st.slots[idx].gen_inflight) {
+            let pending =
+                st.slots[idx].queue.len() + st.slots[idx].gen_inflight as usize;
+            return Err(ServeError::PendingRequests(pending));
         }
         if drain {
             // Refuse new submissions, let dispatch serve the queue out.
@@ -580,7 +817,7 @@ impl ServeCore {
                 && st.slots[idx].id == id
                 && (!st.slots[idx].queue.is_empty() || st.slots[idx].busy)
             {
-                st = self.shared.idle.wait(st).unwrap();
+                st = rewait(&self.shared.idle, st);
             }
             if !st.slots[idx].live || st.slots[idx].id != id {
                 // A concurrent evict retired the slot while we drained.
@@ -598,17 +835,30 @@ impl ServeCore {
             failed.push(job);
         }
         while st.slots[idx].busy {
-            st = self.shared.idle.wait(st).unwrap();
+            st = rewait(&self.shared.idle, st);
         }
         let backend = match st.slots[idx].backend.take() {
             Some(b) => b,
             None => {
+                let Some(path) = st.slots[idx].spill.take() else {
+                    // Neither resident nor spilled: the worker running
+                    // this adapter panicked while we waited out its burst
+                    // (the panic path retires the slot and drops the
+                    // possibly-corrupt state). Surface the typed error —
+                    // panicking here would re-create the cascade the
+                    // containment exists to stop. The jobs we unqueued
+                    // above still get failed below.
+                    drop(st);
+                    for job in failed {
+                        fail(&job.ticket, ServeError::Evicted);
+                    }
+                    return Err(ServeError::WorkerPanicked);
+                };
                 // State is on disk: evicting a spilled adapter hands back
                 // its reloaded (exact) state.
-                let path = st.slots[idx].spill.take().expect("evicted slot retains state");
                 match self.load_artifact(&path) {
                     Ok(b) => {
-                        let _ = std::fs::remove_file(&path);
+                        remove_spill_file(&path, "evict");
                         b
                     }
                     Err(e) => {
@@ -643,7 +893,7 @@ impl ServeCore {
     /// evicting it (its queue is untouched; an in-flight burst is waited
     /// out first). Returns the bytes written.
     pub fn checkpoint(&self, id: AdapterId, path: &Path) -> anyhow::Result<u64> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         let idx = st
             .slots
             .iter()
@@ -666,7 +916,7 @@ impl ServeCore {
             if !st.slots[idx].busy {
                 break;
             }
-            st = self.shared.idle.wait(st).unwrap();
+            st = rewait(&self.shared.idle, st);
             if !st.slots[idx].live || st.slots[idx].id != id {
                 anyhow::bail!("adapter {id} was evicted during checkpoint");
             }
@@ -679,7 +929,7 @@ impl ServeCore {
         drop(st);
         let result =
             backend.to_artifact(&label, &self.backbone).and_then(|art| art.write_to(path));
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         st.slots[idx].backend = Some(backend);
         st.slots[idx].busy = false;
         if let Ok(bytes) = &result {
@@ -791,18 +1041,12 @@ impl ServeCore {
         let backend = self.load_artifact(&path)?;
         st.slots[idx].backend = Some(backend);
         st.slots[idx].spill = None;
-        let _ = std::fs::remove_file(&path);
+        remove_spill_file(&path, "reload");
         Ok(())
     }
 
-    /// Enqueue one request for `id`, re-arming `ticket` to receive the
-    /// result. The ticket is re-armed only once the request is accepted —
-    /// a failed submit leaves the ticket's previous completion intact.
-    /// Zero-allocation on the warm resident path: the batch travels as an
-    /// `Arc` clone and the queue is pre-sized. A submit against a
-    /// **spilled** adapter transparently reloads it from disk first
-    /// (spilling the LRU resident if the budget requires), so callers
-    /// never observe eviction-to-disk except as latency.
+    /// Enqueue one batch request for `id` — the eval/train convenience
+    /// over [`ServeCore::submit_request`].
     pub fn submit(
         &self,
         id: AdapterId,
@@ -810,7 +1054,70 @@ impl ServeCore {
         kind: ReqKind,
         ticket: &Ticket,
     ) -> Result<(), ServeError> {
-        let mut st = self.shared.state.lock().unwrap();
+        let req = match kind {
+            ReqKind::Eval => Request::Eval { batch: Arc::clone(batch) },
+            ReqKind::Train(hyper) => Request::Train { batch: Arc::clone(batch), hyper },
+        };
+        self.submit_request(id, req, ticket)
+    }
+
+    /// Enqueue one generation request — the decode convenience over
+    /// [`ServeCore::submit_request`]. Tokens stream into `ticket` as the
+    /// generation advances.
+    pub fn submit_generate(
+        &self,
+        id: AdapterId,
+        prompt: &Arc<Vec<i32>>,
+        max_new_tokens: usize,
+        greedy: bool,
+        ticket: &Ticket,
+    ) -> Result<(), ServeError> {
+        self.submit_request(
+            id,
+            Request::Generate { prompt: Arc::clone(prompt), max_new_tokens, greedy },
+            ticket,
+        )
+    }
+
+    /// Enqueue one request for `id`, re-arming `ticket` to receive the
+    /// result. The ticket is re-armed only once the request is accepted —
+    /// a failed submit leaves the ticket's previous completion intact.
+    /// Zero-allocation on the warm resident path: batches and prompts
+    /// travel as `Arc` clones and the queue is pre-sized. A submit
+    /// against a **spilled** adapter transparently reloads it from disk
+    /// first (spilling the LRU resident if the budget requires), so
+    /// callers never observe eviction-to-disk except as latency.
+    ///
+    /// Generation requests are validated against the shared backbone
+    /// before anything is enqueued: decoder architecture, non-empty
+    /// in-vocab prompt, and `prompt.len() + max_new_tokens ≤ max_seq`
+    /// (the KV-cache budget) — violations return
+    /// [`ServeError::InvalidRequest`].
+    pub fn submit_request(
+        &self,
+        id: AdapterId,
+        req: Request,
+        ticket: &Ticket,
+    ) -> Result<(), ServeError> {
+        let kind = match req {
+            Request::Eval { batch } => JobKind::Batch { batch, req: ReqKind::Eval },
+            Request::Train { batch, hyper } => {
+                JobKind::Batch { batch, req: ReqKind::Train(hyper) }
+            }
+            Request::Generate { prompt, max_new_tokens, greedy } => {
+                let cfg = &self.backbone.cfg;
+                if !self.backbone.supports_decode()
+                    || prompt.is_empty()
+                    || prompt.len() + max_new_tokens > cfg.max_seq
+                    || prompt.iter().any(|&t| t < 0 || t as usize >= cfg.vocab_size)
+                {
+                    return Err(ServeError::InvalidRequest);
+                }
+                let stream = native::DecodeStream::new(&prompt);
+                JobKind::Gen(GenJob { prompt, max_new_tokens, greedy, stream, cache: None })
+            }
+        };
+        let mut st = relock(&self.shared.state);
         if st.shutdown {
             return Err(ServeError::ShuttingDown);
         }
@@ -850,7 +1157,6 @@ impl ServeCore {
         // nesting is deadlock-free.)
         ticket.arm();
         st.slots[idx].queue.push_back(Job {
-            batch: Arc::clone(batch),
             kind,
             ticket: Arc::clone(&ticket.inner),
             enqueued: Instant::now(),
@@ -864,19 +1170,19 @@ impl ServeCore {
     /// Block until every queued and in-flight request has completed.
     /// (Unpauses dispatch if the core started paused.)
     pub fn drain(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         if st.paused {
             st.paused = false;
             self.shared.work.notify_all();
         }
         while st.queued > 0 || st.slots.iter().any(|s| s.busy) {
-            st = self.shared.idle.wait(st).unwrap();
+            st = rewait(&self.shared.idle, st);
         }
     }
 
     /// Start dispatching (cores built with `start_paused`).
     pub fn resume(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         st.paused = false;
         drop(st);
         self.shared.work.notify_all();
@@ -885,13 +1191,13 @@ impl ServeCore {
     /// Stats for one adapter (live or already evicted, while its slot has
     /// not been reused).
     pub fn stats(&self, id: AdapterId) -> Option<AdapterStats> {
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         st.slots.iter().find(|s| s.id == id).map(|s| s.stats)
     }
 
     /// (id, label, stats) of every live adapter, in slot order.
     pub fn adapters(&self) -> Vec<(AdapterId, String, AdapterStats)> {
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         st.slots
             .iter()
             .filter(|s| s.live)
@@ -901,12 +1207,18 @@ impl ServeCore {
 
     /// Number of live adapters.
     pub fn num_adapters(&self) -> usize {
-        self.shared.state.lock().unwrap().slots.iter().filter(|s| s.live).count()
+        relock(&self.shared.state).slots.iter().filter(|s| s.live).count()
+    }
+
+    /// Workers whose compute has panicked (each panic retires the adapter
+    /// it was running; the worker itself recovers and keeps serving).
+    pub fn worker_panics(&self) -> u64 {
+        relock(&self.shared.state).worker_panics
     }
 
     /// Currently queued (undispatched) requests for one adapter.
     pub fn queue_len(&self, id: AdapterId) -> Option<usize> {
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         st.slots.iter().find(|s| s.live && s.id == id).map(|s| s.queue.len())
     }
 
@@ -914,14 +1226,14 @@ impl ServeCore {
     /// registration, refreshed by checkpoint/spill) — the bytes-per-
     /// adapter figure reports put next to Table 8 parameter counts.
     pub fn artifact_bytes(&self, id: AdapterId) -> Option<u64> {
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         st.slots.iter().find(|s| s.live && s.id == id).map(|s| s.artifact_bytes)
     }
 
     /// Whether the adapter's state is currently in memory (`false` ⇒
     /// spilled to disk awaiting a transparent reload).
     pub fn resident(&self, id: AdapterId) -> Option<bool> {
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         st.slots
             .iter()
             .find(|s| s.live && s.id == id)
@@ -930,7 +1242,7 @@ impl ServeCore {
 
     /// Number of adapters whose state is resident in memory.
     pub fn num_resident(&self) -> usize {
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         st.slots.iter().filter(|s| s.live && (s.backend.is_some() || s.busy)).count()
     }
 
@@ -942,14 +1254,14 @@ impl ServeCore {
     /// The recorded dispatch order (adapter id per dispatched request),
     /// up to `trace_cap` entries.
     pub fn trace(&self) -> Vec<AdapterId> {
-        self.shared.state.lock().unwrap().trace.clone()
+        relock(&self.shared.state).trace.clone()
     }
 }
 
 impl Drop for ServeCore {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = relock(&self.shared.state);
             st.shutdown = true;
             st.paused = false;
         }
@@ -961,10 +1273,10 @@ impl Drop for ServeCore {
         // API (that is `checkpoint`): remove the files this core owns,
         // then the spill directory if that leaves it empty. A caller-
         // provided directory with other contents is left in place.
-        let st = self.shared.state.lock().unwrap();
+        let st = relock(&self.shared.state);
         for s in &st.slots {
             if let Some(p) = &s.spill {
-                let _ = std::fs::remove_file(p);
+                remove_spill_file(p, "shutdown");
             }
         }
         drop(st);
@@ -987,11 +1299,22 @@ fn next_runnable(st: &ServeState) -> Option<usize> {
 fn worker_loop(shared: &Shared, burst: usize) {
     let mut ws = Workspace::new();
     let mut jobs: Vec<Job> = Vec::with_capacity(burst);
+    // Warm KV-caches: handed to a generation job on its first dispatch,
+    // returned here when it completes (buffers stay workspace-warm, so
+    // back-to-back generations allocate nothing).
+    let mut cache_pool: Vec<DecodeCache> = Vec::new();
+    // Tokens emitted by the current generation dispatch (streamed to the
+    // ticket once per burst; pre-sized, never reallocates).
+    let mut fresh: Vec<i32> = Vec::with_capacity(burst);
     loop {
-        // Dispatch: pick the next runnable slot round-robin and take up to
-        // `burst` of its queued jobs plus its backend.
+        // Dispatch: pick the next runnable slot round-robin. A generation
+        // at the queue head is dispatched ALONE and advanced by at most
+        // `burst` decode steps (then re-enqueued at the front if
+        // unfinished) — one dispatch consumes one burst quota whether it
+        // is `burst` one-shot requests or `burst` decode steps, which is
+        // what keeps round-robin fairness intact mid-generation.
         let (slot_idx, mut backend) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = relock(&shared.state);
             loop {
                 if !st.paused {
                     if let Some(idx) = next_runnable(&st) {
@@ -1001,9 +1324,19 @@ fn worker_loop(shared: &Shared, burst: usize) {
                         {
                             let slot = &mut st.slots[idx];
                             slot.busy = true;
-                            for _ in 0..burst {
-                                match slot.queue.pop_front() {
-                                    Some(j) => jobs.push(j),
+                            while jobs.len() < burst {
+                                match slot.queue.front() {
+                                    Some(j) if matches!(j.kind, JobKind::Gen(_)) => {
+                                        if jobs.is_empty() {
+                                            let job = slot.queue.pop_front().unwrap();
+                                            jobs.push(job);
+                                            slot.gen_inflight = true;
+                                        }
+                                        break;
+                                    }
+                                    Some(_) => {
+                                        jobs.push(slot.queue.pop_front().unwrap());
+                                    }
                                     None => break,
                                 }
                             }
@@ -1011,7 +1344,8 @@ fn worker_loop(shared: &Shared, burst: usize) {
                         st.queued -= jobs.len();
                         // Record per entry up to the configured cap (never
                         // past `trace_cap`, so pushes never reallocate and
-                        // the trace has no mid-stream gaps).
+                        // the trace has no mid-stream gaps). A generation
+                        // dispatch records one entry.
                         if st.trace.len() < st.trace_cap {
                             let room = st.trace_cap - st.trace.len();
                             for _ in 0..jobs.len().min(room) {
@@ -1026,50 +1360,159 @@ fn worker_loop(shared: &Shared, burst: usize) {
                 if st.shutdown && st.queued == 0 {
                     return;
                 }
-                st = shared.work.wait(st).unwrap();
+                st = rewait(&shared.work, st);
             }
         };
 
         // Service the burst outside the scheduler lock; other workers keep
-        // dispatching other adapters meanwhile.
+        // dispatching other adapters meanwhile. Panics are CONTAINED at
+        // this boundary: no scheduler lock is held during compute, so a
+        // panicking adapter can neither poison it nor kill the worker —
+        // the catch below retires the offending adapter, fails its
+        // tickets with `WorkerPanicked`, and the worker keeps serving.
         let mut done = 0u64;
         let mut train_steps = 0u64;
+        let mut tokens_generated = 0u64;
         let mut service_ns = 0u64;
         let mut latency_ns = 0u64;
         let mut max_latency_ns = 0u64;
-        for job in jobs.drain(..) {
-            let svc = Instant::now();
-            let (loss, metric) = match job.kind {
-                ReqKind::Eval => {
-                    native::evaluate_into(&backend.model, &job.batch, &mut backend.bufs, &mut ws)
+        // Unfinished generation to push back to the queue front.
+        let mut requeue: Option<Job> = None;
+        // Ticket of the job being computed right now (failed on panic).
+        let mut current: Option<Arc<TicketInner>> = None;
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            while !jobs.is_empty() {
+                let mut job = jobs.remove(0);
+                current = Some(Arc::clone(&job.ticket));
+                let svc = Instant::now();
+                let completed = match job.kind {
+                    JobKind::Batch { ref batch, req } => {
+                        let (loss, metric) = match req {
+                            ReqKind::Eval => native::evaluate_into(
+                                &backend.model,
+                                batch,
+                                &mut backend.bufs,
+                                &mut ws,
+                            ),
+                            ReqKind::Train(hyper) => {
+                                train_steps += 1;
+                                backend.step_core(batch, &hyper, &mut ws)
+                            }
+                        };
+                        complete(&job.ticket, loss, metric, &backend.bufs.preds);
+                        true
+                    }
+                    JobKind::Gen(ref mut gen) => {
+                        if gen.cache.is_none() {
+                            let mut c = cache_pool.pop().unwrap_or_default();
+                            c.ensure(&backend.model, &mut ws);
+                            gen.cache = Some(c);
+                        }
+                        fresh.clear();
+                        let finished = gen.advance(&backend.model, &mut ws, burst, &mut fresh);
+                        tokens_generated += fresh.len() as u64;
+                        if !fresh.is_empty() {
+                            stream_tokens(&job.ticket, &fresh);
+                        }
+                        if finished {
+                            if let Some(c) = gen.cache.take() {
+                                cache_pool.push(c);
+                            }
+                            complete_gen(&job.ticket);
+                        }
+                        finished
+                    }
+                };
+                current = None;
+                service_ns += svc.elapsed().as_nanos() as u64;
+                if completed {
+                    done += 1;
+                    let lat = job.enqueued.elapsed().as_nanos() as u64;
+                    latency_ns += lat;
+                    max_latency_ns = max_latency_ns.max(lat);
+                } else {
+                    requeue = Some(job);
                 }
-                ReqKind::Train(hyper) => {
-                    train_steps += 1;
-                    backend.step_core(&job.batch, &hyper, &mut ws)
+            }
+        }))
+        .is_err();
+
+        if panicked {
+            // The adapter's state may be mid-update — retire it (its
+            // backend is dropped, queued and in-flight requests fail with
+            // the typed error) and keep the worker and every other
+            // adapter serving. The scheduler mutex was NOT held across
+            // the panic, so no lock is poisoned.
+            let mut failed: Vec<Arc<TicketInner>> = Vec::new();
+            if let Some(t) = current.take() {
+                failed.push(t);
+            }
+            failed.extend(jobs.drain(..).map(|j| j.ticket));
+            if let Some(job) = requeue.take() {
+                failed.push(job.ticket);
+            }
+            {
+                let mut st = relock(&shared.state);
+                st.worker_panics += 1;
+                let n_queued = st.slots[slot_idx].queue.len();
+                st.queued -= n_queued;
+                let slot = &mut st.slots[slot_idx];
+                crate::warn_log!(
+                    "serve worker panic while running adapter {}; retiring it",
+                    slot.id
+                );
+                slot.live = false;
+                slot.busy = false;
+                slot.gen_inflight = false;
+                slot.draining = false;
+                failed.extend(slot.queue.drain(..).map(|j| j.ticket));
+                if let Some(p) = slot.spill.take() {
+                    remove_spill_file(&p, "panic-retire");
                 }
-            };
-            complete(&job.ticket, loss, metric, &backend.bufs.preds);
-            done += 1;
-            service_ns += svc.elapsed().as_nanos() as u64;
-            let lat = job.enqueued.elapsed().as_nanos() as u64;
-            latency_ns += lat;
-            max_latency_ns = max_latency_ns.max(lat);
+            }
+            shared.work.notify_all();
+            shared.idle.notify_all();
+            for t in &failed {
+                fail(t, ServeError::WorkerPanicked);
+            }
+            drop(backend);
+            continue;
         }
 
-        // Put the adapter state back and publish stats.
-        {
-            let mut st = shared.state.lock().unwrap();
+        // Put the adapter state back, re-enqueue an unfinished
+        // generation (front of the queue: generation order is preserved,
+        // round-robin moves on to other adapters in between), and publish
+        // stats. If the slot was evicted while we computed, the orphaned
+        // generation fails with `Evicted` (outside the lock).
+        let orphan = {
+            let mut st = relock(&shared.state);
+            let live = st.slots[slot_idx].live;
+            let mut orphan = None;
+            if let Some(job) = requeue.take() {
+                if live {
+                    st.slots[slot_idx].queue.push_front(job);
+                    st.queued += 1;
+                } else {
+                    orphan = Some(job);
+                }
+            }
             let slot = &mut st.slots[slot_idx];
             slot.backend = Some(backend);
             slot.busy = false;
+            slot.gen_inflight = false;
             slot.stats.processed += done;
             slot.stats.train_steps += train_steps;
+            slot.stats.tokens_generated += tokens_generated;
             slot.stats.service_ns += service_ns;
             slot.stats.total_latency_ns += latency_ns;
             slot.stats.max_latency_ns = slot.stats.max_latency_ns.max(max_latency_ns);
-        }
+            orphan
+        };
         shared.work.notify_all();
         shared.idle.notify_all();
+        if let Some(job) = orphan {
+            fail(&job.ticket, ServeError::Evicted);
+        }
     }
 }
 
@@ -1154,7 +1597,7 @@ mod tests {
 
         // Paused ⇒ the job is still queued; strict evict must refuse and
         // report exactly how many requests are pending.
-        assert_eq!(core.evict(id), Err(ServeError::PendingRequests(1)));
+        assert!(matches!(core.evict(id), Err(ServeError::PendingRequests(1))));
 
         // Explicit reject: queued requests fail, the count comes back.
         let (backend, failed) = core.evict_with(id, EvictMode::Reject).unwrap();
@@ -1234,6 +1677,137 @@ mod tests {
         let be = core.evict(id2).unwrap();
         assert_eq!(be.opt.step, 2, "optimizer step count survives the round-trip");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn tiny_dec_cfg() -> ModelConfig {
+        ModelConfig {
+            arch: Arch::Decoder,
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 12,
+            n_classes: 0,
+        }
+    }
+
+    #[test]
+    fn generate_streams_tokens_and_matches_direct_decode() {
+        let cfg = tiny_dec_cfg();
+        let mut rng = Rng::new(910);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts = ServeOptions { workers: 2, burst: 2, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+
+        let prompt = Arc::new(vec![1i32, 5, 9]);
+        let max_new = 6usize;
+        // Direct reference: identical construction, model-level decode.
+        let direct = NativeBackend::for_adapter(&bb, &lora_peft(), 7);
+        let mut ws = Workspace::new();
+        let mut cache = crate::model::native::DecodeCache::new();
+        let mut want = Vec::new();
+        crate::model::native::generate_into(
+            &direct.model,
+            &prompt,
+            max_new,
+            true,
+            &mut cache,
+            &mut ws,
+            &mut want,
+        );
+        assert_eq!(want.len(), max_new);
+
+        let ticket = Ticket::new(max_new);
+        core.submit_generate(id, &prompt, max_new, true, &ticket).unwrap();
+        // Stream: wait for the first token, then the rest.
+        let n1 = ticket.wait_tokens(1);
+        assert!(n1 >= 1);
+        let (loss, metric) = ticket.wait().unwrap();
+        assert_eq!(loss, 0.0);
+        assert_eq!(metric, max_new as f64);
+        ticket.with_tokens(|t| assert_eq!(t, &want[..], "served decode must be bit-exact"));
+        let stats = core.stats(id).unwrap();
+        assert_eq!(stats.processed, 1);
+        assert_eq!(stats.tokens_generated, max_new as u64);
+    }
+
+    #[test]
+    fn generate_validation_rejects_malformed_requests() {
+        let mut rng = Rng::new(911);
+        // Encoder backbone: generation is meaningless.
+        let enc = ServeCore::new(
+            Arc::new(Backbone::random(&tiny_cfg(), &mut rng)),
+            ServeOptions { workers: 1, ..Default::default() },
+        );
+        let id_e = enc.register("lora_r3", &lora_peft(), 7);
+        let t = Ticket::new(4);
+        let p = Arc::new(vec![1i32, 2]);
+        assert_eq!(
+            enc.submit_generate(id_e, &p, 2, true, &t),
+            Err(ServeError::InvalidRequest)
+        );
+
+        let cfg = tiny_dec_cfg();
+        let core = ServeCore::new(
+            Arc::new(Backbone::random(&cfg, &mut rng)),
+            ServeOptions { workers: 1, ..Default::default() },
+        );
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let empty: Arc<Vec<i32>> = Arc::new(Vec::new());
+        assert_eq!(
+            core.submit_generate(id, &empty, 2, true, &t),
+            Err(ServeError::InvalidRequest),
+            "empty prompt"
+        );
+        assert_eq!(
+            core.submit_generate(id, &p, cfg.max_seq, true, &t),
+            Err(ServeError::InvalidRequest),
+            "prompt + max_new past max_seq"
+        );
+        let oov = Arc::new(vec![cfg.vocab_size as i32 + 3]);
+        assert_eq!(
+            core.submit_generate(id, &oov, 2, true, &t),
+            Err(ServeError::InvalidRequest),
+            "out-of-vocab prompt token"
+        );
+        // A well-formed request on the same core still works.
+        core.submit_generate(id, &p, 4, true, &t).unwrap();
+        assert!(t.wait().is_ok());
+    }
+
+    #[test]
+    fn worker_panic_retires_adapter_not_core() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(912);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts = ServeOptions { workers: 1, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let bad = core.register("bad", &lora_peft(), 7);
+        let good = core.register("good", &lora_peft(), 8);
+
+        // Token id far past the vocab: the embedding gather panics on the
+        // worker. The panic must surface as a typed error, not poison the
+        // scheduler.
+        let mut batch = (*tiny_batch(&cfg, 21)).clone();
+        batch.tokens[0] = cfg.vocab_size as i32 + 1000;
+        let batch = Arc::new(batch);
+        let ticket = Ticket::new(batch.batch);
+        core.submit(bad, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert_eq!(ticket.wait(), Err(ServeError::WorkerPanicked));
+        assert_eq!(core.worker_panics(), 1);
+
+        // The offending adapter is retired...
+        assert_eq!(core.num_adapters(), 1);
+        assert_eq!(
+            core.submit(bad, &tiny_batch(&cfg, 22), ReqKind::Eval, &ticket),
+            Err(ServeError::UnknownAdapter)
+        );
+        // ...while the sibling (and the worker) keep serving normally.
+        core.submit(good, &tiny_batch(&cfg, 23), ReqKind::Eval, &ticket).unwrap();
+        assert!(ticket.wait().is_ok());
+        core.drain();
     }
 
     #[test]

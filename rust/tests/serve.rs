@@ -375,7 +375,7 @@ fn evict_semantics_are_explicit_about_pending_work() {
         core.submit(id, &batch, ReqKind::Eval, t).unwrap();
     }
     // Strict evict refuses while the (paused) queue holds work.
-    assert_eq!(core.evict(id), Err(ServeError::PendingRequests(3)));
+    assert!(matches!(core.evict(id), Err(ServeError::PendingRequests(3))));
 
     // Reject: queued requests fail immediately, with the count reported.
     let (be, failed) = core.evict_with(id, EvictMode::Reject).unwrap();
@@ -434,4 +434,52 @@ fn capped_queue_completes_accepted_requests() {
     let stats = core.stats(id).unwrap();
     assert_eq!(stats.processed as usize, accepted);
     assert_eq!(stats.rejected as usize, rejected);
+}
+
+/// Spill I/O failures must never lose adapter state. With an unwritable
+/// spill directory (a path below a regular FILE, so `create_dir_all`
+/// fails), the LRU budget cannot be enforced — the would-be victim must
+/// stay resident, keep serving bit-exactly, and still hand back its real
+/// state on eviction. A "successful" evict over a failed spill write
+/// would silently lose the adapter.
+#[test]
+fn unwritable_spill_dir_keeps_adapters_resident() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(805);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let blocker =
+        std::env::temp_dir().join(format!("psoft_spill_blocker_{}", std::process::id()));
+    std::fs::write(&blocker, b"not a directory").unwrap();
+    let opts = ServeOptions {
+        workers: 1,
+        max_resident: 1,
+        spill_dir: Some(blocker.join("sub")),
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let a = core.register("spill_a", &peft, 70);
+    let b = core.register("spill_b", &peft, 71); // would spill `a`
+
+    assert_eq!(core.resident(a), Some(true), "failed spill must leave the slot resident");
+    assert_eq!(core.resident(b), Some(true));
+    assert_eq!(core.num_resident(), 2, "budget is best-effort when spill I/O fails");
+
+    // Both adapters still serve, bit-exactly vs a direct backend.
+    let batch = batch_for(&cfg, 72);
+    let mut direct = NativeBackend::for_adapter(&bb, &peft, 70);
+    let mut ws = Workspace::new();
+    let (want, _) = native::evaluate_into(&direct.model, &batch, &mut direct.bufs, &mut ws);
+    let t = Ticket::new(2);
+    core.submit(a, &batch, ReqKind::Eval, &t).unwrap();
+    assert_eq!(t.wait().unwrap().0, want);
+    core.submit(b, &batch, ReqKind::Eval, &t).unwrap();
+    t.wait().unwrap();
+
+    // Eviction hands back real state: nothing was lost to a fake spill.
+    core.drain();
+    let be = core.evict(a).unwrap();
+    assert_eq!(be.opt.step, 0);
+    drop(core);
+    std::fs::remove_file(&blocker).ok();
 }

@@ -6,6 +6,13 @@
 //! heap allocations once every pool is warm, across all four measured
 //! adapter families (LoRA, PSOFT, OFTv2, BOFT).
 //!
+//! The same property is pinned for **autoregressive decode**: a warm
+//! generation round-trip — submit_generate (Arc-clone prompt, inline
+//! resumable job, re-armed ticket), per-dispatch decode bursts against a
+//! worker-pooled KV-cache, token streaming into the pre-sized ticket
+//! buffer, completion — allocates nothing once the cache and workspace
+//! pools are warm.
+//!
 //! One worker is used so the single worker's shape-keyed `Workspace`
 //! provably warms on every (adapter, batch-shape) pair during warmup; the
 //! allocation counter is global, so worker-side and client-side
@@ -141,5 +148,48 @@ fn warm_serve_loop_performs_zero_allocations() {
         "warm serve loop allocated {} times across 5 rounds × {} adapters",
         after - before,
         ids.len()
+    );
+
+    // ---- Decode: the warm per-token generation loop is also free ------
+    let dcfg = ModelConfig {
+        arch: Arch::Decoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 24,
+        n_classes: 0,
+    };
+    let mut drng = Rng::new(6002);
+    let dbb = Arc::new(Backbone::random(&dcfg, &mut drng));
+    let dopts = ServeOptions { workers: 1, queue_cap: 16, burst: 2, ..Default::default() };
+    let dcore = ServeCore::new(Arc::clone(&dbb), dopts);
+    let dpeft =
+        PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let gid = dcore.register("lora_r3", &dpeft, 500);
+    let prompt = Arc::new(vec![1i32, 4, 2]);
+    let max_new = 8usize;
+    let gticket = Ticket::new(max_new);
+
+    // Warmup: generations size the per-worker KV-cache pool, the decode
+    // workspace shapes, and the ticket's token buffer.
+    for _ in 0..3 {
+        dcore.submit_generate(gid, &prompt, max_new, true, &gticket).unwrap();
+        gticket.wait().unwrap();
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        dcore.submit_generate(gid, &prompt, max_new, true, &gticket).unwrap();
+        let (_, emitted) = gticket.wait().unwrap();
+        assert_eq!(emitted as usize, max_new);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "warm decode loop allocated {} times across 3 generations × {max_new} tokens",
+        after - before
     );
 }
