@@ -1,9 +1,13 @@
 //! Decode bench: autoregressive generation through the KV-cache path —
-//! model-level prefill and per-token latency, plus aggregate tokens/sec
+//! model-level prefill and per-token latency, aggregate tokens/sec
 //! through the serve core at 1 vs 4 vs 16 decoder adapters on one shared
-//! frozen backbone. Emits `BENCH_decode.json`, the baseline the CI bench
-//! gate diffs against (see `tools/bench_gate`). `PSOFT_BENCH_FAST=1`
-//! switches to the short deterministic smoke mode CI runs.
+//! frozen backbone, and a **continuous-batching axis**: a fixed 16-
+//! generation workload on one adapter swept over `decode_batch` g = 1
+//! (sequential baseline) / 4 / 16 lockstep lanes. Emits
+//! `BENCH_decode.json`, the baseline the CI bench gate diffs against
+//! (see `tools/bench_gate`; refresh the committed copy with
+//! `bench_gate --update-baselines`). `PSOFT_BENCH_FAST=1` switches to
+//! the short deterministic smoke mode CI runs.
 //!
 //! Per-request shapes are `[1, d]`, far below the matmul threading
 //! thresholds, so each worker decodes single-threaded: measured scaling
@@ -125,6 +129,10 @@ fn main() {
             workers,
             queue_cap: 2 * gens_per_adapter + 4,
             burst: 4,
+            // Pin the ungrouped path: these tokens_per_sec_{1,16} keys
+            // gate the single-lane resumable decode the PR4 floors were
+            // authored for; the group axis below sweeps g explicitly.
+            decode_batch: 1,
             ..Default::default()
         };
         let core = ServeCore::new(Arc::clone(&bb), opts);
@@ -196,6 +204,74 @@ fn main() {
     let scaling = if tps_at(1) > 0.0 { tps_at(16) / tps_at(1) } else { 0.0 };
     println!("16-adapter aggregate decode throughput = {scaling:.2}x single-adapter");
 
+    // --- Continuous batching: g same-adapter generations in lockstep ----
+    // Fixed workload (16 generations on ONE adapter), swept over the
+    // group width: decode_batch = 1 is the sequential baseline (each
+    // generation decodes alone), 16 advances all of them through one
+    // [16, d] forward per position. Same-adapter work is serialized by
+    // the scheduler, so the measured win is pure batching amortization.
+    let total_gens = 16usize;
+    let mut group_results: Vec<(usize, u64, f64, f64)> = Vec::new();
+    let mut group_csv = Vec::new();
+    for &g in &[1usize, 4, 16] {
+        let opts = ServeOptions {
+            workers: 2,
+            queue_cap: total_gens + 4,
+            burst: 4,
+            decode_batch: g,
+            ..Default::default()
+        };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let (label, peft) = peft_for(0);
+        let id = core.register(&label, &peft, 4000);
+        let mut prng = Rng::new(700);
+        let prompt: Arc<Vec<i32>> =
+            Arc::new((0..prompt_len).map(|_| prng.below(cfg.vocab_size) as i32).collect());
+
+        // Warmup sizes the lane pool and the [g, *] group scratch.
+        let warm: Vec<Ticket> = (0..g).map(|_| Ticket::new(max_new)).collect();
+        for t in &warm {
+            core.submit_generate(id, &prompt, max_new, true, t).unwrap();
+        }
+        core.drain();
+
+        let tickets: Vec<Ticket> = (0..total_gens).map(|_| Ticket::new(max_new)).collect();
+        let sw = Stopwatch::start();
+        for t in &tickets {
+            core.submit_generate(id, &prompt, max_new, true, t).unwrap();
+        }
+        core.drain();
+        let wall_secs = sw.secs();
+        let mut tokens = 0u64;
+        for t in &tickets {
+            let (_, emitted) = t.wait().unwrap();
+            tokens += emitted as u64;
+        }
+        let tokens_per_sec = tokens as f64 / wall_secs.max(1e-9);
+        let stats = core.stats(id).unwrap();
+        println!(
+            "group {g:>2}: {total_gens} generations, {tokens:>6} tokens in \
+             {wall_secs:>7.3}s = {tokens_per_sec:>9.1} tok/s \
+             (mean group {:.2}, max {})",
+            stats.mean_group_size(),
+            stats.max_group_size
+        );
+        group_csv.push(format!("{g},{total_gens},{tokens},{wall_secs:.4},{tokens_per_sec:.2}"));
+        group_results.push((g, tokens, wall_secs, tokens_per_sec));
+    }
+    write_csv(
+        "decode_group_bench",
+        "group,generations,tokens,wall_s,tokens_per_sec",
+        &group_csv,
+    );
+    let gtps = |g: usize| -> f64 {
+        group_results.iter().find(|c| c.0 == g).map(|c| c.3).unwrap_or(0.0)
+    };
+    let group_scaling = if gtps(1) > 0.0 { gtps(16) / gtps(1) } else { 0.0 };
+    println!(
+        "16-lane lockstep decode throughput = {group_scaling:.2}x the sequential baseline"
+    );
+
     let json = Json::obj(vec![
         (
             "workload",
@@ -229,6 +305,26 @@ fn main() {
         ("tokens_per_sec_1", Json::Num(tps_at(1))),
         ("tokens_per_sec_16", Json::Num(tps_at(16))),
         ("scaling_16x_over_1x", Json::Num(scaling)),
+        (
+            "group_configs",
+            Json::Arr(
+                group_results
+                    .iter()
+                    .map(|&(g, tokens, wall_secs, tps)| {
+                        Json::obj(vec![
+                            ("group", Json::Num(g as f64)),
+                            ("generations", Json::Num(total_gens as f64)),
+                            ("tokens", Json::Num(tokens as f64)),
+                            ("wall_secs", Json::Num(wall_secs)),
+                            ("tokens_per_sec", Json::Num(tps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("tokens_per_sec_g1", Json::Num(gtps(1))),
+        ("tokens_per_sec_g16", Json::Num(gtps(16))),
+        ("group_scaling_16x_over_1x", Json::Num(group_scaling)),
     ]);
     std::fs::write("BENCH_decode.json", json.dump_pretty()).expect("write BENCH_decode.json");
     eprintln!("wrote BENCH_decode.json");

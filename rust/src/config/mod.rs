@@ -447,11 +447,30 @@ pub struct ServeConfig {
     /// uses it when `--max-new` is not given; each request may still ask
     /// for less, bounded by the backbone's `max_seq`).
     pub max_new_tokens: usize,
+    /// Continuous-batching width: one dispatch gathers up to this many
+    /// same-adapter in-flight generations into a lockstep decode group
+    /// (`[g, d]` matmuls amortize the backbone weight reads). 1 disables
+    /// grouping (every generation decodes alone, the pre-batching
+    /// behavior). Also caps how many queued eval requests one coalesced
+    /// dispatch merges when `coalesce_eval` is on.
+    pub decode_batch: usize,
+    /// Merge queued same-adapter eval requests (matching seq length and
+    /// target kind) into one batched forward, scattering per-request
+    /// losses back to their tickets. Off by default.
+    pub coalesce_eval: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 4, queue_cap: 32, burst: 4, max_resident: 0, max_new_tokens: 16 }
+        ServeConfig {
+            workers: 4,
+            queue_cap: 32,
+            burst: 4,
+            max_resident: 0,
+            max_new_tokens: 16,
+            decode_batch: 4,
+            coalesce_eval: false,
+        }
     }
 }
 
@@ -466,6 +485,8 @@ impl ServeConfig {
         read_usize(s, "burst", &mut sc.burst);
         read_usize(s, "max_resident", &mut sc.max_resident);
         read_usize(s, "max_new_tokens", &mut sc.max_new_tokens);
+        read_usize(s, "decode_batch", &mut sc.decode_batch);
+        read_bool(s, "coalesce_eval", &mut sc.coalesce_eval);
         sc
     }
 }
@@ -586,6 +607,12 @@ fn read_f64(obj: &Json, key: &str, out: &mut f64) {
     }
 }
 
+fn read_bool(obj: &Json, key: &str, out: &mut bool) {
+    if let Some(v) = obj.get(key).as_bool() {
+        *out = v;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -640,7 +667,8 @@ mod tests {
     #[test]
     fn serve_section_parses_with_defaults() {
         let tree = toml::parse(
-            "[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\nmax_new_tokens = 24\n",
+            "[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\nmax_new_tokens = 24\n\
+             decode_batch = 16\ncoalesce_eval = true\n",
         )
         .unwrap();
         let sc = ServeConfig::from_toml(&tree);
@@ -648,10 +676,14 @@ mod tests {
         assert_eq!(sc.queue_cap, 64);
         assert_eq!(sc.max_resident, 2);
         assert_eq!(sc.max_new_tokens, 24);
+        assert_eq!(sc.decode_batch, 16);
+        assert!(sc.coalesce_eval);
         assert_eq!(sc.burst, ServeConfig::default().burst);
         // Absent section ⇒ pure defaults.
         let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
         assert_eq!(sc2.workers, ServeConfig::default().workers);
+        assert_eq!(sc2.decode_batch, 4);
+        assert!(!sc2.coalesce_eval);
     }
 
     #[test]

@@ -193,6 +193,8 @@ pub fn serve_report(
             processed: s.processed,
             train_steps: s.train_steps,
             tokens_generated: s.tokens_generated,
+            mean_group_size: s.mean_group_size(),
+            max_group_size: s.max_group_size,
             rejected: s.rejected,
             mean_latency_ms: s.mean_latency_ms(),
             max_latency_ms: s.max_latency_ms(),
@@ -381,6 +383,10 @@ mod tests {
             "serve report carries the per-adapter artifact size"
         );
         assert!(report.to_csv().contains("artifact_bytes"));
+        assert!(
+            report.to_csv().contains("mean_group_size"),
+            "serve report carries batching-efficiency columns"
+        );
         assert!((report.throughput_rps() - 3.0).abs() < 1e-9);
         assert!(report.to_markdown().contains("lora_r3"));
         assert!(report.to_csv().contains("lora_r3"));

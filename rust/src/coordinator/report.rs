@@ -211,6 +211,11 @@ pub struct ServeRow {
     pub train_steps: u64,
     /// Tokens emitted by generation requests (decoder serving).
     pub tokens_generated: u64,
+    /// Mean lanes per batched dispatch (continuous batching / eval
+    /// coalescing efficiency; 0.0 when nothing was batched).
+    pub mean_group_size: f64,
+    /// Largest single dispatch group for this adapter.
+    pub max_group_size: u64,
     pub rejected: u64,
     pub mean_latency_ms: f64,
     pub max_latency_ms: f64,
@@ -251,17 +256,19 @@ impl ServeReport {
             self.workers,
             self.throughput_rps()
         );
-        out.push_str("| Adapter | Label | Served | Train | Tokens | Rejected |");
-        out.push_str(" Mean lat (ms) | Max lat (ms) | Mean svc (ms) | Artifact |\n");
-        out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str("| Adapter | Label | Served | Train | Tokens | Grp mean | Grp max |");
+        out.push_str(" Rejected | Mean lat (ms) | Max lat (ms) | Mean svc (ms) | Artifact |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
+                "| {} | {} | {} | {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
                 r.id,
                 r.label,
                 r.processed,
                 r.train_steps,
                 r.tokens_generated,
+                r.mean_group_size,
+                r.max_group_size,
                 r.rejected,
                 r.mean_latency_ms,
                 r.max_latency_ms,
@@ -274,16 +281,18 @@ impl ServeReport {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "adapter,label,processed,train_steps,tokens_generated,rejected,mean_latency_ms,max_latency_ms,mean_service_ms,artifact_bytes\n",
+            "adapter,label,processed,train_steps,tokens_generated,mean_group_size,max_group_size,rejected,mean_latency_ms,max_latency_ms,mean_service_ms,artifact_bytes\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
+                "{},{},{},{},{},{:.4},{},{},{:.4},{:.4},{:.4},{}\n",
                 r.id,
                 r.label,
                 r.processed,
                 r.train_steps,
                 r.tokens_generated,
+                r.mean_group_size,
+                r.max_group_size,
                 r.rejected,
                 r.mean_latency_ms,
                 r.max_latency_ms,
@@ -313,6 +322,8 @@ impl ServeReport {
                                 ("processed", Json::Num(r.processed as f64)),
                                 ("train_steps", Json::Num(r.train_steps as f64)),
                                 ("tokens_generated", Json::Num(r.tokens_generated as f64)),
+                                ("mean_group_size", Json::Num(r.mean_group_size)),
+                                ("max_group_size", Json::Num(r.max_group_size as f64)),
                                 ("rejected", Json::Num(r.rejected as f64)),
                                 ("mean_latency_ms", Json::Num(r.mean_latency_ms)),
                                 ("max_latency_ms", Json::Num(r.max_latency_ms)),

@@ -214,6 +214,18 @@ impl<T: Scalar> Matrix<T> {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Copy row `src_row` of `self` into row `dst_row` of `dst`. The
+    /// row gather/scatter primitive the grouped decode path uses where
+    /// lanes diverge: each lane's K/V ring position is its own, so
+    /// freshly computed `[g, d]` rows scatter to per-lane destinations
+    /// one row at a time (and per-lane rows gather back into dense group
+    /// rows). Allocation-free.
+    #[inline]
+    pub fn copy_row_into(&self, src_row: usize, dst: &mut Self, dst_row: usize) {
+        assert_eq!(self.cols, dst.cols, "copy_row_into width mismatch");
+        dst.row_mut(dst_row).copy_from_slice(self.row(src_row));
+    }
+
     pub fn col(&self, j: usize) -> Vec<T> {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
@@ -404,6 +416,15 @@ mod tests {
         let m = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f32);
         assert_eq!(m.transpose().transpose(), m);
         assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn copy_row_into_scatters_one_row() {
+        let src = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f32);
+        let mut one = Mat::zeros(2, 3);
+        src.copy_row_into(3, &mut one, 1);
+        assert_eq!(one.row(1), src.row(3));
+        assert_eq!(one.row(0), &[0.0, 0.0, 0.0], "untargeted rows untouched");
     }
 
     #[test]

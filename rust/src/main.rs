@@ -55,7 +55,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "quiet", "pjrt"]);
+    let args = Args::from_env(&["verbose", "quiet", "pjrt", "coalesce-eval"]);
     if args.has_flag("verbose") {
         psoft::util::log::set_level(psoft::util::log::Level::Debug);
     } else if args.has_flag("quiet") {
@@ -109,7 +109,9 @@ fn usage() {
            psoft export --method all --sizes-json sizes.json   (artifact bytes per method)\n\
          import: validate + reload an artifact onto a matching backbone and evaluate\n\
            psoft import --artifact adapter.psoftad --suite glue --task cola --seed 42\n\
-         serve: --max-resident N spills least-recently-used adapters to --spill-dir\n\
+         serve: --max-resident N spills least-recently-used adapters to --spill-dir;\n\
+         \x20       --decode-batch G groups up to G same-adapter generations per lockstep\n\
+         \x20       dispatch, --coalesce-eval merges queued same-adapter eval batches\n\
          \n\
          see the module docs in src/main.rs for the full option reference"
     );
@@ -346,6 +348,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sc.queue_cap = args.usize("queue-cap", sc.queue_cap)?;
     sc.burst = args.usize("burst", sc.burst)?;
     sc.max_resident = args.usize("max-resident", sc.max_resident)?;
+    sc.decode_batch = args.usize("decode-batch", sc.decode_batch)?;
+    if args.has_flag("coalesce-eval") {
+        sc.coalesce_eval = true;
+    }
 
     let n_adapters = args.usize("adapters", 4)?;
     let rounds = args.usize("rounds", 16)?;
@@ -364,12 +370,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let core = ServeCore::new(Arc::clone(&bb), opts);
     psoft::info!(
-        "serve: {} adapters over {} workers (queue cap {}, burst {}, max resident {})",
+        "serve: {} adapters over {} workers (queue cap {}, burst {}, max resident {}, \
+         decode batch {}, coalesce_eval {})",
         n_adapters,
         sc.workers,
         sc.queue_cap,
         sc.burst,
-        if sc.max_resident == 0 { "unlimited".to_string() } else { sc.max_resident.to_string() }
+        if sc.max_resident == 0 { "unlimited".to_string() } else { sc.max_resident.to_string() },
+        sc.decode_batch,
+        sc.coalesce_eval
     );
 
     // Register the adapter fleet, cycling through the requested methods.
@@ -479,6 +488,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     sc.queue_cap = args.usize("queue-cap", sc.queue_cap)?;
     sc.burst = args.usize("burst", sc.burst)?;
     sc.max_resident = args.usize("max-resident", sc.max_resident)?;
+    sc.decode_batch = args.usize("decode-batch", sc.decode_batch)?;
     let max_new = args.usize("max-new", sc.max_new_tokens)?;
     let greedy = match args.get_or("mode", "greedy") {
         "greedy" => true,

@@ -23,6 +23,8 @@
 use super::{Layer, ModuleOp, NativeModel};
 use crate::config::{Arch, ModuleKind};
 use crate::linalg::{matmul_into, matmul_nt_into, matmul_tn_acc_slice, Mat, Workspace};
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// One batch of examples.
 #[derive(Clone, Debug)]
@@ -513,14 +515,32 @@ fn attention_step_into(
     scores: &mut Mat,
     out: &mut Mat,
 ) {
-    let d = q.cols;
+    attention_step_rows(q.row(0), kc, vc, len, heads, scores.row_mut(0), out.row_mut(0));
+}
+
+/// Row-slice core of [`attention_step_into`]: one query row against one
+/// K/V prefix. The grouped decode path calls this once per lane — each
+/// lane has its own (ragged) `len` and its own ring buffers, while the
+/// query rows live packed in one `[g, d]` matrix.
+fn attention_step_rows(
+    q_row: &[f32],
+    kc: &Mat,
+    vc: &Mat,
+    len: usize,
+    heads: usize,
+    scores_row: &mut [f32],
+    out_row: &mut [f32],
+) {
+    let d = q_row.len();
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    out.fill(0.0);
+    for v in out_row.iter_mut() {
+        *v = 0.0;
+    }
     for h in 0..heads {
         let col0 = h * hd;
-        let qrow = &q.row(0)[col0..col0 + hd];
-        let srow = &mut scores.row_mut(0)[..len];
+        let qrow = &q_row[col0..col0 + hd];
+        let srow = &mut scores_row[..len];
         for s2 in 0..len {
             let krow = &kc.row(s2)[col0..col0 + hd];
             let mut acc = 0.0f32;
@@ -538,7 +558,7 @@ fn attention_step_into(
         for v in srow.iter_mut() {
             *v /= sum;
         }
-        let orow = &mut out.row_mut(0)[col0..col0 + hd];
+        let orow = &mut out_row[col0..col0 + hd];
         for s2 in 0..len {
             let pv = srow[s2];
             if pv == 0.0 {
@@ -621,7 +641,14 @@ pub fn decode_step(
 /// matching the loss path's tie-break) when `greedy`, otherwise a
 /// categorical sample at temperature 1 driven by `rng`. Allocation-free.
 pub fn select_token(cache: &DecodeCache, greedy: bool, rng: &mut crate::util::rng::Rng) -> i32 {
-    let row = cache.logits.row(0);
+    select_token_row(cache.logits.row(0), greedy, rng)
+}
+
+/// [`select_token`] over an explicit logits row — the grouped decode path
+/// selects per lane from its row of the `[g, vocab]` logits block, with
+/// that lane's own sampling stream, so every lane's choice is bit-exact
+/// to its ungrouped run.
+pub fn select_token_row(row: &[f32], greedy: bool, rng: &mut crate::util::rng::Rng) -> i32 {
     if greedy {
         let mut best = f32::NEG_INFINITY;
         let mut arg = 0usize;
@@ -748,6 +775,430 @@ pub fn generate_into(
     stream.advance(model, cache, prompt, max_new_tokens, greedy, usize::MAX, ws, out);
 }
 
+// ---------------------------------------------------------------------------
+// Grouped decode (continuous batching)
+// ---------------------------------------------------------------------------
+
+/// One generation's private K/V state inside a decode group: per-layer
+/// `[max_seq, d]` ring buffers plus this lane's own decoded length.
+///
+/// Buffers are pooled through the caller's [`Workspace`] exactly like
+/// [`DecodeCache`]. A lane travels with its (resumable) serve job between
+/// dispatches, so a generation can leave one group and be re-grouped —
+/// by any worker — with whatever lanes are in flight at that moment.
+pub struct DecodeLane {
+    /// (n_layers, d_model, max_seq) the rings are sized for.
+    key: Option<(usize, usize, usize)>,
+    /// Per layer: cached K and V, rows `0..len` valid.
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    /// Positions decoded so far (== this lane's next absolute position —
+    /// lengths are **ragged** across a group).
+    len: usize,
+}
+
+impl Default for DecodeLane {
+    fn default() -> Self {
+        DecodeLane::new()
+    }
+}
+
+impl DecodeLane {
+    pub fn new() -> DecodeLane {
+        DecodeLane { key: None, k: Vec::new(), v: Vec::new(), len: 0 }
+    }
+
+    /// Size the rings for `model`, acquiring from `ws` (no-op when warm).
+    /// Unlike [`DecodeCache::ensure`] the decoded length is preserved — a
+    /// lane is re-ensured on every dispatch of a resumable generation;
+    /// call [`DecodeLane::reset`] to start a fresh generation.
+    pub fn ensure(&mut self, model: &NativeModel, ws: &mut Workspace) {
+        let cfg = &model.cfg;
+        let key = (model.layers.len(), cfg.d_model, cfg.max_seq);
+        if self.key != Some(key) {
+            self.release(ws);
+            for _ in 0..model.layers.len() {
+                self.k.push(ws.acquire(cfg.max_seq, cfg.d_model));
+                self.v.push(ws.acquire(cfg.max_seq, cfg.d_model));
+            }
+            self.key = Some(key);
+        }
+    }
+
+    /// Return the rings to `ws` (serve workers pool warm lanes this way
+    /// between generations).
+    pub fn release(&mut self, ws: &mut Workspace) {
+        for m in self.k.drain(..) {
+            if !m.data.is_empty() {
+                ws.release(m);
+            }
+        }
+        for m in self.v.drain(..) {
+            if !m.data.is_empty() {
+                ws.release(m);
+            }
+        }
+        self.key = None;
+        self.len = 0;
+    }
+
+    /// Positions decoded so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Forget the decoded prefix (rings stay warm for the next
+    /// generation).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+/// One lane's full state while joined to a group: its K/V rings, its
+/// resumable stream bookkeeping (prompt cursor + prompt-seeded RNG), and
+/// its request parameters.
+struct GroupLane {
+    kv: DecodeLane,
+    stream: DecodeStream,
+    prompt: Arc<Vec<i32>>,
+    max_new_tokens: usize,
+    greedy: bool,
+    done: bool,
+}
+
+/// Lockstep grouped decode: up to `g` same-model generations advance one
+/// position per step through shared `[g, d]` activations, amortizing
+/// every weight read the ungrouped `[1, d]` path repeats per stream.
+///
+/// **Bit-invariance contract:** each lane's token stream is identical, to
+/// the bit, to the same generation run alone through
+/// [`DecodeStream::advance`]/[`generate_into`] — regardless of which (or
+/// how many) lanes it is grouped with, and across lanes joining or
+/// leaving mid-flight. This holds because every op on the step path is
+/// row-local (matmuls accumulate over k in a fixed order per output row;
+/// norms, activations and sampling are per-row), attention runs per lane
+/// against that lane's own rings via the `linalg` row-scatter helpers
+/// (`copy_row_into`), and each lane selects from its own logits row with
+/// its own
+/// prompt-seeded RNG. `tests/decode.rs` pins the property per PEFT
+/// method, including mid-flight join/leave.
+///
+/// Group scratch is workspace-pooled and keyed by (model shape, group
+/// size): a warm fixed-size group allocates nothing; a lane finishing
+/// mid-burst shrinks the group, which re-acquires scratch at the new size
+/// (a pool miss only the first time each size is seen).
+pub struct GroupDecodeCache {
+    /// (n_layers, d_model, d_ff, max_seq, vocab, g) the scratch is sized
+    /// for.
+    skey: Option<(usize, usize, usize, usize, usize, usize)>,
+    // Group step scratch, all `[g, *]`:
+    x: Mat,
+    h1: Mat,
+    q: Mat,
+    krow: Mat,
+    vrow: Mat,
+    att: Mat,
+    att_out: Mat,
+    x_mid: Mat,
+    h2: Mat,
+    up: Mat,
+    gate: Mat,
+    ff: Mat,
+    down: Mat,
+    hidden: Mat,
+    /// Next-token logits `[g, vocab]` of the most recent step.
+    logits: Mat,
+    /// Attention-score scratch `[1, max_seq]`, reused lane-serially.
+    scores: Mat,
+    /// Group-row → lane-index packing of the current step (lanes that
+    /// finished stay joined but stop stepping).
+    active: Vec<usize>,
+    /// Joined lanes in join order ([`GroupDecodeCache::detach_first`]
+    /// pops from the front).
+    lanes: VecDeque<GroupLane>,
+}
+
+impl Default for GroupDecodeCache {
+    fn default() -> Self {
+        GroupDecodeCache::new()
+    }
+}
+
+impl GroupDecodeCache {
+    pub fn new() -> GroupDecodeCache {
+        let empty = || Mat::zeros(0, 0);
+        GroupDecodeCache {
+            skey: None,
+            x: empty(),
+            h1: empty(),
+            q: empty(),
+            krow: empty(),
+            vrow: empty(),
+            att: empty(),
+            att_out: empty(),
+            x_mid: empty(),
+            h2: empty(),
+            up: empty(),
+            gate: empty(),
+            ff: empty(),
+            down: empty(),
+            hidden: empty(),
+            logits: empty(),
+            scores: empty(),
+            active: Vec::new(),
+            lanes: VecDeque::new(),
+        }
+    }
+
+    /// Number of lanes currently joined (finished and unfinished).
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Whether joined lane `i` has completed its generation.
+    pub fn lane_done(&self, i: usize) -> bool {
+        self.lanes[i].done
+    }
+
+    /// Join a generation to the group: `kv` must be `ensure`d for this
+    /// model (and `reset` if the generation is fresh); `stream` carries
+    /// the resumable cursor. Returns the lane index (== join order).
+    pub fn join(
+        &mut self,
+        kv: DecodeLane,
+        stream: DecodeStream,
+        prompt: Arc<Vec<i32>>,
+        max_new_tokens: usize,
+        greedy: bool,
+    ) -> usize {
+        self.lanes.push_back(GroupLane {
+            kv,
+            stream,
+            prompt,
+            max_new_tokens,
+            greedy,
+            done: false,
+        });
+        self.lanes.len() - 1
+    }
+
+    /// Detach the oldest joined lane, handing back its rings, stream
+    /// cursor, and whether its generation completed. Callers detach every
+    /// lane after a burst (join order == detach order), returning
+    /// finished rings to their pool and unfinished ones to the job.
+    pub fn detach_first(&mut self) -> Option<(DecodeLane, DecodeStream, bool)> {
+        self.lanes.pop_front().map(|l| (l.kv, l.stream, l.done))
+    }
+
+    /// Size the group scratch for group size `g` (no-op when warm at the
+    /// same size).
+    fn ensure_scratch(&mut self, model: &NativeModel, g: usize, ws: &mut Workspace) {
+        let cfg = &model.cfg;
+        let key = (model.layers.len(), cfg.d_model, cfg.d_ff, cfg.max_seq, cfg.vocab_size, g);
+        if self.skey != Some(key) {
+            self.release_scratch(ws);
+            let (d, f, s, vsz) = (cfg.d_model, cfg.d_ff, cfg.max_seq, cfg.vocab_size);
+            self.x = ws.acquire(g, d);
+            self.h1 = ws.acquire(g, d);
+            self.q = ws.acquire(g, d);
+            self.krow = ws.acquire(g, d);
+            self.vrow = ws.acquire(g, d);
+            self.att = ws.acquire(g, d);
+            self.att_out = ws.acquire(g, d);
+            self.x_mid = ws.acquire(g, d);
+            self.h2 = ws.acquire(g, d);
+            self.up = ws.acquire(g, f);
+            self.gate = ws.acquire(g, f);
+            self.ff = ws.acquire(g, f);
+            self.down = ws.acquire(g, d);
+            self.hidden = ws.acquire(g, d);
+            self.logits = ws.acquire(g, vsz);
+            self.scores = ws.acquire(1, s);
+            self.skey = Some(key);
+        }
+    }
+
+    fn release_scratch(&mut self, ws: &mut Workspace) {
+        fn give(ws: &mut Workspace, m: &mut Mat) {
+            if !m.data.is_empty() {
+                let owned = std::mem::replace(m, Mat::zeros(0, 0));
+                ws.release(owned);
+            }
+        }
+        give(ws, &mut self.x);
+        give(ws, &mut self.h1);
+        give(ws, &mut self.q);
+        give(ws, &mut self.krow);
+        give(ws, &mut self.vrow);
+        give(ws, &mut self.att);
+        give(ws, &mut self.att_out);
+        give(ws, &mut self.x_mid);
+        give(ws, &mut self.h2);
+        give(ws, &mut self.up);
+        give(ws, &mut self.gate);
+        give(ws, &mut self.ff);
+        give(ws, &mut self.down);
+        give(ws, &mut self.hidden);
+        give(ws, &mut self.logits);
+        give(ws, &mut self.scores);
+        self.skey = None;
+    }
+
+    /// Return all scratch (and any still-joined lanes' rings) to `ws`.
+    pub fn release(&mut self, ws: &mut Workspace) {
+        self.release_scratch(ws);
+        while let Some(mut l) = self.lanes.pop_front() {
+            l.kv.release(ws);
+        }
+        self.active.clear();
+    }
+
+    /// Advance every unfinished lane by up to `steps` lockstep decode
+    /// steps. Freshly emitted tokens for lane `i` are appended to
+    /// `outs[i]` (one output stream per joined lane, in join order).
+    /// Lanes whose generation completes leave the lockstep immediately —
+    /// the group shrinks mid-burst — but stay joined (flagged done) until
+    /// detached. Returns true when every joined lane is done.
+    pub fn advance(
+        &mut self,
+        model: &NativeModel,
+        steps: usize,
+        ws: &mut Workspace,
+        outs: &mut [Vec<i32>],
+    ) -> bool {
+        let cfg = &model.cfg;
+        assert_eq!(cfg.arch, Arch::Decoder, "decode requires a decoder model");
+        assert_eq!(outs.len(), self.lanes.len(), "one output stream per joined lane");
+        let max_seq = cfg.max_seq;
+        let heads = cfg.n_heads;
+        for _ in 0..steps {
+            // Pack the lanes still running into group rows 0..g (the
+            // same completion predicate `DecodeStream::advance` checks
+            // before each ungrouped step).
+            {
+                let lanes = &mut self.lanes;
+                let active = &mut self.active;
+                active.clear();
+                for (i, l) in lanes.iter_mut().enumerate() {
+                    if !l.done && (l.stream.produced >= l.max_new_tokens || l.kv.len >= max_seq) {
+                        l.done = true;
+                    }
+                    if !l.done {
+                        active.push(i);
+                    }
+                }
+            }
+            let g = self.active.len();
+            if g == 0 {
+                return true;
+            }
+            self.ensure_scratch(model, g, ws);
+            let GroupDecodeCache {
+                lanes,
+                active,
+                x,
+                h1,
+                q,
+                krow,
+                vrow,
+                att,
+                att_out,
+                x_mid,
+                h2,
+                up,
+                gate,
+                ff,
+                down,
+                hidden,
+                logits,
+                scores,
+                ..
+            } = self;
+
+            // Gather: x row r = tok_emb[lane input] + pos_emb[lane pos].
+            for (r, &i) in active.iter().enumerate() {
+                let l = &lanes[i];
+                let inp = if l.stream.fed < l.prompt.len() {
+                    l.prompt[l.stream.fed]
+                } else {
+                    l.stream.last
+                };
+                let tok = inp as usize;
+                assert!(tok < cfg.vocab_size, "token {inp} out of vocab ({})", cfg.vocab_size);
+                let erow = model.tok_emb.row(tok);
+                let prow = model.pos_emb.row(l.kv.len);
+                for (o, (&e, &p)) in x.row_mut(r).iter_mut().zip(erow.iter().zip(prow)) {
+                    *o = e + p;
+                }
+            }
+
+            for (li, layer) in model.layers.iter().enumerate() {
+                rmsnorm_into(x, h1);
+                module(layer, ModuleKind::Q).forward_into(h1, q, ws);
+                module(layer, ModuleKind::K).forward_into(h1, krow, ws);
+                module(layer, ModuleKind::V).forward_into(h1, vrow, ws);
+                // Lanes diverge here: scatter each fresh K/V row to its
+                // lane's ring at that lane's own position, then run
+                // incremental attention per lane over its ragged prefix.
+                for (r, &i) in active.iter().enumerate() {
+                    let l = &mut lanes[i];
+                    let pos = l.kv.len;
+                    krow.copy_row_into(r, &mut l.kv.k[li], pos);
+                    vrow.copy_row_into(r, &mut l.kv.v[li], pos);
+                    attention_step_rows(
+                        q.row(r),
+                        &l.kv.k[li],
+                        &l.kv.v[li],
+                        pos + 1,
+                        heads,
+                        scores.row_mut(0),
+                        att.row_mut(r),
+                    );
+                }
+                module(layer, ModuleKind::O).forward_into(att, att_out, ws);
+                x_mid.copy_from(x);
+                x_mid.add_assign(att_out);
+
+                rmsnorm_into(x_mid, h2);
+                module(layer, ModuleKind::U).forward_into(h2, up, ws);
+                module(layer, ModuleKind::G).forward_into(h2, gate, ws);
+                for i in 0..ff.data.len() {
+                    ff.data[i] = silu(gate.data[i]) * up.data[i];
+                }
+                module(layer, ModuleKind::D).forward_into(ff, down, ws);
+                x.copy_from(x_mid);
+                x.add_assign(down);
+            }
+
+            rmsnorm_into(x, hidden);
+            let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
+            matmul_into(hidden, lm, logits);
+
+            // Scatter: per-lane cursor advance + token selection from the
+            // lane's own logits row with the lane's own RNG stream.
+            for (r, &i) in active.iter().enumerate() {
+                let l = &mut lanes[i];
+                l.kv.len += 1;
+                l.stream.fed += 1;
+                if l.stream.fed >= l.prompt.len() {
+                    let tok = select_token_row(logits.row(r), l.greedy, &mut l.stream.rng);
+                    outs[i].push(tok);
+                    l.stream.produced += 1;
+                    l.stream.last = tok;
+                }
+                if l.stream.produced >= l.max_new_tokens || l.kv.len >= max_seq {
+                    l.done = true;
+                }
+            }
+        }
+        self.lanes.iter().all(|l| l.done)
+    }
+}
+
 /// Full-forward reference for KV-cache parity: run the batched
 /// `forward_cached` prefill over `tokens` (batch 1, no padding) and
 /// return next-token logits at every position, each computed with the
@@ -865,6 +1316,11 @@ struct LossBufs {
     /// (position, target token, weight) per masked prediction.
     rows: Vec<(usize, usize, f32)>,
     row_ok: Vec<bool>,
+    /// Coalesced-eval span scratch (LM branch): per-span flat loss sums,
+    /// mask-weight denominators, and metric sums.
+    span_loss: Vec<f64>,
+    span_denom: Vec<f64>,
+    span_metric: Vec<f64>,
 }
 
 /// All persistent state one training/eval step needs, allocated once per
@@ -886,6 +1342,10 @@ pub struct StepBuffers {
     pub preds: Vec<f32>,
     /// Flat gradient vector (layout of `NativeModel::trainable_flat`).
     pub grads: Vec<f32>,
+    /// Per-span (loss, metric) pairs of the last
+    /// [`evaluate_grouped_into`] call — one per coalesced request, each
+    /// bit-identical to evaluating that request alone.
+    pub span_results: Vec<(f64, f64)>,
     offs: GradOffsets,
 }
 
@@ -914,9 +1374,13 @@ impl StepBuffers {
                 dh_sel: Mat::zeros(0, 0),
                 rows: Vec::new(),
                 row_ok: Vec::new(),
+                span_loss: Vec::new(),
+                span_denom: Vec::new(),
+                span_metric: Vec::new(),
             },
             preds: Vec::new(),
             grads: Vec::new(),
+            span_results: Vec::new(),
             offs: GradOffsets::default(),
         }
     }
@@ -968,6 +1432,9 @@ impl StepBuffers {
             dh_sel: if dec { Mat::zeros(max_m, d) } else { Mat::zeros(1, 1) },
             rows: Vec::with_capacity(if dec { max_m } else { 0 }),
             row_ok: Vec::with_capacity(if dec { max_m } else { 0 }),
+            span_loss: Vec::new(),
+            span_denom: Vec::new(),
+            span_metric: Vec::new(),
         };
         self.preds = Vec::with_capacity(bsz);
         self.offs = GradOffsets::compute(model);
@@ -1076,9 +1543,51 @@ fn forward_cached(model: &NativeModel, batch: &Batch, bufs: &mut StepBuffers, ws
 // Losses
 // ---------------------------------------------------------------------------
 
+/// Running per-span accumulator for coalesced-eval scatter: absorbs
+/// per-example (loss, metric) contributions in example order and closes a
+/// span every `spans[i]` examples, pushing `(Σloss / n, Σmetric)`. The
+/// span sums replay exactly the f64 additions a separate run over that
+/// span's batch would perform, so scattered results are bit-identical to
+/// uncoalesced evaluation. A no-op when `spans` is empty.
+struct SpanAcc<'a> {
+    spans: &'a [usize],
+    out: &'a mut Vec<(f64, f64)>,
+    seen: usize,
+    loss: f64,
+    metric: f64,
+}
+
+impl<'a> SpanAcc<'a> {
+    fn new(spans: &'a [usize], out: &'a mut Vec<(f64, f64)>) -> SpanAcc<'a> {
+        SpanAcc { spans, out, seen: 0, loss: 0.0, metric: 0.0 }
+    }
+
+    fn add(&mut self, loss: f64, metric: f64) {
+        if self.spans.is_empty() {
+            return;
+        }
+        self.loss += loss;
+        self.metric += metric;
+        self.seen += 1;
+        if self.seen == self.spans[self.out.len()] {
+            let n = self.seen as f64;
+            self.out.push((self.loss / n, self.metric));
+            self.seen = 0;
+            self.loss = 0.0;
+            self.metric = 0.0;
+        }
+    }
+}
+
 /// Loss + metric + preds; with `want_grads`, also the gradient w.r.t. the
 /// final hidden states (into `d_hidden`) and the head gradients (written
 /// straight into `grads` at their flat offsets).
+///
+/// `spans` (used by coalesced eval, empty otherwise) partitions the batch
+/// into consecutive per-request example runs; one `(loss, metric)` pair
+/// per span is pushed to `span_out`, each bit-identical to evaluating
+/// that span's examples as a standalone batch (the per-span reductions
+/// replay a standalone run's accumulation order exactly).
 #[allow(clippy::too_many_arguments)]
 fn loss_backward_into(
     model: &NativeModel,
@@ -1090,10 +1599,16 @@ fn loss_backward_into(
     offs: &GradOffsets,
     preds: &mut Vec<f32>,
     want_grads: bool,
+    spans: &[usize],
+    span_out: &mut Vec<(f64, f64)>,
 ) -> (f64, f64) {
     let (bsz, seq) = (batch.batch, batch.seq);
     let d = model.cfg.d_model;
     preds.clear();
+    span_out.clear();
+    if !spans.is_empty() {
+        debug_assert_eq!(spans.iter().sum::<usize>(), bsz, "spans must partition the batch");
+    }
     match (&batch.target, model.cfg.arch) {
         (Target::Class(labels), Arch::Encoder) => {
             let c = model.cfg.n_classes;
@@ -1108,6 +1623,7 @@ fn loss_backward_into(
             }
             let mut loss = 0.0f64;
             let mut correct = 0.0f64;
+            let mut sp = SpanAcc::new(spans, span_out);
             for b in 0..bsz {
                 let row = lb.logits.row(b);
                 let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -1121,7 +1637,8 @@ fn loss_backward_into(
                         z += drow[j];
                     }
                 }
-                loss += -(((lb.dlogits[(b, label)] / z).max(1e-30)) as f64).ln();
+                let el = -(((lb.dlogits[(b, label)] / z).max(1e-30)) as f64).ln();
+                loss += el;
                 let pred = row
                     .iter()
                     .enumerate()
@@ -1132,6 +1649,7 @@ fn loss_backward_into(
                 if pred == label {
                     correct += 1.0;
                 }
+                sp.add(el, if pred == label { 1.0 } else { 0.0 });
                 let drow = lb.dlogits.row_mut(b);
                 for (j, v) in drow.iter_mut().enumerate() {
                     let p = *v / z;
@@ -1169,12 +1687,14 @@ fn loss_backward_into(
             }
             let mut loss = 0.0f64;
             let mut neg_sq = 0.0f64;
+            let mut sp = SpanAcc::new(spans, span_out);
             for b in 0..bsz {
                 let pred = lb.logits[(b, 0)];
                 preds.push(pred);
                 let err = pred - values[b];
                 loss += (err * err) as f64;
                 neg_sq -= (err * err) as f64;
+                sp.add((err * err) as f64, -((err * err) as f64));
                 lb.dlogits[(b, 0)] = 2.0 * err / bsz as f32;
             }
             loss /= bsz as f64;
@@ -1205,13 +1725,29 @@ fn loss_backward_into(
             // matmuls for d_hidden and d_lm_head. (§Perf L3: this replaced
             // a scalar per-position loop — see EXPERIMENTS.md.)
             lb.rows.clear();
+            lb.span_denom.clear();
             let mut denom = 0.0f64;
-            for b in 0..bsz {
-                for s in 0..seq - 1 {
-                    let w = mask[b * seq + s + 1];
-                    denom += w as f64;
-                    if w > 0.0 {
-                        lb.rows.push((b * seq + s, batch.tokens[b * seq + s + 1] as usize, w));
+            {
+                // Span denoms replay the same per-position additions,
+                // closed at each request's example boundary.
+                let mut sp_seen = 0usize;
+                let mut sd = 0.0f64;
+                for b in 0..bsz {
+                    for s in 0..seq - 1 {
+                        let w = mask[b * seq + s + 1];
+                        denom += w as f64;
+                        sd += w as f64;
+                        if w > 0.0 {
+                            lb.rows.push((b * seq + s, batch.tokens[b * seq + s + 1] as usize, w));
+                        }
+                    }
+                    if !spans.is_empty() {
+                        sp_seen += 1;
+                        if sp_seen == spans[lb.span_denom.len()] {
+                            lb.span_denom.push(sd);
+                            sp_seen = 0;
+                            sd = 0.0;
+                        }
                     }
                 }
             }
@@ -1229,9 +1765,15 @@ fn loss_backward_into(
             let mut loss = 0.0f64;
             lb.row_ok.clear();
             lb.row_ok.resize(m, true);
+            lb.span_loss.clear();
+            // Masked rows are example-major, so each span's rows are a
+            // contiguous run: a running sum closed at span boundaries
+            // replays a standalone run's flat row-order accumulation.
+            let mut sp_end = spans.first().copied().unwrap_or(usize::MAX);
+            let mut sl = 0.0f64;
             // Softmax in place → dlogits (scaled by w/denom).
             for ri in 0..m {
-                let (_, target, w) = lb.rows[ri];
+                let (t, target, w) = lb.rows[ri];
                 let row = lb.lm_logits.row_mut(ri);
                 let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
                 let mut z = 0.0f32;
@@ -1245,12 +1787,33 @@ fn loss_backward_into(
                     *v = (*v - max).exp();
                     z += *v;
                 }
-                loss += -(((row[target] / z).max(1e-30)) as f64).ln() * w as f64;
+                let el = -(((row[target] / z).max(1e-30)) as f64).ln() * w as f64;
+                loss += el;
+                if !spans.is_empty() {
+                    while t / seq >= sp_end {
+                        lb.span_loss.push(sl);
+                        sl = 0.0;
+                        sp_end = if lb.span_loss.len() < spans.len() {
+                            sp_end + spans[lb.span_loss.len()]
+                        } else {
+                            usize::MAX
+                        };
+                    }
+                    sl += el;
+                }
                 lb.row_ok[ri] = argmax == target;
                 let coef = w / denom as f32;
                 for (j, v) in row.iter_mut().enumerate() {
                     let p = *v / z;
                     *v = coef * (p - if j == target { 1.0 } else { 0.0 });
+                }
+            }
+            if !spans.is_empty() {
+                // Flush trailing spans (including ones with no masked
+                // rows at all — their loss sum is 0.0).
+                while lb.span_loss.len() < spans.len() {
+                    lb.span_loss.push(sl);
+                    sl = 0.0;
                 }
             }
             loss /= denom;
@@ -1279,6 +1842,9 @@ fn loss_backward_into(
             // single-token answers).
             preds.resize(bsz, 0.0); // cleared above, so every slot is 0.0
             let mut em_total = 0.0f64;
+            lb.span_metric.clear();
+            let mut sp_seen = 0usize;
+            let mut sm = 0.0f64;
             for b in 0..bsz {
                 let mut hits = 0usize;
                 let mut total = 0usize;
@@ -1291,7 +1857,20 @@ fn loss_backward_into(
                 if total > 0 {
                     preds[b] = hits as f32 / total as f32;
                     em_total += preds[b] as f64;
+                    sm += preds[b] as f64;
                 }
+                if !spans.is_empty() {
+                    sp_seen += 1;
+                    if sp_seen == spans[lb.span_metric.len()] {
+                        lb.span_metric.push(sm);
+                        sp_seen = 0;
+                        sm = 0.0;
+                    }
+                }
+            }
+            for si in 0..spans.len() {
+                let l = lb.span_loss[si] / lb.span_denom[si].max(1.0);
+                span_out.push((l, lb.span_metric[si]));
             }
             (loss, em_total)
         }
@@ -1361,6 +1940,43 @@ pub fn evaluate_into(
         &bufs.offs,
         &mut bufs.preds,
         false,
+        &[],
+        &mut bufs.span_results,
+    )
+}
+
+/// Forward-only evaluation of a **coalesced** batch: `batch` is the
+/// concatenation of several eval requests along the batch axis and
+/// `spans` gives each request's example count, in order. Returns the
+/// merged (loss, metric) and leaves one `(loss, metric)` pair per span
+/// in `bufs.span_results` — each **bit-identical** to evaluating that
+/// request's batch alone, because every forward op is example-local
+/// (attention never crosses the batch axis) and the span accumulators
+/// replay a standalone run's reduction order exactly. Per-example
+/// predictions stay in `bufs.preds` (scatter them back by span).
+pub fn evaluate_grouped_into(
+    model: &NativeModel,
+    batch: &Batch,
+    spans: &[usize],
+    bufs: &mut StepBuffers,
+    ws: &mut Workspace,
+) -> (f64, f64) {
+    assert_eq!(spans.iter().sum::<usize>(), batch.batch, "spans must partition the batch");
+    assert!(spans.iter().all(|&n| n > 0), "coalesced eval spans must be non-empty");
+    bufs.ensure(model, batch);
+    forward_cached(model, batch, bufs, ws);
+    loss_backward_into(
+        model,
+        batch,
+        &bufs.hidden,
+        &mut bufs.loss,
+        &mut bufs.d_hidden,
+        &mut bufs.grads,
+        &bufs.offs,
+        &mut bufs.preds,
+        false,
+        spans,
+        &mut bufs.span_results,
     )
 }
 
@@ -1406,6 +2022,8 @@ pub fn train_grads_into(
         &bufs.offs,
         &mut bufs.preds,
         true,
+        &[],
+        &mut bufs.span_results,
     );
 
     // Regularizer contribution to the loss value.

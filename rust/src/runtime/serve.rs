@@ -43,24 +43,74 @@
 //!    enqueues a resumable `GenJob` — same queue, same depth cap as
 //!    one-shot requests.
 //! 2. **Dispatch** treats the generation as a *resumable* job: it is
-//!    dispatched alone and advanced by at most `burst` decode steps —
-//!    one dispatch consumes one burst quota whether it is `burst`
-//!    one-shot requests or `burst` decode steps — then re-enqueued at the
-//!    *front* of its adapter's queue if unfinished. Round-robin fairness
-//!    and burst caps therefore hold across adapters mid-generation; an
-//!    in-flight generation transiently holds one queue slot beyond the
-//!    submit-visible cap (the queue is pre-sized for it).
+//!    gathered — together with up to `decode_batch − 1` other
+//!    generations at the queue front — into one lockstep **group** (see
+//!    Continuous batching below) and advanced by at most `burst` decode
+//!    steps — one dispatch consumes one burst quota whether it is
+//!    `burst` one-shot requests or `burst` lockstep steps over a whole
+//!    group — then re-enqueued at the *front* of its adapter's queue if
+//!    unfinished. Round-robin fairness and burst caps therefore hold
+//!    across adapters mid-generation; in-flight lanes transiently hold
+//!    up to `decode_batch` queue slots beyond the submit-visible cap
+//!    (the queue is pre-sized for them).
 //! 3. **Streaming**: tokens emitted during a dispatch are appended to the
 //!    ticket before the job completes — [`Ticket::wait_tokens`] /
 //!    [`Ticket::with_tokens`] observe the stream mid-request;
 //!    [`Ticket::wait`] returns (0.0, tokens_emitted) at completion.
-//! 4. **KV-caches** are pooled per worker and handed to a job on first
-//!    dispatch (buffers workspace-pooled, so the warm per-token decode
-//!    loop performs zero heap allocations — `tests/serve_alloc.rs`).
+//! 4. **K/V lane rings** are pooled per worker and attached to a job on
+//!    first dispatch (buffers workspace-pooled, so the warm per-token
+//!    decode loop performs zero heap allocations —
+//!    `tests/serve_alloc.rs`).
 //! 5. **Eviction**: strict [`ServeCore::evict`] counts an in-flight
 //!    generation as pending work (it cannot be "waited out");
 //!    `evict_with(Reject)` fails it with [`ServeError::Evicted`],
 //!    `evict_with(Drain)` serves it to completion.
+//!
+//! # Continuous batching (lockstep grouped decode)
+//!
+//! Dispatch is organized around **batch formation**: the maximal
+//! same-kind run at an adapter's queue front becomes one dispatch unit.
+//!
+//! - **Generation groups.** When the queue front is a generation, up to
+//!   [`ServeOptions::decode_batch`] consecutive generations are gathered
+//!   into one **group**: their lanes (per-generation K/V rings —
+//!   [`native::DecodeLane`]) join a worker's
+//!   [`native::GroupDecodeCache`] and advance **in lockstep**, one
+//!   batched `[g, d]` forward per token position, for up to `burst`
+//!   steps. This amortizes every backbone/adapter weight read over `g`
+//!   streams — the single biggest decode-throughput lever. Lanes **join
+//!   and leave mid-flight**: a generation finishing inside a burst drops
+//!   out of the lockstep immediately; unfinished lanes re-enqueue at the
+//!   queue front as a block and are re-grouped — possibly with newly
+//!   submitted generations — at their next dispatch.
+//! - **Group lifecycle.** submit → queue → (join group, ≤ `burst`
+//!   lockstep steps, leave group) → re-enqueue at front … → complete.
+//!   A lane's K/V rings and stream cursor travel with its job between
+//!   dispatches, so any worker can resume any generation.
+//! - **Burst accounting.** One group dispatch consumes **one burst
+//!   quota** for its adapter — whether it advances 1 lane or
+//!   `decode_batch` lanes — and round-robin across adapters is
+//!   unchanged; the fairness trace records one entry per group dispatch.
+//!   Strict eviction counts **every lane** of an in-flight group as
+//!   pending work.
+//! - **Bit-invariance guarantee.** Every lane's token stream is
+//!   bit-identical to the same generation run ungrouped (greedy or
+//!   sampled), regardless of who it was batched with and across
+//!   mid-flight join/leave: the step path is row-local end to end, each
+//!   lane keeps its own ragged-length rings, and sampling uses per-lane
+//!   prompt-seeded RNG streams. Pinned per PEFT method by
+//!   `tests/decode.rs`; the warm grouped loop is allocation-free
+//!   (`tests/serve_alloc.rs`).
+//! - **Eval coalescing.** With [`ServeOptions::coalesce_eval`] (off by
+//!   default), the same batch-formation seam merges a front run of
+//!   same-adapter `Eval` requests with matching seq length and target
+//!   kind — up to `decode_batch` of them — into ONE forward over their
+//!   concatenation along the batch axis; per-request losses, metrics and
+//!   predictions scatter back to their own tickets, bit-identical to
+//!   uncoalesced evaluation (`native::evaluate_grouped_into`).
+//!   FIFO order is preserved across kind boundaries: a batch never forms
+//!   past the first job of a different kind, so results never reorder
+//!   around a queued `Train` step.
 //!
 //! # Failure containment
 //!
@@ -128,7 +178,7 @@
 
 use crate::config::PeftConfig;
 use crate::linalg::Workspace;
-use crate::model::native::{self, Batch, DecodeCache};
+use crate::model::native::{self, Batch, DecodeLane, GroupDecodeCache, Target};
 use crate::model::Backbone;
 use crate::peft::artifact::AdapterArtifact;
 use crate::peft::AdapterId;
@@ -278,6 +328,14 @@ pub struct AdapterStats {
     pub service_ns: u64,
     /// Tokens emitted by completed-or-in-progress generation requests.
     pub tokens_generated: u64,
+    /// Batched dispatch units (generation groups + coalesced eval
+    /// groups).
+    pub group_dispatches: u64,
+    /// Σ lanes/requests across those group dispatches
+    /// (`group_lanes / group_dispatches` = mean group size).
+    pub group_lanes: u64,
+    /// Largest single group dispatched for this adapter.
+    pub max_group_size: u64,
 }
 
 impl AdapterStats {
@@ -298,6 +356,16 @@ impl AdapterStats {
             0.0
         } else {
             self.service_ns as f64 / self.processed as f64 / 1e6
+        }
+    }
+
+    /// Mean lanes per batched dispatch (0.0 when nothing batched) — the
+    /// continuous-batching efficiency figure the serve reports surface.
+    pub fn mean_group_size(&self) -> f64 {
+        if self.group_dispatches == 0 {
+            0.0
+        } else {
+            self.group_lanes as f64 / self.group_dispatches as f64
         }
     }
 }
@@ -327,6 +395,15 @@ pub struct ServeOptions {
     /// Directory for spilled artifacts. `None` (default) picks a unique
     /// per-core directory under the system temp dir.
     pub spill_dir: Option<PathBuf>,
+    /// Continuous-batching width (≥ 1): one dispatch gathers up to this
+    /// many same-adapter generations into a lockstep decode group, and
+    /// caps how many queued evals one coalesced dispatch merges. 1
+    /// disables grouping (every generation decodes alone).
+    pub decode_batch: usize,
+    /// Merge queued same-adapter eval requests (matching seq length and
+    /// target kind) into one batched forward, scattering per-request
+    /// results back to their tickets. Off by default.
+    pub coalesce_eval: bool,
 }
 
 impl Default for ServeOptions {
@@ -339,6 +416,8 @@ impl Default for ServeOptions {
             start_paused: false,
             max_resident: 0,
             spill_dir: None,
+            decode_batch: 4,
+            coalesce_eval: false,
         }
     }
 }
@@ -352,6 +431,8 @@ impl From<crate::config::ServeConfig> for ServeOptions {
             queue_cap: sc.queue_cap,
             burst: sc.burst,
             max_resident: sc.max_resident,
+            decode_batch: sc.decode_batch,
+            coalesce_eval: sc.coalesce_eval,
             ..ServeOptions::default()
         }
     }
@@ -506,47 +587,25 @@ fn fail(ticket: &TicketInner, err: ServeError) {
 }
 
 /// A resumable generation in flight: consumed prompt prefix, emitted
-/// tail, and the (worker-pooled) KV-cache it decodes into. Lives inside
-/// the slot queue between dispatches, so fairness is preserved
-/// mid-generation.
+/// tail, and the (worker-pooled) per-lane K/V rings it decodes into.
+/// Lives inside the slot queue between dispatches, so fairness is
+/// preserved mid-generation; at each dispatch it **joins a lockstep
+/// group** with whatever same-adapter generations are at the queue front
+/// (see the module docs' Continuous batching section).
 struct GenJob {
     prompt: Arc<Vec<i32>>,
     max_new_tokens: usize,
     greedy: bool,
-    /// The shared resumable decode state machine — the SAME driver
-    /// `native::generate_into` runs to completion, advanced here a
-    /// burst-quota of steps per dispatch, so serve-side streams are
-    /// bit-identical to direct decodes by construction.
+    /// The resumable decode cursor — the SAME bookkeeping
+    /// `native::generate_into` drives to completion (prompt cursor,
+    /// last token, prompt-seeded RNG), moved into the group for each
+    /// burst, so serve-side streams are bit-identical to direct decodes
+    /// by construction.
     stream: native::DecodeStream,
-    /// KV-cache + step scratch; taken from the worker's cache pool on
-    /// first dispatch and returned there on completion.
-    cache: Option<DecodeCache>,
-}
-
-impl GenJob {
-    /// Advance the generation by up to `units` decode steps (the
-    /// scheduler's per-dispatch quota), pushing freshly emitted tokens
-    /// into `fresh` (a pre-sized worker buffer, streamed to the ticket
-    /// after the burst). Returns true when the generation is complete.
-    fn advance(
-        &mut self,
-        model: &crate::model::NativeModel,
-        ws: &mut Workspace,
-        units: usize,
-        fresh: &mut Vec<i32>,
-    ) -> bool {
-        let cache = self.cache.as_mut().expect("dispatched gen job holds a cache");
-        self.stream.advance(
-            model,
-            cache,
-            &self.prompt,
-            self.max_new_tokens,
-            self.greedy,
-            units,
-            ws,
-            fresh,
-        )
-    }
+    /// Per-lane K/V rings; taken from the worker's lane pool on first
+    /// dispatch, carried here between dispatches (any worker can resume
+    /// the lane), and returned to a pool on completion.
+    lane: Option<DecodeLane>,
 }
 
 // The Gen variant is deliberately inline (not boxed): a queued job is a
@@ -574,11 +633,12 @@ struct Slot {
     queue: VecDeque<Job>,
     busy: bool,
     live: bool,
-    /// A generation job is currently on a worker (in-flight, not queued).
-    /// Strict [`ServeCore::evict`] counts it as pending work: unlike a
-    /// one-shot burst, an unfinished generation cannot be "waited out"
-    /// without either failing it or draining.
-    gen_inflight: bool,
+    /// Generation lanes currently on a worker (in-flight, not queued).
+    /// Strict [`ServeCore::evict`] counts **every lane** of a dispatched
+    /// group as pending work: unlike a one-shot burst, unfinished
+    /// generations cannot be "waited out" without either failing them or
+    /// draining.
+    gens_inflight: usize,
     /// Evict-with-drain in progress: new submissions are refused while the
     /// queue serves out.
     draining: bool,
@@ -677,9 +737,11 @@ impl ServeCore {
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 let burst = opts.burst.max(1);
+                let decode_batch = opts.decode_batch.max(1);
+                let coalesce_eval = opts.coalesce_eval;
                 thread::Builder::new()
                     .name(format!("psoft-serve-{i}"))
-                    .spawn(move || worker_loop(&shared, burst))
+                    .spawn(move || worker_loop(&shared, burst, decode_batch, coalesce_eval))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -724,13 +786,18 @@ impl ServeCore {
             id,
             label: label.to_string(),
             backend: Some(backend),
-            // +1 slot of headroom: an in-flight generation re-enqueues at
-            // the queue front after its dispatch quota, transiently
-            // holding one slot beyond the submit-visible cap.
-            queue: VecDeque::with_capacity(self.opts.queue_cap.max(1) + 1),
+            // decode_batch slots of headroom: an in-flight generation
+            // GROUP re-enqueues its unfinished lanes at the queue front
+            // after its dispatch quota, transiently holding up to
+            // decode_batch slots beyond the submit-visible cap — the
+            // pre-sizing guarantees a grouped re-enqueue can never hit a
+            // (reallocating) full queue it created itself.
+            queue: VecDeque::with_capacity(
+                self.opts.queue_cap.max(1) + self.opts.decode_batch.max(1),
+            ),
             busy: false,
             live: true,
-            gen_inflight: false,
+            gens_inflight: 0,
             draining: false,
             spill: None,
             last_used: st.clock,
@@ -798,12 +865,12 @@ impl ServeCore {
             // Another evict_with(Drain) owns this slot already.
             return Err(ServeError::Evicted);
         }
-        // Strict eviction refuses pending work: queued requests, plus an
-        // in-flight *generation* — unlike a one-shot burst, it cannot be
-        // waited out (it would re-enqueue), only failed or drained.
-        if strict && (!st.slots[idx].queue.is_empty() || st.slots[idx].gen_inflight) {
-            let pending =
-                st.slots[idx].queue.len() + st.slots[idx].gen_inflight as usize;
+        // Strict eviction refuses pending work: queued requests, plus
+        // every lane of an in-flight generation *group* — unlike a
+        // one-shot burst, they cannot be waited out (they would
+        // re-enqueue), only failed or drained.
+        if strict && (!st.slots[idx].queue.is_empty() || st.slots[idx].gens_inflight > 0) {
+            let pending = st.slots[idx].queue.len() + st.slots[idx].gens_inflight;
             return Err(ServeError::PendingRequests(pending));
         }
         if drain {
@@ -1114,7 +1181,7 @@ impl ServeCore {
                     return Err(ServeError::InvalidRequest);
                 }
                 let stream = native::DecodeStream::new(&prompt);
-                JobKind::Gen(GenJob { prompt, max_new_tokens, greedy, stream, cache: None })
+                JobKind::Gen(GenJob { prompt, max_new_tokens, greedy, stream, lane: None })
             }
         };
         let mut st = relock(&self.shared.state);
@@ -1296,24 +1363,75 @@ fn next_runnable(st: &ServeState) -> Option<usize> {
     None
 }
 
-fn worker_loop(shared: &Shared, burst: usize) {
+/// What one dispatch unit holds (see the module docs' Continuous
+/// batching section): the maximal same-kind run at the queue front.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum DispatchMode {
+    /// Up to `burst` one-shot eval/train requests, serviced one by one.
+    Oneshot,
+    /// Up to `decode_batch` generations advanced in lockstep as a group.
+    GenGroup,
+    /// ≥ 2 shape-compatible eval requests merged into one forward.
+    EvalGroup,
+}
+
+fn job_is_gen(j: &Job) -> bool {
+    matches!(j.kind, JobKind::Gen(_))
+}
+
+/// The batch of an `Eval` job (None for train/generation jobs).
+fn eval_batch_of(j: &Job) -> Option<&Arc<Batch>> {
+    match &j.kind {
+        JobKind::Batch { batch, req: ReqKind::Eval } => Some(batch),
+        _ => None,
+    }
+}
+
+/// Does this queued job coalesce with an eval group of the given head
+/// shape (same seq length, same target kind)? Empty batches never
+/// coalesce — they would make a degenerate span (and panic the span
+/// scatter) where the uncoalesced path serves them without incident.
+fn coalesces_with(j: &Job, seq0: usize, disc0: std::mem::Discriminant<Target>) -> bool {
+    eval_batch_of(j)
+        .map(|b| b.batch > 0 && b.seq == seq0 && std::mem::discriminant(&b.target) == disc0)
+        .unwrap_or(false)
+}
+
+fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval: bool) {
     let mut ws = Workspace::new();
-    let mut jobs: Vec<Job> = Vec::with_capacity(burst);
-    // Warm KV-caches: handed to a generation job on its first dispatch,
-    // returned here when it completes (buffers stay workspace-warm, so
-    // back-to-back generations allocate nothing).
-    let mut cache_pool: Vec<DecodeCache> = Vec::new();
-    // Tokens emitted by the current generation dispatch (streamed to the
-    // ticket once per burst; pre-sized, never reallocates).
-    let mut fresh: Vec<i32> = Vec::with_capacity(burst);
+    let mut jobs: Vec<Job> = Vec::with_capacity(burst.max(decode_batch));
+    // Warm per-lane K/V rings: attached to a generation on its first
+    // dispatch, returned here when it completes (buffers stay
+    // workspace-warm, so back-to-back generations allocate nothing).
+    let mut lane_pool: Vec<DecodeLane> = Vec::new();
+    // Lockstep group state: lanes join for one burst, leave after it.
+    let mut gc = GroupDecodeCache::new();
+    // Per-lane tokens emitted by the current group burst (streamed to
+    // each lane's ticket after the burst; pre-sized for decode_batch
+    // lanes × burst steps, never reallocates once warm).
+    let mut fresh: Vec<Vec<i32>> =
+        (0..decode_batch).map(|_| Vec::with_capacity(burst)).collect();
+    // Unfinished generations to push back to the queue front as a block.
+    let mut requeue: Vec<Job> = Vec::with_capacity(decode_batch);
+    // Coalesced-eval scratch: the merged batch (vectors reused across
+    // dispatches) and the per-request example counts.
+    let mut merged = Batch {
+        batch: 0,
+        seq: 0,
+        tokens: Vec::new(),
+        pad: Vec::new(),
+        target: Target::Class(Vec::new()),
+    };
+    let mut spans: Vec<usize> = Vec::with_capacity(decode_batch);
     loop {
-        // Dispatch: pick the next runnable slot round-robin. A generation
-        // at the queue head is dispatched ALONE and advanced by at most
-        // `burst` decode steps (then re-enqueued at the front if
-        // unfinished) — one dispatch consumes one burst quota whether it
-        // is `burst` one-shot requests or `burst` decode steps, which is
-        // what keeps round-robin fairness intact mid-generation.
-        let (slot_idx, mut backend) = {
+        // Dispatch: pick the next runnable slot round-robin, then form a
+        // batch from the queue front — a generation GROUP (≤ decode_batch
+        // lanes, advanced ≤ `burst` lockstep steps, re-enqueued at the
+        // front if unfinished), a coalesced eval group, or a one-shot
+        // burst. One dispatch consumes one burst quota whatever its
+        // shape, which is what keeps round-robin fairness intact
+        // mid-generation and across group sizes.
+        let (slot_idx, mut backend, mode) = {
             let mut st = relock(&shared.state);
             loop {
                 if !st.paused {
@@ -1321,40 +1439,79 @@ fn worker_loop(shared: &Shared, burst: usize) {
                         let n = st.slots.len();
                         st.rr = (idx + 1) % n;
                         let id = st.slots[idx].id;
+                        let mode;
                         {
                             let slot = &mut st.slots[idx];
                             slot.busy = true;
-                            while jobs.len() < burst {
-                                match slot.queue.front() {
-                                    Some(j) if matches!(j.kind, JobKind::Gen(_)) => {
-                                        if jobs.is_empty() {
-                                            let job = slot.queue.pop_front().unwrap();
-                                            jobs.push(job);
-                                            slot.gen_inflight = true;
+                            if slot.queue.front().map(job_is_gen) == Some(true) {
+                                // Generation group: the maximal run of
+                                // consecutive generations at the front.
+                                mode = DispatchMode::GenGroup;
+                                while jobs.len() < decode_batch
+                                    && slot.queue.front().map(job_is_gen) == Some(true)
+                                {
+                                    jobs.push(slot.queue.pop_front().unwrap());
+                                }
+                                slot.gens_inflight = jobs.len();
+                            } else {
+                                // Eval coalescing (opt-in): the front run
+                                // of evals agreeing on seq length and
+                                // target kind merges into one forward.
+                                let head = if coalesce_eval {
+                                    slot.queue
+                                        .front()
+                                        .and_then(eval_batch_of)
+                                        .filter(|b| b.batch > 0)
+                                        .map(|b| (b.seq, std::mem::discriminant(&b.target)))
+                                } else {
+                                    None
+                                };
+                                if let Some((seq0, disc0)) = head {
+                                    while jobs.len() < decode_batch {
+                                        match slot.queue.front() {
+                                            Some(j) if coalesces_with(j, seq0, disc0) => {
+                                                jobs.push(slot.queue.pop_front().unwrap());
+                                            }
+                                            _ => break,
                                         }
-                                        break;
                                     }
-                                    Some(_) => {
-                                        jobs.push(slot.queue.pop_front().unwrap());
+                                }
+                                if jobs.len() >= 2 {
+                                    mode = DispatchMode::EvalGroup;
+                                } else {
+                                    // Not coalescable (or a single eval):
+                                    // fall back to the one-shot burst.
+                                    mode = DispatchMode::Oneshot;
+                                    while jobs.len() < burst {
+                                        match slot.queue.front() {
+                                            Some(j) if !job_is_gen(j) => {
+                                                jobs.push(slot.queue.pop_front().unwrap());
+                                            }
+                                            _ => break,
+                                        }
                                     }
-                                    None => break,
                                 }
                             }
                         }
                         st.queued -= jobs.len();
                         // Record per entry up to the configured cap (never
                         // past `trace_cap`, so pushes never reallocate and
-                        // the trace has no mid-stream gaps). A generation
-                        // dispatch records one entry.
+                        // the trace has no mid-stream gaps). A group
+                        // dispatch — generations or coalesced evals —
+                        // records ONE entry.
+                        let trace_units = match mode {
+                            DispatchMode::Oneshot => jobs.len(),
+                            DispatchMode::GenGroup | DispatchMode::EvalGroup => 1,
+                        };
                         if st.trace.len() < st.trace_cap {
                             let room = st.trace_cap - st.trace.len();
-                            for _ in 0..jobs.len().min(room) {
+                            for _ in 0..trace_units.min(room) {
                                 st.trace.push(id);
                             }
                         }
                         let backend =
                             st.slots[idx].backend.take().expect("runnable slot has its backend");
-                        break (idx, backend);
+                        break (idx, backend, mode);
                     }
                 }
                 if st.shutdown && st.queued == 0 {
@@ -1364,74 +1521,175 @@ fn worker_loop(shared: &Shared, burst: usize) {
             }
         };
 
-        // Service the burst outside the scheduler lock; other workers keep
-        // dispatching other adapters meanwhile. Panics are CONTAINED at
-        // this boundary: no scheduler lock is held during compute, so a
-        // panicking adapter can neither poison it nor kill the worker —
-        // the catch below retires the offending adapter, fails its
-        // tickets with `WorkerPanicked`, and the worker keeps serving.
+        // Service the dispatch unit outside the scheduler lock; other
+        // workers keep dispatching other adapters meanwhile. Panics are
+        // CONTAINED at this boundary: no scheduler lock is held during
+        // compute, so a panicking adapter can neither poison it nor kill
+        // the worker — the catch below retires the offending adapter,
+        // fails its tickets with `WorkerPanicked`, and the worker keeps
+        // serving.
         let mut done = 0u64;
         let mut train_steps = 0u64;
         let mut tokens_generated = 0u64;
         let mut service_ns = 0u64;
         let mut latency_ns = 0u64;
         let mut max_latency_ns = 0u64;
-        // Unfinished generation to push back to the queue front.
-        let mut requeue: Option<Job> = None;
-        // Ticket of the job being computed right now (failed on panic).
+        let mut group_dispatches = 0u64;
+        let mut group_lanes = 0u64;
+        // Ticket of the job being finalized right now (failed on panic).
         let mut current: Option<Arc<TicketInner>> = None;
-        let panicked = catch_unwind(AssertUnwindSafe(|| {
-            while !jobs.is_empty() {
-                let mut job = jobs.remove(0);
-                current = Some(Arc::clone(&job.ticket));
+        let panicked = catch_unwind(AssertUnwindSafe(|| match mode {
+            DispatchMode::GenGroup => {
+                let n_group = jobs.len();
+                group_dispatches = 1;
+                group_lanes = n_group as u64;
                 let svc = Instant::now();
-                let completed = match job.kind {
-                    JobKind::Batch { ref batch, req } => {
-                        let (loss, metric) = match req {
-                            ReqKind::Eval => native::evaluate_into(
-                                &backend.model,
-                                batch,
-                                &mut backend.bufs,
-                                &mut ws,
-                            ),
-                            ReqKind::Train(hyper) => {
-                                train_steps += 1;
-                                backend.step_core(batch, &hyper, &mut ws)
-                            }
-                        };
-                        complete(&job.ticket, loss, metric, &backend.bufs.preds);
-                        true
+                // Join every lane: fresh generations take pooled rings
+                // (reset); resumed ones carry theirs from the last
+                // dispatch. The stream cursor moves into the group for
+                // the burst and back out after it.
+                for job in jobs.iter_mut() {
+                    let JobKind::Gen(gen) = &mut job.kind else {
+                        unreachable!("generation group holds generation jobs")
+                    };
+                    let (mut kv, fresh_gen) = match gen.lane.take() {
+                        Some(kv) => (kv, false),
+                        None => (lane_pool.pop().unwrap_or_default(), true),
+                    };
+                    kv.ensure(&backend.model, &mut ws);
+                    if fresh_gen {
+                        kv.reset();
                     }
-                    JobKind::Gen(ref mut gen) => {
-                        if gen.cache.is_none() {
-                            let mut c = cache_pool.pop().unwrap_or_default();
-                            c.ensure(&backend.model, &mut ws);
-                            gen.cache = Some(c);
-                        }
-                        fresh.clear();
-                        let finished = gen.advance(&backend.model, &mut ws, burst, &mut fresh);
-                        tokens_generated += fresh.len() as u64;
-                        if !fresh.is_empty() {
-                            stream_tokens(&job.ticket, &fresh);
-                        }
-                        if finished {
-                            if let Some(c) = gen.cache.take() {
-                                cache_pool.push(c);
-                            }
-                            complete_gen(&job.ticket);
-                        }
-                        finished
-                    }
-                };
-                current = None;
+                    let stream = std::mem::replace(&mut gen.stream, native::DecodeStream::new(&[]));
+                    gc.join(kv, stream, Arc::clone(&gen.prompt), gen.max_new_tokens, gen.greedy);
+                }
+                for f in fresh.iter_mut() {
+                    f.clear();
+                }
+                // ≤ `burst` lockstep steps for the whole group.
+                gc.advance(&backend.model, burst, &mut ws, &mut fresh[..n_group]);
                 service_ns += svc.elapsed().as_nanos() as u64;
-                if completed {
+                // Leave the group in join order: stream fresh tokens,
+                // complete finished lanes (rings back to the pool),
+                // collect unfinished ones for the front re-enqueue.
+                for li in 0..n_group {
+                    let mut job = jobs.remove(0);
+                    current = Some(Arc::clone(&job.ticket));
+                    let (kv, stream, job_done) =
+                        gc.detach_first().expect("one joined lane per group job");
+                    let JobKind::Gen(gen) = &mut job.kind else {
+                        unreachable!("generation group holds generation jobs")
+                    };
+                    gen.stream = stream;
+                    let emitted = &fresh[li];
+                    tokens_generated += emitted.len() as u64;
+                    if !emitted.is_empty() {
+                        stream_tokens(&job.ticket, emitted);
+                    }
+                    if job_done {
+                        lane_pool.push(kv);
+                        complete_gen(&job.ticket);
+                        done += 1;
+                        let lat = job.enqueued.elapsed().as_nanos() as u64;
+                        latency_ns += lat;
+                        max_latency_ns = max_latency_ns.max(lat);
+                    } else {
+                        gen.lane = Some(kv);
+                        requeue.push(job);
+                    }
+                    current = None;
+                }
+            }
+            DispatchMode::EvalGroup => {
+                let n_group = jobs.len();
+                group_dispatches = 1;
+                group_lanes = n_group as u64;
+                let svc = Instant::now();
+                // Concatenate the requests along the batch axis into the
+                // reusable merged batch (vectors keep their capacity
+                // across dispatches; the target vector is reused when the
+                // kind matches the previous dispatch).
+                spans.clear();
+                merged.tokens.clear();
+                merged.pad.clear();
+                merged.batch = 0;
+                {
+                    let head = eval_batch_of(&jobs[0]).expect("eval group holds eval jobs");
+                    merged.seq = head.seq;
+                    match (&mut merged.target, &head.target) {
+                        (Target::Class(m), Target::Class(_)) => m.clear(),
+                        (Target::Reg(m), Target::Reg(_)) => m.clear(),
+                        (Target::LmMask(m), Target::LmMask(_)) => m.clear(),
+                        (t, Target::Class(_)) => *t = Target::Class(Vec::new()),
+                        (t, Target::Reg(_)) => *t = Target::Reg(Vec::new()),
+                        (t, Target::LmMask(_)) => *t = Target::LmMask(Vec::new()),
+                    }
+                }
+                for job in jobs.iter() {
+                    let b = eval_batch_of(job).expect("eval group holds eval jobs");
+                    merged.batch += b.batch;
+                    merged.tokens.extend_from_slice(&b.tokens);
+                    merged.pad.extend_from_slice(&b.pad);
+                    match (&mut merged.target, &b.target) {
+                        (Target::Class(m), Target::Class(v)) => m.extend_from_slice(v),
+                        (Target::Reg(m), Target::Reg(v)) => m.extend_from_slice(v),
+                        (Target::LmMask(m), Target::LmMask(v)) => m.extend_from_slice(v),
+                        _ => unreachable!("coalesced evals share a target kind"),
+                    }
+                    spans.push(b.batch);
+                }
+                native::evaluate_grouped_into(
+                    &backend.model,
+                    &merged,
+                    &spans,
+                    &mut backend.bufs,
+                    &mut ws,
+                );
+                service_ns += svc.elapsed().as_nanos() as u64;
+                // Scatter per-request (loss, metric, preds) back to the
+                // tickets — bit-identical to uncoalesced evaluation.
+                let mut b0 = 0usize;
+                for ri in 0..n_group {
+                    let job = jobs.remove(0);
+                    current = Some(Arc::clone(&job.ticket));
+                    let nb = spans[ri];
+                    let (l, m) = backend.bufs.span_results[ri];
+                    complete(&job.ticket, l, m, &backend.bufs.preds[b0..b0 + nb]);
+                    b0 += nb;
                     done += 1;
                     let lat = job.enqueued.elapsed().as_nanos() as u64;
                     latency_ns += lat;
                     max_latency_ns = max_latency_ns.max(lat);
-                } else {
-                    requeue = Some(job);
+                    current = None;
+                }
+            }
+            DispatchMode::Oneshot => {
+                while !jobs.is_empty() {
+                    let job = jobs.remove(0);
+                    current = Some(Arc::clone(&job.ticket));
+                    let svc = Instant::now();
+                    let JobKind::Batch { ref batch, req } = job.kind else {
+                        unreachable!("one-shot dispatches hold batch jobs")
+                    };
+                    let (loss, metric) = match req {
+                        ReqKind::Eval => native::evaluate_into(
+                            &backend.model,
+                            batch,
+                            &mut backend.bufs,
+                            &mut ws,
+                        ),
+                        ReqKind::Train(hyper) => {
+                            train_steps += 1;
+                            backend.step_core(batch, &hyper, &mut ws)
+                        }
+                    };
+                    complete(&job.ticket, loss, metric, &backend.bufs.preds);
+                    current = None;
+                    service_ns += svc.elapsed().as_nanos() as u64;
+                    done += 1;
+                    let lat = job.enqueued.elapsed().as_nanos() as u64;
+                    latency_ns += lat;
+                    max_latency_ns = max_latency_ns.max(lat);
                 }
             }
         }))
@@ -1442,15 +1700,17 @@ fn worker_loop(shared: &Shared, burst: usize) {
             // backend is dropped, queued and in-flight requests fail with
             // the typed error) and keep the worker and every other
             // adapter serving. The scheduler mutex was NOT held across
-            // the panic, so no lock is poisoned.
+            // the panic, so no lock is poisoned. Group state may be
+            // mid-join/mid-burst, so the worker's group cache is rebuilt
+            // from scratch (its buffers are simply dropped — later
+            // dispatches re-acquire from the workspace pool).
             let mut failed: Vec<Arc<TicketInner>> = Vec::new();
             if let Some(t) = current.take() {
                 failed.push(t);
             }
             failed.extend(jobs.drain(..).map(|j| j.ticket));
-            if let Some(job) = requeue.take() {
-                failed.push(job.ticket);
-            }
+            failed.extend(requeue.drain(..).map(|j| j.ticket));
+            gc = GroupDecodeCache::new();
             {
                 let mut st = relock(&shared.state);
                 st.worker_panics += 1;
@@ -1463,7 +1723,7 @@ fn worker_loop(shared: &Shared, burst: usize) {
                 );
                 slot.live = false;
                 slot.busy = false;
-                slot.gen_inflight = false;
+                slot.gens_inflight = 0;
                 slot.draining = false;
                 failed.extend(slot.queue.drain(..).map(|j| j.ticket));
                 if let Some(p) = slot.spill.take() {
@@ -1479,39 +1739,46 @@ fn worker_loop(shared: &Shared, burst: usize) {
             continue;
         }
 
-        // Put the adapter state back, re-enqueue an unfinished
-        // generation (front of the queue: generation order is preserved,
-        // round-robin moves on to other adapters in between), and publish
-        // stats. If the slot was evicted while we computed, the orphaned
-        // generation fails with `Evicted` (outside the lock).
-        let orphan = {
+        // Put the adapter state back, re-enqueue unfinished generations
+        // (front of the queue, original order preserved: round-robin
+        // moves on to other adapters in between, and the lanes re-group
+        // at their next dispatch), and publish stats. If the slot was
+        // evicted while we computed, the orphaned generations fail with
+        // `Evicted` (outside the lock).
+        let orphaned = {
             let mut st = relock(&shared.state);
             let live = st.slots[slot_idx].live;
-            let mut orphan = None;
-            if let Some(job) = requeue.take() {
-                if live {
-                    st.slots[slot_idx].queue.push_front(job);
-                    st.queued += 1;
-                } else {
-                    orphan = Some(job);
+            if live && !requeue.is_empty() {
+                let n_re = requeue.len();
+                {
+                    let slot = &mut st.slots[slot_idx];
+                    for job in requeue.drain(..).rev() {
+                        slot.queue.push_front(job);
+                    }
                 }
+                st.queued += n_re;
             }
             let slot = &mut st.slots[slot_idx];
             slot.backend = Some(backend);
             slot.busy = false;
-            slot.gen_inflight = false;
+            slot.gens_inflight = 0;
             slot.stats.processed += done;
             slot.stats.train_steps += train_steps;
             slot.stats.tokens_generated += tokens_generated;
             slot.stats.service_ns += service_ns;
             slot.stats.total_latency_ns += latency_ns;
             slot.stats.max_latency_ns = slot.stats.max_latency_ns.max(max_latency_ns);
-            orphan
+            slot.stats.group_dispatches += group_dispatches;
+            slot.stats.group_lanes += group_lanes;
+            slot.stats.max_group_size = slot.stats.max_group_size.max(group_lanes);
+            !live
         };
         shared.work.notify_all();
         shared.idle.notify_all();
-        if let Some(job) = orphan {
-            fail(&job.ticket, ServeError::Evicted);
+        if orphaned {
+            for job in requeue.drain(..) {
+                fail(&job.ticket, ServeError::Evicted);
+            }
         }
     }
 }

@@ -193,6 +193,259 @@ fn decode_deterministic_across_artifact_restore() {
     assert_eq!(s1, s2, "sampled decode must be deterministic across restore");
 }
 
+/// Grouped (continuous-batching) decode is bit-identical per lane to the
+/// ungrouped path, per PEFT method, greedy AND sampled, including lanes
+/// that join and leave mid-flight: three staggered generations — two
+/// start together, the shortest finishes inside the group, a third joins
+/// after four lockstep steps — must each emit exactly the stream their
+/// solo `generate_into` run emits.
+#[test]
+fn grouped_decode_is_bit_identical_per_method_with_join_leave() {
+    let cfg = dec_cfg();
+    let mut oft = PeftConfig::new(MethodKind::OftV2, 4)
+        .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    oft.oft_block_size = 4;
+    let specs: Vec<(&str, PeftConfig)> = vec![
+        (
+            "psoft",
+            PeftConfig::new(MethodKind::Psoft, 3)
+                .with_modules(vec![ModuleKind::Q, ModuleKind::V]),
+        ),
+        (
+            "lora",
+            PeftConfig::new(MethodKind::Lora, 2)
+                .with_modules(vec![ModuleKind::Q, ModuleKind::V]),
+        ),
+        ("oftv2", oft),
+    ];
+    for (si, (name, peft)) in specs.iter().enumerate() {
+        let model = perturbed_model(&cfg, peft, 440 + si as u64);
+        for greedy in [true, false] {
+            let prompts: Vec<Vec<i32>> = vec![vec![1, 7, 3], vec![2, 9], vec![5, 1, 4, 2]];
+            // Lane 1 finishes after 2 + 3 − 1 = 4 steps (leave
+            // mid-flight); lanes 0 and 2 run 8 steps each.
+            let max_news = [6usize, 3, 5];
+            let mut ws = Workspace::new();
+            let mut refs: Vec<Vec<i32>> = Vec::new();
+            for (p, &mn) in prompts.iter().zip(&max_news) {
+                let mut cache = DecodeCache::new();
+                let mut out = Vec::new();
+                native::generate_into(&model, p, mn, greedy, &mut cache, &mut ws, &mut out);
+                cache.release(&mut ws);
+                assert_eq!(out.len(), mn);
+                refs.push(out);
+            }
+
+            let mut gc = native::GroupDecodeCache::new();
+            let mut outs: Vec<Vec<i32>> = vec![Vec::new(), Vec::new()];
+            for i in 0..2 {
+                let mut kv = native::DecodeLane::new();
+                kv.ensure(&model, &mut ws);
+                kv.reset();
+                gc.join(
+                    kv,
+                    native::DecodeStream::new(&prompts[i]),
+                    Arc::new(prompts[i].clone()),
+                    max_news[i],
+                    greedy,
+                );
+            }
+            // Four lockstep steps: lane 1 completes exactly here.
+            let all_done = gc.advance(&model, 4, &mut ws, &mut outs);
+            assert!(!all_done, "{name}: lanes 0 is not done after 4 steps");
+            // Lane 2 joins mid-flight while lane 1 has left the lockstep.
+            {
+                let mut kv = native::DecodeLane::new();
+                kv.ensure(&model, &mut ws);
+                kv.reset();
+                gc.join(
+                    kv,
+                    native::DecodeStream::new(&prompts[2]),
+                    Arc::new(prompts[2].clone()),
+                    max_news[2],
+                    greedy,
+                );
+                outs.push(Vec::new());
+            }
+            assert!(gc.advance(&model, usize::MAX, &mut ws, &mut outs));
+            for i in 0..3 {
+                assert!(gc.lane_done(i), "{name}: lane {i} done after full advance");
+                assert_eq!(
+                    outs[i], refs[i],
+                    "{name} (greedy={greedy}): lane {i} diverges from its solo run"
+                );
+            }
+            // Detach order == join order; every lane reports done.
+            for _ in 0..3 {
+                let (mut kv, _stream, done) = gc.detach_first().unwrap();
+                assert!(done);
+                kv.release(&mut ws);
+            }
+            assert_eq!(gc.num_lanes(), 0);
+            gc.release(&mut ws);
+        }
+    }
+}
+
+/// With `decode_batch > 1`, same-adapter generations advance as ONE
+/// group per dispatch — one burst quota, one trace entry — and
+/// round-robin across adapters still alternates strictly; every stream
+/// stays bit-identical to its solo run, and the group-size stats are
+/// published.
+#[test]
+fn grouped_generations_interleave_fairly_and_match_solo() {
+    let cfg = dec_cfg();
+    let mut rng = Rng::new(433);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        burst: 2,
+        decode_batch: 2,
+        start_paused: true,
+        trace_cap: 64,
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft =
+        PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let a = core.register("gen_a", &peft, 1);
+    let b = core.register("gen_b", &peft, 2);
+
+    // Two generations per adapter, grouped two-wide: each lane needs
+    // prompt(2) + max_new(6) − 1 = 7 decode steps; at burst 2 that is 4
+    // group dispatches per adapter, alternating a, b with one worker.
+    let prompt = Arc::new(vec![1i32, 3]);
+    let max_new = 6usize;
+    let tickets: Vec<(psoft::peft::AdapterId, Ticket)> = vec![
+        (a, Ticket::new(max_new)),
+        (a, Ticket::new(max_new)),
+        (b, Ticket::new(max_new)),
+        (b, Ticket::new(max_new)),
+    ];
+    for (id, t) in &tickets {
+        core.submit_generate(*id, &prompt, max_new, true, t).unwrap();
+    }
+    core.resume();
+    core.drain();
+
+    // Solo reference: identical construction, direct model-level decode.
+    let mut refs: Vec<(psoft::peft::AdapterId, Vec<i32>)> = Vec::new();
+    for (id, seed) in [(a, 1u64), (b, 2u64)] {
+        let direct = NativeBackend::for_adapter(&bb, &peft, seed);
+        let mut ws = Workspace::new();
+        let mut cache = DecodeCache::new();
+        let mut want = Vec::new();
+        native::generate_into(
+            &direct.model,
+            &prompt,
+            max_new,
+            true,
+            &mut cache,
+            &mut ws,
+            &mut want,
+        );
+        refs.push((id, want));
+    }
+    for (id, t) in &tickets {
+        assert_eq!(t.wait().unwrap().1, max_new as f64);
+        let want = &refs.iter().find(|(rid, _)| rid == id).unwrap().1;
+        t.with_tokens(|tok| {
+            assert_eq!(tok, &want[..], "grouped stream must equal the solo stream")
+        });
+    }
+
+    let trace = core.trace();
+    assert_eq!(trace.len(), 8, "4 group dispatches per adapter, one trace entry each");
+    let expect: Vec<psoft::peft::AdapterId> =
+        (0..8).map(|i| if i % 2 == 0 { a } else { b }).collect();
+    assert_eq!(trace, expect, "round-robin must hold across group dispatches");
+
+    for id in [a, b] {
+        let stats = core.stats(id).unwrap();
+        assert_eq!(stats.tokens_generated, 2 * max_new as u64);
+        assert_eq!(stats.max_group_size, 2, "both lanes grouped");
+        assert!((stats.mean_group_size() - 2.0).abs() < 1e-12);
+        assert_eq!(stats.group_dispatches, 4);
+    }
+}
+
+/// Strict evict must count EVERY lane of an in-flight generation group
+/// as pending work. The group runs long enough (one whole generation per
+/// dispatch) that the main thread reliably observes the window where the
+/// queue is empty but two lanes are on the worker.
+#[test]
+fn strict_evict_counts_every_lane_of_inflight_group() {
+    let cfg = ModelConfig {
+        arch: Arch::Decoder,
+        vocab_size: 24,
+        d_model: 48,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        max_seq: 48,
+        n_classes: 0,
+    };
+    let mut rng = Rng::new(434);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        // One dispatch covers the whole generation (2 + 40 − 1 = 41
+        // steps ≤ burst), so once the queue empties both lanes stay
+        // in-flight until completion.
+        burst: 64,
+        decode_batch: 2,
+        start_paused: true,
+        queue_cap: 8,
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft =
+        PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let mut id = core.register("gen", &peft, 3);
+    let prompt = Arc::new(vec![1i32, 2]);
+    let max_new = 40usize;
+
+    // Queued (paused) group: strict evict counts both queued lanes.
+    let t1 = Ticket::new(max_new);
+    let t2 = Ticket::new(max_new);
+    core.submit_generate(id, &prompt, max_new, true, &t1).unwrap();
+    core.submit_generate(id, &prompt, max_new, true, &t2).unwrap();
+    assert!(matches!(core.evict(id), Err(ServeError::PendingRequests(2))));
+    core.resume();
+
+    // In-flight group: spin until we observe the empty-queue window with
+    // both lanes on the worker — PendingRequests must still report 2.
+    let mut observed = false;
+    'outer: for _attempt in 0..200 {
+        loop {
+            let queued = core.queue_len(id);
+            match core.evict(id) {
+                Err(ServeError::PendingRequests(n)) => {
+                    if queued == Some(0) && n == 2 {
+                        observed = true;
+                        break 'outer;
+                    }
+                }
+                Ok(backend) => {
+                    // Both lanes finished before we caught the window —
+                    // reinstall the adapter and race again.
+                    id = core.register_backend("gen", backend);
+                    break;
+                }
+                Err(_) => {}
+            }
+        }
+        let ta = Ticket::new(max_new);
+        let tb = Ticket::new(max_new);
+        core.submit_generate(id, &prompt, max_new, true, &ta).unwrap();
+        core.submit_generate(id, &prompt, max_new, true, &tb).unwrap();
+    }
+    assert!(
+        observed,
+        "never observed an in-flight group; PendingRequests must count every lane"
+    );
+}
+
 #[test]
 fn resumable_generations_keep_round_robin_fairness() {
     let cfg = dec_cfg();

@@ -397,6 +397,170 @@ fn evict_semantics_are_explicit_about_pending_work() {
     }
 }
 
+/// Coalesced eval (`coalesce_eval = true`) merges a queued run of
+/// same-adapter eval requests into ONE forward and scatters per-request
+/// losses/metrics/predictions back — bit-identical to running each
+/// request alone. A shape-incompatible request (different seq) stops the
+/// run and is served separately, still correctly.
+#[test]
+fn coalesced_eval_matches_uncoalesced_bitwise() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(806);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        start_paused: true,
+        queue_cap: 16,
+        decode_batch: 8,
+        coalesce_eval: true,
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3)
+        .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let id = core.register("lora_r3", &peft, 50);
+
+    // Four coalescable batches (same seq) + one with a different seq
+    // that must NOT merge with them.
+    let mut batches: Vec<Arc<Batch>> = (0..4).map(|i| batch_for(&cfg, 900 + i)).collect();
+    let odd = {
+        let mut orng = Rng::new(950);
+        let (bsz, seq) = (2usize, 4usize);
+        let tokens: Vec<i32> =
+            (0..bsz * seq).map(|_| orng.below(cfg.vocab_size) as i32).collect();
+        let labels: Vec<usize> =
+            (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+        Arc::new(Batch {
+            batch: bsz,
+            seq,
+            tokens,
+            pad: vec![1.0; bsz * seq],
+            target: Target::Class(labels),
+        })
+    };
+    batches.push(Arc::clone(&odd));
+
+    // Uncoalesced reference: same adapter construction, direct eval.
+    let mut direct = NativeBackend::for_adapter(&bb, &peft, 50);
+    let mut ws = Workspace::new();
+    let refs: Vec<(f64, f64, Vec<f32>)> = batches
+        .iter()
+        .map(|b| {
+            let (l, m) = native::evaluate_into(&direct.model, b, &mut direct.bufs, &mut ws);
+            (l, m, direct.bufs.preds.clone())
+        })
+        .collect();
+
+    let tickets: Vec<Ticket> = batches.iter().map(|b| Ticket::new(b.batch)).collect();
+    for (b, t) in batches.iter().zip(&tickets) {
+        core.submit(id, b, ReqKind::Eval, t).unwrap();
+    }
+    // All five queued before dispatch starts: the first dispatch merges
+    // the four compatible evals; the odd-shaped one runs alone.
+    core.resume();
+    core.drain();
+    for ((t, (rl, rm, rp)), b) in tickets.iter().zip(&refs).zip(&batches) {
+        let (l, m) = t.wait().unwrap();
+        assert_eq!(l, *rl, "coalesced loss must be bit-identical");
+        assert_eq!(m, *rm, "coalesced metric must be bit-identical");
+        t.with_preds(|p| {
+            assert_eq!(p.len(), b.batch);
+            assert_eq!(p, &rp[..], "coalesced preds must be bit-identical");
+        });
+    }
+
+    let stats = core.stats(id).unwrap();
+    assert_eq!(stats.processed, 5);
+    assert_eq!(stats.max_group_size, 4, "four compatible evals merged");
+    assert_eq!(stats.group_dispatches, 1, "odd-shaped eval served outside the group");
+    assert!((stats.mean_group_size() - 4.0).abs() < 1e-12);
+}
+
+/// Coalesced eval over the decoder LM-mask loss: the span scatter has to
+/// reproduce each request's own mask-weight denominator and flat
+/// row-order loss sum exactly.
+#[test]
+fn coalesced_lm_eval_matches_uncoalesced_bitwise() {
+    let cfg = ModelConfig {
+        arch: Arch::Decoder,
+        vocab_size: 24,
+        d_model: 12,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 16,
+        n_classes: 0,
+    };
+    let mut rng = Rng::new(807);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        start_paused: true,
+        queue_cap: 8,
+        decode_batch: 4,
+        coalesce_eval: true,
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft = PeftConfig::new(MethodKind::Psoft, 3)
+        .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let id = core.register("psoft_r3", &peft, 51);
+
+    // Three LM batches with different batch sizes and ragged masks (one
+    // example fully unmasked, exercising the zero-denominator span).
+    let (seq, vocab) = (8usize, cfg.vocab_size);
+    let batches: Vec<Arc<Batch>> = (0..3)
+        .map(|i| {
+            let bsz = 1 + i; // 1, 2, 3 examples
+            let mut brng = Rng::new(970 + i as u64);
+            let tokens: Vec<i32> =
+                (0..bsz * seq).map(|_| brng.below(vocab) as i32).collect();
+            let mut mask = vec![0.0f32; bsz * seq];
+            for b in 0..bsz {
+                if i == 1 && b == 0 {
+                    continue; // fully unmasked example
+                }
+                for s in seq / 2..seq {
+                    mask[b * seq + s] = 1.0;
+                }
+            }
+            Arc::new(Batch {
+                batch: bsz,
+                seq,
+                tokens,
+                pad: vec![1.0; bsz * seq],
+                target: Target::LmMask(mask),
+            })
+        })
+        .collect();
+
+    let mut direct = NativeBackend::for_adapter(&bb, &peft, 51);
+    let mut ws = Workspace::new();
+    let refs: Vec<(f64, f64, Vec<f32>)> = batches
+        .iter()
+        .map(|b| {
+            let (l, m) = native::evaluate_into(&direct.model, b, &mut direct.bufs, &mut ws);
+            (l, m, direct.bufs.preds.clone())
+        })
+        .collect();
+
+    let tickets: Vec<Ticket> = batches.iter().map(|b| Ticket::new(b.batch)).collect();
+    for (b, t) in batches.iter().zip(&tickets) {
+        core.submit(id, b, ReqKind::Eval, t).unwrap();
+    }
+    core.resume();
+    core.drain();
+    for (t, (rl, rm, rp)) in tickets.iter().zip(&refs) {
+        let (l, m) = t.wait().unwrap();
+        assert_eq!(l, *rl, "coalesced LM loss must be bit-identical");
+        assert_eq!(m, *rm, "coalesced LM metric must be bit-identical");
+        t.with_preds(|p| assert_eq!(p, &rp[..], "coalesced LM preds must be bit-identical"));
+    }
+    let stats = core.stats(id).unwrap();
+    assert_eq!(stats.max_group_size, 3);
+    assert_eq!(stats.group_dispatches, 1);
+}
+
 /// A queue at its cap keeps serving what it accepted; accepted requests
 /// all complete after the backlog drains (no loss, no deadlock).
 #[test]

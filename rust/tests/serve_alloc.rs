@@ -192,4 +192,58 @@ fn warm_serve_loop_performs_zero_allocations() {
         "warm decode loop allocated {} times across 3 generations × {max_new} tokens",
         after - before
     );
+
+    // ---- Grouped decode: the warm lockstep loop is also free ----------
+    // decode_batch = 2 on one adapter; both group sizes a round can
+    // produce (2 when the dispatcher batches the pair, 1 when it picks
+    // one up before the second submit lands) are warmed deterministically
+    // first, so the measured rounds allocate nothing whichever way the
+    // race resolves.
+    let gopts = ServeOptions {
+        workers: 1,
+        queue_cap: 16,
+        burst: 2,
+        decode_batch: 2,
+        start_paused: true,
+        ..Default::default()
+    };
+    let gcore = ServeCore::new(Arc::clone(&dbb), gopts);
+    let ggid = gcore.register("lora_r3", &dpeft, 501);
+    let t1 = Ticket::new(max_new);
+    let t2 = Ticket::new(max_new);
+    // Deterministic two-lane warmup: both queued before dispatch starts.
+    gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
+    gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
+    gcore.resume();
+    t1.wait().unwrap();
+    t2.wait().unwrap();
+    // Deterministic single-lane warmup (group-of-1 scratch shapes).
+    for _ in 0..2 {
+        gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
+        t1.wait().unwrap();
+    }
+    // Mixed warm rounds.
+    for _ in 0..2 {
+        gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
+        gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
+        gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
+        let (_, e1) = t1.wait().unwrap();
+        let (_, e2) = t2.wait().unwrap();
+        assert_eq!(e1 as usize, max_new);
+        assert_eq!(e2 as usize, max_new);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "warm grouped decode loop allocated {} times across 3 two-lane rounds",
+        after - before
+    );
 }

@@ -29,6 +29,19 @@
 //! fails if any method's artifact bytes-per-parameter exceeds its
 //! committed ceiling (format bloat: f64 storage, duplicated tensors, …).
 //!
+//! `--update-baselines` closes the refresh loop: instead of gating, it
+//! rewrites the committed baseline file from the fresh run —
+//!
+//! ```text
+//! bench_gate --baseline ../BENCH_decode.json --current BENCH_decode.json \
+//!            --update-baselines
+//! ```
+//!
+//! validates that the current output parses, then copies it over the
+//! baseline path verbatim (commit the result). This is how the
+//! provisional conservative floors get replaced with measured numbers on
+//! a real machine.
+//!
 //! Exit codes: 0 pass, 1 regression, 2 usage/IO error.
 
 use psoft::util::json::Json;
@@ -66,6 +79,7 @@ struct Opts {
     max_regression: f64,
     lower_is_better: bool,
     foreach: Option<String>,
+    update_baselines: bool,
 }
 
 fn parse_args() -> Result<Opts, String> {
@@ -76,6 +90,7 @@ fn parse_args() -> Result<Opts, String> {
     let mut max_regression = 0.15;
     let mut lower_is_better = false;
     let mut foreach = None;
+    let mut update_baselines = false;
     while let Some(arg) = args.next() {
         let mut take = |what: &str| args.next().ok_or(format!("{what} expects a value"));
         match arg.as_str() {
@@ -89,6 +104,7 @@ fn parse_args() -> Result<Opts, String> {
             }
             "--lower-is-better" => lower_is_better = true,
             "--foreach" => foreach = Some(take("--foreach")?),
+            "--update-baselines" => update_baselines = true,
             other => return Err(format!("unknown argument {other:?}")),
         }
     }
@@ -99,6 +115,7 @@ fn parse_args() -> Result<Opts, String> {
         max_regression,
         lower_is_better,
         foreach,
+        update_baselines,
     })
 }
 
@@ -131,6 +148,28 @@ fn run() -> i32 {
             return 2;
         }
     };
+    if opts.update_baselines {
+        // Refresh mode: validate the fresh output parses, then rewrite
+        // the committed baseline verbatim. No gating.
+        if let Err(e) = load(&opts.current) {
+            eprintln!("bench_gate: {e}");
+            return 2;
+        }
+        return match std::fs::copy(&opts.current, &opts.baseline) {
+            Ok(bytes) => {
+                println!(
+                    "bench_gate: baseline {} refreshed from {} ({bytes} bytes) — commit it",
+                    opts.baseline, opts.current
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("bench_gate: copying {} over {}: {e}", opts.current, opts.baseline);
+                2
+            }
+        };
+    }
+
     let (bjson, cjson) = match (load(&opts.baseline), load(&opts.current)) {
         (Ok(b), Ok(c)) => (b, c),
         (Err(e), _) | (_, Err(e)) => {
