@@ -97,11 +97,13 @@ fn hotpath_bench() {
     let hyper = Hyper::default();
     let mut ws = Workspace::new();
 
-    // Warm the step buffers and the workspace pool.
+    // Warm the step buffers, the workspace pool, and the persistent
+    // compute pool (built lazily at the first large matmul).
     for _ in 0..3 {
         be.step_core(&batch, &hyper, &mut ws);
     }
     let misses_before = ws.misses();
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
 
     let steps = if fast() { 10 } else { 50 };
     // Phase A: forward + loss only.
@@ -127,11 +129,39 @@ fn hotpath_bench() {
     let optimizer_ns = (step_ns - grads_ns).max(0.0);
     let steps_per_sec = 1e9 / step_ns;
     let pool_misses_after_warmup = ws.misses() - misses_before;
+    // Warm phases must run entirely on the persistent compute pool: any
+    // non-zero delta here means a kernel regressed to spawn-per-call.
+    let thread_spawns = psoft::util::threadpool::thread_spawn_count() - spawns_before;
     let rss = peak_rss_bytes();
+
+    // Pool-speedup probe: the identical accumulate-into-slice matmul via
+    // the retained seed kernel (scoped spawns per call) vs the persistent
+    // pool + tiled kernels. The shape sits just above the parallel
+    // thresholds, where per-call spawn overhead is most visible.
+    let pa = Mat::randn(192, 128, 1.0, &mut rng);
+    let pb = Mat::randn(128, 192, 1.0, &mut rng);
+    let mut pc = vec![0.0f32; 192 * 192];
+    let iters = if fast() { 20 } else { 50 };
+    psoft::linalg::matmul::matmul_acc_slice_spawn_ref(&pa, &pb, &mut pc);
+    psoft::linalg::matmul_acc_slice(&pa, &pb, &mut pc);
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        pc.fill(0.0);
+        psoft::linalg::matmul::matmul_acc_slice_spawn_ref(&pa, &pb, &mut pc);
+    }
+    let seed_mm_ns = sw.secs() * 1e9 / iters as f64;
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        pc.fill(0.0);
+        psoft::linalg::matmul_acc_slice(&pa, &pb, &mut pc);
+    }
+    let pool_mm_ns = sw.secs() * 1e9 / iters as f64;
+    let pool_speedup = seed_mm_ns / pool_mm_ns.max(1.0);
 
     println!(
         "step {:.3} ms ({steps_per_sec:.2} steps/s) — fwd {:.3} ms, bwd {:.3} ms, adamw {:.3} ms; \
-         pool misses after warmup: {pool_misses_after_warmup}; peak RSS {:.1} MiB",
+         pool misses after warmup: {pool_misses_after_warmup}; thread spawns: {thread_spawns}; \
+         pool speedup over seed kernel: {pool_speedup:.2}x; peak RSS {:.1} MiB",
         step_ns / 1e6,
         fwd_ns / 1e6,
         backward_ns / 1e6,
@@ -145,6 +175,8 @@ fn hotpath_bench() {
          \"ns_per_step\": {{\n    \"total\": {step_ns:.0},\n    \"forward_loss\": {fwd_ns:.0},\n    \
          \"backward\": {backward_ns:.0},\n    \"optimizer\": {optimizer_ns:.0}\n  }},\n  \
          \"workspace_pool_misses_after_warmup\": {pool_misses_after_warmup},\n  \
+         \"thread_spawns_during_measurement\": {thread_spawns},\n  \
+         \"pool_speedup_over_seed\": {pool_speedup:.3},\n  \
          \"peak_rss_bytes\": {rss}\n}}\n"
     );
     std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");

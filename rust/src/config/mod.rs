@@ -491,6 +491,44 @@ impl ServeConfig {
     }
 }
 
+/// Process-wide runtime knobs (`[runtime]` TOML section), applied once
+/// at startup by the CLI before any kernel runs.
+///
+/// Thread-count precedence (highest wins):
+/// 1. the `PSOFT_THREADS` environment variable;
+/// 2. `[runtime] threads` — this struct, installed via [`RuntimeConfig::apply`];
+/// 3. auto: machine parallelism capped at 16.
+///
+/// The overrides are the escape hatch past the 16-thread cap. They feed
+/// `util::threadpool::default_parallelism`, which sizes the persistent
+/// compute pool (`util::threadpool::pool`) — so they must be applied
+/// before the first large kernel runs; the pool is built once and never
+/// resized.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeConfig {
+    /// Worker-thread count override; 0 (the default) means auto.
+    pub threads: usize,
+}
+
+impl RuntimeConfig {
+    /// Read the `[runtime]` section of a config tree; missing keys keep
+    /// the defaults.
+    pub fn from_toml(tree: &Json) -> RuntimeConfig {
+        let r = tree.get("runtime");
+        let mut rc = RuntimeConfig::default();
+        read_usize(r, "threads", &mut rc.threads);
+        rc
+    }
+
+    /// Install the thread override into the global resolution (no-op when
+    /// `threads` is 0, and always trumped by `PSOFT_THREADS`).
+    pub fn apply(&self) {
+        if self.threads > 0 {
+            crate::util::threadpool::set_configured_threads(self.threads);
+        }
+    }
+}
+
 /// A complete fine-tuning job description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -684,6 +722,15 @@ mod tests {
         assert_eq!(sc2.workers, ServeConfig::default().workers);
         assert_eq!(sc2.decode_batch, 4);
         assert!(!sc2.coalesce_eval);
+    }
+
+    #[test]
+    fn runtime_section_parses_with_defaults() {
+        let rc = RuntimeConfig::from_toml(&toml::parse("[runtime]\nthreads = 3\n").unwrap());
+        assert_eq!(rc.threads, 3);
+        // Absent section ⇒ 0 ⇒ auto (apply() is a no-op).
+        let rc2 = RuntimeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
+        assert_eq!(rc2.threads, 0);
     }
 
     #[test]

@@ -1,9 +1,45 @@
-//! Blocked, multi-threaded matrix multiplication.
+//! Cache-blocked, pool-parallel matrix multiplication.
 //!
 //! This is the native backend's hot path (the PJRT path runs matmuls inside
-//! XLA). Layout is row-major; the kernel uses the classic i-k-j loop order so
-//! the inner loop is a contiguous axpy over the output row — auto-vectorizes
-//! well — plus a row-panel thread split for large shapes.
+//! XLA). Layout is row-major. Three layers:
+//!
+//! **Threading.** Large products split the output into row panels and run
+//! them on the persistent [`crate::util::threadpool::pool`] via
+//! `par_for` — workers are spawned once per process and claim panels from
+//! an atomic cursor, so a warm steady-state product performs zero thread
+//! spawns and zero heap allocations (pinned by `tests/zero_alloc.rs`).
+//! Each lane owns a disjoint slice of C.
+//!
+//! **Cache blocking.** Within a panel, big-enough shapes run a tiled
+//! kernel: the shared dimension is cut into `KC = 128` blocks and the
+//! output columns into `NC = 128` blocks; each `KC×NC` block of B (or of
+//! the transposed operand) is packed contiguously into a persistent
+//! per-thread scratch ([`Scalar::with_scratch`] — no allocation once
+//! warm), then an `MR = 4`-row register tile streams it with a contiguous
+//! axpy inner loop that autovectorizes (`std::simd` is nightly-only;
+//! the loops are written so LLVM's autovectorizer does the same job).
+//! Small shapes take a plain i-k-j kernel with no packing.
+//!
+//! **Accumulation-order policy.** Tiling is *order-transparent* here, not
+//! just tolerance-close: every kernel accumulates each C element in
+//! ascending shared-dimension (`k`) order, the k-blocks are visited
+//! ascending, and partial block results are never rounded through a
+//! separate accumulator —
+//!
+//! - `matmul` / `matmul_tn` (the `dW = xᵀ @ dy` backward path) add terms
+//!   directly into C, so blocked, simple, threaded and single-threaded
+//!   paths produce **bit-identical** results;
+//! - `matmul_nt` computes each register tile in a zeroed scratch over the
+//!   full `k` range and adds it to C once, reproducing the historical
+//!   dot-then-add semantics bit-for-bit.
+//!
+//! Consequences the rest of the codebase relies on: a C element depends
+//! only on its own A row and B column, never on `m` or the panel split, so
+//! decode-time `[1, k]` products bit-match the same row of a prefill
+//! `[T, k]` product (`tests/decode.rs`), and the size heuristics below can
+//! never change numerics. The inner loops carry no `a_ik == 0` skip: a
+//! zero times an inf/NaN in B must produce NaN, not silence
+//! (`nan_and_inf_propagate` pins this).
 //!
 //! Every product comes in three flavours so callers can choose their
 //! allocation discipline (the zero-allocation training path uses only the
@@ -15,30 +51,278 @@
 //! - `matmul*_acc_slice`— accumulate into a raw row-major slice, for
 //!   writing gradients directly into flat parameter-gradient storage.
 //!
-//! The transposed variants never materialize Aᵀ/Bᵀ. All of them —
-//! including `matmul_tn`, which sits on the backward hot path as
-//! `dW = xᵀ @ dy` — share the same `par_chunks` row-panel split over the
-//! output, so each thread owns a disjoint slice of C.
+//! The transposed variants never materialize Aᵀ/Bᵀ (the tiled paths pack
+//! blocks of them into scratch instead).
 
 use super::matrix::{Matrix, Scalar};
-use crate::util::threadpool::{default_parallelism, par_chunks};
+use crate::util::threadpool::pool;
+
+/// k-block height of a packed panel.
+pub(crate) const KC: usize = 128;
+/// Column width of a packed panel (KC·NC f32 = 64 KiB: L1/L2 resident).
+pub(crate) const NC: usize = 128;
+/// Register-tile height: rows of C updated together so each packed B row
+/// is loaded once per MR output rows.
+pub(crate) const MR: usize = 4;
 
 /// Panel height per task when threading.
 const PAR_MIN_ROWS: usize = 64;
-/// Minimum FLOP count before threads are worth spawning.
+/// Minimum FLOP count before the pool is worth dispatching.
 const PAR_MIN_FLOPS: usize = 1 << 22;
+/// Below this (flops) or below `2·MR` panel rows, packing costs more than
+/// it saves and the simple kernel runs. Numerics are unaffected either
+/// way (see the accumulation-order policy above).
+const TILE_MIN_FLOPS: usize = 1 << 14;
+const TILE_MIN_ROWS: usize = 2 * MR;
 
-fn threads_for(flops: usize, out_rows: usize) -> usize {
+pub(crate) fn threads_for(flops: usize, out_rows: usize) -> usize {
     if flops >= PAR_MIN_FLOPS && out_rows >= PAR_MIN_ROWS {
-        default_parallelism()
+        pool().threads()
     } else {
         1
     }
 }
 
-struct SendPtr<T>(*mut T);
+/// Run `body` over row panels `[lo, hi)` of `0..m`: inline when a single
+/// lane suffices, else on the persistent pool with one chunk per lane.
+pub(crate) fn run_row_panels(m: usize, threads: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    if threads <= 1 || m <= 1 {
+        body(0, m);
+    } else {
+        pool().par_for(m, m.div_ceil(threads), body);
+    }
+}
+
+pub(crate) struct SendPtr<T>(pub *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// Panel kernels (single-lane, C-panel += product)
+// ---------------------------------------------------------------------------
+
+/// Plain i-k-j kernel: C += A @ B over a row panel, no packing.
+/// `a` is the `rows×k` A panel, `c` the matching `rows×n` C panel.
+fn nn_simple<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T]) {
+    for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        for (kk, &a_ik) in a_row.iter().enumerate() {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                *c_v += a_ik * b_v;
+            }
+        }
+    }
+}
+
+/// MR-row micro-kernel over one packed block: each packed B row is loaded
+/// once and fans out into four independent C-row axpy streams.
+fn nn_micro<T: Scalar>(a: [&[T]; MR], packed: &[T], c: [&mut [T]; MR], jb: usize) {
+    let [c0, c1, c2, c3] = c;
+    let [a0, a1, a2, a3] = a;
+    for kk in 0..a0.len() {
+        let bq = &packed[kk * jb..(kk + 1) * jb];
+        let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+        for j in 0..jb {
+            let b_v = bq[j];
+            c0[j] += x0 * b_v;
+            c1[j] += x1 * b_v;
+            c2[j] += x2 * b_v;
+            c3[j] += x3 * b_v;
+        }
+    }
+}
+
+/// Tiled kernel: C += A @ B over a row panel, KC×NC packed B blocks,
+/// MR-row register tiles. Accumulates directly into C with ascending
+/// k-blocks, so the per-element order matches `nn_simple` exactly.
+fn nn_tiled<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T], pack: &mut [T]) {
+    for kc in (0..k).step_by(KC) {
+        let kb = KC.min(k - kc);
+        for jc in (0..n).step_by(NC) {
+            let jb = NC.min(n - jc);
+            // Pack the kb×jb block of B contiguously (rows of width jb).
+            for kk in 0..kb {
+                let src = &b[(kc + kk) * n + jc..(kc + kk) * n + jc + jb];
+                pack[kk * jb..(kk + 1) * jb].copy_from_slice(src);
+            }
+            let packed = &pack[..kb * jb];
+            for (g, group) in c.chunks_mut(MR * n).enumerate() {
+                let i0 = g * MR;
+                if group.len() == MR * n {
+                    let (r0, rest) = group.split_at_mut(n);
+                    let (r1, rest) = rest.split_at_mut(n);
+                    let (r2, r3) = rest.split_at_mut(n);
+                    nn_micro(
+                        [
+                            &a[i0 * k + kc..i0 * k + kc + kb],
+                            &a[(i0 + 1) * k + kc..(i0 + 1) * k + kc + kb],
+                            &a[(i0 + 2) * k + kc..(i0 + 2) * k + kc + kb],
+                            &a[(i0 + 3) * k + kc..(i0 + 3) * k + kc + kb],
+                        ],
+                        packed,
+                        [
+                            &mut r0[jc..jc + jb],
+                            &mut r1[jc..jc + jb],
+                            &mut r2[jc..jc + jb],
+                            &mut r3[jc..jc + jb],
+                        ],
+                        jb,
+                    );
+                } else {
+                    // Tail rows (< MR): single-row axpy over the block.
+                    for (ri, row) in group.chunks_mut(n).enumerate() {
+                        let i = i0 + ri;
+                        let a_seg = &a[i * k + kc..i * k + kc + kb];
+                        let c_seg = &mut row[jc..jc + jb];
+                        for (kk, &a_ik) in a_seg.iter().enumerate() {
+                            let bq = &packed[kk * jb..(kk + 1) * jb];
+                            for (c_v, &b_v) in c_seg.iter_mut().zip(bq) {
+                                *c_v += a_ik * b_v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Size dispatch for the nn family over one row panel.
+fn nn_panel<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T]) {
+    let rows = c.len() / n;
+    if rows * k * n < TILE_MIN_FLOPS || rows < TILE_MIN_ROWS {
+        nn_simple(a, k, b, n, c);
+    } else {
+        T::with_scratch(KC * NC, |pack| nn_tiled(a, k, b, n, c, pack));
+    }
+}
+
+/// Plain kernel: C += Aᵀ @ B over C rows `[lo, hi)` (columns of A).
+/// Outer-product accumulation: the shared dimension is walked in
+/// ascending order straight into C.
+fn tn_simple<T: Scalar>(
+    a: &[T],
+    k: usize,
+    m: usize,
+    lo: usize,
+    hi: usize,
+    b: &[T],
+    n: usize,
+    c: &mut [T],
+) {
+    for kk in 0..k {
+        let a_row = &a[kk * m..(kk + 1) * m];
+        let b_row = &b[kk * n..(kk + 1) * n];
+        for (ii, i) in (lo..hi).enumerate() {
+            let a_ki = a_row[i];
+            let c_row = &mut c[ii * n..(ii + 1) * n];
+            for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                *c_v += a_ki * b_v;
+            }
+        }
+    }
+}
+
+/// Tiled kernel for Aᵀ @ B: pack the panel's slice of Aᵀ row-major once
+/// (turning the strided column reads into one pass), then reuse the nn
+/// tile kernel. Same ascending-k order into C as `tn_simple`.
+fn tn_panel<T: Scalar>(
+    a: &[T],
+    k: usize,
+    m: usize,
+    lo: usize,
+    hi: usize,
+    b: &[T],
+    n: usize,
+    c: &mut [T],
+) {
+    let rows = hi - lo;
+    if rows * k * n < TILE_MIN_FLOPS || rows < TILE_MIN_ROWS {
+        tn_simple(a, k, m, lo, hi, b, n, c);
+        return;
+    }
+    T::with_scratch(rows * k + KC * NC, |scratch| {
+        let (at, pack) = scratch.split_at_mut(rows * k);
+        for kk in 0..k {
+            let a_row = &a[kk * m + lo..kk * m + hi];
+            for (ii, &v) in a_row.iter().enumerate() {
+                at[ii * k + kk] = v;
+            }
+        }
+        nn_tiled(at, k, b, n, c, pack);
+    });
+}
+
+/// Plain kernel: C += A @ Bᵀ over a row panel. Each element is a dot of
+/// two contiguous rows, accumulated in a register and added to C once.
+fn nt_simple<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T]) {
+    if k == 0 {
+        // Dot-then-add semantics: an empty dot still adds +0.0.
+        for c_v in c.iter_mut() {
+            *c_v += T::ZERO;
+        }
+        return;
+    }
+    for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        for (j, c_v) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut acc = T::ZERO;
+            for (&x, &y) in a_row.iter().zip(b_row) {
+                acc += x * y;
+            }
+            *c_v += acc;
+        }
+    }
+}
+
+/// Tiled kernel for A @ Bᵀ: per NC-wide output block, pack that slice of
+/// Bᵀ once; per MR-row group, a zeroed scratch tile accumulates the full
+/// `k` range (ascending) before a single add into C — reproducing the
+/// dot-then-add order of `nt_simple` bit-for-bit.
+fn nt_tiled<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T], scratch: &mut [T]) {
+    let (bt, w) = scratch.split_at_mut(k * NC);
+    for jc in (0..n).step_by(NC) {
+        let jb = NC.min(n - jc);
+        for (jj, b_row) in b[jc * k..(jc + jb) * k].chunks_exact(k).enumerate() {
+            for (kk, &v) in b_row.iter().enumerate() {
+                bt[kk * jb + jj] = v;
+            }
+        }
+        for (g, group) in c.chunks_mut(MR * n).enumerate() {
+            let i0 = g * MR;
+            let gr = (group.len() / n).min(MR);
+            let w_tile = &mut w[..gr * jb];
+            w_tile.fill(T::ZERO);
+            for kk in 0..k {
+                let bq = &bt[kk * jb..(kk + 1) * jb];
+                for r in 0..gr {
+                    let x = a[(i0 + r) * k + kk];
+                    let w_row = &mut w_tile[r * jb..(r + 1) * jb];
+                    for (w_v, &b_v) in w_row.iter_mut().zip(bq) {
+                        *w_v += x * b_v;
+                    }
+                }
+            }
+            for (r, row) in group.chunks_mut(n).enumerate() {
+                let c_seg = &mut row[jc..jc + jb];
+                let w_row = &w_tile[r * jb..(r + 1) * jb];
+                for (c_v, &w_v) in c_seg.iter_mut().zip(w_row) {
+                    *c_v += w_v;
+                }
+            }
+        }
+    }
+}
+
+/// Size dispatch for the nt family over one row panel.
+fn nt_panel<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T]) {
+    let rows = c.len() / n;
+    if k == 0 || rows * k * n < TILE_MIN_FLOPS || rows < TILE_MIN_ROWS {
+        nt_simple(a, k, b, n, c);
+    } else {
+        T::with_scratch(k * NC + MR * NC, |scratch| nt_tiled(a, k, b, n, c, scratch));
+    }
+}
 
 // ---------------------------------------------------------------------------
 // C = A @ B
@@ -68,32 +352,21 @@ pub fn matmul_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
 
 /// C += A @ B with C a row-major `a.rows × b.cols` slice.
 pub fn matmul_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
-    assert_eq!(a.cols, b.rows);
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {:?} @ {:?}", a.shape(), b.shape());
     let (m, k, n) = (a.rows, a.cols, b.cols);
     assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
     let threads = threads_for(m * k * n, m);
-
-    // Split C by row panels; each thread owns a disjoint slice of C.
     let a_data = &a.data;
     let b_data = &b.data;
     let c_ptr = SendPtr(c.as_mut_ptr());
-    par_chunks(m, threads, |lo, hi| {
+    run_row_panels(m, threads, &|lo, hi| {
         let c_ptr = &c_ptr;
-        // SAFETY: row panels [lo, hi) are disjoint across threads.
-        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
-        for (ii, i) in (lo..hi).enumerate() {
-            let a_row = &a_data[i * k..(i + 1) * k];
-            let c_row = &mut c_slice[ii * n..(ii + 1) * n];
-            for (kk, &a_ik) in a_row.iter().enumerate() {
-                if a_ik == T::ZERO {
-                    continue;
-                }
-                let b_row = &b_data[kk * n..(kk + 1) * n];
-                for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
-                    *c_v += a_ik * b_v;
-                }
-            }
-        }
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let c_panel = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        nn_panel(&a_data[lo * k..hi * k], k, b_data, n, c_panel);
     });
 }
 
@@ -123,38 +396,26 @@ pub fn matmul_tn_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>)
 }
 
 /// C += Aᵀ @ B with C a row-major `a.cols × b.cols` slice. Parallelized
-/// over row panels of C (columns of A); within a panel the shared
-/// dimension is walked in ascending order so accumulation order — and
-/// therefore the floating-point result — is identical to the
-/// single-threaded kernel.
+/// over row panels of C (columns of A); the shared dimension is walked in
+/// ascending order in every path, so the floating-point result is
+/// identical across the simple, tiled, threaded and single-threaded
+/// kernels.
 pub fn matmul_tn_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
     assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch: {:?}ᵀ @ {:?}", a.shape(), b.shape());
     let (k, m, n) = (a.rows, a.cols, b.cols);
     assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
     let threads = threads_for(m * k * n, m);
     let a_data = &a.data;
     let b_data = &b.data;
     let c_ptr = SendPtr(c.as_mut_ptr());
-    par_chunks(m, threads, |lo, hi| {
+    run_row_panels(m, threads, &|lo, hi| {
         let c_ptr = &c_ptr;
-        // SAFETY: C row panels [lo, hi) are disjoint across threads.
-        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
-        // Outer-product accumulation: for each shared row kk, the panel's
-        // slice of a-row scales b-row into the owned C rows.
-        for kk in 0..k {
-            let a_row = &a_data[kk * m..(kk + 1) * m];
-            let b_row = &b_data[kk * n..(kk + 1) * n];
-            for (ii, i) in (lo..hi).enumerate() {
-                let a_ki = a_row[i];
-                if a_ki == T::ZERO {
-                    continue;
-                }
-                let c_row = &mut c_slice[ii * n..(ii + 1) * n];
-                for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
-                    *c_v += a_ki * b_v;
-                }
-            }
-        }
+        // SAFETY: C row panels [lo, hi) are disjoint across pool lanes.
+        let c_panel = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        tn_panel(a_data, k, m, lo, hi, b_data, n, c_panel);
     });
 }
 
@@ -162,8 +423,7 @@ pub fn matmul_tn_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T])
 // C = A @ Bᵀ
 // ---------------------------------------------------------------------------
 
-/// C = A @ Bᵀ without materializing Bᵀ. Inner loop is a dot product of two
-/// contiguous rows.
+/// C = A @ Bᵀ without materializing Bᵀ.
 pub fn matmul_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
     let mut c = Matrix::zeros(a.rows, b.rows);
@@ -189,25 +449,18 @@ pub fn matmul_nt_acc_slice<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T])
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
     let (m, k, n) = (a.rows, a.cols, b.rows);
     assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
     let threads = threads_for(m * k * n, m);
     let a_data = &a.data;
     let b_data = &b.data;
     let c_ptr = SendPtr(c.as_mut_ptr());
-    par_chunks(m, threads, |lo, hi| {
+    run_row_panels(m, threads, &|lo, hi| {
         let c_ptr = &c_ptr;
-        // SAFETY: row panels [lo, hi) are disjoint across threads.
-        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
-        for (ii, i) in (lo..hi).enumerate() {
-            let a_row = &a_data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let b_row = &b_data[j * k..(j + 1) * k];
-                let mut acc = T::ZERO;
-                for (&x, &y) in a_row.iter().zip(b_row) {
-                    acc += x * y;
-                }
-                c_slice[ii * n + j] += acc;
-            }
-        }
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let c_panel = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        nt_panel(&a_data[lo * k..hi * k], k, b_data, n, c_panel);
     });
 }
 
@@ -223,6 +476,127 @@ pub fn matvec<T: Scalar>(a: &Matrix<T>, x: &[T]) -> Vec<T> {
             acc
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Reference / test surfaces
+// ---------------------------------------------------------------------------
+
+/// Seed-era kernel, kept verbatim (naive i-k-j with the zero-skip branch,
+/// scoped-thread fan-out per call) as the reference behind the
+/// `pool_speedup_over_seed` bench metric. Not part of the public API.
+#[doc(hidden)]
+pub fn matmul_acc_slice_spawn_ref<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+    use crate::util::threadpool::{default_parallelism, par_chunks};
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    assert_eq!(c.len(), m * n);
+    let threads = if m * k * n >= PAR_MIN_FLOPS && m >= PAR_MIN_ROWS {
+        default_parallelism()
+    } else {
+        1
+    };
+    let a_data = &a.data;
+    let b_data = &b.data;
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    par_chunks(m, threads, |lo, hi| {
+        let c_ptr = &c_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across threads.
+        let c_slice = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        for (ii, i) in (lo..hi).enumerate() {
+            let a_row = &a_data[i * k..(i + 1) * k];
+            let c_row = &mut c_slice[ii * n..(ii + 1) * n];
+            for (kk, &a_ik) in a_row.iter().enumerate() {
+                if a_ik == T::ZERO {
+                    continue;
+                }
+                let b_row = &b_data[kk * n..(kk + 1) * n];
+                for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                    *c_v += a_ik * b_v;
+                }
+            }
+        }
+    });
+}
+
+/// Test-only surface: run a chosen kernel path regardless of the size
+/// heuristics, so the parity suite (`tests/kernel_parity.rs`) can pin
+/// tiled == simple bit-for-bit at every shape. Hidden from docs; not a
+/// stable API. Each function accumulates into `c` like the public
+/// `_acc_slice` forms.
+#[doc(hidden)]
+pub mod kernel_test_api {
+    use super::*;
+
+    pub const TILE_KC: usize = KC;
+    pub const TILE_NC: usize = NC;
+    pub const TILE_MR: usize = MR;
+
+    pub fn nn_simple_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        nn_simple(&a.data, k, &b.data, n, c);
+    }
+
+    pub fn nn_tiled_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        T::with_scratch(KC * NC, |pack| nn_tiled(&a.data, k, &b.data, n, c, pack));
+    }
+
+    pub fn tn_simple_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+        let (k, m, n) = (a.rows, a.cols, b.cols);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        tn_simple(&a.data, k, m, 0, m, &b.data, n, c);
+    }
+
+    pub fn tn_tiled_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+        let (k, m, n) = (a.rows, a.cols, b.cols);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        T::with_scratch(m * k + KC * NC, |scratch| {
+            let (at, pack) = scratch.split_at_mut(m * k);
+            for kk in 0..k {
+                for i in 0..m {
+                    at[i * k + kk] = a.data[kk * m + i];
+                }
+            }
+            nn_tiled(at, k, &b.data, n, c, pack);
+        });
+    }
+
+    pub fn nt_simple_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+        let (m, k, n) = (a.rows, a.cols, b.rows);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        nt_simple(&a.data, k, &b.data, n, c);
+    }
+
+    pub fn nt_tiled_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut [T]) {
+        let (m, k, n) = (a.rows, a.cols, b.rows);
+        assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            nt_simple(&a.data, k, &b.data, n, c);
+            return;
+        }
+        T::with_scratch(k * NC + MR * NC, |scratch| nt_tiled(&a.data, k, &b.data, n, c, scratch));
+    }
 }
 
 #[cfg(test)]
@@ -293,7 +667,7 @@ mod tests {
     #[test]
     fn tn_parallel_panel_split_matches_naive() {
         // Shape chosen to clear both threading thresholds (output rows =
-        // a.cols ≥ 64, flops ≥ 2^22) so the par_chunks path runs.
+        // a.cols ≥ 64, flops ≥ 2^22) so the pool path runs.
         let mut rng = Rng::new(37);
         let a = Mat::randn(192, 128, 1.0, &mut rng);
         let b = Mat::randn(192, 180, 1.0, &mut rng);
@@ -363,5 +737,59 @@ mod tests {
         let mut c = Mat::filled(2, 2, 10.0);
         matmul_acc(&a, &b, &mut c);
         assert_eq!(c.data, vec![11.0, 11.0, 11.0, 11.0]);
+    }
+
+    /// The inner loops must not skip zero A entries: IEEE says
+    /// `0 × NaN = NaN` and `0 × inf = NaN`, and a branch that silences
+    /// that also costs a compare per k in the hottest loop.
+    #[test]
+    fn nan_and_inf_propagate() {
+        // Zero row in A against NaN in B: every output element of that
+        // row sees a 0·NaN term and must be NaN.
+        let a = Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 2.0]);
+        let b = Mat::from_vec(2, 2, vec![f32::NAN, 1.0, 3.0, 4.0]);
+        let c = matmul(&a, &b);
+        assert!(c[(0, 0)].is_nan(), "0·NaN must propagate, got {}", c[(0, 0)]);
+        assert!(c[(1, 0)].is_nan());
+        assert!((c[(0, 1)] - 0.0).abs() < 1e-6 && (c[(1, 1)] - 9.0).abs() < 1e-6);
+
+        // 0·inf = NaN through the tn and nt paths too.
+        let a_inf = Mat::from_vec(2, 1, vec![0.0, 1.0]); // column [0, 1]
+        let b_inf = Mat::from_vec(2, 1, vec![f32::INFINITY, 1.0]);
+        let c_tn = matmul_tn(&a_inf, &b_inf); // 1×1: 0·inf + 1·1
+        assert!(c_tn[(0, 0)].is_nan(), "tn: 0·inf must yield NaN, got {}", c_tn[(0, 0)]);
+        let d = Mat::from_vec(1, 2, vec![0.0, 1.0]);
+        let e = Mat::from_vec(1, 2, vec![f32::INFINITY, 1.0]); // row of Bᵀ
+        let c_nt = matmul_nt(&d, &e);
+        assert!(c_nt[(0, 0)].is_nan(), "nt: 0·inf must yield NaN, got {}", c_nt[(0, 0)]);
+    }
+
+    /// Decode-shape contract: a [1, k] product bit-matches the same row
+    /// of the batched [T, k] product (per-element order is independent of
+    /// m and of the panel split).
+    #[test]
+    fn single_row_bit_matches_batched_row() {
+        let mut rng = Rng::new(53);
+        let x = Mat::randn(12, 40, 1.0, &mut rng);
+        let w = Mat::randn(40, 24, 1.0, &mut rng);
+        let full = matmul(&x, &w);
+        for t in [0usize, 5, 11] {
+            let row = Mat::from_vec(1, 40, x.row(t).to_vec());
+            let y = matmul(&row, &w);
+            assert_eq!(y.data, full.row(t), "row {t} diverged from batched product");
+        }
+    }
+
+    /// The seed-era spawning kernel is numerically interchangeable with
+    /// the pooled kernel on benign inputs (it still has the zero-skip).
+    #[test]
+    fn spawn_ref_matches_pooled_kernel() {
+        let mut rng = Rng::new(59);
+        let a = Mat::randn(96, 48, 1.0, &mut rng);
+        let b = Mat::randn(48, 80, 1.0, &mut rng);
+        let mut c_ref = vec![0.0f32; 96 * 80];
+        matmul_acc_slice_spawn_ref(&a, &b, &mut c_ref);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, c_ref);
     }
 }

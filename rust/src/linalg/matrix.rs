@@ -2,6 +2,7 @@
 //! (initialization / geometry numerics, where SVD accuracy matters).
 
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 use std::fmt;
 use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
 
@@ -30,6 +31,21 @@ pub trait Scalar:
     fn to_f64(self) -> f64;
     fn abs(self) -> Self;
     fn sqrt(self) -> Self;
+    /// Run `f` on a thread-local scratch buffer of at least `len`
+    /// elements with unspecified contents. The tiled matmul kernels draw
+    /// their packed panels from here: per-thread, so pool workers never
+    /// contend, and persistent, so warm steady-state calls allocate
+    /// nothing (the buffer only grows on first use of a larger shape).
+    ///
+    /// Calls must not nest on one thread (single `RefCell` per type); a
+    /// kernel therefore takes one scratch region per invocation and
+    /// carves it with `split_at_mut`.
+    fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [Self]) -> R) -> R;
+}
+
+thread_local! {
+    static SCRATCH_F32: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static SCRATCH_F64: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
 }
 
 impl Scalar for f32 {
@@ -51,6 +67,15 @@ impl Scalar for f32 {
     fn sqrt(self) -> Self {
         f32::sqrt(self)
     }
+    fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [Self]) -> R) -> R {
+        SCRATCH_F32.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+            f(&mut buf[..len])
+        })
+    }
 }
 
 impl Scalar for f64 {
@@ -71,6 +96,15 @@ impl Scalar for f64 {
     #[inline]
     fn sqrt(self) -> Self {
         f64::sqrt(self)
+    }
+    fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [Self]) -> R) -> R {
+        SCRATCH_F64.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+            f(&mut buf[..len])
+        })
     }
 }
 

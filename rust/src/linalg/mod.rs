@@ -1,7 +1,8 @@
 //! Linear-algebra substrate (dependency-free, f32/f64).
 //!
 //! Provides everything the PEFT registry and the native training backend
-//! need: dense matrices, blocked multi-threaded matmul, Householder QR,
+//! need: dense matrices, cache-tiled pool-parallel matmul (plus the fused
+//! rotation-apply kernels in [`rot`]), Householder QR,
 //! one-sided Jacobi SVD (exact), randomized SVD (Halko; the paper's fast-SVD
 //! initialization, Table 16), and the Cayley parameterization with its
 //! truncated-Neumann approximation (paper §4.2/§5, Appendix C).
@@ -10,6 +11,7 @@ pub mod cayley;
 pub mod matmul;
 pub mod matrix;
 pub mod qr;
+pub mod rot;
 pub mod rsvd;
 pub mod svd;
 pub mod workspace;
@@ -25,6 +27,7 @@ pub use matmul::{
     matmul_tn_into, matvec,
 };
 pub use matrix::{DMat, Mat, Matrix, Scalar};
+pub use rot::{block_rot_matmul_into, perm_block_rot_matmul_into, rot_matmul_acc};
 pub use qr::{orthonormal_columns, qr_thin};
 pub use rsvd::rsvd;
 pub use svd::{svd, Svd};

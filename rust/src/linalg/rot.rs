@@ -1,0 +1,335 @@
+//! Fused rotation-apply kernels for the PSOFT/OFT/BOFT forward hot paths.
+//!
+//! Each adapter forward used to materialize its rotated activation as a
+//! full `[T, r]` or `[T, d]` workspace matrix and then feed it to the
+//! dense matmul consuming it. These kernels fuse the two: per output row,
+//! the rotated vector lives in a persistent per-thread scratch
+//! ([`Scalar::with_scratch`]) that is L1-resident and never materialized,
+//! and the consuming product runs immediately while it is hot. One
+//! intermediate fewer to write and re-read per token, same zero-alloc
+//! discipline.
+//!
+//! **Numerics.** Each kernel replicates the exact per-element operation
+//! order of the unfused chain it replaces (zero-init + ascending-k
+//! accumulation for the `matmul_into`/`matmul_acc` stages, dot-in-register
+//! for the block rotations), so fused and unfused paths are bit-identical
+//! — pinned by the `*_matches_unfused_chain` tests below and relied on by
+//! the decode/prefill and coalesced-eval bitwise suites.
+//!
+//! Threading follows `matmul`: row panels on the persistent pool above
+//! the same FLOP/row thresholds, with per-lane scratch.
+
+use super::matmul::{run_row_panels, threads_for, SendPtr};
+use super::matrix::{Matrix, Scalar};
+
+/// y += ((u · R) ∘ β) · B — the PSOFT principal-subspace hot path
+/// (`u = (x·A')·α` is `[T, r]`, `R` is the `r×r` Cayley rotation, `β` an
+/// optional per-column scale, `B` the `r×n` projection back out).
+///
+/// Bit-identical to `matmul_into(u, R, w); w.scale_cols(β);
+/// matmul_acc(w, B, y)` without the `[T, r]` `w` intermediate.
+pub fn rot_matmul_acc<T: Scalar>(
+    u: &Matrix<T>,
+    r_mat: &Matrix<T>,
+    beta: Option<&[T]>,
+    b: &Matrix<T>,
+    y: &mut Matrix<T>,
+) {
+    let (t, r, n) = (u.rows, u.cols, b.cols);
+    assert_eq!((r_mat.rows, r_mat.cols), (r, r), "rot_matmul: R must be {r}×{r}");
+    assert_eq!(b.rows, r, "rot_matmul: B rows must match rank {r}");
+    assert_eq!((y.rows, y.cols), (t, n));
+    if let Some(beta) = beta {
+        assert_eq!(beta.len(), r);
+    }
+    if t == 0 || r == 0 || n == 0 {
+        return;
+    }
+    let threads = threads_for(t * r * (r + n), t);
+    let u_data = &u.data;
+    let r_data = &r_mat.data;
+    let b_data = &b.data;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    run_row_panels(t, threads, &|lo, hi| {
+        let y_ptr = &y_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let y_panel = unsafe { std::slice::from_raw_parts_mut(y_ptr.0.add(lo * n), (hi - lo) * n) };
+        T::with_scratch(r, |w| {
+            for (ii, i) in (lo..hi).enumerate() {
+                let u_row = &u_data[i * r..(i + 1) * r];
+                // w = u_row · R (zero-init, ascending k — matmul_into order).
+                for w_v in w.iter_mut() {
+                    *w_v = T::ZERO;
+                }
+                for (kk, &x) in u_row.iter().enumerate() {
+                    let r_row = &r_data[kk * r..(kk + 1) * r];
+                    for (w_v, &r_v) in w.iter_mut().zip(r_row) {
+                        *w_v += x * r_v;
+                    }
+                }
+                if let Some(beta) = beta {
+                    for (w_v, &s) in w.iter_mut().zip(beta) {
+                        *w_v *= s;
+                    }
+                }
+                // y_row += w · B (ascending k — matmul_acc order).
+                let y_row = &mut y_panel[ii * n..(ii + 1) * n];
+                for (kk, &w_v) in w.iter().enumerate() {
+                    let b_row = &b_data[kk * n..(kk + 1) * n];
+                    for (y_v, &b_v) in y_row.iter_mut().zip(b_row) {
+                        *y_v += w_v * b_v;
+                    }
+                }
+            }
+        });
+    });
+}
+
+/// y = (x · blockdiag(rots)) · W₀ — the OFT forward. Per row, each block
+/// rotation lands in scratch (dot-in-register per element, like the
+/// unfused `rotate_into`), then W₀ consumes it in `matmul_into` order.
+/// Bit-identical to the unfused pair, minus the `[T, d]` intermediate.
+pub fn block_rot_matmul_into<T: Scalar>(
+    x: &Matrix<T>,
+    rots: &[Matrix<T>],
+    w0: &Matrix<T>,
+    y: &mut Matrix<T>,
+) {
+    let (t, d, n) = (x.rows, x.cols, w0.cols);
+    assert_eq!(w0.rows, d);
+    assert_eq!((y.rows, y.cols), (t, n));
+    debug_assert_eq!(rots.iter().map(|r| r.rows).sum::<usize>(), d, "blocks must tile d");
+    if t == 0 || n == 0 {
+        return;
+    }
+    if d == 0 {
+        y.fill(T::ZERO);
+        return;
+    }
+    let threads = threads_for(t * d * (rots.iter().map(|r| r.rows).max().unwrap_or(1) + n), t);
+    let x_data = &x.data;
+    let w0_data = &w0.data;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    run_row_panels(t, threads, &|lo, hi| {
+        let y_ptr = &y_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let y_panel = unsafe { std::slice::from_raw_parts_mut(y_ptr.0.add(lo * n), (hi - lo) * n) };
+        T::with_scratch(d, |z| {
+            for (ii, i) in (lo..hi).enumerate() {
+                let x_row = &x_data[i * d..(i + 1) * d];
+                let mut off = 0;
+                for rot in rots {
+                    let bsz = rot.rows;
+                    let xb = &x_row[off..off + bsz];
+                    for j in 0..bsz {
+                        let mut acc = T::ZERO;
+                        for (bi, &xv) in xb.iter().enumerate() {
+                            acc += xv * rot.data[bi * bsz + j];
+                        }
+                        z[off + j] = acc;
+                    }
+                    off += bsz;
+                }
+                let y_row = &mut y_panel[ii * n..(ii + 1) * n];
+                for y_v in y_row.iter_mut() {
+                    *y_v = T::ZERO;
+                }
+                for (kk, &z_v) in z.iter().enumerate() {
+                    let w_row = &w0_data[kk * n..(kk + 1) * n];
+                    for (y_v, &w_v) in y_row.iter_mut().zip(w_row) {
+                        *y_v += z_v * w_v;
+                    }
+                }
+            }
+        });
+    });
+}
+
+/// y = permᵀ(blockdiag(rots)(perm(x))) · W₀ — the final BOFT butterfly
+/// factor fused with the dense product. Per row: gather through `perm`,
+/// rotate per block, then feed W₀ reading the rotated vector back through
+/// `inv_perm` — the un-permuted intermediate never materializes.
+/// Bit-identical to `apply_factor_into` + `matmul_into`.
+pub fn perm_block_rot_matmul_into<T: Scalar>(
+    x: &Matrix<T>,
+    perm: &[usize],
+    inv_perm: &[usize],
+    rots: &[Matrix<T>],
+    w0: &Matrix<T>,
+    y: &mut Matrix<T>,
+) {
+    let (t, d, n) = (x.rows, x.cols, w0.cols);
+    assert_eq!(w0.rows, d);
+    assert_eq!((y.rows, y.cols), (t, n));
+    assert_eq!(perm.len(), d);
+    assert_eq!(inv_perm.len(), d);
+    debug_assert_eq!(rots.iter().map(|r| r.rows).sum::<usize>(), d, "blocks must tile d");
+    if t == 0 || n == 0 {
+        return;
+    }
+    if d == 0 {
+        y.fill(T::ZERO);
+        return;
+    }
+    let threads = threads_for(t * d * (rots.iter().map(|r| r.rows).max().unwrap_or(1) + n), t);
+    let x_data = &x.data;
+    let w0_data = &w0.data;
+    let y_ptr = SendPtr(y.data.as_mut_ptr());
+    run_row_panels(t, threads, &|lo, hi| {
+        let y_ptr = &y_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let y_panel = unsafe { std::slice::from_raw_parts_mut(y_ptr.0.add(lo * n), (hi - lo) * n) };
+        T::with_scratch(2 * d, |scratch| {
+            let (xp, zp) = scratch.split_at_mut(d);
+            for (ii, i) in (lo..hi).enumerate() {
+                let x_row = &x_data[i * d..(i + 1) * d];
+                for (j, &pj) in perm.iter().enumerate() {
+                    xp[j] = x_row[pj];
+                }
+                let mut off = 0;
+                for rot in rots {
+                    let bsz = rot.rows;
+                    let xb = &xp[off..off + bsz];
+                    for j in 0..bsz {
+                        let mut acc = T::ZERO;
+                        for (bi, &xv) in xb.iter().enumerate() {
+                            acc += xv * rot.data[bi * bsz + j];
+                        }
+                        zp[off + j] = acc;
+                    }
+                    off += bsz;
+                }
+                // z (the inv-permuted rotation result) is read through
+                // inv_perm on the fly: z[kk] = zp[inv_perm[kk]].
+                let y_row = &mut y_panel[ii * n..(ii + 1) * n];
+                for y_v in y_row.iter_mut() {
+                    *y_v = T::ZERO;
+                }
+                for (kk, &src) in inv_perm.iter().enumerate() {
+                    let z_v = zp[src];
+                    let w_row = &w0_data[kk * n..(kk + 1) * n];
+                    for (y_v, &w_v) in y_row.iter_mut().zip(w_row) {
+                        *y_v += z_v * w_v;
+                    }
+                }
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_acc, matmul_into, Mat};
+    use crate::util::rng::Rng;
+
+    fn unfused_rot(u: &Mat, r_mat: &Mat, beta: Option<&[f32]>, b: &Mat, y: &mut Mat) {
+        let mut w = Mat::zeros(u.rows, u.cols);
+        matmul_into(u, r_mat, &mut w);
+        if let Some(beta) = beta {
+            w.scale_cols_in_place(beta);
+        }
+        matmul_acc(&w, b, y);
+    }
+
+    #[test]
+    fn rot_matmul_matches_unfused_chain() {
+        let mut rng = Rng::new(71);
+        for &(t, r, n) in &[(1usize, 4usize, 16usize), (9, 8, 24), (130, 16, 48)] {
+            let u = Mat::randn(t, r, 1.0, &mut rng);
+            let r_mat = Mat::randn(r, r, 1.0, &mut rng);
+            let b = Mat::randn(r, n, 1.0, &mut rng);
+            let beta: Vec<f32> = (0..r).map(|i| 0.5 + 0.1 * i as f32).collect();
+            for beta_opt in [None, Some(beta.as_slice())] {
+                let mut y0 = Mat::randn(t, n, 1.0, &mut rng); // dirty acc target
+                let mut y1 = y0.clone();
+                unfused_rot(&u, &r_mat, beta_opt, &b, &mut y0);
+                rot_matmul_acc(&u, &r_mat, beta_opt, &b, &mut y1);
+                assert_eq!(y0.data, y1.data, "t={t} r={r} n={n} beta={}", beta_opt.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn block_rot_matches_unfused_chain() {
+        let mut rng = Rng::new(73);
+        // Blocks 4+4+8 tile d=16.
+        let blocks = [4usize, 4, 8];
+        let d: usize = blocks.iter().sum();
+        let (t, n) = (11usize, 20usize);
+        let rots: Vec<Mat> = blocks.iter().map(|&b| Mat::randn(b, b, 1.0, &mut rng)).collect();
+        let x = Mat::randn(t, d, 1.0, &mut rng);
+        let w0 = Mat::randn(d, n, 1.0, &mut rng);
+        // Unfused: rotate block-by-block into z, then z·W₀.
+        let mut z = Mat::zeros(t, d);
+        let mut off = 0;
+        for rot in &rots {
+            let bsz = rot.rows;
+            for ti in 0..t {
+                for j in 0..bsz {
+                    let mut acc = 0.0f32;
+                    for bi in 0..bsz {
+                        acc += x[(ti, off + bi)] * rot[(bi, j)];
+                    }
+                    z[(ti, off + j)] = acc;
+                }
+            }
+            off += bsz;
+        }
+        let mut y0 = Mat::zeros(t, n);
+        matmul_into(&z, &w0, &mut y0);
+        let mut y1 = Mat::filled(t, n, 7.0); // _into must overwrite
+        block_rot_matmul_into(&x, &rots, &w0, &mut y1);
+        assert_eq!(y0.data, y1.data);
+    }
+
+    #[test]
+    fn perm_block_rot_matches_unfused_chain() {
+        let mut rng = Rng::new(79);
+        let blocks = [2usize, 2, 4];
+        let d: usize = blocks.iter().sum();
+        let (t, n) = (7usize, 12usize);
+        let rots: Vec<Mat> = blocks.iter().map(|&b| Mat::randn(b, b, 1.0, &mut rng)).collect();
+        let x = Mat::randn(t, d, 1.0, &mut rng);
+        let w0 = Mat::randn(d, n, 1.0, &mut rng);
+        // A riffle-ish permutation and its inverse.
+        let perm: Vec<usize> = (0..d).map(|i| (i * 3) % d).collect(); // 3 coprime to 8
+        let mut inv_perm = vec![0usize; d];
+        for (i, &p) in perm.iter().enumerate() {
+            inv_perm[p] = i;
+        }
+        // Unfused: gather, rotate, scatter back, multiply.
+        let mut xp = Mat::zeros(t, d);
+        for ti in 0..t {
+            for (j, &pj) in perm.iter().enumerate() {
+                xp[(ti, j)] = x[(ti, pj)];
+            }
+        }
+        let mut zp = Mat::zeros(t, d);
+        let mut off = 0;
+        for rot in &rots {
+            let bsz = rot.rows;
+            for ti in 0..t {
+                for j in 0..bsz {
+                    let mut acc = 0.0f32;
+                    for bi in 0..bsz {
+                        acc += xp[(ti, off + bi)] * rot[(bi, j)];
+                    }
+                    zp[(ti, off + j)] = acc;
+                }
+            }
+            off += bsz;
+        }
+        let mut zout = Mat::zeros(t, d);
+        for ti in 0..t {
+            for (j, &pj) in inv_perm.iter().enumerate() {
+                zout[(ti, j)] = zp[(ti, pj)];
+            }
+        }
+        let mut y0 = Mat::zeros(t, n);
+        matmul_into(&zout, &w0, &mut y0);
+        let mut y1 = Mat::filled(t, n, -3.0);
+        perm_block_rot_matmul_into(&x, &perm, &inv_perm, &rots, &w0, &mut y1);
+        assert_eq!(y0.data, y1.data);
+    }
+}

@@ -340,8 +340,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = bb.cfg.clone();
 
     // Scheduler settings: [serve] section of --config, overridable by flags.
+    // [runtime] is applied first so the thread override lands before the
+    // compute pool is built by the first large kernel.
     let mut sc = match args.get("config") {
-        Some(path) => ServeConfig::from_toml(&psoft::config::toml::parse_file(Path::new(path))?),
+        Some(path) => {
+            let tree = psoft::config::toml::parse_file(Path::new(path))?;
+            psoft::config::RuntimeConfig::from_toml(&tree).apply();
+            ServeConfig::from_toml(&tree)
+        }
         None => ServeConfig::default(),
     };
     sc.workers = args.usize("workers", sc.workers)?;
@@ -481,7 +487,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
     }
 
     let mut sc = match args.get("config") {
-        Some(path) => ServeConfig::from_toml(&psoft::config::toml::parse_file(Path::new(path))?),
+        Some(path) => {
+            let tree = psoft::config::toml::parse_file(Path::new(path))?;
+            psoft::config::RuntimeConfig::from_toml(&tree).apply();
+            ServeConfig::from_toml(&tree)
+        }
         None => ServeConfig::default(),
     };
     sc.workers = args.usize("workers", sc.workers)?;

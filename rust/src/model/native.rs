@@ -343,10 +343,12 @@ fn attention_backward_into(
 /// same activations, to the bit, as row `p` of the full-sequence
 /// [`forward_cached`] prefill over the same tokens (pinned per method by
 /// `tests/decode.rs`). This holds because every op on the path is
-/// row-local (matmuls accumulate over k in a fixed order per output row,
-/// norms and MLP activations are per-row) and the incremental attention
-/// below replays the batched kernel's exact accumulation order for one
-/// query row.
+/// row-local (the cache-tiled `linalg::matmul` kernels pin ascending-k
+/// accumulation per output element, independent of blocking, threading,
+/// or how many rows are batched — see the accumulation-order policy in
+/// `linalg::matmul`'s module docs; norms and MLP activations are
+/// per-row) and the incremental attention below replays the batched
+/// kernel's exact accumulation order for one query row.
 pub struct DecodeCache {
     /// (n_layers, d_model, d_ff, max_seq, vocab) the buffers are sized
     /// for; `ensure` re-acquires on mismatch.
@@ -879,8 +881,10 @@ struct GroupLane {
 /// [`DecodeStream::advance`]/[`generate_into`] — regardless of which (or
 /// how many) lanes it is grouped with, and across lanes joining or
 /// leaving mid-flight. This holds because every op on the step path is
-/// row-local (matmuls accumulate over k in a fixed order per output row;
-/// norms, activations and sampling are per-row), attention runs per lane
+/// row-local (the tiled `linalg::matmul` kernels accumulate over k in
+/// ascending order per output element regardless of tile or row-panel
+/// split — the module docs' accumulation-order policy; norms,
+/// activations and sampling are per-row), attention runs per lane
 /// against that lane's own rings via the `linalg` row-scatter helpers
 /// (`copy_row_into`), and each lane selects from its own logits row with
 /// its own

@@ -12,7 +12,10 @@
 use super::oft::block_partition;
 use super::{Adapter, AdapterGrads, RotScratch};
 use crate::config::MethodKind;
-use crate::linalg::{matmul, matmul_into, matmul_nt_into, skew_param_count, DMat, Mat, Workspace};
+use crate::linalg::{
+    matmul, matmul_into, matmul_nt_into, perm_block_rot_matmul_into, skew_param_count, DMat, Mat,
+    Workspace,
+};
 use std::cell::RefCell;
 
 pub struct BoftAdapter {
@@ -229,15 +232,30 @@ impl Adapter for BoftAdapter {
 
     fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
         // Ping-pong two buffers through the factor chain (the full set of
-        // intermediates is only needed by backward).
+        // intermediates is only needed by backward). The final factor is
+        // fused with the W₀ product — permute → block-rotate →
+        // inverse-permute → dense, bit-identical to the unfused pair —
+        // so the last [T, d] intermediate never materializes.
+        if self.m == 0 {
+            matmul_into(x, &self.w0, y);
+            return;
+        }
         let mut cur = ws.acquire(x.rows, x.cols);
         cur.copy_from(x);
         let mut nxt = ws.acquire(x.rows, x.cols);
-        for j in 0..self.m {
+        for j in 0..self.m - 1 {
             self.apply_factor_into(&cur, &mut nxt, j, ws);
             std::mem::swap(&mut cur, &mut nxt);
         }
-        matmul_into(&cur, &self.w0, y);
+        let last = self.m - 1;
+        perm_block_rot_matmul_into(
+            &cur,
+            &self.perms[last],
+            &self.inv_perms[last],
+            &self.rots[last],
+            &self.w0,
+            y,
+        );
         ws.release(cur);
         ws.release(nxt);
     }

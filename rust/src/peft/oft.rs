@@ -9,8 +9,8 @@
 use super::{Adapter, AdapterGrads, RotScratch};
 use crate::config::MethodKind;
 use crate::linalg::{
-    matmul, matmul_into, matmul_nt_into, orthogonality_defect, skew_param_count, DMat, Mat,
-    Workspace,
+    block_rot_matmul_into, matmul, matmul_nt_into, orthogonality_defect, skew_param_count, DMat,
+    Mat, Workspace,
 };
 use std::cell::RefCell;
 
@@ -67,27 +67,6 @@ impl OftAdapter {
         }
     }
 
-    /// Apply the block-diagonal rotation to activation columns: z = x·R,
-    /// writing into a caller-provided buffer (fully overwritten — the
-    /// blocks partition every column).
-    fn rotate_into(&self, x: &Mat, z: &mut Mat) {
-        let mut off = 0;
-        for (bi, &b) in self.blocks.iter().enumerate() {
-            let rot = &self.rots[bi];
-            for t in 0..x.rows {
-                let xrow = &x.row(t)[off..off + b];
-                let zrow = &mut z.row_mut(t)[off..off + b];
-                for (j, zv) in zrow.iter_mut().enumerate() {
-                    let mut acc = 0.0f32;
-                    for (i, &xv) in xrow.iter().enumerate() {
-                        acc += xv * rot[(i, j)];
-                    }
-                    *zv = acc;
-                }
-            }
-            off += b;
-        }
-    }
 }
 
 impl Adapter for OftAdapter {
@@ -155,12 +134,11 @@ impl Adapter for OftAdapter {
         AdapterGrads { d_params, dx }
     }
 
-    fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
-        // Input-centric: y = (x·R)·W₀.
-        let mut z = ws.acquire(x.rows, x.cols);
-        self.rotate_into(x, &mut z);
-        matmul_into(&z, &self.w0, y);
-        ws.release(z);
+    fn forward_into(&self, x: &Mat, y: &mut Mat, _ws: &mut Workspace) {
+        // Input-centric: y = (x·R)·W₀, with the block rotation fused into
+        // the W₀ product (bit-identical to the old rotate-then-matmul
+        // pair) — the rotated [T, d] intermediate never materializes.
+        block_rot_matmul_into(x, &self.rots, &self.w0, y);
     }
 
     fn backward_into(

@@ -17,7 +17,7 @@ use super::{Adapter, AdapterGrads, RotScratch};
 use crate::config::{MethodKind, PeftConfig, PsoftInit};
 use crate::linalg::{
     matmul, matmul_acc, matmul_into, matmul_nt_acc, matmul_nt_into, orthogonality_defect,
-    skew_param_count, DMat, Mat, Workspace,
+    rot_matmul_acc, skew_param_count, DMat, Mat, Workspace,
 };
 use crate::util::rng::Rng;
 use std::cell::RefCell;
@@ -171,21 +171,19 @@ impl Adapter for PsoftAdapter {
 
     fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut Workspace) {
         // y = x·W_res + (((x·A')·α)·R)·β·B' — the whole chain stays in the
-        // r-dim subspace (the L1 Pallas kernel mirrors this exactly).
+        // r-dim subspace (the L1 Pallas kernel mirrors this exactly). The
+        // rotation-apply and the B' product run as one fused kernel
+        // (bit-identical to the unfused chain), so the rotated [T, r]
+        // intermediate never materializes.
         matmul_into(x, &self.w_res, y);
         let mut u = ws.acquire(x.rows, self.rank); // [T, r]
         matmul_into(x, &self.a, &mut u);
         if self.use_alpha {
             u.scale_cols_in_place(&self.alpha);
         }
-        let mut w = ws.acquire(x.rows, self.rank);
-        matmul_into(&u, &self.r_mat, &mut w);
-        if self.use_beta {
-            w.scale_cols_in_place(&self.beta);
-        }
-        matmul_acc(&w, &self.b, y);
+        let beta = if self.use_beta { Some(self.beta.as_slice()) } else { None };
+        rot_matmul_acc(&u, &self.r_mat, beta, &self.b, y);
         ws.release(u);
-        ws.release(w);
     }
 
     fn backward_into(

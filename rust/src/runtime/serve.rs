@@ -20,6 +20,11 @@
 //! - **A fixed worker pool.** Each worker owns a warm [`Workspace`] that
 //!   serves whichever adapter it picks up (the pool is shape-keyed, so
 //!   adapters of different ranks coexist without reallocation once warm).
+//!   Workers orchestrate requests; large matmuls inside a request fan out
+//!   over the process-wide persistent compute pool
+//!   ([`util::threadpool::pool`](crate::util::threadpool::pool)), so warm
+//!   serve and decode loops spawn no threads (pinned, together with the
+//!   zero-allocation property, by `tests/serve_alloc.rs`).
 //!
 //! # Scheduling
 //!

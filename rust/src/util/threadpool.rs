@@ -1,16 +1,50 @@
-//! Work-stealing-free, bounded thread pool.
+//! Thread pools: a channel-fed job pool for coarse suite work and a
+//! persistent parallel-for pool for the matmul hot path.
 //!
-//! The coordinator fans suite jobs (task × method × seed grid) across cores,
-//! and the blocked matmul in `linalg` parallelizes row panels. Tokio is not
-//! available offline, and the workloads here are CPU-bound, so a plain
-//! channel-fed pool is the right tool.
+//! Two pools with different shapes:
+//!
+//! - [`ThreadPool`] — bounded, channel-fed. The coordinator fans suite
+//!   jobs (task × method × seed grid) across cores; jobs are boxed
+//!   closures, latency per job is irrelevant.
+//! - [`ParPool`] — a long-lived parallel-for pool for the kernel hot
+//!   path. `linalg::matmul` used to spawn scoped threads per large
+//!   product ([`par_chunks`], kept below as the seed-era reference);
+//!   that paid thread start-up and teardown on every call. `ParPool`
+//!   workers are spawned once, park on a condvar between calls, and
+//!   claim row-panel chunks from an atomic cursor — dispatching a
+//!   [`ParPool::par_for`] performs **zero spawns and zero heap
+//!   allocations**, which is what lets the warm train/serve/decode
+//!   loops stay spawn- and allocation-free (pinned by
+//!   `tests/zero_alloc.rs` / `tests/serve_alloc.rs`).
+//!
+//! The process-wide pool is lazily built by [`pool`] and shared by the
+//! trainer, the `ServeCore` workers, and the benches. Its size follows
+//! [`default_parallelism`]: `PSOFT_THREADS` env var if set, else the
+//! `[runtime] threads` config key (via [`set_configured_threads`]), else
+//! machine parallelism capped at 16.
+//!
+//! Every thread spawn in this module bumps a global counter
+//! ([`thread_spawn_count`]) so tests can pin "warm loop ⇒ zero spawns".
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Process-wide count of OS threads spawned through this module. Warm
+/// hot-path tests snapshot it around a measured window and assert the
+/// delta is zero — the spawn-side analogue of the counting allocator.
+static SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+pub fn thread_spawn_count() -> u64 {
+    SPAWNS.load(Ordering::SeqCst)
+}
+
+fn note_spawn() {
+    SPAWNS.fetch_add(1, Ordering::SeqCst);
+}
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
@@ -29,6 +63,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 let panics = Arc::clone(&panics);
+                note_spawn();
                 thread::Builder::new()
                     .name(format!("psoft-worker-{i}"))
                     .spawn(move || loop {
@@ -111,14 +146,273 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Machine parallelism, capped at 16 (beyond that, the tiny matmuls here
-/// stop scaling and the suite jobs are the better axis to parallelize).
-pub fn default_parallelism() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+// ---------------------------------------------------------------------------
+// Thread-count resolution
+// ---------------------------------------------------------------------------
+
+/// `[runtime] threads` from the active config (0 = unset). Applied at
+/// startup by `main` before any large kernel runs; a late call cannot
+/// resize an already-built global [`pool`].
+static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the `[runtime] threads` config value (0 clears it back to
+/// auto). `PSOFT_THREADS` still wins — see [`default_parallelism`].
+pub fn set_configured_threads(n: usize) {
+    CONFIGURED_THREADS.store(n, Ordering::SeqCst);
 }
 
-/// Parallel-for over index ranges, used by the matmul row-panel split.
-/// Runs on scoped threads (no pool needed; panics propagate naturally).
+/// `PSOFT_THREADS` parsed once per process (the hot path asks for the
+/// thread count on every large matmul; re-reading the environment there
+/// would allocate).
+fn env_thread_override() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("PSOFT_THREADS").ok().and_then(|s| s.trim().parse().ok()).filter(|&n| n >= 1)
+    })
+}
+
+/// Worker-thread count, by precedence:
+///
+/// 1. `PSOFT_THREADS` environment variable (≥ 1);
+/// 2. `[runtime] threads` config key ([`set_configured_threads`]);
+/// 3. machine parallelism capped at 16 (beyond that, the tiny matmuls
+///    here stop scaling and the suite jobs are the better axis to
+///    parallelize — the overrides above are the escape hatch).
+pub fn default_parallelism() -> usize {
+    if let Some(n) = env_thread_override() {
+        return n;
+    }
+    match CONFIGURED_THREADS.load(Ordering::SeqCst) {
+        0 => thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16),
+        n => n,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParPool: persistent parallel-for
+// ---------------------------------------------------------------------------
+
+/// A published parallel-for job. `body` is a caller-stack closure whose
+/// lifetime is erased; soundness rests on `par_for` not returning until
+/// every worker has finished with it (see the SAFETY note there).
+#[derive(Clone, Copy)]
+struct JobDesc {
+    body: &'static (dyn Fn(usize, usize) + Sync),
+    n_items: usize,
+    grain: usize,
+}
+
+struct ParState {
+    /// Bumped per published job; workers use it to tell "new job" from a
+    /// spurious wakeup.
+    seq: u64,
+    job: Option<JobDesc>,
+    /// Workers still inside the current job (participation barrier).
+    running: usize,
+    shutdown: bool,
+}
+
+struct ParShared {
+    state: Mutex<ParState>,
+    /// Signals workers: new job published, or shutdown.
+    start: Condvar,
+    /// Signals callers: job finished (`running == 0`) or job slot freed.
+    done: Condvar,
+    /// Atomic chunk cursor: workers claim `[cursor, cursor + grain)`.
+    next: AtomicUsize,
+    /// Chunks that panicked in the current job.
+    panics: AtomicUsize,
+}
+
+thread_local! {
+    /// True on ParPool worker threads and inside a caller's own
+    /// participation window: a nested `par_for` from either runs inline
+    /// (the pool is already saturated, and waiting on the job slot the
+    /// current job holds would deadlock).
+    static IN_PAR_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Persistent parallel-for pool: `threads − 1` workers parked on a
+/// condvar, plus the calling thread which always participates. See the
+/// module docs for why this exists; see [`pool`] for the shared instance.
+pub struct ParPool {
+    shared: Arc<ParShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ParPool {
+    /// Pool with `threads` total lanes of parallelism (min 1): the caller
+    /// is one lane, so `threads − 1` OS threads are spawned — a
+    /// single-lane pool spawns nothing and runs every job inline.
+    pub fn new(threads: usize) -> ParPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(ParShared {
+            state: Mutex::new(ParState { seq: 0, job: None, running: 0, shutdown: false }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..threads - 1)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                note_spawn();
+                thread::Builder::new()
+                    .name(format!("psoft-par-{i}"))
+                    .spawn(move || Self::worker_loop(&shared))
+                    .expect("spawn par worker")
+            })
+            .collect();
+        ParPool { shared, workers }
+    }
+
+    /// Total lanes of parallelism (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ParState> {
+        // A worker can only panic inside catch_unwind, never while holding
+        // the lock, but be robust to poisoning anyway.
+        self.shared.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn worker_loop(shared: &ParShared) {
+        IN_PAR_POOL.with(|f| f.set(true));
+        let mut last_seq = 0u64;
+        loop {
+            let job = {
+                let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    match st.job {
+                        Some(job) if st.seq != last_seq => {
+                            last_seq = st.seq;
+                            break job;
+                        }
+                        _ => st = shared.start.wait(st).unwrap_or_else(|e| e.into_inner()),
+                    }
+                }
+            };
+            Self::run_chunks(shared, job);
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.running -= 1;
+            if st.running == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    /// Claim and run chunks until the cursor passes the end. Panics are
+    /// counted, not propagated: a worker must survive to decrement
+    /// `running`, and the caller must not unwind while workers still
+    /// borrow the job body — the caller re-raises a summary panic after
+    /// the barrier.
+    fn run_chunks(shared: &ParShared, job: JobDesc) {
+        loop {
+            let lo = shared.next.fetch_add(job.grain, Ordering::Relaxed);
+            if lo >= job.n_items {
+                break;
+            }
+            let hi = (lo + job.grain).min(job.n_items);
+            if catch_unwind(AssertUnwindSafe(|| (job.body)(lo, hi))).is_err() {
+                shared.panics.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Run `body(lo, hi)` over disjoint chunks of `0..n_items`, each at
+    /// most `grain` wide, across the pool's lanes. Blocks until the whole
+    /// range is done. No spawns, no allocations. Concurrent callers
+    /// serialize on the single job slot; nested calls (from a worker or
+    /// from inside a body) run inline.
+    pub fn par_for(&self, n_items: usize, grain: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        let grain = grain.max(1);
+        if n_items == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n_items <= grain || IN_PAR_POOL.with(|f| f.get()) {
+            body(0, n_items);
+            return;
+        }
+        // SAFETY: the 'static lifetime is a lie confined to this call.
+        // Workers only dereference `body` between claiming a chunk and
+        // decrementing `running`, and this function does not return (or
+        // unwind — chunk panics are deferred) until `running == 0`, so the
+        // borrow cannot outlive the real closure.
+        let job = JobDesc {
+            body: unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize, usize) + Sync),
+                    &'static (dyn Fn(usize, usize) + Sync),
+                >(body)
+            },
+            n_items,
+            grain,
+        };
+        {
+            let mut st = self.lock();
+            // One job slot: queued callers wait for the active job to clear.
+            while st.job.is_some() {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            self.shared.next.store(0, Ordering::Relaxed);
+            self.shared.panics.store(0, Ordering::Relaxed);
+            st.job = Some(job);
+            st.seq += 1;
+            st.running = self.workers.len();
+        }
+        self.shared.start.notify_all();
+
+        // Participate; nested par_for from inside `body` must run inline.
+        IN_PAR_POOL.with(|f| f.set(true));
+        Self::run_chunks(&self.shared, job);
+        IN_PAR_POOL.with(|f| f.set(false));
+
+        let panicked = {
+            let mut st = self.lock();
+            while st.running > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            self.shared.panics.load(Ordering::SeqCst)
+        };
+        // Free the job slot for queued callers.
+        self.shared.done.notify_all();
+        if panicked > 0 {
+            panic!("{panicked} par_for chunks panicked");
+        }
+    }
+}
+
+impl Drop for ParPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.lock();
+            st.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The process-wide [`ParPool`], built on first use and never torn down.
+/// Sized by [`default_parallelism`] at initialization time, so thread
+/// overrides must be in place before the first large kernel runs.
+pub fn pool() -> &'static ParPool {
+    static POOL: OnceLock<ParPool> = OnceLock::new();
+    POOL.get_or_init(|| ParPool::new(default_parallelism()))
+}
+
+/// Parallel-for over index ranges on **freshly spawned scoped threads**.
+/// This is the seed-era primitive the matmul row-panel split used before
+/// the persistent [`pool`] existed; it is kept as the reference
+/// implementation behind the `pool_speedup_over_seed` bench metric and
+/// for one-shot callers that must not touch the global pool.
 pub fn par_chunks(n_items: usize, n_threads: usize, body: impl Fn(usize, usize) + Sync) {
     let n_threads = n_threads.max(1).min(n_items.max(1));
     if n_threads <= 1 || n_items == 0 {
@@ -134,6 +428,7 @@ pub fn par_chunks(n_items: usize, n_threads: usize, body: impl Fn(usize, usize) 
                 break;
             }
             let body = &body;
+            note_spawn();
             scope.spawn(move || body(lo, hi));
         }
     });
@@ -144,8 +439,17 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
+    /// Serializes every test that spawns threads or asserts on the global
+    /// spawn counter — libtest runs tests concurrently, so an unrelated
+    /// pool construction would otherwise break a zero-spawn-delta assert.
+    fn spawn_gate() -> MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
     fn map_preserves_order() {
+        let _gate = spawn_gate();
         let pool = ThreadPool::new(4);
         let out = pool.map((0..100).collect::<Vec<usize>>(), |x| x * x);
         assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
@@ -153,6 +457,7 @@ mod tests {
 
     #[test]
     fn submit_runs_everything() {
+        let _gate = spawn_gate();
         let pool = ThreadPool::new(3);
         let counter = Arc::new(AtomicU64::new(0));
         for _ in 0..50 {
@@ -167,6 +472,7 @@ mod tests {
 
     #[test]
     fn worker_survives_panic() {
+        let _gate = spawn_gate();
         let pool = ThreadPool::new(2);
         pool.submit(|| panic!("injected"));
         let counter = Arc::new(AtomicU64::new(0));
@@ -184,6 +490,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "pool jobs panicked")]
     fn map_propagates_panics() {
+        let _gate = spawn_gate();
         let pool = ThreadPool::new(2);
         let _ = pool.map(vec![1, 2, 3], |x| {
             if x == 2 {
@@ -196,6 +503,7 @@ mod tests {
 
     #[test]
     fn par_chunks_covers_range() {
+        let _gate = spawn_gate();
         let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
         par_chunks(97, 8, |lo, hi| {
             for i in lo..hi {
@@ -203,5 +511,110 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_for_covers_range_exactly_once() {
+        let _gate = spawn_gate();
+        let pool = ParPool::new(4);
+        // Odd sizes and grains: non-divisible tails, single-chunk jobs,
+        // more chunks than workers.
+        for &(n, grain) in &[(97usize, 5usize), (100, 100), (3, 1), (1, 7), (64, 16), (7, 2)] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.par_for(n, grain, &|lo, hi| {
+                assert!(hi - lo <= grain.max(1));
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "n={n} grain={grain}: range not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn par_for_reuses_workers_across_calls() {
+        let _gate = spawn_gate();
+        let pool = ParPool::new(3);
+        let spawns_before = thread_spawn_count();
+        let total = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let total = Arc::clone(&total);
+            pool.par_for(40, 4, &move |lo, hi| {
+                total.fetch_add((hi - lo) as u64, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 50 * 40);
+        // The whole point: no spawn per call.
+        assert_eq!(thread_spawn_count() - spawns_before, 0);
+    }
+
+    #[test]
+    fn par_for_serializes_concurrent_callers() {
+        let _gate = spawn_gate();
+        let pool = Arc::new(ParPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        thread::scope(|scope| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                scope.spawn(move || {
+                    for _ in 0..25 {
+                        let total = &total;
+                        pool.par_for(30, 3, &move |lo, hi| {
+                            total.fetch_add((hi - lo) as u64, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 30);
+    }
+
+    #[test]
+    fn par_for_nested_runs_inline() {
+        let _gate = spawn_gate();
+        let pool = ParPool::new(4);
+        let total = Arc::new(AtomicU64::new(0));
+        let outer_total = Arc::clone(&total);
+        let pool_ref = &pool;
+        pool.par_for(8, 1, &move |_, _| {
+            let inner_total = Arc::clone(&outer_total);
+            // Nested call must complete (inline) instead of deadlocking on
+            // the single job slot.
+            pool_ref.par_for(5, 2, &move |lo, hi| {
+                inner_total.fetch_add((hi - lo) as u64, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8 * 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "par_for chunks panicked")]
+    fn par_for_propagates_panics_after_barrier() {
+        let _gate = spawn_gate();
+        let pool = ParPool::new(3);
+        pool.par_for(10, 1, &|lo, _| {
+            if lo == 4 {
+                panic!("injected chunk failure");
+            }
+        });
+    }
+
+    #[test]
+    fn par_for_single_lane_runs_inline() {
+        let _gate = spawn_gate();
+        let pool = ParPool::new(1);
+        let spawns_before = thread_spawn_count();
+        let hits: Vec<AtomicU64> = (0..10).map(|_| AtomicU64::new(0)).collect();
+        pool.par_for(10, 3, &|lo, hi| {
+            for h in &hits[lo..hi] {
+                h.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert_eq!(thread_spawn_count() - spawns_before, 0);
     }
 }

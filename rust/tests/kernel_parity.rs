@@ -1,0 +1,217 @@
+//! Kernel-parity property suite for the cache-tiled matmul rewrite.
+//!
+//! The `linalg::matmul` accumulation-order policy promises that every
+//! dispatch path — simple panel kernel, tiled microkernel, and the
+//! threaded public API — produces **bit-identical** results: each output
+//! element accumulates its k terms in ascending order regardless of tile,
+//! panel, or thread split. This suite pins that promise across shapes
+//! chosen to straddle every tile boundary (at, below, and non-divisible
+//! by `KC`/`NC`/`MR`), the degenerate shapes (one row, one column, empty
+//! `m`/`k`/`n`), and a shape large enough to engage the persistent
+//! compute pool — for both `f32` and `f64`.
+//!
+//! The reference is a per-element ascending-k sum, so any reordering
+//! (k-splitting with non-ascending joins, pairwise reduction, FMA-style
+//! contraction) in any path is caught as a bit mismatch, not an epsilon.
+
+use psoft::linalg::matmul::kernel_test_api as api;
+use psoft::linalg::{
+    matmul, matmul_acc_slice, matmul_nt, matmul_nt_acc_slice, matmul_tn, matmul_tn_acc_slice,
+    Matrix, Scalar,
+};
+use psoft::util::rng::Rng;
+
+/// Shapes straddling the tile boundaries (`KC = NC = 128`, `MR = 4`):
+/// below, at, one past, non-divisible, degenerate, and one-row/one-col.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    assert_eq!((api::TILE_KC, api::TILE_NC, api::TILE_MR), (128, 128, 4));
+    vec![
+        // Degenerate: empty m / k / n, and 1x1x1.
+        (0, 3, 4),
+        (3, 0, 5),
+        (4, 7, 0),
+        (1, 1, 1),
+        // One row / one column around full tiles.
+        (1, 128, 128),
+        (1, 7, 129),
+        (64, 127, 1),
+        // Below the MR row tile and non-divisible by it.
+        (3, 12, 9),
+        (5, 4, 3),
+        (7, 2, 9),
+        // At and one past KC/NC.
+        (4, 128, 128),
+        (4, 129, 127),
+        (8, 128, 129),
+        (9, 130, 131),
+        // Multi-block k and n, rows non-divisible by MR.
+        (3, 256, 128),
+        (12, 127, 128),
+        (64, 127, 5),
+        (129, 31, 257),
+        (130, 129, 126),
+    ]
+}
+
+/// Per-element ascending-k reference for `a · b` (`a` is `[m, k]`).
+fn ref_nn<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Vec<T> {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = vec![T::ZERO; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = T::ZERO;
+            for kk in 0..k {
+                acc += a.data[i * k + kk] * b.data[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Per-element ascending-k reference for `aᵀ · b` (`a` is `[k, m]`).
+fn ref_tn<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Vec<T> {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = vec![T::ZERO; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = T::ZERO;
+            for kk in 0..k {
+                acc += a.data[kk * m + i] * b.data[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Per-element ascending-k reference for `a · bᵀ` (`b` is `[n, k]`).
+fn ref_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Vec<T> {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = vec![T::ZERO; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = T::ZERO;
+            for kk in 0..k {
+                acc += a.data[i * k + kk] * b.data[j * k + kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// A dirty accumulation target so `_acc` semantics (not just zero-init)
+/// are compared across paths.
+fn dirty<T: Scalar>(len: usize) -> Vec<T> {
+    (0..len).map(|i| T::from_f64((i % 13) as f64 * 0.25 - 1.5)).collect()
+}
+
+fn check_all_paths<T: Scalar>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for &(m, k, n) in &shapes() {
+        let ctx = format!("shape ({m},{k},{n})");
+
+        // --- nn: a[m,k] · b[k,n] -------------------------------------
+        let a = Matrix::<T>::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::<T>::randn(k, n, 1.0, &mut rng);
+        let expect = ref_nn(&a, &b);
+        let mut simple = vec![T::ZERO; m * n];
+        api::nn_simple_acc(&a, &b, &mut simple);
+        let mut tiled = vec![T::ZERO; m * n];
+        api::nn_tiled_acc(&a, &b, &mut tiled);
+        let public = matmul(&a, &b);
+        assert_eq!(simple, expect, "nn simple vs reference, {ctx}");
+        assert_eq!(tiled, expect, "nn tiled vs reference, {ctx}");
+        assert_eq!(public.data, expect, "nn public vs reference, {ctx}");
+        // Dirty-target acc parity across all three paths.
+        let mut acc_s = dirty::<T>(m * n);
+        let mut acc_t = acc_s.clone();
+        let mut acc_p = acc_s.clone();
+        api::nn_simple_acc(&a, &b, &mut acc_s);
+        api::nn_tiled_acc(&a, &b, &mut acc_t);
+        matmul_acc_slice(&a, &b, &mut acc_p);
+        assert_eq!(acc_t, acc_s, "nn tiled acc vs simple acc, {ctx}");
+        assert_eq!(acc_p, acc_s, "nn public acc vs simple acc, {ctx}");
+
+        // --- tn: a[k,m]ᵀ · b[k,n] ------------------------------------
+        let a = Matrix::<T>::randn(k, m, 1.0, &mut rng);
+        let b = Matrix::<T>::randn(k, n, 1.0, &mut rng);
+        let expect = ref_tn(&a, &b);
+        let mut simple = vec![T::ZERO; m * n];
+        api::tn_simple_acc(&a, &b, &mut simple);
+        let mut tiled = vec![T::ZERO; m * n];
+        api::tn_tiled_acc(&a, &b, &mut tiled);
+        let public = matmul_tn(&a, &b);
+        assert_eq!(simple, expect, "tn simple vs reference, {ctx}");
+        assert_eq!(tiled, expect, "tn tiled vs reference, {ctx}");
+        assert_eq!(public.data, expect, "tn public vs reference, {ctx}");
+        let mut acc_s = dirty::<T>(m * n);
+        let mut acc_t = acc_s.clone();
+        let mut acc_p = acc_s.clone();
+        api::tn_simple_acc(&a, &b, &mut acc_s);
+        api::tn_tiled_acc(&a, &b, &mut acc_t);
+        matmul_tn_acc_slice(&a, &b, &mut acc_p);
+        assert_eq!(acc_t, acc_s, "tn tiled acc vs simple acc, {ctx}");
+        assert_eq!(acc_p, acc_s, "tn public acc vs simple acc, {ctx}");
+
+        // --- nt: a[m,k] · b[n,k]ᵀ ------------------------------------
+        let a = Matrix::<T>::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::<T>::randn(n, k, 1.0, &mut rng);
+        let expect = ref_nt(&a, &b);
+        let mut simple = vec![T::ZERO; m * n];
+        api::nt_simple_acc(&a, &b, &mut simple);
+        let mut tiled = vec![T::ZERO; m * n];
+        api::nt_tiled_acc(&a, &b, &mut tiled);
+        let public = matmul_nt(&a, &b);
+        assert_eq!(simple, expect, "nt simple vs reference, {ctx}");
+        assert_eq!(tiled, expect, "nt tiled vs reference, {ctx}");
+        assert_eq!(public.data, expect, "nt public vs reference, {ctx}");
+        let mut acc_s = dirty::<T>(m * n);
+        let mut acc_t = acc_s.clone();
+        let mut acc_p = acc_s.clone();
+        api::nt_simple_acc(&a, &b, &mut acc_s);
+        api::nt_tiled_acc(&a, &b, &mut acc_t);
+        matmul_nt_acc_slice(&a, &b, &mut acc_p);
+        assert_eq!(acc_t, acc_s, "nt tiled acc vs simple acc, {ctx}");
+        assert_eq!(acc_p, acc_s, "nt public acc vs simple acc, {ctx}");
+    }
+}
+
+#[test]
+fn kernel_paths_bit_identical_f32() {
+    check_all_paths::<f32>(7101);
+}
+
+#[test]
+fn kernel_paths_bit_identical_f64() {
+    check_all_paths::<f64>(7102);
+}
+
+/// A shape big enough to clear both parallel thresholds (`m >= 64`,
+/// `m·k·n >= 2²²`): the public API fans out over the persistent compute
+/// pool, and the panel split must not change a single bit vs the
+/// single-threaded simple kernel.
+#[test]
+fn pooled_path_bit_identical_to_simple() {
+    let (m, k, n) = (256, 300, 257);
+    let mut rng = Rng::new(7103);
+    let a = Matrix::<f32>::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::<f32>::randn(k, n, 1.0, &mut rng);
+    let mut simple = vec![0.0f32; m * n];
+    api::nn_simple_acc(&a, &b, &mut simple);
+    let pooled = matmul(&a, &b);
+    assert_eq!(pooled.data, simple);
+
+    let at = Matrix::<f32>::randn(k, m, 1.0, &mut rng);
+    let mut simple_tn = vec![0.0f32; m * n];
+    api::tn_simple_acc(&at, &b, &mut simple_tn);
+    let pooled_tn = matmul_tn(&at, &b);
+    assert_eq!(pooled_tn.data, simple_tn);
+
+    let bt = Matrix::<f32>::randn(n, k, 1.0, &mut rng);
+    let mut simple_nt = vec![0.0f32; m * n];
+    api::nt_simple_acc(&a, &bt, &mut simple_nt);
+    let pooled_nt = matmul_nt(&a, &bt);
+    assert_eq!(pooled_nt.data, simple_nt);
+}

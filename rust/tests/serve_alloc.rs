@@ -18,6 +18,11 @@
 //! allocation counter is global, so worker-side and client-side
 //! allocations are both counted.
 //!
+//! Each measured window additionally pins a **zero thread-spawn delta**
+//! (`util::threadpool::thread_spawn_count`): warm serve and decode loops
+//! run on the serve worker plus the persistent compute pool and never
+//! fall back to spawn-per-call threading.
+//!
 //! This file contains exactly one test so no concurrent libtest thread
 //! allocates during the measured window.
 
@@ -138,10 +143,12 @@ fn warm_serve_loop_performs_zero_allocations() {
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
     for _ in 0..5 {
         round(&core);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
+    let spawned = psoft::util::threadpool::thread_spawn_count() - spawns_before;
     assert_eq!(
         after - before,
         0,
@@ -149,6 +156,7 @@ fn warm_serve_loop_performs_zero_allocations() {
         after - before,
         ids.len()
     );
+    assert_eq!(spawned, 0, "warm serve loop spawned {spawned} threads");
 
     // ---- Decode: the warm per-token generation loop is also free ------
     let dcfg = ModelConfig {
@@ -180,18 +188,21 @@ fn warm_serve_loop_performs_zero_allocations() {
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
     for _ in 0..3 {
         dcore.submit_generate(gid, &prompt, max_new, true, &gticket).unwrap();
         let (_, emitted) = gticket.wait().unwrap();
         assert_eq!(emitted as usize, max_new);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
+    let spawned = psoft::util::threadpool::thread_spawn_count() - spawns_before;
     assert_eq!(
         after - before,
         0,
         "warm decode loop allocated {} times across 3 generations × {max_new} tokens",
         after - before
     );
+    assert_eq!(spawned, 0, "warm decode loop spawned {spawned} threads");
 
     // ---- Grouped decode: the warm lockstep loop is also free ----------
     // decode_batch = 2 on one adapter; both group sizes a round can
@@ -231,6 +242,7 @@ fn warm_serve_loop_performs_zero_allocations() {
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
     for _ in 0..3 {
         gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
         gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
@@ -240,10 +252,12 @@ fn warm_serve_loop_performs_zero_allocations() {
         assert_eq!(e2 as usize, max_new);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
+    let spawned = psoft::util::threadpool::thread_spawn_count() - spawns_before;
     assert_eq!(
         after - before,
         0,
         "warm grouped decode loop allocated {} times across 3 two-lane rounds",
         after - before
     );
+    assert_eq!(spawned, 0, "warm grouped decode loop spawned {spawned} threads");
 }

@@ -16,11 +16,16 @@
 //!   `set_params` path in isolation.
 //!
 //! Scope notes:
-//! - Shapes are kept below the matmul threading thresholds so the step
-//!   runs single-threaded (spawning scoped threads allocates; the
-//!   thread-pool split is a separate axis from buffer reuse).
+//! - Training shapes here sit below the matmul parallel thresholds, so
+//!   the step windows run single-lane. The multi-threaded path gets its
+//!   own window (`assert_pooled_matmul_alloc_free`): a matmul large
+//!   enough to engage the persistent compute pool, pinned to zero heap
+//!   allocations *and* zero thread spawns once the pool and each lane's
+//!   tile scratch are warm. Every window also asserts a zero
+//!   thread-spawn delta — warm hot paths never fall back to
+//!   spawn-per-call threading.
 //! - This file contains exactly one test so no concurrent libtest thread
-//!   allocates during the measured window.
+//!   allocates during the measured windows.
 
 // Style allowances shared by the bench/test crates: index loops mirror
 // the math notation, and config structs are built default-then-override.
@@ -112,14 +117,17 @@ fn assert_steps_alloc_free(method: MethodKind, seed: u64) {
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
     let mut last = (0.0, 0.0);
     for _ in 0..5 {
         last = be.step_core(&batch, &hyper, &mut ws);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
+    let spawned = psoft::util::threadpool::thread_spawn_count() - spawns_before;
 
     // The training is real (loss finite and moving), and not a single
-    // heap allocation happened across five full optimizer steps.
+    // heap allocation or thread spawn happened across five full
+    // optimizer steps.
     assert!(last.0.is_finite() && warm_loss.is_finite());
     assert_eq!(
         after - before,
@@ -127,6 +135,7 @@ fn assert_steps_alloc_free(method: MethodKind, seed: u64) {
         "{method:?}: steady-state train step allocated {} times in 5 steps",
         after - before
     );
+    assert_eq!(spawned, 0, "{method:?}: steady-state train step spawned {spawned} threads");
     // Same invariant from the workspace's view: no pool misses either.
     let misses_frozen = ws.misses();
     be.step_core(&batch, &hyper, &mut ws);
@@ -152,16 +161,62 @@ fn assert_refresh_alloc_free(method: MethodKind, seed: u64) {
     be.model.set_trainable_flat(&p);
 
     let before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
     for _ in 0..5 {
         be.model.set_trainable_flat(&p);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
+    let spawned = psoft::util::threadpool::thread_spawn_count() - spawns_before;
     assert_eq!(
         after - before,
         0,
         "{method:?}: rotation refresh allocated {} times in 5 set_params rounds",
         after - before
     );
+    assert_eq!(spawned, 0, "{method:?}: rotation refresh spawned {spawned} threads");
+}
+
+/// The multi-threaded kernel path: a matmul above the parallel thresholds
+/// fans out over the persistent compute pool. Once the pool is built and
+/// every lane's thread-local tile scratch is sized, further pooled
+/// matmuls must neither allocate nor spawn.
+fn assert_pooled_matmul_alloc_free() {
+    use psoft::linalg::matmul::kernel_test_api::{TILE_KC, TILE_NC};
+    use psoft::linalg::{matmul_into, Mat, Scalar};
+    use psoft::util::threadpool::{pool, thread_spawn_count};
+
+    let mut rng = Rng::new(5008);
+    // Above both parallel thresholds (m >= 64 rows, m*k*n >= 2^22 flops).
+    let a = Mat::randn(192, 128, 1.0, &mut rng);
+    let b = Mat::randn(128, 192, 1.0, &mut rng);
+    let mut c = Mat::zeros(192, 192);
+
+    // Build the pool (the one place spawns are expected), then warm every
+    // lane's tile scratch: many single-item chunks with a non-trivial
+    // body make each worker claim work and size its thread-local buffer
+    // before the measured window opens.
+    let p = pool();
+    for _ in 0..4 {
+        p.par_for(16 * 1024, 1, &|lo, hi| {
+            for _ in lo..hi {
+                <f32 as Scalar>::with_scratch(TILE_KC * TILE_NC, |s| {
+                    std::hint::black_box(&s[0]);
+                });
+            }
+        });
+    }
+    matmul_into(&a, &b, &mut c);
+
+    let allocs_before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = thread_spawn_count();
+    for _ in 0..5 {
+        matmul_into(&a, &b, &mut c);
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
+    let spawned = thread_spawn_count() - spawns_before;
+    assert_eq!(spawned, 0, "warm pooled matmul spawned {spawned} threads");
+    assert_eq!(allocs, 0, "warm pooled matmul allocated {allocs} times in 5 calls");
+    std::hint::black_box(&c);
 }
 
 #[test]
@@ -177,4 +232,8 @@ fn steady_state_train_step_performs_zero_allocations() {
     assert_refresh_alloc_free(MethodKind::Psoft, 5005);
     assert_refresh_alloc_free(MethodKind::OftV2, 5006);
     assert_refresh_alloc_free(MethodKind::Boft, 5007);
+
+    // The pooled (multi-threaded) kernel path: zero allocations and zero
+    // spawns once the persistent pool and its lane scratch are warm.
+    assert_pooled_matmul_alloc_free();
 }

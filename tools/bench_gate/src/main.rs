@@ -29,6 +29,18 @@
 //! fails if any method's artifact bytes-per-parameter exceeds its
 //! committed ceiling (format bloat: f64 storage, duplicated tensors, …).
 //!
+//! With `--key .` (or an empty `--key`) under `--foreach`, each entry *is*
+//! the value — for flat phase maps like `ns_per_step: {total, forward_loss,
+//! …}`:
+//!
+//! ```text
+//! bench_gate --baseline ../BENCH_hotpath.json --current BENCH_hotpath.json \
+//!            --foreach ns_per_step --key . --lower-is-better --max-regression 0.5
+//! ```
+//!
+//! gates every phase floor in one invocation and reports a per-phase
+//! verdict line with the signed delta.
+//!
 //! `--update-baselines` closes the refresh loop: instead of gating, it
 //! rewrites the committed baseline file from the fresh run —
 //!
@@ -127,8 +139,11 @@ fn check(key: &str, base: f64, cur: f64, tol: f64, lower_is_better: bool) -> boo
         cur >= base * (1.0 - tol)
     };
     let verdict = if pass { "PASS" } else { "FAIL" };
+    // Signed change relative to baseline; for lower-is-better metrics a
+    // positive delta is the regression direction.
+    let delta = if base != 0.0 { (cur - base) / base * 100.0 } else { 0.0 };
     println!(
-        "bench_gate: {key}: baseline {base:.4}, current {cur:.4} \
+        "bench_gate: {key}: baseline {base:.4} -> current {cur:.4} ({delta:+.1}%) \
          (allowed regression {pct:.0}%, {dir}) -> {verdict}",
         pct = tol * 100.0,
         dir = if lower_is_better { "lower-is-better" } else { "higher-is-better" },
@@ -209,7 +224,13 @@ fn run() -> i32 {
                     return 1;
                 }
             }
-            obj.keys().map(|k| format!("{obj_path}.{k}.{}", opts.key)).collect()
+            // `--key .` (or empty): the entry itself is the value — for
+            // flat maps of metric -> number (e.g. ns_per_step phases).
+            if opts.key.is_empty() || opts.key == "." {
+                obj.keys().map(|k| format!("{obj_path}.{k}")).collect()
+            } else {
+                obj.keys().map(|k| format!("{obj_path}.{k}.{}", opts.key)).collect()
+            }
         }
     };
 
