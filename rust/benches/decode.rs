@@ -23,7 +23,7 @@ use psoft::config::{MethodKind, ModuleKind, PeftConfig};
 use psoft::model::native::{self, DecodeCache};
 use psoft::model::Backbone;
 use psoft::peft::AdapterId;
-use psoft::runtime::serve::{ServeCore, ServeOptions, Ticket};
+use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 use psoft::runtime::NativeBackend;
 use psoft::util::json::Json;
 use psoft::util::rng::Rng;
@@ -33,6 +33,17 @@ use std::sync::Arc;
 
 fn fast() -> bool {
     std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn submit_gen(core: &ServeCore, id: AdapterId, prompt: &Arc<Vec<i32>>, max_new: usize, t: &Ticket) {
+    core.submit(
+        id,
+        Request::Generate { prompt: Arc::clone(prompt), max_new_tokens: max_new, greedy: true },
+        t,
+        SubmitOptions::default(),
+    )
+    .into_result()
+    .unwrap();
 }
 
 /// The adapter mix cycled across registrations — the paper's method plus
@@ -155,7 +166,7 @@ fn main() {
         // workspace pool.
         let warm = Ticket::new(max_new);
         for (a, id) in ids.iter().enumerate() {
-            core.submit_generate(*id, &prompts[a], max_new, true, &warm).unwrap();
+            submit_gen(&core, *id, &prompts[a], max_new, &warm);
             warm.wait().unwrap();
         }
 
@@ -164,7 +175,7 @@ fn main() {
         for _ in 0..gens_per_adapter {
             for (a, id) in ids.iter().enumerate() {
                 let t = Ticket::new(max_new);
-                core.submit_generate(*id, &prompts[a], max_new, true, &t).unwrap();
+                submit_gen(&core, *id, &prompts[a], max_new, &t);
                 tickets.push(t);
             }
         }
@@ -231,14 +242,14 @@ fn main() {
         // Warmup sizes the lane pool and the [g, *] group scratch.
         let warm: Vec<Ticket> = (0..g).map(|_| Ticket::new(max_new)).collect();
         for t in &warm {
-            core.submit_generate(id, &prompt, max_new, true, t).unwrap();
+            submit_gen(&core, id, &prompt, max_new, t);
         }
         core.drain();
 
         let tickets: Vec<Ticket> = (0..total_gens).map(|_| Ticket::new(max_new)).collect();
         let sw = Stopwatch::start();
         for t in &tickets {
-            core.submit_generate(id, &prompt, max_new, true, t).unwrap();
+            submit_gen(&core, id, &prompt, max_new, t);
         }
         core.drain();
         let wall_secs = sw.secs();

@@ -19,7 +19,7 @@ use psoft::coordinator::serve_report;
 use psoft::model::native::{Batch, Target};
 use psoft::model::{Backbone, NativeModel};
 use psoft::peft::AdapterId;
-use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 use psoft::runtime::Hyper;
 use psoft::util::json::Json;
 use psoft::util::rng::Rng;
@@ -29,6 +29,18 @@ use std::sync::Arc;
 
 fn fast() -> bool {
     std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn submit_train(core: &ServeCore, id: AdapterId, batch: &Arc<Batch>, hyper: Hyper, t: &Ticket) {
+    core.submit(id, Request::Train { batch: Arc::clone(batch), hyper }, t, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+}
+
+fn submit_eval(core: &ServeCore, id: AdapterId, batch: &Arc<Batch>, t: &Ticket) {
+    core.submit(id, Request::Eval { batch: Arc::clone(batch) }, t, SubmitOptions::default())
+        .into_result()
+        .unwrap();
 }
 
 /// The adapter mix cycled across registrations: the paper's method plus
@@ -114,9 +126,9 @@ fn main() {
         // Warmup: one train + one eval per adapter (sizes every buffer).
         let warm = Ticket::new(bsz);
         for (a, id) in ids.iter().enumerate() {
-            core.submit(*id, &batches[a], ReqKind::Train(hyper), &warm).unwrap();
+            submit_train(&core, *id, &batches[a], hyper, &warm);
             warm.wait().unwrap();
-            core.submit(*id, &batches[a], ReqKind::Eval, &warm).unwrap();
+            submit_eval(&core, *id, &batches[a], &warm);
             warm.wait().unwrap();
         }
 
@@ -126,10 +138,10 @@ fn main() {
         for _ in 0..rounds {
             for (a, id) in ids.iter().enumerate() {
                 let tt = Ticket::new(bsz);
-                core.submit(*id, &batches[a], ReqKind::Train(hyper), &tt).unwrap();
+                submit_train(&core, *id, &batches[a], hyper, &tt);
                 tickets.push(tt);
                 let te = Ticket::new(bsz);
-                core.submit(*id, &batches[a], ReqKind::Eval, &te).unwrap();
+                submit_eval(&core, *id, &batches[a], &te);
                 tickets.push(te);
             }
         }

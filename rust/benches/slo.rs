@@ -1,0 +1,281 @@
+//! SLO bench: open-loop, trace-driven fleet serving on the decoder
+//! backbone — hundreds of adapters under Zipf popularity competing for
+//! `max_resident` slots, Poisson arrivals at a fixed offered rate, and
+//! heavy-tailed prompt/output lengths (`runtime::loadgen`). Unlike the
+//! closed-loop `serve` bench, the client never slows down with the
+//! server, so queueing, shedding, and reload-lane stalls become visible
+//! in the tail percentiles.
+//!
+//! Reports streaming TTFT p50/p95/p99 and p99 per-token latency from the
+//! per-adapter quantile sketches, plus admission outcome counts and the
+//! process RSS. Emits `BENCH_slo.json` for the CI bench gate
+//! (`tools/bench_gate --foreach ttft_ms ...`). `PSOFT_BENCH_FAST=1`
+//! shrinks the trace to CI-smoke size; the fleet shape is overridable:
+//!
+//! - `PSOFT_SLO_ADAPTERS`      fleet size (default 200; fast 32)
+//! - `PSOFT_SLO_MAX_RESIDENT`  resident-slot budget (default 8)
+//! - `PSOFT_SLO_REQUESTS`      trace length (default 1500; fast 240)
+//! - `PSOFT_SLO_RATE`          offered load, req/s (default 250; fast 120)
+//! - `PSOFT_SLO_OUT`           output JSON path (default BENCH_slo.json)
+//! - `PSOFT_SLO_MAX_RSS_MIB`   if set, assert RSS stays below this bound
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use psoft::bench::{bench_decoder, write_csv};
+use psoft::config::{MethodKind, ModuleKind, PeftConfig};
+use psoft::model::Backbone;
+use psoft::peft::AdapterId;
+use psoft::runtime::loadgen::{LengthDist, LoadSpec, Trace};
+use psoft::runtime::serve::{
+    Admission, Request, ServeCore, ServeError, ServeOptions, SubmitOptions, Ticket,
+};
+use psoft::util::json::Json;
+use psoft::util::rng::Rng;
+use psoft::util::stats::{resident_set_bytes, QuantileSketch};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn fast() -> bool {
+    std::env::var("PSOFT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Fleet mix: mostly cheap LoRA adapters, with a PSOFT adapter every
+/// 16th registration so the async reload lane pays real SVD
+/// re-derivations under churn.
+fn peft_for(i: usize) -> (String, PeftConfig) {
+    if i % 16 == 0 {
+        let mut p =
+            PeftConfig::new(MethodKind::Psoft, 4).with_modules(vec![ModuleKind::Q]);
+        p.svd_n_iter = Some(1);
+        (format!("psoft_{i}"), p)
+    } else {
+        let p = PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q]);
+        (format!("lora_{i}"), p)
+    }
+}
+
+fn main() {
+    let cfg = bench_decoder();
+    let adapters = env_usize("PSOFT_SLO_ADAPTERS", if fast() { 32 } else { 200 });
+    let max_resident = env_usize("PSOFT_SLO_MAX_RESIDENT", 8);
+    let n_requests = env_usize("PSOFT_SLO_REQUESTS", if fast() { 240 } else { 1500 });
+    let rate_rps = env_f64("PSOFT_SLO_RATE", if fast() { 120.0 } else { 250.0 });
+    let out_path =
+        std::env::var("PSOFT_SLO_OUT").unwrap_or_else(|_| "BENCH_slo.json".to_string());
+    let workers = psoft::util::threadpool::default_parallelism().min(8);
+
+    let spec = LoadSpec {
+        adapters,
+        rate_rps,
+        n_requests,
+        zipf_s: 1.1,
+        prompt_len: LengthDist::new(2, 24, 1.2),
+        output_len: LengthDist::new(1, 8, 1.3),
+        interactive_share: 0.5,
+        seed: 42,
+    };
+    let trace = Trace::generate(&spec);
+    println!(
+        "=== slo bench: {adapters} adapters (max_resident {max_resident}), \
+         {n_requests} open-loop requests at {rate_rps:.0} req/s over {workers} workers ===",
+    );
+
+    let mut rng = Rng::new(0x510_BE0C);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let spill_dir =
+        std::env::temp_dir().join(format!("psoft_slo_spill_{}", std::process::id()));
+    let opts = ServeOptions {
+        workers,
+        queue_cap: 64,
+        burst: 2,
+        decode_batch: 4,
+        max_resident,
+        spill_dir: Some(spill_dir.clone()),
+        tier_weights: vec![3, 1],
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let ids: Vec<AdapterId> = (0..adapters)
+        .map(|i| {
+            let (label, peft) = peft_for(i);
+            core.register(&label, &peft, 9000 + i as u64)
+        })
+        .collect();
+    println!(
+        "registered {} adapters, {} resident after fleet spill-down",
+        ids.len(),
+        core.num_resident()
+    );
+
+    // Materialize every prompt before the clock starts; the replay loop
+    // itself only Arc-clones.
+    let prompts: Vec<Arc<Vec<i32>>> = trace
+        .arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let mut prng = Rng::new(0x9E37 ^ i as u64);
+            Arc::new(
+                (0..a.prompt_len).map(|_| prng.below(cfg.vocab_size) as i32).collect(),
+            )
+        })
+        .collect();
+    let tickets: Vec<Ticket> =
+        trace.arrivals.iter().map(|a| Ticket::new(a.max_new_tokens)).collect();
+
+    // Open-loop replay: the trace clock, not request completion, decides
+    // when the next submit fires. Interactive arrivals (tier 0) carry a
+    // deadline; batch arrivals ride the low weighted-fair tier.
+    let mut admitted: Vec<usize> = Vec::with_capacity(n_requests);
+    let mut rejected = 0u64;
+    let mut shed_at_submit = 0u64;
+    let start = Instant::now();
+    for (i, a) in trace.arrivals.iter().enumerate() {
+        let now = start.elapsed();
+        if a.at > now {
+            std::thread::sleep(a.at - now);
+        }
+        let mut sopts = SubmitOptions::new().with_priority(a.tier);
+        if a.tier == 0 {
+            sopts = sopts.with_deadline(Duration::from_secs(30));
+        }
+        let req = Request::Generate {
+            prompt: Arc::clone(&prompts[i]),
+            max_new_tokens: a.max_new_tokens,
+            greedy: true,
+        };
+        match core.submit(ids[a.adapter], req, &tickets[i], sopts) {
+            Admission::Admitted => admitted.push(i),
+            Admission::Rejected(_) => rejected += 1,
+            Admission::Shed(_) => shed_at_submit += 1,
+        }
+    }
+    core.drain();
+    let wall_secs = start.elapsed().as_secs_f64();
+
+    let mut completed = 0u64;
+    let mut shed_in_queue = 0u64;
+    let mut failed = 0u64;
+    for &i in &admitted {
+        match tickets[i].wait() {
+            Ok(_) => completed += 1,
+            Err(ServeError::Shed(_)) => shed_in_queue += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let shed = shed_at_submit + shed_in_queue;
+    let submitted = trace.arrivals.len() as u64;
+    let shed_rate = shed as f64 / submitted as f64;
+
+    // Fleet-wide tail latency: merge the per-adapter streaming sketches.
+    let mut ttft = QuantileSketch::default();
+    let mut tok = QuantileSketch::default();
+    let mut tokens_generated = 0u64;
+    for (_, _, s) in core.adapters() {
+        ttft.merge(&s.ttft);
+        tok.merge(&s.tok_latency);
+        tokens_generated += s.tokens_generated;
+    }
+    let panics = core.worker_panics();
+    let rss_mib =
+        resident_set_bytes().map(|b| b as f64 / (1024.0 * 1024.0)).unwrap_or(0.0);
+
+    assert_eq!(panics, 0, "open-loop smoke must not panic any worker");
+    assert_eq!(failed, 0, "admitted requests must complete or shed, never error");
+    assert!(completed > 0, "the trace must complete some requests");
+    assert!(ttft.count() > 0, "TTFT sketch must have samples");
+    let max_rss = env_f64("PSOFT_SLO_MAX_RSS_MIB", 0.0);
+    if max_rss > 0.0 {
+        assert!(
+            rss_mib > 0.0 && rss_mib < max_rss,
+            "RSS {rss_mib:.0} MiB breaches the {max_rss:.0} MiB bound"
+        );
+    }
+
+    let p = |s: &QuantileSketch, q: f64| s.quantile(q) / 1e6;
+    println!(
+        "completed {completed}/{submitted} ({rejected} rejected, {shed} shed) in \
+         {wall_secs:.2}s — {tokens_generated} tokens, offered {:.1} req/s",
+        trace.offered_rps()
+    );
+    println!(
+        "TTFT p50/p95/p99 = {:.2}/{:.2}/{:.2} ms, per-token p99 = {:.3} ms, \
+         rss {rss_mib:.0} MiB",
+        p(&ttft, 0.5),
+        p(&ttft, 0.95),
+        p(&ttft, 0.99),
+        p(&tok, 0.99)
+    );
+
+    write_csv(
+        "slo_bench",
+        "adapters,max_resident,requests,completed,rejected,shed,offered_rps,\
+         ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,rss_mib",
+        &[format!(
+            "{adapters},{max_resident},{submitted},{completed},{rejected},{shed},\
+             {:.2},{:.3},{:.3},{:.3},{:.4},{rss_mib:.0}",
+            trace.offered_rps(),
+            p(&ttft, 0.5),
+            p(&ttft, 0.95),
+            p(&ttft, 0.99),
+            p(&tok, 0.99)
+        )],
+    );
+
+    let json = Json::obj(vec![
+        (
+            "note",
+            Json::Str(
+                "committed baseline holds conservative ceilings (lower-is-better); \
+                 refresh with bench_gate --update-baselines on a quiet machine"
+                    .to_string(),
+            ),
+        ),
+        (
+            "workload",
+            Json::Str(format!(
+                "decoder_small; {adapters}-adapter Zipf(s=1.1) fleet, max_resident \
+                 {max_resident}; Poisson {rate_rps:.0} req/s x {n_requests}; \
+                 bounded-Pareto prompt 2..24 / output 1..8; 50% interactive tier"
+            )),
+        ),
+        ("fast_mode", Json::Bool(fast())),
+        ("adapters", Json::Num(adapters as f64)),
+        ("max_resident", Json::Num(max_resident as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("offered_rps", Json::Num(trace.offered_rps())),
+        ("wall_secs", Json::Num(wall_secs)),
+        ("submitted", Json::Num(submitted as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("rejected", Json::Num(rejected as f64)),
+        ("shed", Json::Num(shed as f64)),
+        ("shed_rate", Json::Num(shed_rate)),
+        ("tokens_generated", Json::Num(tokens_generated as f64)),
+        (
+            "ttft_ms",
+            Json::obj(vec![
+                ("p50", Json::Num(p(&ttft, 0.5))),
+                ("p95", Json::Num(p(&ttft, 0.95))),
+                ("p99", Json::Num(p(&ttft, 0.99))),
+            ]),
+        ),
+        ("per_token_ms", Json::obj(vec![("p99", Json::Num(p(&tok, 0.99)))])),
+        ("worker_panics", Json::Num(panics as f64)),
+        ("rss_mib", Json::Num(rss_mib)),
+    ]);
+    std::fs::write(&out_path, json.dump_pretty()).expect("write BENCH_slo.json");
+    eprintln!("wrote {out_path}");
+    drop(core);
+    std::fs::remove_dir_all(&spill_dir).ok();
+}

@@ -430,7 +430,7 @@ impl DataConfig {
 
 /// Serve-mode scheduler settings (`[serve]` TOML section / `psoft serve`
 /// CLI flags; consumed by `runtime::serve::ServeOptions`).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Worker threads in the fixed pool.
     pub workers: usize,
@@ -458,6 +458,21 @@ pub struct ServeConfig {
     /// target kind) into one batched forward, scattering per-request
     /// losses back to their tickets. Off by default.
     pub coalesce_eval: bool,
+    /// Weighted-fair dispatch tiers (`tier_weights = [3, 1]` gives tier
+    /// 0 three dispatch units for every one of tier 1). Empty (the
+    /// default) keeps the pure round-robin scheduler — dispatch traces
+    /// bit-identical to the pre-tier behavior. A request selects its
+    /// tier via `SubmitOptions::priority` (`--priority` on the CLI),
+    /// clamped to the last configured tier; a tier with no runnable
+    /// work forfeits its remaining budget (work-conserving).
+    pub tier_weights: Vec<usize>,
+    /// Queue-delay admission shedding bound in milliseconds: when > 0
+    /// and an adapter's queue-front request has already waited longer
+    /// than this, new submissions to that adapter are shed
+    /// (`Admission::Shed(QueueDelay)`) instead of queued — once queue
+    /// delay is past the SLO, more queueing only manufactures deadline
+    /// misses. 0 (the default) disables shedding.
+    pub shed_after_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -470,6 +485,8 @@ impl Default for ServeConfig {
             max_new_tokens: 16,
             decode_batch: 4,
             coalesce_eval: false,
+            tier_weights: Vec::new(),
+            shed_after_ms: 0,
         }
     }
 }
@@ -487,6 +504,10 @@ impl ServeConfig {
         read_usize(s, "max_new_tokens", &mut sc.max_new_tokens);
         read_usize(s, "decode_batch", &mut sc.decode_batch);
         read_bool(s, "coalesce_eval", &mut sc.coalesce_eval);
+        read_usize_list(s, "tier_weights", &mut sc.tier_weights);
+        if let Some(v) = s.get("shed_after_ms").as_usize() {
+            sc.shed_after_ms = v as u64;
+        }
         sc
     }
 }
@@ -651,6 +672,17 @@ fn read_bool(obj: &Json, key: &str, out: &mut bool) {
     }
 }
 
+/// Read a flat integer array (e.g. `tier_weights = [3, 1]`); the key is
+/// ignored unless every element is a non-negative integer.
+fn read_usize_list(obj: &Json, key: &str, out: &mut Vec<usize>) {
+    if let Some(arr) = obj.get(key).as_arr() {
+        let parsed: Vec<usize> = arr.iter().filter_map(|v| v.as_usize()).collect();
+        if parsed.len() == arr.len() {
+            *out = parsed;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -706,7 +738,8 @@ mod tests {
     fn serve_section_parses_with_defaults() {
         let tree = toml::parse(
             "[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\nmax_new_tokens = 24\n\
-             decode_batch = 16\ncoalesce_eval = true\n",
+             decode_batch = 16\ncoalesce_eval = true\ntier_weights = [3, 1]\n\
+             shed_after_ms = 250\n",
         )
         .unwrap();
         let sc = ServeConfig::from_toml(&tree);
@@ -716,12 +749,16 @@ mod tests {
         assert_eq!(sc.max_new_tokens, 24);
         assert_eq!(sc.decode_batch, 16);
         assert!(sc.coalesce_eval);
+        assert_eq!(sc.tier_weights, vec![3, 1]);
+        assert_eq!(sc.shed_after_ms, 250);
         assert_eq!(sc.burst, ServeConfig::default().burst);
         // Absent section ⇒ pure defaults.
         let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
         assert_eq!(sc2.workers, ServeConfig::default().workers);
         assert_eq!(sc2.decode_batch, 4);
         assert!(!sc2.coalesce_eval);
+        assert!(sc2.tier_weights.is_empty(), "default scheduler is pure round-robin");
+        assert_eq!(sc2.shed_after_ms, 0);
     }
 
     #[test]

@@ -196,9 +196,14 @@ pub fn serve_report(
             mean_group_size: s.mean_group_size(),
             max_group_size: s.max_group_size,
             rejected: s.rejected,
+            shed: s.shed,
             mean_latency_ms: s.mean_latency_ms(),
             max_latency_ms: s.max_latency_ms(),
             mean_service_ms: s.mean_service_ms(),
+            ttft_p50_ms: s.ttft_ms(0.5),
+            ttft_p95_ms: s.ttft_ms(0.95),
+            ttft_p99_ms: s.ttft_ms(0.99),
+            tok_p99_ms: s.tok_latency_ms(0.99),
             artifact_bytes: core.artifact_bytes(id).unwrap_or(0),
         })
         .collect();
@@ -353,7 +358,7 @@ mod tests {
     #[test]
     fn serve_report_snapshots_core_stats() {
         use crate::model::native::{Batch, Target};
-        use crate::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+        use crate::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 
         let mut rng = Rng::new(503);
         let bb = Arc::new(Backbone::random(&tiny_model_cfg(), &mut rng));
@@ -372,12 +377,24 @@ mod tests {
         });
         let ticket = Ticket::new(2);
         for _ in 0..3 {
-            core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+            let adm = core.submit(
+                id,
+                Request::Eval { batch: Arc::clone(&batch) },
+                &ticket,
+                SubmitOptions::default(),
+            );
+            adm.into_result().unwrap();
             ticket.wait().unwrap();
         }
         let report = serve_report("serve smoke", &core, 1.0, 1);
         assert_eq!(report.rows.len(), 1);
         assert_eq!(report.total_requests(), 3);
+        assert!(
+            report.rows[0].ttft_p99_ms > 0.0,
+            "ttft sketch feeds the serve report percentile columns"
+        );
+        assert!(report.to_csv().contains("ttft_p99_ms"));
+        assert!(report.to_csv().contains(",shed,"));
         assert!(
             report.rows[0].artifact_bytes > 0,
             "serve report carries the per-adapter artifact size"

@@ -217,9 +217,19 @@ pub struct ServeRow {
     /// Largest single dispatch group for this adapter.
     pub max_group_size: u64,
     pub rejected: u64,
+    /// Requests shed by SLO policy (deadline expiry or queue-delay
+    /// bound) — distinct from `rejected` backpressure.
+    pub shed: u64,
     pub mean_latency_ms: f64,
     pub max_latency_ms: f64,
     pub mean_service_ms: f64,
+    /// Streaming time-to-first-result percentiles (ms) from the
+    /// per-adapter quantile sketch.
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// p99 per-token decode latency (ms); 0 when nothing decoded.
+    pub tok_p99_ms: f64,
     /// Size of this adapter's persisted artifact (bytes) — the
     /// bytes-per-adapter figure next to the shared-frozen accounting.
     pub artifact_bytes: u64,
@@ -257,11 +267,13 @@ impl ServeReport {
             self.throughput_rps()
         );
         out.push_str("| Adapter | Label | Served | Train | Tokens | Grp mean | Grp max |");
-        out.push_str(" Rejected | Mean lat (ms) | Max lat (ms) | Mean svc (ms) | Artifact |\n");
-        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str(" Rejected | Shed | Mean lat (ms) | Max lat (ms) | Mean svc (ms) |");
+        out.push_str(" TTFT p50/p95/p99 (ms) | Tok p99 (ms) | Artifact |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
+                "| {} | {} | {} | {} | {} | {:.2} | {} | {} | {} | {:.3} | {:.3} | {:.3} | \
+                 {:.3}/{:.3}/{:.3} | {:.3} | {} |\n",
                 r.id,
                 r.label,
                 r.processed,
@@ -270,9 +282,14 @@ impl ServeReport {
                 r.mean_group_size,
                 r.max_group_size,
                 r.rejected,
+                r.shed,
                 r.mean_latency_ms,
                 r.max_latency_ms,
                 r.mean_service_ms,
+                r.ttft_p50_ms,
+                r.ttft_p95_ms,
+                r.ttft_p99_ms,
+                r.tok_p99_ms,
                 human_bytes(r.artifact_bytes as f64)
             ));
         }
@@ -281,11 +298,11 @@ impl ServeReport {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "adapter,label,processed,train_steps,tokens_generated,mean_group_size,max_group_size,rejected,mean_latency_ms,max_latency_ms,mean_service_ms,artifact_bytes\n",
+            "adapter,label,processed,train_steps,tokens_generated,mean_group_size,max_group_size,rejected,shed,mean_latency_ms,max_latency_ms,mean_service_ms,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,artifact_bytes\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{:.4},{},{},{:.4},{:.4},{:.4},{}\n",
+                "{},{},{},{},{},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}\n",
                 r.id,
                 r.label,
                 r.processed,
@@ -294,9 +311,14 @@ impl ServeReport {
                 r.mean_group_size,
                 r.max_group_size,
                 r.rejected,
+                r.shed,
                 r.mean_latency_ms,
                 r.max_latency_ms,
                 r.mean_service_ms,
+                r.ttft_p50_ms,
+                r.ttft_p95_ms,
+                r.ttft_p99_ms,
+                r.tok_p99_ms,
                 r.artifact_bytes
             ));
         }
@@ -325,9 +347,14 @@ impl ServeReport {
                                 ("mean_group_size", Json::Num(r.mean_group_size)),
                                 ("max_group_size", Json::Num(r.max_group_size as f64)),
                                 ("rejected", Json::Num(r.rejected as f64)),
+                                ("shed", Json::Num(r.shed as f64)),
                                 ("mean_latency_ms", Json::Num(r.mean_latency_ms)),
                                 ("max_latency_ms", Json::Num(r.max_latency_ms)),
                                 ("mean_service_ms", Json::Num(r.mean_service_ms)),
+                                ("ttft_p50_ms", Json::Num(r.ttft_p50_ms)),
+                                ("ttft_p95_ms", Json::Num(r.ttft_p95_ms)),
+                                ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
+                                ("tok_p99_ms", Json::Num(r.tok_p99_ms)),
                                 ("artifact_bytes", Json::Num(r.artifact_bytes as f64)),
                             ])
                         })

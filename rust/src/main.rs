@@ -111,7 +111,9 @@ fn usage() {
            psoft import --artifact adapter.psoftad --suite glue --task cola --seed 42\n\
          serve: --max-resident N spills least-recently-used adapters to --spill-dir;\n\
          \x20       --decode-batch G groups up to G same-adapter generations per lockstep\n\
-         \x20       dispatch, --coalesce-eval merges queued same-adapter eval batches\n\
+         \x20       dispatch, --coalesce-eval merges queued same-adapter eval batches;\n\
+         \x20       --tier-weights 3,1 enables weighted-fair priority tiers and\n\
+         \x20       --shed-after-ms B sheds requests queued past the bound\n\
          \n\
          see the module docs in src/main.rs for the full option reference"
     );
@@ -333,7 +335,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use psoft::config::ServeConfig;
     use psoft::model::native::{Batch, Target};
-    use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+    use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 
     let cfg = model_cfg_from(args)?;
     let bb = Arc::new(load_or_make_backbone(args, &cfg)?);
@@ -358,6 +360,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has_flag("coalesce-eval") {
         sc.coalesce_eval = true;
     }
+    if args.get("tier-weights").is_some() {
+        sc.tier_weights = args.usize_list("tier-weights")?;
+    }
+    sc.shed_after_ms = args.u64("shed-after-ms", sc.shed_after_ms)?;
 
     let n_adapters = args.usize("adapters", 4)?;
     let rounds = args.usize("rounds", 16)?;
@@ -370,7 +376,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         vec!["psoft".into(), "lora".into(), "oftv2".into(), "boft".into()]
     };
 
-    let mut opts = ServeOptions::from(sc);
+    let mut opts = ServeOptions::from(sc.clone());
     if let Some(dir) = args.get("spill-dir") {
         opts.spill_dir = Some(dir.into());
     }
@@ -428,22 +434,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sw = Stopwatch::start();
     for round in 0..rounds {
         for (a, id) in ids.iter().enumerate() {
-            let kind = match kind_sel {
-                "eval" => ReqKind::Eval,
-                "train" => ReqKind::Train(hyper),
-                _ => {
-                    if round % 2 == 0 {
-                        ReqKind::Train(hyper)
-                    } else {
-                        ReqKind::Eval
-                    }
-                }
+            let train = match kind_sel {
+                "eval" => false,
+                "train" => true,
+                _ => round % 2 == 0,
+            };
+            let req = if train {
+                Request::Train { batch: Arc::clone(&batches[a]), hyper }
+            } else {
+                Request::Eval { batch: Arc::clone(&batches[a]) }
             };
             let ticket = Ticket::new(bsz);
             // Backpressure: a full queue drains before we retry once.
-            if core.submit(*id, &batches[a], kind, &ticket).is_err() {
+            if !core.submit(*id, req.clone(), &ticket, SubmitOptions::default()).is_admitted() {
                 core.drain();
-                core.submit(*id, &batches[a], kind, &ticket)
+                core.submit(*id, req, &ticket, SubmitOptions::default())
+                    .into_result()
                     .map_err(|e| anyhow::anyhow!("submit after drain: {e}"))?;
             }
             tickets.push(ticket);
@@ -477,7 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     use psoft::config::ServeConfig;
     use psoft::peft::artifact::AdapterArtifact;
-    use psoft::runtime::serve::{ServeCore, ServeOptions, Ticket};
+    use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 
     let cfg = model_cfg_from_with(args, "decoder")?;
     let bb = Arc::new(load_or_make_backbone(args, &cfg)?);
@@ -528,7 +534,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         );
     }
 
-    let opts = ServeOptions::from(sc);
+    let opts = ServeOptions::from(sc.clone());
     let core = ServeCore::new(Arc::clone(&bb), opts);
     let id = match args.get("artifact") {
         Some(path) => {
@@ -553,8 +559,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let prompt = Arc::new(prompt);
     let ticket = Ticket::new(max_new);
     let sw = Stopwatch::start();
-    core.submit_generate(id, &prompt, max_new, greedy, &ticket)
-        .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+    core.submit(
+        id,
+        Request::Generate { prompt: Arc::clone(&prompt), max_new_tokens: max_new, greedy },
+        &ticket,
+        SubmitOptions::default(),
+    )
+    .into_result()
+    .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
 
     // Stream tokens as the scheduler advances the generation.
     let mut printed = 0usize;

@@ -1,0 +1,267 @@
+//! Open-loop trace-driven load generation for fleet-scale serve
+//! benchmarks (`benches/slo.rs`).
+//!
+//! Closed-loop load (submit, wait, submit) hides scheduling pathologies:
+//! the client slows down exactly when the server does, so queues never
+//! build. Production traffic is **open-loop** — arrivals keep coming at
+//! the offered rate whether or not the fleet keeps up — and skewed:
+//!
+//! - **Poisson arrivals**: exponential inter-arrival gaps at a
+//!   configured aggregate rate ([`LoadSpec::rate_rps`]).
+//! - **Zipf adapter popularity**: request `k`-th most popular adapter
+//!   with probability ∝ 1/k^s ([`LoadSpec::zipf_s`]) — a few hot
+//!   adapters, a long cold tail fighting for `max_resident` slots.
+//! - **Heavy-tailed lengths**: prompt and output lengths drawn from a
+//!   bounded Pareto ([`LengthDist`]) — most requests short, a fat tail
+//!   of long ones.
+//! - **Tiered traffic**: a configurable share of requests is tagged
+//!   interactive (tier 0, optionally deadline-bearing); the rest is
+//!   batch (tier 1).
+//!
+//! Everything is generated **deterministically** from
+//! [`LoadSpec::seed`] via the repo's split-stream [`Rng`], so a trace
+//! is reproducible across runs and machines; the replay loop in the
+//! bench owns the wall clock.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// Bounded-Pareto length distribution over `[min, max]` with tail
+/// exponent `alpha` (smaller ⇒ heavier tail). `alpha <= 0` degenerates
+/// to uniform over the range.
+#[derive(Clone, Copy, Debug)]
+pub struct LengthDist {
+    pub min: usize,
+    pub max: usize,
+    pub alpha: f64,
+}
+
+impl LengthDist {
+    pub fn new(min: usize, max: usize, alpha: f64) -> LengthDist {
+        LengthDist { min, max, alpha }
+    }
+
+    /// Draw one length. Inverse-CDF of the bounded Pareto: for u in
+    /// (0, 1), x = (l^-a - u (l^-a - h^-a))^(-1/a) over [l, h].
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let lo = self.min.max(1) as f64;
+        let hi = (self.max.max(self.min)).max(1) as f64;
+        if hi <= lo {
+            return self.min.max(1);
+        }
+        let u = rng.f64();
+        let x = if self.alpha > 0.0 {
+            let la = lo.powf(-self.alpha);
+            let ha = hi.powf(-self.alpha);
+            (la - u * (la - ha)).powf(-1.0 / self.alpha)
+        } else {
+            lo + u * (hi - lo)
+        };
+        (x.floor() as usize).clamp(self.min.max(1), self.max.max(self.min))
+    }
+}
+
+/// Full description of one synthetic open-loop workload.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// Fleet size: arrivals target adapter indices `0..adapters`
+    /// (rank 0 = most popular).
+    pub adapters: usize,
+    /// Aggregate offered load, requests per second.
+    pub rate_rps: f64,
+    /// Trace length in requests.
+    pub n_requests: usize,
+    /// Zipf popularity exponent (0 = uniform; ~1 = classic web skew).
+    pub zipf_s: f64,
+    /// Prompt-length distribution (tokens).
+    pub prompt_len: LengthDist,
+    /// Output-length distribution (max_new_tokens).
+    pub output_len: LengthDist,
+    /// Fraction of requests tagged interactive (tier 0); the remainder
+    /// is batch traffic (tier 1).
+    pub interactive_share: f64,
+    /// Master seed: the whole trace is a pure function of the spec.
+    pub seed: u64,
+}
+
+/// One synthetic arrival: when, which adapter, what shape, which tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Offset from trace start (open-loop: the replay clock, not the
+    /// completion of any earlier request, decides when this fires).
+    pub at: Duration,
+    /// Popularity-ranked adapter index in `0..spec.adapters`.
+    pub adapter: usize,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Decode budget (max_new_tokens).
+    pub max_new_tokens: usize,
+    /// Scheduling tier: 0 = interactive, 1 = batch.
+    pub tier: usize,
+}
+
+/// A fully materialized arrival trace, sorted by arrival time by
+/// construction.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub arrivals: Vec<Arrival>,
+}
+
+impl Trace {
+    /// Generate the deterministic trace for `spec`. Independent RNG
+    /// streams per aspect (timing / popularity / shapes / tiering), so
+    /// e.g. changing the length distribution never perturbs arrival
+    /// times.
+    pub fn generate(spec: &LoadSpec) -> Trace {
+        let mut master = Rng::new(spec.seed ^ 0x6c6f_6164_6765_6e21);
+        let mut t_rng = master.child(1);
+        let mut a_rng = master.child(2);
+        let mut s_rng = master.child(3);
+        let mut c_rng = master.child(4);
+
+        // Zipf CDF over ranks 1..=n: cum[k] = Σ_{j<=k} 1/j^s, normalized.
+        let n = spec.adapters.max(1);
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for k in 1..=n {
+            total += 1.0 / (k as f64).powf(spec.zipf_s.max(0.0));
+            cum.push(total);
+        }
+        for c in cum.iter_mut() {
+            *c /= total;
+        }
+
+        let rate = spec.rate_rps.max(1e-9);
+        let mut now_s = 0.0f64;
+        let mut arrivals = Vec::with_capacity(spec.n_requests);
+        for _ in 0..spec.n_requests {
+            // Exponential inter-arrival gap: -ln(1-u)/rate, u in [0,1).
+            let u = t_rng.f64().min(1.0 - 1e-12);
+            now_s += -(1.0 - u).ln() / rate;
+            // Zipf rank via binary search on the cumulative weights.
+            let p = a_rng.f64();
+            let adapter = cum.partition_point(|&c| c < p).min(n - 1);
+            let prompt_len = spec.prompt_len.sample(&mut s_rng);
+            let max_new_tokens = spec.output_len.sample(&mut s_rng);
+            let tier = if c_rng.f64() < spec.interactive_share { 0 } else { 1 };
+            arrivals.push(Arrival {
+                at: Duration::from_secs_f64(now_s),
+                adapter,
+                prompt_len,
+                max_new_tokens,
+                tier,
+            });
+        }
+        Trace { arrivals }
+    }
+
+    /// Total span of the trace (arrival time of the last request).
+    pub fn span(&self) -> Duration {
+        self.arrivals.last().map_or(Duration::ZERO, |a| a.at)
+    }
+
+    /// Offered load of the materialized trace in requests/second.
+    pub fn offered_rps(&self) -> f64 {
+        let span = self.span().as_secs_f64();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.arrivals.len() as f64 / span
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> LoadSpec {
+        LoadSpec {
+            adapters: 50,
+            rate_rps: 100.0,
+            n_requests: 5_000,
+            zipf_s: 1.0,
+            prompt_len: LengthDist::new(2, 8, 1.2),
+            output_len: LengthDist::new(1, 6, 1.2),
+            interactive_share: 0.5,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_in_the_seed() {
+        let a = Trace::generate(&spec());
+        let b = Trace::generate(&spec());
+        assert_eq!(a.arrivals, b.arrivals);
+        let mut other = spec();
+        other.seed = 43;
+        let c = Trace::generate(&other);
+        assert_ne!(a.arrivals, c.arrivals);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_mean_gap_matches_rate() {
+        let t = Trace::generate(&spec());
+        assert_eq!(t.arrivals.len(), 5_000);
+        for w in t.arrivals.windows(2) {
+            assert!(w[0].at <= w[1].at, "arrival times are non-decreasing");
+        }
+        // Mean inter-arrival of Exp(rate) is 1/rate; with 5k samples the
+        // sample mean lands within ±10%.
+        let mean_gap = t.span().as_secs_f64() / (t.arrivals.len() - 1) as f64;
+        let expect = 1.0 / 100.0;
+        assert!(
+            (mean_gap - expect).abs() < expect * 0.1,
+            "mean gap {mean_gap:.6}s vs expected {expect:.6}s"
+        );
+        // And the derived offered rate agrees.
+        assert!((t.offered_rps() - 100.0).abs() < 12.0);
+    }
+
+    #[test]
+    fn zipf_popularity_is_head_heavy() {
+        let t = Trace::generate(&spec());
+        let mut counts = vec![0usize; 50];
+        for a in &t.arrivals {
+            assert!(a.adapter < 50);
+            counts[a.adapter] += 1;
+        }
+        // Rank 0 beats the tail decisively and every adapter id is legal.
+        let tail_mean = counts[25..].iter().sum::<usize>() as f64 / 25.0;
+        assert!(
+            counts[0] as f64 > 5.0 * tail_mean,
+            "rank-0 count {} vs tail mean {tail_mean:.1}",
+            counts[0]
+        );
+        // With s=1 over 50 adapters, rank 0 holds ~22% of traffic.
+        let p0 = counts[0] as f64 / t.arrivals.len() as f64;
+        assert!((0.15..0.30).contains(&p0), "rank-0 share {p0:.3}");
+    }
+
+    #[test]
+    fn lengths_respect_bounds_and_skew_short() {
+        let t = Trace::generate(&spec());
+        let mut longest = 0usize;
+        let mut sum = 0usize;
+        for a in &t.arrivals {
+            assert!((2..=8).contains(&a.prompt_len));
+            assert!((1..=6).contains(&a.max_new_tokens));
+            longest = longest.max(a.prompt_len);
+            sum += a.prompt_len;
+        }
+        let mean = sum as f64 / t.arrivals.len() as f64;
+        // Heavy tail: the mean sits well below the midpoint, but the max
+        // still reaches the bound.
+        assert!(mean < 5.0, "bounded-Pareto mean {mean:.2} should skew short");
+        assert_eq!(longest, 8, "tail reaches the upper bound");
+    }
+
+    #[test]
+    fn tiers_split_roughly_by_share() {
+        let t = Trace::generate(&spec());
+        let interactive = t.arrivals.iter().filter(|a| a.tier == 0).count();
+        let share = interactive as f64 / t.arrivals.len() as f64;
+        assert!((share - 0.5).abs() < 0.05, "interactive share {share:.3}");
+        assert!(t.arrivals.iter().all(|a| a.tier <= 1));
+    }
+}

@@ -18,6 +18,7 @@
 //! independent [`NativeBackend`] built via
 //! [`NativeBackend::for_adapter`].
 
+pub mod loadgen;
 pub mod pjrt;
 pub mod serve;
 

@@ -26,15 +26,60 @@
 //!   serve and decode loops spawn no threads (pinned, together with the
 //!   zero-allocation property, by `tests/serve_alloc.rs`).
 //!
-//! # Scheduling
+//! # Scheduling & admission
 //!
-//! Round-robin over slots with queued work, at most one worker per adapter
-//! at a time (adapter state is mutable), up to `burst` consecutive
-//! requests per dispatch to amortize cache warmth. Per-adapter queue depth
-//! is capped (`queue_cap`); a full queue rejects with
-//! [`ServeError::QueueFull`] — backpressure, not unbounded buffering. This
-//! yields the fairness property the tests pin: with equal demand, adapters
-//! are serviced in rotation regardless of arrival order.
+//! All requests enter through ONE typed entry point —
+//! [`ServeCore::submit`]`(id, Request, &Ticket, SubmitOptions)` — which
+//! returns an [`Admission`] outcome instead of a bare error: `Admitted`
+//! (enqueued, ticket armed), `Rejected(ServeError)` (hard failure — queue
+//! full with observed depth, draining with remaining count, unknown
+//! adapter, malformed request, shutdown), or `Shed(ShedReason)` (turned
+//! away by load-shedding policy). A non-admitted request never touches
+//! its ticket.
+//!
+//! **Dispatch tiers.** Round-robin over slots with queued work, at most
+//! one worker per adapter at a time (adapter state is mutable), up to
+//! `burst` consecutive requests per dispatch to amortize cache warmth.
+//! With the default empty [`ServeOptions::tier_weights`] that is the
+//! whole story — pure round-robin, bit-identical dispatch traces to the
+//! pre-tier scheduler, which the fairness tests pin. With N weights
+//! configured, each request carries a tier ([`SubmitOptions::priority`],
+//! clamped to the last tier) and dispatch becomes weighted-fair over
+//! tiers: tier t receives `tier_weights[t]` consecutive dispatch units
+//! before the cursor advances, round-robin across adapters *within* a
+//! tier, and a tier with no runnable work forfeits its remaining budget
+//! (work-conserving — background tiers never block an idle scheduler).
+//! A dispatch unit's tier is its queue-front job's tier; burst formation
+//! never splits on tier boundaries.
+//!
+//! **Deadline clock & shed policy.** A request's optional deadline
+//! ([`SubmitOptions::deadline`]) is relative to its submission instant
+//! and bounds *completion*. Deadline-expired work is always failed
+//! typed, never silently dropped: a zero deadline sheds at submit; a
+//! queued request whose deadline passes is shed
+//! ([`ShedReason::DeadlineExpired`]) by a sweep that runs before every
+//! dispatch decision (lazily — an expired job deep in a queue sheds
+//! when dispatch next looks at that queue; one already on a worker runs
+//! to completion). With [`ServeOptions::shed_after_ms`] configured,
+//! admission also sheds new work ([`ShedReason::QueueDelay`]) whenever
+//! the adapter's queue-front request has already waited longer than the
+//! bound — once queue delay is past the SLO, admitting more work only
+//! converts future deadline misses into a longer queue. Per-adapter
+//! queue depth stays capped (`queue_cap`); a full queue rejects with
+//! [`ServeError::QueueFull`] carrying the observed depth — back-
+//! pressure, not unbounded buffering.
+//!
+//! **Reload lane state machine.** A submit against a spilled adapter
+//! marks its slot **Loading** and enqueues normally; it never runs the
+//! reload itself. A worker picks the reload up as a dispatch unit:
+//! `Loading (idle) → Loading (busy: artifact read + frozen re-derivation
+//! off-lock, LRU victims spilled off-lock to make budget room) →
+//! resident (queue dispatchable)`, or on failure `→ spilled (queued
+//! requests fail ArtifactFailed; the artifact stays on disk and the next
+//! submit retries)`. Dispatch never runs against a Loading slot (its
+//! backend is absent by construction), and — the point of the lane —
+//! the scheduler lock is *not* held across the reload I/O or SVD, so
+//! every other adapter keeps dispatching while one warms up.
 //!
 //! # Generation requests (resumable multi-step jobs)
 //!
@@ -173,11 +218,14 @@
 //!   **transparently reloads** it — exact to the bit, including optimizer
 //!   moments, because the artifact round-trip is exact. The budget is
 //!   best-effort: busy or queued adapters are never spilled, so a burst
-//!   across more than N adapters can transiently exceed it. Spill and
-//!   reload run under the scheduler lock (reloads re-derive frozen
-//!   tensors, which may involve an SVD) — resident adapters' *compute*
-//!   proceeds, but dispatch pauses for the duration. The warm resident
-//!   path is unaffected: a submit to a resident adapter only reads one
+//!   across more than N adapters can transiently exceed it. Spills on
+//!   the registration path run synchronously (registration already runs
+//!   SVD init on the caller's thread); **reloads run on the async reload
+//!   lane** — a worker executes the artifact read and frozen-tensor
+//!   re-derivation (possibly an SVD) *off* the scheduler lock while the
+//!   slot is marked Loading, so a cold adapter never stalls fleet
+//!   dispatch (see Scheduling & admission above). The warm resident path
+//!   is unaffected: a submit to a resident adapter only reads one
 //!   `Option` and bumps an LRU counter (`tests/serve_alloc.rs` still
 //!   pins zero allocations).
 
@@ -188,6 +236,7 @@ use crate::model::Backbone;
 use crate::peft::artifact::AdapterArtifact;
 use crate::peft::AdapterId;
 use crate::runtime::{Hyper, NativeBackend};
+use crate::util::stats::QuantileSketch;
 use std::collections::VecDeque;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -195,7 +244,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Lock acquisition that survives poisoning. A worker panic is already
 /// contained at the dispatch boundary (see `worker_loop`), but a *client*
@@ -223,9 +272,8 @@ pub enum ReqKind {
 }
 
 /// A full serve request: the two one-shot batch kinds plus resumable
-/// autoregressive generation. [`ServeCore::submit`] remains the
-/// batch-shaped convenience; [`ServeCore::submit_request`] accepts any
-/// variant.
+/// autoregressive generation. Every variant enters through the one
+/// typed entry point, [`ServeCore::submit`].
 #[derive(Clone, Debug)]
 pub enum Request {
     /// Forward-only evaluation of the batch.
@@ -244,15 +292,28 @@ pub enum Request {
 }
 
 /// Serve-layer errors. `Copy` so completed tickets can carry one without
-/// allocating.
+/// allocating. Every admission failure is a distinct variant carrying
+/// the state that caused it (observed queue depth, remaining drain
+/// count, shed reason) — callers branch on the variant, not on a log
+/// line.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServeError {
-    /// The adapter's queue is at its depth cap — backpressure; retry later.
-    QueueFull,
+    /// The adapter's queue is at its depth cap — backpressure; retry
+    /// later. Carries the observed depth and the configured cap.
+    QueueFull { depth: usize, cap: usize },
     /// No live adapter with this id.
     UnknownAdapter,
     /// The adapter was evicted before the request ran.
     Evicted,
+    /// An `evict_with(Drain)` owns this adapter: it is serving out its
+    /// queue (`queued` requests left when the submit was refused) and
+    /// accepts no new work.
+    Draining { queued: usize },
+    /// The request was turned away by load-shedding policy (deadline
+    /// expiry or queue-delay admission control) — the `Result`-shaped
+    /// form of [`Admission::Shed`], and the error a queued request's
+    /// ticket carries when its deadline expires before dispatch.
+    Shed(ShedReason),
     /// Strict [`ServeCore::evict`] refused: the adapter still has this
     /// many queued requests. Use [`ServeCore::evict_with`] to drain or
     /// reject them explicitly.
@@ -276,9 +337,16 @@ pub enum ServeError {
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            ServeError::QueueFull => f.write_str("adapter queue at depth cap"),
+            ServeError::QueueFull { depth, cap } => {
+                write!(f, "adapter queue at depth cap ({depth}/{cap}); retry later")
+            }
             ServeError::UnknownAdapter => f.write_str("unknown adapter id"),
             ServeError::Evicted => f.write_str("adapter evicted before the request ran"),
+            ServeError::Draining { queued } => write!(
+                f,
+                "adapter is draining ({queued} queued request(s) left); no new submissions"
+            ),
+            ServeError::Shed(reason) => write!(f, "request shed: {reason}"),
             ServeError::PendingRequests(n) => write!(
                 f,
                 "adapter has {n} pending request(s); evict_with(Drain) or evict_with(Reject) \
@@ -300,6 +368,106 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Why a request was shed by admission control ([`Admission::Shed`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The request's deadline passed — at submission (zero deadline) or
+    /// while it waited in the queue, before dispatch picked it up.
+    DeadlineExpired,
+    /// The adapter's queue-front request has already waited longer than
+    /// the configured [`ServeOptions::shed_after_ms`] bound: queue delay
+    /// is past the SLO, so new work is turned away immediately rather
+    /// than joining a doomed wait.
+    QueueDelay,
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedReason::DeadlineExpired => f.write_str("deadline expired before dispatch"),
+            ShedReason::QueueDelay => f.write_str("queue delay past the shed_after bound"),
+        }
+    }
+}
+
+/// Typed admission outcome of [`ServeCore::submit`]. `Copy` and
+/// allocation-free so checking it keeps the warm submit path
+/// zero-alloc.
+#[must_use = "check the admission outcome: a Rejected/Shed request never completes its ticket"]
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    /// Enqueued: the ticket was re-armed and will complete (or fail
+    /// typed) exactly once.
+    Admitted,
+    /// Hard admission failure (queue full with observed depth, unknown
+    /// or draining adapter, malformed request, shutdown). The ticket's
+    /// previous completion is left intact.
+    Rejected(ServeError),
+    /// Turned away by load-shedding policy. The ticket is untouched.
+    Shed(ShedReason),
+}
+
+impl Admission {
+    pub fn is_admitted(self) -> bool {
+        matches!(self, Admission::Admitted)
+    }
+
+    /// Collapse into a `Result` — shed outcomes map to
+    /// [`ServeError::Shed`]. This is the migration shim the deprecated
+    /// wrappers (and Result-shaped call sites) use.
+    pub fn into_result(self) -> Result<(), ServeError> {
+        match self {
+            Admission::Admitted => Ok(()),
+            Admission::Rejected(e) => Err(e),
+            Admission::Shed(r) => Err(ServeError::Shed(r)),
+        }
+    }
+}
+
+/// Per-request scheduling options for [`ServeCore::submit`]: builder-
+/// style setters over a `Default` base. `Copy` and allocation-free so a
+/// warm submit stays zero-alloc.
+///
+/// ```
+/// # use psoft::runtime::serve::SubmitOptions;
+/// # use std::time::Duration;
+/// let opts = SubmitOptions::default()
+///     .with_priority(1)
+///     .with_deadline(Duration::from_millis(250));
+/// # assert_eq!(opts.priority, 1);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SubmitOptions {
+    /// Scheduling tier, 0 = highest priority. Meaningful only when the
+    /// core runs with non-empty [`ServeOptions::tier_weights`]; values
+    /// past the last configured tier clamp to it. Ignored under the
+    /// default pure round-robin scheduler.
+    pub priority: usize,
+    /// Relative completion deadline, measured from the submission
+    /// instant. Expired-before-dispatch requests are **shed** with
+    /// [`ShedReason::DeadlineExpired`] — failed typed, never silently
+    /// dropped. `None` (default) = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the scheduling tier (see [`SubmitOptions::priority`]).
+    pub fn with_priority(mut self, priority: usize) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the completion deadline, relative to submission.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
 /// What to do with queued requests when evicting an adapter
 /// ([`ServeCore::evict_with`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -315,8 +483,8 @@ pub enum EvictMode {
     Drain,
 }
 
-/// Per-adapter service counters (cheap plain integers — updated without
-/// allocation on the warm path).
+/// Per-adapter service counters (cheap plain integers plus fixed-size
+/// quantile sketches — updated without allocation on the warm path).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AdapterStats {
     /// Requests completed (eval + train).
@@ -325,6 +493,9 @@ pub struct AdapterStats {
     pub train_steps: u64,
     /// Submissions rejected at the queue-depth cap.
     pub rejected: u64,
+    /// Requests shed by admission control or the deadline sweep
+    /// ([`Admission::Shed`] / [`ServeError::Shed`]).
+    pub shed: u64,
     /// Σ enqueue→completion nanoseconds over processed requests.
     pub total_latency_ns: u64,
     /// Worst single enqueue→completion latency.
@@ -341,6 +512,15 @@ pub struct AdapterStats {
     pub group_lanes: u64,
     /// Largest single group dispatched for this adapter.
     pub max_group_size: u64,
+    /// Streaming time-to-first-token sketch (nanoseconds): one sample
+    /// per request, recorded when its first result lands — first emitted
+    /// token for generations, enqueue→completion latency for one-shot
+    /// eval/train requests.
+    pub ttft: QuantileSketch,
+    /// Streaming per-token decode latency sketch (nanoseconds per
+    /// emitted token): one sample per generation dispatch (group service
+    /// time / tokens emitted).
+    pub tok_latency: QuantileSketch,
 }
 
 impl AdapterStats {
@@ -372,6 +552,17 @@ impl AdapterStats {
         } else {
             self.group_lanes as f64 / self.group_dispatches as f64
         }
+    }
+
+    /// Time-to-first-token quantile in milliseconds (`q` in [0, 1];
+    /// 0.0 when no samples yet).
+    pub fn ttft_ms(&self, q: f64) -> f64 {
+        self.ttft.quantile(q) / 1e6
+    }
+
+    /// Per-token decode latency quantile in milliseconds.
+    pub fn tok_latency_ms(&self, q: f64) -> f64 {
+        self.tok_latency.quantile(q) / 1e6
     }
 }
 
@@ -409,6 +600,18 @@ pub struct ServeOptions {
     /// target kind) into one batched forward, scattering per-request
     /// results back to their tickets. Off by default.
     pub coalesce_eval: bool,
+    /// Weighted-fair dispatch tiers. Empty (default) = pure round-robin,
+    /// bit-identical to the pre-tier scheduler. With N weights, tier t
+    /// gets `tier_weights[t]` consecutive dispatch units before the tier
+    /// cursor advances; [`SubmitOptions::priority`] selects a request's
+    /// tier (clamped to N − 1); a tier with no runnable work forfeits
+    /// its remaining budget.
+    pub tier_weights: Vec<u64>,
+    /// Queue-delay admission shedding: when > 0 and an adapter's
+    /// queue-front request has already waited more than this many
+    /// milliseconds, new submissions to that adapter are shed with
+    /// [`ShedReason::QueueDelay`]. 0 (default) disables.
+    pub shed_after_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -423,6 +626,8 @@ impl Default for ServeOptions {
             spill_dir: None,
             decode_batch: 4,
             coalesce_eval: false,
+            tier_weights: Vec::new(),
+            shed_after_ms: 0,
         }
     }
 }
@@ -438,6 +643,8 @@ impl From<crate::config::ServeConfig> for ServeOptions {
             max_resident: sc.max_resident,
             decode_batch: sc.decode_batch,
             coalesce_eval: sc.coalesce_eval,
+            tier_weights: sc.tier_weights.iter().map(|&w| w as u64).collect(),
+            shed_after_ms: sc.shed_after_ms,
             ..ServeOptions::default()
         }
     }
@@ -452,6 +659,11 @@ struct TicketState {
     /// after every dispatch burst, before the request completes).
     tokens: Vec<i32>,
     error: Option<ServeError>,
+    /// Re-arm generation counter. `arm()` bumps it (and notifies), so a
+    /// `wait_tokens` caller that raced a failure + re-arm observes the
+    /// counter change instead of re-sleeping on a cleared token buffer —
+    /// the lost-wakeup window the counter closes.
+    gen: u64,
 }
 
 struct TicketInner {
@@ -486,6 +698,7 @@ impl Ticket {
                     preds: Vec::with_capacity(capacity),
                     tokens: Vec::with_capacity(capacity),
                     error: None,
+                    gen: 0,
                 }),
                 cv: Condvar::new(),
             }),
@@ -530,12 +743,18 @@ impl Ticket {
         relock(&self.inner.state).tokens.len()
     }
 
-    /// Block until at least `n` tokens have streamed or the request
-    /// finished; returns how many tokens are available (which may be less
-    /// than `n` only when the generation completed or failed early).
+    /// Block until at least `n` tokens have streamed, the request
+    /// finished, or the ticket was re-armed for a new request; returns
+    /// how many tokens are available (which may be less than `n` only
+    /// when the generation completed, failed early, or the ticket moved
+    /// on to a new request). The generation-counter re-check before
+    /// every re-sleep closes the lost-wakeup window where a worker
+    /// panic fails the request and a re-submit clears the token buffer
+    /// between this thread's wakeup and its next wait.
     pub fn wait_tokens(&self, n: usize) -> usize {
         let mut ts = relock(&self.inner.state);
-        while ts.tokens.len() < n && !ts.done {
+        let gen0 = ts.gen;
+        while ts.tokens.len() < n && !ts.done && ts.gen == gen0 {
             ts = rewait(&self.inner.cv, ts);
         }
         ts.tokens.len()
@@ -547,6 +766,12 @@ impl Ticket {
         ts.error = None;
         ts.preds.clear();
         ts.tokens.clear();
+        ts.gen = ts.gen.wrapping_add(1);
+        drop(ts);
+        // Wake stale `wait_tokens` waiters from the previous request so
+        // they observe the generation change instead of sleeping forever
+        // on a buffer that was just cleared.
+        self.inner.cv.notify_all();
     }
 }
 
@@ -611,6 +836,9 @@ struct GenJob {
     /// dispatch, carried here between dispatches (any worker can resume
     /// the lane), and returned to a pool on completion.
     lane: Option<DecodeLane>,
+    /// Tokens emitted across all dispatches so far — 0 until the first
+    /// token lands, which is the TTFT sampling point.
+    emitted: usize,
 }
 
 // The Gen variant is deliberately inline (not boxed): a queued job is a
@@ -626,6 +854,12 @@ struct Job {
     kind: JobKind,
     ticket: Arc<TicketInner>,
     enqueued: Instant,
+    /// Scheduling tier ([`SubmitOptions::priority`]); ignored under the
+    /// default pure round-robin scheduler.
+    tier: usize,
+    /// Absolute completion deadline (submission instant + the relative
+    /// [`SubmitOptions::deadline`]); `None` = no deadline.
+    deadline: Option<Instant>,
 }
 
 struct Slot {
@@ -649,9 +883,15 @@ struct Slot {
     draining: bool,
     /// Spilled-to-disk artifact. Invariant for live slots: `spill` is
     /// `Some` iff the state is neither resident (`backend`) nor running
-    /// (`busy`); spilled slots always have an empty queue (submits reload
-    /// before enqueueing).
+    /// compute (`busy` with `!loading`). A spilled slot with queued work
+    /// is `loading` — awaiting the async reload lane.
     spill: Option<PathBuf>,
+    /// Reload-lane flag: a submit against a spilled adapter marks the
+    /// slot Loading and enqueues; a worker picks the reload up as a
+    /// dispatch unit and runs the artifact read + re-derivation OFF the
+    /// scheduler lock (`busy` is set for the duration). Cleared when the
+    /// backend is installed (or the reload fails).
+    loading: bool,
     /// Logical LRU timestamp (scheduler clock at the last submit).
     last_used: u64,
     /// Size of this adapter's artifact encoding, cached at registration
@@ -678,6 +918,16 @@ struct ServeState {
     /// truncated at `trace_cap` entries.
     trace: Vec<AdapterId>,
     trace_cap: usize,
+    /// Weighted-fair tier weights (copied from [`ServeOptions`]); empty
+    /// = pure round-robin.
+    tier_weights: Vec<u64>,
+    /// Tier currently holding the dispatch budget.
+    tier_cursor: usize,
+    /// Remaining dispatch units in the current tier's budget.
+    tier_left: u64,
+    /// Sticky flag: set the first time a deadline-carrying request is
+    /// admitted, so deadline-free fleets never pay for the expiry sweep.
+    has_deadlines: bool,
 }
 
 struct Shared {
@@ -734,6 +984,10 @@ impl ServeCore {
                 shutdown: false,
                 trace: Vec::with_capacity(opts.trace_cap),
                 trace_cap: opts.trace_cap,
+                tier_weights: opts.tier_weights.clone(),
+                tier_cursor: 0,
+                tier_left: opts.tier_weights.first().copied().unwrap_or(1).max(1),
+                has_deadlines: false,
             }),
             work: Condvar::new(),
             idle: Condvar::new(),
@@ -741,12 +995,17 @@ impl ServeCore {
         let workers = (0..opts.workers.max(1))
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                let burst = opts.burst.max(1);
-                let decode_batch = opts.decode_batch.max(1);
-                let coalesce_eval = opts.coalesce_eval;
+                let cfg = WorkerCfg {
+                    burst: opts.burst.max(1),
+                    decode_batch: opts.decode_batch.max(1),
+                    coalesce_eval: opts.coalesce_eval,
+                    backbone: Arc::clone(&backbone),
+                    spill_dir: spill_dir.clone(),
+                    max_resident: opts.max_resident,
+                };
                 thread::Builder::new()
                     .name(format!("psoft-serve-{i}"))
-                    .spawn(move || worker_loop(&shared, burst, decode_batch, coalesce_eval))
+                    .spawn(move || worker_loop(&shared, cfg))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -805,6 +1064,7 @@ impl ServeCore {
             gens_inflight: 0,
             draining: false,
             spill: None,
+            loading: false,
             last_used: st.clock,
             artifact_bytes,
             stats: AdapterStats::default(),
@@ -898,6 +1158,7 @@ impl ServeCore {
         }
         st.slots[idx].live = false;
         st.slots[idx].draining = false;
+        st.slots[idx].loading = false;
         // Unqueue the not-yet-started jobs; their tickets are failed only
         // after the scheduler lock is released (ticket locks are never
         // taken under the state lock — see the worker's completion path).
@@ -942,12 +1203,16 @@ impl ServeCore {
                         // to live+spilled) so a transient I/O failure is
                         // retryable instead of stranding the state. We
                         // held the lock continuously since live=false, so
-                        // nothing observed the intermediate state (a
-                        // spilled slot is never busy and its queue is
-                        // empty — `failed` is empty here).
+                        // nothing observed the intermediate state. A
+                        // Loading slot may have had queued jobs — fail
+                        // them (outside the lock) rather than restoring a
+                        // queue the caller believed empty.
                         st.slots[idx].spill = Some(path);
                         st.slots[idx].live = true;
-                        debug_assert!(failed.is_empty(), "spilled slots have empty queues");
+                        drop(st);
+                        for job in failed {
+                            fail(&job.ticket, ServeError::Evicted);
+                        }
                         return Err(ServeError::ArtifactFailed);
                     }
                 }
@@ -1044,7 +1309,7 @@ impl ServeCore {
             let resident = st
                 .slots
                 .iter()
-                .filter(|s| s.live && (s.backend.is_some() || s.busy))
+                .filter(|s| s.live && (s.backend.is_some() || (s.busy && !s.loading)))
                 .count();
             if resident <= budget {
                 return;
@@ -1101,76 +1366,37 @@ impl ServeCore {
         }
     }
 
-    /// Reload a spilled slot's state from disk (called from `submit` with
-    /// the scheduler lock held), making room under the budget first.
-    fn reload_slot(
-        &self,
-        st: &mut MutexGuard<'_, ServeState>,
-        idx: usize,
-    ) -> anyhow::Result<()> {
-        self.spill_down_to(st, self.opts.max_resident.saturating_sub(1), Some(idx));
-        let path = st.slots[idx].spill.clone().expect("reload target is spilled");
-        let backend = self.load_artifact(&path)?;
-        st.slots[idx].backend = Some(backend);
-        st.slots[idx].spill = None;
-        remove_spill_file(&path, "reload");
-        Ok(())
-    }
-
-    /// Enqueue one batch request for `id` — the eval/train convenience
-    /// over [`ServeCore::submit_request`].
-    pub fn submit(
-        &self,
-        id: AdapterId,
-        batch: &Arc<Batch>,
-        kind: ReqKind,
-        ticket: &Ticket,
-    ) -> Result<(), ServeError> {
-        let req = match kind {
-            ReqKind::Eval => Request::Eval { batch: Arc::clone(batch) },
-            ReqKind::Train(hyper) => Request::Train { batch: Arc::clone(batch), hyper },
-        };
-        self.submit_request(id, req, ticket)
-    }
-
-    /// Enqueue one generation request — the decode convenience over
-    /// [`ServeCore::submit_request`]. Tokens stream into `ticket` as the
-    /// generation advances.
-    pub fn submit_generate(
-        &self,
-        id: AdapterId,
-        prompt: &Arc<Vec<i32>>,
-        max_new_tokens: usize,
-        greedy: bool,
-        ticket: &Ticket,
-    ) -> Result<(), ServeError> {
-        self.submit_request(
-            id,
-            Request::Generate { prompt: Arc::clone(prompt), max_new_tokens, greedy },
-            ticket,
-        )
-    }
-
-    /// Enqueue one request for `id`, re-arming `ticket` to receive the
-    /// result. The ticket is re-armed only once the request is accepted —
-    /// a failed submit leaves the ticket's previous completion intact.
+    /// Enqueue one request for `id` — the single typed entry point for
+    /// eval, train, and generation work — re-arming `ticket` to receive
+    /// the result. Returns an [`Admission`] outcome; the ticket is
+    /// re-armed only on [`Admission::Admitted`] — a rejected or shed
+    /// submit leaves the ticket's previous completion intact.
+    ///
     /// Zero-allocation on the warm resident path: batches and prompts
-    /// travel as `Arc` clones and the queue is pre-sized. A submit
-    /// against a **spilled** adapter transparently reloads it from disk
-    /// first (spilling the LRU resident if the budget requires), so
-    /// callers never observe eviction-to-disk except as latency.
+    /// travel as `Arc` clones, `SubmitOptions`/`Admission` are `Copy`,
+    /// and the queue is pre-sized. A submit against a **spilled**
+    /// adapter marks the slot Loading and enqueues — a worker reloads
+    /// the artifact on the async reload lane, off the scheduler lock, so
+    /// callers never observe eviction-to-disk except as latency and a
+    /// cold adapter never stalls fleet dispatch.
+    ///
+    /// `opts` carries per-request scheduling state: a tier for the
+    /// weighted-fair scheduler and/or a relative completion deadline —
+    /// see the module docs' Scheduling & admission section for the shed
+    /// semantics.
     ///
     /// Generation requests are validated against the shared backbone
     /// before anything is enqueued: decoder architecture, non-empty
     /// in-vocab prompt, and `prompt.len() + max_new_tokens ≤ max_seq`
     /// (the KV-cache budget) — violations return
-    /// [`ServeError::InvalidRequest`].
-    pub fn submit_request(
+    /// `Admission::Rejected(ServeError::InvalidRequest)`.
+    pub fn submit(
         &self,
         id: AdapterId,
         req: Request,
         ticket: &Ticket,
-    ) -> Result<(), ServeError> {
+        opts: SubmitOptions,
+    ) -> Admission {
         let kind = match req {
             Request::Eval { batch } => JobKind::Batch { batch, req: ReqKind::Eval },
             Request::Train { batch, hyper } => {
@@ -1183,38 +1409,69 @@ impl ServeCore {
                     || prompt.len() + max_new_tokens > cfg.max_seq
                     || prompt.iter().any(|&t| t < 0 || t as usize >= cfg.vocab_size)
                 {
-                    return Err(ServeError::InvalidRequest);
+                    return Admission::Rejected(ServeError::InvalidRequest);
                 }
                 let stream = native::DecodeStream::new(&prompt);
-                JobKind::Gen(GenJob { prompt, max_new_tokens, greedy, stream, lane: None })
+                JobKind::Gen(GenJob {
+                    prompt,
+                    max_new_tokens,
+                    greedy,
+                    stream,
+                    lane: None,
+                    emitted: 0,
+                })
             }
         };
+        let now = Instant::now();
         let mut st = relock(&self.shared.state);
         if st.shutdown {
-            return Err(ServeError::ShuttingDown);
+            return Admission::Rejected(ServeError::ShuttingDown);
         }
         let cap = self.opts.queue_cap.max(1);
-        let idx = st
-            .slots
-            .iter()
-            .position(|s| s.live && s.id == id)
-            .ok_or(ServeError::UnknownAdapter)?;
+        let Some(idx) = st.slots.iter().position(|s| s.live && s.id == id) else {
+            return Admission::Rejected(ServeError::UnknownAdapter);
+        };
         if st.slots[idx].draining {
-            // Evict-with-drain in progress: behaves as already evicted
-            // for new work.
-            return Err(ServeError::Evicted);
+            // Evict-with-drain in progress: refuses new work with the
+            // remaining drain count.
+            return Admission::Rejected(ServeError::Draining {
+                queued: st.slots[idx].queue.len(),
+            });
+        }
+        // A zero (or elapsed-at-submit) deadline can never be met: shed
+        // typed instead of queueing doomed work.
+        if opts.deadline.map_or(false, |d| d.is_zero()) {
+            st.slots[idx].stats.shed += 1;
+            return Admission::Shed(ShedReason::DeadlineExpired);
         }
         if st.slots[idx].queue.len() >= cap {
             st.slots[idx].stats.rejected += 1;
-            return Err(ServeError::QueueFull);
+            return Admission::Rejected(ServeError::QueueFull {
+                depth: st.slots[idx].queue.len(),
+                cap,
+            });
+        }
+        // Queue-delay admission shedding: if the queue front has already
+        // waited past the bound, the adapter is behind its SLO — turn
+        // new work away now rather than queueing a future deadline miss.
+        if self.opts.shed_after_ms > 0 {
+            let bound = Duration::from_millis(self.opts.shed_after_ms);
+            let delayed = st.slots[idx]
+                .queue
+                .front()
+                .map_or(false, |j| now.duration_since(j.enqueued) > bound);
+            if delayed {
+                st.slots[idx].stats.shed += 1;
+                return Admission::Shed(ShedReason::QueueDelay);
+            }
         }
         st.clock += 1;
         st.slots[idx].last_used = st.clock;
         if st.slots[idx].spill.is_some() {
-            if let Err(e) = self.reload_slot(&mut st, idx) {
-                crate::warn_log!("submit {id}: artifact reload failed: {e:#}");
-                return Err(ServeError::ArtifactFailed);
-            }
+            // Async reload lane: mark Loading and fall through to the
+            // enqueue — a worker runs the artifact read + re-derivation
+            // off the scheduler lock (see `run_reload`).
+            st.slots[idx].loading = true;
         } else if self.opts.max_resident != 0 {
             // Already resident: opportunistically re-enforce the budget so
             // adapters left resident by an earlier concurrent burst (no
@@ -1222,6 +1479,10 @@ impl ServeCore {
             // default unlimited budget this branch is a no-op, keeping the
             // warm resident path allocation-free.
             self.spill_down_to(&mut st, self.opts.max_resident, Some(idx));
+        }
+        let deadline = opts.deadline.map(|d| now + d);
+        if deadline.is_some() {
+            st.has_deadlines = true;
         }
         // Arm under the state lock: workers need that lock to dispatch,
         // so the job cannot complete before it is armed. (No path ever
@@ -1231,12 +1492,72 @@ impl ServeCore {
         st.slots[idx].queue.push_back(Job {
             kind,
             ticket: Arc::clone(&ticket.inner),
-            enqueued: Instant::now(),
+            enqueued: now,
+            tier: opts.priority,
+            deadline,
         });
         st.queued += 1;
         drop(st);
         self.shared.work.notify_one();
-        Ok(())
+        Admission::Admitted
+    }
+
+    /// Enqueue one batch request — the pre-unification eval/train entry
+    /// point, now a thin shim over [`ServeCore::submit`].
+    #[deprecated(
+        since = "0.7.0",
+        note = "use `submit(id, Request::{Eval, Train}{..}, ticket, SubmitOptions::default())`"
+    )]
+    pub fn submit_batch(
+        &self,
+        id: AdapterId,
+        batch: &Arc<Batch>,
+        kind: ReqKind,
+        ticket: &Ticket,
+    ) -> Result<(), ServeError> {
+        let req = match kind {
+            ReqKind::Eval => Request::Eval { batch: Arc::clone(batch) },
+            ReqKind::Train(hyper) => Request::Train { batch: Arc::clone(batch), hyper },
+        };
+        self.submit(id, req, ticket, SubmitOptions::default()).into_result()
+    }
+
+    /// Enqueue one generation request — the pre-unification decode entry
+    /// point, now a thin shim over [`ServeCore::submit`].
+    #[deprecated(
+        since = "0.7.0",
+        note = "use `submit(id, Request::Generate{..}, ticket, SubmitOptions::default())`"
+    )]
+    pub fn submit_generate(
+        &self,
+        id: AdapterId,
+        prompt: &Arc<Vec<i32>>,
+        max_new_tokens: usize,
+        greedy: bool,
+        ticket: &Ticket,
+    ) -> Result<(), ServeError> {
+        self.submit(
+            id,
+            Request::Generate { prompt: Arc::clone(prompt), max_new_tokens, greedy },
+            ticket,
+            SubmitOptions::default(),
+        )
+        .into_result()
+    }
+
+    /// Enqueue any request — the pre-unification typed entry point, now
+    /// a thin shim over [`ServeCore::submit`].
+    #[deprecated(
+        since = "0.7.0",
+        note = "use `submit(id, req, ticket, SubmitOptions::default())`"
+    )]
+    pub fn submit_request(
+        &self,
+        id: AdapterId,
+        req: Request,
+        ticket: &Ticket,
+    ) -> Result<(), ServeError> {
+        self.submit(id, req, ticket, SubmitOptions::default()).into_result()
     }
 
     /// Block until every queued and in-flight request has completed.
@@ -1303,19 +1624,22 @@ impl ServeCore {
     }
 
     /// Whether the adapter's state is currently in memory (`false` ⇒
-    /// spilled to disk awaiting a transparent reload).
+    /// spilled to disk, possibly mid-reload on the async reload lane).
     pub fn resident(&self, id: AdapterId) -> Option<bool> {
         let st = relock(&self.shared.state);
         st.slots
             .iter()
             .find(|s| s.live && s.id == id)
-            .map(|s| s.backend.is_some() || s.busy)
+            .map(|s| s.backend.is_some() || (s.busy && !s.loading))
     }
 
     /// Number of adapters whose state is resident in memory.
     pub fn num_resident(&self) -> usize {
         let st = relock(&self.shared.state);
-        st.slots.iter().filter(|s| s.live && (s.backend.is_some() || s.busy)).count()
+        st.slots
+            .iter()
+            .filter(|s| s.live && (s.backend.is_some() || (s.busy && !s.loading)))
+            .count()
     }
 
     /// The directory spilled artifacts are written to.
@@ -1356,16 +1680,101 @@ impl Drop for ServeCore {
     }
 }
 
-fn next_runnable(st: &ServeState) -> Option<usize> {
+/// Round-robin scan for a runnable slot, optionally restricted to one
+/// tier (a dispatch unit's tier is its queue-front job's tier, clamped
+/// to the configured tier count). Loading slots are never runnable —
+/// their backend is absent by construction.
+fn rr_scan(st: &ServeState, tier: Option<usize>) -> Option<usize> {
     let n = st.slots.len();
+    let nt = st.tier_weights.len();
     for k in 0..n {
         let i = (st.rr + k) % n;
         let s = &st.slots[i];
-        if s.live && !s.busy && s.backend.is_some() && !s.queue.is_empty() {
+        if !(s.live && !s.busy && s.backend.is_some() && !s.queue.is_empty()) {
+            continue;
+        }
+        if let Some(t) = tier {
+            let front_tier = s.queue.front().map_or(0, |j| j.tier.min(nt.saturating_sub(1)));
+            if front_tier != t {
+                continue;
+            }
+        }
+        return Some(i);
+    }
+    None
+}
+
+/// Pick the next slot to dispatch. With the default empty
+/// `tier_weights` this IS the pre-tier pure round-robin scan —
+/// bit-identical dispatch traces, no budget bookkeeping touched. With N
+/// weights, tier `tier_cursor` spends its budget (`tier_left` dispatch
+/// units) first; a tier with no runnable work forfeits the remainder
+/// (work-conserving), and budget is only consumed on real dispatches.
+fn next_runnable(st: &mut ServeState) -> Option<usize> {
+    if st.tier_weights.is_empty() {
+        return rr_scan(st, None);
+    }
+    let nt = st.tier_weights.len();
+    for k in 0..nt {
+        let t = (st.tier_cursor + k) % nt;
+        if let Some(i) = rr_scan(st, Some(t)) {
+            if k > 0 {
+                // Intervening tiers had nothing runnable: their budget
+                // is forfeit, tier t starts a fresh one.
+                st.tier_cursor = t;
+                st.tier_left = st.tier_weights[t].max(1);
+            }
+            st.tier_left -= 1;
+            if st.tier_left == 0 {
+                st.tier_cursor = (st.tier_cursor + 1) % nt;
+                st.tier_left = st.tier_weights[st.tier_cursor].max(1);
+            }
             return Some(i);
         }
     }
     None
+}
+
+/// Pick a Loading slot awaiting its async reload (idle, state on disk).
+fn next_reload(st: &ServeState) -> Option<usize> {
+    st.slots
+        .iter()
+        .position(|s| s.live && !s.busy && s.loading && s.backend.is_none() && s.spill.is_some())
+}
+
+/// Deadline sweep: shed every queued job whose deadline has passed,
+/// failing its ticket typed ([`ServeError::Shed`]) — never a silent
+/// drop. Runs before every dispatch decision, but only once a
+/// deadline-carrying request has ever been admitted
+/// (`ServeState::has_deadlines`), so deadline-free fleets pay nothing.
+/// Jobs already on a worker run to completion. Ticket locks nest under
+/// the state lock (same order as `submit`'s arm), so failing under the
+/// sweep is deadlock-free.
+fn shed_expired(st: &mut ServeState, now: Instant) {
+    let mut shed_total = 0usize;
+    for i in 0..st.slots.len() {
+        let slot = &mut st.slots[i];
+        if !slot.live {
+            continue;
+        }
+        // Only the queue front is ever dispatched next, but an expired
+        // job can sit behind a live one — scan the whole queue so a
+        // deep expired job sheds now, not after everything ahead of it.
+        let mut j = 0;
+        while j < slot.queue.len() {
+            let expired =
+                slot.queue[j].deadline.map_or(false, |d| now >= d);
+            if expired {
+                let job = slot.queue.remove(j).unwrap();
+                slot.stats.shed += 1;
+                shed_total += 1;
+                fail(&job.ticket, ServeError::Shed(ShedReason::DeadlineExpired));
+            } else {
+                j += 1;
+            }
+        }
+    }
+    st.queued -= shed_total;
 }
 
 /// What one dispatch unit holds (see the module docs' Continuous
@@ -1402,7 +1811,165 @@ fn coalesces_with(j: &Job, seq0: usize, disc0: std::mem::Discriminant<Target>) -
         .unwrap_or(false)
 }
 
-fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval: bool) {
+/// Per-worker configuration, cloned into each worker thread at core
+/// construction. Carries the backbone and spill knobs the async reload
+/// lane needs to run artifact I/O without a `ServeCore` reference.
+struct WorkerCfg {
+    burst: usize,
+    decode_batch: usize,
+    coalesce_eval: bool,
+    backbone: Arc<Backbone>,
+    spill_dir: PathBuf,
+    max_resident: usize,
+}
+
+/// What one selection decided: run compute for a dispatched batch, or
+/// run an async artifact reload for a Loading slot. (The size asymmetry
+/// is fine — exactly one `Unit` exists per worker at a time.)
+#[allow(clippy::large_enum_variant)]
+enum Unit {
+    Compute(NativeBackend, DispatchMode),
+    Reload(PathBuf),
+}
+
+/// Async reload lane: bring a Loading slot's state back from disk with
+/// the scheduler lock released across the artifact read and frozen-
+/// tensor re-derivation (the SVD), so every other adapter keeps
+/// dispatching while this one warms up. The slot is `busy` for the
+/// duration (dispatch, evict and checkpoint all wait on `busy`).
+///
+/// Room is made under the resident budget FIRST, also off-lock: the LRU
+/// idle victim is marked busy under the lock, serialized outside it,
+/// and published back. On reload failure the slot returns to spilled
+/// (artifact kept — the next submit retries) and its queued requests
+/// fail typed with [`ServeError::ArtifactFailed`].
+fn run_reload(shared: &Shared, cfg: &WorkerCfg, idx: usize, path: PathBuf) {
+    // Phase 1: spill LRU victims until the reload target fits the
+    // budget (its own slot counts once resident, hence `- 1`).
+    if cfg.max_resident != 0 {
+        loop {
+            let victim = {
+                let mut st = relock(&shared.state);
+                let resident = st
+                    .slots
+                    .iter()
+                    .filter(|s| s.live && (s.backend.is_some() || (s.busy && !s.loading)))
+                    .count();
+                if resident < cfg.max_resident {
+                    None
+                } else {
+                    let v = st
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, s)| {
+                            *i != idx
+                                && s.live
+                                && !s.busy
+                                && !s.draining
+                                && s.queue.is_empty()
+                                && s.backend.as_ref().map_or(false, |b| b.artifact_exportable())
+                        })
+                        .min_by_key(|(_, s)| s.last_used)
+                        .map(|(i, _)| i);
+                    match v {
+                        Some(v) => {
+                            let backend =
+                                st.slots[v].backend.take().expect("spill victim is resident");
+                            st.slots[v].busy = true;
+                            let label = st.slots[v].label.clone();
+                            let vpath = cfg
+                                .spill_dir
+                                .join(format!("adapter_{}.psoftad", st.slots[v].id.0));
+                            Some((v, backend, label, vpath))
+                        }
+                        None => None,
+                    }
+                }
+            };
+            let Some((v, backend, label, vpath)) = victim else { break };
+            let written =
+                backend.to_artifact(&label, &cfg.backbone).and_then(|art| art.write_to(&vpath));
+            let mut st = relock(&shared.state);
+            match written {
+                Ok(bytes) => {
+                    st.slots[v].spill = Some(vpath);
+                    st.slots[v].artifact_bytes = bytes;
+                    st.slots[v].busy = false;
+                }
+                Err(e) => {
+                    crate::warn_log!(
+                        "reload lane: spilling {} failed ({e:#}); keeping it in memory",
+                        st.slots[v].id
+                    );
+                    st.slots[v].backend = Some(backend);
+                    st.slots[v].busy = false;
+                    drop(st);
+                    shared.work.notify_all();
+                    shared.idle.notify_all();
+                    // Best-effort budget: stop trying, reload over-budget.
+                    break;
+                }
+            }
+            drop(st);
+            shared.work.notify_all();
+            shared.idle.notify_all();
+        }
+    }
+    // Phase 2: the reload itself — artifact read + validation + frozen
+    // re-derivation, all off-lock. Panics are contained like compute
+    // panics, but the adapter is NOT retired: its exact state is still
+    // safe on disk, so the slot just returns to spilled.
+    let loaded = catch_unwind(AssertUnwindSafe(|| {
+        let art = AdapterArtifact::read_from(&path)?;
+        anyhow::Ok(NativeBackend::from_artifact(&cfg.backbone, &art)?)
+    }));
+    match loaded {
+        Ok(Ok(backend)) => {
+            let mut st = relock(&shared.state);
+            // Install unconditionally — if the slot was retired while we
+            // loaded (concurrent evict waits on `busy` and will take the
+            // backend; panic-retire of a Loading slot cannot happen, its
+            // compute never ran), the waiter receives the state.
+            st.slots[idx].backend = Some(backend);
+            st.slots[idx].spill = None;
+            st.slots[idx].loading = false;
+            st.slots[idx].busy = false;
+            drop(st);
+            remove_spill_file(&path, "async-reload");
+        }
+        Ok(Err(e)) => {
+            crate::warn_log!("async reload from {} failed: {e:#}", path.display());
+            fail_reload(shared, idx);
+        }
+        Err(_) => {
+            crate::warn_log!("async reload from {} panicked", path.display());
+            fail_reload(shared, idx);
+        }
+    }
+    shared.work.notify_all();
+    shared.idle.notify_all();
+}
+
+/// Failure tail of [`run_reload`]: back to spilled (retryable — the
+/// artifact is kept on disk), queued requests fail typed.
+fn fail_reload(shared: &Shared, idx: usize) {
+    let mut st = relock(&shared.state);
+    st.slots[idx].loading = false;
+    st.slots[idx].busy = false;
+    let mut failed: Vec<Job> = Vec::with_capacity(st.slots[idx].queue.len());
+    while let Some(job) = st.slots[idx].queue.pop_front() {
+        st.queued -= 1;
+        failed.push(job);
+    }
+    drop(st);
+    for job in failed {
+        fail(&job.ticket, ServeError::ArtifactFailed);
+    }
+}
+
+fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
+    let (burst, decode_batch, coalesce_eval) = (cfg.burst, cfg.decode_batch, cfg.coalesce_eval);
     let mut ws = Workspace::new();
     let mut jobs: Vec<Job> = Vec::with_capacity(burst.max(decode_batch));
     // Warm per-lane K/V rings: attached to a generation on its first
@@ -1418,6 +1985,10 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
         (0..decode_batch).map(|_| Vec::with_capacity(burst)).collect();
     // Unfinished generations to push back to the queue front as a block.
     let mut requeue: Vec<Job> = Vec::with_capacity(decode_batch);
+    // TTFT samples (ns) gathered during the current dispatch, recorded
+    // into the slot's sketch at publish time. Pre-sized for the largest
+    // dispatch unit, so warm dispatches never allocate.
+    let mut ttft_samples: Vec<u64> = Vec::with_capacity(burst.max(decode_batch));
     // Coalesced-eval scratch: the merged batch (vectors reused across
     // dispatches) and the per-request example counts.
     let mut merged = Batch {
@@ -1429,18 +2000,31 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
     };
     let mut spans: Vec<usize> = Vec::with_capacity(decode_batch);
     loop {
-        // Dispatch: pick the next runnable slot round-robin, then form a
-        // batch from the queue front — a generation GROUP (≤ decode_batch
-        // lanes, advanced ≤ `burst` lockstep steps, re-enqueued at the
-        // front if unfinished), a coalesced eval group, or a one-shot
-        // burst. One dispatch consumes one burst quota whatever its
-        // shape, which is what keeps round-robin fairness intact
-        // mid-generation and across group sizes.
-        let (slot_idx, mut backend, mode) = {
+        // Dispatch: shed expired deadlines, prefer a pending async
+        // reload, then pick the next runnable slot (round-robin, or
+        // weighted-fair over tiers) and form a batch from the queue
+        // front — a generation GROUP (≤ decode_batch lanes, advanced ≤
+        // `burst` lockstep steps, re-enqueued at the front if
+        // unfinished), a coalesced eval group, or a one-shot burst. One
+        // dispatch consumes one burst quota whatever its shape, which is
+        // what keeps round-robin fairness intact mid-generation and
+        // across group sizes.
+        let (slot_idx, unit) = {
             let mut st = relock(&shared.state);
             loop {
                 if !st.paused {
-                    if let Some(idx) = next_runnable(&st) {
+                    if st.has_deadlines {
+                        shed_expired(&mut st, Instant::now());
+                    }
+                    if let Some(idx) = next_reload(&st) {
+                        // Async reload lane: claim the slot (busy) and
+                        // run the artifact I/O outside this lock.
+                        st.slots[idx].busy = true;
+                        let path =
+                            st.slots[idx].spill.clone().expect("loading slot has a spill path");
+                        break (idx, Unit::Reload(path));
+                    }
+                    if let Some(idx) = next_runnable(&mut st) {
                         let n = st.slots.len();
                         st.rr = (idx + 1) % n;
                         let id = st.slots[idx].id;
@@ -1516,7 +2100,7 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                         }
                         let backend =
                             st.slots[idx].backend.take().expect("runnable slot has its backend");
-                        break (idx, backend, mode);
+                        break (idx, Unit::Compute(backend, mode));
                     }
                 }
                 if st.shutdown && st.queued == 0 {
@@ -1524,6 +2108,13 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                 }
                 st = rewait(&shared.work, st);
             }
+        };
+        let (mut backend, mode) = match unit {
+            Unit::Reload(path) => {
+                run_reload(shared, &cfg, slot_idx, path);
+                continue;
+            }
+            Unit::Compute(backend, mode) => (backend, mode),
         };
 
         // Service the dispatch unit outside the scheduler lock; other
@@ -1541,6 +2132,10 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
         let mut max_latency_ns = 0u64;
         let mut group_dispatches = 0u64;
         let mut group_lanes = 0u64;
+        // Mean per-emitted-token service time of this dispatch (gen
+        // groups only); one sketch sample per dispatch.
+        let mut per_token_ns = 0u64;
+        ttft_samples.clear();
         // Ticket of the job being finalized right now (failed on panic).
         let mut current: Option<Arc<TicketInner>> = None;
         let panicked = catch_unwind(AssertUnwindSafe(|| match mode {
@@ -1573,7 +2168,8 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                 }
                 // ≤ `burst` lockstep steps for the whole group.
                 gc.advance(&backend.model, burst, &mut ws, &mut fresh[..n_group]);
-                service_ns += svc.elapsed().as_nanos() as u64;
+                let group_svc = svc.elapsed().as_nanos() as u64;
+                service_ns += group_svc;
                 // Leave the group in join order: stream fresh tokens,
                 // complete finished lanes (rings back to the pool),
                 // collect unfinished ones for the front re-enqueue.
@@ -1589,6 +2185,11 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                     let emitted = &fresh[li];
                     tokens_generated += emitted.len() as u64;
                     if !emitted.is_empty() {
+                        if gen.emitted == 0 {
+                            // First token of this generation: its TTFT.
+                            ttft_samples.push(job.enqueued.elapsed().as_nanos() as u64);
+                        }
+                        gen.emitted += emitted.len();
                         stream_tokens(&job.ticket, emitted);
                     }
                     if job_done {
@@ -1603,6 +2204,9 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                         requeue.push(job);
                     }
                     current = None;
+                }
+                if tokens_generated > 0 {
+                    per_token_ns = group_svc / tokens_generated;
                 }
             }
             DispatchMode::EvalGroup => {
@@ -1665,6 +2269,7 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                     let lat = job.enqueued.elapsed().as_nanos() as u64;
                     latency_ns += lat;
                     max_latency_ns = max_latency_ns.max(lat);
+                    ttft_samples.push(lat);
                     current = None;
                 }
             }
@@ -1695,6 +2300,7 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                     let lat = job.enqueued.elapsed().as_nanos() as u64;
                     latency_ns += lat;
                     max_latency_ns = max_latency_ns.max(lat);
+                    ttft_samples.push(lat);
                 }
             }
         }))
@@ -1730,6 +2336,7 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
                 slot.busy = false;
                 slot.gens_inflight = 0;
                 slot.draining = false;
+                slot.loading = false;
                 failed.extend(slot.queue.drain(..).map(|j| j.ticket));
                 if let Some(p) = slot.spill.take() {
                     remove_spill_file(&p, "panic-retire");
@@ -1776,6 +2383,12 @@ fn worker_loop(shared: &Shared, burst: usize, decode_batch: usize, coalesce_eval
             slot.stats.group_dispatches += group_dispatches;
             slot.stats.group_lanes += group_lanes;
             slot.stats.max_group_size = slot.stats.max_group_size.max(group_lanes);
+            for &v in ttft_samples.iter() {
+                slot.stats.ttft.record(v);
+            }
+            if per_token_ns > 0 {
+                slot.stats.tok_latency.record(per_token_ns);
+            }
             !live
         };
         shared.work.notify_all();
@@ -1826,6 +2439,34 @@ mod tests {
         PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q, ModuleKind::V])
     }
 
+    fn submit_eval(core: &ServeCore, id: AdapterId, batch: &Arc<Batch>, t: &Ticket) -> Admission {
+        core.submit(id, Request::Eval { batch: Arc::clone(batch) }, t, SubmitOptions::default())
+    }
+
+    fn submit_train(core: &ServeCore, id: AdapterId, batch: &Arc<Batch>, t: &Ticket) -> Admission {
+        core.submit(
+            id,
+            Request::Train { batch: Arc::clone(batch), hyper: Hyper::default() },
+            t,
+            SubmitOptions::default(),
+        )
+    }
+
+    fn submit_gen(
+        core: &ServeCore,
+        id: AdapterId,
+        prompt: &Arc<Vec<i32>>,
+        max_new_tokens: usize,
+        t: &Ticket,
+    ) -> Admission {
+        core.submit(
+            id,
+            Request::Generate { prompt: Arc::clone(prompt), max_new_tokens, greedy: true },
+            t,
+            SubmitOptions::default(),
+        )
+    }
+
     #[test]
     fn eval_roundtrip_matches_direct_backend() {
         let cfg = tiny_cfg();
@@ -1843,7 +2484,7 @@ mod tests {
             native::evaluate_into(&direct.model, &batch, &mut direct.bufs, &mut ws);
 
         let ticket = Ticket::new(batch.batch);
-        core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, id, &batch, &ticket).is_admitted());
         let (loss, metric) = ticket.wait().unwrap();
         assert_eq!(loss, ref_loss);
         assert_eq!(metric, ref_metric);
@@ -1865,7 +2506,7 @@ mod tests {
         let id = core.register("lora_r3", &lora_peft(), 7);
         let batch = tiny_batch(&cfg, 12);
         let ticket = Ticket::new(batch.batch);
-        core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, id, &batch, &ticket).is_admitted());
 
         // Paused ⇒ the job is still queued; strict evict must refuse and
         // report exactly how many requests are pending.
@@ -1876,14 +2517,17 @@ mod tests {
         assert_eq!(failed, 1);
         assert_eq!(ticket.wait(), Err(ServeError::Evicted));
         assert_eq!(core.num_adapters(), 0);
-        assert!(core.submit(id, &batch, ReqKind::Eval, &ticket).is_err());
+        assert_eq!(
+            submit_eval(&core, id, &batch, &ticket),
+            Admission::Rejected(ServeError::UnknownAdapter)
+        );
 
         // The evicted state is intact and can be re-registered (hot swap);
         // the slot is reused rather than grown.
         let id2 = core.register_backend("lora_r3", backend);
         assert_ne!(id, id2, "adapter ids are never reused");
         core.resume();
-        core.submit(id2, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, id2, &batch, &ticket).is_admitted());
         assert!(ticket.wait().is_ok());
 
         // An idle adapter evicts strictly without complaint.
@@ -1903,7 +2547,7 @@ mod tests {
         let batch = tiny_batch(&cfg, 14);
         let tickets: Vec<Ticket> = (0..3).map(|_| Ticket::new(batch.batch)).collect();
         for t in &tickets {
-            core.submit(id, &batch, ReqKind::Eval, t).unwrap();
+            assert!(submit_eval(&core, id, &batch, t).is_admitted());
         }
         // Drain unpauses, serves all 3, then evicts with nothing failed.
         let (backend, failed) = core.evict_with(id, EvictMode::Drain).unwrap();
@@ -1927,7 +2571,7 @@ mod tests {
         let ticket = Ticket::new(batch.batch);
         // A couple of train steps so the checkpoint carries real state.
         for _ in 0..2 {
-            core.submit(id, &batch, ReqKind::Train(Hyper::default()), &ticket).unwrap();
+            assert!(submit_train(&core, id, &batch, &ticket).is_admitted());
             ticket.wait().unwrap();
         }
         let dir = std::env::temp_dir()
@@ -1938,12 +2582,12 @@ mod tests {
         assert_eq!(core.artifact_bytes(id), Some(bytes));
 
         // The checkpointed adapter keeps serving...
-        core.submit(id, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, id, &batch, &ticket).is_admitted());
         let (loss_orig, _) = ticket.wait().unwrap();
 
         // ...and its restored twin answers bit-identically.
         let id2 = core.restore("lora_r3_restored", &path).unwrap();
-        core.submit(id2, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, id2, &batch, &ticket).is_admitted());
         let (loss_restored, _) = ticket.wait().unwrap();
         assert_eq!(loss_orig, loss_restored, "restore must be bit-exact");
         let be = core.evict(id2).unwrap();
@@ -1992,7 +2636,7 @@ mod tests {
         assert_eq!(want.len(), max_new);
 
         let ticket = Ticket::new(max_new);
-        core.submit_generate(id, &prompt, max_new, true, &ticket).unwrap();
+        assert!(submit_gen(&core, id, &prompt, max_new, &ticket).is_admitted());
         // Stream: wait for the first token, then the rest.
         let n1 = ticket.wait_tokens(1);
         assert!(n1 >= 1);
@@ -2003,6 +2647,9 @@ mod tests {
         let stats = core.stats(id).unwrap();
         assert_eq!(stats.processed, 1);
         assert_eq!(stats.tokens_generated, max_new as u64);
+        assert!(stats.ttft.count() >= 1, "TTFT sketch sampled the generation");
+        assert!(stats.ttft_ms(0.99) > 0.0);
+        assert!(stats.tok_latency.count() >= 1, "per-token sketch sampled the dispatch");
     }
 
     #[test]
@@ -2017,8 +2664,8 @@ mod tests {
         let t = Ticket::new(4);
         let p = Arc::new(vec![1i32, 2]);
         assert_eq!(
-            enc.submit_generate(id_e, &p, 2, true, &t),
-            Err(ServeError::InvalidRequest)
+            submit_gen(&enc, id_e, &p, 2, &t),
+            Admission::Rejected(ServeError::InvalidRequest)
         );
 
         let cfg = tiny_dec_cfg();
@@ -2029,23 +2676,23 @@ mod tests {
         let id = core.register("lora_r3", &lora_peft(), 7);
         let empty: Arc<Vec<i32>> = Arc::new(Vec::new());
         assert_eq!(
-            core.submit_generate(id, &empty, 2, true, &t),
-            Err(ServeError::InvalidRequest),
+            submit_gen(&core, id, &empty, 2, &t),
+            Admission::Rejected(ServeError::InvalidRequest),
             "empty prompt"
         );
         assert_eq!(
-            core.submit_generate(id, &p, cfg.max_seq, true, &t),
-            Err(ServeError::InvalidRequest),
+            submit_gen(&core, id, &p, cfg.max_seq, &t),
+            Admission::Rejected(ServeError::InvalidRequest),
             "prompt + max_new past max_seq"
         );
         let oov = Arc::new(vec![cfg.vocab_size as i32 + 3]);
         assert_eq!(
-            core.submit_generate(id, &oov, 2, true, &t),
-            Err(ServeError::InvalidRequest),
+            submit_gen(&core, id, &oov, 2, &t),
+            Admission::Rejected(ServeError::InvalidRequest),
             "out-of-vocab prompt token"
         );
         // A well-formed request on the same core still works.
-        core.submit_generate(id, &p, 4, true, &t).unwrap();
+        assert!(submit_gen(&core, id, &p, 4, &t).is_admitted());
         assert!(t.wait().is_ok());
     }
 
@@ -2066,18 +2713,18 @@ mod tests {
         batch.tokens[0] = cfg.vocab_size as i32 + 1000;
         let batch = Arc::new(batch);
         let ticket = Ticket::new(batch.batch);
-        core.submit(bad, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, bad, &batch, &ticket).is_admitted());
         assert_eq!(ticket.wait(), Err(ServeError::WorkerPanicked));
         assert_eq!(core.worker_panics(), 1);
 
         // The offending adapter is retired...
         assert_eq!(core.num_adapters(), 1);
         assert_eq!(
-            core.submit(bad, &tiny_batch(&cfg, 22), ReqKind::Eval, &ticket),
-            Err(ServeError::UnknownAdapter)
+            submit_eval(&core, bad, &tiny_batch(&cfg, 22), &ticket),
+            Admission::Rejected(ServeError::UnknownAdapter)
         );
         // ...while the sibling (and the worker) keep serving normally.
-        core.submit(good, &tiny_batch(&cfg, 23), ReqKind::Eval, &ticket).unwrap();
+        assert!(submit_eval(&core, good, &tiny_batch(&cfg, 23), &ticket).is_admitted());
         assert!(ticket.wait().is_ok());
         core.drain();
     }
@@ -2094,17 +2741,127 @@ mod tests {
         let batch = tiny_batch(&cfg, 13);
         let tickets: Vec<Ticket> = (0..4).map(|_| Ticket::new(batch.batch)).collect();
         for t in &tickets[..3] {
-            core.submit(id, &batch, ReqKind::Eval, t).unwrap();
+            assert!(submit_eval(&core, id, &batch, t).is_admitted());
         }
         assert_eq!(core.queue_len(id), Some(3));
+        // The typed variant carries the observed depth and the cap.
         assert_eq!(
-            core.submit(id, &batch, ReqKind::Eval, &tickets[3]),
-            Err(ServeError::QueueFull)
+            submit_eval(&core, id, &batch, &tickets[3]),
+            Admission::Rejected(ServeError::QueueFull { depth: 3, cap: 3 })
         );
         assert_eq!(core.stats(id).unwrap().rejected, 1);
         core.drain();
         for t in &tickets[..3] {
             assert!(t.wait().is_ok());
         }
+    }
+
+    #[test]
+    fn draining_submissions_carry_remaining_count() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(915);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts =
+            ServeOptions { workers: 1, start_paused: true, queue_cap: 8, ..Default::default() };
+        let core = Arc::new(ServeCore::new(bb, opts));
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 31);
+        let tickets: Vec<Ticket> = (0..2).map(|_| Ticket::new(batch.batch)).collect();
+        for t in &tickets {
+            assert!(submit_eval(&core, id, &batch, t).is_admitted());
+        }
+        // Race a submit against the drain: the drain owns the slot, so
+        // every concurrent submit must come back Draining (with however
+        // many requests were left at that instant) or UnknownAdapter
+        // (already fully evicted) — never silently enqueued.
+        let drainer = {
+            let core = Arc::clone(&core);
+            thread::spawn(move || core.evict_with(id, EvictMode::Drain).unwrap())
+        };
+        let late = Ticket::new(batch.batch);
+        loop {
+            match submit_eval(&core, id, &batch, &late) {
+                Admission::Rejected(ServeError::Draining { queued }) => {
+                    assert!(queued <= 2, "remaining count is the observed queue depth");
+                    break;
+                }
+                Admission::Rejected(ServeError::UnknownAdapter) => break,
+                Admission::Admitted => {
+                    late.wait().ok();
+                }
+                other => panic!("unexpected admission during drain: {other:?}"),
+            }
+        }
+        drainer.join().unwrap();
+    }
+
+    #[test]
+    fn zero_deadline_sheds_at_submit() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(916);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let opts = ServeOptions { workers: 1, start_paused: true, ..Default::default() };
+        let core = ServeCore::new(bb, opts);
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 32);
+        let ticket = Ticket::new(batch.batch);
+        let adm = core.submit(
+            id,
+            Request::Eval { batch: Arc::clone(&batch) },
+            &ticket,
+            SubmitOptions::new().with_deadline(Duration::ZERO),
+        );
+        assert_eq!(adm, Admission::Shed(ShedReason::DeadlineExpired));
+        assert_eq!(adm.into_result(), Err(ServeError::Shed(ShedReason::DeadlineExpired)));
+        assert_eq!(core.stats(id).unwrap().shed, 1);
+        assert_eq!(core.queue_len(id), Some(0), "shed requests are never enqueued");
+    }
+
+    #[test]
+    fn wait_tokens_observes_ticket_rearm() {
+        // Regression: a `wait_tokens` caller sleeping across a failure +
+        // re-submit must observe the re-arm (generation counter bump)
+        // instead of re-sleeping forever on the cleared token buffer.
+        use std::sync::atomic::AtomicBool;
+        let ticket = Ticket::new(8);
+        ticket.arm();
+        let stop = Arc::new(AtomicBool::new(false));
+        let waiter = thread::spawn({
+            let t2 = ticket.clone();
+            let stop = Arc::clone(&stop);
+            move || {
+                let n = t2.wait_tokens(5);
+                stop.store(true, Ordering::SeqCst);
+                n
+            }
+        });
+        // Let the waiter block, then re-arm until it wakes: pre-fix the
+        // re-arm cleared `tokens` without a wakeup path, so the waiter
+        // hung here.
+        thread::sleep(Duration::from_millis(20));
+        while !stop.load(Ordering::SeqCst) {
+            ticket.arm();
+            thread::sleep(Duration::from_millis(5));
+        }
+        let n = waiter.join().unwrap();
+        assert_eq!(n, 0, "waiter released by the re-arm, not by token arrival");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_still_shim_to_submit() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(917);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let core = ServeCore::new(bb, ServeOptions { workers: 1, ..Default::default() });
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 33);
+        let ticket = Ticket::new(batch.batch);
+        core.submit_batch(id, &batch, ReqKind::Eval, &ticket).unwrap();
+        assert!(ticket.wait().is_ok());
+        core.submit_request(id, Request::Eval { batch: Arc::clone(&batch) }, &ticket)
+            .unwrap();
+        assert!(ticket.wait().is_ok());
+        assert_eq!(core.stats(id).unwrap().processed, 2);
     }
 }

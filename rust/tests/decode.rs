@@ -21,10 +21,24 @@ use psoft::linalg::Workspace;
 use psoft::model::native::{self, Batch, DecodeCache, Target};
 use psoft::model::{Backbone, NativeModel};
 use psoft::peft::AdapterId;
-use psoft::runtime::serve::{EvictMode, ReqKind, ServeCore, ServeError, ServeOptions, Ticket};
+use psoft::runtime::serve::{
+    EvictMode, Request, ServeCore, ServeError, ServeOptions, SubmitOptions, Ticket,
+};
 use psoft::runtime::{Hyper, NativeBackend};
 use psoft::util::rng::Rng;
 use std::sync::Arc;
+
+/// Typed-submit shim for the greedy generations below.
+fn submit_gen(core: &ServeCore, id: AdapterId, prompt: &Arc<Vec<i32>>, max_new: usize, t: &Ticket) {
+    core.submit(
+        id,
+        Request::Generate { prompt: Arc::clone(prompt), max_new_tokens: max_new, greedy: true },
+        t,
+        SubmitOptions::default(),
+    )
+    .into_result()
+    .unwrap();
+}
 
 fn dec_cfg() -> ModelConfig {
     ModelConfig {
@@ -323,7 +337,7 @@ fn grouped_generations_interleave_fairly_and_match_solo() {
         (b, Ticket::new(max_new)),
     ];
     for (id, t) in &tickets {
-        core.submit_generate(*id, &prompt, max_new, true, t).unwrap();
+        submit_gen(&core, *id, &prompt, max_new, t);
     }
     core.resume();
     core.drain();
@@ -408,8 +422,8 @@ fn strict_evict_counts_every_lane_of_inflight_group() {
     // Queued (paused) group: strict evict counts both queued lanes.
     let t1 = Ticket::new(max_new);
     let t2 = Ticket::new(max_new);
-    core.submit_generate(id, &prompt, max_new, true, &t1).unwrap();
-    core.submit_generate(id, &prompt, max_new, true, &t2).unwrap();
+    submit_gen(&core, id, &prompt, max_new, &t1);
+    submit_gen(&core, id, &prompt, max_new, &t2);
     assert!(matches!(core.evict(id), Err(ServeError::PendingRequests(2))));
     core.resume();
 
@@ -437,8 +451,8 @@ fn strict_evict_counts_every_lane_of_inflight_group() {
         }
         let ta = Ticket::new(max_new);
         let tb = Ticket::new(max_new);
-        core.submit_generate(id, &prompt, max_new, true, &ta).unwrap();
-        core.submit_generate(id, &prompt, max_new, true, &tb).unwrap();
+        submit_gen(&core, id, &prompt, max_new, &ta);
+        submit_gen(&core, id, &prompt, max_new, &tb);
     }
     assert!(
         observed,
@@ -471,8 +485,8 @@ fn resumable_generations_keep_round_robin_fairness() {
     let prompt = Arc::new(vec![1i32, 3]);
     let ta = Ticket::new(6);
     let tb = Ticket::new(6);
-    core.submit_generate(a, &prompt, 6, true, &ta).unwrap();
-    core.submit_generate(b, &prompt, 6, true, &tb).unwrap();
+    submit_gen(&core, a, &prompt, 6, &ta);
+    submit_gen(&core, b, &prompt, 6, &tb);
     core.resume();
     core.drain();
     assert_eq!(ta.wait().unwrap().1, 6.0);
@@ -496,7 +510,7 @@ fn strict_evict_refuses_pending_generation() {
     let id = core.register("gen", &peft, 3);
     let prompt = Arc::new(vec![1i32, 2]);
     let ticket = Ticket::new(4);
-    core.submit_generate(id, &prompt, 4, true, &ticket).unwrap();
+    submit_gen(&core, id, &prompt, 4, &ticket);
 
     // Queued (paused) generation: strict evict must refuse...
     assert!(matches!(core.evict(id), Err(ServeError::PendingRequests(1))));
@@ -537,10 +551,12 @@ fn mixed_eval_and_generate_requests_coexist() {
     let prompt = Arc::new(vec![1i32, 2, 3]);
 
     let gt = Ticket::new(8);
-    core.submit_generate(ga, &prompt, 8, true, &gt).unwrap();
+    submit_gen(&core, ga, &prompt, 8, &gt);
     let ets: Vec<Ticket> = (0..4).map(|_| Ticket::new(bsz)).collect();
     for t in &ets {
-        core.submit(ea, &batch, ReqKind::Eval, t).unwrap();
+        core.submit(ea, Request::Eval { batch: Arc::clone(&batch) }, t, SubmitOptions::default())
+            .into_result()
+            .unwrap();
     }
     core.drain();
     assert_eq!(gt.wait().unwrap().1, 8.0);

@@ -9,6 +9,11 @@
 //! - **Queue-depth caps** — covered by the unit tests in
 //!   `runtime::serve`; here we pin that a capped queue still completes
 //!   everything it accepted.
+//! - **SLO scheduling** — weighted-fair tiers converge to their
+//!   configured share under backlog; deadline-expired requests are shed
+//!   with a typed error (never silently dropped); and the async reload
+//!   lane serves other adapters while a spilled one is `Loading`,
+//!   bit-identically to a sync reload.
 
 // Style allowances shared by the bench/test crates: index loops mirror
 // the math notation, and config structs are built default-then-override.
@@ -20,10 +25,37 @@ use psoft::linalg::Workspace;
 use psoft::model::native::{self, Batch, Target};
 use psoft::model::{Backbone, NativeModel};
 use psoft::peft::AdapterId;
-use psoft::runtime::serve::{EvictMode, ReqKind, ServeCore, ServeError, ServeOptions, Ticket};
+use psoft::runtime::serve::{
+    EvictMode, Request, ServeCore, ServeError, ServeOptions, ShedReason, SubmitOptions, Ticket,
+};
 use psoft::runtime::{Hyper, NativeBackend};
 use psoft::util::rng::Rng;
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Shim the positional submit shapes onto the unified typed entry point:
+/// the scheduling tests below care about dispatch behavior, not admission
+/// metadata, so default `SubmitOptions` and a `Result` view suffice.
+fn submit_eval(
+    core: &ServeCore,
+    id: AdapterId,
+    batch: &Arc<Batch>,
+    t: &Ticket,
+) -> Result<(), ServeError> {
+    core.submit(id, Request::Eval { batch: Arc::clone(batch) }, t, SubmitOptions::default())
+        .into_result()
+}
+
+fn submit_train(
+    core: &ServeCore,
+    id: AdapterId,
+    batch: &Arc<Batch>,
+    hyper: Hyper,
+    t: &Ticket,
+) -> Result<(), ServeError> {
+    core.submit(id, Request::Train { batch: Arc::clone(batch), hyper }, t, SubmitOptions::default())
+        .into_result()
+}
 
 fn tiny_cfg() -> ModelConfig {
     ModelConfig {
@@ -101,11 +133,11 @@ fn concurrent_adapters_match_serial_single_adapter_runs() {
         .collect();
     for step in 0..steps {
         for (a, id) in ids.iter().enumerate() {
-            core.submit(*id, &batches[a], ReqKind::Train(hyper), &tickets[a][step]).unwrap();
+            submit_train(&core, *id, &batches[a], hyper, &tickets[a][step]).unwrap();
         }
     }
     for (a, id) in ids.iter().enumerate() {
-        core.submit(*id, &batches[a], ReqKind::Eval, &tickets[a][steps]).unwrap();
+        submit_eval(&core, *id, &batches[a], &tickets[a][steps]).unwrap();
     }
     core.drain();
 
@@ -145,7 +177,7 @@ fn round_robin_is_exactly_cyclic_under_backlog() {
     let mut t = 0;
     for _ in 0..per_adapter {
         for id in &ids {
-            core.submit(*id, &batch, ReqKind::Eval, &tickets[t]).unwrap();
+            submit_eval(&core, *id, &batch, &tickets[t]).unwrap();
             t += 1;
         }
     }
@@ -184,7 +216,7 @@ fn burst_groups_consecutive_requests_per_adapter() {
     let mut t = 0;
     for _ in 0..4 {
         for id in &ids {
-            core.submit(*id, &batch, ReqKind::Eval, &tickets[t]).unwrap();
+            submit_eval(&core, *id, &batch, &tickets[t]).unwrap();
             t += 1;
         }
     }
@@ -256,7 +288,7 @@ fn max_resident_one_spills_and_reloads_transparently() {
     let extra_batch = batch_for(&cfg, 99 ^ 7);
     let ticket = Ticket::new(2);
     for (a, id) in ids.iter().enumerate() {
-        core.submit(*id, &batches[a], ReqKind::Train(hyper), &ticket).unwrap();
+        submit_train(&core, *id, &batches[a], hyper, &ticket).unwrap();
         let got = ticket.wait().unwrap();
         core.drain();
         assert_eq!(got, reference[a][0], "round 0, adapter {a}: spill/reload must be exact");
@@ -275,9 +307,9 @@ fn max_resident_one_spills_and_reloads_transparently() {
     let extra_tickets: Vec<Ticket> = (0..rounds).map(|_| Ticket::new(2)).collect();
     for round in 1..rounds {
         for (a, id) in ids.iter().enumerate() {
-            core.submit(*id, &batches[a], ReqKind::Train(hyper), &tickets[a][round]).unwrap();
+            submit_train(&core, *id, &batches[a], hyper, &tickets[a][round]).unwrap();
         }
-        core.submit(extra, &extra_batch, ReqKind::Train(hyper), &extra_tickets[round]).unwrap();
+        submit_train(&core, extra, &extra_batch, hyper, &extra_tickets[round]).unwrap();
         core.drain();
     }
     for (a, _) in ids.iter().enumerate() {
@@ -291,7 +323,7 @@ fn max_resident_one_spills_and_reloads_transparently() {
     }
     // Final evals, then evict everything and compare end-state params.
     for (a, id) in ids.iter().enumerate() {
-        core.submit(*id, &batches[a], ReqKind::Eval, &ticket).unwrap();
+        submit_eval(&core, *id, &batches[a], &ticket).unwrap();
         let got = ticket.wait().unwrap();
         assert_eq!(got, reference[a][rounds], "final eval, adapter {a}");
     }
@@ -344,10 +376,10 @@ fn seedless_backends_are_never_spilled() {
     let batch = batch_for(&cfg, 57);
     let t = Ticket::new(2);
     for _ in 0..2 {
-        core.submit(id0, &batch, ReqKind::Eval, &t).unwrap();
+        submit_eval(&core, id0, &batch, &t).unwrap();
         t.wait().unwrap();
         core.drain();
-        core.submit(id1, &batch, ReqKind::Eval, &t).unwrap();
+        submit_eval(&core, id1, &batch, &t).unwrap();
         t.wait().unwrap();
         core.drain();
     }
@@ -372,7 +404,7 @@ fn evict_semantics_are_explicit_about_pending_work() {
     let batch = batch_for(&cfg, 43);
     let tickets: Vec<Ticket> = (0..3).map(|_| Ticket::new(2)).collect();
     for t in &tickets {
-        core.submit(id, &batch, ReqKind::Eval, t).unwrap();
+        submit_eval(&core, id, &batch, t).unwrap();
     }
     // Strict evict refuses while the (paused) queue holds work.
     assert!(matches!(core.evict(id), Err(ServeError::PendingRequests(3))));
@@ -388,7 +420,7 @@ fn evict_semantics_are_explicit_about_pending_work() {
     // everything completes, nothing is failed.
     let id2 = core.register_backend("lora", be);
     for t in &tickets[..2] {
-        core.submit(id2, &batch, ReqKind::Eval, t).unwrap();
+        submit_eval(&core, id2, &batch, t).unwrap();
     }
     let (_, failed) = core.evict_with(id2, EvictMode::Drain).unwrap();
     assert_eq!(failed, 0);
@@ -453,7 +485,7 @@ fn coalesced_eval_matches_uncoalesced_bitwise() {
 
     let tickets: Vec<Ticket> = batches.iter().map(|b| Ticket::new(b.batch)).collect();
     for (b, t) in batches.iter().zip(&tickets) {
-        core.submit(id, b, ReqKind::Eval, t).unwrap();
+        submit_eval(&core, id, b, t).unwrap();
     }
     // All five queued before dispatch starts: the first dispatch merges
     // the four compatible evals; the odd-shaped one runs alone.
@@ -546,7 +578,7 @@ fn coalesced_lm_eval_matches_uncoalesced_bitwise() {
 
     let tickets: Vec<Ticket> = batches.iter().map(|b| Ticket::new(b.batch)).collect();
     for (b, t) in batches.iter().zip(&tickets) {
-        core.submit(id, b, ReqKind::Eval, t).unwrap();
+        submit_eval(&core, id, b, t).unwrap();
     }
     core.resume();
     core.drain();
@@ -579,15 +611,17 @@ fn capped_queue_completes_accepted_requests() {
     let mut rejected = 0usize;
     core.resume();
     for ticket in &tickets {
-        match core.submit(id, &batch, ReqKind::Eval, ticket) {
+        match submit_eval(&core, id, &batch, ticket) {
             Ok(()) => accepted += 1,
-            Err(_) => {
+            Err(ServeError::QueueFull { depth, cap }) => {
+                assert_eq!(depth, cap, "QueueFull carries the observed depth at the cap");
                 rejected += 1;
                 // Backpressure: wait the queue out, then retry once.
                 core.drain();
-                core.submit(id, &batch, ReqKind::Eval, ticket).unwrap();
+                submit_eval(&core, id, &batch, ticket).unwrap();
                 accepted += 1;
             }
+            Err(e) => panic!("unexpected admission failure: {e}"),
         }
     }
     core.drain();
@@ -635,9 +669,9 @@ fn unwritable_spill_dir_keeps_adapters_resident() {
     let mut ws = Workspace::new();
     let (want, _) = native::evaluate_into(&direct.model, &batch, &mut direct.bufs, &mut ws);
     let t = Ticket::new(2);
-    core.submit(a, &batch, ReqKind::Eval, &t).unwrap();
+    submit_eval(&core, a, &batch, &t).unwrap();
     assert_eq!(t.wait().unwrap().0, want);
-    core.submit(b, &batch, ReqKind::Eval, &t).unwrap();
+    submit_eval(&core, b, &batch, &t).unwrap();
     t.wait().unwrap();
 
     // Eviction hands back real state: nothing was lost to a fake spill.
@@ -646,4 +680,203 @@ fn unwritable_spill_dir_keeps_adapters_resident() {
     assert_eq!(be.opt.step, 0);
     drop(core);
     std::fs::remove_file(&blocker).ok();
+}
+
+/// Weighted-fair tiers: with `tier_weights = [3, 1]` and a deep backlog
+/// on both tiers, the single-worker dispatch trace is exactly the
+/// 3-then-1 cycle — the realized share converges to the weights — and
+/// once the high tier runs dry its budget is forfeited, not banked.
+#[test]
+fn two_tier_weighted_fair_share_follows_weights() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(820);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions {
+        workers: 1,
+        burst: 1,
+        start_paused: true,
+        trace_cap: 64,
+        queue_cap: 16,
+        tier_weights: vec![3, 1],
+        ..Default::default()
+    };
+    let core = ServeCore::new(bb, opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let hi = core.register("interactive", &peft, 821);
+    let lo = core.register("batchy", &peft, 822);
+    let batch = batch_for(&cfg, 823);
+    let per_tier = 12usize;
+    let tickets: Vec<Ticket> = (0..2 * per_tier).map(|_| Ticket::new(2)).collect();
+    for i in 0..per_tier {
+        core.submit(
+            hi,
+            Request::Eval { batch: Arc::clone(&batch) },
+            &tickets[2 * i],
+            SubmitOptions::new().with_priority(0),
+        )
+        .into_result()
+        .unwrap();
+        core.submit(
+            lo,
+            Request::Eval { batch: Arc::clone(&batch) },
+            &tickets[2 * i + 1],
+            SubmitOptions::new().with_priority(1),
+        )
+        .into_result()
+        .unwrap();
+    }
+    core.resume();
+    core.drain();
+
+    let trace = core.trace();
+    assert_eq!(trace.len(), 2 * per_tier);
+    // While both tiers hold work the cycle is A,A,A,B; the high tier
+    // drains after 4 cycles (12 hi + 4 lo), then the low tier runs out
+    // its remaining 8 alone.
+    for (i, id) in trace.iter().take(16).enumerate() {
+        let want = if i % 4 < 3 { hi } else { lo };
+        assert_eq!(*id, want, "dispatch {i} must follow the 3:1 weighted cycle");
+    }
+    for (i, id) in trace.iter().enumerate().skip(16) {
+        assert_eq!(*id, lo, "dispatch {i}: only the low tier has work left");
+    }
+    // Realized share over the contended window: 12/16 = the 3:1 weights.
+    let hi_share =
+        trace.iter().take(16).filter(|&&id| id == hi).count() as f64 / 16.0;
+    assert!((hi_share - 0.75).abs() < 1e-12);
+    for t in &tickets {
+        assert!(t.wait().is_ok());
+    }
+}
+
+/// Deadline-expired requests are shed with a typed error, never silently
+/// dropped: every shed ticket resolves to `ServeError::Shed` and the
+/// per-adapter `shed` counter accounts for all of them.
+#[test]
+fn deadline_expired_requests_are_shed_not_dropped() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(830);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts =
+        ServeOptions { workers: 1, start_paused: true, queue_cap: 8, ..Default::default() };
+    let core = ServeCore::new(bb, opts);
+    let peft = PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q]);
+    let id = core.register("deadline", &peft, 831);
+    let batch = batch_for(&cfg, 832);
+
+    // Queue three requests with a deadline far shorter than the pause,
+    // plus one without a deadline that must still be served.
+    let doomed: Vec<Ticket> = (0..3).map(|_| Ticket::new(2)).collect();
+    for t in &doomed {
+        core.submit(
+            id,
+            Request::Eval { batch: Arc::clone(&batch) },
+            t,
+            SubmitOptions::new().with_deadline(Duration::from_millis(2)),
+        )
+        .into_result()
+        .unwrap();
+    }
+    let survivor = Ticket::new(2);
+    submit_eval(&core, id, &batch, &survivor).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    core.resume();
+    core.drain();
+
+    for t in &doomed {
+        assert_eq!(
+            t.wait(),
+            Err(ServeError::Shed(ShedReason::DeadlineExpired)),
+            "expired request must resolve its ticket with the shed reason"
+        );
+    }
+    assert!(survivor.wait().is_ok(), "deadline-free request rides out the purge");
+    let stats = core.stats(id).unwrap();
+    assert_eq!(stats.shed, 3, "every shed request is counted");
+    assert_eq!(stats.processed, 1, "only the survivor was dispatched");
+    assert_eq!(core.queue_len(id), Some(0), "nothing lingers in the queue");
+}
+
+/// The async reload lane: while a spilled adapter's slot is `Loading`
+/// (an expensive SVD re-derivation), other adapters keep dispatching on
+/// the remaining workers — and the reloaded adapter's result is
+/// bit-identical to a fresh construction of the same seed.
+#[test]
+fn async_reload_serves_other_adapters_while_loading() {
+    let cfg = ModelConfig {
+        arch: Arch::Encoder,
+        vocab_size: 32,
+        d_model: 48,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 96,
+        max_seq: 10,
+        n_classes: 2,
+    };
+    let mut rng = Rng::new(840);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let spill_dir =
+        std::env::temp_dir().join(format!("psoft_spill_async_{}", std::process::id()));
+    let opts = ServeOptions {
+        workers: 2,
+        max_resident: 1,
+        start_paused: true,
+        trace_cap: 64,
+        queue_cap: 16,
+        spill_dir: Some(spill_dir.clone()),
+        ..Default::default()
+    };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+
+    // `slow` costs a long subspace iteration to reconstruct from its
+    // artifact; `hot` is a cheap LoRA that stays resident.
+    let mut slow_peft =
+        PeftConfig::new(MethodKind::Psoft, 8).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    slow_peft.svd_n_iter = Some(150);
+    let slow = core.register("slow_psoft", &slow_peft, 841);
+    let hot_peft = PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q]);
+    let hot = core.register("hot_lora", &hot_peft, 842);
+    assert_eq!(core.resident(slow), Some(false), "budget 1: registering hot spilled slow");
+    assert_eq!(core.resident(hot), Some(true));
+
+    let batch = batch_for(&cfg, 843);
+    let slow_ticket = Ticket::new(2);
+    // Admitted instantly even though the adapter is on disk: the reload
+    // runs on a worker, not inside submit.
+    submit_eval(&core, slow, &batch, &slow_ticket).unwrap();
+    let hot_tickets: Vec<Ticket> = (0..8).map(|_| Ticket::new(2)).collect();
+    for t in &hot_tickets {
+        submit_eval(&core, hot, &batch, t).unwrap();
+    }
+    core.resume();
+    core.drain();
+
+    // One worker spent the whole reload window re-deriving the SVD; the
+    // other dispatched hot-adapter work meanwhile.
+    let trace = core.trace();
+    let first_hot = trace.iter().position(|&id| id == hot).expect("hot dispatched");
+    let slow_pos = trace.iter().position(|&id| id == slow).expect("slow dispatched");
+    assert!(
+        first_hot < slow_pos,
+        "hot work must dispatch while the slow adapter is still Loading \
+         (hot at {first_hot}, slow at {slow_pos})"
+    );
+    assert_eq!(trace.iter().filter(|&&id| id == hot).count(), 8);
+
+    // Bit-identity: the reloaded adapter's eval equals a direct
+    // construction of the same (backbone, peft, seed) — the spill →
+    // async reload round-trip is invisible except as latency.
+    let mut direct = NativeBackend::for_adapter(&bb, &slow_peft, 841);
+    let mut ws = Workspace::new();
+    let (want_loss, want_metric) =
+        native::evaluate_into(&direct.model, &batch, &mut direct.bufs, &mut ws);
+    let (got_loss, got_metric) = slow_ticket.wait().unwrap();
+    assert_eq!(got_loss, want_loss, "async reload must be bit-exact");
+    assert_eq!(got_metric, want_metric);
+    for t in &hot_tickets {
+        assert!(t.wait().is_ok());
+    }
+    assert_eq!(core.worker_panics(), 0);
+    drop(core);
+    std::fs::remove_dir_all(&spill_dir).ok();
 }

@@ -7,8 +7,8 @@
 //! adapter families (LoRA, PSOFT, OFTv2, BOFT).
 //!
 //! The same property is pinned for **autoregressive decode**: a warm
-//! generation round-trip — submit_generate (Arc-clone prompt, inline
-//! resumable job, re-armed ticket), per-dispatch decode bursts against a
+//! generation round-trip — a typed `Generate` submit (Arc-clone prompt,
+//! inline resumable job, re-armed ticket), per-dispatch decode bursts against a
 //! worker-pooled KV-cache, token streaming into the pre-sized ticket
 //! buffer, completion — allocates nothing once the cache and workspace
 //! pools are warm.
@@ -35,12 +35,37 @@ use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
 use psoft::model::native::{Batch, Target};
 use psoft::model::Backbone;
 use psoft::peft::AdapterId;
-use psoft::runtime::serve::{ReqKind, ServeCore, ServeOptions, Ticket};
+use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 use psoft::runtime::Hyper;
 use psoft::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Typed-submit shims used on the measured path: `Arc::clone` +
+/// by-value `Copy` options, so the shims themselves allocate nothing.
+fn submit_eval(core: &ServeCore, id: AdapterId, batch: &Arc<Batch>, t: &Ticket) {
+    core.submit(id, Request::Eval { batch: Arc::clone(batch) }, t, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+}
+
+fn submit_train(core: &ServeCore, id: AdapterId, batch: &Arc<Batch>, hyper: Hyper, t: &Ticket) {
+    core.submit(id, Request::Train { batch: Arc::clone(batch), hyper }, t, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+}
+
+fn submit_gen(core: &ServeCore, id: AdapterId, prompt: &Arc<Vec<i32>>, max_new: usize, t: &Ticket) {
+    core.submit(
+        id,
+        Request::Generate { prompt: Arc::clone(prompt), max_new_tokens: max_new, greedy: true },
+        t,
+        SubmitOptions::default(),
+    )
+    .into_result()
+    .unwrap();
+}
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
@@ -126,8 +151,8 @@ fn warm_serve_loop_performs_zero_allocations() {
 
     let round = |core: &ServeCore| {
         for (a, id) in ids.iter().enumerate() {
-            core.submit(*id, &batches[a], ReqKind::Train(hyper), &train_tickets[a]).unwrap();
-            core.submit(*id, &batches[a], ReqKind::Eval, &eval_tickets[a]).unwrap();
+            submit_train(core, *id, &batches[a], hyper, &train_tickets[a]);
+            submit_eval(core, *id, &batches[a], &eval_tickets[a]);
         }
         for a in 0..ids.len() {
             let (train_loss, _) = train_tickets[a].wait().unwrap();
@@ -183,14 +208,14 @@ fn warm_serve_loop_performs_zero_allocations() {
     // Warmup: generations size the per-worker KV-cache pool, the decode
     // workspace shapes, and the ticket's token buffer.
     for _ in 0..3 {
-        dcore.submit_generate(gid, &prompt, max_new, true, &gticket).unwrap();
+        submit_gen(&dcore, gid, &prompt, max_new, &gticket);
         gticket.wait().unwrap();
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
     let spawns_before = psoft::util::threadpool::thread_spawn_count();
     for _ in 0..3 {
-        dcore.submit_generate(gid, &prompt, max_new, true, &gticket).unwrap();
+        submit_gen(&dcore, gid, &prompt, max_new, &gticket);
         let (_, emitted) = gticket.wait().unwrap();
         assert_eq!(emitted as usize, max_new);
     }
@@ -223,20 +248,20 @@ fn warm_serve_loop_performs_zero_allocations() {
     let t1 = Ticket::new(max_new);
     let t2 = Ticket::new(max_new);
     // Deterministic two-lane warmup: both queued before dispatch starts.
-    gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
-    gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
+    submit_gen(&gcore, ggid, &prompt, max_new, &t1);
+    submit_gen(&gcore, ggid, &prompt, max_new, &t2);
     gcore.resume();
     t1.wait().unwrap();
     t2.wait().unwrap();
     // Deterministic single-lane warmup (group-of-1 scratch shapes).
     for _ in 0..2 {
-        gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
+        submit_gen(&gcore, ggid, &prompt, max_new, &t1);
         t1.wait().unwrap();
     }
     // Mixed warm rounds.
     for _ in 0..2 {
-        gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
-        gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
+        submit_gen(&gcore, ggid, &prompt, max_new, &t1);
+        submit_gen(&gcore, ggid, &prompt, max_new, &t2);
         t1.wait().unwrap();
         t2.wait().unwrap();
     }
@@ -244,8 +269,8 @@ fn warm_serve_loop_performs_zero_allocations() {
     let before = ALLOCS.load(Ordering::SeqCst);
     let spawns_before = psoft::util::threadpool::thread_spawn_count();
     for _ in 0..3 {
-        gcore.submit_generate(ggid, &prompt, max_new, true, &t1).unwrap();
-        gcore.submit_generate(ggid, &prompt, max_new, true, &t2).unwrap();
+        submit_gen(&gcore, ggid, &prompt, max_new, &t1);
+        submit_gen(&gcore, ggid, &prompt, max_new, &t2);
         let (_, e1) = t1.wait().unwrap();
         let (_, e2) = t2.wait().unwrap();
         assert_eq!(e1 as usize, max_new);
