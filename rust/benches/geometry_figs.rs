@@ -30,7 +30,7 @@ fn fig9_10_angles() {
     let cfg = bench_encoder();
     let bb = pretrained_backbone(&cfg, "enc", 200);
     let layer = cfg.n_layers / 2;
-    let w_pre = bb.weight(layer, ModuleKind::Q).clone();
+    let w_pre = bb.weight(layer, ModuleKind::Q).as_f32().clone();
     let k = 8;
     std::fs::create_dir_all("reports").ok();
     std::fs::write("reports/fig10_pre.csv", angles_to_csv(&pairwise_angles(&w_pre, k))).unwrap();
@@ -58,7 +58,7 @@ fn fig9_10_angles() {
         let mut be = NativeBackend::new(model);
         let report = train(&mut be, &task, &tc, 0.0).unwrap();
         let merged = be.model.to_backbone();
-        let w_final = merged.weight(layer, ModuleKind::Q);
+        let w_final = merged.weight(layer, ModuleKind::Q).as_f32();
         let (d_angle, d_norm) = geometry_deviation(&w_pre, w_final, k);
         println!(
             "{label:<8} metric={:.1} max|Δangle|={:.4}° max relΔnorm={:.5} defect={:.4}",

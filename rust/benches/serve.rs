@@ -14,7 +14,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 use psoft::bench::{bench_encoder, write_csv};
-use psoft::config::{MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::config::{BackboneDtype, MethodKind, ModelConfig, ModuleKind, PeftConfig};
 use psoft::coordinator::serve_report;
 use psoft::model::native::{Batch, Target};
 use psoft::model::{Backbone, NativeModel};
@@ -196,6 +196,29 @@ fn main() {
     let probe = NativeModel::from_backbone(&bb, &peft0, &mut mrng);
     let shared_mib = probe.shared_frozen_bytes() as f64 / (1024.0 * 1024.0);
 
+    // backbone_dtype axis: quantize the same backbone to int8, serve a
+    // short eval round through it (proves the dequant-fused path end to
+    // end), and compare resident frozen bytes — the number the CI gate
+    // holds at ≤ 0.35 of f32.
+    let bb_q = Arc::new(bb.to_dtype(BackboneDtype::Int8));
+    let frozen_mib_f32 = bb.resident_bytes() as f64 / (1024.0 * 1024.0);
+    let frozen_mib_int8 = bb_q.resident_bytes() as f64 / (1024.0 * 1024.0);
+    let int8_ratio = frozen_mib_int8 / frozen_mib_f32.max(1e-12);
+    {
+        let core =
+            ServeCore::new(Arc::clone(&bb_q), ServeOptions { workers, ..Default::default() });
+        let (label, peft) = peft_for(0);
+        let id = core.register(&label, &peft, 2000);
+        let batch = synth_batch(&cfg, bsz, seq, 177);
+        let t = Ticket::new(bsz);
+        submit_eval(&core, id, &batch, &t);
+        t.wait().expect("int8-backbone eval");
+    }
+    println!(
+        "shared frozen backbone: {frozen_mib_f32:.2} MiB f32 vs {frozen_mib_int8:.2} MiB int8 \
+         ({int8_ratio:.3}x)"
+    );
+
     let rps_at = |n: usize| -> f64 {
         results.iter().find(|c| c.adapters == n).map(|c| c.reqs_per_sec).unwrap_or(0.0)
     };
@@ -238,6 +261,9 @@ fn main() {
         ("reqs_per_sec_16", Json::Num(rps_at(16))),
         ("scaling_16x_over_1x", Json::Num(scaling)),
         ("shared_frozen_mib_per_adapter", Json::Num(shared_mib)),
+        ("shared_frozen_mib_f32", Json::Num(frozen_mib_f32)),
+        ("shared_frozen_mib_int8", Json::Num(frozen_mib_int8)),
+        ("int8_over_f32_ratio", Json::Num(int8_ratio)),
     ]);
     std::fs::write("BENCH_serve.json", json.dump_pretty()).expect("write BENCH_serve.json");
     eprintln!("wrote BENCH_serve.json");

@@ -37,6 +37,49 @@ impl Arch {
     }
 }
 
+/// Storage dtype of the frozen shared backbone tensors (`[model]
+/// backbone_dtype`). Not part of [`ModelConfig`]: the artifact format
+/// snapshots the model *shape*, and a backbone quantized after
+/// construction keeps the same shape — dtype identity is carried by
+/// `Backbone::fingerprint()` instead.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackboneDtype {
+    /// Full-precision f32 (the default; bit-identical to the
+    /// pre-quantization code path).
+    #[default]
+    F32,
+    /// Block-quantized int8 (`linalg::quant::QuantMat`, symmetric
+    /// per-64-element-block scales).
+    Int8,
+}
+
+impl BackboneDtype {
+    pub fn parse(s: &str) -> Result<BackboneDtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(BackboneDtype::F32),
+            "int8" | "i8" => Ok(BackboneDtype::Int8),
+            _ => bail!("unknown backbone_dtype {s:?} (expected f32|int8)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackboneDtype::F32 => "f32",
+            BackboneDtype::Int8 => "int8",
+        }
+    }
+
+    /// Read `[model] backbone_dtype` from a config tree; a missing key is
+    /// the f32 default, an unknown value is a typed error naming the
+    /// accepted set.
+    pub fn from_toml(tree: &Json) -> Result<BackboneDtype> {
+        match tree.get("model").get("backbone_dtype").as_str() {
+            Some(s) => Self::parse(s),
+            None => Ok(BackboneDtype::F32),
+        }
+    }
+}
+
 /// Linear sub-modules PEFT adapters can be inserted into (paper notation:
 /// Q, K, V attention projections, O attention output, U/D the MLP
 /// up/down projections, G the gated-MLP gate — decoder only).
@@ -768,6 +811,23 @@ mod tests {
         // Absent section ⇒ 0 ⇒ auto (apply() is a no-op).
         let rc2 = RuntimeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
         assert_eq!(rc2.threads, 0);
+    }
+
+    #[test]
+    fn backbone_dtype_parses_and_rejects_unknown_values() {
+        // Missing key ⇒ f32 default (every existing config unchanged).
+        let tree = toml::parse("[model]\nd_model = 32\n").unwrap();
+        assert_eq!(BackboneDtype::from_toml(&tree).unwrap(), BackboneDtype::F32);
+        let tree = toml::parse("[model]\nbackbone_dtype = \"int8\"\n").unwrap();
+        assert_eq!(BackboneDtype::from_toml(&tree).unwrap(), BackboneDtype::Int8);
+        assert_eq!(BackboneDtype::parse("f32").unwrap(), BackboneDtype::F32);
+        // Unknown value ⇒ typed error naming the accepted set, no panic.
+        let tree = toml::parse("[model]\nbackbone_dtype = \"nf4\"\n").unwrap();
+        let err = BackboneDtype::from_toml(&tree).unwrap_err().to_string();
+        assert!(err.contains("backbone_dtype") && err.contains("f32|int8"), "got: {err}");
+        for d in [BackboneDtype::F32, BackboneDtype::Int8] {
+            assert_eq!(BackboneDtype::parse(d.name()).unwrap(), d);
+        }
     }
 
     #[test]

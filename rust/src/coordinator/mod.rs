@@ -207,7 +207,15 @@ pub fn serve_report(
             artifact_bytes: core.artifact_bytes(id).unwrap_or(0),
         })
         .collect();
-    report::ServeReport { title: title.to_string(), workers, wall_secs, rows }
+    let bb = core.backbone();
+    report::ServeReport {
+        title: title.to_string(),
+        workers,
+        wall_secs,
+        backbone_dtype: bb.dtype().name().to_string(),
+        shared_frozen_mib: bb.resident_bytes() as f64 / (1024.0 * 1024.0),
+        rows,
+    }
 }
 
 /// Mean metric per (label, task) cell across seeds; failed jobs collapse
@@ -412,6 +420,10 @@ mod tests {
             Some(3),
             "json aggregate"
         );
+        assert_eq!(report.backbone_dtype, "f32");
+        assert!(report.shared_frozen_mib > 0.0, "resident frozen accounting is wired");
+        assert_eq!(report.to_json().get("backbone_dtype").as_str(), Some("f32"));
+        assert!(report.to_markdown().contains("MiB shared frozen (f32)"));
     }
 
     #[test]

@@ -241,6 +241,11 @@ pub struct ServeReport {
     pub title: String,
     pub workers: usize,
     pub wall_secs: f64,
+    /// Storage dtype of the shared frozen backbone ("f32" or "int8").
+    pub backbone_dtype: String,
+    /// Resident MiB of frozen state shared by every adapter (quantized
+    /// codes + block scales when the backbone is int8).
+    pub shared_frozen_mib: f64,
     pub rows: Vec<ServeRow>,
 }
 
@@ -260,11 +265,14 @@ impl ServeReport {
 
     pub fn to_markdown(&self) -> String {
         let mut out = format!(
-            "### {} — {} adapters, {} workers, {:.2} req/s aggregate\n\n",
+            "### {} — {} adapters, {} workers, {:.2} req/s aggregate, \
+             {:.2} MiB shared frozen ({})\n\n",
             self.title,
             self.rows.len(),
             self.workers,
-            self.throughput_rps()
+            self.throughput_rps(),
+            self.shared_frozen_mib,
+            self.backbone_dtype
         );
         out.push_str("| Adapter | Label | Served | Train | Tokens | Grp mean | Grp max |");
         out.push_str(" Rejected | Shed | Mean lat (ms) | Max lat (ms) | Mean svc (ms) |");
@@ -330,6 +338,8 @@ impl ServeReport {
             ("title", Json::Str(self.title.clone())),
             ("workers", Json::Num(self.workers as f64)),
             ("wall_secs", Json::Num(self.wall_secs)),
+            ("backbone_dtype", Json::Str(self.backbone_dtype.clone())),
+            ("shared_frozen_mib", Json::Num(self.shared_frozen_mib)),
             ("total_requests", Json::Num(self.total_requests() as f64)),
             ("reqs_per_sec", Json::Num(self.throughput_rps())),
             (

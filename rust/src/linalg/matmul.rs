@@ -71,9 +71,11 @@ const PAR_MIN_ROWS: usize = 64;
 const PAR_MIN_FLOPS: usize = 1 << 22;
 /// Below this (flops) or below `2·MR` panel rows, packing costs more than
 /// it saves and the simple kernel runs. Numerics are unaffected either
-/// way (see the accumulation-order policy above).
-const TILE_MIN_FLOPS: usize = 1 << 14;
-const TILE_MIN_ROWS: usize = 2 * MR;
+/// way (see the accumulation-order policy above). Shared with the
+/// dequant-fused kernels in `linalg::quant` so both families make the
+/// same simple-vs-tiled choice at a given shape.
+pub(crate) const TILE_MIN_FLOPS: usize = 1 << 14;
+pub(crate) const TILE_MIN_ROWS: usize = 2 * MR;
 
 pub(crate) fn threads_for(flops: usize, out_rows: usize) -> usize {
     if flops >= PAR_MIN_FLOPS && out_rows >= PAR_MIN_ROWS {
@@ -115,8 +117,10 @@ fn nn_simple<T: Scalar>(a: &[T], k: usize, b: &[T], n: usize, c: &mut [T]) {
 }
 
 /// MR-row micro-kernel over one packed block: each packed B row is loaded
-/// once and fans out into four independent C-row axpy streams.
-fn nn_micro<T: Scalar>(a: [&[T]; MR], packed: &[T], c: [&mut [T]; MR], jb: usize) {
+/// once and fans out into four independent C-row axpy streams. Also the
+/// inner loop of `linalg::quant`'s tiled kernels — quantized operands
+/// dequantize in their pack step and reuse this loop unmodified.
+pub(crate) fn nn_micro<T: Scalar>(a: [&[T]; MR], packed: &[T], c: [&mut [T]; MR], jb: usize) {
     let [c0, c1, c2, c3] = c;
     let [a0, a1, a2, a3] = a;
     for kk in 0..a0.len() {

@@ -2,7 +2,8 @@
 //!
 //! Provides everything the PEFT registry and the native training backend
 //! need: dense matrices, cache-tiled pool-parallel matmul (plus the fused
-//! rotation-apply kernels in [`rot`]), Householder QR,
+//! rotation-apply kernels in [`rot`] and the block-quantized
+//! dequant-fused kernels in [`quant`]), Householder QR,
 //! one-sided Jacobi SVD (exact), randomized SVD (Halko; the paper's fast-SVD
 //! initialization, Table 16), and the Cayley parameterization with its
 //! truncated-Neumann approximation (paper §4.2/§5, Appendix C).
@@ -11,6 +12,7 @@ pub mod cayley;
 pub mod matmul;
 pub mod matrix;
 pub mod qr;
+pub mod quant;
 pub mod rot;
 pub mod rsvd;
 pub mod svd;
@@ -27,6 +29,10 @@ pub use matmul::{
     matmul_tn_into, matvec,
 };
 pub use matrix::{DMat, Mat, Matrix, Scalar};
+pub use quant::{
+    quant_matmul, quant_matmul_acc_slice, quant_matmul_into, quant_matmul_nt_acc_slice,
+    quant_matmul_nt_into, QuantDMat, QuantMat, QuantMatrix, QUANT_BLOCK,
+};
 pub use rot::{block_rot_matmul_into, perm_block_rot_matmul_into, rot_matmul_acc};
 pub use qr::{orthonormal_columns, qr_thin};
 pub use rsvd::rsvd;

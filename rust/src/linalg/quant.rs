@@ -1,0 +1,577 @@
+//! Block-quantized tensors with dequant-on-the-fly matmul kernels.
+//!
+//! The serve path shares ONE frozen backbone across N adapters
+//! (`model::Backbone`); those tensors never see a gradient, which makes
+//! them the ideal quantization target (the QLoRA recipe: low-bit frozen
+//! base, full-precision adapters). This module provides the storage type
+//! ([`QuantMat`]) and the fused kernels; `model::SharedMat` dispatches
+//! between it and plain f32 storage per the `[model] backbone_dtype`
+//! config key.
+//!
+//! # Block layout (int8, symmetric)
+//!
+//! A `rows × cols` matrix is cut into blocks of [`QUANT_BLOCK`] = 64
+//! **consecutive row-major elements**; every row starts a new block, so a
+//! row owns `ceil(cols / 64)` blocks and blocks never straddle rows. Per
+//! block one f32 scale `s = absmax / 127` is stored (zero-point is fixed
+//! at 0 — the layout byte reserves asymmetric variants for later); each
+//! element is stored as `q = round(x / s)` in `[-127, 127]` (`-128` is
+//! unused). Dequantization is `x̂ = s · q`, computed by one shared
+//! [`dq`] helper so every code path — simple kernel, tiled pack step,
+//! row gather — produces bit-identical dequantized values.
+//!
+//! Byte-by-byte, a `QuantMat` is (all little-endian, as serialized by
+//! `Backbone`-level consumers; in memory the two arrays are separate):
+//!
+//! ```text
+//! q:      rows*cols bytes   int8 codes, row-major, one byte per element
+//! scales: rows*ceil(cols/64)*4 bytes   f32 LE, one per block, row-major
+//! ```
+//!
+//! so storage is `1 + 4/64 ≈ 1.0625` bytes/element vs 4 for f32 — a
+//! 3.76× shrink (the bench gate pins the ratio ≤ 0.35).
+//!
+//! # Error budget
+//!
+//! With `s = absmax/127` and round-to-nearest, `|x/s − q| ≤ 1/2` for
+//! every in-block element (no clamping can occur: `|x|/s ≤ 127`), so the
+//! per-element reconstruction error is bounded by
+//!
+//! ```text
+//! |x − x̂| ≤ s/2 = absmax(block) / 254
+//! ```
+//!
+//! An all-zero block stores `s = 0` and round-trips exactly.
+//! `tests/quant.rs` pins this budget for f32 and f64.
+//!
+//! # Accumulation-order policy
+//!
+//! These kernels inherit the PR 6 contract from `linalg::matmul`
+//! verbatim: every C element accumulates in ascending shared-dimension
+//! (`k`) order, k-blocks are visited ascending, and the `nt` family
+//! keeps dot-then-add semantics (a zeroed register tile accumulated over
+//! the full `k` range, added to C once). Dequantization happens in the
+//! packed-B-panel step — the scale multiply is applied while filling the
+//! scratch panel — so the MR=4 micro-kernel inner loops are byte-for-byte
+//! the ones f32 uses ([`matmul`]'s `nn_micro`), and tiled == simple ==
+//! threaded remains **bit-identical** for quantized operands too
+//! (decode-shape `[1, k]` products bit-match batched prefill rows for
+//! int8 backbones exactly as for f32). When quantization is off the f32
+//! path is untouched: nothing in `matmul` changed numerically.
+//!
+//! [`matmul`]: super::matmul
+
+use super::matmul::{nn_micro, run_row_panels, threads_for, SendPtr, KC, MR, NC};
+use super::matmul::{TILE_MIN_FLOPS, TILE_MIN_ROWS};
+use super::matrix::{Matrix, Scalar};
+
+/// Elements per quantization block (consecutive, row-major, never
+/// straddling a row boundary). 64 divides the matmul column-block width
+/// `NC = 128`, so a packed panel always starts on a block boundary.
+pub const QUANT_BLOCK: usize = 64;
+
+/// Block-quantized dense matrix: int8 codes plus one scale per
+/// [`QUANT_BLOCK`]-element block. See the module docs for the layout and
+/// error budget.
+#[derive(Clone, PartialEq)]
+pub struct QuantMatrix<T: Scalar> {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major int8 codes, `rows * cols` entries.
+    pub q: Vec<i8>,
+    /// Per-block scales, `rows * ceil(cols / QUANT_BLOCK)` entries.
+    pub scales: Vec<T>,
+}
+
+/// f32-scaled quantized matrix — the backbone storage type.
+pub type QuantMat = QuantMatrix<f32>;
+/// f64-scaled quantized matrix — used by the error-budget tests.
+pub type QuantDMat = QuantMatrix<f64>;
+
+/// The one dequantization formula. Every kernel and row gather goes
+/// through this so all paths reconstruct bit-identical values.
+#[inline(always)]
+fn dq<T: Scalar>(s: T, q: i8) -> T {
+    s * T::from_f64(q as f64)
+}
+
+impl<T: Scalar> QuantMatrix<T> {
+    /// Symmetric per-block quantization of a dense matrix.
+    pub fn quantize(m: &Matrix<T>) -> Self {
+        let bpr = m.cols.div_ceil(QUANT_BLOCK);
+        let mut q = vec![0i8; m.rows * m.cols];
+        let mut scales = vec![T::ZERO; m.rows * bpr];
+        for i in 0..m.rows {
+            let row = &m.data[i * m.cols..(i + 1) * m.cols];
+            let qrow = &mut q[i * m.cols..(i + 1) * m.cols];
+            for (blk, (src, dst)) in
+                row.chunks(QUANT_BLOCK).zip(qrow.chunks_mut(QUANT_BLOCK)).enumerate()
+            {
+                let mut absmax = 0f64;
+                for &v in src {
+                    absmax = absmax.max(v.abs().to_f64());
+                }
+                if absmax == 0.0 {
+                    continue; // scale 0, codes 0: exact round-trip
+                }
+                let s = absmax / 127.0;
+                scales[i * bpr + blk] = T::from_f64(s);
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = (v.to_f64() / s).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        Self { rows: m.rows, cols: m.cols, q, scales }
+    }
+
+    /// Dense reconstruction `x̂ = s·q` (test/debug surface; the serving
+    /// kernels dequantize on the fly instead).
+    pub fn dequantize(&self) -> Matrix<T> {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (lo, hi) = (i * self.cols, (i + 1) * self.cols);
+            dequant_segment(&self.q[lo..hi], self.scales_row(i), 0, &mut m.data[lo..hi]);
+        }
+        m
+    }
+
+    /// Blocks per row.
+    #[inline]
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols.div_ceil(QUANT_BLOCK)
+    }
+
+    #[inline]
+    fn scales_row(&self, i: usize) -> &[T] {
+        let bpr = self.blocks_per_row();
+        &self.scales[i * bpr..(i + 1) * bpr]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the quantized payload (codes + scales).
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * std::mem::size_of::<T>()
+    }
+
+    /// Dequantize row `i` into `out` (`out = x̂ᵢ`).
+    pub fn dequant_row_into(&self, i: usize, out: &mut [T]) {
+        assert_eq!(out.len(), self.cols);
+        dequant_segment(&self.q[i * self.cols..(i + 1) * self.cols], self.scales_row(i), 0, out);
+    }
+
+    /// Accumulate row `i` into `out` (`out += x̂ᵢ`) — the embedding
+    /// gather `tok + pos` path.
+    pub fn add_row_into(&self, i: usize, out: &mut [T]) {
+        assert_eq!(out.len(), self.cols);
+        let qrow = &self.q[i * self.cols..(i + 1) * self.cols];
+        let srow = self.scales_row(i);
+        for (blk, (qchunk, ochunk)) in
+            qrow.chunks(QUANT_BLOCK).zip(out.chunks_mut(QUANT_BLOCK)).enumerate()
+        {
+            let s = srow[blk];
+            for (o, &qv) in ochunk.iter_mut().zip(qchunk) {
+                *o += dq(s, qv);
+            }
+        }
+    }
+}
+
+/// Dequantize the code segment starting at column `col0` of a row into
+/// `dst` (`dst[j] = dq(scale(col0 + j), qseg[j])`). Shared by the dense
+/// reconstruction, the row gather and the tiled pack step.
+fn dequant_segment<T: Scalar>(qseg: &[i8], srow: &[T], col0: usize, dst: &mut [T]) {
+    let mut j = 0;
+    while j < qseg.len() {
+        let blk = (col0 + j) / QUANT_BLOCK;
+        let end = ((blk + 1) * QUANT_BLOCK - col0).min(qseg.len());
+        let s = srow[blk];
+        for jj in j..end {
+            dst[jj] = dq(s, qseg[jj]);
+        }
+        j = end;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Panel kernels: C += A @ Ŵ (nn) and C += A @ Ŵᵀ (nt)
+// ---------------------------------------------------------------------------
+
+/// Plain i-k-j kernel with inline dequant: C += A @ Ŵ over a row panel.
+/// Same ascending-k order as `matmul`'s `nn_simple`; the B element is
+/// `dq(s, q)`, exactly what the tiled pack step writes.
+fn qnn_simple<T: Scalar>(a: &[T], k: usize, w: &QuantMatrix<T>, c: &mut [T]) {
+    let n = w.cols;
+    let bpr = w.blocks_per_row();
+    for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        for (kk, &a_ik) in a_row.iter().enumerate() {
+            let qrow = &w.q[kk * n..(kk + 1) * n];
+            let srow = &w.scales[kk * bpr..(kk + 1) * bpr];
+            for (blk, (qchunk, cchunk)) in
+                qrow.chunks(QUANT_BLOCK).zip(c_row.chunks_mut(QUANT_BLOCK)).enumerate()
+            {
+                let s = srow[blk];
+                for (c_v, &qv) in cchunk.iter_mut().zip(qchunk) {
+                    *c_v += a_ik * dq(s, qv);
+                }
+            }
+        }
+    }
+}
+
+/// Tiled kernel: C += A @ Ŵ. Identical structure to `matmul`'s
+/// `nn_tiled` except the pack step dequantizes while filling the scratch
+/// panel — the `nn_micro` inner loops then run unmodified on f32/f64.
+fn qnn_tiled<T: Scalar>(a: &[T], k: usize, w: &QuantMatrix<T>, c: &mut [T], pack: &mut [T]) {
+    let n = w.cols;
+    let bpr = w.blocks_per_row();
+    for kc in (0..k).step_by(KC) {
+        let kb = KC.min(k - kc);
+        for jc in (0..n).step_by(NC) {
+            let jb = NC.min(n - jc);
+            // Pack + dequantize the kb×jb block of Ŵ (rows of width jb).
+            for kk in 0..kb {
+                let row = kc + kk;
+                let qseg = &w.q[row * n + jc..row * n + jc + jb];
+                let srow = &w.scales[row * bpr..(row + 1) * bpr];
+                dequant_segment(qseg, srow, jc, &mut pack[kk * jb..(kk + 1) * jb]);
+            }
+            let packed = &pack[..kb * jb];
+            for (g, group) in c.chunks_mut(MR * n).enumerate() {
+                let i0 = g * MR;
+                if group.len() == MR * n {
+                    let (r0, rest) = group.split_at_mut(n);
+                    let (r1, rest) = rest.split_at_mut(n);
+                    let (r2, r3) = rest.split_at_mut(n);
+                    nn_micro(
+                        [
+                            &a[i0 * k + kc..i0 * k + kc + kb],
+                            &a[(i0 + 1) * k + kc..(i0 + 1) * k + kc + kb],
+                            &a[(i0 + 2) * k + kc..(i0 + 2) * k + kc + kb],
+                            &a[(i0 + 3) * k + kc..(i0 + 3) * k + kc + kb],
+                        ],
+                        packed,
+                        [
+                            &mut r0[jc..jc + jb],
+                            &mut r1[jc..jc + jb],
+                            &mut r2[jc..jc + jb],
+                            &mut r3[jc..jc + jb],
+                        ],
+                        jb,
+                    );
+                } else {
+                    // Tail rows (< MR): single-row axpy over the block.
+                    for (ri, row) in group.chunks_mut(n).enumerate() {
+                        let i = i0 + ri;
+                        let a_seg = &a[i * k + kc..i * k + kc + kb];
+                        let c_seg = &mut row[jc..jc + jb];
+                        for (kk, &a_ik) in a_seg.iter().enumerate() {
+                            let bq = &packed[kk * jb..(kk + 1) * jb];
+                            for (c_v, &b_v) in c_seg.iter_mut().zip(bq) {
+                                *c_v += a_ik * b_v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Size dispatch for the quantized nn family over one row panel — same
+/// thresholds as the f32 kernels, and (by the accumulation-order policy)
+/// the same numerics either way.
+fn qnn_panel<T: Scalar>(a: &[T], k: usize, w: &QuantMatrix<T>, c: &mut [T]) {
+    let n = w.cols;
+    let rows = c.len() / n;
+    if rows * k * n < TILE_MIN_FLOPS || rows < TILE_MIN_ROWS {
+        qnn_simple(a, k, w, c);
+    } else {
+        T::with_scratch(KC * NC, |pack| qnn_tiled(a, k, w, c, pack));
+    }
+}
+
+/// Plain kernel: C += A @ Ŵᵀ over a row panel. Dot-then-add like
+/// `matmul`'s `nt_simple` (each element accumulated in a register over
+/// the full ascending k range, added to C once).
+fn qnt_simple<T: Scalar>(a: &[T], k: usize, w: &QuantMatrix<T>, c: &mut [T]) {
+    let n = w.rows;
+    let bpr = w.blocks_per_row();
+    if k == 0 {
+        // Dot-then-add semantics: an empty dot still adds +0.0.
+        for c_v in c.iter_mut() {
+            *c_v += T::ZERO;
+        }
+        return;
+    }
+    for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        for (j, c_v) in c_row.iter_mut().enumerate() {
+            let qrow = &w.q[j * k..(j + 1) * k];
+            let srow = &w.scales[j * bpr..(j + 1) * bpr];
+            let mut acc = T::ZERO;
+            for (blk, (qchunk, achunk)) in
+                qrow.chunks(QUANT_BLOCK).zip(a_row.chunks(QUANT_BLOCK)).enumerate()
+            {
+                let s = srow[blk];
+                for (&x, &qv) in achunk.iter().zip(qchunk) {
+                    acc += x * dq(s, qv);
+                }
+            }
+            *c_v += acc;
+        }
+    }
+}
+
+/// Tiled kernel for A @ Ŵᵀ: identical structure to `matmul`'s
+/// `nt_tiled`, with dequant fused into the Ŵᵀ pack step.
+fn qnt_tiled<T: Scalar>(a: &[T], k: usize, w: &QuantMatrix<T>, c: &mut [T], scratch: &mut [T]) {
+    let n = w.rows;
+    let bpr = w.blocks_per_row();
+    let (bt, wt) = scratch.split_at_mut(k * NC);
+    for jc in (0..n).step_by(NC) {
+        let jb = NC.min(n - jc);
+        for jj in 0..jb {
+            let row = jc + jj;
+            let qrow = &w.q[row * k..(row + 1) * k];
+            let srow = &w.scales[row * bpr..(row + 1) * bpr];
+            for (kk, &qv) in qrow.iter().enumerate() {
+                bt[kk * jb + jj] = dq(srow[kk / QUANT_BLOCK], qv);
+            }
+        }
+        for (g, group) in c.chunks_mut(MR * n).enumerate() {
+            let i0 = g * MR;
+            let gr = (group.len() / n).min(MR);
+            let w_tile = &mut wt[..gr * jb];
+            w_tile.fill(T::ZERO);
+            for kk in 0..k {
+                let bq = &bt[kk * jb..(kk + 1) * jb];
+                for r in 0..gr {
+                    let x = a[(i0 + r) * k + kk];
+                    let w_row = &mut w_tile[r * jb..(r + 1) * jb];
+                    for (w_v, &b_v) in w_row.iter_mut().zip(bq) {
+                        *w_v += x * b_v;
+                    }
+                }
+            }
+            for (r, row) in group.chunks_mut(n).enumerate() {
+                let c_seg = &mut row[jc..jc + jb];
+                let w_row = &w_tile[r * jb..(r + 1) * jb];
+                for (c_v, &w_v) in c_seg.iter_mut().zip(w_row) {
+                    *c_v += w_v;
+                }
+            }
+        }
+    }
+}
+
+/// Size dispatch for the quantized nt family over one row panel.
+fn qnt_panel<T: Scalar>(a: &[T], k: usize, w: &QuantMatrix<T>, c: &mut [T]) {
+    let n = w.rows;
+    let rows = c.len() / n;
+    if k == 0 || rows * k * n < TILE_MIN_FLOPS || rows < TILE_MIN_ROWS {
+        qnt_simple(a, k, w, c);
+    } else {
+        T::with_scratch(k * NC + MR * NC, |scratch| qnt_tiled(a, k, w, c, scratch));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API — mirrors the matmul flavours the model layer uses
+// ---------------------------------------------------------------------------
+
+/// C = A @ Ŵ, allocating.
+pub fn quant_matmul<T: Scalar>(a: &Matrix<T>, w: &QuantMatrix<T>) -> Matrix<T> {
+    assert_eq!(a.cols, w.rows, "quant_matmul shape mismatch: {:?} @ {:?}", a.shape(), w.shape());
+    let mut c = Matrix::zeros(a.rows, w.cols);
+    quant_matmul_acc_slice(a, w, &mut c.data);
+    c
+}
+
+/// C = A @ Ŵ, overwriting an existing buffer.
+pub fn quant_matmul_into<T: Scalar>(a: &Matrix<T>, w: &QuantMatrix<T>, c: &mut Matrix<T>) {
+    assert_eq!((c.rows, c.cols), (a.rows, w.cols));
+    c.fill(T::ZERO);
+    quant_matmul_acc_slice(a, w, &mut c.data);
+}
+
+/// C += A @ Ŵ with C a row-major `a.rows × w.cols` slice. Threaded over
+/// row panels exactly like `matmul_acc_slice`.
+pub fn quant_matmul_acc_slice<T: Scalar>(a: &Matrix<T>, w: &QuantMatrix<T>, c: &mut [T]) {
+    assert_eq!(a.cols, w.rows, "quant_matmul shape mismatch: {:?} @ {:?}", a.shape(), w.shape());
+    let (m, k, n) = (a.rows, a.cols, w.cols);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = threads_for(m * k * n, m);
+    let a_data = &a.data;
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    run_row_panels(m, threads, &|lo, hi| {
+        let c_ptr = &c_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let c_panel = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        qnn_panel(&a_data[lo * k..hi * k], k, w, c_panel);
+    });
+}
+
+/// C = A @ Ŵᵀ, overwriting an existing buffer (the `dx = dy @ Wᵀ`
+/// backward shape; serving uses it for adapter-free backbone modules).
+pub fn quant_matmul_nt_into<T: Scalar>(a: &Matrix<T>, w: &QuantMatrix<T>, c: &mut Matrix<T>) {
+    assert_eq!((c.rows, c.cols), (a.rows, w.rows));
+    c.fill(T::ZERO);
+    quant_matmul_nt_acc_slice(a, w, &mut c.data);
+}
+
+/// C += A @ Ŵᵀ with C a row-major `a.rows × w.rows` slice.
+pub fn quant_matmul_nt_acc_slice<T: Scalar>(a: &Matrix<T>, w: &QuantMatrix<T>, c: &mut [T]) {
+    assert_eq!(
+        a.cols,
+        w.cols,
+        "quant_matmul_nt shape mismatch: {:?} @ {:?}ᵀ",
+        a.shape(),
+        w.shape()
+    );
+    let (m, k, n) = (a.rows, a.cols, w.rows);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = threads_for(m * k * n, m);
+    let a_data = &a.data;
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    run_row_panels(m, threads, &|lo, hi| {
+        let c_ptr = &c_ptr;
+        // SAFETY: row panels [lo, hi) are disjoint across pool lanes.
+        let c_panel = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n) };
+        qnt_panel(&a_data[lo * k..hi * k], k, w, c_panel);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matmul_nt};
+    use crate::linalg::matrix::{DMat, Mat};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_error_within_budget() {
+        let mut rng = Rng::new(11);
+        for &(r, c) in &[(3usize, 64usize), (5, 100), (8, 129), (1, 1), (4, 63)] {
+            let m = Mat::randn(r, c, 1.5, &mut rng);
+            let qm = QuantMat::quantize(&m);
+            let back = qm.dequantize();
+            for i in 0..r {
+                for (blk, chunk) in m.row(i).chunks(QUANT_BLOCK).enumerate() {
+                    let absmax = chunk.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                    let budget = absmax / 254.0 + 1e-12;
+                    for (j0, (&x, &xh)) in
+                        chunk.iter().zip(back.row(i)[blk * QUANT_BLOCK..].iter()).enumerate()
+                    {
+                        assert!(
+                            (x - xh).abs() <= budget,
+                            "({i},{blk},{j0}): |{x} - {xh}| > {budget}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_round_trips_exactly() {
+        let m = Mat::zeros(3, 130);
+        let qm = QuantMat::quantize(&m);
+        assert_eq!(qm.dequantize().data, m.data);
+        assert!(qm.scales.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn quant_matmul_bit_matches_dequant_then_matmul() {
+        let mut rng = Rng::new(13);
+        // Shapes straddling the tile thresholds: simple, tiled and
+        // threaded paths must all equal matmul on the dequantized dense
+        // matrix bit-for-bit (same dq values, same accumulation order).
+        let shapes = [(1usize, 24usize, 24usize), (9, 64, 100), (40, 150, 130), (96, 128, 256)];
+        for &(m, k, n) in &shapes {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.7, &mut rng);
+            let qw = QuantMat::quantize(&w);
+            let dense = qw.dequantize();
+            let c = quant_matmul(&a, &qw);
+            let c_ref = matmul(&a, &dense);
+            assert_eq!(c.data, c_ref.data, "nn mismatch at {m}x{k}x{n}");
+
+            let b = Mat::randn(n, k, 0.9, &mut rng);
+            let qb = QuantMat::quantize(&b);
+            let mut d = Mat::filled(m, n, 3.25); // dirty buffer
+            quant_matmul_nt_into(&a, &qb, &mut d);
+            let d_ref = matmul_nt(&a, &qb.dequantize());
+            assert_eq!(d.data, d_ref.data, "nt mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn single_row_bit_matches_batched_row() {
+        let mut rng = Rng::new(17);
+        let x = Mat::randn(12, 80, 1.0, &mut rng);
+        let w = QuantMat::quantize(&Mat::randn(80, 96, 1.0, &mut rng));
+        let full = quant_matmul(&x, &w);
+        for t in [0usize, 5, 11] {
+            let row = Mat::from_vec(1, 80, x.row(t).to_vec());
+            let y = quant_matmul(&row, &w);
+            assert_eq!(y.data, full.row(t), "row {t} diverged from batched product");
+        }
+    }
+
+    #[test]
+    fn row_gather_matches_dequantized_rows() {
+        let mut rng = Rng::new(19);
+        let m = Mat::randn(6, 100, 1.0, &mut rng);
+        let qm = QuantMat::quantize(&m);
+        let dense = qm.dequantize();
+        let mut out = vec![0.0f32; 100];
+        qm.dequant_row_into(3, &mut out);
+        assert_eq!(out, dense.row(3));
+        let mut acc = dense.row(1).to_vec();
+        qm.add_row_into(4, &mut acc);
+        let want: Vec<f32> =
+            dense.row(1).iter().zip(dense.row(4)).map(|(&a, &b)| a + b).collect();
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn f64_round_trip_within_budget() {
+        let mut rng = Rng::new(23);
+        let m = DMat::randn(4, 100, 2.0, &mut rng);
+        let qm = QuantDMat::quantize(&m);
+        let back = qm.dequantize();
+        for i in 0..m.rows {
+            for (blk, chunk) in m.row(i).chunks(QUANT_BLOCK).enumerate() {
+                let absmax = chunk.iter().fold(0f64, |a, &v| a.max(v.abs()));
+                let budget = absmax / 254.0 + 1e-15;
+                for (&x, &xh) in chunk.iter().zip(back.row(i)[blk * QUANT_BLOCK..].iter()) {
+                    assert!((x - xh).abs() <= budget);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_ratio_beats_gate() {
+        let m = Mat::randn(64, 256, 1.0, &mut Rng::new(29));
+        let qm = QuantMat::quantize(&m);
+        let f32_bytes = m.data.len() * 4;
+        assert!((qm.bytes() as f64) / (f32_bytes as f64) < 0.35);
+    }
+}

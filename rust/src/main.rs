@@ -39,7 +39,7 @@
 
 use anyhow::{bail, Context, Result};
 use psoft::config::{
-    Arch, DataConfig, MethodKind, ModelConfig, ModuleKind, PeftConfig, TrainConfig,
+    Arch, BackboneDtype, DataConfig, MethodKind, ModelConfig, ModuleKind, PeftConfig, TrainConfig,
 };
 use psoft::coordinator::{aggregate, grid, report, DeviceBudget, SuiteRunner};
 use psoft::data::{load_task, suite_tasks};
@@ -55,7 +55,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "quiet", "pjrt", "coalesce-eval"]);
+    let args = Args::from_env(&["verbose", "quiet", "pjrt", "coalesce-eval", "inference-only"]);
     if args.has_flag("verbose") {
         psoft::util::log::set_level(psoft::util::log::Level::Debug);
     } else if args.has_flag("quiet") {
@@ -338,20 +338,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
 
     let cfg = model_cfg_from(args)?;
-    let bb = Arc::new(load_or_make_backbone(args, &cfg)?);
+    let mut bb = load_or_make_backbone(args, &cfg)?;
     let cfg = bb.cfg.clone();
 
     // Scheduler settings: [serve] section of --config, overridable by flags.
     // [runtime] is applied first so the thread override lands before the
     // compute pool is built by the first large kernel.
+    let mut dtype = BackboneDtype::F32;
     let mut sc = match args.get("config") {
         Some(path) => {
             let tree = psoft::config::toml::parse_file(Path::new(path))?;
             psoft::config::RuntimeConfig::from_toml(&tree).apply();
+            dtype = BackboneDtype::from_toml(&tree)?;
             ServeConfig::from_toml(&tree)
         }
         None => ServeConfig::default(),
     };
+    if let Some(s) = args.get("backbone-dtype") {
+        dtype = BackboneDtype::parse(s)?;
+    }
+    if dtype != bb.dtype() {
+        // Checkpoints are always f32 on disk; quantization is a load-time
+        // transform so the serve fleet shares one block-quantized copy.
+        bb = bb.to_dtype(dtype);
+    }
+    let bb = Arc::new(bb);
     sc.workers = args.usize("workers", sc.workers)?;
     sc.queue_cap = args.usize("queue-cap", sc.queue_cap)?;
     sc.burst = args.usize("burst", sc.burst)?;
@@ -383,14 +394,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let core = ServeCore::new(Arc::clone(&bb), opts);
     psoft::info!(
         "serve: {} adapters over {} workers (queue cap {}, burst {}, max resident {}, \
-         decode batch {}, coalesce_eval {})",
+         decode batch {}, coalesce_eval {}, backbone {})",
         n_adapters,
         sc.workers,
         sc.queue_cap,
         sc.burst,
         if sc.max_resident == 0 { "unlimited".to_string() } else { sc.max_resident.to_string() },
         sc.decode_batch,
-        sc.coalesce_eval
+        sc.coalesce_eval,
+        dtype.name()
     );
 
     // Register the adapter fleet, cycling through the requested methods.
@@ -465,9 +477,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let serve_rep = psoft::coordinator::serve_report(&title, &core, wall, sc.workers);
     println!("{}", serve_rep.to_markdown());
     println!(
-        "aggregate {:.2} req/s over {} — {shared_mib:.2} MiB frozen state shared per adapter",
+        "aggregate {:.2} req/s over {} — {shared_mib:.2} MiB frozen {} state shared per adapter",
         serve_rep.throughput_rps(),
-        human_duration(wall)
+        human_duration(wall),
+        dtype.name()
     );
     let out_dir = Path::new(args.get_or("out", "reports"));
     report::write_serve_bundle(out_dir, "serve", &serve_rep)?;
@@ -655,17 +668,28 @@ fn cmd_export(args: &Args) -> Result<()> {
     let eval = artifact_eval_loss(&mut backend, &task, &mut ws)?;
     let label = format!("{}_r{}", peft.method.name(), peft.rank);
     let out = args.get_or("out", "reports/adapter.psoftad");
-    let art = backend.to_artifact(&label, &bb)?;
+    let art = if args.has_flag("inference-only") {
+        backend.to_inference_artifact(&label, &bb)?
+    } else {
+        backend.to_artifact(&label, &bb)?
+    };
     let bytes = art.write_to(Path::new(out))?;
     println!(
-        "exported {label}: {} adapter params in {} sections, {} on disk -> {out} \
+        "exported {label}{}: {} adapter params in {} sections, {} on disk -> {out} \
          (backbone {:#018x}, opt_step {})",
+        if art.inference_only { " [inference-only, f16]" } else { "" },
         art.adapter_param_floats(),
         art.sections.len(),
         human_bytes(bytes as f64),
         art.backbone_fp,
         art.opt_step
     );
+    // Keep the artifact directory's manifest.json index current.
+    if let Some(dir) = Path::new(out).parent() {
+        let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        let n = psoft::peft::artifact::write_manifest(dir)?;
+        psoft::info!("indexed {n} artifacts in {}/manifest.json", dir.display());
+    }
     println!("eval_loss={eval:.12e}");
     Ok(())
 }
@@ -682,11 +706,13 @@ fn cmd_import(args: &Args) -> Result<()> {
     let mut ws = psoft::linalg::Workspace::new();
     let eval = artifact_eval_loss(&mut backend, &task, &mut ws)?;
     println!(
-        "imported {} (method {}, rank {}, schema v{}, opt_step {}, {} adapter params) from {path}",
+        "imported {} (method {}, rank {}, schema v{}{}, opt_step {}, {} adapter params) \
+         from {path}",
         art.label,
         art.method.name(),
         art.peft.rank,
         art.schema_version,
+        if art.inference_only { ", inference-only" } else { "" },
         art.opt_step,
         art.adapter_param_floats()
     );
@@ -705,7 +731,10 @@ fn export_sizes_all(args: &Args, cfg: &ModelConfig, seed: u64) -> Result<()> {
     let bb = Arc::new(load_or_make_backbone(args, cfg)?);
     let rank = args.usize("rank", 8)?;
     let mut methods: BTreeMap<String, Json> = BTreeMap::new();
-    println!("{:<10} {:>10} {:>12} {:>12}", "method", "params", "artifact", "bytes/param");
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>12} {:>14}",
+        "method", "params", "artifact", "bytes/param", "inference", "inf bytes/param"
+    );
     for m in MethodKind::ALL {
         let mut peft = PeftConfig::new(m, rank);
         peft.modules = match args.get("modules") {
@@ -718,14 +747,18 @@ fn export_sizes_all(args: &Args, cfg: &ModelConfig, seed: u64) -> Result<()> {
         let label = format!("{}_r{rank}", m.name());
         let art = backend.to_artifact(&label, &bb)?;
         let bytes = art.to_bytes().len();
+        let inf_bytes = art.to_inference_only().to_bytes().len();
         let params = backend.model.num_trainable();
         let bpp = bytes as f64 / params as f64;
+        let inf_bpp = inf_bytes as f64 / params as f64;
         println!(
-            "{:<10} {:>10} {:>12} {:>12.2}",
+            "{:<10} {:>10} {:>12} {:>12.2} {:>12} {:>14.2}",
             m.name(),
             params,
             human_bytes(bytes as f64),
-            bpp
+            bpp,
+            human_bytes(inf_bytes as f64),
+            inf_bpp
         );
         methods.insert(
             m.name().to_string(),
@@ -733,6 +766,8 @@ fn export_sizes_all(args: &Args, cfg: &ModelConfig, seed: u64) -> Result<()> {
                 ("params", Json::Num(params as f64)),
                 ("bytes", Json::Num(bytes as f64)),
                 ("bytes_per_param", Json::Num(bpp)),
+                ("inference_bytes", Json::Num(inf_bytes as f64)),
+                ("inference_bytes_per_param", Json::Num(inf_bpp)),
             ]),
         );
     }
@@ -881,7 +916,7 @@ fn cmd_geometry(args: &Args) -> Result<()> {
     let k = args.usize("columns", 8)?;
     let layer = args.usize("layer", bb.cfg.n_layers / 2)?;
 
-    let w = bb.weight(layer, ModuleKind::Q);
+    let w = bb.weight(layer, ModuleKind::Q).as_f32();
     let mut peft = PeftConfig::new(MethodKind::Psoft, rank);
     peft.modules = vec![ModuleKind::Q];
     let mut rng = Rng::new(7);
@@ -895,7 +930,7 @@ fn cmd_geometry(args: &Args) -> Result<()> {
     }
     model.set_trainable_flat(&p);
     let merged = model.to_backbone();
-    let w_tuned = merged.weight(layer, ModuleKind::Q);
+    let w_tuned = merged.weight(layer, ModuleKind::Q).as_f32();
 
     let (d_angle, d_norm) = geometry::geometry_deviation(w, w_tuned, k);
     println!("layer {layer} Q matrix, rank {rank}, first {k} columns:");

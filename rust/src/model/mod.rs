@@ -25,24 +25,197 @@
 
 pub mod native;
 
-use crate::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
-use crate::linalg::Mat;
+use crate::config::{Arch, BackboneDtype, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use crate::linalg::{Mat, QuantMat};
 use crate::peft::{build_adapter, Adapter};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
+use std::borrow::Cow;
 use std::io::{Read, Write};
 use std::sync::Arc;
+
+/// One frozen shared tensor: full-precision or block-quantized, behind
+/// an `Arc` either way so N models built from one backbone reference a
+/// single copy. All compute entry points (row gather, `matmul_into`,
+/// `matmul_nt_into`) dispatch on the variant; the `F32` arms call the
+/// exact pre-quantization code paths, so an f32 backbone is bit-identical
+/// to the historical `Arc<Mat>` fields this enum replaced. The `Int8`
+/// arms run the dequant-fused kernels in [`crate::linalg::quant`].
+#[derive(Clone, PartialEq)]
+pub enum SharedMat {
+    F32(Arc<Mat>),
+    Int8(Arc<QuantMat>),
+}
+
+impl SharedMat {
+    pub fn rows(&self) -> usize {
+        match self {
+            SharedMat::F32(m) => m.rows,
+            SharedMat::Int8(q) => q.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SharedMat::F32(m) => m.cols,
+            SharedMat::Int8(q) => q.cols,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> BackboneDtype {
+        match self {
+            SharedMat::F32(_) => BackboneDtype::F32,
+            SharedMat::Int8(_) => BackboneDtype::Int8,
+        }
+    }
+
+    /// Resident bytes of the payload (f32 data, or int8 codes + scales).
+    pub fn bytes(&self) -> usize {
+        match self {
+            SharedMat::F32(m) => m.data.len() * std::mem::size_of::<f32>(),
+            SharedMat::Int8(q) => q.bytes(),
+        }
+    }
+
+    /// The f32 tensor. Panics for quantized storage — reserved for paths
+    /// that are f32-only by construction (pretraining, checkpoint save,
+    /// geometry probes).
+    pub fn as_f32(&self) -> &Mat {
+        match self {
+            SharedMat::F32(m) => m,
+            SharedMat::Int8(_) => panic!("expected f32 backbone tensor, found int8"),
+        }
+    }
+
+    /// Copy-on-write mutable access to the f32 tensor (pretraining's
+    /// embedding updates). Panics for quantized storage.
+    pub fn make_mut_f32(&mut self) -> &mut Mat {
+        match self {
+            SharedMat::F32(m) => Arc::make_mut(m),
+            SharedMat::Int8(_) => panic!("expected f32 backbone tensor, found int8"),
+        }
+    }
+
+    /// Dense f32 view: borrowed (free) for f32 storage, dequantized
+    /// (allocating) for int8. Adapter construction reads the frozen
+    /// weight through this — for int8 backbones the adapter's frozen
+    /// factors absorb the documented quantization error once, at build
+    /// time.
+    pub fn dense(&self) -> Cow<'_, Mat> {
+        match self {
+            SharedMat::F32(m) => Cow::Borrowed(&**m),
+            SharedMat::Int8(q) => Cow::Owned(q.dequantize()),
+        }
+    }
+
+    /// `out = row i` (the embedding gather).
+    pub fn copy_row(&self, i: usize, out: &mut [f32]) {
+        match self {
+            SharedMat::F32(m) => out.copy_from_slice(m.row(i)),
+            SharedMat::Int8(q) => q.dequant_row_into(i, out),
+        }
+    }
+
+    /// `out += row i` (tok + pos embedding sum — for f32 this is the
+    /// same single `e + p` addition the pre-enum gather performed).
+    pub fn add_row(&self, i: usize, out: &mut [f32]) {
+        match self {
+            SharedMat::F32(m) => {
+                for (o, &v) in out.iter_mut().zip(m.row(i)) {
+                    *o += v;
+                }
+            }
+            SharedMat::Int8(q) => q.add_row_into(i, out),
+        }
+    }
+
+    /// Append the effective f32 values (dequantized for int8) — the
+    /// `frozen_flat` interchange path.
+    pub fn push_f32s(&self, out: &mut Vec<f32>) {
+        match self {
+            SharedMat::F32(m) => out.extend_from_slice(&m.data),
+            SharedMat::Int8(q) => out.extend_from_slice(&q.dequantize().data),
+        }
+    }
+
+    /// y = x @ W, allocating.
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        match self {
+            SharedMat::F32(w) => crate::linalg::matmul(x, w),
+            SharedMat::Int8(w) => crate::linalg::quant_matmul(x, w),
+        }
+    }
+
+    /// y = x @ W into a caller-provided buffer.
+    pub fn matmul_into(&self, x: &Mat, y: &mut Mat) {
+        match self {
+            SharedMat::F32(w) => crate::linalg::matmul_into(x, w, y),
+            SharedMat::Int8(w) => crate::linalg::quant_matmul_into(x, w, y),
+        }
+    }
+
+    /// dx = dy @ Wᵀ into a caller-provided buffer (backward through a
+    /// frozen dense module / the LM head).
+    pub fn matmul_nt_into(&self, dy: &Mat, dx: &mut Mat) {
+        match self {
+            SharedMat::F32(w) => crate::linalg::matmul_nt_into(dy, w, dx),
+            SharedMat::Int8(w) => crate::linalg::quant_matmul_nt_into(dy, w, dx),
+        }
+    }
+
+    /// Whether two handles share one allocation (the serve-layer
+    /// backbone-sharing invariant).
+    pub fn ptr_eq(a: &SharedMat, b: &SharedMat) -> bool {
+        match (a, b) {
+            (SharedMat::F32(x), SharedMat::F32(y)) => Arc::ptr_eq(x, y),
+            (SharedMat::Int8(x), SharedMat::Int8(y)) => Arc::ptr_eq(x, y),
+            _ => false,
+        }
+    }
+
+    /// Convert storage. Same-dtype conversion clones the `Arc` handle
+    /// (free, bit-identical); f32→int8 quantizes; int8→f32 dequantizes
+    /// (which does NOT recover the original f32 bits, only the
+    /// reconstruction within the documented error budget).
+    pub fn to_dtype(&self, dtype: BackboneDtype) -> SharedMat {
+        match (self, dtype) {
+            (SharedMat::F32(m), BackboneDtype::Int8) => {
+                SharedMat::Int8(Arc::new(QuantMat::quantize(m)))
+            }
+            (SharedMat::Int8(q), BackboneDtype::F32) => {
+                SharedMat::F32(Arc::new(q.dequantize()))
+            }
+            _ => self.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for SharedMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedMat::{}({}x{})", self.dtype().name(), self.rows(), self.cols())
+    }
+}
 
 /// Pre-trained dense weights (the checkpoint format produced by
 /// pretraining and consumed by every fine-tuning job). Every tensor is
 /// `Arc`-shared: installing adapters never copies the frozen state.
+/// Storage is f32 by construction; [`Backbone::to_dtype`] produces a
+/// block-quantized copy for serving (`[model] backbone_dtype = "int8"`).
 pub struct Backbone {
     pub cfg: ModelConfig,
-    pub tok_emb: Arc<Mat>,
-    pub pos_emb: Arc<Mat>,
+    pub tok_emb: SharedMat,
+    pub pos_emb: SharedMat,
     /// Per layer: dense weight per module, in arch order.
-    pub layer_weights: Vec<Vec<(ModuleKind, Arc<Mat>)>>,
-    pub lm_head: Option<Arc<Mat>>,
+    pub layer_weights: Vec<Vec<(ModuleKind, SharedMat)>>,
+    pub lm_head: Option<SharedMat>,
     /// Lazily computed [`Backbone::fingerprint`] — the frozen state is
     /// immutable once constructed, so the hash is computed at most once
     /// (the serve layer fingerprints on every artifact spill/reload).
@@ -53,21 +226,22 @@ impl Backbone {
     /// Random initialization (the starting point for pretraining).
     pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Backbone {
         let d = cfg.d_model;
-        let tok_emb = Arc::new(Mat::randn(cfg.vocab_size, d, 0.02, rng));
-        let pos_emb = Arc::new(Mat::randn(cfg.max_seq, d, 0.02, rng));
+        let f32m = |m: Mat| SharedMat::F32(Arc::new(m));
+        let tok_emb = f32m(Mat::randn(cfg.vocab_size, d, 0.02, rng));
+        let pos_emb = f32m(Mat::randn(cfg.max_seq, d, 0.02, rng));
         let layer_weights = (0..cfg.n_layers)
             .map(|_| {
                 cfg.modules()
                     .into_iter()
                     .map(|m| {
                         let (din, dout) = cfg.module_shape(m);
-                        (m, Arc::new(Mat::randn(din, dout, 1.0 / (din as f64).sqrt(), rng)))
+                        (m, f32m(Mat::randn(din, dout, 1.0 / (din as f64).sqrt(), rng)))
                     })
                     .collect()
             })
             .collect();
         let lm_head = match cfg.arch {
-            Arch::Decoder => Some(Arc::new(Mat::randn(d, cfg.vocab_size, 0.02, rng))),
+            Arch::Decoder => Some(f32m(Mat::randn(d, cfg.vocab_size, 0.02, rng))),
             Arch::Encoder => None,
         };
         Backbone {
@@ -80,8 +254,54 @@ impl Backbone {
         }
     }
 
-    pub fn weight(&self, layer: usize, module: ModuleKind) -> &Mat {
+    pub fn weight(&self, layer: usize, module: ModuleKind) -> &SharedMat {
         &self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module").1
+    }
+
+    /// Storage dtype of the frozen tensors (taken from the token
+    /// embedding; [`Backbone::to_dtype`] converts every tensor together).
+    pub fn dtype(&self) -> BackboneDtype {
+        self.tok_emb.dtype()
+    }
+
+    /// A backbone with every frozen tensor converted to `dtype`.
+    /// Same-dtype conversion clones the `Arc` handles (free and
+    /// bit-identical — `to_dtype(F32)` of an f32 backbone shares the
+    /// same allocations and keeps the same fingerprint). f32→int8
+    /// block-quantizes each tensor; the fingerprint then covers the
+    /// quantized bytes, so artifacts exported against one dtype refuse
+    /// to load onto the other.
+    pub fn to_dtype(&self, dtype: BackboneDtype) -> Backbone {
+        let layer_weights = self
+            .layer_weights
+            .iter()
+            .map(|layer| layer.iter().map(|(m, w)| (*m, w.to_dtype(dtype))).collect())
+            .collect();
+        Backbone {
+            cfg: self.cfg.clone(),
+            tok_emb: self.tok_emb.to_dtype(dtype),
+            pos_emb: self.pos_emb.to_dtype(dtype),
+            layer_weights,
+            lm_head: self.lm_head.as_ref().map(|h| h.to_dtype(dtype)),
+            fp_cache: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Resident bytes of the frozen tensors at their storage dtype —
+    /// the memory every adapter on this backbone shares (4 B/elem for
+    /// f32; quantized codes + per-block scales for int8). Serve reports
+    /// surface this next to the per-adapter artifact sizes.
+    pub fn resident_bytes(&self) -> usize {
+        let mut total = self.tok_emb.bytes() + self.pos_emb.bytes();
+        for layer in &self.layer_weights {
+            for (_, w) in layer {
+                total += w.bytes();
+            }
+        }
+        if let Some(h) = &self.lm_head {
+            total += h.bytes();
+        }
+        total
     }
 
     /// Whether models built on this backbone can serve autoregressive
@@ -92,26 +312,43 @@ impl Backbone {
         self.cfg.arch == Arch::Decoder && self.lm_head.is_some()
     }
 
-    /// The `Arc`-shared handle of a dense module weight — used to install
+    /// The shared handle of a dense module weight — used to install
     /// frozen modules into a [`NativeModel`] without copying.
-    pub fn weight_shared(&self, layer: usize, module: ModuleKind) -> Arc<Mat> {
+    pub fn weight_shared(&self, layer: usize, module: ModuleKind) -> SharedMat {
         let (_, w) =
             self.layer_weights[layer].iter().find(|(m, _)| *m == module).expect("module");
-        Arc::clone(w)
+        w.clone()
     }
 
     /// FNV-1a 64 fingerprint over the full frozen state (config ints, then
-    /// every tensor's f32 bit patterns in declaration order). Adapter
-    /// artifacts (`peft::artifact`) record this at export and refuse to
-    /// load onto a backbone whose fingerprint differs, so a checkpoint can
-    /// never be silently applied to the wrong frozen weights. The frozen
-    /// state is immutable, so the hash is computed once and cached.
+    /// every tensor in declaration order). Adapter artifacts
+    /// (`peft::artifact`) record this at export and refuse to load onto a
+    /// backbone whose fingerprint differs, so a checkpoint can never be
+    /// silently applied to the wrong frozen weights. f32 tensors hash
+    /// their f32 bit patterns — byte-for-byte the pre-quantization
+    /// stream, so existing artifacts stay valid — while int8 tensors hash
+    /// a dtype tag plus the quantized codes and block scales, so f32 and
+    /// int8 views of one checkpoint are distinct backbones to the
+    /// artifact layer (an adapter built against one refuses the other).
+    /// The frozen state is immutable, so the hash is computed once and
+    /// cached.
     pub fn fingerprint(&self) -> u64 {
         *self.fp_cache.get_or_init(|| self.compute_fingerprint())
     }
 
     fn compute_fingerprint(&self) -> u64 {
         use crate::peft::artifact::Fnv64;
+        fn hash_tensor(h: &mut Fnv64, t: &SharedMat) {
+            match t {
+                SharedMat::F32(m) => h.update_f32s(&m.data),
+                SharedMat::Int8(q) => {
+                    h.update_u32(0x5138_0001); // int8 dtype tag
+                    let codes: Vec<u8> = q.q.iter().map(|&v| v as u8).collect();
+                    h.update(&codes);
+                    h.update_f32s(&q.scales);
+                }
+            }
+        }
         let mut h = Fnv64::new();
         let cfg = &self.cfg;
         h.update_u32(match cfg.arch {
@@ -129,22 +366,31 @@ impl Backbone {
         ] {
             h.update_u32(v as u32);
         }
-        h.update_f32s(&self.tok_emb.data);
-        h.update_f32s(&self.pos_emb.data);
+        hash_tensor(&mut h, &self.tok_emb);
+        hash_tensor(&mut h, &self.pos_emb);
         for layer in &self.layer_weights {
             for (_, w) in layer {
-                h.update_f32s(&w.data);
+                hash_tensor(&mut h, w);
             }
         }
         if let Some(head) = &self.lm_head {
-            h.update_f32s(&head.data);
+            hash_tensor(&mut h, head);
         }
         h.finish()
     }
 
     /// Binary checkpoint: magic, config ints, then raw f32 LE tensors in
-    /// declaration order.
+    /// declaration order. Checkpoints are f32-only — quantization is a
+    /// load-time transform ([`Backbone::to_dtype`]), so a quantized view
+    /// is never the source of truth on disk.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if self.dtype() != BackboneDtype::F32 {
+            bail!(
+                "backbone checkpoints are f32-only (this backbone is {}); \
+                 save the f32 original and quantize at load time with to_dtype",
+                self.dtype().name()
+            );
+        }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(b"PSOFTBB1")?;
         let cfg = &self.cfg;
@@ -170,15 +416,15 @@ impl Backbone {
             }
             Ok(())
         };
-        write_mat(&mut f, &self.tok_emb)?;
-        write_mat(&mut f, &self.pos_emb)?;
+        write_mat(&mut f, self.tok_emb.as_f32())?;
+        write_mat(&mut f, self.pos_emb.as_f32())?;
         for layer in &self.layer_weights {
             for (_, w) in layer {
-                write_mat(&mut f, w)?;
+                write_mat(&mut f, w.as_f32())?;
             }
         }
         if let Some(h) = &self.lm_head {
-            write_mat(&mut f, h)?;
+            write_mat(&mut f, h.as_f32())?;
         }
         Ok(())
     }
@@ -217,19 +463,20 @@ impl Backbone {
             }
             Ok(Mat::from_vec(rows, cols, data))
         };
-        let tok_emb = Arc::new(read_mat(&mut f, cfg.vocab_size, cfg.d_model)?);
-        let pos_emb = Arc::new(read_mat(&mut f, cfg.max_seq, cfg.d_model)?);
+        let f32m = |m: Mat| SharedMat::F32(Arc::new(m));
+        let tok_emb = f32m(read_mat(&mut f, cfg.vocab_size, cfg.d_model)?);
+        let pos_emb = f32m(read_mat(&mut f, cfg.max_seq, cfg.d_model)?);
         let mut layer_weights = Vec::with_capacity(cfg.n_layers);
         for _ in 0..cfg.n_layers {
             let mut mods = Vec::new();
             for m in cfg.modules() {
                 let (din, dout) = cfg.module_shape(m);
-                mods.push((m, Arc::new(read_mat(&mut f, din, dout)?)));
+                mods.push((m, f32m(read_mat(&mut f, din, dout)?)));
             }
             layer_weights.push(mods);
         }
         let lm_head = match cfg.arch {
-            Arch::Decoder => Some(Arc::new(read_mat(&mut f, cfg.d_model, cfg.vocab_size)?)),
+            Arch::Decoder => Some(f32m(read_mat(&mut f, cfg.d_model, cfg.vocab_size)?)),
             Arch::Encoder => None,
         };
         Ok(Backbone {
@@ -250,15 +497,16 @@ pub struct Layer {
 }
 
 pub enum ModuleOp {
-    /// Frozen dense module — an `Arc` handle into the shared backbone.
-    Dense(Arc<Mat>),
+    /// Frozen dense module — a shared handle into the backbone (f32 or
+    /// block-quantized; forward/backward dispatch on the storage).
+    Dense(SharedMat),
     Adapted(Box<dyn Adapter>),
 }
 
 impl ModuleOp {
     pub fn forward(&self, x: &Mat) -> Mat {
         match self {
-            ModuleOp::Dense(w) => crate::linalg::matmul(x, &**w),
+            ModuleOp::Dense(w) => w.matmul(x),
             ModuleOp::Adapted(a) => a.forward(x),
         }
     }
@@ -267,7 +515,7 @@ impl ModuleOp {
     /// comes from `ws` (the zero-allocation training path).
     pub fn forward_into(&self, x: &Mat, y: &mut Mat, ws: &mut crate::linalg::Workspace) {
         match self {
-            ModuleOp::Dense(w) => crate::linalg::matmul_into(x, &**w, y),
+            ModuleOp::Dense(w) => w.matmul_into(x, y),
             ModuleOp::Adapted(a) => a.forward_into(x, y, ws),
         }
     }
@@ -275,7 +523,7 @@ impl ModuleOp {
     /// Output width of this module.
     pub fn out_dim(&self) -> usize {
         match self {
-            ModuleOp::Dense(w) => w.cols,
+            ModuleOp::Dense(w) => w.cols(),
             ModuleOp::Adapted(a) => a.shape().1,
         }
     }
@@ -291,10 +539,10 @@ impl ModuleOp {
 pub struct NativeModel {
     pub cfg: ModelConfig,
     pub peft: PeftConfig,
-    pub tok_emb: Arc<Mat>,
-    pub pos_emb: Arc<Mat>,
+    pub tok_emb: SharedMat,
+    pub pos_emb: SharedMat,
     pub layers: Vec<Layer>,
-    pub lm_head: Option<Arc<Mat>>,
+    pub lm_head: Option<SharedMat>,
     /// Encoder classification/regression head (always trainable).
     pub head_w: Mat,
     pub head_b: Vec<f32>,
@@ -316,7 +564,11 @@ impl NativeModel {
             for m in cfg.modules() {
                 let op = if peft.modules.contains(&m) {
                     let mut child = rng.child((l * 16 + m as usize) as u64);
-                    ModuleOp::Adapted(build_adapter(peft, bb.weight(l, m), &mut child))
+                    // Borrowed (bit-identical) for f32 backbones; a
+                    // one-time dequantization for int8, where the frozen
+                    // factors absorb the quantization error at build.
+                    let w = bb.weight(l, m).dense();
+                    ModuleOp::Adapted(build_adapter(peft, &w, &mut child))
                 } else {
                     ModuleOp::Dense(bb.weight_shared(l, m))
                 };
@@ -329,8 +581,8 @@ impl NativeModel {
         NativeModel {
             cfg: cfg.clone(),
             peft: peft.clone(),
-            tok_emb: Arc::clone(&bb.tok_emb),
-            pos_emb: Arc::clone(&bb.pos_emb),
+            tok_emb: bb.tok_emb.clone(),
+            pos_emb: bb.pos_emb.clone(),
             layers,
             lm_head: bb.lm_head.clone(),
             head_w,
@@ -362,8 +614,8 @@ impl NativeModel {
                     .iter()
                     .map(|(m, op)| {
                         let w = match op {
-                            ModuleOp::Dense(w) => Arc::clone(w),
-                            ModuleOp::Adapted(a) => Arc::new(a.materialize()),
+                            ModuleOp::Dense(w) => w.clone(),
+                            ModuleOp::Adapted(a) => SharedMat::F32(Arc::new(a.materialize())),
                         };
                         (*m, w)
                     })
@@ -372,8 +624,8 @@ impl NativeModel {
             .collect();
         Backbone {
             cfg: self.cfg.clone(),
-            tok_emb: Arc::clone(&self.tok_emb),
-            pos_emb: Arc::clone(&self.pos_emb),
+            tok_emb: self.tok_emb.clone(),
+            pos_emb: self.pos_emb.clone(),
             layer_weights,
             lm_head: self.lm_head.clone(),
             fp_cache: std::sync::OnceLock::new(),
@@ -418,9 +670,9 @@ impl NativeModel {
             n += self.head_w.data.len() + self.head_b.len();
         }
         if self.train_embeddings {
-            n += self.tok_emb.data.len() + self.pos_emb.data.len();
+            n += self.tok_emb.len() + self.pos_emb.len();
             if let Some(h) = &self.lm_head {
-                n += h.data.len();
+                n += h.len();
             }
         }
         n
@@ -453,10 +705,12 @@ impl NativeModel {
             out.extend_from_slice(&self.head_b);
         }
         if self.train_embeddings {
-            out.extend_from_slice(&self.tok_emb.data);
-            out.extend_from_slice(&self.pos_emb.data);
+            // Pretraining is f32-only: quantized backbones never train
+            // embeddings, so the panic in as_f32 is unreachable here.
+            out.extend_from_slice(&self.tok_emb.as_f32().data);
+            out.extend_from_slice(&self.pos_emb.as_f32().data);
             if let Some(h) = &self.lm_head {
-                out.extend_from_slice(&h.data);
+                out.extend_from_slice(&h.as_f32().data);
             }
         }
         out
@@ -483,16 +737,16 @@ impl NativeModel {
             off += nb;
         }
         if self.train_embeddings {
-            let tok = Arc::make_mut(&mut self.tok_emb);
+            let tok = self.tok_emb.make_mut_f32();
             let nt = tok.data.len();
             tok.data.copy_from_slice(&p[off..off + nt]);
             off += nt;
-            let pos = Arc::make_mut(&mut self.pos_emb);
+            let pos = self.pos_emb.make_mut_f32();
             let np = pos.data.len();
             pos.data.copy_from_slice(&p[off..off + np]);
             off += np;
             if let Some(h) = &mut self.lm_head {
-                let h = Arc::make_mut(h);
+                let h = h.make_mut_f32();
                 let nh = h.data.len();
                 h.data.copy_from_slice(&p[off..off + nh]);
                 off += nh;
@@ -521,8 +775,8 @@ impl NativeModel {
         let d = self.cfg.d_model;
         let enc = self.cfg.arch == Arch::Encoder;
         let mut out = Vec::new();
-        out.extend_from_slice(&self.tok_emb.data);
-        out.extend_from_slice(&self.pos_emb.data);
+        self.tok_emb.push_f32s(&mut out);
+        self.pos_emb.push_f32s(&mut out);
         for layer in &self.layers {
             out.extend(std::iter::repeat(1.0f32).take(d)); // ln1.g
             if enc {
@@ -530,7 +784,7 @@ impl NativeModel {
             }
             for (_, op) in &layer.modules {
                 match op {
-                    ModuleOp::Dense(w) => out.extend_from_slice(&w.data),
+                    ModuleOp::Dense(w) => w.push_f32s(&mut out),
                     ModuleOp::Adapted(a) => out.extend(a.frozen()),
                 }
             }
@@ -543,27 +797,34 @@ impl NativeModel {
         if enc {
             out.extend(std::iter::repeat(0.0f32).take(d)); // final.b
         } else {
-            out.extend_from_slice(&self.lm_head.as_ref().expect("decoder lm_head").data);
+            self.lm_head.as_ref().expect("decoder lm_head").push_f32s(&mut out);
         }
         out
     }
 
-    /// Bytes of frozen backbone state this model *references* rather than
-    /// owns (embeddings, dense modules, decoder LM head) — the per-model
-    /// memory a multi-adapter host saves by sharing one backbone.
+    /// Resident bytes of frozen backbone state this model *references*
+    /// rather than owns (embeddings, dense modules, decoder LM head) —
+    /// the per-model memory a multi-adapter host saves by sharing one
+    /// backbone. Dtype-aware: int8 storage counts its codes + block
+    /// scales (≈ 1.0625 bytes/element), f32 counts 4 bytes/element.
     pub fn shared_frozen_bytes(&self) -> usize {
-        let mut n = self.tok_emb.data.len() + self.pos_emb.data.len();
+        let mut n = self.tok_emb.bytes() + self.pos_emb.bytes();
         if let Some(h) = &self.lm_head {
-            n += h.data.len();
+            n += h.bytes();
         }
         for layer in &self.layers {
             for (_, op) in &layer.modules {
                 if let ModuleOp::Dense(w) = op {
-                    n += w.data.len();
+                    n += w.bytes();
                 }
             }
         }
-        n * std::mem::size_of::<f32>()
+        n
+    }
+
+    /// Storage dtype of the shared frozen tensors this model references.
+    pub fn backbone_dtype(&self) -> BackboneDtype {
+        self.tok_emb.dtype()
     }
 
     /// Sum of orthogonality defects over adapters that define one
@@ -690,19 +951,19 @@ mod tests {
             .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
         let m1 = NativeModel::from_backbone(&bb, &peft, &mut rng);
         let m2 = NativeModel::from_backbone(&bb, &peft, &mut rng);
-        assert!(Arc::ptr_eq(&m1.tok_emb, &bb.tok_emb));
-        assert!(Arc::ptr_eq(&m1.tok_emb, &m2.tok_emb));
-        assert!(Arc::ptr_eq(&m1.pos_emb, &m2.pos_emb));
+        assert!(SharedMat::ptr_eq(&m1.tok_emb, &bb.tok_emb));
+        assert!(SharedMat::ptr_eq(&m1.tok_emb, &m2.tok_emb));
+        assert!(SharedMat::ptr_eq(&m1.pos_emb, &m2.pos_emb));
         // Un-adapted modules share the backbone weight allocation.
         let dense = |m: &NativeModel| {
             let (_, op) =
                 m.layers[0].modules.iter().find(|(k, _)| *k == ModuleKind::O).unwrap();
             match op {
-                ModuleOp::Dense(w) => Arc::clone(w),
+                ModuleOp::Dense(w) => w.clone(),
                 _ => panic!("O should be dense"),
             }
         };
-        assert!(Arc::ptr_eq(&dense(&m1), &dense(&m2)));
+        assert!(SharedMat::ptr_eq(&dense(&m1), &dense(&m2)));
         assert!(m1.shared_frozen_bytes() > 0);
         // Trainable state is NOT shared: training one model leaves the
         // other (and the backbone) untouched.
@@ -726,9 +987,40 @@ mod tests {
         let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
         let merged = model.to_backbone();
         // At identity init, merging recovers the pretrained weights.
-        let d0 = merged.weight(0, ModuleKind::Q).dist(bb.weight(0, ModuleKind::Q));
+        let d0 =
+            merged.weight(0, ModuleKind::Q).as_f32().dist(bb.weight(0, ModuleKind::Q).as_f32());
         assert!(d0 < 1e-3, "dist {d0}");
         // Dense (un-adapted) modules are bit-identical.
         assert_eq!(merged.weight(0, ModuleKind::K), bb.weight(0, ModuleKind::K));
+    }
+
+    #[test]
+    fn to_dtype_round_trips_and_shrinks() {
+        let mut rng = Rng::new(208);
+        let cfg = tiny_cfg();
+        let bb = Backbone::random(&cfg, &mut rng);
+        // Same-dtype conversion shares the allocations and the
+        // fingerprint (bit-identical view of the same backbone).
+        let same = bb.to_dtype(crate::config::BackboneDtype::F32);
+        assert!(SharedMat::ptr_eq(&same.tok_emb, &bb.tok_emb));
+        assert_eq!(same.fingerprint(), bb.fingerprint());
+        // int8 is a different backbone to the artifact layer, with a
+        // ≥ 3× smaller resident footprint.
+        let q = bb.to_dtype(crate::config::BackboneDtype::Int8);
+        assert_eq!(q.dtype(), crate::config::BackboneDtype::Int8);
+        assert_ne!(q.fingerprint(), bb.fingerprint());
+        let peft = PeftConfig::new(MethodKind::Lora, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let mf = NativeModel::from_backbone(&bb, &peft, &mut Rng::new(1));
+        let mq = NativeModel::from_backbone(&q, &peft, &mut Rng::new(1));
+        let ratio = mq.shared_frozen_bytes() as f64 / mf.shared_frozen_bytes() as f64;
+        assert!(ratio < 0.35, "int8/f32 resident ratio {ratio}");
+        // Quantized weights reconstruct within the documented budget.
+        let wq = q.weight(0, ModuleKind::K).dense();
+        let wf = bb.weight(0, ModuleKind::K).as_f32();
+        let max_abs = wf.data.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in wq.data.iter().zip(&wf.data) {
+            assert!((a - b).abs() <= max_abs / 254.0 + 1e-6);
+        }
     }
 }

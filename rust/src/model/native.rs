@@ -595,11 +595,9 @@ pub fn decode_step(
 
     // x = tok_emb[token] + pos_emb[pos].
     {
-        let erow = model.tok_emb.row(tok);
-        let prow = model.pos_emb.row(pos);
-        for (o, (&e, &p)) in cache.x.row_mut(0).iter_mut().zip(erow.iter().zip(prow)) {
-            *o = e + p;
-        }
+        let out = cache.x.row_mut(0);
+        model.tok_emb.copy_row(tok, out);
+        model.pos_emb.add_row(pos, out);
     }
 
     for (li, layer) in model.layers.iter().enumerate() {
@@ -634,8 +632,8 @@ pub fn decode_step(
     }
 
     rmsnorm_into(&cache.x, &mut cache.hidden);
-    let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
-    matmul_into(&cache.hidden, lm, &mut cache.logits);
+    let lm = model.lm_head.as_ref().expect("decoder lm_head");
+    lm.matmul_into(&cache.hidden, &mut cache.logits);
     cache.len = pos + 1;
 }
 
@@ -1133,11 +1131,9 @@ impl GroupDecodeCache {
                 };
                 let tok = inp as usize;
                 assert!(tok < cfg.vocab_size, "token {inp} out of vocab ({})", cfg.vocab_size);
-                let erow = model.tok_emb.row(tok);
-                let prow = model.pos_emb.row(l.kv.len);
-                for (o, (&e, &p)) in x.row_mut(r).iter_mut().zip(erow.iter().zip(prow)) {
-                    *o = e + p;
-                }
+                let out = x.row_mut(r);
+                model.tok_emb.copy_row(tok, out);
+                model.pos_emb.add_row(l.kv.len, out);
             }
 
             for (li, layer) in model.layers.iter().enumerate() {
@@ -1179,8 +1175,8 @@ impl GroupDecodeCache {
             }
 
             rmsnorm_into(x, hidden);
-            let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
-            matmul_into(hidden, lm, logits);
+            let lm = model.lm_head.as_ref().expect("decoder lm_head");
+            lm.matmul_into(hidden, logits);
 
             // Scatter: per-lane cursor advance + token selection from the
             // lane's own logits row with the lane's own RNG stream.
@@ -1223,14 +1219,14 @@ pub fn prefill_logits(model: &NativeModel, tokens: &[i32]) -> Vec<Mat> {
     let mut ws = Workspace::new();
     bufs.ensure(model, &batch);
     forward_cached(model, &batch, &mut bufs, &mut ws);
-    let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
+    let lm = model.lm_head.as_ref().expect("decoder lm_head");
     let d = model.cfg.d_model;
     (0..n)
         .map(|t| {
             let mut h = Mat::zeros(1, d);
             h.row_mut(0).copy_from_slice(bufs.hidden.row(t));
             let mut out = Mat::zeros(1, model.cfg.vocab_size);
-            matmul_into(&h, lm, &mut out);
+            lm.matmul_into(&h, &mut out);
             out
         })
         .collect()
@@ -1295,11 +1291,11 @@ impl GradOffsets {
         let mut pos = off;
         let mut lm = off;
         if model.train_embeddings {
-            pos = tok + model.tok_emb.data.len();
-            off = pos + model.pos_emb.data.len();
+            pos = tok + model.tok_emb.len();
+            off = pos + model.pos_emb.len();
             lm = off;
             if let Some(h) = &model.lm_head {
-                off += h.data.len();
+                off += h.len();
             }
         }
         GradOffsets { adapters, head_w, head_b, tok, pos, lm, total: off }
@@ -1471,11 +1467,9 @@ fn forward_cached(model: &NativeModel, batch: &Batch, bufs: &mut StepBuffers, ws
             for s in 0..seq {
                 let t = b * seq + s;
                 let tok = batch.tokens[t] as usize;
-                let erow = model.tok_emb.row(tok);
-                let prow = model.pos_emb.row(s);
-                for (o, (&e, &p)) in x0.row_mut(t).iter_mut().zip(erow.iter().zip(prow)) {
-                    *o = e + p;
-                }
+                let out = x0.row_mut(t);
+                model.tok_emb.copy_row(tok, out);
+                model.pos_emb.add_row(s, out);
             }
         }
     }
@@ -1721,7 +1715,7 @@ fn loss_backward_into(
             (loss, neg_sq)
         }
         (Target::LmMask(mask), Arch::Decoder) => {
-            let lm: &Mat = model.lm_head.as_ref().expect("decoder lm_head");
+            let lm = model.lm_head.as_ref().expect("decoder lm_head");
             let vsz = model.cfg.vocab_size;
             // Positions t = b*S+s with s < S−1 predict token at s+1 with
             // weight mask[b*S+s+1]. Vectorized: gather the masked rows,
@@ -1765,7 +1759,7 @@ fn loss_backward_into(
                 lb.h_sel.row_mut(ri).copy_from_slice(hidden.row(t));
             }
             lb.lm_logits.resize(m.max(1), vsz);
-            matmul_into(&lb.h_sel, lm, &mut lb.lm_logits); // [M, V]
+            lm.matmul_into(&lb.h_sel, &mut lb.lm_logits); // [M, V]
             let mut loss = 0.0f64;
             lb.row_ok.clear();
             lb.row_ok.resize(m, true);
@@ -1835,7 +1829,7 @@ fn loss_backward_into(
                 d_hidden.fill(0.0);
                 if m > 0 {
                     lb.dh_sel.resize(m, d);
-                    matmul_nt_into(&lb.lm_logits, lm, &mut lb.dh_sel);
+                    lm.matmul_nt_into(&lb.lm_logits, &mut lb.dh_sel);
                     for (ri, &(t, _, _)) in lb.rows.iter().enumerate() {
                         d_hidden.row_mut(t).copy_from_slice(lb.dh_sel.row(ri));
                     }
@@ -1901,7 +1895,7 @@ fn back_module_into(
     ws: &mut Workspace,
 ) {
     match module(layer, kind) {
-        ModuleOp::Dense(w) => matmul_nt_into(dy, &**w, dx_out),
+        ModuleOp::Dense(w) => w.matmul_nt_into(dy, dx_out),
         ModuleOp::Adapted(a) => {
             // Slot index of `kind` among this layer's adapted modules.
             let mut idx = 0;

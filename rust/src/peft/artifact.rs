@@ -26,15 +26,18 @@
 //!   loaded onto the wrong frozen weights,
 //! - a trailing **checksum** over the entire encoding.
 //!
-//! # Binary layout (schema version 1)
+//! # Binary layout (schema version 2)
 //!
 //! All integers are little-endian. Floats are IEEE-754 bit patterns
-//! (`to_le_bytes`), so round-trips are bit-exact including NaN payloads.
+//! (`to_le_bytes`), so f32 sections round-trip bit-exactly including NaN
+//! payloads. The magic is `PSOFTAD1` for every version — the `1` is part
+//! of the brand, not the schema; the `schema_version` field alone governs
+//! the layout, and this build reads versions 1 and 2.
 //!
 //! ```text
 //! offset  size  field
 //! 0       8     magic "PSOFTAD1"
-//! 8       4     schema_version: u32 (== 1)
+//! 8       4     schema_version: u32 (1 | 2)
 //! --- header (all offsets from byte 12 on) ---
 //!         4     method tag: u32        (index into MethodKind::ALL)
 //!         4     arch: u32              (0 = encoder, 1 = decoder)
@@ -56,15 +59,32 @@
 //!         8     seed: u64              (adapter construction seed)
 //!         8     backbone fingerprint: u64 (FNV-1a over config + tensors)
 //!         8     opt_step: u64          (AdamW step count)
+//!         1     artifact_flags: u8     (v2 only; bit0 inference_only —
+//!                                       optimizer moments omitted)
 //!         4+n   label: u32 byte-length + UTF-8 bytes
 //!         4     n_sections: u32
 //! --- per section, n_sections times ---
 //!         4+n   name: u32 byte-length + UTF-8 bytes
+//!         1     encoding: u8           (v2 only; 0 = f32, 1 = f16)
 //!         4     n_floats: u32
-//!         4×n   data: f32 bit patterns
+//!         4×n   data: f32 bit patterns (encoding 0)
+//!         2×n   data: f16 bit patterns (encoding 1; decoded back to f32
+//!                                       on read — widening is exact)
 //! --- trailer ---
 //!         8     checksum: u64 — FNV-1a 64 over every preceding byte
 //! ```
+//!
+//! Version 1 is the same stream minus `artifact_flags` and the per-section
+//! `encoding` byte (all sections implicitly f32); v1 artifacts decode with
+//! `inference_only = false` and `f16_sections = false`.
+//!
+//! f16 sections exist for *inference-only* exports: narrowing is
+//! round-to-nearest-even and therefore lossy (~1e-3 relative), which is
+//! harmless for serving but unacceptable for optimizer resume — so
+//! [`crate::runtime::NativeBackend::to_artifact`] always writes f32
+//! training artifacts, and the f16 + no-moments combination comes from
+//! the dedicated inference-export path. Together they cut artifact bytes
+//! roughly 6× (2× narrowing × 3× from dropping `adam.m`/`adam.v`).
 //!
 //! Read-side validation order: magic → schema version → checksum →
 //! field parse. A schema mismatch therefore reports
@@ -77,8 +97,12 @@ use crate::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig, Psoft
 use std::fmt;
 use std::path::Path;
 
-/// Current artifact schema version. Bump on any layout change.
-pub const SCHEMA_VERSION: u32 = 1;
+/// Current artifact schema version. Bump on any layout change. The
+/// reader also accepts [`MIN_SCHEMA_VERSION`]..=this.
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// Oldest schema version this build still reads.
+pub const MIN_SCHEMA_VERSION: u32 = 1;
 
 /// Maximum encoded string length (labels, section names). Enforced by the
 /// reader; writers must respect it or their artifacts can never be read
@@ -118,8 +142,8 @@ impl fmt::Display for ArtifactError {
             ArtifactError::BadMagic => write!(f, "not a PSOFT adapter artifact (bad magic)"),
             ArtifactError::SchemaVersion { found, supported } => write!(
                 f,
-                "artifact schema version {found} is not supported \
-                 (this build reads version {supported}); re-export the adapter"
+                "artifact schema version {found} is not supported (this build reads \
+                 versions {MIN_SCHEMA_VERSION}..={supported}); re-export the adapter"
             ),
             ArtifactError::Corrupt { stored, computed } => write!(
                 f,
@@ -201,6 +225,80 @@ pub fn fnv64(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
+// ---------------------------------------------------------------------------
+// IEEE binary16 codec (hand-rolled; no half-float dependency)
+// ---------------------------------------------------------------------------
+
+/// Right-shift with round-to-nearest, ties-to-even.
+#[inline]
+fn rne_shift(v: u32, s: u32) -> u32 {
+    let q = v >> s;
+    let rem = v & ((1 << s) - 1);
+    let half = 1 << (s - 1);
+    q + ((rem > half || (rem == half && q & 1 == 1)) as u32)
+}
+
+/// Narrow an f32 to IEEE binary16 bits, round-to-nearest-even.
+/// Overflow saturates to ±inf, underflow flushes to signed zero; NaN
+/// stays NaN (quiet, top mantissa bits preserved); subnormal halves are
+/// produced exactly.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let abs = b & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf / NaN. Force the quiet bit so a NaN whose kept mantissa
+        // bits are all zero cannot collapse to inf.
+        let m = if abs == 0x7f80_0000 { 0 } else { 0x0200 | ((abs >> 13) & 0x03ff) as u16 };
+        return sign | 0x7c00 | m;
+    }
+    let exp = (abs >> 23) as i32; // biased f32 exponent
+    if exp > 142 {
+        return sign | 0x7c00; // |x| >= 65536: overflow to inf
+    }
+    if exp >= 113 {
+        // Normal half. Rounding the 13 dropped bits may carry into the
+        // exponent (and up to inf at the top) — the carry is correct by
+        // construction because exponent and mantissa are adjacent.
+        let h = rne_shift(abs, 13) - (112 << 10);
+        return sign | h as u16;
+    }
+    if exp >= 102 {
+        // Subnormal half: round(mantissa24 × 2^(exp−126)) in half-ulps.
+        let man24 = (abs & 0x007f_ffff) | 0x0080_0000;
+        let h = rne_shift(man24, (126 - exp) as u32);
+        return sign | h as u16;
+    }
+    sign // underflow to signed zero
+}
+
+/// Widen IEEE binary16 bits to f32 — exact for every input, so
+/// f16 → f32 → f16 round-trips bit-identically.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into an f32 normal.
+            let mut e = 113u32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
 /// One exported adapter: the in-memory form of the binary format above.
 #[derive(Clone, Debug, PartialEq)]
 pub struct AdapterArtifact {
@@ -223,10 +321,21 @@ pub struct AdapterArtifact {
     /// AdamW step count (the `adam.m` / `adam.v` sections restore the
     /// moments themselves).
     pub opt_step: u64,
+    /// v2 `artifact_flags` bit0: the optimizer-moment sections were
+    /// dropped at export. Such an artifact serves and evaluates normally
+    /// but resumes training with fresh (zero) moments. Always `false`
+    /// for v1 artifacts.
+    pub inference_only: bool,
+    /// Encode parameter sections as IEEE binary16 (v2 per-section
+    /// `encoding = 1`). Halves section bytes at ~1e-3 relative rounding
+    /// — inference-export only; training artifacts stay f32 so optimizer
+    /// resume is bit-exact. On read this reflects the sections'
+    /// on-disk encoding (the writer is all-or-nothing across sections).
+    pub f16_sections: bool,
     /// Named parameter sections in canonical order: per layer, per adapted
     /// module, the adapter's `state_layout()` pieces (names prefixed
     /// `l{layer}.{module}.`), then `head.w` / `head.b` (encoder), then
-    /// `adam.m` / `adam.v`.
+    /// `adam.m` / `adam.v` (absent when `inference_only`).
     pub sections: Vec<Section>,
 }
 
@@ -286,6 +395,13 @@ impl Writer {
             self.buf.extend_from_slice(&v.to_le_bytes());
         }
     }
+
+    fn f16s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 2);
+        for &v in vs {
+            self.buf.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+        }
+    }
 }
 
 struct Reader<'a> {
@@ -339,15 +455,39 @@ impl<'a> Reader<'a> {
         }
         Ok(out)
     }
+
+    fn f16s(&mut self, n: usize, at: &'static str) -> Result<Vec<f32>, ArtifactError> {
+        let bytes = self.take(n * 2, at)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(2) {
+            out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+        }
+        Ok(out)
+    }
 }
 
 impl AdapterArtifact {
-    /// Serialize to the schema-1 byte layout (including the trailing
-    /// checksum).
+    /// Serialize to the current (schema-2) byte layout, including the
+    /// trailing checksum. Section encoding follows `f16_sections`; the
+    /// `inference_only` flag is recorded but it is the caller's job to
+    /// have actually dropped the `adam.*` sections.
     pub fn to_bytes(&self) -> Vec<u8> {
+        self.encode(SCHEMA_VERSION)
+    }
+
+    /// Serialize to the legacy schema-1 layout — kept so back-compat
+    /// tests can mint genuine v1 byte streams without a fixture file.
+    /// v1 cannot express `inference_only` or f16 sections; both are
+    /// silently dropped (sections are written f32).
+    #[doc(hidden)]
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
+        self.encode(1)
+    }
+
+    fn encode(&self, version: u32) -> Vec<u8> {
         let mut w = Writer::new();
         w.buf.extend_from_slice(MAGIC);
-        w.u32(self.schema_version);
+        w.u32(version);
         w.u32(method_tag(self.method));
         let m = &self.model;
         w.u32(match m.arch {
@@ -391,20 +531,31 @@ impl AdapterArtifact {
         w.u64(self.seed);
         w.u64(self.backbone_fp);
         w.u64(self.opt_step);
+        if version >= 2 {
+            w.u8(self.inference_only as u8);
+        }
         w.str(&self.label);
         w.u32(self.sections.len() as u32);
+        let f16 = version >= 2 && self.f16_sections;
         for s in &self.sections {
             w.str(&s.name);
+            if version >= 2 {
+                w.u8(f16 as u8);
+            }
             w.u32(s.data.len() as u32);
-            w.f32s(&s.data);
+            if f16 {
+                w.f16s(&s.data);
+            } else {
+                w.f32s(&s.data);
+            }
         }
         let checksum = fnv64(&w.buf);
         w.u64(checksum);
         w.buf
     }
 
-    /// Parse and validate a schema-1 byte stream. Validation order:
-    /// magic → schema version → checksum → fields.
+    /// Parse and validate a schema-1 or schema-2 byte stream. Validation
+    /// order: magic → schema version → checksum → fields.
     pub fn from_bytes(bytes: &[u8]) -> Result<AdapterArtifact, ArtifactError> {
         if bytes.len() < MAGIC.len() + 4 + 8 {
             return Err(ArtifactError::Truncated { at: "header" });
@@ -413,7 +564,7 @@ impl AdapterArtifact {
             return Err(ArtifactError::BadMagic);
         }
         let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
-        if version != SCHEMA_VERSION {
+        if !(MIN_SCHEMA_VERSION..=SCHEMA_VERSION).contains(&version) {
             return Err(ArtifactError::SchemaVersion { found: version, supported: SCHEMA_VERSION });
         }
         let body_end = bytes.len() - 8;
@@ -496,16 +647,45 @@ impl AdapterArtifact {
         let seed = r.u64("seed")?;
         let backbone_fp = r.u64("backbone fingerprint")?;
         let opt_step = r.u64("opt_step")?;
+        let inference_only = if version >= 2 {
+            let flags = r.u8("artifact_flags")?;
+            if flags & !1 != 0 {
+                return Err(ArtifactError::Invalid { what: "artifact_flags", value: flags as u64 });
+            }
+            flags & 1 != 0
+        } else {
+            false
+        };
         let label = r.str("label")?;
         let n_sections = r.u32("section count")? as usize;
         if n_sections > 1 << 24 {
             return Err(ArtifactError::Invalid { what: "section count", value: n_sections as u64 });
         }
         let mut sections = Vec::with_capacity(n_sections);
+        let mut f16_sections = false;
         for _ in 0..n_sections {
             let name = r.str("section name")?;
+            let f16 = if version >= 2 {
+                match r.u8("section encoding")? {
+                    0 => false,
+                    1 => true,
+                    other => {
+                        return Err(ArtifactError::Invalid {
+                            what: "section encoding",
+                            value: other as u64,
+                        })
+                    }
+                }
+            } else {
+                false
+            };
+            f16_sections |= f16;
             let n = r.u32("section length")? as usize;
-            let data = r.f32s(n, "section data")?;
+            let data = if f16 {
+                r.f16s(n, "section data")?
+            } else {
+                r.f32s(n, "section data")?
+            };
             sections.push(Section { name, data });
         }
         if r.i != r.b.len() {
@@ -523,6 +703,8 @@ impl AdapterArtifact {
             seed,
             backbone_fp,
             opt_step,
+            inference_only,
+            f16_sections,
             sections,
         })
     }
@@ -575,6 +757,69 @@ impl AdapterArtifact {
     pub fn total_floats(&self) -> usize {
         self.sections.iter().map(|s| s.data.len()).sum()
     }
+
+    /// Drop this artifact into inference-only form: remove the `adam.*`
+    /// moment sections, zero the step counter, set the v2 flags so the
+    /// sections encode as f16. The returned artifact serves and evaluates;
+    /// resuming training from it restarts the optimizer cold.
+    pub fn to_inference_only(&self) -> AdapterArtifact {
+        let mut out = self.clone();
+        out.sections.retain(|s| !s.name.starts_with("adam."));
+        out.opt_step = 0;
+        out.inference_only = true;
+        out.f16_sections = true;
+        out
+    }
+}
+
+/// Scan `dir` for `*.psoftad` artifacts and write a `manifest.json`
+/// index next to them (file name, label, method, schema version, flags,
+/// sizes — everything `psoft inspect`-style tooling needs without
+/// re-reading every artifact). Files that fail validation are listed
+/// with their error instead of aborting the whole index. Returns the
+/// number of artifacts indexed.
+pub fn write_manifest(dir: &Path) -> anyhow::Result<usize> {
+    use crate::util::json::Json;
+    let mut names: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading artifact dir {}: {e}", dir.display()))?
+        .filter_map(|ent| ent.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("psoftad"))
+        .collect();
+    names.sort();
+    let mut entries = Vec::with_capacity(names.len());
+    for path in &names {
+        let file = path.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading artifact {}: {e}", path.display()))?;
+        match AdapterArtifact::from_bytes(&bytes) {
+            Ok(a) => entries.push(Json::obj(vec![
+                ("file", Json::Str(file)),
+                ("label", Json::Str(a.label.clone())),
+                ("method", Json::Str(a.method.name().to_string())),
+                ("schema_version", Json::Num(a.schema_version as f64)),
+                ("inference_only", Json::Bool(a.inference_only)),
+                ("f16_sections", Json::Bool(a.f16_sections)),
+                ("seed", Json::Num(a.seed as f64)),
+                ("backbone_fp", Json::Str(format!("{:#018x}", a.backbone_fp))),
+                ("opt_step", Json::Num(a.opt_step as f64)),
+                ("adapter_param_floats", Json::Num(a.adapter_param_floats() as f64)),
+                ("total_floats", Json::Num(a.total_floats() as f64)),
+                ("bytes", Json::Num(bytes.len() as f64)),
+            ])),
+            Err(e) => entries.push(Json::obj(vec![
+                ("file", Json::Str(file)),
+                ("error", Json::Str(e.to_string())),
+            ])),
+        }
+    }
+    let n = entries.len();
+    let manifest = Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+        ("artifacts", Json::Arr(entries)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.dump_pretty())
+        .map_err(|e| anyhow::anyhow!("writing manifest in {}: {e}", dir.display()))?;
+    Ok(n)
 }
 
 #[cfg(test)]
@@ -604,6 +849,8 @@ mod tests {
             seed: 42,
             backbone_fp: 0xDEAD_BEEF_CAFE_F00D,
             opt_step: 3,
+            inference_only: false,
+            f16_sections: false,
             sections: vec![
                 Section::new("l0.Q.theta", vec![0.1, -0.2, f32::NAN, 0.0, 1.5, -9.25]),
                 Section::new("l0.Q.alpha", vec![1.0; 4]),
@@ -689,5 +936,114 @@ mod tests {
         // Reference values for the FNV-1a 64 test vectors.
         assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn v1_bytes_still_parse() {
+        let art = tiny_artifact();
+        let bytes = art.to_bytes_v1();
+        assert_eq!(u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]), 1);
+        let back = AdapterArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.schema_version, 1);
+        assert!(!back.inference_only);
+        assert!(!back.f16_sections);
+        assert_eq!(back.label, art.label);
+        assert_eq!(back.peft, art.peft);
+        for (a, b) in art.sections.iter().zip(&back.sections) {
+            assert_eq!(a.name, b.name);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // A v1 stream is 1 flag byte + 1 encoding byte per section
+        // smaller than the same artifact at v2/f32.
+        assert_eq!(art.to_bytes().len(), bytes.len() + 1 + art.sections.len());
+    }
+
+    #[test]
+    fn f16_codec_is_faithful() {
+        // Exactly representable values narrow without error.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 2.0_f32.powi(-24)] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)).to_bits(), v.to_bits(), "{v}");
+        }
+        // Specials.
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00, "overflow saturates to inf");
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000, "underflow flushes to zero");
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000, "sign survives underflow");
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Round-to-nearest-even at the halfway point: 1 + 2^-11 ties to 1.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0_f32.powi(-11)), 0x3c00);
+        // …and 1 + 3·2^-11 ties *up* to the even 1 + 2^-9.
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0_f32.powi(-11)), 0x3c02);
+        // Widening then narrowing any f16 bit pattern is the identity
+        // (modulo NaN payload quieting, which the quiet bit preserves).
+        for h in (0u16..=0xffff).step_by(17) {
+            let w = f16_bits_to_f32(h);
+            if w.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(w)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(w), h, "h={h:#06x}");
+            }
+        }
+        // Narrowing error is within half an ulp (2^-11 relative) for
+        // values in the normal range.
+        for i in 0..1000 {
+            let v = -8.0 + 0.016 * i as f32;
+            let w = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!((w - v).abs() <= v.abs() * 4.9e-4 + 6.0e-8, "{v} -> {w}");
+        }
+    }
+
+    #[test]
+    fn inference_only_roundtrip_drops_moments_and_shrinks() {
+        let mut art = tiny_artifact();
+        art.sections.push(Section::new("adam.m", vec![0.25; 18]));
+        art.sections.push(Section::new("adam.v", vec![0.125; 18]));
+        let full = art.to_bytes();
+
+        let inf = art.to_inference_only();
+        assert!(inf.inference_only && inf.f16_sections);
+        assert_eq!(inf.opt_step, 0);
+        assert!(inf.sections.iter().all(|s| !s.name.starts_with("adam.")));
+        assert_eq!(inf.adapter_param_floats(), art.adapter_param_floats());
+
+        let bytes = inf.to_bytes();
+        assert!(
+            bytes.len() * 3 < full.len() + 3 * 60,
+            "inference artifact ({}) should be ~3x under the training artifact ({}) \
+             modulo the fixed header",
+            bytes.len(),
+            full.len()
+        );
+        let back = AdapterArtifact::from_bytes(&bytes).unwrap();
+        assert!(back.inference_only && back.f16_sections);
+        assert_eq!(back.sections.len(), inf.sections.len());
+        // f16 sections decode to the RNE-narrowed values exactly.
+        for (a, b) in inf.sections.iter().zip(&back.sections) {
+            assert_eq!(a.name, b.name);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(f16_bits_to_f32(f32_to_f16_bits(*x)).to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_indexes_directory() {
+        let dir = std::env::temp_dir().join(format!("psoft_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = tiny_artifact();
+        art.write_to(&dir.join("a.psoftad")).unwrap();
+        art.to_inference_only().write_to(&dir.join("b.psoftad")).unwrap();
+        std::fs::write(dir.join("junk.psoftad"), b"not an artifact").unwrap();
+        let n = write_manifest(&dir).unwrap();
+        assert_eq!(n, 3);
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        assert!(text.contains("\"a.psoftad\""));
+        assert!(text.contains("\"psoft_r4\""));
+        assert!(text.contains("\"inference_only\": true"));
+        assert!(text.contains("bad magic"), "unreadable files are listed with their error");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

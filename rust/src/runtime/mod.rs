@@ -207,24 +207,41 @@ impl NativeBackend {
             seed,
             backbone_fp: backbone.fingerprint(),
             opt_step: self.opt.step as u64,
+            inference_only: false,
+            f16_sections: false,
             sections,
         })
     }
 
+    /// [`NativeBackend::to_artifact`] in inference-only form: the AdamW
+    /// moment sections are dropped and the remaining parameter sections
+    /// encode as f16 (~3× fewer bytes than the training artifact).
+    /// Importing it serves and evaluates; resuming training restarts the
+    /// optimizer cold, and the f16 narrowing perturbs parameters by
+    /// ~1e-3 relative.
+    pub fn to_inference_artifact(
+        &self,
+        label: &str,
+        backbone: &Backbone,
+    ) -> Result<AdapterArtifact> {
+        Ok(self.to_artifact(label, backbone)?.to_inference_only())
+    }
+
     /// Exact encoded size (bytes) of the artifact [`NativeBackend::to_artifact`]
     /// would produce, computed arithmetically from the section layout —
-    /// no parameter copies or serialization. Mirrors the schema-1 writer
+    /// no parameter copies or serialization. Mirrors the schema-2 writer
     /// (`tests/artifact.rs` pins the two against each other, so layout
     /// drift fails tests rather than silently skewing reports).
     pub fn artifact_encoded_len(&self, label: &str) -> usize {
         // Fixed header/trailer: magic 8, version 4, method 4, arch 4,
         // model ints 28, peft ints 20, flag bytes 4, svd 4, gamma 8,
-        // n_modules 4, seed+fp+opt_step 24, label len-prefix 4,
-        // n_sections 4, checksum 8 = 128; plus one byte per module tag
-        // and the label bytes. Each section adds 8 (name + count
-        // prefixes) + name bytes + 4 bytes per float.
-        let mut n = 128 + self.model.peft.modules.len() + label.len();
-        let section = |name_len: usize, floats: usize| 8 + name_len + 4 * floats;
+        // n_modules 4, seed+fp+opt_step 24, artifact_flags 1, label
+        // len-prefix 4, n_sections 4, checksum 8 = 129; plus one byte
+        // per module tag and the label bytes. Each section adds 9 (name
+        // + count prefixes + encoding byte) + name bytes + 4 bytes per
+        // float (training artifacts are always f32-encoded).
+        let mut n = 129 + self.model.peft.modules.len() + label.len();
+        let section = |name_len: usize, floats: usize| 9 + name_len + 4 * floats;
         for (l, layer) in self.model.layers.iter().enumerate() {
             // "l{l}.{module}." prefix length.
             let digits = {
@@ -327,7 +344,9 @@ impl NativeBackend {
             copy_named(&art.sections[start], "head.w", &mut model.head_w.data)?;
             copy_named(&art.sections[start + 1], "head.b", &mut model.head_b)?;
         }
-        let start = take(&mut idx, 2)?;
+        // Inference-only artifacts end here: no moment sections, and the
+        // fresh backend keeps its zeroed AdamW state (cold resume).
+        let adam = if art.inference_only { None } else { Some(take(&mut idx, 2)?) };
         if idx != art.sections.len() {
             return Err(ArtifactError::State(StateError::SectionCount {
                 expected: idx,
@@ -335,9 +354,11 @@ impl NativeBackend {
             }));
         }
         let mut be = NativeBackend::new(model);
-        copy_named(&art.sections[start], "adam.m", &mut be.opt.m)?;
-        copy_named(&art.sections[start + 1], "adam.v", &mut be.opt.v)?;
-        be.opt.step = art.opt_step as usize;
+        if let Some(start) = adam {
+            copy_named(&art.sections[start], "adam.m", &mut be.opt.m)?;
+            copy_named(&art.sections[start + 1], "adam.v", &mut be.opt.v)?;
+            be.opt.step = art.opt_step as usize;
+        }
         be.build_seed = Some(art.seed);
         Ok(be)
     }

@@ -228,6 +228,30 @@
 //!   is unaffected: a submit to a resident adapter only reads one
 //!   `Option` and bumps an LRU counter (`tests/serve_alloc.rs` still
 //!   pins zero allocations).
+//!
+//! # Quantized serving
+//!
+//! The shared frozen backbone — the dominant resident cost of a
+//! multi-adapter fleet — can be held **block-quantized to int8**
+//! ([`crate::linalg::QuantMat`], per-64-element symmetric scales) instead
+//! of f32: `psoft serve --backbone-dtype int8`, or `backbone_dtype =
+//! "int8"` under `[model]` in the config. Quantization happens once at
+//! load time ([`Backbone::to_dtype`](crate::model::Backbone::to_dtype));
+//! every registered adapter then shares the same quantized tensors, so
+//! the ~3.75× shrink of frozen bytes applies to the whole fleet at once.
+//! Forward/decode matmuls against quantized weights run the
+//! dequant-fused kernels in [`crate::linalg::quant`] — blocks dequantize
+//! in registers inside the cache-tiled loop, no f32 materialization of
+//! the backbone ever exists. Adapter state, optimizer moments and the
+//! trainable head stay f32, so train-on-serve keeps full precision;
+//! only frozen-weight reads see quantization error (eval-loss budget
+//! pinned by `tests/quant.rs`). The default is f32 and that path is
+//! bit-identical to the pre-quantization build — [`ServeCore`] stores a
+//! [`SharedMat`](crate::model::SharedMat)-backed backbone either way,
+//! and the f32 arm dispatches to the exact same kernels as before.
+//! [`ServeReport`](crate::coordinator::report::ServeReport) surfaces
+//! the resident footprint (`shared_frozen_mib`, `backbone_dtype`) so
+//! benches and the CI gate can hold the int8/f32 ratio down.
 
 use crate::config::PeftConfig;
 use crate::linalg::Workspace;
@@ -413,8 +437,8 @@ impl Admission {
     }
 
     /// Collapse into a `Result` — shed outcomes map to
-    /// [`ServeError::Shed`]. This is the migration shim the deprecated
-    /// wrappers (and Result-shaped call sites) use.
+    /// [`ServeError::Shed`], for call sites that propagate with `?`
+    /// rather than branching on the admission outcome.
     pub fn into_result(self) -> Result<(), ServeError> {
         match self {
             Admission::Admitted => Ok(()),
@@ -1500,64 +1524,6 @@ impl ServeCore {
         drop(st);
         self.shared.work.notify_one();
         Admission::Admitted
-    }
-
-    /// Enqueue one batch request — the pre-unification eval/train entry
-    /// point, now a thin shim over [`ServeCore::submit`].
-    #[deprecated(
-        since = "0.7.0",
-        note = "use `submit(id, Request::{Eval, Train}{..}, ticket, SubmitOptions::default())`"
-    )]
-    pub fn submit_batch(
-        &self,
-        id: AdapterId,
-        batch: &Arc<Batch>,
-        kind: ReqKind,
-        ticket: &Ticket,
-    ) -> Result<(), ServeError> {
-        let req = match kind {
-            ReqKind::Eval => Request::Eval { batch: Arc::clone(batch) },
-            ReqKind::Train(hyper) => Request::Train { batch: Arc::clone(batch), hyper },
-        };
-        self.submit(id, req, ticket, SubmitOptions::default()).into_result()
-    }
-
-    /// Enqueue one generation request — the pre-unification decode entry
-    /// point, now a thin shim over [`ServeCore::submit`].
-    #[deprecated(
-        since = "0.7.0",
-        note = "use `submit(id, Request::Generate{..}, ticket, SubmitOptions::default())`"
-    )]
-    pub fn submit_generate(
-        &self,
-        id: AdapterId,
-        prompt: &Arc<Vec<i32>>,
-        max_new_tokens: usize,
-        greedy: bool,
-        ticket: &Ticket,
-    ) -> Result<(), ServeError> {
-        self.submit(
-            id,
-            Request::Generate { prompt: Arc::clone(prompt), max_new_tokens, greedy },
-            ticket,
-            SubmitOptions::default(),
-        )
-        .into_result()
-    }
-
-    /// Enqueue any request — the pre-unification typed entry point, now
-    /// a thin shim over [`ServeCore::submit`].
-    #[deprecated(
-        since = "0.7.0",
-        note = "use `submit(id, req, ticket, SubmitOptions::default())`"
-    )]
-    pub fn submit_request(
-        &self,
-        id: AdapterId,
-        req: Request,
-        ticket: &Ticket,
-    ) -> Result<(), ServeError> {
-        self.submit(id, req, ticket, SubmitOptions::default()).into_result()
     }
 
     /// Block until every queued and in-flight request has completed.
@@ -2845,23 +2811,5 @@ mod tests {
         }
         let n = waiter.join().unwrap();
         assert_eq!(n, 0, "waiter released by the re-arm, not by token arrival");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_still_shim_to_submit() {
-        let cfg = tiny_cfg();
-        let mut rng = Rng::new(917);
-        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
-        let core = ServeCore::new(bb, ServeOptions { workers: 1, ..Default::default() });
-        let id = core.register("lora_r3", &lora_peft(), 7);
-        let batch = tiny_batch(&cfg, 33);
-        let ticket = Ticket::new(batch.batch);
-        core.submit_batch(id, &batch, ReqKind::Eval, &ticket).unwrap();
-        assert!(ticket.wait().is_ok());
-        core.submit_request(id, Request::Eval { batch: Arc::clone(&batch) }, &ticket)
-            .unwrap();
-        assert!(ticket.wait().is_ok());
-        assert_eq!(core.stats(id).unwrap().processed, 2);
     }
 }

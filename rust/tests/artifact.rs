@@ -113,7 +113,7 @@ fn roundtrip_is_bit_identical_for_all_12_methods() {
         assert_eq!(
             be.artifact_encoded_len(&label),
             bytes.len(),
-            "{label}: artifact_encoded_len drifted from the schema-1 writer"
+            "{label}: artifact_encoded_len drifted from the schema-2 writer"
         );
         let art2 = AdapterArtifact::from_bytes(&bytes).unwrap_or_else(|e| {
             panic!("{label}: reparse failed: {e}");
@@ -293,6 +293,82 @@ fn seedless_backend_refuses_export() {
     let be = NativeBackend::new(model); // caller-owned rng, seed unknown
     assert!(!be.artifact_exportable());
     assert!(be.to_artifact("lora_t", &bb).is_err());
+}
+
+/// A genuine schema-1 byte stream (minted via the legacy writer) still
+/// imports, and the reconstruction is bit-identical to the v2 path —
+/// v1 artifacts written by older builds keep working.
+#[test]
+fn v1_artifact_still_imports_bit_identically() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7008);
+    let bb = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    let batch = tiny_batch(&cfg, 31);
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    let mut be = NativeBackend::for_adapter(&bb, &peft_for(MethodKind::Psoft), 6);
+    let mut ws = Workspace::new();
+    be.step_core(&batch, &hyper, &mut ws);
+
+    let art = be.to_artifact("psoft_v1", &bb).unwrap();
+    let v1_bytes = art.to_bytes_v1();
+    assert!(v1_bytes.len() < art.to_bytes().len(), "v1 lacks the v2 flag/encoding bytes");
+    let back = AdapterArtifact::from_bytes(&v1_bytes).unwrap();
+    assert_eq!(back.schema_version, 1);
+    assert!(!back.inference_only && !back.f16_sections);
+
+    let mut be2 = NativeBackend::from_artifact(&bb, &back).unwrap();
+    assert_eq!(bits(&be.model.trainable_flat()), bits(&be2.model.trainable_flat()));
+    let mut ws2 = Workspace::new();
+    // Adam moments restore from v1 too: the next step matches bit-exactly.
+    let (sl1, _) = be.step_core(&batch, &hyper, &mut ws);
+    let (sl2, _) = be2.step_core(&batch, &hyper, &mut ws2);
+    assert_eq!(sl1, sl2);
+    assert_eq!(bits(&be.model.trainable_flat()), bits(&be2.model.trainable_flat()));
+}
+
+/// Inference-only export: ~3× fewer bytes, imports and evaluates within
+/// f16 tolerance of the full artifact, and resumes training (cold
+/// optimizer) without error.
+#[test]
+fn inference_only_artifact_serves_within_f16_tolerance() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7009);
+    let bb = std::sync::Arc::new(Backbone::random(&cfg, &mut rng));
+    let batch = tiny_batch(&cfg, 41);
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    let mut be = NativeBackend::for_adapter(&bb, &peft_for(MethodKind::Psoft), 12);
+    let mut ws = Workspace::new();
+    for _ in 0..2 {
+        be.step_core(&batch, &hyper, &mut ws);
+    }
+
+    let full = be.to_artifact("psoft_full", &bb).unwrap().to_bytes();
+    let inf = be.to_inference_artifact("psoft_inf", &bb).unwrap();
+    assert!(inf.inference_only && inf.f16_sections);
+    let inf_bytes = inf.to_bytes();
+    // adam.m + adam.v dropped (3× on sections) and f16 halves the rest;
+    // headers keep the exact ratio below 6×, but 3× must hold overall.
+    assert!(
+        (inf_bytes.len() as f64) < full.len() as f64 / 3.0,
+        "inference artifact {} bytes vs full {} bytes",
+        inf_bytes.len(),
+        full.len()
+    );
+
+    let back = AdapterArtifact::from_bytes(&inf_bytes).unwrap();
+    let mut be2 = NativeBackend::from_artifact(&bb, &back).unwrap();
+    assert_eq!(be2.opt.step, 0, "inference import starts the optimizer cold");
+    let mut ws2 = Workspace::new();
+    let (l1, _) = native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws);
+    let (l2, _) = native::evaluate_into(&be2.model, &batch, &mut be2.bufs, &mut ws2);
+    assert!(l1.is_finite() && l2.is_finite());
+    assert!(
+        (l1 - l2).abs() <= l1.abs() * 2e-2 + 2e-2,
+        "f16-narrowed eval loss drifted: {l1} vs {l2}"
+    );
+    // Training resumes (cold moments) without error.
+    let (sl, _) = be2.step_core(&batch, &hyper, &mut ws2);
+    assert!(sl.is_finite());
 }
 
 /// File-level write/read round-trip (the `psoft export` / `import` path).

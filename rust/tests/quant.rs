@@ -1,0 +1,196 @@
+//! Integration suite for the block-quantized frozen backbone
+//! (`linalg::quant` + `model::SharedMat` + `Backbone::to_dtype`):
+//!
+//! - **Round-trip error budget** — symmetric per-block int8 quantization
+//!   reconstructs every element within `absmax(block) / 254` (plus scale
+//!   storage rounding for f32 scales), for both scalar types.
+//! - **Serving accuracy** — an int8 backbone evaluates within a pinned
+//!   loss tolerance of the f32 backbone across every PEFT method, while
+//!   shrinking the resident frozen bytes by ≥ 3×.
+//! - **f32 bit-identity** — `backbone_dtype = f32` (the default) is
+//!   bit-identical to the pre-quantization build, including on dirty
+//!   (reused) step buffers and workspaces, and `to_dtype` at the same
+//!   dtype is a cheap shared-tensor clone (same fingerprint).
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use std::sync::Arc;
+
+use psoft::config::{Arch, BackboneDtype, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::linalg::{DMat, Mat, Matrix, Scalar, Workspace};
+use psoft::linalg::{QuantMatrix, QUANT_BLOCK};
+use psoft::model::native::{self, Batch, Target};
+use psoft::model::Backbone;
+use psoft::runtime::NativeBackend;
+use psoft::util::rng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Encoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 10,
+        n_classes: 2,
+    }
+}
+
+fn tiny_batch(cfg: &ModelConfig, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (bsz, seq) = (2usize, 6usize);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+    Batch { batch: bsz, seq, tokens, pad: vec![1.0; bsz * seq], target: Target::Class(labels) }
+}
+
+/// One PeftConfig per method, sized for the tiny backbone.
+fn peft_for(method: MethodKind) -> PeftConfig {
+    let mut p = PeftConfig::new(method, 4);
+    p.modules = vec![ModuleKind::Q, ModuleKind::V];
+    p.oft_block_size = 4;
+    p.boft_b = 4;
+    p.boft_m = 2;
+    p
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Quantize → dequantize and check every element against the documented
+/// per-block budget. `scale_slack` absorbs the one extra rounding the
+/// narrower scalar introduces when the f64-computed scale is stored.
+fn check_roundtrip_budget<T: Scalar>(m: &Matrix<T>, scale_slack: f64) {
+    let q = QuantMatrix::quantize(m);
+    let back = q.dequantize();
+    for i in 0..m.rows {
+        let row = &m.data[i * m.cols..(i + 1) * m.cols];
+        let rec = &back.data[i * m.cols..(i + 1) * m.cols];
+        for (blk, (src, got)) in
+            row.chunks(QUANT_BLOCK).zip(rec.chunks(QUANT_BLOCK)).enumerate()
+        {
+            let absmax = src.iter().fold(0f64, |a, v| a.max(v.abs().to_f64()));
+            // Half a quantization step per element, plus scale rounding.
+            let budget = absmax / 254.0 + absmax * scale_slack;
+            for (k, (&x, &xh)) in src.iter().zip(got).enumerate() {
+                let err = (x.to_f64() - xh.to_f64()).abs();
+                assert!(
+                    err <= budget,
+                    "row {i} block {blk} elem {k}: |{} - {}| = {err} > {budget}",
+                    x.to_f64(),
+                    xh.to_f64()
+                );
+            }
+        }
+    }
+}
+
+/// Per-block round-trip error stays within `absmax(block)/254` for both
+/// scalar types, including ragged tail blocks and all-zero blocks.
+#[test]
+fn roundtrip_error_within_documented_budget() {
+    let mut rng = Rng::new(4001);
+    // 3 rows × 150 cols: two full 64-blocks plus a ragged 22-wide tail.
+    let (rows, cols) = (3usize, 150usize);
+    let mut mf = Mat::zeros(rows, cols);
+    let mut md = DMat::zeros(rows, cols);
+    for i in 0..rows * cols {
+        let v = rng.uniform(-2.5, 2.5);
+        mf.data[i] = v as f32;
+        md.data[i] = v;
+    }
+    // An all-zero block round-trips exactly (scale 0, codes 0).
+    for k in 0..QUANT_BLOCK {
+        mf.data[cols + k] = 0.0;
+        md.data[cols + k] = 0.0;
+    }
+    // f32 scales round once more when the f64-computed scale is stored.
+    check_roundtrip_budget(&mf, 1e-6);
+    check_roundtrip_budget(&md, 1e-12);
+
+    let qf = QuantMatrix::quantize(&mf);
+    assert_eq!(qf.blocks_per_row(), cols.div_ceil(QUANT_BLOCK));
+    // Codes (1 B/elem) + scales: well under the 0.35 ratio the CI gates.
+    let ratio = qf.bytes() as f64 / (mf.len() * std::mem::size_of::<f32>()) as f64;
+    assert!(ratio < 0.35, "int8 payload ratio {ratio} vs f32");
+}
+
+/// An int8 backbone serves every PEFT method within a pinned eval-loss
+/// tolerance of f32, and its resident frozen bytes shrink ≥ 3×.
+#[test]
+fn int8_backbone_eval_loss_within_tolerance_for_all_methods() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(4002);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let bb_q = Arc::new(bb.to_dtype(BackboneDtype::Int8));
+    assert_eq!(bb.dtype(), BackboneDtype::F32);
+    assert_eq!(bb_q.dtype(), BackboneDtype::Int8);
+    assert!(
+        (bb_q.resident_bytes() as f64) < bb.resident_bytes() as f64 / 3.0,
+        "int8 backbone {} B vs f32 {} B — expected ≥ 3× shrink",
+        bb_q.resident_bytes(),
+        bb.resident_bytes()
+    );
+
+    let batch = tiny_batch(&cfg, 13);
+    for method in MethodKind::ALL {
+        let peft = peft_for(method);
+        let seed = 4100 + method as u64;
+        // Same seed both sides: the rng draw order depends only on
+        // shapes, so heads and adapter init noise match exactly and the
+        // loss gap isolates the frozen-weight quantization error.
+        let mut be_f = NativeBackend::for_adapter(&bb, &peft, seed);
+        let mut be_q = NativeBackend::for_adapter(&bb_q, &peft, seed);
+        let mut ws_f = Workspace::new();
+        let mut ws_q = Workspace::new();
+        let (lf, _) = native::evaluate_into(&be_f.model, &batch, &mut be_f.bufs, &mut ws_f);
+        let (lq, _) = native::evaluate_into(&be_q.model, &batch, &mut be_q.bufs, &mut ws_q);
+        assert!(lf.is_finite() && lq.is_finite(), "{}: losses finite", method.name());
+        assert!(
+            (lf - lq).abs() <= lf.abs() * 5e-2 + 5e-2,
+            "{}: int8 eval loss {lq} drifted from f32 {lf}",
+            method.name()
+        );
+    }
+}
+
+/// The default dtype is f32 and it is bit-identical to the
+/// pre-quantization build: `to_dtype(F32)` on an f32 backbone keeps the
+/// same fingerprint, and evaluation over dirty (reused) buffers
+/// reproduces the exact same loss, metric and prediction bits.
+#[test]
+fn f32_dtype_is_bit_identical_on_dirty_buffers() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(4003);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let bb2 = Arc::new(bb.to_dtype(BackboneDtype::F32));
+    assert_eq!(bb2.dtype(), BackboneDtype::F32);
+    assert_eq!(bb.fingerprint(), bb2.fingerprint(), "same-dtype to_dtype is identity");
+    assert_eq!(bb.resident_bytes(), bb2.resident_bytes());
+
+    let batch = tiny_batch(&cfg, 17);
+    let peft = peft_for(MethodKind::Psoft);
+    let mut be1 = NativeBackend::for_adapter(&bb, &peft, 4200);
+    let mut be2 = NativeBackend::for_adapter(&bb2, &peft, 4200);
+    let mut ws = Workspace::new();
+
+    // First pass dirties be1's buffers and the shared workspace.
+    let (l1, m1) = native::evaluate_into(&be1.model, &batch, &mut be1.bufs, &mut ws);
+    let p1 = bits(&be1.bufs.preds);
+    // Re-run on the now-dirty buffers: identical bits.
+    let (l1b, m1b) = native::evaluate_into(&be1.model, &batch, &mut be1.bufs, &mut ws);
+    assert_eq!(l1.to_bits(), l1b.to_bits(), "warm re-eval loss");
+    assert_eq!(m1.to_bits(), m1b.to_bits(), "warm re-eval metric");
+    assert_eq!(p1, bits(&be1.bufs.preds), "warm re-eval predictions");
+    // The round-tripped backbone, sharing the same dirty workspace,
+    // produces the same bits as the original.
+    let (l2, m2) = native::evaluate_into(&be2.model, &batch, &mut be2.bufs, &mut ws);
+    assert_eq!(l1.to_bits(), l2.to_bits(), "to_dtype(F32) eval loss");
+    assert_eq!(m1.to_bits(), m2.to_bits(), "to_dtype(F32) eval metric");
+    assert_eq!(p1, bits(&be2.bufs.preds), "to_dtype(F32) predictions");
+}
