@@ -3,7 +3,13 @@
 //! through the serve core at 1 vs 4 vs 16 decoder adapters on one shared
 //! frozen backbone, and a **continuous-batching axis**: a fixed 16-
 //! generation workload on one adapter swept over `decode_batch` g = 1
-//! (sequential baseline) / 4 / 16 lockstep lanes. Emits
+//! (sequential baseline) / 4 / 16 lockstep lanes. Two paged-K/V axes
+//! ride along: a **concurrent-lanes axis** joins 512 generations to one
+//! group and asserts the pool holds exactly `ceil(len / PAGE_ROWS)`
+//! pages per K/V table (memory scales with *active tokens*, not
+//! lanes × max_seq monolithic rings), and a **TTFT axis** counts the
+//! group steps a mid-flight joiner needs to reach its first token at
+//! the default prefill chunk vs the tokenwise schedule. Emits
 //! `BENCH_decode.json`, the baseline the CI bench gate diffs against
 //! (see `tools/bench_gate`; refresh the committed copy with
 //! `bench_gate --update-baselines`). `PSOFT_BENCH_FAST=1` switches to
@@ -20,7 +26,8 @@
 
 use psoft::bench::{bench_decoder, write_csv};
 use psoft::config::{MethodKind, ModuleKind, PeftConfig};
-use psoft::model::native::{self, DecodeCache};
+use psoft::linalg::{Workspace, PAGE_ROWS};
+use psoft::model::native::{self, DecodeCache, DecodeLane, DecodeStream, GroupDecodeCache};
 use psoft::model::Backbone;
 use psoft::peft::AdapterId;
 use psoft::runtime::serve::{Request, ServeCore, ServeOptions, SubmitOptions, Ticket};
@@ -101,7 +108,7 @@ fn main() {
 
     // --- Model-level prefill / per-token latency (single warm adapter) --
     let backend = NativeBackend::for_adapter(&bb, &peft_for(0).1, 1000);
-    let mut ws = psoft::linalg::Workspace::new();
+    let mut ws = Workspace::new();
     let mut cache = DecodeCache::new();
     let prompt: Vec<i32> =
         (0..prompt_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
@@ -114,13 +121,15 @@ fn main() {
         cache.ensure(&backend.model, &mut ws); // warm no-op + len reset
         let sw = Stopwatch::start();
         for &t in &prompt {
-            native::decode_step(&backend.model, &mut cache, t, &mut ws);
+            native::decode_step(&backend.model, &mut cache, t, &mut ws)
+                .expect("prompt fits max_seq");
         }
         prefill_times.push(sw.ms());
         let mut last = native::select_token(&cache, true, &mut srng);
         let sw2 = Stopwatch::start();
         for _ in 0..max_new {
-            native::decode_step(&backend.model, &mut cache, last, &mut ws);
+            native::decode_step(&backend.model, &mut cache, last, &mut ws)
+                .expect("generation fits max_seq");
             last = native::select_token(&cache, true, &mut srng);
         }
         token_times.push(sw2.ms() / max_new as f64);
@@ -130,6 +139,52 @@ fn main() {
     println!(
         "model-level: prefill({prompt_len} tok) {prefill_ms:.3} ms, \
          per-token {per_token_ms:.4} ms"
+    );
+
+    // --- Batched [p, d] prefill vs the tokenwise schedule --------------
+    // Same lane, same prompt, same `prefill_into` path: one 64-token
+    // chunk vs 64 one-token chunks. The streams are bit-identical
+    // (tests/decode.rs pins that); this measures the wall-clock win of
+    // feeding the prompt through [p, d]-shaped projections and MLPs.
+    let batch_prompt_len = 64usize;
+    assert!(batch_prompt_len <= cfg.max_seq);
+    let batch_prompt: Vec<i32> =
+        (0..batch_prompt_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let mut lane = DecodeLane::new();
+    lane.ensure(&backend.model, &mut ws);
+    // Warm both chunk shapes so the measured reps hit the workspace pool.
+    native::prefill_into(&backend.model, &mut lane, &batch_prompt, None, &mut ws)
+        .expect("prompt fits max_seq");
+    lane.reset();
+    let mut tokenwise_times = Vec::with_capacity(reps);
+    let mut batched_times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        lane.reset();
+        let sw = Stopwatch::start();
+        for t in 0..batch_prompt_len {
+            native::prefill_into(
+                &backend.model,
+                &mut lane,
+                &batch_prompt[t..t + 1],
+                None,
+                &mut ws,
+            )
+            .expect("prompt fits max_seq");
+        }
+        tokenwise_times.push(sw.ms());
+        lane.reset();
+        let sw = Stopwatch::start();
+        native::prefill_into(&backend.model, &mut lane, &batch_prompt, None, &mut ws)
+            .expect("prompt fits max_seq");
+        batched_times.push(sw.ms());
+    }
+    lane.release(&mut ws);
+    let prefill_tokenwise_ms = median(tokenwise_times);
+    let prefill_batched_ms = median(batched_times);
+    let prefill_batch_speedup = prefill_tokenwise_ms / prefill_batched_ms.max(1e-9);
+    println!(
+        "batched prefill({batch_prompt_len} tok): {prefill_batched_ms:.3} ms vs \
+         {prefill_tokenwise_ms:.3} ms tokenwise = {prefill_batch_speedup:.2}x"
     );
 
     // --- Serve-level aggregate tokens/sec at 1/4/16 adapters -----------
@@ -283,6 +338,134 @@ fn main() {
         "16-lane lockstep decode throughput = {group_scaling:.2}x the sequential baseline"
     );
 
+    // --- Paged K/V at scale: 512 concurrent lanes in one group ---------
+    // Drives GroupDecodeCache directly (the serve layer caps a group at
+    // decode_batch) to pin the paged-memory claim: N concurrent
+    // generations hold exactly ceil(len / PAGE_ROWS) pages per K/V
+    // table — memory proportional to their ACTIVE tokens — where
+    // monolithic per-lane rings would pre-commit N x max_seq rows.
+    let n_lanes = 512usize;
+    let lane_prompt_len = 6usize;
+    let lane_new = if fast() { 2usize } else { 4 };
+    let mut ws_lanes = Workspace::new();
+    let backend_lanes = NativeBackend::for_adapter(&bb, &peft_for(0).1, 5000);
+    let mut gc = GroupDecodeCache::new();
+    let mut lrng = Rng::new(900);
+    for _ in 0..n_lanes {
+        let prompt: Vec<i32> =
+            (0..lane_prompt_len).map(|_| lrng.below(cfg.vocab_size) as i32).collect();
+        let stream = DecodeStream::new(&prompt);
+        let mut kv = DecodeLane::new();
+        kv.ensure(&backend_lanes.model, &mut ws_lanes);
+        gc.join(kv, stream, Arc::new(prompt), lane_new, true);
+    }
+    let mut lane_outs: Vec<Vec<i32>> = vec![Vec::new(); n_lanes];
+    let sw = Stopwatch::start();
+    let all_done = gc
+        .advance(&backend_lanes.model, usize::MAX, &mut ws_lanes, &mut lane_outs)
+        .expect("lane positions stay under max_seq");
+    let lanes_wall_secs = sw.secs();
+    assert!(all_done, "every joined lane must run to completion");
+    let lane_tokens: u64 = lane_outs.iter().map(|o| o.len() as u64).sum();
+    let lanes_tps = lane_tokens as f64 / lanes_wall_secs.max(1e-9);
+
+    // Peak page accounting: every lane still holds its pages here.
+    let lane_len = lane_prompt_len + lane_new;
+    let pages_per_table = lane_len.div_ceil(PAGE_ROWS);
+    let expected_pages = n_lanes * cfg.n_layers * 2 * pages_per_table;
+    let held_pages = ws_lanes.page_pool().outstanding() as usize;
+    assert_eq!(
+        held_pages, expected_pages,
+        "paged K/V must hold exactly ceil(len/PAGE_ROWS) pages per table"
+    );
+    let page_bytes = PAGE_ROWS * cfg.d_model * std::mem::size_of::<f32>();
+    let paged_kv_mib = (held_pages * page_bytes) as f64 / (1024.0 * 1024.0);
+    let monolithic_rows = n_lanes * cfg.n_layers * 2 * cfg.max_seq;
+    let monolithic_kv_mib = (monolithic_rows * cfg.d_model * std::mem::size_of::<f32>())
+        as f64
+        / (1024.0 * 1024.0);
+    let kv_ratio = paged_kv_mib / monolithic_kv_mib;
+    println!(
+        "concurrent lanes: {n_lanes} generations, {lane_tokens} tokens in \
+         {lanes_wall_secs:.3}s = {lanes_tps:.1} tok/s; {held_pages} pages = \
+         {paged_kv_mib:.1} MiB paged vs {monolithic_kv_mib:.1} MiB monolithic \
+         ({kv_ratio:.3}x)"
+    );
+    write_csv(
+        "decode_lanes_bench",
+        "lanes,tokens,wall_s,tokens_per_sec,pages,paged_mib,monolithic_mib",
+        &[format!(
+            "{n_lanes},{lane_tokens},{lanes_wall_secs:.4},{lanes_tps:.2},\
+             {held_pages},{paged_kv_mib:.1},{monolithic_kv_mib:.1}"
+        )],
+    );
+    // Tear-down recycles every page: the pool must account for all of
+    // them (a leak or double-free trips the counters / the pool panic).
+    while let Some((mut kv, _stream, done)) = gc.detach_first() {
+        assert!(done, "detach order is join order and every lane finished");
+        kv.free_pages(&mut ws_lanes);
+    }
+    gc.release(&mut ws_lanes);
+    assert_eq!(
+        ws_lanes.page_pool().outstanding(),
+        0,
+        "all K/V pages must return to the pool at tear-down"
+    );
+
+    // --- TTFT for a mid-flight joiner: chunked vs tokenwise prefill ----
+    // A lane with a long prompt joins a group of already-decoding lanes;
+    // count the lockstep steps until its first emitted token. Chunked
+    // prefill reaches it in ceil(prompt / chunk) steps, the tokenwise
+    // schedule in `prompt` steps — both exact, both asserted, so the
+    // gate on the chunked key is machine-independent.
+    let join_prompt_len = 32usize;
+    let ttft_steps = |chunk: usize, ws: &mut Workspace| -> usize {
+        let mut gc = GroupDecodeCache::new();
+        gc.set_prefill_chunk(chunk);
+        let n_decoding = 4usize;
+        let mut jrng = Rng::new(901);
+        for _ in 0..n_decoding {
+            let prompt: Vec<i32> =
+                (0..2).map(|_| jrng.below(cfg.vocab_size) as i32).collect();
+            let mut kv = DecodeLane::new();
+            kv.ensure(&backend_lanes.model, ws);
+            let stream = DecodeStream::new(&prompt);
+            gc.join(kv, stream, Arc::new(prompt), join_prompt_len + 8, true);
+        }
+        let jprompt: Vec<i32> =
+            (0..join_prompt_len).map(|_| jrng.below(cfg.vocab_size) as i32).collect();
+        let mut kv = DecodeLane::new();
+        kv.ensure(&backend_lanes.model, ws);
+        let stream = DecodeStream::new(&jprompt);
+        let ji = gc.join(kv, stream, Arc::new(jprompt), 2, true);
+        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n_decoding + 1];
+        let mut steps = 0usize;
+        while outs[ji].is_empty() {
+            gc.advance(&backend_lanes.model, 1, ws, &mut outs)
+                .expect("joiner prompt fits max_seq");
+            steps += 1;
+            assert!(steps <= 2 * join_prompt_len, "joiner must reach its first token");
+        }
+        gc.release(ws);
+        steps
+    };
+    let ttft_chunked = ttft_steps(native::DEFAULT_PREFILL_CHUNK, &mut ws_lanes);
+    let ttft_tokenwise = ttft_steps(1, &mut ws_lanes);
+    assert_eq!(
+        ttft_chunked,
+        join_prompt_len.div_ceil(native::DEFAULT_PREFILL_CHUNK),
+        "chunked prefill reaches first token in ceil(prompt/chunk) group steps"
+    );
+    assert_eq!(
+        ttft_tokenwise, join_prompt_len,
+        "tokenwise schedule needs one group step per prompt token"
+    );
+    println!(
+        "joiner TTFT ({join_prompt_len}-token prompt): {ttft_chunked} group steps \
+         chunked (chunk {}) vs {ttft_tokenwise} tokenwise",
+        native::DEFAULT_PREFILL_CHUNK
+    );
+
     let json = Json::obj(vec![
         (
             "workload",
@@ -296,6 +479,9 @@ fn main() {
         ("fast_mode", Json::Bool(fast())),
         ("prefill_ms", Json::Num(prefill_ms)),
         ("per_token_ms", Json::Num(per_token_ms)),
+        ("prefill_tokenwise_ms", Json::Num(prefill_tokenwise_ms)),
+        ("prefill_batched_ms", Json::Num(prefill_batched_ms)),
+        ("prefill_batch_speedup", Json::Num(prefill_batch_speedup)),
         (
             "configs",
             Json::Arr(
@@ -336,6 +522,16 @@ fn main() {
         ("tokens_per_sec_g1", Json::Num(gtps(1))),
         ("tokens_per_sec_g16", Json::Num(gtps(16))),
         ("group_scaling_16x_over_1x", Json::Num(group_scaling)),
+        ("concurrent_lanes", Json::Num(n_lanes as f64)),
+        ("concurrent_lanes_tokens", Json::Num(lane_tokens as f64)),
+        ("concurrent_lanes_wall_secs", Json::Num(lanes_wall_secs)),
+        ("concurrent_lanes_tokens_per_sec", Json::Num(lanes_tps)),
+        ("concurrent_lane_pages", Json::Num(held_pages as f64)),
+        ("paged_kv_mib", Json::Num(paged_kv_mib)),
+        ("monolithic_kv_mib", Json::Num(monolithic_kv_mib)),
+        ("paged_over_monolithic_kv_ratio", Json::Num(kv_ratio)),
+        ("ttft_group_steps_chunked", Json::Num(ttft_chunked as f64)),
+        ("ttft_group_steps_tokenwise", Json::Num(ttft_tokenwise as f64)),
     ]);
     std::fs::write("BENCH_decode.json", json.dump_pretty()).expect("write BENCH_decode.json");
     eprintln!("wrote BENCH_decode.json");

@@ -7,7 +7,11 @@
 //! in the tail percentiles.
 //!
 //! Reports streaming TTFT p50/p95/p99 and p99 per-token latency from the
-//! per-adapter quantile sketches, plus admission outcome counts and the
+//! per-adapter quantile sketches — fleet-wide AND split by tier
+//! (interactive tier 0 vs batch tier ≥ 1, from the per-tier sketches the
+//! serve layer records), so the interactive tail is gated on its own
+//! `ttft_interactive_ms` key and never averaged against batch traffic —
+//! plus admission outcome counts, chunked-prefill token counts, and the
 //! process RSS. Emits `BENCH_slo.json` for the CI bench gate
 //! (`tools/bench_gate --foreach ttft_ms ...`). `PSOFT_BENCH_FAST=1`
 //! shrinks the trace to CI-smoke size; the fleet shape is overridable:
@@ -178,14 +182,22 @@ fn main() {
     let submitted = trace.arrivals.len() as u64;
     let shed_rate = shed as f64 / submitted as f64;
 
-    // Fleet-wide tail latency: merge the per-adapter streaming sketches.
+    // Fleet-wide tail latency: merge the per-adapter streaming sketches,
+    // combined and per tier (interactive = tier 0, batch = tier >= 1).
     let mut ttft = QuantileSketch::default();
+    let mut ttft_tiered = [QuantileSketch::default(); 2];
     let mut tok = QuantileSketch::default();
     let mut tokens_generated = 0u64;
+    let mut prefill_chunks = 0u64;
+    let mut prefill_tokens = 0u64;
     for (_, _, s) in core.adapters() {
         ttft.merge(&s.ttft);
+        ttft_tiered[0].merge(&s.ttft_tiered[0]);
+        ttft_tiered[1].merge(&s.ttft_tiered[1]);
         tok.merge(&s.tok_latency);
         tokens_generated += s.tokens_generated;
+        prefill_chunks += s.prefill_chunks;
+        prefill_tokens += s.prefill_tokens;
     }
     let panics = core.worker_panics();
     let rss_mib =
@@ -195,6 +207,11 @@ fn main() {
     assert_eq!(failed, 0, "admitted requests must complete or shed, never error");
     assert!(completed > 0, "the trace must complete some requests");
     assert!(ttft.count() > 0, "TTFT sketch must have samples");
+    assert!(
+        ttft_tiered[0].count() > 0,
+        "the interactive tier must complete some requests (it rides the high \
+         weighted-fair weight)"
+    );
     let max_rss = env_f64("PSOFT_SLO_MAX_RSS_MIB", 0.0);
     if max_rss > 0.0 {
         assert!(
@@ -217,18 +234,32 @@ fn main() {
         p(&ttft, 0.99),
         p(&tok, 0.99)
     );
+    println!(
+        "TTFT by tier: interactive p50/p99 = {:.2}/{:.2} ms ({} samples), \
+         batch p50/p99 = {:.2}/{:.2} ms ({} samples); prefill \
+         {prefill_tokens} prompt tokens in {prefill_chunks} chunks",
+        p(&ttft_tiered[0], 0.5),
+        p(&ttft_tiered[0], 0.99),
+        ttft_tiered[0].count(),
+        p(&ttft_tiered[1], 0.5),
+        p(&ttft_tiered[1], 0.99),
+        ttft_tiered[1].count(),
+    );
 
     write_csv(
         "slo_bench",
         "adapters,max_resident,requests,completed,rejected,shed,offered_rps,\
-         ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,rss_mib",
+         ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,ttft_interactive_p99_ms,\
+         ttft_batch_p99_ms,tok_p99_ms,rss_mib",
         &[format!(
             "{adapters},{max_resident},{submitted},{completed},{rejected},{shed},\
-             {:.2},{:.3},{:.3},{:.3},{:.4},{rss_mib:.0}",
+             {:.2},{:.3},{:.3},{:.3},{:.3},{:.3},{:.4},{rss_mib:.0}",
             trace.offered_rps(),
             p(&ttft, 0.5),
             p(&ttft, 0.95),
             p(&ttft, 0.99),
+            p(&ttft_tiered[0], 0.99),
+            p(&ttft_tiered[1], 0.99),
             p(&tok, 0.99)
         )],
     );
@@ -270,7 +301,30 @@ fn main() {
                 ("p99", Json::Num(p(&ttft, 0.99))),
             ]),
         ),
+        // Tier-conditional TTFT: the interactive tail is gated on its own
+        // keys (deadline-carrying tier-0 traffic must never hide behind a
+        // fleet-wide percentile that batch traffic drags up or down).
+        (
+            "ttft_interactive_ms",
+            Json::obj(vec![
+                ("p50", Json::Num(p(&ttft_tiered[0], 0.5))),
+                ("p95", Json::Num(p(&ttft_tiered[0], 0.95))),
+                ("p99", Json::Num(p(&ttft_tiered[0], 0.99))),
+            ]),
+        ),
+        (
+            "ttft_batch_ms",
+            Json::obj(vec![
+                ("p50", Json::Num(p(&ttft_tiered[1], 0.5))),
+                ("p95", Json::Num(p(&ttft_tiered[1], 0.95))),
+                ("p99", Json::Num(p(&ttft_tiered[1], 0.99))),
+            ]),
+        ),
+        ("ttft_interactive_samples", Json::Num(ttft_tiered[0].count() as f64)),
+        ("ttft_batch_samples", Json::Num(ttft_tiered[1].count() as f64)),
         ("per_token_ms", Json::obj(vec![("p99", Json::Num(p(&tok, 0.99)))])),
+        ("prefill_chunks", Json::Num(prefill_chunks as f64)),
+        ("prefill_tokens", Json::Num(prefill_tokens as f64)),
         ("worker_panics", Json::Num(panics as f64)),
         ("rss_mib", Json::Num(rss_mib)),
     ]);

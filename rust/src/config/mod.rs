@@ -516,6 +516,13 @@ pub struct ServeConfig {
     /// delay is past the SLO, more queueing only manufactures deadline
     /// misses. 0 (the default) disables shedding.
     pub shed_after_ms: u64,
+    /// Chunked-prefill width: prompt tokens a joining generation feeds
+    /// per lockstep group step through the batched `[p, d]` prefill
+    /// path (clamped to ≥ 1 downstream; 1 reproduces the legacy
+    /// one-token-per-step schedule). Token streams are bit-identical at
+    /// every value — only the first-token step count and the per-step
+    /// group stall change. Default 16 (one full K/V page).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -530,6 +537,7 @@ impl Default for ServeConfig {
             coalesce_eval: false,
             tier_weights: Vec::new(),
             shed_after_ms: 0,
+            prefill_chunk: 16,
         }
     }
 }
@@ -551,6 +559,7 @@ impl ServeConfig {
         if let Some(v) = s.get("shed_after_ms").as_usize() {
             sc.shed_after_ms = v as u64;
         }
+        read_usize(s, "prefill_chunk", &mut sc.prefill_chunk);
         sc
     }
 }
@@ -782,7 +791,7 @@ mod tests {
         let tree = toml::parse(
             "[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\nmax_new_tokens = 24\n\
              decode_batch = 16\ncoalesce_eval = true\ntier_weights = [3, 1]\n\
-             shed_after_ms = 250\n",
+             shed_after_ms = 250\nprefill_chunk = 8\n",
         )
         .unwrap();
         let sc = ServeConfig::from_toml(&tree);
@@ -794,6 +803,7 @@ mod tests {
         assert!(sc.coalesce_eval);
         assert_eq!(sc.tier_weights, vec![3, 1]);
         assert_eq!(sc.shed_after_ms, 250);
+        assert_eq!(sc.prefill_chunk, 8);
         assert_eq!(sc.burst, ServeConfig::default().burst);
         // Absent section ⇒ pure defaults.
         let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
@@ -802,6 +812,7 @@ mod tests {
         assert!(!sc2.coalesce_eval);
         assert!(sc2.tier_weights.is_empty(), "default scheduler is pure round-robin");
         assert_eq!(sc2.shed_after_ms, 0);
+        assert_eq!(sc2.prefill_chunk, 16, "default prefill chunk is one K/V page");
     }
 
     #[test]

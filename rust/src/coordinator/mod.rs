@@ -193,6 +193,8 @@ pub fn serve_report(
             processed: s.processed,
             train_steps: s.train_steps,
             tokens_generated: s.tokens_generated,
+            prefill_tokens: s.prefill_tokens,
+            prefill_chunks: s.prefill_chunks,
             mean_group_size: s.mean_group_size(),
             max_group_size: s.max_group_size,
             rejected: s.rejected,

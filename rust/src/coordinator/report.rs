@@ -211,6 +211,12 @@ pub struct ServeRow {
     pub train_steps: u64,
     /// Tokens emitted by generation requests (decoder serving).
     pub tokens_generated: u64,
+    /// Prompt tokens fed through the batched chunked-prefill path.
+    pub prefill_tokens: u64,
+    /// Chunked-prefill dispatch units (one per prompt-phase lane per
+    /// lockstep group step); `prefill_tokens / prefill_chunks` = mean
+    /// realized chunk width.
+    pub prefill_chunks: u64,
     /// Mean lanes per batched dispatch (continuous batching / eval
     /// coalescing efficiency; 0.0 when nothing was batched).
     pub mean_group_size: f64,
@@ -274,19 +280,20 @@ impl ServeReport {
             self.shared_frozen_mib,
             self.backbone_dtype
         );
-        out.push_str("| Adapter | Label | Served | Train | Tokens | Grp mean | Grp max |");
+        out.push_str("| Adapter | Label | Served | Train | Tokens | Prefill | Grp mean | Grp max |");
         out.push_str(" Rejected | Shed | Mean lat (ms) | Max lat (ms) | Mean svc (ms) |");
         out.push_str(" TTFT p50/p95/p99 (ms) | Tok p99 (ms) | Artifact |\n");
-        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             out.push_str(&format!(
-                "| {} | {} | {} | {} | {} | {:.2} | {} | {} | {} | {:.3} | {:.3} | {:.3} | \
+                "| {} | {} | {} | {} | {} | {} | {:.2} | {} | {} | {} | {:.3} | {:.3} | {:.3} | \
                  {:.3}/{:.3}/{:.3} | {:.3} | {} |\n",
                 r.id,
                 r.label,
                 r.processed,
                 r.train_steps,
                 r.tokens_generated,
+                r.prefill_tokens,
                 r.mean_group_size,
                 r.max_group_size,
                 r.rejected,
@@ -306,16 +313,18 @@ impl ServeReport {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "adapter,label,processed,train_steps,tokens_generated,mean_group_size,max_group_size,rejected,shed,mean_latency_ms,max_latency_ms,mean_service_ms,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,artifact_bytes\n",
+            "adapter,label,processed,train_steps,tokens_generated,prefill_tokens,prefill_chunks,mean_group_size,max_group_size,rejected,shed,mean_latency_ms,max_latency_ms,mean_service_ms,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,artifact_bytes\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}\n",
+                "{},{},{},{},{},{},{},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}\n",
                 r.id,
                 r.label,
                 r.processed,
                 r.train_steps,
                 r.tokens_generated,
+                r.prefill_tokens,
+                r.prefill_chunks,
                 r.mean_group_size,
                 r.max_group_size,
                 r.rejected,
@@ -354,6 +363,8 @@ impl ServeReport {
                                 ("processed", Json::Num(r.processed as f64)),
                                 ("train_steps", Json::Num(r.train_steps as f64)),
                                 ("tokens_generated", Json::Num(r.tokens_generated as f64)),
+                                ("prefill_tokens", Json::Num(r.prefill_tokens as f64)),
+                                ("prefill_chunks", Json::Num(r.prefill_chunks as f64)),
                                 ("mean_group_size", Json::Num(r.mean_group_size)),
                                 ("max_group_size", Json::Num(r.max_group_size as f64)),
                                 ("rejected", Json::Num(r.rejected as f64)),

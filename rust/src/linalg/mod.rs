@@ -37,4 +37,6 @@ pub use rot::{block_rot_matmul_into, perm_block_rot_matmul_into, rot_matmul_acc}
 pub use qr::{orthonormal_columns, qr_thin};
 pub use rsvd::rsvd;
 pub use svd::{svd, Svd};
-pub use workspace::{DWorkspace, Workspace, WorkspaceOf};
+pub use workspace::{
+    DWorkspace, PagePool, PagePoolOf, PageTable, PageTableOf, Workspace, WorkspaceOf, PAGE_ROWS,
+};

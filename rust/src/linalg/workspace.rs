@@ -15,11 +15,11 @@
 //!
 //! - [`Workspace`] (`f32`) — model activations and gradients; one per
 //!   training run (or per serve worker), threaded through every
-//!   forward/backward kernel. The decode path draws on the same pool:
-//!   a `model::native::DecodeCache` acquires its per-layer `[max_seq, d]`
-//!   K/V ring buffers and `[1, *]` step scratch here and releases them
-//!   between generations, so the warm per-token decode loop is
-//!   allocation-free like the train/eval hot paths.
+//!   forward/backward kernel. The decode path draws on the same arena:
+//!   a `model::native::DecodeCache` acquires its `[1, *]` step scratch
+//!   here and grows its K/V storage page-by-page from the embedded
+//!   [`PagePool`] (see "Paged K/V" below), so the warm per-token decode
+//!   loop is allocation-free like the train/eval hot paths.
 //! - [`DWorkspace`] (`f64`) — the small r×r temporaries of the
 //!   Cayley–Neumann rotation refresh (PSOFT/OFT/BOFT `set_params`) and
 //!   its backward. Each rotation adapter owns one, so rotation refresh
@@ -49,15 +49,59 @@
 //! 2. **Never release a buffer you still hold a view of.** There are no
 //!    borrowed views of pooled buffers in this crate (all kernels take
 //!    `&Mat`/`&mut Mat`), which makes this rule structural.
+//!
+//! # Paged K/V
+//!
+//! Decode K/V memory is **paged** rather than ring-buffered: instead of
+//! one `[max_seq, d]` buffer per lane per layer, a lane holds a
+//! [`PageTable`] — an ordered list of fixed-size `[PAGE_ROWS, d]` pages
+//! drawn from the workspace's [`PagePool`] — and grows it one page at a
+//! time as the sequence lengthens. Resident decode memory is therefore
+//! proportional to **active tokens × page overhead**, not
+//! lanes × max_seq, which is what lets hundreds of concurrent lanes
+//! share a bounded footprint (`benches/decode.rs` pins this).
+//!
+//! - **Page size.** Every page is exactly `[PAGE_ROWS, cols]`
+//!   ([`PAGE_ROWS`] = 16 rows); pages are pooled per distinct `cols`
+//!   (the model width `d`), so all lanes, layers and adapters of the
+//!   same width share one free list.
+//! - **Table layout.** Logical row `p` lives at page `p / PAGE_ROWS`,
+//!   row offset `p % PAGE_ROWS`. Pages are dense and in order — a table
+//!   covering `n` rows holds exactly `ceil(n / PAGE_ROWS)` pages, so
+//!   page-by-page iteration visits rows in ascending logical order
+//!   (the bit-identity contract of `attention_step_rows` relies on
+//!   this).
+//! - **Recycling rules.** [`PageTableOf::free_pages`] returns a table's
+//!   pages to the pool (the table keeps its spine capacity, so re-growth
+//!   is push-without-realloc); the pool hands them to the next grower of
+//!   the same width regardless of lane or adapter. Page contents are
+//!   unspecified on acquire — decode writes row `p` before any read of
+//!   row `p`, which makes dirty reuse safe. [`PagePoolOf::outstanding`]
+//!   counts live (acquired, not yet released) pages; it must return to
+//!   zero when every lane has released, which is the leak assertion the
+//!   allocator tests pin. Releasing more pages than were acquired (a
+//!   double free) panics.
+//!
+//! After one warmup generation per distinct width and length, page
+//! acquires stop missing ([`PagePoolOf::misses`] freezes) and the paged
+//! decode loop allocates nothing — the same counting-allocator gates
+//! that cover the matrix pool (`tests/zero_alloc.rs`,
+//! `tests/serve_alloc.rs`) cover paging.
 
 use super::matrix::{Matrix, Scalar};
 use std::collections::HashMap;
+
+/// Rows per K/V page. 16 keeps a page at `16 * d * 4` bytes (4 KiB at
+/// d = 64), small enough that a short lane wastes at most one page of
+/// slack and large enough that the page-table indirection amortizes.
+pub const PAGE_ROWS: usize = 16;
 
 /// Shape-keyed pool of reusable scratch matrices over one element type.
 pub struct WorkspaceOf<T: Scalar> {
     free: HashMap<(usize, usize), Vec<Matrix<T>>>,
     acquires: u64,
     misses: u64,
+    pages: PagePoolOf<T>,
 }
 
 /// f32 workspace — the model-compute arena.
@@ -67,7 +111,12 @@ pub type DWorkspace = WorkspaceOf<f64>;
 
 impl<T: Scalar> Default for WorkspaceOf<T> {
     fn default() -> Self {
-        WorkspaceOf { free: HashMap::new(), acquires: 0, misses: 0 }
+        WorkspaceOf {
+            free: HashMap::new(),
+            acquires: 0,
+            misses: 0,
+            pages: PagePoolOf::default(),
+        }
     }
 }
 
@@ -128,8 +177,195 @@ impl<T: Scalar> WorkspaceOf<T> {
     }
 
     /// Drop all pooled buffers (e.g. between jobs with disjoint shapes).
+    /// Idle K/V pages are dropped too; outstanding pages stay live with
+    /// their tables.
     pub fn clear(&mut self) {
         self.free.clear();
+        self.pages.clear();
+    }
+
+    /// The embedded K/V page pool (see the "Paged K/V" module docs).
+    pub fn pages(&mut self) -> &mut PagePoolOf<T> {
+        &mut self.pages
+    }
+
+    /// Read-only view of the page pool for counters/assertions.
+    pub fn page_pool(&self) -> &PagePoolOf<T> {
+        &self.pages
+    }
+}
+
+/// Width-keyed pool of fixed-size `[PAGE_ROWS, cols]` K/V pages. One
+/// free list per distinct `cols`, so pages recycle across lanes, layers
+/// and adapters of the same model width. Embedded in every
+/// [`WorkspaceOf`]; reach it via [`WorkspaceOf::pages`].
+pub struct PagePoolOf<T: Scalar> {
+    free: HashMap<usize, Vec<Matrix<T>>>,
+    acquires: u64,
+    misses: u64,
+    outstanding: u64,
+}
+
+/// f32 page pool — the decode K/V arena.
+pub type PagePool = PagePoolOf<f32>;
+
+impl<T: Scalar> Default for PagePoolOf<T> {
+    fn default() -> Self {
+        PagePoolOf { free: HashMap::new(), acquires: 0, misses: 0, outstanding: 0 }
+    }
+}
+
+impl<T: Scalar> PagePoolOf<T> {
+    pub fn new() -> PagePoolOf<T> {
+        PagePoolOf::default()
+    }
+
+    /// Take one `[PAGE_ROWS, cols]` page, allocating on a miss. Contents
+    /// are unspecified — rows must be written before they are read.
+    pub fn acquire(&mut self, cols: usize) -> Matrix<T> {
+        self.acquires += 1;
+        self.outstanding += 1;
+        if let Some(stack) = self.free.get_mut(&cols) {
+            if let Some(m) = stack.pop() {
+                debug_assert_eq!(m.data.len(), PAGE_ROWS * cols);
+                return m;
+            }
+        }
+        self.misses += 1;
+        Matrix::zeros(PAGE_ROWS, cols)
+    }
+
+    /// Return a page for reuse by any lane of the same width. Panics on
+    /// a non-page shape or when more pages come back than ever went out
+    /// (a double free).
+    pub fn release(&mut self, m: Matrix<T>) {
+        assert_eq!(m.rows, PAGE_ROWS, "released page has {} rows, want {}", m.rows, PAGE_ROWS);
+        assert_eq!(m.data.len(), m.rows * m.cols, "released page has inconsistent shape");
+        assert!(self.outstanding > 0, "page double free: more releases than acquires");
+        self.outstanding -= 1;
+        self.free.entry(m.cols).or_default().push(m);
+    }
+
+    /// Total page acquires served (hits + misses).
+    pub fn acquires(&self) -> u64 {
+        self.acquires
+    }
+
+    /// Page acquires that had to allocate. Frozen once warm.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Live pages: acquired and not yet released. Zero when every lane
+    /// has freed its table — the leak assertion.
+    pub fn outstanding(&self) -> u64 {
+        self.outstanding
+    }
+
+    /// Idle pages parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.values().map(|v| v.len()).sum()
+    }
+
+    /// Bytes held by idle pages.
+    pub fn pooled_bytes(&self) -> usize {
+        self.free
+            .iter()
+            .map(|(&c, v)| PAGE_ROWS * c * std::mem::size_of::<T>() * v.len())
+            .sum()
+    }
+
+    /// Drop all idle pages. Outstanding pages stay with their tables.
+    pub fn clear(&mut self) {
+        self.free.clear();
+    }
+}
+
+/// Per-lane (per-layer) page table: logical row `p` → page
+/// `p / PAGE_ROWS`, row offset `p % PAGE_ROWS`. Pages are dense and
+/// ascending, so iterating pages outer / rows inner visits logical rows
+/// in order. The table tracks *capacity* only; the owning lane tracks
+/// how many rows hold live data.
+pub struct PageTableOf<T: Scalar> {
+    pages: Vec<Matrix<T>>,
+    cols: usize,
+}
+
+/// f32 page table — decode K/V storage for one lane and layer.
+pub type PageTable = PageTableOf<f32>;
+
+impl<T: Scalar> Default for PageTableOf<T> {
+    fn default() -> Self {
+        PageTableOf { pages: Vec::new(), cols: 0 }
+    }
+}
+
+impl<T: Scalar> PageTableOf<T> {
+    pub fn new() -> PageTableOf<T> {
+        PageTableOf::default()
+    }
+
+    /// Row capacity currently backed by pages.
+    pub fn capacity_rows(&self) -> usize {
+        self.pages.len() * PAGE_ROWS
+    }
+
+    /// Pages currently held.
+    pub fn num_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Row width (0 until first growth).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Reserve spine capacity for `rows` logical rows so warm growth
+    /// never reallocates the page vector itself.
+    pub fn reserve_rows(&mut self, rows: usize) {
+        let want = rows.div_ceil(PAGE_ROWS);
+        if self.pages.capacity() < want {
+            self.pages.reserve_exact(want - self.pages.len());
+        }
+    }
+
+    /// Grow capacity to at least `rows` rows of width `cols`, acquiring
+    /// pages on demand. A width change frees the old pages first (they
+    /// cannot serve the new width).
+    pub fn grow_to(&mut self, rows: usize, cols: usize, pool: &mut PagePoolOf<T>) {
+        if self.cols != cols && !self.pages.is_empty() {
+            self.free_pages(pool);
+        }
+        self.cols = cols;
+        while self.capacity_rows() < rows {
+            self.pages.push(pool.acquire(cols));
+        }
+    }
+
+    /// Borrow logical row `p` (must be within capacity).
+    #[inline]
+    pub fn row(&self, p: usize) -> &[T] {
+        self.pages[p / PAGE_ROWS].row(p % PAGE_ROWS)
+    }
+
+    /// Mutably borrow logical row `p` (must be within capacity).
+    #[inline]
+    pub fn row_mut(&mut self, p: usize) -> &mut [T] {
+        self.pages[p / PAGE_ROWS].row_mut(p % PAGE_ROWS)
+    }
+
+    /// Borrow page `i` directly (page-by-page iteration).
+    #[inline]
+    pub fn page(&self, i: usize) -> &Matrix<T> {
+        &self.pages[i]
+    }
+
+    /// Return every page to the pool. The spine keeps its capacity, so
+    /// a recycled table re-grows without allocating.
+    pub fn free_pages(&mut self, pool: &mut PagePoolOf<T>) {
+        for m in self.pages.drain(..) {
+            pool.release(m);
+        }
     }
 }
 
@@ -189,6 +425,109 @@ mod tests {
         assert!(ws.pooled_bytes() > 0);
         ws.clear();
         assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn pages_recycle_across_lanes() {
+        let mut pool = PagePool::new();
+        // Lane A grows two pages, then frees its table.
+        let mut a = PageTable::new();
+        a.grow_to(2 * PAGE_ROWS, 8, &mut pool);
+        assert_eq!(pool.misses(), 2);
+        let ptrs: Vec<*const f32> =
+            (0..a.num_pages()).map(|i| a.page(i).data.as_ptr()).collect();
+        a.free_pages(&mut pool);
+        assert_eq!(pool.outstanding(), 0, "no live pages after free");
+        // Lane B (a different table — different lane, same width) gets
+        // the exact same backing pages without allocating.
+        let mut b = PageTable::new();
+        b.grow_to(2 * PAGE_ROWS, 8, &mut pool);
+        assert_eq!(pool.misses(), 2, "recycled pages must not allocate");
+        let got: Vec<*const f32> =
+            (0..b.num_pages()).map(|i| b.page(i).data.as_ptr()).collect();
+        let mut want = ptrs.clone();
+        want.sort();
+        let mut have = got.clone();
+        have.sort();
+        assert_eq!(have, want, "lane B reuses lane A's pages");
+        b.free_pages(&mut pool);
+        // A different width never shares those pages.
+        let mut c = PageTable::new();
+        c.grow_to(PAGE_ROWS, 12, &mut pool);
+        assert_eq!(pool.misses(), 3);
+        c.free_pages(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn ragged_growth_lands_on_page_boundaries() {
+        let mut pool = PagePool::new();
+        let mut t = PageTable::new();
+        // Growth in awkward increments: capacity always rounds up to
+        // whole pages, and growing within a page acquires nothing.
+        t.grow_to(1, 4, &mut pool);
+        assert_eq!(t.num_pages(), 1);
+        assert_eq!(t.capacity_rows(), PAGE_ROWS);
+        t.grow_to(PAGE_ROWS, 4, &mut pool);
+        assert_eq!(t.num_pages(), 1, "same page serves rows 0..PAGE_ROWS");
+        t.grow_to(PAGE_ROWS + 1, 4, &mut pool);
+        assert_eq!(t.num_pages(), 2, "row PAGE_ROWS opens the second page");
+        t.grow_to(3 * PAGE_ROWS - 1, 4, &mut pool);
+        assert_eq!(t.num_pages(), 3);
+        assert_eq!(pool.acquires(), 3);
+        // Row addressing crosses boundaries correctly.
+        t.row_mut(PAGE_ROWS - 1)[0] = 1.0;
+        t.row_mut(PAGE_ROWS)[0] = 2.0;
+        assert_eq!(t.row(PAGE_ROWS - 1)[0], 1.0);
+        assert_eq!(t.row(PAGE_ROWS)[0], 2.0);
+        assert_eq!(t.page(1).row(0)[0], 2.0, "row PAGE_ROWS is page 1, offset 0");
+        t.free_pages(&mut pool);
+        assert_eq!(pool.outstanding(), 0, "leak check: all pages returned");
+    }
+
+    #[test]
+    fn width_change_recycles_old_pages() {
+        let mut pool = PagePool::new();
+        let mut t = PageTable::new();
+        t.grow_to(PAGE_ROWS, 4, &mut pool);
+        t.grow_to(PAGE_ROWS, 6, &mut pool);
+        assert_eq!(t.cols(), 6);
+        assert_eq!(pool.outstanding(), 1, "old-width page went back to the pool");
+        assert_eq!(pool.pooled(), 1);
+        t.free_pages(&mut pool);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn releasing_more_pages_than_acquired_panics() {
+        let mut pool = PagePool::new();
+        let page = pool.acquire(4);
+        pool.release(page);
+        // A page the pool never handed out: releasing it over-returns.
+        pool.release(Matrix::zeros(PAGE_ROWS, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "rows")]
+    fn releasing_non_page_shape_panics() {
+        let mut pool = PagePool::new();
+        let _ = pool.acquire(4);
+        pool.release(Matrix::zeros(PAGE_ROWS + 1, 4));
+    }
+
+    #[test]
+    fn workspace_embeds_a_page_pool() {
+        let mut ws = Workspace::new();
+        let mut t = PageTable::new();
+        t.grow_to(2 * PAGE_ROWS, 8, ws.pages());
+        assert_eq!(ws.page_pool().misses(), 2);
+        assert_eq!(ws.page_pool().outstanding(), 2);
+        t.free_pages(ws.pages());
+        assert_eq!(ws.page_pool().outstanding(), 0);
+        assert!(ws.page_pool().pooled_bytes() > 0);
+        ws.clear();
+        assert_eq!(ws.page_pool().pooled(), 0);
     }
 
     #[test]

@@ -112,8 +112,9 @@ fn usage() {
          serve: --max-resident N spills least-recently-used adapters to --spill-dir;\n\
          \x20       --decode-batch G groups up to G same-adapter generations per lockstep\n\
          \x20       dispatch, --coalesce-eval merges queued same-adapter eval batches;\n\
-         \x20       --tier-weights 3,1 enables weighted-fair priority tiers and\n\
-         \x20       --shed-after-ms B sheds requests queued past the bound\n\
+         \x20       --tier-weights 3,1 enables weighted-fair priority tiers,\n\
+         \x20       --shed-after-ms B sheds requests queued past the bound, and\n\
+         \x20       --prefill-chunk P feeds P prompt tokens per group step to joining lanes\n\
          \n\
          see the module docs in src/main.rs for the full option reference"
     );
@@ -375,6 +376,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.tier_weights = args.usize_list("tier-weights")?;
     }
     sc.shed_after_ms = args.u64("shed-after-ms", sc.shed_after_ms)?;
+    sc.prefill_chunk = args.usize("prefill-chunk", sc.prefill_chunk)?;
 
     let n_adapters = args.usize("adapters", 4)?;
     let rounds = args.usize("rounds", 16)?;
@@ -518,6 +520,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     sc.burst = args.usize("burst", sc.burst)?;
     sc.max_resident = args.usize("max-resident", sc.max_resident)?;
     sc.decode_batch = args.usize("decode-batch", sc.decode_batch)?;
+    sc.prefill_chunk = args.usize("prefill-chunk", sc.prefill_chunk)?;
     let max_new = args.usize("max-new", sc.max_new_tokens)?;
     let greedy = match args.get_or("mode", "greedy") {
         "greedy" => true,

@@ -15,14 +15,20 @@
 //! convenience wrappers over [`train_grads_into`]/[`evaluate_into`].
 //!
 //! Autoregressive decoding lives alongside the batched path: a
-//! [`DecodeCache`] holds per-layer K/V ring buffers (workspace-pooled)
-//! and [`decode_step`] runs one position incrementally, bit-consistent
-//! with the batched `forward_cached` prefill over the same tokens — the
-//! property `tests/decode.rs` pins per PEFT method.
+//! [`DecodeCache`] holds per-layer paged K/V tables (fixed-size pages
+//! drawn from the workspace's page pool — see `linalg::workspace`'s
+//! "Paged K/V" docs) and [`decode_step`] runs one position
+//! incrementally, bit-consistent with the batched `forward_cached`
+//! prefill over the same tokens — the property `tests/decode.rs` pins
+//! per PEFT method. [`prefill_into`] is the batched `[p, d]` prefill
+//! over a prompt chunk, bit-identical to feeding the same tokens one
+//! [`decode_step`] at a time.
 
 use super::{Layer, ModuleOp, NativeModel};
 use crate::config::{Arch, ModuleKind};
-use crate::linalg::{matmul_into, matmul_nt_into, matmul_tn_acc_slice, Mat, Workspace};
+use crate::linalg::{
+    matmul_into, matmul_nt_into, matmul_tn_acc_slice, Mat, PageTable, Workspace, PAGE_ROWS,
+};
 use std::collections::VecDeque;
 use std::sync::Arc;
 
@@ -336,8 +342,11 @@ fn attention_backward_into(
 /// [`DecodeCache::ensure`] acquires them (a pool miss only the first time
 /// a given model shape is decoded) and [`DecodeCache::release`] hands
 /// them back, so the warm per-token decode loop performs zero heap
-/// allocations (`tests/serve_alloc.rs`). The K/V buffers are `[max_seq,
-/// d]` ring stores written once per position; rows `0..len` are valid.
+/// allocations (`tests/serve_alloc.rs`). K/V storage is **paged**: per
+/// layer, a [`PageTable`] of `[PAGE_ROWS, d]` pages grows on demand from
+/// the workspace's page pool as the sequence lengthens (resident K/V
+/// tracks decoded tokens, not `max_seq`); rows `0..len` are valid and
+/// written once per position.
 ///
 /// Bit-consistency contract: [`decode_step`] at position `p` produces the
 /// same activations, to the bit, as row `p` of the full-sequence
@@ -353,9 +362,9 @@ pub struct DecodeCache {
     /// (n_layers, d_model, d_ff, max_seq, vocab) the buffers are sized
     /// for; `ensure` re-acquires on mismatch.
     key: Option<(usize, usize, usize, usize, usize)>,
-    /// Per layer: cached K and V, `[max_seq, d]`, rows `0..len` valid.
-    k: Vec<Mat>,
-    v: Vec<Mat>,
+    /// Per layer: paged K and V tables, rows `0..len` valid.
+    k: Vec<PageTable>,
+    v: Vec<PageTable>,
     /// Positions decoded so far (== the next absolute position).
     len: usize,
     // Single-position scratch, all `[1, *]`:
@@ -422,8 +431,15 @@ impl DecodeCache {
             self.release(ws);
             let (d, f, s, vsz) = (cfg.d_model, cfg.d_ff, cfg.max_seq, cfg.vocab_size);
             for _ in 0..model.layers.len() {
-                self.k.push(ws.acquire(s, d));
-                self.v.push(ws.acquire(s, d));
+                // Empty page tables: pages are acquired as positions are
+                // decoded. The spine is pre-reserved for max_seq so warm
+                // page growth never reallocates it.
+                let mut k = PageTable::new();
+                k.reserve_rows(s);
+                self.k.push(k);
+                let mut v = PageTable::new();
+                v.reserve_rows(s);
+                self.v.push(v);
             }
             self.x = ws.acquire(1, d);
             self.h1 = ws.acquire(1, d);
@@ -455,15 +471,11 @@ impl DecodeCache {
                 ws.release(owned);
             }
         }
-        for m in self.k.drain(..) {
-            if !m.data.is_empty() {
-                ws.release(m);
-            }
+        for mut t in self.k.drain(..) {
+            t.free_pages(ws.pages());
         }
-        for m in self.v.drain(..) {
-            if !m.data.is_empty() {
-                ws.release(m);
-            }
+        for mut t in self.v.drain(..) {
+            t.free_pages(ws.pages());
         }
         give(ws, &mut self.x);
         give(ws, &mut self.h1);
@@ -510,8 +522,8 @@ impl DecodeCache {
 /// perturb any partial sum.
 fn attention_step_into(
     q: &Mat,
-    kc: &Mat,
-    vc: &Mat,
+    kc: &PageTable,
+    vc: &PageTable,
     len: usize,
     heads: usize,
     scores: &mut Mat,
@@ -522,12 +534,19 @@ fn attention_step_into(
 
 /// Row-slice core of [`attention_step_into`]: one query row against one
 /// K/V prefix. The grouped decode path calls this once per lane — each
-/// lane has its own (ragged) `len` and its own ring buffers, while the
+/// lane has its own (ragged) `len` and its own page tables, while the
 /// query rows live packed in one `[g, d]` matrix.
+///
+/// K/V are walked **page by page** (pages outer, in-page rows inner).
+/// Pages are dense and ascending, so the walk visits logical positions
+/// `0..len` in exactly the order the ring-buffer version did — every
+/// partial sum (score dot, max fold, exp/sum, PV accumulation) sees the
+/// same operands in the same order, which is what keeps paged decode
+/// bit-identical to the pre-paging runs.
 fn attention_step_rows(
     q_row: &[f32],
-    kc: &Mat,
-    vc: &Mat,
+    kc: &PageTable,
+    vc: &PageTable,
     len: usize,
     heads: usize,
     scores_row: &mut [f32],
@@ -536,6 +555,7 @@ fn attention_step_rows(
     let d = q_row.len();
     let hd = d / heads;
     let scale = 1.0 / (hd as f32).sqrt();
+    let n_pages = len.div_ceil(PAGE_ROWS);
     for v in out_row.iter_mut() {
         *v = 0.0;
     }
@@ -543,13 +563,19 @@ fn attention_step_rows(
         let col0 = h * hd;
         let qrow = &q_row[col0..col0 + hd];
         let srow = &mut scores_row[..len];
-        for s2 in 0..len {
-            let krow = &kc.row(s2)[col0..col0 + hd];
-            let mut acc = 0.0f32;
-            for i in 0..hd {
-                acc += qrow[i] * krow[i];
+        let mut s2 = 0usize;
+        for p in 0..n_pages {
+            let page = kc.page(p);
+            let rows = (len - s2).min(PAGE_ROWS);
+            for r in 0..rows {
+                let krow = &page.row(r)[col0..col0 + hd];
+                let mut acc = 0.0f32;
+                for i in 0..hd {
+                    acc += qrow[i] * krow[i];
+                }
+                srow[s2] = acc * scale;
+                s2 += 1;
             }
-            srow[s2] = acc * scale;
         }
         let max = srow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0;
@@ -561,37 +587,72 @@ fn attention_step_rows(
             *v /= sum;
         }
         let orow = &mut out_row[col0..col0 + hd];
-        for s2 in 0..len {
-            let pv = srow[s2];
-            if pv == 0.0 {
-                continue;
-            }
-            let vrow = &vc.row(s2)[col0..col0 + hd];
-            for i in 0..hd {
-                orow[i] += pv * vrow[i];
+        let mut s2 = 0usize;
+        for p in 0..n_pages {
+            let page = vc.page(p);
+            let rows = (len - s2).min(PAGE_ROWS);
+            for r in 0..rows {
+                let pv = srow[s2];
+                s2 += 1;
+                if pv == 0.0 {
+                    continue;
+                }
+                let vrow = &page.row(r)[col0..col0 + hd];
+                for i in 0..hd {
+                    orow[i] += pv * vrow[i];
+                }
             }
         }
     }
 }
 
+/// Typed decode failure: the model-level counterpart of the serve
+/// layer's `ServeError::DecodeOverflow`. Stepping (or prefilling) past
+/// `max_seq` is a caller error the serve layer validates away at
+/// submission; at the model level it surfaces as this error instead of
+/// a panic, so a misbehaving request can never trip the serve workers'
+/// panic containment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Feeding position `pos` would exceed the model's context window.
+    PastMaxSeq { pos: usize, max_seq: usize },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::PastMaxSeq { pos, max_seq } => {
+                write!(f, "decode position {pos} past max_seq ({max_seq})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
 /// One autoregressive decode step: feed `token` at the next position,
-/// append its K/V to the cache, and leave next-token logits in
-/// `cache.logits`. Bit-consistent with the corresponding row of the full
-/// `forward_cached` prefill (see [`DecodeCache`]). Allocation-free once
-/// `cache` and `ws` are warm.
+/// append its K/V to the cache (growing the page tables on demand), and
+/// leave next-token logits in `cache.logits`. Bit-consistent with the
+/// corresponding row of the full `forward_cached` prefill (see
+/// [`DecodeCache`]). Allocation-free once `cache` and `ws` are warm.
+/// Feeding past `max_seq` returns [`DecodeError::PastMaxSeq`] (a typed
+/// error, not a panic — the serve layer maps it to a `ServeError`).
 pub fn decode_step(
     model: &NativeModel,
     cache: &mut DecodeCache,
     token: i32,
     ws: &mut Workspace,
-) {
+) -> Result<(), DecodeError> {
     let cfg = &model.cfg;
     assert_eq!(cfg.arch, Arch::Decoder, "decode requires a decoder model");
     let pos = cache.len;
-    assert!(pos < cfg.max_seq, "decode past max_seq ({})", cfg.max_seq);
+    if pos >= cfg.max_seq {
+        return Err(DecodeError::PastMaxSeq { pos, max_seq: cfg.max_seq });
+    }
     let tok = token as usize;
     assert!(tok < cfg.vocab_size, "token {token} out of vocab ({})", cfg.vocab_size);
     let heads = cfg.n_heads;
+    let d = cfg.d_model;
 
     // x = tok_emb[token] + pos_emb[pos].
     {
@@ -605,6 +666,8 @@ pub fn decode_step(
         module(layer, ModuleKind::Q).forward_into(&cache.h1, &mut cache.q, ws);
         module(layer, ModuleKind::K).forward_into(&cache.h1, &mut cache.krow, ws);
         module(layer, ModuleKind::V).forward_into(&cache.h1, &mut cache.vrow, ws);
+        cache.k[li].grow_to(pos + 1, d, ws.pages());
+        cache.v[li].grow_to(pos + 1, d, ws.pages());
         cache.k[li].row_mut(pos).copy_from_slice(cache.krow.row(0));
         cache.v[li].row_mut(pos).copy_from_slice(cache.vrow.row(0));
         attention_step_into(
@@ -635,6 +698,7 @@ pub fn decode_step(
     let lm = model.lm_head.as_ref().expect("decoder lm_head");
     lm.matmul_into(&cache.hidden, &mut cache.logits);
     cache.len = pos + 1;
+    Ok(())
 }
 
 /// Pick the next token from `cache.logits`: argmax (first maximum wins,
@@ -738,7 +802,8 @@ impl DecodeStream {
                 break;
             }
             let inp = if self.fed < prompt.len() { prompt[self.fed] } else { self.last };
-            decode_step(model, cache, inp, ws);
+            decode_step(model, cache, inp, ws)
+                .expect("stream checks max_seq before every step");
             self.fed += 1;
             if self.fed >= prompt.len() {
                 let tok = select_token(cache, greedy, &mut self.rng);
@@ -780,18 +845,21 @@ pub fn generate_into(
 // ---------------------------------------------------------------------------
 
 /// One generation's private K/V state inside a decode group: per-layer
-/// `[max_seq, d]` ring buffers plus this lane's own decoded length.
+/// paged K/V tables plus this lane's own decoded length.
 ///
-/// Buffers are pooled through the caller's [`Workspace`] exactly like
-/// [`DecodeCache`]. A lane travels with its (resumable) serve job between
-/// dispatches, so a generation can leave one group and be re-grouped —
-/// by any worker — with whatever lanes are in flight at that moment.
+/// Pages come from the caller's [`Workspace`] page pool exactly like
+/// [`DecodeCache`]'s, growing with the decoded length — so resident K/V
+/// across a fleet of lanes tracks **active tokens**, not
+/// lanes × max_seq. A lane travels with its (resumable) serve job
+/// between dispatches, so a generation can leave one group and be
+/// re-grouped — by any worker — with whatever lanes are in flight at
+/// that moment.
 pub struct DecodeLane {
-    /// (n_layers, d_model, max_seq) the rings are sized for.
+    /// (n_layers, d_model, max_seq) the tables are sized for.
     key: Option<(usize, usize, usize)>,
-    /// Per layer: cached K and V, rows `0..len` valid.
-    k: Vec<Mat>,
-    v: Vec<Mat>,
+    /// Per layer: paged K and V tables, rows `0..len` valid.
+    k: Vec<PageTable>,
+    v: Vec<PageTable>,
     /// Positions decoded so far (== this lane's next absolute position —
     /// lengths are **ragged** across a group).
     len: usize,
@@ -808,35 +876,48 @@ impl DecodeLane {
         DecodeLane { key: None, k: Vec::new(), v: Vec::new(), len: 0 }
     }
 
-    /// Size the rings for `model`, acquiring from `ws` (no-op when warm).
-    /// Unlike [`DecodeCache::ensure`] the decoded length is preserved — a
-    /// lane is re-ensured on every dispatch of a resumable generation;
-    /// call [`DecodeLane::reset`] to start a fresh generation.
+    /// Size the tables for `model` (no-op when warm). Unlike
+    /// [`DecodeCache::ensure`] the decoded length is preserved — a lane
+    /// is re-ensured on every dispatch of a resumable generation; call
+    /// [`DecodeLane::reset`] to start a fresh generation. Pages are NOT
+    /// acquired here: they arrive on demand as the lane decodes.
     pub fn ensure(&mut self, model: &NativeModel, ws: &mut Workspace) {
         let cfg = &model.cfg;
         let key = (model.layers.len(), cfg.d_model, cfg.max_seq);
         if self.key != Some(key) {
             self.release(ws);
             for _ in 0..model.layers.len() {
-                self.k.push(ws.acquire(cfg.max_seq, cfg.d_model));
-                self.v.push(ws.acquire(cfg.max_seq, cfg.d_model));
+                let mut k = PageTable::new();
+                k.reserve_rows(cfg.max_seq);
+                self.k.push(k);
+                let mut v = PageTable::new();
+                v.reserve_rows(cfg.max_seq);
+                self.v.push(v);
             }
             self.key = Some(key);
         }
     }
 
-    /// Return the rings to `ws` (serve workers pool warm lanes this way
-    /// between generations).
-    pub fn release(&mut self, ws: &mut Workspace) {
-        for m in self.k.drain(..) {
-            if !m.data.is_empty() {
-                ws.release(m);
-            }
+    /// Return every page to the pool (tables and key stay — the warm
+    /// shape survives). Serve workers call this when a generation
+    /// completes, so a pooled idle lane holds **no** K/V memory and its
+    /// pages immediately serve other lanes or adapters.
+    pub fn free_pages(&mut self, ws: &mut Workspace) {
+        for t in self.k.iter_mut() {
+            t.free_pages(ws.pages());
         }
-        for m in self.v.drain(..) {
-            if !m.data.is_empty() {
-                ws.release(m);
-            }
+        for t in self.v.iter_mut() {
+            t.free_pages(ws.pages());
+        }
+    }
+
+    /// Return the tables' pages to `ws` and drop the tables.
+    pub fn release(&mut self, ws: &mut Workspace) {
+        for mut t in self.k.drain(..) {
+            t.free_pages(ws.pages());
+        }
+        for mut t in self.v.drain(..) {
+            t.free_pages(ws.pages());
         }
         self.key = None;
         self.len = 0;
@@ -851,16 +932,155 @@ impl DecodeLane {
         self.len == 0
     }
 
-    /// Forget the decoded prefix (rings stay warm for the next
-    /// generation).
+    /// Forget the decoded prefix. Any pages still held stay with the
+    /// table (dirty reuse is safe: every row is written before it is
+    /// read); [`DecodeLane::free_pages`] returns them to the pool.
     pub fn reset(&mut self) {
         self.len = 0;
     }
 }
 
-/// One lane's full state while joined to a group: its K/V rings, its
-/// resumable stream bookkeeping (prompt cursor + prompt-seeded RNG), and
-/// its request parameters.
+/// Batched `[p, d]` prompt prefill into one lane's paged K/V: feed
+/// `tokens` at positions `lane.len()..lane.len() + p` through ONE
+/// forward over `[p, d]` activations, scattering each position's fresh
+/// K/V row into the lane's page tables and running incremental
+/// attention per row over the growing prefix.
+///
+/// **Bit-identical** to feeding the same tokens one [`decode_step`] at
+/// a time, at any chunk size: every projection/MLP kernel on the path
+/// is row-local (the `linalg` accumulation-order policy — ascending-k
+/// partial sums per output element regardless of row batching), norms
+/// and activations are per-row, and attention for row `t` walks exactly
+/// the prefix `0..base+t+1` in page order — the same operands in the
+/// same order as `t` single steps. When `logits` is supplied (the chunk
+/// covers the final prompt position), the row is produced by the same
+/// `[1, d] × [d, vocab]` LM-head call the per-token path makes over
+/// that position's hidden state, so first-token selection is bit-exact.
+///
+/// Scratch is workspace-pooled keyed by the `[p, *]` shapes: a warm
+/// serve loop prefilling at a fixed chunk width allocates nothing.
+/// Overrunning the context window returns [`DecodeError::PastMaxSeq`]
+/// before any lane state is touched.
+pub fn prefill_into(
+    model: &NativeModel,
+    lane: &mut DecodeLane,
+    tokens: &[i32],
+    logits: Option<&mut Mat>,
+    ws: &mut Workspace,
+) -> Result<(), DecodeError> {
+    let cfg = &model.cfg;
+    assert_eq!(cfg.arch, Arch::Decoder, "decode requires a decoder model");
+    let base = lane.len;
+    let p = tokens.len();
+    if p == 0 {
+        return Ok(());
+    }
+    if base + p > cfg.max_seq {
+        // Report the first position that would not fit — the same
+        // position a `decode_step` loop would be refused at.
+        return Err(DecodeError::PastMaxSeq { pos: base.max(cfg.max_seq), max_seq: cfg.max_seq });
+    }
+    assert!(!lane.k.is_empty(), "lane must be ensured before prefill");
+    let heads = cfg.n_heads;
+    let (d, f, s) = (cfg.d_model, cfg.d_ff, cfg.max_seq);
+
+    let mut x = ws.acquire(p, d);
+    let mut h1 = ws.acquire(p, d);
+    let mut q = ws.acquire(p, d);
+    let mut krow = ws.acquire(p, d);
+    let mut vrow = ws.acquire(p, d);
+    let mut att = ws.acquire(p, d);
+    let mut att_out = ws.acquire(p, d);
+    let mut x_mid = ws.acquire(p, d);
+    let mut h2 = ws.acquire(p, d);
+    let mut up = ws.acquire(p, f);
+    let mut gate = ws.acquire(p, f);
+    let mut ff = ws.acquire(p, f);
+    let mut down = ws.acquire(p, d);
+    let mut scores = ws.acquire(1, s);
+
+    // x row t = tok_emb[tokens[t]] + pos_emb[base + t].
+    for (t, &token) in tokens.iter().enumerate() {
+        let tok = token as usize;
+        assert!(tok < cfg.vocab_size, "token {token} out of vocab ({})", cfg.vocab_size);
+        let out = x.row_mut(t);
+        model.tok_emb.copy_row(tok, out);
+        model.pos_emb.add_row(base + t, out);
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        rmsnorm_into(&x, &mut h1);
+        module(layer, ModuleKind::Q).forward_into(&h1, &mut q, ws);
+        module(layer, ModuleKind::K).forward_into(&h1, &mut krow, ws);
+        module(layer, ModuleKind::V).forward_into(&h1, &mut vrow, ws);
+        lane.k[li].grow_to(base + p, d, ws.pages());
+        lane.v[li].grow_to(base + p, d, ws.pages());
+        // Causal order: row t's K/V lands in the tables before row t's
+        // attention reads prefix 0..base+t+1 (which includes it).
+        for t in 0..p {
+            let pos = base + t;
+            lane.k[li].row_mut(pos).copy_from_slice(krow.row(t));
+            lane.v[li].row_mut(pos).copy_from_slice(vrow.row(t));
+            attention_step_rows(
+                q.row(t),
+                &lane.k[li],
+                &lane.v[li],
+                pos + 1,
+                heads,
+                scores.row_mut(0),
+                att.row_mut(t),
+            );
+        }
+        module(layer, ModuleKind::O).forward_into(&att, &mut att_out, ws);
+        x_mid.copy_from(&x);
+        x_mid.add_assign(&att_out);
+
+        rmsnorm_into(&x_mid, &mut h2);
+        module(layer, ModuleKind::U).forward_into(&h2, &mut up, ws);
+        module(layer, ModuleKind::G).forward_into(&h2, &mut gate, ws);
+        for i in 0..ff.data.len() {
+            ff.data[i] = silu(gate.data[i]) * up.data[i];
+        }
+        module(layer, ModuleKind::D).forward_into(&ff, &mut down, ws);
+        x.copy_from(&x_mid);
+        x.add_assign(&down);
+    }
+
+    if let Some(lg) = logits {
+        // Final position's hidden state through the identical [1, d]
+        // norm + LM-head calls decode_step makes, so the logits row (and
+        // any sampling from it) is bit-exact to the per-token path.
+        let mut xrow = ws.acquire(1, d);
+        let mut hrow = ws.acquire(1, d);
+        xrow.row_mut(0).copy_from_slice(x.row(p - 1));
+        rmsnorm_into(&xrow, &mut hrow);
+        let lm = model.lm_head.as_ref().expect("decoder lm_head");
+        lm.matmul_into(&hrow, lg);
+        ws.release(xrow);
+        ws.release(hrow);
+    }
+    lane.len = base + p;
+
+    ws.release(x);
+    ws.release(h1);
+    ws.release(q);
+    ws.release(krow);
+    ws.release(vrow);
+    ws.release(att);
+    ws.release(att_out);
+    ws.release(x_mid);
+    ws.release(h2);
+    ws.release(up);
+    ws.release(gate);
+    ws.release(ff);
+    ws.release(down);
+    ws.release(scores);
+    Ok(())
+}
+
+/// One lane's full state while joined to a group: its paged K/V tables,
+/// its resumable stream bookkeeping (prompt cursor + prompt-seeded RNG),
+/// and its request parameters.
 struct GroupLane {
     kv: DecodeLane,
     stream: DecodeStream,
@@ -882,12 +1102,12 @@ struct GroupLane {
 /// row-local (the tiled `linalg::matmul` kernels accumulate over k in
 /// ascending order per output element regardless of tile or row-panel
 /// split — the module docs' accumulation-order policy; norms,
-/// activations and sampling are per-row), attention runs per lane
-/// against that lane's own rings via the `linalg` row-scatter helpers
-/// (`copy_row_into`), and each lane selects from its own logits row with
-/// its own
-/// prompt-seeded RNG. `tests/decode.rs` pins the property per PEFT
-/// method, including mid-flight join/leave.
+/// activations and sampling are per-row), each fresh K/V row scatters
+/// into its lane's own page tables at that lane's own position before
+/// attention walks that lane's prefix in page order, and each lane
+/// selects from its own logits row with its own prompt-seeded RNG.
+/// `tests/decode.rs` pins the property per PEFT method, including
+/// mid-flight join/leave.
 ///
 /// Group scratch is workspace-pooled and keyed by (model shape, group
 /// size): a warm fixed-size group allocates nothing; a lane finishing
@@ -919,10 +1139,31 @@ pub struct GroupDecodeCache {
     /// Group-row → lane-index packing of the current step (lanes that
     /// finished stay joined but stop stepping).
     active: Vec<usize>,
+    /// Lanes still feeding their prompt this step — they take the
+    /// batched chunked-prefill path instead of a lockstep row.
+    prefilling: Vec<usize>,
+    /// `[1, vocab]` logits of a prefill chunk's final prompt position
+    /// (the lane's first-token selection reads this row).
+    plogits: Mat,
+    /// vocab size `plogits` is sized for.
+    plogits_key: Option<usize>,
+    /// Prompt tokens fed per lockstep step for prompt-phase lanes (≥ 1;
+    /// see [`GroupDecodeCache::set_prefill_chunk`]).
+    prefill_chunk: usize,
+    /// Chunks and prompt tokens prefetched since the last
+    /// [`GroupDecodeCache::take_prefill_counters`] — the serve layer's
+    /// burst accounting reads these per dispatch.
+    prefill_chunks: u64,
+    prefill_tokens: u64,
     /// Joined lanes in join order ([`GroupDecodeCache::detach_first`]
     /// pops from the front).
     lanes: VecDeque<GroupLane>,
 }
+
+/// Default prompt tokens per prefill chunk: one full K/V page per step
+/// keeps the group stall bounded while reaching first-token in
+/// `ceil(prompt / PAGE_ROWS)` steps.
+pub const DEFAULT_PREFILL_CHUNK: usize = PAGE_ROWS;
 
 impl Default for GroupDecodeCache {
     fn default() -> Self {
@@ -952,7 +1193,45 @@ impl GroupDecodeCache {
             logits: empty(),
             scores: empty(),
             active: Vec::new(),
+            prefilling: Vec::new(),
+            plogits: empty(),
+            plogits_key: None,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            prefill_chunks: 0,
+            prefill_tokens: 0,
             lanes: VecDeque::new(),
+        }
+    }
+
+    /// Set the chunked-prefill width: how many prompt tokens a
+    /// prompt-phase lane feeds per lockstep step (clamped to ≥ 1; 1
+    /// reproduces the legacy one-token-per-step feeding schedule).
+    /// Token streams are bit-identical for every chunk size — only the
+    /// step schedule changes.
+    pub fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.prefill_chunk = chunk.max(1);
+    }
+
+    /// Drain the prefill counters accumulated since the last call:
+    /// `(chunks, prompt_tokens)`. The serve worker publishes these into
+    /// the adapter's stats after each dispatch.
+    pub fn take_prefill_counters(&mut self) -> (u64, u64) {
+        let out = (self.prefill_chunks, self.prefill_tokens);
+        self.prefill_chunks = 0;
+        self.prefill_tokens = 0;
+        out
+    }
+
+    /// Size the `[1, vocab]` prefill-logits row (no-op when warm).
+    fn ensure_plogits(&mut self, model: &NativeModel, ws: &mut Workspace) {
+        let vsz = model.cfg.vocab_size;
+        if self.plogits_key != Some(vsz) {
+            if !self.plogits.data.is_empty() {
+                let owned = std::mem::replace(&mut self.plogits, Mat::zeros(0, 0));
+                ws.release(owned);
+            }
+            self.plogits = ws.acquire(1, vsz);
+            self.plogits_key = Some(vsz);
         }
     }
 
@@ -1050,53 +1329,121 @@ impl GroupDecodeCache {
         self.skey = None;
     }
 
-    /// Return all scratch (and any still-joined lanes' rings) to `ws`.
+    /// Return all scratch (and any still-joined lanes' pages) to `ws`.
     pub fn release(&mut self, ws: &mut Workspace) {
         self.release_scratch(ws);
+        if !self.plogits.data.is_empty() {
+            let owned = std::mem::replace(&mut self.plogits, Mat::zeros(0, 0));
+            ws.release(owned);
+        }
+        self.plogits_key = None;
         while let Some(mut l) = self.lanes.pop_front() {
             l.kv.release(ws);
         }
         self.active.clear();
+        self.prefilling.clear();
     }
 
-    /// Advance every unfinished lane by up to `steps` lockstep decode
-    /// steps. Freshly emitted tokens for lane `i` are appended to
-    /// `outs[i]` (one output stream per joined lane, in join order).
-    /// Lanes whose generation completes leave the lockstep immediately —
-    /// the group shrinks mid-burst — but stay joined (flagged done) until
-    /// detached. Returns true when every joined lane is done.
+    /// Advance every unfinished lane by up to `steps` lockstep steps.
+    /// Freshly emitted tokens for lane `i` are appended to `outs[i]`
+    /// (one output stream per joined lane, in join order). Lanes whose
+    /// generation completes leave the lockstep immediately — the group
+    /// shrinks mid-burst — but stay joined (flagged done) until
+    /// detached. Returns `Ok(true)` when every joined lane is done.
+    ///
+    /// A lane still feeding its prompt consumes up to `prefill_chunk`
+    /// prompt tokens per step through the batched [`prefill_into`] path
+    /// instead of a lockstep row, so a joining lane reaches its first
+    /// token in `ceil(prompt / chunk)` group steps — not `prompt` steps
+    /// — while the decoding lanes advance one position every step. The
+    /// emitted streams are bit-identical for every chunk size
+    /// (`tests/decode.rs` pins this): prefill rows and decode rows run
+    /// the same row-local kernels in the same order.
     pub fn advance(
         &mut self,
         model: &NativeModel,
         steps: usize,
         ws: &mut Workspace,
         outs: &mut [Vec<i32>],
-    ) -> bool {
+    ) -> Result<bool, DecodeError> {
         let cfg = &model.cfg;
         assert_eq!(cfg.arch, Arch::Decoder, "decode requires a decoder model");
         assert_eq!(outs.len(), self.lanes.len(), "one output stream per joined lane");
         let max_seq = cfg.max_seq;
         let heads = cfg.n_heads;
+        let d = cfg.d_model;
+        let chunk_cap = self.prefill_chunk.max(1);
         for _ in 0..steps {
-            // Pack the lanes still running into group rows 0..g (the
-            // same completion predicate `DecodeStream::advance` checks
-            // before each ungrouped step).
+            // Pack the lanes still running (the same completion
+            // predicate `DecodeStream::advance` checks before each
+            // ungrouped step), split by phase: prompt-phase lanes
+            // prefill a chunk this step, decode-phase lanes take a
+            // lockstep row.
             {
                 let lanes = &mut self.lanes;
                 let active = &mut self.active;
+                let prefilling = &mut self.prefilling;
                 active.clear();
+                prefilling.clear();
                 for (i, l) in lanes.iter_mut().enumerate() {
                     if !l.done && (l.stream.produced >= l.max_new_tokens || l.kv.len >= max_seq) {
                         l.done = true;
                     }
-                    if !l.done {
+                    if l.done {
+                        continue;
+                    }
+                    if l.stream.fed < l.prompt.len() {
+                        prefilling.push(i);
+                    } else {
                         active.push(i);
                     }
                 }
             }
+            if self.active.is_empty() && self.prefilling.is_empty() {
+                return Ok(true);
+            }
+
+            // Chunked prefill pass: each prompt-phase lane feeds up to
+            // `chunk_cap` prompt tokens in ONE batched forward — its
+            // whole step quota — and selects its first token the moment
+            // the chunk covers the final prompt position (same position,
+            // same logits row, same RNG state as the per-token path).
+            if !self.prefilling.is_empty() {
+                self.ensure_plogits(model, ws);
+                let GroupDecodeCache {
+                    lanes,
+                    prefilling,
+                    plogits,
+                    prefill_chunks,
+                    prefill_tokens,
+                    ..
+                } = self;
+                for &i in prefilling.iter() {
+                    let l = &mut lanes[i];
+                    let rem = l.prompt.len() - l.stream.fed;
+                    let chunk = rem.min(chunk_cap).min(max_seq - l.kv.len);
+                    let finishing = l.stream.fed + chunk == l.prompt.len();
+                    let toks = &l.prompt[l.stream.fed..l.stream.fed + chunk];
+                    let lg = if finishing { Some(&mut *plogits) } else { None };
+                    prefill_into(model, &mut l.kv, toks, lg, ws)?;
+                    l.stream.fed += chunk;
+                    *prefill_chunks += 1;
+                    *prefill_tokens += chunk as u64;
+                    if finishing {
+                        let tok = select_token_row(plogits.row(0), l.greedy, &mut l.stream.rng);
+                        outs[i].push(tok);
+                        l.stream.produced += 1;
+                        l.stream.last = tok;
+                    }
+                    if l.stream.produced >= l.max_new_tokens || l.kv.len >= max_seq {
+                        l.done = true;
+                    }
+                }
+            }
+
             let g = self.active.len();
             if g == 0 {
-                return true;
+                continue;
             }
             self.ensure_scratch(model, g, ws);
             let GroupDecodeCache {
@@ -1147,8 +1494,10 @@ impl GroupDecodeCache {
                 for (r, &i) in active.iter().enumerate() {
                     let l = &mut lanes[i];
                     let pos = l.kv.len;
-                    krow.copy_row_into(r, &mut l.kv.k[li], pos);
-                    vrow.copy_row_into(r, &mut l.kv.v[li], pos);
+                    l.kv.k[li].grow_to(pos + 1, d, ws.pages());
+                    l.kv.v[li].grow_to(pos + 1, d, ws.pages());
+                    l.kv.k[li].row_mut(pos).copy_from_slice(krow.row(r));
+                    l.kv.v[li].row_mut(pos).copy_from_slice(vrow.row(r));
                     attention_step_rows(
                         q.row(r),
                         &l.kv.k[li],
@@ -1195,7 +1544,7 @@ impl GroupDecodeCache {
                 }
             }
         }
-        self.lanes.iter().all(|l| l.done)
+        Ok(self.lanes.iter().all(|l| l.done))
     }
 }
 
@@ -2526,7 +2875,7 @@ mod tests {
         let mut cache = DecodeCache::new();
         cache.ensure(&model, &mut ws);
         for (t, &tok) in tokens.iter().enumerate() {
-            decode_step(&model, &mut cache, tok, &mut ws);
+            decode_step(&model, &mut cache, tok, &mut ws).unwrap();
             assert_eq!(
                 cache.logits.data, reference[t].data,
                 "logit mismatch at position {t}"

@@ -107,10 +107,11 @@
 //!    ticket before the job completes — [`Ticket::wait_tokens`] /
 //!    [`Ticket::with_tokens`] observe the stream mid-request;
 //!    [`Ticket::wait`] returns (0.0, tokens_emitted) at completion.
-//! 4. **K/V lane rings** are pooled per worker and attached to a job on
-//!    first dispatch (buffers workspace-pooled, so the warm per-token
-//!    decode loop performs zero heap allocations —
-//!    `tests/serve_alloc.rs`).
+//! 4. **K/V lanes** are pooled per worker and attached to a job on
+//!    first dispatch; their K/V lives in fixed-size pages drawn from the
+//!    workspace page pool and returned on completion (see Prefill &
+//!    paging below), so the warm decode loop performs zero heap
+//!    allocations — `tests/serve_alloc.rs`.
 //! 5. **Eviction**: strict [`ServeCore::evict`] counts an in-flight
 //!    generation as pending work (it cannot be "waited out");
 //!    `evict_with(Reject)` fails it with [`ServeError::Evicted`],
@@ -161,6 +162,35 @@
 //!   FIFO order is preserved across kind boundaries: a batch never forms
 //!   past the first job of a different kind, so results never reorder
 //!   around a queued `Train` step.
+//!
+//! # Prefill & paging
+//!
+//! - **Paged K/V.** A lane's K/V is not a `[max_seq, d]` ring but a
+//!   [`native::DecodeLane`] of per-layer page tables over fixed-size
+//!   `[PAGE_ROWS, d]` pages drawn from the worker workspace's page pool
+//!   (`linalg::workspace`, "Paged K/V"). Pages are acquired as positions
+//!   are decoded and returned the moment a generation completes —
+//!   resident decode memory tracks **active tokens** across the fleet,
+//!   not lanes × max_seq, which is what lets hundreds of lanes coexist
+//!   at bounded RSS (`benches/decode.rs` pins the scaling).
+//! - **Chunked batched prefill.** A lane still feeding its prompt does
+//!   not trickle one token per lockstep step: each group step it feeds
+//!   up to [`ServeOptions::prefill_chunk`] prompt tokens through ONE
+//!   batched `[p, d]` forward (`native::prefill_into`), interleaved with
+//!   the decoding lanes' lockstep rows. A joining lane therefore reaches
+//!   its first token in `ceil(prompt / prefill_chunk)` group steps — not
+//!   `prompt` steps — while each step's stall for the decoding lanes is
+//!   bounded by one chunk. Streams are bit-identical at every chunk
+//!   size (chunk 1 reproduces the legacy schedule exactly).
+//! - **Accounting.** A prefill chunk rides inside its group's dispatch:
+//!   the group still consumes one burst quota, strict eviction counts a
+//!   prefilling lane as in-flight work exactly like a decoding one
+//!   (`gens_inflight`), and per-adapter [`AdapterStats::prefill_chunks`]
+//!   / [`AdapterStats::prefill_tokens`] expose the prefill volume.
+//!   Decode overflow past `max_seq` — unreachable through `submit`'s
+//!   validation, but typed all the way down — fails the group's tickets
+//!   with [`ServeError::DecodeOverflow`] instead of tripping worker
+//!   panic containment.
 //!
 //! # Failure containment
 //!
@@ -348,6 +378,14 @@ pub enum ServeError {
     /// an encoder, empty prompt, out-of-vocab prompt token, or prompt +
     /// max_new_tokens past `max_seq`).
     InvalidRequest,
+    /// The decode path reported stepping (or prefilling) past the
+    /// model's context window — `native::DecodeError::PastMaxSeq`
+    /// surfaced typed. Unreachable for requests admitted through
+    /// [`ServeCore::submit`] (its validation rejects
+    /// `prompt + max_new_tokens > max_seq` as [`ServeError::InvalidRequest`]),
+    /// but kept typed end to end so an overflow can never masquerade as
+    /// a worker panic.
+    DecodeOverflow { pos: usize, max_seq: usize },
     /// The worker servicing this request panicked. The panic is contained
     /// (caught at the dispatch boundary, never across a held scheduler
     /// lock): the adapter whose compute panicked is retired — its
@@ -381,6 +419,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::InvalidRequest => {
                 f.write_str("request is malformed for this backbone (arch/prompt/length)")
+            }
+            ServeError::DecodeOverflow { pos, max_seq } => {
+                write!(f, "decode position {pos} past max_seq ({max_seq})")
             }
             ServeError::WorkerPanicked => {
                 f.write_str("serve worker panicked while running this adapter; adapter retired")
@@ -541,10 +582,21 @@ pub struct AdapterStats {
     /// token for generations, enqueue→completion latency for one-shot
     /// eval/train requests.
     pub ttft: QuantileSketch,
+    /// TTFT split by scheduling tier (nanoseconds): index 0 samples
+    /// tier-0 ("interactive") requests, index 1 every lower tier
+    /// ("batch"). An SLO gate reads the interactive sketch alone —
+    /// averaging the tiers together is exactly what a latency SLO must
+    /// not do.
+    pub ttft_tiered: [QuantileSketch; 2],
     /// Streaming per-token decode latency sketch (nanoseconds per
     /// emitted token): one sample per generation dispatch (group service
     /// time / tokens emitted).
     pub tok_latency: QuantileSketch,
+    /// Chunked-prefill dispatch units consumed by this adapter's
+    /// generations (one per prompt-phase lane per lockstep group step).
+    pub prefill_chunks: u64,
+    /// Prompt tokens fed through the batched `[p, d]` prefill path.
+    pub prefill_tokens: u64,
 }
 
 impl AdapterStats {
@@ -587,6 +639,12 @@ impl AdapterStats {
     /// Per-token decode latency quantile in milliseconds.
     pub fn tok_latency_ms(&self, q: f64) -> f64 {
         self.tok_latency.quantile(q) / 1e6
+    }
+
+    /// Tier-split TTFT quantile in milliseconds: `tier` 0 reads the
+    /// interactive sketch, any other value the batch sketch.
+    pub fn ttft_tier_ms(&self, tier: usize, q: f64) -> f64 {
+        self.ttft_tiered[tier.min(1)].quantile(q) / 1e6
     }
 }
 
@@ -636,6 +694,13 @@ pub struct ServeOptions {
     /// milliseconds, new submissions to that adapter are shed with
     /// [`ShedReason::QueueDelay`]. 0 (default) disables.
     pub shed_after_ms: u64,
+    /// Prompt tokens a joining generation feeds per lockstep group step
+    /// through the batched prefill path (clamped to ≥ 1; 1 reproduces
+    /// the legacy one-token-per-step schedule). Streams are
+    /// bit-identical at every value — only the step schedule and the
+    /// per-step group stall change. Defaults to one full K/V page
+    /// (`native::DEFAULT_PREFILL_CHUNK`).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeOptions {
@@ -652,6 +717,7 @@ impl Default for ServeOptions {
             coalesce_eval: false,
             tier_weights: Vec::new(),
             shed_after_ms: 0,
+            prefill_chunk: native::DEFAULT_PREFILL_CHUNK,
         }
     }
 }
@@ -669,6 +735,7 @@ impl From<crate::config::ServeConfig> for ServeOptions {
             coalesce_eval: sc.coalesce_eval,
             tier_weights: sc.tier_weights.iter().map(|&w| w as u64).collect(),
             shed_after_ms: sc.shed_after_ms,
+            prefill_chunk: sc.prefill_chunk,
             ..ServeOptions::default()
         }
     }
@@ -856,9 +923,9 @@ struct GenJob {
     /// burst, so serve-side streams are bit-identical to direct decodes
     /// by construction.
     stream: native::DecodeStream,
-    /// Per-lane K/V rings; taken from the worker's lane pool on first
+    /// Per-lane paged K/V; taken from the worker's lane pool on first
     /// dispatch, carried here between dispatches (any worker can resume
-    /// the lane), and returned to a pool on completion.
+    /// the lane), and returned to a pool — pages freed — on completion.
     lane: Option<DecodeLane>,
     /// Tokens emitted across all dispatches so far — 0 until the first
     /// token lands, which is the TTFT sampling point.
@@ -1023,6 +1090,7 @@ impl ServeCore {
                     burst: opts.burst.max(1),
                     decode_batch: opts.decode_batch.max(1),
                     coalesce_eval: opts.coalesce_eval,
+                    prefill_chunk: opts.prefill_chunk.max(1),
                     backbone: Arc::clone(&backbone),
                     spill_dir: spill_dir.clone(),
                     max_resident: opts.max_resident,
@@ -1784,6 +1852,9 @@ struct WorkerCfg {
     burst: usize,
     decode_batch: usize,
     coalesce_eval: bool,
+    /// Prompt tokens per prompt-phase lane per lockstep group step
+    /// ([`ServeOptions::prefill_chunk`], pre-clamped ≥ 1).
+    prefill_chunk: usize,
     backbone: Arc<Backbone>,
     spill_dir: PathBuf,
     max_resident: usize,
@@ -1944,6 +2015,7 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
     let mut lane_pool: Vec<DecodeLane> = Vec::new();
     // Lockstep group state: lanes join for one burst, leave after it.
     let mut gc = GroupDecodeCache::new();
+    gc.set_prefill_chunk(cfg.prefill_chunk);
     // Per-lane tokens emitted by the current group burst (streamed to
     // each lane's ticket after the burst; pre-sized for decode_batch
     // lanes × burst steps, never reallocates once warm).
@@ -1951,10 +2023,11 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
         (0..decode_batch).map(|_| Vec::with_capacity(burst)).collect();
     // Unfinished generations to push back to the queue front as a block.
     let mut requeue: Vec<Job> = Vec::with_capacity(decode_batch);
-    // TTFT samples (ns) gathered during the current dispatch, recorded
-    // into the slot's sketch at publish time. Pre-sized for the largest
-    // dispatch unit, so warm dispatches never allocate.
-    let mut ttft_samples: Vec<u64> = Vec::with_capacity(burst.max(decode_batch));
+    // TTFT samples (ns, tier) gathered during the current dispatch,
+    // recorded into the slot's combined and tier-split sketches at
+    // publish time. Pre-sized for the largest dispatch unit, so warm
+    // dispatches never allocate.
+    let mut ttft_samples: Vec<(u64, usize)> = Vec::with_capacity(burst.max(decode_batch));
     // Coalesced-eval scratch: the merged batch (vectors reused across
     // dispatches) and the per-request example counts.
     let mut merged = Batch {
@@ -2098,6 +2171,8 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
         let mut max_latency_ns = 0u64;
         let mut group_dispatches = 0u64;
         let mut group_lanes = 0u64;
+        let mut prefill_chunks = 0u64;
+        let mut prefill_tokens = 0u64;
         // Mean per-emitted-token service time of this dispatch (gen
         // groups only); one sketch sample per dispatch.
         let mut per_token_ns = 0u64;
@@ -2132,33 +2207,61 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                 for f in fresh.iter_mut() {
                     f.clear();
                 }
-                // ≤ `burst` lockstep steps for the whole group.
-                gc.advance(&backend.model, burst, &mut ws, &mut fresh[..n_group]);
+                // ≤ `burst` lockstep steps for the whole group (prompt-
+                // phase lanes consume chunked batched prefill instead of
+                // lockstep rows). A typed decode overflow — unreachable
+                // past submit's validation, but never a panic — fails
+                // the whole group's tickets below.
+                let overflow = match gc
+                    .advance(&backend.model, burst, &mut ws, &mut fresh[..n_group])
+                {
+                    Ok(_) => None,
+                    Err(native::DecodeError::PastMaxSeq { pos, max_seq }) => {
+                        Some(ServeError::DecodeOverflow { pos, max_seq })
+                    }
+                };
+                let (pf_chunks, pf_tokens) = gc.take_prefill_counters();
+                prefill_chunks += pf_chunks;
+                prefill_tokens += pf_tokens;
                 let group_svc = svc.elapsed().as_nanos() as u64;
                 service_ns += group_svc;
                 // Leave the group in join order: stream fresh tokens,
-                // complete finished lanes (rings back to the pool),
+                // complete finished lanes (pages back to the pool),
                 // collect unfinished ones for the front re-enqueue.
                 for li in 0..n_group {
                     let mut job = jobs.remove(0);
                     current = Some(Arc::clone(&job.ticket));
-                    let (kv, stream, job_done) =
+                    let (mut kv, stream, job_done) =
                         gc.detach_first().expect("one joined lane per group job");
                     let JobKind::Gen(gen) = &mut job.kind else {
                         unreachable!("generation group holds generation jobs")
                     };
                     gen.stream = stream;
+                    if let Some(e) = overflow {
+                        // The group's step schedule is shared, so every
+                        // lane fails the same typed way; its pages
+                        // recycle immediately.
+                        kv.free_pages(&mut ws);
+                        lane_pool.push(kv);
+                        fail(&job.ticket, e);
+                        current = None;
+                        continue;
+                    }
                     let emitted = &fresh[li];
                     tokens_generated += emitted.len() as u64;
                     if !emitted.is_empty() {
                         if gen.emitted == 0 {
                             // First token of this generation: its TTFT.
-                            ttft_samples.push(job.enqueued.elapsed().as_nanos() as u64);
+                            ttft_samples
+                                .push((job.enqueued.elapsed().as_nanos() as u64, job.tier));
                         }
                         gen.emitted += emitted.len();
                         stream_tokens(&job.ticket, emitted);
                     }
                     if job_done {
+                        // Every page back to the pool before the lane
+                        // parks: a pooled idle lane holds no K/V memory.
+                        kv.free_pages(&mut ws);
                         lane_pool.push(kv);
                         complete_gen(&job.ticket);
                         done += 1;
@@ -2235,7 +2338,7 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                     let lat = job.enqueued.elapsed().as_nanos() as u64;
                     latency_ns += lat;
                     max_latency_ns = max_latency_ns.max(lat);
-                    ttft_samples.push(lat);
+                    ttft_samples.push((lat, job.tier));
                     current = None;
                 }
             }
@@ -2266,7 +2369,7 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                     let lat = job.enqueued.elapsed().as_nanos() as u64;
                     latency_ns += lat;
                     max_latency_ns = max_latency_ns.max(lat);
-                    ttft_samples.push(lat);
+                    ttft_samples.push((lat, job.tier));
                 }
             }
         }))
@@ -2288,6 +2391,7 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
             failed.extend(jobs.drain(..).map(|j| j.ticket));
             failed.extend(requeue.drain(..).map(|j| j.ticket));
             gc = GroupDecodeCache::new();
+            gc.set_prefill_chunk(cfg.prefill_chunk);
             {
                 let mut st = relock(&shared.state);
                 st.worker_panics += 1;
@@ -2349,8 +2453,11 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
             slot.stats.group_dispatches += group_dispatches;
             slot.stats.group_lanes += group_lanes;
             slot.stats.max_group_size = slot.stats.max_group_size.max(group_lanes);
-            for &v in ttft_samples.iter() {
+            slot.stats.prefill_chunks += prefill_chunks;
+            slot.stats.prefill_tokens += prefill_tokens;
+            for &(v, tier) in ttft_samples.iter() {
                 slot.stats.ttft.record(v);
+                slot.stats.ttft_tiered[tier.min(1)].record(v);
             }
             if per_token_ns > 0 {
                 slot.stats.tok_latency.record(per_token_ns);

@@ -10,6 +10,14 @@
 //! - **Scheduler semantics** — resumable generations keep round-robin
 //!   fairness across adapters, and strict evict refuses pending
 //!   generations.
+//! - **Chunked prefill** — grouped streams are bit-identical at every
+//!   `prefill_chunk` width per PEFT method (including mid-flight join),
+//!   and a joiner reaches its first token in `ceil(prompt / chunk)`
+//!   group steps while decoding lanes keep advancing every step.
+//! - **Typed overflow** — stepping or prefilling past `max_seq` returns
+//!   `DecodeError::PastMaxSeq` without touching lane state, and the
+//!   serve layer rejects over-long prompts at submit without tripping
+//!   worker panic containment.
 
 // Style allowances shared by the bench/test crates: index loops mirror
 // the math notation, and config structs are built default-then-override.
@@ -107,7 +115,7 @@ fn kv_cache_parity_per_method() {
         let mut cache = DecodeCache::new();
         cache.ensure(&model, &mut ws);
         for (t, &tok) in tokens.iter().enumerate() {
-            native::decode_step(&model, &mut cache, tok, &mut ws);
+            native::decode_step(&model, &mut cache, tok, &mut ws).unwrap();
             assert_eq!(
                 cache.logits.data, reference[t].data,
                 "{name}: decode logits diverge from full forward at position {t}"
@@ -264,8 +272,10 @@ fn grouped_decode_is_bit_identical_per_method_with_join_leave() {
                     greedy,
                 );
             }
-            // Four lockstep steps: lane 1 completes exactly here.
-            let all_done = gc.advance(&model, 4, &mut ws, &mut outs);
+            // Four lockstep steps: lane 1 completes within them (its
+            // whole prompt prefills in the first step at the default
+            // chunk width, then it decodes its remaining tokens).
+            let all_done = gc.advance(&model, 4, &mut ws, &mut outs).unwrap();
             assert!(!all_done, "{name}: lanes 0 is not done after 4 steps");
             // Lane 2 joins mid-flight while lane 1 has left the lockstep.
             {
@@ -281,7 +291,7 @@ fn grouped_decode_is_bit_identical_per_method_with_join_leave() {
                 );
                 outs.push(Vec::new());
             }
-            assert!(gc.advance(&model, usize::MAX, &mut ws, &mut outs));
+            assert!(gc.advance(&model, usize::MAX, &mut ws, &mut outs).unwrap());
             for i in 0..3 {
                 assert!(gc.lane_done(i), "{name}: lane {i} done after full advance");
                 assert_eq!(
@@ -518,6 +528,249 @@ fn strict_evict_refuses_pending_generation() {
     let (_backend, failed) = core.evict_with(id, EvictMode::Reject).unwrap();
     assert_eq!(failed, 1);
     assert_eq!(ticket.wait(), Err(ServeError::Evicted));
+}
+
+/// Chunked batched prefill is a pure scheduling change: for every chunk
+/// width — tokenwise 1, mid-prompt 2 and 3, whole-prompt 16 — every
+/// lane's emitted stream equals its solo `generate_into` run, per PEFT
+/// method, greedy AND sampled, including a lane that joins mid-flight
+/// with a prompt long enough to span several chunks.
+#[test]
+fn chunked_prefill_bit_identical_at_every_chunk_width_per_method() {
+    let cfg = dec_cfg();
+    let mut oft = PeftConfig::new(MethodKind::OftV2, 4)
+        .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    oft.oft_block_size = 4;
+    let specs: Vec<(&str, PeftConfig)> = vec![
+        (
+            "psoft",
+            PeftConfig::new(MethodKind::Psoft, 3)
+                .with_modules(vec![ModuleKind::Q, ModuleKind::V]),
+        ),
+        (
+            "lora",
+            PeftConfig::new(MethodKind::Lora, 2)
+                .with_modules(vec![ModuleKind::Q, ModuleKind::V]),
+        ),
+        ("oftv2", oft),
+    ];
+    for (si, (name, peft)) in specs.iter().enumerate() {
+        let model = perturbed_model(&cfg, peft, 460 + si as u64);
+        for greedy in [true, false] {
+            let prompts: Vec<Vec<i32>> =
+                vec![vec![1, 7, 3, 11, 2], vec![2, 9], vec![5, 1, 4, 2, 8, 6]];
+            let max_news = [6usize, 3, 4];
+            let mut ws = Workspace::new();
+            let mut refs: Vec<Vec<i32>> = Vec::new();
+            for (p, &mn) in prompts.iter().zip(&max_news) {
+                let mut cache = DecodeCache::new();
+                let mut out = Vec::new();
+                native::generate_into(&model, p, mn, greedy, &mut cache, &mut ws, &mut out);
+                cache.release(&mut ws);
+                refs.push(out);
+            }
+            for chunk in [1usize, 2, 3, 16] {
+                let mut gc = native::GroupDecodeCache::new();
+                gc.set_prefill_chunk(chunk);
+                let mut outs: Vec<Vec<i32>> = vec![Vec::new(), Vec::new()];
+                for i in 0..2 {
+                    let mut kv = native::DecodeLane::new();
+                    kv.ensure(&model, &mut ws);
+                    kv.reset();
+                    gc.join(
+                        kv,
+                        native::DecodeStream::new(&prompts[i]),
+                        Arc::new(prompts[i].clone()),
+                        max_news[i],
+                        greedy,
+                    );
+                }
+                // Two lockstep steps in, the third lane joins with a
+                // prompt that spans multiple chunks at small widths.
+                assert!(!gc.advance(&model, 2, &mut ws, &mut outs).unwrap());
+                {
+                    let mut kv = native::DecodeLane::new();
+                    kv.ensure(&model, &mut ws);
+                    kv.reset();
+                    gc.join(
+                        kv,
+                        native::DecodeStream::new(&prompts[2]),
+                        Arc::new(prompts[2].clone()),
+                        max_news[2],
+                        greedy,
+                    );
+                    outs.push(Vec::new());
+                }
+                assert!(gc.advance(&model, usize::MAX, &mut ws, &mut outs).unwrap());
+                for i in 0..3 {
+                    assert_eq!(
+                        outs[i], refs[i],
+                        "{name} (greedy={greedy}, chunk={chunk}): lane {i} \
+                         diverges from its solo run"
+                    );
+                }
+                gc.release(&mut ws);
+            }
+        }
+    }
+}
+
+/// Fairness trace for a mid-flight joiner: at chunk width `c` it reaches
+/// its first token in exactly `ceil(prompt / c)` group steps, and the
+/// already-decoding lanes advance every one of those steps — chunked
+/// prefill shortens the joiner's time-to-first-token without starving
+/// the group.
+#[test]
+fn joiner_reaches_first_token_in_ceil_prompt_over_chunk_steps() {
+    let cfg = dec_cfg();
+    let peft =
+        PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let model = perturbed_model(&cfg, &peft, 470);
+    let join_prompt: Vec<i32> = vec![1, 7, 3, 11, 2, 9, 5, 1, 4, 2, 8, 6]; // 12 tokens
+    let companion_prompt = vec![2i32, 9];
+    let companion_max = 12usize;
+    let mut ws = Workspace::new();
+    for chunk in [1usize, 4, 16] {
+        let mut gc = native::GroupDecodeCache::new();
+        gc.set_prefill_chunk(chunk);
+        let n_companions = 2usize;
+        for _ in 0..n_companions {
+            let mut kv = native::DecodeLane::new();
+            kv.ensure(&model, &mut ws);
+            kv.reset();
+            gc.join(
+                kv,
+                native::DecodeStream::new(&companion_prompt),
+                Arc::new(companion_prompt.clone()),
+                companion_max,
+                true,
+            );
+        }
+        let mut kv = native::DecodeLane::new();
+        kv.ensure(&model, &mut ws);
+        kv.reset();
+        let ji = gc.join(
+            kv,
+            native::DecodeStream::new(&join_prompt),
+            Arc::new(join_prompt.clone()),
+            2,
+            true,
+        );
+        let mut outs: Vec<Vec<i32>> = vec![Vec::new(); n_companions + 1];
+        let mut steps = 0usize;
+        while outs[ji].is_empty() {
+            gc.advance(&model, 1, &mut ws, &mut outs).unwrap();
+            steps += 1;
+            assert!(steps <= 2 * join_prompt.len(), "joiner never emitted (chunk {chunk})");
+        }
+        assert_eq!(
+            steps,
+            join_prompt.len().div_ceil(chunk),
+            "chunk {chunk}: first token must land after ceil(prompt/chunk) steps"
+        );
+        // Fairness: while the joiner prefilled, each companion kept its
+        // one-position-per-step decode cadence (its first token lands at
+        // step 1 for chunk >= prompt, step 2 tokenwise).
+        for c in 0..n_companions {
+            assert!(
+                outs[c].len() >= (steps - 1).min(companion_max),
+                "chunk {chunk}: companion {c} starved during the joiner's prefill \
+                 ({} tokens after {steps} steps)",
+                outs[c].len()
+            );
+        }
+        gc.release(&mut ws);
+    }
+}
+
+/// Stepping or prefilling past the context window is a typed error —
+/// `DecodeError::PastMaxSeq` with the offending position — and leaves
+/// cache/lane state untouched, so callers can surface it instead of
+/// unwinding through the serve workers' panic containment.
+#[test]
+fn decode_past_max_seq_returns_typed_error() {
+    let cfg = dec_cfg();
+    let peft =
+        PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let model = perturbed_model(&cfg, &peft, 480);
+    let mut ws = Workspace::new();
+
+    // Per-token path: the window fills, then the next step is refused.
+    let mut cache = DecodeCache::new();
+    cache.ensure(&model, &mut ws);
+    for t in 0..cfg.max_seq {
+        native::decode_step(&model, &mut cache, (t % cfg.vocab_size) as i32, &mut ws)
+            .unwrap();
+    }
+    assert_eq!(cache.len(), cfg.max_seq);
+    assert_eq!(
+        native::decode_step(&model, &mut cache, 0, &mut ws),
+        Err(native::DecodeError::PastMaxSeq { pos: cfg.max_seq, max_seq: cfg.max_seq }),
+    );
+    assert_eq!(cache.len(), cfg.max_seq, "a refused step must not advance the cache");
+    cache.release(&mut ws);
+
+    // Batched prefill path: an over-long chunk is refused up front with
+    // the position of the first token that would not fit, before any
+    // K/V row is written.
+    let mut lane = native::DecodeLane::new();
+    lane.ensure(&model, &mut ws);
+    let long: Vec<i32> = (0..cfg.max_seq + 1).map(|t| (t % cfg.vocab_size) as i32).collect();
+    assert_eq!(
+        native::prefill_into(&model, &mut lane, &long, None, &mut ws),
+        Err(native::DecodeError::PastMaxSeq { pos: cfg.max_seq, max_seq: cfg.max_seq }),
+    );
+    assert_eq!(lane.len(), 0, "a refused prefill must not touch the lane");
+
+    // A partially-filled lane keeps its prefix on a refused follow-up.
+    native::prefill_into(&model, &mut lane, &long[..10], None, &mut ws).unwrap();
+    assert_eq!(lane.len(), 10);
+    assert_eq!(
+        native::prefill_into(&model, &mut lane, &long[..10], None, &mut ws),
+        Err(native::DecodeError::PastMaxSeq { pos: cfg.max_seq, max_seq: cfg.max_seq }),
+    );
+    assert_eq!(lane.len(), 10, "a refused chunk must not consume any token");
+    lane.release(&mut ws);
+
+    let msg = native::DecodeError::PastMaxSeq { pos: 16, max_seq: 16 }.to_string();
+    assert!(msg.contains("past max_seq"), "Display must name the failure: {msg}");
+}
+
+/// The serve layer validates decode lengths at submission: an over-long
+/// request is rejected typed (`InvalidRequest`) and never reaches a
+/// worker, so panic containment stays untriggered and subsequent valid
+/// requests are served normally.
+#[test]
+fn serve_rejects_over_long_generation_without_worker_panic() {
+    let cfg = dec_cfg();
+    let mut rng = Rng::new(481);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let opts = ServeOptions { workers: 1, ..Default::default() };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft =
+        PeftConfig::new(MethodKind::Lora, 2).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let id = core.register("gen", &peft, 5);
+
+    // prompt + max_new > max_seq: typed rejection at submit.
+    let long_prompt: Arc<Vec<i32>> =
+        Arc::new((0..12usize).map(|t| (t % cfg.vocab_size) as i32).collect());
+    let t = Ticket::new(8);
+    let adm = core.submit(
+        id,
+        Request::Generate { prompt: Arc::clone(&long_prompt), max_new_tokens: 8, greedy: true },
+        &t,
+        SubmitOptions::default(),
+    );
+    assert_eq!(adm.into_result(), Err(ServeError::InvalidRequest));
+
+    // The same adapter still serves in-window generations, and no worker
+    // ever tripped panic containment.
+    let ok_prompt = Arc::new(vec![1i32, 2, 3]);
+    let t2 = Ticket::new(4);
+    submit_gen(&core, id, &ok_prompt, 4, &t2);
+    core.drain();
+    assert_eq!(t2.wait().unwrap().1, 4.0);
+    assert_eq!(core.worker_panics(), 0, "validation must pre-empt containment");
 }
 
 #[test]

@@ -9,9 +9,13 @@
 //! The same property is pinned for **autoregressive decode**: a warm
 //! generation round-trip — a typed `Generate` submit (Arc-clone prompt,
 //! inline resumable job, re-armed ticket), per-dispatch decode bursts against a
-//! worker-pooled KV-cache, token streaming into the pre-sized ticket
-//! buffer, completion — allocates nothing once the cache and workspace
-//! pools are warm.
+//! worker-pooled **paged** KV-cache (chunked batched prefill for the
+//! prompt, fixed-size pages acquired on demand — the prompt+generation
+//! length here deliberately crosses a page boundary so mid-window page
+//! growth and end-of-generation page recycling both run inside the
+//! measured loop), token streaming into the pre-sized ticket buffer,
+//! completion — allocates nothing once the cache and workspace pools
+//! are warm.
 //!
 //! One worker is used so the single worker's shape-keyed `Workspace`
 //! provably warms on every (adapter, batch-shape) pair during warmup; the
@@ -201,7 +205,10 @@ fn warm_serve_loop_performs_zero_allocations() {
     let dpeft =
         PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
     let gid = dcore.register("lora_r3", &dpeft, 500);
-    let prompt = Arc::new(vec![1i32, 4, 2]);
+    // 10-token prompt + 8 generated = 18 positions: the lane crosses the
+    // 16-row page boundary mid-generation, so a second K/V page is
+    // acquired (from the warm pool) inside every measured round.
+    let prompt = Arc::new(vec![1i32, 4, 2, 7, 5, 9, 3, 8, 6, 2]);
     let max_new = 8usize;
     let gticket = Ticket::new(max_new);
 

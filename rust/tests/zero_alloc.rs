@@ -14,6 +14,10 @@
 //!   rotation refresh every parameter write-back — is allocation-free.
 //! - A refresh-only window (`set_trainable_flat` in a loop) pinning the
 //!   `set_params` path in isolation.
+//! - The paged grouped-decode loop: warm join → chunked prefill →
+//!   lockstep decode → `free_pages` rounds perform zero allocations,
+//!   zero thread spawns, and zero page-pool (or workspace-pool) misses —
+//!   page recycling across generations IS the steady state.
 //!
 //! Scope notes:
 //! - Training shapes here sit below the matmul parallel thresholds, so
@@ -219,6 +223,110 @@ fn assert_pooled_matmul_alloc_free() {
     std::hint::black_box(&c);
 }
 
+/// The paged grouped-decode loop at the model level, where the test owns
+/// the `Workspace` and can freeze the pool counters directly: each round
+/// joins two ragged lanes to a group, chunk-prefills their prompts
+/// (chunk 2, so multi-chunk prefill runs inside the window), decodes
+/// them to completion in lockstep, then detaches and returns every K/V
+/// page to the pool. Once warm, further rounds allocate nothing, spawn
+/// nothing, and never miss the page pool or the workspace pool —
+/// cross-generation page recycling is the allocation-free steady state.
+fn assert_paged_grouped_decode_alloc_free() {
+    use psoft::model::native::{DecodeLane, DecodeStream, GroupDecodeCache};
+    use std::sync::Arc;
+
+    let cfg = ModelConfig {
+        arch: Arch::Decoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 24,
+        n_classes: 0,
+    };
+    let mut rng = Rng::new(5009);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let peft =
+        PeftConfig::new(MethodKind::Lora, 3).with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    let model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+    let mut ws = Workspace::new();
+    let max_new = 6usize;
+    let prompts: Vec<Arc<Vec<i32>>> =
+        vec![Arc::new(vec![1i32, 4, 2]), Arc::new(vec![3i32, 1, 4, 1, 5])];
+
+    // Lanes persist across rounds (warm tables); pages recycle per round.
+    let mut lanes: Vec<DecodeLane> = (0..prompts.len())
+        .map(|_| {
+            let mut l = DecodeLane::new();
+            l.ensure(&model, &mut ws);
+            l
+        })
+        .collect();
+    let mut gc = GroupDecodeCache::new();
+    gc.set_prefill_chunk(2);
+    let mut outs: Vec<Vec<i32>> =
+        (0..prompts.len()).map(|_| Vec::with_capacity(max_new)).collect();
+
+    let mut round = |gc: &mut GroupDecodeCache,
+                     lanes: &mut Vec<DecodeLane>,
+                     outs: &mut [Vec<i32>],
+                     ws: &mut Workspace| {
+        for (i, mut kv) in lanes.drain(..).enumerate() {
+            kv.reset();
+            outs[i].clear();
+            gc.join(kv, DecodeStream::new(&prompts[i]), Arc::clone(&prompts[i]), max_new, true);
+        }
+        let done = gc.advance(&model, usize::MAX, ws, outs).unwrap();
+        assert!(done, "every lane decodes to completion inside a round");
+        while let Some((mut kv, _stream, done)) = gc.detach_first() {
+            assert!(done);
+            kv.free_pages(ws);
+            lanes.push(kv);
+        }
+        for o in outs.iter() {
+            assert_eq!(o.len(), max_new);
+        }
+    };
+
+    // Warmup: sizes the group scratch, the [p, d] prefill chunk shapes,
+    // the page-pool free list at its peak occupancy, and the out buffers.
+    for _ in 0..3 {
+        round(&mut gc, &mut lanes, &mut outs, &mut ws);
+    }
+
+    let first = outs[0].clone();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let spawns_before = psoft::util::threadpool::thread_spawn_count();
+    let ws_misses = ws.misses();
+    let page_misses = ws.page_pool().misses();
+    for _ in 0..5 {
+        round(&mut gc, &mut lanes, &mut outs, &mut ws);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    let spawned = psoft::util::threadpool::thread_spawn_count() - spawns_before;
+    assert_eq!(
+        after - before,
+        0,
+        "warm paged decode rounds allocated {} times in 5 rounds",
+        after - before
+    );
+    assert_eq!(spawned, 0, "warm paged decode rounds spawned {spawned} threads");
+    assert_eq!(ws.misses(), ws_misses, "workspace pool must not miss after warmup");
+    assert_eq!(
+        ws.page_pool().misses(),
+        page_misses,
+        "page pool must not miss after warmup — recycled pages serve every round"
+    );
+    assert_eq!(
+        ws.page_pool().outstanding(),
+        0,
+        "every page is back in the pool between rounds"
+    );
+    assert_eq!(outs[0], first, "warm rounds stay bit-identical");
+    gc.release(&mut ws);
+}
+
 #[test]
 fn steady_state_train_step_performs_zero_allocations() {
     // Full optimizer steps: structured low-rank and all three
@@ -236,4 +344,8 @@ fn steady_state_train_step_performs_zero_allocations() {
     // The pooled (multi-threaded) kernel path: zero allocations and zero
     // spawns once the persistent pool and its lane scratch are warm.
     assert_pooled_matmul_alloc_free();
+
+    // The paged grouped-decode loop: chunked prefill + lockstep decode +
+    // page recycling, with the pool counters frozen after warmup.
+    assert_paged_grouped_decode_alloc_free();
 }
