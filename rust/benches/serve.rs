@@ -13,7 +13,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::field_reassign_with_default)]
 
-use psoft::bench::{bench_encoder, write_csv};
+use psoft::bench::{bench_decoder, bench_encoder, write_csv};
 use psoft::config::{BackboneDtype, MethodKind, ModelConfig, ModuleKind, PeftConfig};
 use psoft::coordinator::serve_report;
 use psoft::model::native::{Batch, Target};
@@ -219,6 +219,84 @@ fn main() {
          ({int8_ratio:.3}x)"
     );
 
+    // Merged-serving axis: one BOFT adapter (the costliest structured
+    // per-token path in the zoo — m chained butterfly stages on top of the
+    // dense matmul) decoding greedily on a decoder backbone, adapted vs
+    // promoted to merged. The merged path strictly removes the per-token
+    // adapter work, so its per-token time must not exceed the adapted
+    // path's: the CI gate holds `merged_speedup_over_adapted` at the
+    // committed floor (1.0). Per-mode time is the min of 3 runs (plus a
+    // warmup) so shared-runner noise cannot fake a regression.
+    let dcfg = bench_decoder();
+    let mut drng = Rng::new(96);
+    let dec_bb = Arc::new(Backbone::random(&dcfg, &mut drng));
+    let prompt_len = 8usize;
+    let dec_new = if fast() { 24usize } else { 64 };
+    assert!(prompt_len + dec_new <= dcfg.max_seq);
+    let prompt: Arc<Vec<i32>> =
+        Arc::new((0..prompt_len).map(|t| (t * 7 % dcfg.vocab_size) as i32).collect());
+    let mut boft = PeftConfig::new(MethodKind::Boft, 8)
+        .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+    boft.boft_b = 4;
+    boft.boft_m = 2;
+    let dec_core =
+        ServeCore::new(Arc::clone(&dec_bb), ServeOptions { workers: 1, ..Default::default() });
+    let did = dec_core.register("boft_merge", &boft, 3000);
+    let run_gen = |expect: Option<&[i32]>| -> (f64, Vec<i32>) {
+        let t = Ticket::new(dec_new);
+        let sw = Stopwatch::start();
+        dec_core
+            .submit(
+                did,
+                Request::Generate {
+                    prompt: Arc::clone(&prompt),
+                    max_new_tokens: dec_new,
+                    greedy: true,
+                },
+                &t,
+                SubmitOptions::default(),
+            )
+            .into_result()
+            .unwrap();
+        dec_core.drain();
+        t.wait().expect("merged-axis generation");
+        let secs = sw.secs();
+        let stream = t.with_tokens(|tok| tok.to_vec());
+        if let Some(want) = expect {
+            assert_eq!(stream, want, "merged stream must equal the adapted stream");
+        }
+        (secs, stream)
+    };
+    let measure = |expect: Option<&[i32]>| -> (f64, Vec<i32>) {
+        let (_, stream) = run_gen(expect); // warmup sizes lanes + caches
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(run_gen(expect).0);
+        }
+        (best * 1e3 / dec_new as f64, stream)
+    };
+    let (adapted_ms_per_tok, adapted_stream) = measure(None);
+    dec_core.promote(did).expect("promote for merged axis");
+    let (merged_ms_per_tok, _) = measure(Some(&adapted_stream));
+    let merged_speedup = adapted_ms_per_tok / merged_ms_per_tok.max(1e-12);
+    // Extra bytes a merged twin pins per slot: one dense f32 copy of each
+    // folded module (deterministic — gated at zero growth).
+    let merged_twin_bytes: usize = dcfg.n_layers
+        * boft
+            .modules
+            .iter()
+            .map(|&m| {
+                let (din, dout) = dcfg.module_shape(m);
+                din * dout * 4
+            })
+            .sum::<usize>();
+    let merged_twin_mib = merged_twin_bytes as f64 / (1024.0 * 1024.0);
+    println!(
+        "merged serving (boft_b4m2, {dec_new} greedy tokens): \
+         {adapted_ms_per_tok:.3} ms/tok adapted vs {merged_ms_per_tok:.3} ms/tok merged \
+         = {merged_speedup:.2}x; twin pins {merged_twin_mib:.3} MiB dense state"
+    );
+
     let rps_at = |n: usize| -> f64 {
         results.iter().find(|c| c.adapters == n).map(|c| c.reqs_per_sec).unwrap_or(0.0)
     };
@@ -264,6 +342,10 @@ fn main() {
         ("shared_frozen_mib_f32", Json::Num(frozen_mib_f32)),
         ("shared_frozen_mib_int8", Json::Num(frozen_mib_int8)),
         ("int8_over_f32_ratio", Json::Num(int8_ratio)),
+        ("merged_per_token_ms_adapted", Json::Num(adapted_ms_per_tok)),
+        ("merged_per_token_ms_merged", Json::Num(merged_ms_per_tok)),
+        ("merged_speedup_over_adapted", Json::Num(merged_speedup)),
+        ("merged_twin_resident_mib", Json::Num(merged_twin_mib)),
     ]);
     std::fs::write("BENCH_serve.json", json.dump_pretty()).expect("write BENCH_serve.json");
     eprintln!("wrote BENCH_serve.json");

@@ -523,6 +523,11 @@ pub struct ServeConfig {
     /// every value — only the first-token step count and the per-step
     /// group stall change. Default 16 (one full K/V page).
     pub prefill_chunk: usize,
+    /// Serve every adapter merged: at registration each adapter is folded
+    /// into a standalone dense backbone (`psoft merge` semantics) and
+    /// eval/generate dispatch on the merged twin — zero per-token adapter
+    /// overhead. Train submissions are refused while merged. Default false.
+    pub merge_resident: bool,
 }
 
 impl Default for ServeConfig {
@@ -538,6 +543,7 @@ impl Default for ServeConfig {
             tier_weights: Vec::new(),
             shed_after_ms: 0,
             prefill_chunk: 16,
+            merge_resident: false,
         }
     }
 }
@@ -560,6 +566,7 @@ impl ServeConfig {
             sc.shed_after_ms = v as u64;
         }
         read_usize(s, "prefill_chunk", &mut sc.prefill_chunk);
+        read_bool(s, "merge_resident", &mut sc.merge_resident);
         sc
     }
 }
@@ -791,7 +798,7 @@ mod tests {
         let tree = toml::parse(
             "[serve]\nworkers = 8\nqueue_cap = 64\nmax_resident = 2\nmax_new_tokens = 24\n\
              decode_batch = 16\ncoalesce_eval = true\ntier_weights = [3, 1]\n\
-             shed_after_ms = 250\nprefill_chunk = 8\n",
+             shed_after_ms = 250\nprefill_chunk = 8\nmerge_resident = true\n",
         )
         .unwrap();
         let sc = ServeConfig::from_toml(&tree);
@@ -804,6 +811,7 @@ mod tests {
         assert_eq!(sc.tier_weights, vec![3, 1]);
         assert_eq!(sc.shed_after_ms, 250);
         assert_eq!(sc.prefill_chunk, 8);
+        assert!(sc.merge_resident);
         assert_eq!(sc.burst, ServeConfig::default().burst);
         // Absent section ⇒ pure defaults.
         let sc2 = ServeConfig::from_toml(&toml::parse("[model]\nd_model = 32\n").unwrap());
@@ -813,6 +821,7 @@ mod tests {
         assert!(sc2.tier_weights.is_empty(), "default scheduler is pure round-robin");
         assert_eq!(sc2.shed_after_ms, 0);
         assert_eq!(sc2.prefill_chunk, 16, "default prefill chunk is one K/V page");
+        assert!(!sc2.merge_resident, "serving defaults to the adapted path");
     }
 
     #[test]

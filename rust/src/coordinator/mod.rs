@@ -207,6 +207,8 @@ pub fn serve_report(
             ttft_p99_ms: s.ttft_ms(0.99),
             tok_p99_ms: s.tok_latency_ms(0.99),
             artifact_bytes: core.artifact_bytes(id).unwrap_or(0),
+            merged: s.merged,
+            merged_tokens: s.merged_tokens,
         })
         .collect();
     let bb = core.backbone();
@@ -426,6 +428,35 @@ mod tests {
         assert!(report.shared_frozen_mib > 0.0, "resident frozen accounting is wired");
         assert_eq!(report.to_json().get("backbone_dtype").as_str(), Some("f32"));
         assert!(report.to_markdown().contains("MiB shared frozen (f32)"));
+
+        // Merged-serving columns, present and in parity across formats.
+        assert!(!report.rows[0].merged, "adapter was never promoted");
+        assert_eq!(report.rows[0].merged_tokens, 0);
+        assert!(report.to_markdown().contains("| Merged | Mrg tokens |"));
+        assert!(report.to_csv().contains(",merged,merged_tokens"));
+        let row0 = report.to_json().get("adapters").at(0);
+        assert_eq!(row0.get("merged").as_bool(), Some(false));
+        assert_eq!(row0.get("merged_tokens").as_usize(), Some(0));
+
+        // Column parity: the csv header, each csv row, and the markdown
+        // header/separator/data rows all agree on the column count.
+        let csv = report.to_csv();
+        let mut lines = csv.lines();
+        let n_cols = lines.next().unwrap().split(',').count();
+        for line in lines {
+            assert_eq!(line.split(',').count(), n_cols, "csv row width");
+        }
+        let md = report.to_markdown();
+        let widths: Vec<usize> = md
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .map(|l| l.matches('|').count())
+            .collect();
+        assert!(widths.len() >= 3, "markdown table has header, separator, data");
+        assert!(
+            widths.windows(2).all(|w| w[0] == w[1]),
+            "markdown header/separator/data column parity: {widths:?}"
+        );
     }
 
     #[test]

@@ -239,6 +239,12 @@ pub struct ServeRow {
     /// Size of this adapter's persisted artifact (bytes) — the
     /// bytes-per-adapter figure next to the shared-frozen accounting.
     pub artifact_bytes: u64,
+    /// Whether the slot is serving in merged mode (adapter folded into a
+    /// dense backbone; zero per-token adapter overhead, train refused).
+    pub merged: bool,
+    /// Tokens generated by merged-mode dispatches — the zero-overhead
+    /// share of `tokens_generated`.
+    pub merged_tokens: u64,
 }
 
 /// Serve-mode report: per-adapter throughput/latency rows plus run-level
@@ -282,12 +288,12 @@ impl ServeReport {
         );
         out.push_str("| Adapter | Label | Served | Train | Tokens | Prefill | Grp mean | Grp max |");
         out.push_str(" Rejected | Shed | Mean lat (ms) | Max lat (ms) | Mean svc (ms) |");
-        out.push_str(" TTFT p50/p95/p99 (ms) | Tok p99 (ms) | Artifact |\n");
-        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str(" TTFT p50/p95/p99 (ms) | Tok p99 (ms) | Artifact | Merged | Mrg tokens |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             out.push_str(&format!(
                 "| {} | {} | {} | {} | {} | {} | {:.2} | {} | {} | {} | {:.3} | {:.3} | {:.3} | \
-                 {:.3}/{:.3}/{:.3} | {:.3} | {} |\n",
+                 {:.3}/{:.3}/{:.3} | {:.3} | {} | {} | {} |\n",
                 r.id,
                 r.label,
                 r.processed,
@@ -305,7 +311,9 @@ impl ServeReport {
                 r.ttft_p95_ms,
                 r.ttft_p99_ms,
                 r.tok_p99_ms,
-                human_bytes(r.artifact_bytes as f64)
+                human_bytes(r.artifact_bytes as f64),
+                if r.merged { "yes" } else { "no" },
+                r.merged_tokens
             ));
         }
         out
@@ -313,11 +321,11 @@ impl ServeReport {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "adapter,label,processed,train_steps,tokens_generated,prefill_tokens,prefill_chunks,mean_group_size,max_group_size,rejected,shed,mean_latency_ms,max_latency_ms,mean_service_ms,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,artifact_bytes\n",
+            "adapter,label,processed,train_steps,tokens_generated,prefill_tokens,prefill_chunks,mean_group_size,max_group_size,rejected,shed,mean_latency_ms,max_latency_ms,mean_service_ms,ttft_p50_ms,ttft_p95_ms,ttft_p99_ms,tok_p99_ms,artifact_bytes,merged,merged_tokens\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}\n",
+                "{},{},{},{},{},{},{},{:.4},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{},{},{}\n",
                 r.id,
                 r.label,
                 r.processed,
@@ -336,7 +344,9 @@ impl ServeReport {
                 r.ttft_p95_ms,
                 r.ttft_p99_ms,
                 r.tok_p99_ms,
-                r.artifact_bytes
+                r.artifact_bytes,
+                r.merged,
+                r.merged_tokens
             ));
         }
         out
@@ -377,6 +387,8 @@ impl ServeReport {
                                 ("ttft_p99_ms", Json::Num(r.ttft_p99_ms)),
                                 ("tok_p99_ms", Json::Num(r.tok_p99_ms)),
                                 ("artifact_bytes", Json::Num(r.artifact_bytes as f64)),
+                                ("merged", Json::Bool(r.merged)),
+                                ("merged_tokens", Json::Num(r.merged_tokens as f64)),
                             ])
                         })
                         .collect(),

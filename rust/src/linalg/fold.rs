@@ -1,0 +1,111 @@
+//! Merge-time fold kernels.
+//!
+//! Helpers for collapsing structured adapter factorizations into one dense
+//! weight (`Adapter::merge_into`). These run once per promotion/export —
+//! never on the per-token path — so they favour clarity over blocking;
+//! what matters is that a fold is deterministic (repeated folds of the same
+//! adapter state are bit-identical, which merged-artifact round-trips and
+//! re-promotion after a spill rely on).
+
+use super::matrix::{Matrix, Scalar};
+
+/// dst += (A · diag(s)) · B without materializing the scaled A — the
+/// diagonal-sandwich fold shared by VeRA (`A_f·diag(d)·B_f`) and SVFT
+/// (`U·diag(σ+m)·Vᵀ`). Accumulates each element in ascending shared-index
+/// order (single pass, no tiling), so the fold is deterministic.
+pub fn diag_matmul_acc<T: Scalar>(a: &Matrix<T>, s: &[T], b: &Matrix<T>, dst: &mut Matrix<T>) {
+    let (m, k) = (a.rows, a.cols);
+    let n = b.cols;
+    assert_eq!(b.rows, k, "inner dims");
+    assert_eq!(s.len(), k, "diagonal length");
+    assert_eq!((dst.rows, dst.cols), (m, n), "output shape");
+    for i in 0..m {
+        let a_row = a.row(i);
+        let d_row = dst.row_mut(i);
+        for kk in 0..k {
+            let av = a_row[kk] * s[kk];
+            let b_row = b.row(kk);
+            for (d_v, &b_v) in d_row.iter_mut().zip(b_row) {
+                *d_v += av * b_v;
+            }
+        }
+    }
+}
+
+/// dst = blockdiag(rots) · W₀ — the OFT merge fold. Block `k` (size b)
+/// overwrites rows `[off, off+b)` of `dst` with `R_k · W₀[off..off+b, :]`;
+/// the blocks must tile `W₀.rows`. The weight-side twin of
+/// [`super::block_rot_matmul_into`] (which rotates activations instead):
+/// after this fold, a plain dense matmul against `dst` replaces the
+/// per-token rotate-then-multiply pair.
+pub fn block_rot_fold_into<T: Scalar>(rots: &[Matrix<T>], w0: &Matrix<T>, dst: &mut Matrix<T>) {
+    let (d, n) = (w0.rows, w0.cols);
+    assert_eq!((dst.rows, dst.cols), (d, n), "output shape");
+    assert_eq!(rots.iter().map(|r| r.rows).sum::<usize>(), d, "blocks must tile d");
+    let mut off = 0;
+    for rot in rots {
+        let b = rot.rows;
+        assert_eq!(rot.cols, b, "rotation blocks are square");
+        for i in 0..b {
+            let r_row = rot.row(i);
+            let d_row = dst.row_mut(off + i);
+            d_row.iter_mut().for_each(|v| *v = T::ZERO);
+            for (kk, &r_v) in r_row.iter().enumerate() {
+                let w_row = w0.row(off + kk);
+                for (d_v, &w_v) in d_row.iter_mut().zip(w_row) {
+                    *d_v += r_v * w_v;
+                }
+            }
+        }
+        off += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{matmul, Mat};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diag_matmul_matches_scaled_matmul() {
+        let mut rng = Rng::new(71);
+        let a = Mat::randn(6, 4, 0.5, &mut rng);
+        let b = Mat::randn(4, 5, 0.5, &mut rng);
+        let s: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+        let mut out = Mat::zeros(6, 5);
+        diag_matmul_acc(&a, &s, &b, &mut out);
+        let reference = matmul(&a.scale_cols(&s), &b);
+        assert!(out.dist(&reference) < 1e-6, "dist {}", out.dist(&reference));
+    }
+
+    #[test]
+    fn block_rot_fold_matches_per_block_matmul() {
+        let mut rng = Rng::new(72);
+        let w = Mat::randn(10, 7, 0.5, &mut rng);
+        let rots =
+            vec![Mat::randn(4, 4, 0.5, &mut rng), Mat::randn(4, 4, 0.5, &mut rng), Mat::randn(2, 2, 0.5, &mut rng)];
+        let mut out = Mat::zeros(10, 7);
+        block_rot_fold_into(&rots, &w, &mut out);
+        let mut off = 0;
+        for rot in &rots {
+            let b = rot.rows;
+            let blk = matmul(rot, &w.rows_range(off, off + b));
+            assert!(out.rows_range(off, off + b).dist(&blk) < 1e-6);
+            off += b;
+        }
+    }
+
+    #[test]
+    fn folds_are_deterministic() {
+        let mut rng = Rng::new(73);
+        let a = Mat::randn(8, 3, 0.5, &mut rng);
+        let b = Mat::randn(3, 6, 0.5, &mut rng);
+        let s: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+        let mut out1 = Mat::zeros(8, 6);
+        let mut out2 = Mat::zeros(8, 6);
+        diag_matmul_acc(&a, &s, &b, &mut out1);
+        diag_matmul_acc(&a, &s, &b, &mut out2);
+        assert_eq!(out1.data, out2.data);
+    }
+}

@@ -9,6 +9,7 @@
 //! truncated-Neumann approximation (paper §4.2/§5, Appendix C).
 
 pub mod cayley;
+pub mod fold;
 pub mod matmul;
 pub mod matrix;
 pub mod qr;
@@ -28,6 +29,7 @@ pub use matmul::{
     matmul_nt_acc_slice, matmul_nt_into, matmul_tn, matmul_tn_acc, matmul_tn_acc_slice,
     matmul_tn_into, matvec,
 };
+pub use fold::{block_rot_fold_into, diag_matmul_acc};
 pub use matrix::{DMat, Mat, Matrix, Scalar};
 pub use quant::{
     quant_matmul, quant_matmul_acc_slice, quant_matmul_into, quant_matmul_nt_acc_slice,

@@ -11,6 +11,8 @@
 //!                 artifact; `--method all` prints artifact size per method
 //! - `import`    — reload an adapter artifact onto a matching backbone and
 //!                 evaluate it (fingerprint-checked)
+//! - `merge`     — fold an adapter artifact into its backbone and write a
+//!                 merged-model artifact (zero-adapter-overhead serving)
 //! - `suite`     — run a full benchmark suite grid (task × method × seed)
 //! - `memmodel`  — print parameter/memory projections at paper scale
 //! - `geometry`  — angle-preservation probe (Figs 9/10)
@@ -29,6 +31,8 @@
 //!       --seed 42 --out reports/psoft_cola.psoftad
 //! psoft import --artifact reports/psoft_cola.psoftad --suite glue \
 //!       --task cola --seed 42
+//! psoft merge --artifact reports/psoft_cola.psoftad --out reports/merged.psoftad
+//! psoft generate --merged --artifact reports/merged.psoftad --prompt 3,1,4
 //! psoft export --method all --rank 8 --sizes-json reports/artifact_sizes.json
 //! psoft suite --suite glue --methods psoft,lora,oftv2 --seeds 1,2,3
 //! psoft memmodel --paper-model llama31-8b --method psoft --rank 424
@@ -55,7 +59,15 @@ use std::path::Path;
 use std::sync::Arc;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "quiet", "pjrt", "coalesce-eval", "inference-only"]);
+    let args = Args::from_env(&[
+        "verbose",
+        "quiet",
+        "pjrt",
+        "coalesce-eval",
+        "inference-only",
+        "merge",
+        "merged",
+    ]);
     if args.has_flag("verbose") {
         psoft::util::log::set_level(psoft::util::log::Level::Debug);
     } else if args.has_flag("quiet") {
@@ -68,6 +80,7 @@ fn main() {
         Some("generate") => run(cmd_generate(&args)),
         Some("export") => run(cmd_export(&args)),
         Some("import") => run(cmd_import(&args)),
+        Some("merge") => run(cmd_merge(&args)),
         Some("suite") => run(cmd_suite(&args)),
         Some("memmodel") => run(cmd_memmodel(&args)),
         Some("geometry") => run(cmd_geometry(&args)),
@@ -97,11 +110,17 @@ fn run(r: Result<()>) -> i32 {
 
 fn usage() {
     eprintln!(
-        "usage: psoft <pretrain|train|serve|generate|export|import|suite|memmodel|geometry|inspect> [options]\n\
+        "usage: psoft <pretrain|train|serve|generate|export|import|merge|suite|memmodel|geometry|inspect> [options]\n\
          \n\
          generate: autoregressive decode through the serve core (decoder backbones)\n\
            psoft generate --prompt 3,1,4 --max-new 16 [--artifact adapter.psoftad]\n\
            psoft generate --prompt-len 4 --mode sample --config cfg.toml   ([serve] drives the scheduler)\n\
+           psoft generate --merged --artifact merged.psoftad   (serve a psoft-merge artifact)\n\
+         \n\
+         merge: fold an adapter artifact into its backbone — writes a merged-model\n\
+         \x20      artifact whose sections are plain dense weights (zero adapter\n\
+         \x20      overhead at inference; train is refused on merged models)\n\
+           psoft merge --artifact adapter.psoftad --out merged.psoftad\n\
          \n\
          export: write a fine-tuned adapter as a versioned artifact\n\
            psoft export --method psoft --rank 8 --steps 2 --suite glue --task cola \\\n\
@@ -113,8 +132,9 @@ fn usage() {
          \x20       --decode-batch G groups up to G same-adapter generations per lockstep\n\
          \x20       dispatch, --coalesce-eval merges queued same-adapter eval batches;\n\
          \x20       --tier-weights 3,1 enables weighted-fair priority tiers,\n\
-         \x20       --shed-after-ms B sheds requests queued past the bound, and\n\
-         \x20       --prefill-chunk P feeds P prompt tokens per group step to joining lanes\n\
+         \x20       --shed-after-ms B sheds requests queued past the bound,\n\
+         \x20       --prefill-chunk P feeds P prompt tokens per group step to joining lanes,\n\
+         \x20       and --merge serves every adapter folded into a dense backbone\n\
          \n\
          see the module docs in src/main.rs for the full option reference"
     );
@@ -377,12 +397,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     sc.shed_after_ms = args.u64("shed-after-ms", sc.shed_after_ms)?;
     sc.prefill_chunk = args.usize("prefill-chunk", sc.prefill_chunk)?;
+    if args.has_flag("merge") {
+        sc.merge_resident = true;
+    }
 
     let n_adapters = args.usize("adapters", 4)?;
     let rounds = args.usize("rounds", 16)?;
     let bsz = args.usize("batch", 4)?;
     let seq = args.usize("seq", 16)?.min(cfg.max_seq);
-    let kind_sel = args.get_or("requests", "mixed"); // eval | train | mixed
+    let kind_sel = if sc.merge_resident {
+        // Merged slots refuse train submissions (typed `MergedAdapter`);
+        // the synthetic stream degrades to eval-only rather than erroring.
+        if args.get_or("requests", "eval") != "eval" {
+            psoft::info!("--merge serves eval-only; ignoring --requests");
+        }
+        "eval"
+    } else {
+        args.get_or("requests", "mixed") // eval | train | mixed
+    };
     let method_names = if args.get("methods").is_some() {
         args.list("methods")
     } else {
@@ -396,7 +428,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let core = ServeCore::new(Arc::clone(&bb), opts);
     psoft::info!(
         "serve: {} adapters over {} workers (queue cap {}, burst {}, max resident {}, \
-         decode batch {}, coalesce_eval {}, backbone {})",
+         decode batch {}, coalesce_eval {}, backbone {}{})",
         n_adapters,
         sc.workers,
         sc.queue_cap,
@@ -404,7 +436,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if sc.max_resident == 0 { "unlimited".to_string() } else { sc.max_resident.to_string() },
         sc.decode_batch,
         sc.coalesce_eval,
-        dtype.name()
+        dtype.name(),
+        if sc.merge_resident { ", merged" } else { "" }
     );
 
     // Register the adapter fleet, cycling through the requested methods.
@@ -552,23 +585,40 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
     let opts = ServeOptions::from(sc.clone());
     let core = ServeCore::new(Arc::clone(&bb), opts);
-    let id = match args.get("artifact") {
-        Some(path) => {
-            let art = AdapterArtifact::read_from(Path::new(path))?;
-            psoft::info!(
-                "restoring adapter {} (method {}, rank {}, opt_step {}) from {path}",
-                art.label,
-                art.method.name(),
-                art.peft.rank,
-                art.opt_step
-            );
-            core.restore(&art.label, Path::new(path))?
-        }
-        None => {
-            let peft = peft_cfg_from(args, &cfg)?;
-            let label = format!("{}_r{}", peft.method.name(), peft.rank);
-            psoft::info!("registering fresh adapter {label}");
-            core.register(&label, &peft, args.u64("seed", 42)?)
+    let id = if args.has_flag("merged") {
+        // Merged-model artifact (psoft merge): sections are folded dense
+        // weights; the restored backend runs plain pre-adapter kernels.
+        let path = args
+            .get("artifact")
+            .context("--merged requires --artifact <merged .psoftad>")?;
+        let art = AdapterArtifact::read_from(Path::new(path))?;
+        psoft::info!(
+            "restoring merged model {} (method {}, {} sections) from {path}",
+            art.label,
+            art.method.name(),
+            art.sections.len()
+        );
+        let backend = NativeBackend::from_merged_artifact(&bb, &art)?;
+        core.register_backend(&art.label, backend)
+    } else {
+        match args.get("artifact") {
+            Some(path) => {
+                let art = AdapterArtifact::read_from(Path::new(path))?;
+                psoft::info!(
+                    "restoring adapter {} (method {}, rank {}, opt_step {}) from {path}",
+                    art.label,
+                    art.method.name(),
+                    art.peft.rank,
+                    art.opt_step
+                );
+                core.restore(&art.label, Path::new(path))?
+            }
+            None => {
+                let peft = peft_cfg_from(args, &cfg)?;
+                let label = format!("{}_r{}", peft.method.name(), peft.rank);
+                psoft::info!("registering fresh adapter {label}");
+                core.register(&label, &peft, args.u64("seed", 42)?)
+            }
         }
     };
 
@@ -720,6 +770,47 @@ fn cmd_import(args: &Args) -> Result<()> {
         art.adapter_param_floats()
     );
     println!("eval_loss={eval:.12e}");
+    Ok(())
+}
+
+/// `psoft merge`: fold a fine-tuned adapter artifact into its backbone
+/// and write a merged-model artifact. The output's sections are the
+/// folded dense per-module weights (f32, bit-exact with the fold the
+/// serve layer performs under `--merge` / `[serve] merge_resident`), so
+/// inference needs no adapter kernels at all. Merged artifacts are loaded
+/// with `psoft generate --merged`; `psoft import` refuses them typed.
+fn cmd_merge(args: &Args) -> Result<()> {
+    use psoft::peft::artifact::AdapterArtifact;
+    let path = args.get("artifact").context("merge requires --artifact <path>")?;
+    let art = AdapterArtifact::read_from(Path::new(path))?;
+    if art.merged {
+        bail!("{path} is already a merged-model artifact");
+    }
+    let cfg = model_cfg_from_with(args, art.model.arch.name())?;
+    let bb = load_or_make_backbone(args, &cfg)?;
+    psoft::info!(
+        "folding adapter {} (method {}, rank {}, opt_step {}) into its backbone",
+        art.label,
+        art.method.name(),
+        art.peft.rank,
+        art.opt_step
+    );
+    let backend = NativeBackend::from_artifact(&bb, &art)?;
+    let label = format!("{}_merged", art.label);
+    let merged = backend.to_merged_artifact(&label, &bb)?;
+    let out = args.get_or("out", "reports/merged.psoftad");
+    let bytes = merged.write_to(Path::new(out))?;
+    println!(
+        "merged {label}: {} dense sections, {} on disk -> {out} (backbone {:#018x})",
+        merged.sections.len(),
+        human_bytes(bytes as f64),
+        merged.backbone_fp
+    );
+    if let Some(dir) = Path::new(out).parent() {
+        let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        let n = psoft::peft::artifact::write_manifest(dir)?;
+        psoft::info!("indexed {n} artifacts in {}/manifest.json", dir.display());
+    }
     Ok(())
 }
 

@@ -488,6 +488,88 @@ impl Backbone {
             fp_cache: std::sync::OnceLock::new(),
         })
     }
+
+    /// Standalone merged backbone from an adapted model: every `Adapted`
+    /// module folds into a dense weight through the shared merge driver
+    /// ([`crate::peft::merge_adapter_checked`] — each fold is validated
+    /// against its method's pinned tolerance before installation), while
+    /// dense modules, embeddings and the LM head share the original
+    /// `Arc`s. Forward/decode on the result runs the plain pre-adapter
+    /// kernels — no rotation refresh, no low-rank side matmuls — and the
+    /// result composes with [`Backbone::to_dtype`], so a merged backbone
+    /// can be requantized int8 for resident-size parity with the frozen
+    /// original.
+    pub fn merged_from(model: &NativeModel) -> Result<Backbone> {
+        let mut layer_weights = Vec::with_capacity(model.layers.len());
+        for (l, layer) in model.layers.iter().enumerate() {
+            let mut mods = Vec::with_capacity(layer.modules.len());
+            for (m, op) in &layer.modules {
+                let w = match op {
+                    ModuleOp::Dense(w) => w.clone(),
+                    ModuleOp::Adapted(a) => {
+                        let folded = crate::peft::merge_adapter_checked(a.as_ref())
+                            .with_context(|| format!("folding l{l}.{}", m.name()))?;
+                        SharedMat::F32(Arc::new(folded))
+                    }
+                };
+                mods.push((*m, w));
+            }
+            layer_weights.push(mods);
+        }
+        Ok(Backbone {
+            cfg: model.cfg.clone(),
+            tok_emb: model.tok_emb.clone(),
+            pos_emb: model.pos_emb.clone(),
+            layer_weights,
+            lm_head: model.lm_head.clone(),
+            fp_cache: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// A copy of this backbone with selected per-layer module weights
+    /// replaced by caller-provided dense matrices (everything else stays
+    /// `Arc`-shared). This is the merged-artifact import path: the
+    /// folded weights a `psoft merge` artifact carries are installed
+    /// over the frozen originals, producing the standalone backbone the
+    /// artifact's fingerprint was *derived* from. Shapes are validated
+    /// against the config; the fingerprint cache starts fresh (the
+    /// replaced tensors change the hash).
+    pub fn with_module_weights(
+        &self,
+        repl: Vec<(usize, ModuleKind, Mat)>,
+    ) -> Result<Backbone> {
+        let mut layer_weights: Vec<Vec<(ModuleKind, SharedMat)>> = self
+            .layer_weights
+            .iter()
+            .map(|layer| layer.iter().map(|(m, w)| (*m, w.clone())).collect())
+            .collect();
+        for (l, mk, w) in repl {
+            let (din, dout) = self.cfg.module_shape(mk);
+            anyhow::ensure!(
+                w.rows == din && w.cols == dout,
+                "replacement weight for l{l}.{} is [{}, {}], want [{din}, {dout}]",
+                mk.name(),
+                w.rows,
+                w.cols
+            );
+            let layer = layer_weights
+                .get_mut(l)
+                .ok_or_else(|| anyhow::anyhow!("layer {l} out of range"))?;
+            let slot = layer
+                .iter_mut()
+                .find(|(m, _)| *m == mk)
+                .ok_or_else(|| anyhow::anyhow!("no module {} in layer {l}", mk.name()))?;
+            slot.1 = SharedMat::F32(Arc::new(w));
+        }
+        Ok(Backbone {
+            cfg: self.cfg.clone(),
+            tok_emb: self.tok_emb.clone(),
+            pos_emb: self.pos_emb.clone(),
+            layer_weights,
+            lm_head: self.lm_head.clone(),
+            fp_cache: std::sync::OnceLock::new(),
+        })
+    }
 }
 
 /// One transformer layer with adapters installed.
@@ -630,6 +712,24 @@ impl NativeModel {
             lm_head: self.lm_head.clone(),
             fp_cache: std::sync::OnceLock::new(),
         }
+    }
+
+    /// Merged twin of this model: every adapted module folded to a dense
+    /// handle via [`Backbone::merged_from`], embeddings and the trained
+    /// encoder head preserved. Forward/decode on the result runs only the
+    /// plain dense kernels — no rotation refresh, no low-rank side
+    /// matmuls; parity with the adapted model is bounded per method by
+    /// `Adapter::merge_tolerance` (pinned end to end in `tests/merge.rs`).
+    pub fn to_merged(&self) -> Result<NativeModel> {
+        let bb = Backbone::merged_from(self)?;
+        let mut peft = self.peft.clone();
+        // All-dense: nothing re-adapts on the merged twin (the method
+        // kind is kept for provenance/reporting).
+        peft.modules = Vec::new();
+        let mut m = NativeModel::from_backbone(&bb, &peft, &mut Rng::new(0));
+        m.head_w = self.head_w.clone();
+        m.head_b = self.head_b.clone();
+        Ok(m)
     }
 
     fn has_head(&self) -> bool {
@@ -992,6 +1092,47 @@ mod tests {
         assert!(d0 < 1e-3, "dist {d0}");
         // Dense (un-adapted) modules are bit-identical.
         assert_eq!(merged.weight(0, ModuleKind::K), bb.weight(0, ModuleKind::K));
+    }
+
+    #[test]
+    fn merged_from_runs_plain_kernels_and_requantizes() {
+        let mut rng = Rng::new(209);
+        let cfg = tiny_cfg();
+        let bb = Backbone::random(&cfg, &mut rng);
+        let peft = PeftConfig::new(MethodKind::Psoft, 4)
+            .with_modules(vec![ModuleKind::Q, ModuleKind::V]);
+        let mut model = NativeModel::from_backbone(&bb, &peft, &mut rng);
+        // Move off the identity init so the fold is non-trivial.
+        let mut p = model.trainable_flat();
+        for v in p.iter_mut() {
+            *v += 0.02 * rng.normal() as f32;
+        }
+        model.set_trainable_flat(&p);
+
+        let merged = Backbone::merged_from(&model).unwrap();
+        // Every module is plain dense on the merged side; the adapted ones
+        // carry the folded weight within the method tolerance.
+        for (mk, op) in &model.layers[0].modules {
+            let w = merged.weight(0, *mk);
+            match op {
+                ModuleOp::Dense(orig) => assert!(SharedMat::ptr_eq(w, orig)),
+                ModuleOp::Adapted(a) => {
+                    let d = w.as_f32().dist(&a.materialize());
+                    assert!(d < 1e-5, "{mk:?}: folded vs materialize dist {d}");
+                }
+            }
+        }
+        // Embeddings/lm_head share the original Arcs.
+        assert!(SharedMat::ptr_eq(&merged.tok_emb, &bb.tok_emb));
+        // The merged twin model is all-dense and decode-capable iff the
+        // source was.
+        let twin = model.to_merged().unwrap();
+        assert_eq!(twin.num_adapter_params(), 0);
+        assert_eq!(twin.head_w.data, model.head_w.data);
+        // Composes with int8 requantization for resident-size parity.
+        let q = merged.to_dtype(crate::config::BackboneDtype::Int8);
+        assert_eq!(q.dtype(), crate::config::BackboneDtype::Int8);
+        assert!(q.resident_bytes() < merged.resident_bytes() * 35 / 100);
     }
 
     #[test]

@@ -60,7 +60,9 @@
 //!         8     backbone fingerprint: u64 (FNV-1a over config + tensors)
 //!         8     opt_step: u64          (AdamW step count)
 //!         1     artifact_flags: u8     (v2 only; bit0 inference_only —
-//!                                       optimizer moments omitted)
+//!                                       optimizer moments omitted;
+//!                                       bit1 merged — sections are folded
+//!                                       dense weights, not adapter state)
 //!         4+n   label: u32 byte-length + UTF-8 bytes
 //!         4     n_sections: u32
 //! --- per section, n_sections times ---
@@ -326,6 +328,14 @@ pub struct AdapterArtifact {
     /// but resumes training with fresh (zero) moments. Always `false`
     /// for v1 artifacts.
     pub inference_only: bool,
+    /// v2 `artifact_flags` bit1: a **merged-model** artifact (`psoft
+    /// merge`). Its sections are the folded dense weight of each
+    /// formerly-adapted module (`l{layer}.{module}.w`, always f32) plus
+    /// the encoder head — no adapter state, no optimizer moments, and
+    /// the seed is provenance only. Load with
+    /// [`crate::runtime::NativeBackend::from_merged_artifact`]; the
+    /// adapter-state reader refuses it. Always `false` for v1.
+    pub merged: bool,
     /// Encode parameter sections as IEEE binary16 (v2 per-section
     /// `encoding = 1`). Halves section bytes at ~1e-3 relative rounding
     /// — inference-export only; training artifacts stay f32 so optimizer
@@ -532,7 +542,7 @@ impl AdapterArtifact {
         w.u64(self.backbone_fp);
         w.u64(self.opt_step);
         if version >= 2 {
-            w.u8(self.inference_only as u8);
+            w.u8((self.inference_only as u8) | ((self.merged as u8) << 1));
         }
         w.str(&self.label);
         w.u32(self.sections.len() as u32);
@@ -647,14 +657,14 @@ impl AdapterArtifact {
         let seed = r.u64("seed")?;
         let backbone_fp = r.u64("backbone fingerprint")?;
         let opt_step = r.u64("opt_step")?;
-        let inference_only = if version >= 2 {
+        let (inference_only, merged) = if version >= 2 {
             let flags = r.u8("artifact_flags")?;
-            if flags & !1 != 0 {
+            if flags & !3 != 0 {
                 return Err(ArtifactError::Invalid { what: "artifact_flags", value: flags as u64 });
             }
-            flags & 1 != 0
+            (flags & 1 != 0, flags & 2 != 0)
         } else {
-            false
+            (false, false)
         };
         let label = r.str("label")?;
         let n_sections = r.u32("section count")? as usize;
@@ -704,6 +714,7 @@ impl AdapterArtifact {
             backbone_fp,
             opt_step,
             inference_only,
+            merged,
             f16_sections,
             sections,
         })
@@ -798,6 +809,7 @@ pub fn write_manifest(dir: &Path) -> anyhow::Result<usize> {
                 ("method", Json::Str(a.method.name().to_string())),
                 ("schema_version", Json::Num(a.schema_version as f64)),
                 ("inference_only", Json::Bool(a.inference_only)),
+                ("merged", Json::Bool(a.merged)),
                 ("f16_sections", Json::Bool(a.f16_sections)),
                 ("seed", Json::Num(a.seed as f64)),
                 ("backbone_fp", Json::Str(format!("{:#018x}", a.backbone_fp))),
@@ -850,6 +862,7 @@ mod tests {
             backbone_fp: 0xDEAD_BEEF_CAFE_F00D,
             opt_step: 3,
             inference_only: false,
+            merged: false,
             f16_sections: false,
             sections: vec![
                 Section::new("l0.Q.theta", vec![0.1, -0.2, f32::NAN, 0.0, 1.5, -9.25]),

@@ -217,6 +217,12 @@ impl Adapter for BoftAdapter {
         w
     }
 
+    fn merge_tolerance(&self) -> f64 {
+        // m chained butterfly factors fold weight-side: the longest
+        // accumulation-order divergence in the zoo.
+        5e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

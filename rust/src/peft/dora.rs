@@ -89,6 +89,22 @@ impl Adapter for DoraAdapter {
         v.scale_cols(&scale)
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // Fold the column-norm rescale: the per-step norm recomputation
+        // (DoRA's overhead) disappears from the merged per-token path.
+        assert_eq!(dst.shape(), self.w0.shape(), "merge_into buffer shape");
+        let (v, norms) = self.direction();
+        dst.copy_from(&v);
+        let scale: Vec<f32> = self.m.iter().zip(&norms).map(|(&m, &c)| m / c).collect();
+        dst.scale_cols_in_place(&scale);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // The m/‖V‖ column rescale rounds once per element on top of the
+        // low-rank association swap.
+        2e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

@@ -49,6 +49,17 @@ impl Adapter for FftAdapter {
         self.w.clone()
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        assert_eq!(dst.shape(), self.w.shape(), "merge_into buffer shape");
+        dst.copy_from(&self.w);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // The structured forward *is* the dense matmul — the fold only
+        // copies W, so the merged path is bit-identical.
+        1e-6
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         matmul(x, &self.w)
     }

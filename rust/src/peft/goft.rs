@@ -158,6 +158,11 @@ impl Adapter for GoftAdapter {
         w
     }
 
+    fn merge_tolerance(&self) -> f64 {
+        // log₂ d chained Givens stages fold weight-side.
+        5e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

@@ -85,6 +85,19 @@ impl Adapter for LoraAdapter {
         w
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // W_eff = W₀ + AB, accumulated straight into the caller's buffer.
+        assert_eq!(dst.shape(), self.w0.shape(), "merge_into buffer shape");
+        dst.copy_from(&self.w0);
+        matmul_acc(&self.a, &self.b, dst);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // Structured x·W₀ + (xA)B vs merged x·(W₀+AB): one association
+        // swap on a rank-r side path.
+        1e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

@@ -86,6 +86,19 @@ impl Adapter for LoraXsAdapter {
         w
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // W_eff = W₀ + (AR)B, accumulated into the caller's buffer.
+        assert_eq!(dst.shape(), self.w0.shape(), "merge_into buffer shape");
+        dst.copy_from(&self.w0);
+        let ar = matmul(&self.a, &self.r_mat);
+        matmul_acc(&ar, &self.b, dst);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // Two-hop low-rank side path (xA → R → B) vs one folded product.
+        1e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

@@ -242,6 +242,30 @@ pub trait Adapter: Send {
     /// deployment/merge time and by tests, never on the training hot path.
     fn materialize(&self) -> Mat;
 
+    /// Fold this adapter into a caller-provided dense weight buffer:
+    /// overwrites `dst` (shape d×n) with `W_eff` — the merge-to-backbone
+    /// serving path ([`merge_adapter`] is the shared driver). The default
+    /// routes through [`Adapter::materialize`]; methods override it with a
+    /// direct fold where one is cheaper. Folds must be deterministic:
+    /// repeated folds of the same adapter state are bit-identical, which
+    /// merged-artifact round-trips and re-promotion after a serve spill
+    /// rely on.
+    fn merge_into(&self, dst: &mut Mat) {
+        let w = self.materialize();
+        assert_eq!(dst.shape(), w.shape(), "merge_into buffer shape");
+        dst.copy_from(&w);
+    }
+
+    /// Pinned closeness bound for the merged path: the relative Frobenius
+    /// defect `‖y_struct − x·W_merged‖_F / (1 + ‖y_struct‖_F)` the folded
+    /// weight is allowed versus the structured forward on a probe batch
+    /// (see [`merge_defect`]). Per method because the structured kernels
+    /// accumulate in different orders — a chained rotation drifts more
+    /// than a low-rank side path. Enforced by [`merge_adapter_checked`]
+    /// (and therefore by `Backbone::merged_from`) and re-pinned end to end
+    /// in `tests/merge.rs`.
+    fn merge_tolerance(&self) -> f64;
+
     /// Structured forward: `y = x @ W_eff`, `x: [T, d] → y: [T, n]`.
     fn forward(&self, x: &Mat) -> Mat;
 
@@ -307,6 +331,63 @@ pub trait Adapter: Send {
     fn orth_reg_grad(&self, _gamma: f64) -> Vec<f32> {
         vec![0.0; self.num_params()]
     }
+}
+
+/// Typed failure from the checked merge driver: the folded weight's
+/// measured probe defect exceeded the method's pinned bound.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergeError {
+    pub method: MethodKind,
+    pub defect: f64,
+    pub tolerance: f64,
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:?} merge defect {:.3e} exceeds the method's pinned tolerance {:.3e}",
+            self.method, self.defect, self.tolerance
+        )
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+/// Shared merge driver: fold `adapter` into a freshly allocated dense
+/// weight via [`Adapter::merge_into`]. Every merge consumer (serve-slot
+/// promotion, `psoft merge`, merged artifacts, `Backbone::merged_from`)
+/// funnels through here so folds stay bit-identical across paths.
+pub fn merge_adapter(adapter: &dyn Adapter) -> Mat {
+    let (d, n) = adapter.shape();
+    let mut w = Mat::zeros(d, n);
+    adapter.merge_into(&mut w);
+    w
+}
+
+/// Measured merge defect: relative Frobenius distance between the
+/// structured forward and `x @ w_merged` on a small deterministic probe
+/// batch (fixed seed — the check must not vary run to run).
+pub fn merge_defect(adapter: &dyn Adapter, w_merged: &Mat) -> f64 {
+    let (d, _) = adapter.shape();
+    let mut rng = Rng::new(0x4D45_5247); // "MERG"
+    let x = Mat::randn(4, d, 1.0, &mut rng);
+    let y_s = adapter.forward(&x);
+    let y_m = crate::linalg::matmul(&x, w_merged);
+    y_s.dist(&y_m) / (1.0 + y_s.frobenius_norm())
+}
+
+/// [`merge_adapter`] + defect validation against the method's
+/// [`Adapter::merge_tolerance`]: the fold is rejected (typed
+/// [`MergeError`]) rather than silently installing a drifted weight.
+pub fn merge_adapter_checked(adapter: &dyn Adapter) -> Result<Mat, MergeError> {
+    let w = merge_adapter(adapter);
+    let defect = merge_defect(adapter, &w);
+    let tolerance = adapter.merge_tolerance();
+    if !(defect <= tolerance) {
+        return Err(MergeError { method: adapter.kind(), defect, tolerance });
+    }
+    Ok(w)
 }
 
 /// Construct an adapter for `cfg.method` on a layer with pre-trained weight
@@ -438,6 +519,35 @@ mod state_tests {
                 a.import_state(&sections[..sections.len() - 1]),
                 Err(StateError::SectionCount { .. })
             ));
+        }
+    }
+
+    /// Every method's fold passes its own pinned tolerance away from the
+    /// identity init, stays close to `materialize`, and is deterministic
+    /// across repeated folds (the re-promotion bit-identity contract).
+    #[test]
+    fn checked_merge_holds_for_all_methods() {
+        let mut rng = Rng::new(992);
+        let w = Mat::randn(16, 16, 0.2, &mut rng);
+        for cfg in configs() {
+            let mut a = build_adapter(&cfg, &w, &mut rng);
+            let mut p = a.params();
+            for v in p.iter_mut() {
+                *v += 0.02 * rng.normal() as f32;
+            }
+            a.set_params(&p);
+
+            let merged = merge_adapter_checked(a.as_ref())
+                .unwrap_or_else(|e| panic!("{:?}: {e}", cfg.method));
+            let mat = a.materialize();
+            let d = merged.dist(&mat);
+            assert!(
+                d <= 1e-5 * (1.0 + mat.frobenius_norm()),
+                "{:?}: merge_into vs materialize dist {d}",
+                cfg.method
+            );
+            let again = merge_adapter(a.as_ref());
+            assert_eq!(merged.data, again.data, "{:?}: fold must be deterministic", cfg.method);
         }
     }
 }

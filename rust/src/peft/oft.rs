@@ -121,6 +121,18 @@ impl Adapter for OftAdapter {
         w
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // W_eff = R·W₀ block-row-wise; after the fold, decode runs a plain
+        // dense matmul — no per-token activation rotation.
+        assert_eq!(dst.shape(), self.w0.shape(), "merge_into buffer shape");
+        crate::linalg::block_rot_fold_into(&self.rots, &self.w0, dst);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // One block rotation folded weight-side instead of token-side.
+        2e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

@@ -156,6 +156,22 @@ impl Adapter for PsoftAdapter {
         w
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // W_eff = W_res + A'·C·B' (Algorithm 1, line 12) folded into the
+        // caller's buffer — the principal-subspace side path disappears
+        // from the merged per-token cost.
+        assert_eq!(dst.shape(), self.w_res.shape(), "merge_into buffer shape");
+        dst.copy_from(&self.w_res);
+        let ac = matmul(&self.a, &self.transform());
+        crate::linalg::matmul_acc(&ac, &self.b, dst);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // Rank-r rotation sandwich folded weight-side vs the fused
+        // token-side kernel.
+        2e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w_res.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

@@ -72,6 +72,20 @@ impl Adapter for SvftAdapter {
         matmul(&us, &self.vt)
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // W_eff = U·diag(σ+m)·Vᵀ, folded through the diagonal sandwich.
+        assert_eq!(dst.shape(), self.shape(), "merge_into buffer shape");
+        let scale: Vec<f32> = self.sigma.iter().zip(&self.m).map(|(&s, &m)| s + m).collect();
+        dst.fill(0.0);
+        crate::linalg::diag_matmul_acc(&self.u, &scale, &self.vt, dst);
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // Full-rank SVD reconstruction: k = d_min rounding terms per
+        // element, versus the same factors applied token-side.
+        2e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.vt.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

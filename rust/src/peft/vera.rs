@@ -80,6 +80,25 @@ impl Adapter for VeraAdapter {
         self.w0.add(&delta)
     }
 
+    fn merge_into(&self, dst: &mut Mat) {
+        // W_eff = W₀ + (A_f·diag(d))·B_f·diag(b): the diagonal sandwich
+        // folds via `diag_matmul_acc` without materializing the scaled A_f.
+        assert_eq!(dst.shape(), self.w0.shape(), "merge_into buffer shape");
+        let (d, n) = self.w0.shape();
+        let mut delta = Mat::zeros(d, n);
+        crate::linalg::diag_matmul_acc(&self.a_f, &self.d_vec, &self.b_f, &mut delta);
+        delta.scale_cols_in_place(&self.b_vec);
+        dst.copy_from(&self.w0);
+        for (dv, &sv) in dst.data.iter_mut().zip(&delta.data) {
+            *dv += sv;
+        }
+    }
+
+    fn merge_tolerance(&self) -> f64 {
+        // Two diagonal rescales around the frozen projection pair.
+        1e-4
+    }
+
     fn forward(&self, x: &Mat) -> Mat {
         let mut y = Mat::zeros(x.rows, self.w0.cols);
         self.forward_into(x, &mut y, &mut Workspace::new());

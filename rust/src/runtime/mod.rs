@@ -22,7 +22,7 @@ pub mod loadgen;
 pub mod pjrt;
 pub mod serve;
 
-use crate::config::{Arch, PeftConfig};
+use crate::config::{Arch, ModuleKind, PeftConfig};
 use crate::linalg::Workspace;
 use crate::model::native::{self, Batch, StepBuffers, StepOutput};
 use crate::model::{Backbone, ModuleOp, NativeModel};
@@ -208,6 +208,7 @@ impl NativeBackend {
             backbone_fp: backbone.fingerprint(),
             opt_step: self.opt.step as u64,
             inference_only: false,
+            merged: false,
             f16_sections: false,
             sections,
         })
@@ -282,6 +283,15 @@ impl NativeBackend {
         backbone: &Backbone,
         art: &AdapterArtifact,
     ) -> std::result::Result<NativeBackend, ArtifactError> {
+        if art.merged {
+            // Merged artifacts carry folded dense weights, not adapter
+            // state — they load through `from_merged_artifact`.
+            return Err(ArtifactError::ModelMismatch(
+                "this is a merged-model artifact (psoft merge); load it with \
+                 --merged / from_merged_artifact"
+                    .to_string(),
+            ));
+        }
         let fp = backbone.fingerprint();
         if fp != art.backbone_fp {
             return Err(ArtifactError::BackboneMismatch {
@@ -419,6 +429,152 @@ impl NativeBackend {
         let mut out = Vec::with_capacity(max_new_tokens);
         native::generate_into(&self.model, prompt, max_new_tokens, greedy, cache, ws, &mut out);
         out
+    }
+
+    /// Dense merged twin of this backend: every adapted module folded
+    /// into its effective weight ([`NativeModel::to_merged`], each fold
+    /// validated against its method's pinned tolerance), fresh optimizer
+    /// state. Forward/decode on the twin runs the plain pre-adapter
+    /// kernels — the zero-adapter-overhead inference path the serve
+    /// layer's merged mode dispatches. The fold is deterministic:
+    /// folding the same backend twice yields bit-identical twins, which
+    /// is what lets the serve layer drop a twin at spill time and
+    /// re-derive it on reload.
+    pub fn merged_twin(&self) -> Result<NativeBackend> {
+        Ok(NativeBackend::new(self.model.to_merged()?))
+    }
+
+    /// Snapshot the **merged** form of this backend as an artifact: the
+    /// folded dense weight of every adapted module (named `l{l}.{mod}.w`,
+    /// always f32 — merged artifacts round-trip bit-exactly), plus the
+    /// trained encoder head. Unlike [`NativeBackend::to_artifact`], no
+    /// construction seed is needed to re-derive adapter tensors (the
+    /// fold already erased them), so merged export works for any
+    /// backend; the artifact is inherently inference-only (`merged` and
+    /// `inference_only` flag bits both set).
+    pub fn to_merged_artifact(
+        &self,
+        label: &str,
+        backbone: &Backbone,
+    ) -> Result<AdapterArtifact> {
+        if self.model.train_embeddings {
+            anyhow::bail!("merged artifacts cover adapter+head state only, not pretraining mode");
+        }
+        if label.len() > crate::peft::artifact::MAX_STR_LEN {
+            anyhow::bail!(
+                "label is {} bytes; artifact strings are capped at {} bytes",
+                label.len(),
+                crate::peft::artifact::MAX_STR_LEN
+            );
+        }
+        let mut sections = Vec::new();
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            for (mk, op) in &layer.modules {
+                if let ModuleOp::Adapted(a) = op {
+                    let folded = crate::peft::merge_adapter_checked(a.as_ref())
+                        .map_err(|e| anyhow::anyhow!("folding l{l}.{}: {e}", mk.name()))?;
+                    sections.push(Section::new(format!("l{l}.{}.w", mk.name()), folded.data));
+                }
+            }
+        }
+        if self.model.cfg.arch == Arch::Encoder {
+            sections.push(Section::new("head.w", self.model.head_w.data.clone()));
+            sections.push(Section::new("head.b", self.model.head_b.clone()));
+        }
+        Ok(AdapterArtifact {
+            schema_version: SCHEMA_VERSION,
+            method: self.model.peft.method,
+            label: label.to_string(),
+            model: self.model.cfg.clone(),
+            peft: self.model.peft.clone(),
+            seed: self.build_seed.unwrap_or(0),
+            backbone_fp: backbone.fingerprint(),
+            opt_step: 0,
+            inference_only: true,
+            merged: true,
+            f16_sections: false,
+            sections,
+        })
+    }
+
+    /// Reconstruct the zero-adapter-overhead serving backend from a
+    /// merged artifact on a fingerprint-matching backbone: the folded
+    /// weights replace the corresponding frozen module weights
+    /// ([`Backbone::with_module_weights`]), every module serves dense,
+    /// and the encoder head is restored. The result's eval/decode is
+    /// bit-identical to the [`NativeBackend::merged_twin`] that was
+    /// exported (merged sections are always f32-encoded).
+    pub fn from_merged_artifact(
+        backbone: &Backbone,
+        art: &AdapterArtifact,
+    ) -> Result<NativeBackend> {
+        anyhow::ensure!(
+            art.merged,
+            "artifact is not a merged-model artifact (run `psoft merge` to fold an adapter)"
+        );
+        let fp = backbone.fingerprint();
+        anyhow::ensure!(
+            fp == art.backbone_fp,
+            "merged artifact was folded against backbone {:016x}, this backbone is {fp:016x}",
+            art.backbone_fp
+        );
+        let mut want = art.model.clone();
+        want.n_classes = backbone.cfg.n_classes;
+        anyhow::ensure!(
+            want == backbone.cfg,
+            "artifact model {:?} vs backbone {:?}",
+            art.model,
+            backbone.cfg
+        );
+        // Split the trailing head sections from the folded weights.
+        let n_head = if art.model.arch == Arch::Encoder { 2 } else { 0 };
+        anyhow::ensure!(
+            art.sections.len() >= n_head,
+            "merged artifact has {} sections, need at least {n_head}",
+            art.sections.len()
+        );
+        let (weight_secs, head_secs) = art.sections.split_at(art.sections.len() - n_head);
+        let mut repl = Vec::with_capacity(weight_secs.len());
+        for s in weight_secs {
+            // Section names are "l{l}.{module}.w".
+            let mut it = s.name.split('.');
+            let (layer_tok, mod_tok, tail) = (it.next(), it.next(), it.next());
+            let parsed = match (layer_tok, mod_tok, tail, it.next()) {
+                (Some(lt), Some(mt), Some("w"), None) => lt
+                    .strip_prefix('l')
+                    .and_then(|d| d.parse::<usize>().ok())
+                    .and_then(|l| {
+                        ModuleKind::ALL.iter().find(|m| m.name() == mt).map(|m| (l, *m))
+                    }),
+                _ => None,
+            };
+            let Some((l, mk)) = parsed else {
+                anyhow::bail!("unexpected merged-artifact section name {:?}", s.name);
+            };
+            let (din, dout) = art.model.module_shape(mk);
+            anyhow::ensure!(
+                s.data.len() == din * dout,
+                "section {:?} has {} floats, want {din}x{dout}",
+                s.name,
+                s.data.len()
+            );
+            let mut w = crate::linalg::Mat::zeros(din, dout);
+            w.data.copy_from_slice(&s.data);
+            repl.push((l, mk, w));
+        }
+        let merged_bb = backbone.with_module_weights(repl)?;
+        let mut peft = art.peft.clone();
+        peft.modules = Vec::new();
+        let mut rng = Rng::new(art.seed);
+        let mut model = NativeModel::from_backbone(&merged_bb, &peft, &mut rng);
+        if model.cfg.arch == Arch::Encoder {
+            if art.model.n_classes != model.cfg.n_classes {
+                model.set_head_classes(art.model.n_classes, &mut rng);
+            }
+            copy_named(&head_secs[0], "head.w", &mut model.head_w.data)?;
+            copy_named(&head_secs[1], "head.b", &mut model.head_b)?;
+        }
+        Ok(NativeBackend::new(model))
     }
 }
 

@@ -189,8 +189,9 @@
 //!   / [`AdapterStats::prefill_tokens`] expose the prefill volume.
 //!   Decode overflow past `max_seq` — unreachable through `submit`'s
 //!   validation, but typed all the way down — fails the group's tickets
-//!   with [`ServeError::DecodeOverflow`] instead of tripping worker
-//!   panic containment.
+//!   with [`ServeError::DecodeOverflow`] (carrying each lane's prompt /
+//!   max_new / max_seq numbers) instead of tripping worker panic
+//!   containment.
 //!
 //! # Failure containment
 //!
@@ -282,6 +283,29 @@
 //! [`ServeReport`](crate::coordinator::report::ServeReport) surfaces
 //! the resident footprint (`shared_frozen_mib`, `backbone_dtype`) so
 //! benches and the CI gate can hold the int8/f32 ratio down.
+//!
+//! # Merged serving
+//!
+//! An adapter whose training has converged pays structured-adapter
+//! arithmetic on every token it serves — rotations, low-rank updates,
+//! magnitude rescales — even though its weights no longer change. Merged
+//! mode removes that tax: [`ServeCore::promote`] folds the adapter's
+//! effective weights into a **dense merged twin**
+//! ([`NativeBackend::merged_twin`]) whose forward/decode path runs the
+//! plain pre-adapter kernels, then installs the twin next to the adapted
+//! backend in the slot. Subsequent eval and generate dispatches pick the
+//! twin ([`AdapterStats::merged_tokens`] counts the tokens it emits);
+//! train submits are refused typed with [`ServeError::MergedAdapter`]
+//! because a train step needs the adapted parameterization —
+//! [`ServeCore::demote`] drops the twin and restores the adapted path.
+//! The adapted backend stays the slot's source of truth throughout:
+//! spill writes the *adapted* artifact and drops the twin (fold
+//! determinism re-derives it bit-identically), and the transparent
+//! reload lane re-promotes a merged slot off-lock before serving resumes.
+//! `ServeOptions::merge_resident` (`[serve] merge_resident`, `--merge`)
+//! promotes every adapter at registration for inference-only fleets.
+//! The fold itself runs **off the scheduler lock** — promotion of one
+//! adapter never stalls dispatch for the rest of the fleet.
 
 use crate::config::PeftConfig;
 use crate::linalg::Workspace;
@@ -375,17 +399,22 @@ pub enum ServeError {
     /// Spilling or reloading the adapter's on-disk artifact failed.
     ArtifactFailed,
     /// The request is malformed for this core's backbone (generation on
-    /// an encoder, empty prompt, out-of-vocab prompt token, or prompt +
-    /// max_new_tokens past `max_seq`).
+    /// an encoder, empty prompt, or an out-of-vocab prompt token).
     InvalidRequest,
-    /// The decode path reported stepping (or prefilling) past the
-    /// model's context window — `native::DecodeError::PastMaxSeq`
-    /// surfaced typed. Unreachable for requests admitted through
-    /// [`ServeCore::submit`] (its validation rejects
-    /// `prompt + max_new_tokens > max_seq` as [`ServeError::InvalidRequest`]),
-    /// but kept typed end to end so an overflow can never masquerade as
-    /// a worker panic.
-    DecodeOverflow { pos: usize, max_seq: usize },
+    /// The generation cannot fit the model's context window. Carries the
+    /// numbers a client needs to retry sensibly: the prompt length, the
+    /// requested continuation, and the window they must fit in
+    /// (mirroring `native::DecodeError::PastMaxSeq`). Returned at submit
+    /// when `prompt + max_new > max_seq`, and kept typed all the way
+    /// down the decode path so an overflow surfacing mid-group can never
+    /// masquerade as a worker panic.
+    DecodeOverflow { prompt: usize, max_new: usize, max_seq: usize },
+    /// The adapter is serving in **merged mode** (its adapted weights are
+    /// folded into a dense twin — see the module docs' Merged serving
+    /// section): train steps need the adapted parameterization, so train
+    /// submits are refused typed. [`ServeCore::demote`] restores the
+    /// adapted path, after which training is accepted again.
+    MergedAdapter,
     /// The worker servicing this request panicked. The panic is contained
     /// (caught at the dispatch boundary, never across a held scheduler
     /// lock): the adapter whose compute panicked is retired — its
@@ -420,9 +449,15 @@ impl fmt::Display for ServeError {
             ServeError::InvalidRequest => {
                 f.write_str("request is malformed for this backbone (arch/prompt/length)")
             }
-            ServeError::DecodeOverflow { pos, max_seq } => {
-                write!(f, "decode position {pos} past max_seq ({max_seq})")
-            }
+            ServeError::DecodeOverflow { prompt, max_new, max_seq } => write!(
+                f,
+                "generation of {prompt} prompt + {max_new} new tokens cannot fit the \
+                 model's context window (max_seq {max_seq})"
+            ),
+            ServeError::MergedAdapter => f.write_str(
+                "adapter is serving in merged mode (train needs the adapted weights); \
+                 demote it before submitting train steps",
+            ),
             ServeError::WorkerPanicked => {
                 f.write_str("serve worker panicked while running this adapter; adapter retired")
             }
@@ -597,6 +632,12 @@ pub struct AdapterStats {
     pub prefill_chunks: u64,
     /// Prompt tokens fed through the batched `[p, d]` prefill path.
     pub prefill_tokens: u64,
+    /// Adapter currently serving in merged mode (dense folded twin
+    /// dispatched for eval/generate; train refused).
+    pub merged: bool,
+    /// Tokens emitted by dispatches that ran on the merged twin (subset
+    /// of `tokens_generated`; the difference ran the adapted path).
+    pub merged_tokens: u64,
 }
 
 impl AdapterStats {
@@ -701,6 +742,11 @@ pub struct ServeOptions {
     /// per-step group stall change. Defaults to one full K/V page
     /// (`native::DEFAULT_PREFILL_CHUNK`).
     pub prefill_chunk: usize,
+    /// Promote every adapter to merged mode at registration (and after
+    /// every transparent reload): the fleet serves dense folded twins,
+    /// train submits are refused typed. Off by default — see the module
+    /// docs' Merged serving section.
+    pub merge_resident: bool,
 }
 
 impl Default for ServeOptions {
@@ -718,6 +764,7 @@ impl Default for ServeOptions {
             tier_weights: Vec::new(),
             shed_after_ms: 0,
             prefill_chunk: native::DEFAULT_PREFILL_CHUNK,
+            merge_resident: false,
         }
     }
 }
@@ -736,6 +783,7 @@ impl From<crate::config::ServeConfig> for ServeOptions {
             tier_weights: sc.tier_weights.iter().map(|&w| w as u64).collect(),
             shed_after_ms: sc.shed_after_ms,
             prefill_chunk: sc.prefill_chunk,
+            merge_resident: sc.merge_resident,
             ..ServeOptions::default()
         }
     }
@@ -988,6 +1036,16 @@ struct Slot {
     /// Size of this adapter's artifact encoding, cached at registration
     /// and refreshed by checkpoint/spill (reporting: bytes-per-adapter).
     artifact_bytes: u64,
+    /// Dense folded twin dispatched instead of `backend` while the slot
+    /// serves merged (see the module docs' Merged serving section). The
+    /// adapted `backend` stays the source of truth: spill/checkpoint
+    /// always encode it, and drop the twin (fold determinism re-derives
+    /// it bit-identically on re-promotion).
+    merged_backend: Option<NativeBackend>,
+    /// Merged-mode flag. Outlives the twin across spill/reload (the
+    /// async reload lane re-promotes off-lock), so a spilled merged
+    /// adapter comes back merged.
+    merged: bool,
     stats: AdapterStats,
 }
 
@@ -1019,6 +1077,12 @@ struct ServeState {
     /// Sticky flag: set the first time a deadline-carrying request is
     /// admitted, so deadline-free fleets never pay for the expiry sweep.
     has_deadlines: bool,
+    /// Per-worker snapshot of its workspace K/V page pool's outstanding
+    /// page count, published at every put-back and on the panic
+    /// containment path (indexed by `WorkerCfg::index`). Sums to 0
+    /// whenever no generation is in flight — the leak invariant
+    /// [`ServeCore::pages_outstanding`] exposes and the panic tests pin.
+    pages_outstanding: Vec<u64>,
 }
 
 struct Shared {
@@ -1079,6 +1143,7 @@ impl ServeCore {
                 tier_cursor: 0,
                 tier_left: opts.tier_weights.first().copied().unwrap_or(1).max(1),
                 has_deadlines: false,
+                pages_outstanding: vec![0; opts.workers.max(1)],
             }),
             work: Condvar::new(),
             idle: Condvar::new(),
@@ -1087,6 +1152,7 @@ impl ServeCore {
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 let cfg = WorkerCfg {
+                    index: i,
                     burst: opts.burst.max(1),
                     decode_batch: opts.decode_batch.max(1),
                     coalesce_eval: opts.coalesce_eval,
@@ -1134,6 +1200,25 @@ impl ServeCore {
         } else {
             0
         };
+        // merge_resident fleets serve dense twins from the first dispatch.
+        // The fold runs here, before the scheduler lock is taken, so
+        // registering one adapter never stalls dispatch for the rest of
+        // the fleet. A failed fold degrades to the adapted path (warned,
+        // not fatal): the adapter still serves correctly, just slower.
+        let (merged_backend, merged) = if self.opts.merge_resident {
+            match backend.merged_twin() {
+                Ok(twin) => (Some(twin), true),
+                Err(e) => {
+                    crate::warn_log!(
+                        "register {label}: merge into backbone failed ({e}); \
+                         serving the adapted path instead"
+                    );
+                    (None, false)
+                }
+            }
+        } else {
+            (None, false)
+        };
         let mut st = relock(&self.shared.state);
         let id = AdapterId(st.next_id);
         st.next_id += 1;
@@ -1159,7 +1244,9 @@ impl ServeCore {
             loading: false,
             last_used: st.clock,
             artifact_bytes,
-            stats: AdapterStats::default(),
+            merged_backend,
+            merged,
+            stats: AdapterStats { merged, ..AdapterStats::default() },
         };
         // Reuse a fully-retired slot (evicted: state taken, not busy) so
         // the table doesn't grow without bound under churn.
@@ -1262,6 +1349,10 @@ impl ServeCore {
         while st.slots[idx].busy {
             st = rewait(&self.shared.idle, st);
         }
+        // The merged twin is derived state — the caller gets the adapted
+        // backend; a re-registration can re-promote.
+        st.slots[idx].merged_backend = None;
+        st.slots[idx].merged = false;
         let backend = match st.slots[idx].backend.take() {
             Some(b) => b,
             None => {
@@ -1370,6 +1461,105 @@ impl ServeCore {
         result
     }
 
+    /// Promote one live adapter to **merged mode**: fold its adapted
+    /// weights into a dense twin ([`NativeBackend::merged_twin`]) and
+    /// serve eval/generate dispatches from the twin until
+    /// [`ServeCore::demote`]. The fold runs **off the scheduler lock**
+    /// (the slot is borrowed busy, like `checkpoint`), so promoting one
+    /// adapter never stalls the fleet. Idempotent; refuses while the
+    /// adapter is spilled (submit once to trigger the transparent
+    /// reload, or raise the resident budget). While merged, train
+    /// submits are refused with [`ServeError::MergedAdapter`].
+    pub fn promote(&self, id: AdapterId) -> anyhow::Result<()> {
+        let mut st = relock(&self.shared.state);
+        let idx = st
+            .slots
+            .iter()
+            .position(|s| s.live && s.id == id)
+            .ok_or_else(|| anyhow::anyhow!("promote: no live adapter {id}"))?;
+        if st.slots[idx].merged && st.slots[idx].merged_backend.is_some() {
+            return Ok(());
+        }
+        loop {
+            if st.slots[idx].spill.is_some() || st.slots[idx].loading {
+                anyhow::bail!(
+                    "promote: adapter {id} is spilled to disk; submit once to reload it first"
+                );
+            }
+            if !st.slots[idx].busy {
+                break;
+            }
+            st = rewait(&self.shared.idle, st);
+            if !st.slots[idx].live || st.slots[idx].id != id {
+                anyhow::bail!("adapter {id} was evicted during promote");
+            }
+        }
+        // Borrow the state exclusively (busy, so dispatch and evict
+        // wait), fold outside the scheduler lock, put both back.
+        let backend = st.slots[idx].backend.take().expect("idle live slot holds its backend");
+        st.slots[idx].busy = true;
+        drop(st);
+        let folded = backend.merged_twin();
+        let mut st = relock(&self.shared.state);
+        st.slots[idx].backend = Some(backend);
+        st.slots[idx].busy = false;
+        let result = match folded {
+            Ok(twin) => {
+                st.slots[idx].merged_backend = Some(twin);
+                st.slots[idx].merged = true;
+                st.slots[idx].stats.merged = true;
+                Ok(())
+            }
+            // A failed fold leaves the slot exactly as it was: adapted,
+            // trainable, serving.
+            Err(e) => Err(e),
+        };
+        drop(st);
+        self.shared.work.notify_all();
+        self.shared.idle.notify_all();
+        result
+    }
+
+    /// Leave merged mode: drop the dense twin and dispatch the adapted
+    /// path again (train submits accepted once more). Waits out an
+    /// in-flight burst so a dispatched merged group completes on the
+    /// twin it started with. Idempotent.
+    pub fn demote(&self, id: AdapterId) -> anyhow::Result<()> {
+        let mut st = relock(&self.shared.state);
+        let idx = st
+            .slots
+            .iter()
+            .position(|s| s.live && s.id == id)
+            .ok_or_else(|| anyhow::anyhow!("demote: no live adapter {id}"))?;
+        while st.slots[idx].busy {
+            st = rewait(&self.shared.idle, st);
+            if !st.slots[idx].live || st.slots[idx].id != id {
+                anyhow::bail!("adapter {id} was evicted during demote");
+            }
+        }
+        st.slots[idx].merged_backend = None;
+        st.slots[idx].merged = false;
+        st.slots[idx].stats.merged = false;
+        Ok(())
+    }
+
+    /// Whether the adapter currently serves in merged mode (`None` for
+    /// unknown/evicted ids). True for a spilled merged adapter too —
+    /// the reload lane re-promotes it on the way back.
+    pub fn is_merged(&self, id: AdapterId) -> Option<bool> {
+        let st = relock(&self.shared.state);
+        st.slots.iter().find(|s| s.live && s.id == id).map(|s| s.merged)
+    }
+
+    /// Σ K/V-cache pages currently checked out across all worker
+    /// workspaces (each worker publishes its pool's outstanding count at
+    /// put-back and on the panic containment path). Returns to 0
+    /// whenever no generation is in flight — the no-leak invariant the
+    /// worker-panic tests pin.
+    pub fn pages_outstanding(&self) -> u64 {
+        relock(&self.shared.state).pages_outstanding.iter().sum()
+    }
+
     /// Register an adapter from an artifact file exported by
     /// [`ServeCore::checkpoint`] / `psoft export` — validated against this
     /// core's backbone fingerprint before anything is installed.
@@ -1448,6 +1638,10 @@ impl ServeCore {
             Ok(bytes) => {
                 st.slots[idx].spill = Some(path);
                 st.slots[idx].artifact_bytes = bytes;
+                // The merged twin is derived state — never spilled. The
+                // `merged` flag survives; the reload lane re-promotes
+                // (bit-identically, by fold determinism) on the way back.
+                st.slots[idx].merged_backend = None;
                 Ok(())
             }
             Err(e) => {
@@ -1478,10 +1672,16 @@ impl ServeCore {
     /// semantics.
     ///
     /// Generation requests are validated against the shared backbone
-    /// before anything is enqueued: decoder architecture, non-empty
-    /// in-vocab prompt, and `prompt.len() + max_new_tokens ≤ max_seq`
-    /// (the KV-cache budget) — violations return
-    /// `Admission::Rejected(ServeError::InvalidRequest)`.
+    /// before anything is enqueued: decoder architecture and a non-empty
+    /// in-vocab prompt — violations return
+    /// `Admission::Rejected(ServeError::InvalidRequest)` — and
+    /// `prompt.len() + max_new_tokens ≤ max_seq` (the KV-cache budget),
+    /// whose violation returns the typed
+    /// [`ServeError::DecodeOverflow`] carrying the numbers a client
+    /// needs to retry within the window. Train submits against an
+    /// adapter serving in merged mode are refused with
+    /// [`ServeError::MergedAdapter`] (see the module docs' Merged
+    /// serving section).
     pub fn submit(
         &self,
         id: AdapterId,
@@ -1498,10 +1698,19 @@ impl ServeCore {
                 let cfg = &self.backbone.cfg;
                 if !self.backbone.supports_decode()
                     || prompt.is_empty()
-                    || prompt.len() + max_new_tokens > cfg.max_seq
                     || prompt.iter().any(|&t| t < 0 || t as usize >= cfg.vocab_size)
                 {
                     return Admission::Rejected(ServeError::InvalidRequest);
+                }
+                if prompt.len() + max_new_tokens > cfg.max_seq {
+                    // Typed overflow with the retry-relevant numbers —
+                    // distinct from the shape/vocab rejections above so a
+                    // client can clamp max_new and resubmit.
+                    return Admission::Rejected(ServeError::DecodeOverflow {
+                        prompt: prompt.len(),
+                        max_new: max_new_tokens,
+                        max_seq: cfg.max_seq,
+                    });
                 }
                 let stream = native::DecodeStream::new(&prompt);
                 JobKind::Gen(GenJob {
@@ -1529,6 +1738,14 @@ impl ServeCore {
             return Admission::Rejected(ServeError::Draining {
                 queued: st.slots[idx].queue.len(),
             });
+        }
+        // Merged mode serves inference only: a train step needs the
+        // adapted parameterization the fold erased from the dispatch
+        // twin. Refuse typed; `demote` restores trainability.
+        if st.slots[idx].merged
+            && matches!(kind, JobKind::Batch { req: ReqKind::Train(_), .. })
+        {
+            return Admission::Rejected(ServeError::MergedAdapter);
         }
         // A zero (or elapsed-at-submit) deadline can never be met: shed
         // typed instead of queueing doomed work.
@@ -1849,6 +2066,8 @@ fn coalesces_with(j: &Job, seq0: usize, disc0: std::mem::Discriminant<Target>) -
 /// construction. Carries the backbone and spill knobs the async reload
 /// lane needs to run artifact I/O without a `ServeCore` reference.
 struct WorkerCfg {
+    /// This worker's index into `ServeState::pages_outstanding`.
+    index: usize,
     burst: usize,
     decode_batch: usize,
     coalesce_eval: bool,
@@ -1865,7 +2084,10 @@ struct WorkerCfg {
 /// is fine — exactly one `Unit` exists per worker at a time.)
 #[allow(clippy::large_enum_variant)]
 enum Unit {
-    Compute(NativeBackend, DispatchMode),
+    /// The bool records which backend the dispatch borrowed: `true` =
+    /// the slot's merged twin (put-back must restore `merged_backend`,
+    /// and emitted tokens count as merged).
+    Compute(NativeBackend, DispatchMode, bool),
     Reload(PathBuf),
 }
 
@@ -1932,6 +2154,9 @@ fn run_reload(shared: &Shared, cfg: &WorkerCfg, idx: usize, path: PathBuf) {
                 Ok(bytes) => {
                     st.slots[v].spill = Some(vpath);
                     st.slots[v].artifact_bytes = bytes;
+                    // Derived state — dropped on spill, re-folded on
+                    // reload (the `merged` flag survives).
+                    st.slots[v].merged_backend = None;
                     st.slots[v].busy = false;
                 }
                 Err(e) => {
@@ -1963,12 +2188,36 @@ fn run_reload(shared: &Shared, cfg: &WorkerCfg, idx: usize, path: PathBuf) {
     }));
     match loaded {
         Ok(Ok(backend)) => {
+            // A merged slot comes back merged: re-fold OFF the lock
+            // before installing (fold determinism makes the re-derived
+            // twin bit-identical to the one spill dropped). The flag is
+            // stable while this lane holds `busy`, so the short locked
+            // read then unlocked fold is race-free.
+            let want_merged = relock(&shared.state).slots[idx].merged;
+            let twin = if want_merged {
+                match backend.merged_twin() {
+                    Ok(t) => Some(t),
+                    Err(e) => {
+                        crate::warn_log!(
+                            "async reload: re-merge failed ({e:#}); serving the adapted path"
+                        );
+                        None
+                    }
+                }
+            } else {
+                None
+            };
             let mut st = relock(&shared.state);
             // Install unconditionally — if the slot was retired while we
             // loaded (concurrent evict waits on `busy` and will take the
             // backend; panic-retire of a Loading slot cannot happen, its
             // compute never ran), the waiter receives the state.
             st.slots[idx].backend = Some(backend);
+            if want_merged {
+                st.slots[idx].merged = twin.is_some();
+                st.slots[idx].stats.merged = twin.is_some();
+                st.slots[idx].merged_backend = twin;
+            }
             st.slots[idx].spill = None;
             st.slots[idx].loading = false;
             st.slots[idx].busy = false;
@@ -2137,9 +2386,22 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                                 st.trace.push(id);
                             }
                         }
-                        let backend =
-                            st.slots[idx].backend.take().expect("runnable slot has its backend");
-                        break (idx, Unit::Compute(backend, mode));
+                        // Merged slots dispatch their dense twin for
+                        // eval/generate work (train never reaches a
+                        // merged slot — submit refuses it typed). The
+                        // adapted backend stays in place; `busy` already
+                        // excludes a second dispatch of this slot.
+                        let use_merged =
+                            st.slots[idx].merged && st.slots[idx].merged_backend.is_some();
+                        let backend = if use_merged {
+                            st.slots[idx]
+                                .merged_backend
+                                .take()
+                                .expect("merged slot has its twin")
+                        } else {
+                            st.slots[idx].backend.take().expect("runnable slot has its backend")
+                        };
+                        break (idx, Unit::Compute(backend, mode, use_merged));
                     }
                 }
                 if st.shutdown && st.queued == 0 {
@@ -2148,12 +2410,12 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                 st = rewait(&shared.work, st);
             }
         };
-        let (mut backend, mode) = match unit {
+        let (mut backend, mode, used_merged) = match unit {
             Unit::Reload(path) => {
                 run_reload(shared, &cfg, slot_idx, path);
                 continue;
             }
-            Unit::Compute(backend, mode) => (backend, mode),
+            Unit::Compute(backend, mode, used_merged) => (backend, mode, used_merged),
         };
 
         // Service the dispatch unit outside the scheduler lock; other
@@ -2216,9 +2478,7 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                     .advance(&backend.model, burst, &mut ws, &mut fresh[..n_group])
                 {
                     Ok(_) => None,
-                    Err(native::DecodeError::PastMaxSeq { pos, max_seq }) => {
-                        Some(ServeError::DecodeOverflow { pos, max_seq })
-                    }
+                    Err(native::DecodeError::PastMaxSeq { pos: _, max_seq }) => Some(max_seq),
                 };
                 let (pf_chunks, pf_tokens) = gc.take_prefill_counters();
                 prefill_chunks += pf_chunks;
@@ -2237,13 +2497,21 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                         unreachable!("generation group holds generation jobs")
                     };
                     gen.stream = stream;
-                    if let Some(e) = overflow {
+                    if let Some(max_seq) = overflow {
                         // The group's step schedule is shared, so every
-                        // lane fails the same typed way; its pages
-                        // recycle immediately.
+                        // lane fails the same typed way — each with its
+                        // OWN prompt/max_new numbers so a client can
+                        // clamp and retry; its pages recycle immediately.
                         kv.free_pages(&mut ws);
                         lane_pool.push(kv);
-                        fail(&job.ticket, e);
+                        fail(
+                            &job.ticket,
+                            ServeError::DecodeOverflow {
+                                prompt: gen.prompt.len(),
+                                max_new: gen.max_new_tokens,
+                                max_seq,
+                            },
+                        );
                         current = None;
                         continue;
                     }
@@ -2388,10 +2656,24 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
             if let Some(t) = current.take() {
                 failed.push(t);
             }
-            failed.extend(jobs.drain(..).map(|j| j.ticket));
-            failed.extend(requeue.drain(..).map(|j| j.ticket));
-            gc = GroupDecodeCache::new();
+            // Free every K/V page this dispatch still has checked out
+            // BEFORE failing the tickets: lanes parked in the group
+            // cache (panic mid-burst), lanes still attached to group
+            // jobs not yet joined or already collected for the requeue.
+            // A contained panic must not leak pool pages — the
+            // containment tests pin `pages_outstanding` back to zero.
+            gc.release(&mut ws);
             gc.set_prefill_chunk(cfg.prefill_chunk);
+            for job in jobs.drain(..).chain(requeue.drain(..)) {
+                let Job { kind, ticket, .. } = job;
+                if let JobKind::Gen(mut gen) = kind {
+                    if let Some(mut kv) = gen.lane.take() {
+                        kv.free_pages(&mut ws);
+                        lane_pool.push(kv);
+                    }
+                }
+                failed.push(ticket);
+            }
             {
                 let mut st = relock(&shared.state);
                 st.worker_panics += 1;
@@ -2407,10 +2689,28 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                 slot.gens_inflight = 0;
                 slot.draining = false;
                 slot.loading = false;
-                failed.extend(slot.queue.drain(..).map(|j| j.ticket));
+                // Queued jobs can carry re-enqueued lanes from an
+                // earlier dispatch of this slot. Free their pages too
+                // (pages recycle across workers exactly as they do on
+                // the normal completion path) before the tickets fail.
+                while let Some(job) = slot.queue.pop_front() {
+                    let Job { kind, ticket, .. } = job;
+                    if let JobKind::Gen(mut gen) = kind {
+                        if let Some(mut kv) = gen.lane.take() {
+                            kv.free_pages(&mut ws);
+                            lane_pool.push(kv);
+                        }
+                    }
+                    failed.push(ticket);
+                }
+                // The retired slot's state is dropped wholesale — the
+                // merged twin with it.
+                slot.merged_backend = None;
+                slot.merged = false;
                 if let Some(p) = slot.spill.take() {
                     remove_spill_file(&p, "panic-retire");
                 }
+                st.pages_outstanding[cfg.index] = ws.page_pool().outstanding();
             }
             shared.work.notify_all();
             shared.idle.notify_all();
@@ -2441,7 +2741,17 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
                 st.queued += n_re;
             }
             let slot = &mut st.slots[slot_idx];
-            slot.backend = Some(backend);
+            // Restore the backend to the field it was borrowed from:
+            // the merged twin never overwrites the adapted source of
+            // truth. (A demote that raced this dispatch waited on
+            // `busy`, so the twin cannot resurrect a dropped mode —
+            // demote runs after this put-back and drops it again.)
+            if used_merged {
+                slot.merged_backend = Some(backend);
+                slot.stats.merged_tokens += tokens_generated;
+            } else {
+                slot.backend = Some(backend);
+            }
             slot.busy = false;
             slot.gens_inflight = 0;
             slot.stats.processed += done;
@@ -2462,6 +2772,10 @@ fn worker_loop(shared: &Shared, cfg: WorkerCfg) {
             if per_token_ns > 0 {
                 slot.stats.tok_latency.record(per_token_ns);
             }
+            // Publish this worker's live-page count: nonzero while its
+            // generations still hold K/V across dispatches, summing to
+            // zero fleet-wide once every lane has completed.
+            st.pages_outstanding[cfg.index] = ws.page_pool().outstanding();
             !live
         };
         shared.work.notify_all();
@@ -2755,8 +3069,12 @@ mod tests {
         );
         assert_eq!(
             submit_gen(&core, id, &p, cfg.max_seq, &t),
-            Admission::Rejected(ServeError::InvalidRequest),
-            "prompt + max_new past max_seq"
+            Admission::Rejected(ServeError::DecodeOverflow {
+                prompt: 2,
+                max_new: cfg.max_seq,
+                max_seq: cfg.max_seq,
+            }),
+            "prompt + max_new past max_seq is typed with the retry numbers"
         );
         let oov = Arc::new(vec![cfg.vocab_size as i32 + 3]);
         assert_eq!(
@@ -2800,6 +3118,141 @@ mod tests {
         assert!(submit_eval(&core, good, &tiny_batch(&cfg, 23), &ticket).is_admitted());
         assert!(ticket.wait().is_ok());
         core.drain();
+    }
+
+    #[test]
+    fn gen_worker_panic_releases_kv_pages() {
+        // A worker panic mid-generation-group must free every K/V page
+        // the group's lanes held — parked in the group cache or carried
+        // by re-enqueued jobs — back to the pool. The backend is built
+        // over a SMALLER-vocab twin backbone, so submit-time validation
+        // (against the core's backbone) admits a prompt token that
+        // panics the twin's embedding gather mid-decode.
+        let cfg = tiny_dec_cfg();
+        let mut rng = Rng::new(916);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let small_cfg = ModelConfig { vocab_size: 8, ..cfg };
+        let small_bb = Arc::new(Backbone::random(&small_cfg, &mut rng));
+        let opts = ServeOptions {
+            workers: 1,
+            start_paused: true,
+            burst: 2,
+            // One prompt token per lane per lockstep step: the poisoned
+            // token (depth 4) is reached on the SECOND dispatch, after
+            // both lanes already hold pages across a re-enqueue.
+            prefill_chunk: 1,
+            ..Default::default()
+        };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let bad = core.register_backend(
+            "bad",
+            NativeBackend::for_adapter(&small_bb, &lora_peft(), 7),
+        );
+        // Lane A is fully valid on the twin; lane B's 4th prompt token
+        // (20 ≥ twin vocab 8, < core vocab 32) passes validation and
+        // panics the twin.
+        let pa = Arc::new(vec![1i32, 2, 3]);
+        let pb = Arc::new(vec![1i32, 2, 3, 20]);
+        let (ta, tb) = (Ticket::new(4), Ticket::new(4));
+        assert!(submit_gen(&core, bad, &pa, 4, &ta).is_admitted());
+        assert!(submit_gen(&core, bad, &pb, 4, &tb).is_admitted());
+        core.resume();
+        assert_eq!(ta.wait(), Err(ServeError::WorkerPanicked));
+        assert_eq!(tb.wait(), Err(ServeError::WorkerPanicked));
+        assert_eq!(core.worker_panics(), 1);
+        core.drain();
+        assert_eq!(
+            core.pages_outstanding(),
+            0,
+            "contained panic must not leak K/V pages"
+        );
+    }
+
+    #[test]
+    fn merged_mode_serves_and_refuses_train() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(917);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let core = ServeCore::new(
+            Arc::clone(&bb),
+            ServeOptions { workers: 1, ..Default::default() },
+        );
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        let batch = tiny_batch(&cfg, 41);
+        let t = Ticket::new(batch.batch);
+        // One train step so the fold has a nontrivial update to merge.
+        assert!(submit_train(&core, id, &batch, &t).is_admitted());
+        t.wait().unwrap();
+        assert!(submit_eval(&core, id, &batch, &t).is_admitted());
+        let (loss_adapted, _) = t.wait().unwrap();
+
+        assert_eq!(core.is_merged(id), Some(false));
+        core.promote(id).unwrap();
+        core.promote(id).unwrap(); // idempotent
+        assert_eq!(core.is_merged(id), Some(true));
+        assert!(core.stats(id).unwrap().merged);
+
+        // The merged twin serves eval within the fold tolerance.
+        assert!(submit_eval(&core, id, &batch, &t).is_admitted());
+        let (loss_merged, _) = t.wait().unwrap();
+        assert!(
+            (loss_merged - loss_adapted).abs() < 1e-3,
+            "merged eval loss {loss_merged} vs adapted {loss_adapted}"
+        );
+
+        // Train needs the adapted parameterization: refused typed.
+        assert_eq!(
+            submit_train(&core, id, &batch, &t),
+            Admission::Rejected(ServeError::MergedAdapter)
+        );
+
+        // Demote restores trainability (and the adapted dispatch path).
+        core.demote(id).unwrap();
+        assert_eq!(core.is_merged(id), Some(false));
+        assert!(!core.stats(id).unwrap().merged);
+        assert!(submit_train(&core, id, &batch, &t).is_admitted());
+        t.wait().unwrap();
+        core.drain();
+    }
+
+    #[test]
+    fn merge_resident_auto_promotes_on_register() {
+        let cfg = tiny_dec_cfg();
+        let mut rng = Rng::new(918);
+        let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+        let core = ServeCore::new(
+            Arc::clone(&bb),
+            ServeOptions { workers: 1, merge_resident: true, ..Default::default() },
+        );
+        let id = core.register("lora_r3", &lora_peft(), 7);
+        assert_eq!(core.is_merged(id), Some(true), "merge_resident promotes at registration");
+
+        let prompt = Arc::new(vec![1i32, 5, 9]);
+        let max_new = 5usize;
+        let t = Ticket::new(max_new);
+        assert!(submit_gen(&core, id, &prompt, max_new, &t).is_admitted());
+        let (_, metric) = t.wait().unwrap();
+        assert_eq!(metric, max_new as f64);
+        let stats = core.stats(id).unwrap();
+        assert!(stats.merged);
+        assert_eq!(
+            stats.merged_tokens, stats.tokens_generated,
+            "every emitted token ran the merged twin"
+        );
+        assert_eq!(stats.tokens_generated, max_new as u64);
+        assert_eq!(core.pages_outstanding(), 0, "completed generation returned its pages");
+
+        // Merged fleets are inference-only until demoted.
+        let batch = tiny_batch(&tiny_cfg(), 42);
+        assert_eq!(
+            core.submit(
+                id,
+                Request::Train { batch, hyper: Hyper::default() },
+                &t,
+                SubmitOptions::default(),
+            ),
+            Admission::Rejected(ServeError::MergedAdapter)
+        );
     }
 
     #[test]

@@ -737,9 +737,9 @@ fn decode_past_max_seq_returns_typed_error() {
 }
 
 /// The serve layer validates decode lengths at submission: an over-long
-/// request is rejected typed (`InvalidRequest`) and never reaches a
-/// worker, so panic containment stays untriggered and subsequent valid
-/// requests are served normally.
+/// request is rejected typed (`DecodeOverflow`, carrying the offending
+/// lengths) and never reaches a worker, so panic containment stays
+/// untriggered and subsequent valid requests are served normally.
 #[test]
 fn serve_rejects_over_long_generation_without_worker_panic() {
     let cfg = dec_cfg();
@@ -761,7 +761,10 @@ fn serve_rejects_over_long_generation_without_worker_panic() {
         &t,
         SubmitOptions::default(),
     );
-    assert_eq!(adm.into_result(), Err(ServeError::InvalidRequest));
+    assert_eq!(
+        adm.into_result(),
+        Err(ServeError::DecodeOverflow { prompt: 12, max_new: 8, max_seq: 16 })
+    );
 
     // The same adapter still serves in-window generations, and no worker
     // ever tripped panic containment.

@@ -1,0 +1,392 @@
+//! Merge-to-backbone parity suite (`peft::merge_adapter_checked`,
+//! `NativeBackend::{merged_twin, to_merged_artifact, from_merged_artifact}`,
+//! serve-slot promotion):
+//!
+//! - **Pinned tolerances** — every method's `merge_tolerance` is re-pinned
+//!   here as a literal table; loosening one is a reviewed change, not a
+//!   silent drift.
+//! - **Forward parity, all 12 methods** — after a few train steps, the
+//!   merged twin's eval loss matches the adapted backend's within the
+//!   method's pinned tolerance, and folding twice is bit-identical.
+//! - **Decode parity, all 12 methods** — greedy and sampled token streams
+//!   through the serve core are identical before and after slot promotion
+//!   (sampling is seeded from the prompt, so the streams are comparable).
+//! - **Merged artifact round-trip** — `to_merged_artifact` → bytes →
+//!   `from_merged_artifact` reproduces the twin's eval bit-exactly, and
+//!   the adapter-state loader refuses merged artifacts typed.
+//! - **Serve lifecycle** — merged slots refuse train until demoted, and a
+//!   merged slot spilled to disk re-promotes on reload (fold determinism
+//!   makes the re-derived twin bit-identical).
+
+// Style allowances shared by the bench/test crates: index loops mirror
+// the math notation, and config structs are built default-then-override.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
+
+use psoft::config::{Arch, MethodKind, ModelConfig, ModuleKind, PeftConfig};
+use psoft::linalg::{Mat, Workspace};
+use psoft::model::native::{self, Batch, Target};
+use psoft::model::{Backbone, NativeModel};
+use psoft::peft::artifact::{AdapterArtifact, ArtifactError};
+use psoft::peft::{build_adapter, Adapter};
+use psoft::runtime::serve::{
+    Request, ServeCore, ServeError, ServeOptions, SubmitOptions, Ticket,
+};
+use psoft::runtime::{Hyper, NativeBackend};
+use psoft::util::rng::Rng;
+use std::sync::Arc;
+
+fn enc_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Encoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 10,
+        n_classes: 2,
+    }
+}
+
+fn dec_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: Arch::Decoder,
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 16,
+        n_classes: 0,
+    }
+}
+
+/// One PeftConfig per method, sized for the tiny backbones above.
+fn peft_for(method: MethodKind) -> PeftConfig {
+    let mut p = PeftConfig::new(method, 4);
+    p.modules = vec![ModuleKind::Q, ModuleKind::V];
+    p.oft_block_size = 4;
+    p.boft_b = 4;
+    p.boft_m = 2;
+    p
+}
+
+fn class_batch(cfg: &ModelConfig, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (bsz, seq) = (2usize, 6usize);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let labels: Vec<usize> = (0..bsz).map(|b| (tokens[b * seq] as usize) % 2).collect();
+    Batch { batch: bsz, seq, tokens, pad: vec![1.0; bsz * seq], target: Target::Class(labels) }
+}
+
+fn lm_batch(cfg: &ModelConfig, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (bsz, seq) = (2usize, 6usize);
+    let tokens: Vec<i32> = (0..bsz * seq).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    Batch {
+        batch: bsz,
+        seq,
+        tokens,
+        pad: vec![1.0; bsz * seq],
+        target: Target::LmMask(vec![1.0; bsz * seq]),
+    }
+}
+
+/// The per-method fold tolerances, re-pinned as literals: the weight-space
+/// defect bound each method's `merge_tolerance` promises. Loosening one of
+/// these is an API change and must show up in this table.
+fn pinned_tolerance(method: MethodKind) -> f64 {
+    match method {
+        MethodKind::Fft => 1e-6,
+        MethodKind::Lora
+        | MethodKind::Pissa
+        | MethodKind::LoraXs
+        | MethodKind::Vera => 1e-4,
+        MethodKind::Dora
+        | MethodKind::OftV2
+        | MethodKind::Svft
+        | MethodKind::Psoft => 2e-4,
+        MethodKind::Boft | MethodKind::Goft | MethodKind::QGoft => 5e-4,
+    }
+}
+
+/// A trained adapted backend (2 steps) for `method` on `bb`.
+fn trained_backend(bb: &Backbone, method: MethodKind, seed: u64, batch: &Batch) -> NativeBackend {
+    let peft = peft_for(method);
+    let mut rng = Rng::new(seed);
+    let model = NativeModel::from_backbone(bb, &peft, &mut rng);
+    let mut be = NativeBackend::with_seed(model, seed);
+    let hyper = Hyper { lr: 2e-3, head_lr: 2e-3, ..Default::default() };
+    let mut ws = Workspace::new();
+    for _ in 0..2 {
+        be.step_core(batch, &hyper, &mut ws);
+    }
+    be
+}
+
+#[test]
+fn merge_tolerances_are_pinned_per_method() {
+    let mut rng = Rng::new(0x70_11);
+    let w_pre = Mat::randn(16, 16, 0.1, &mut rng);
+    for method in MethodKind::ALL {
+        let a = build_adapter(&peft_for(method), &w_pre, &mut rng);
+        assert_eq!(
+            a.merge_tolerance(),
+            pinned_tolerance(method),
+            "{}: merge_tolerance drifted from the pinned table",
+            method.name()
+        );
+    }
+}
+
+/// Folding a trained adapter into dense weights preserves the forward
+/// within the method's pinned tolerance — and the fold is deterministic,
+/// so two twins evaluate bit-identically.
+#[test]
+fn merged_forward_matches_adapted_for_all_12_methods() {
+    let cfg = enc_cfg();
+    let mut rng = Rng::new(8001);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let batch = class_batch(&cfg, 17);
+
+    for method in MethodKind::ALL {
+        let name = method.name();
+        let mut be = trained_backend(&bb, method, 8100 + method as u64, &batch);
+        let mut ws = Workspace::new();
+        let (l_adapted, _) = native::evaluate_into(&be.model, &batch, &mut be.bufs, &mut ws);
+
+        let mut twin = be.merged_twin().unwrap_or_else(|e| panic!("{name}: fold failed: {e:#}"));
+        assert_eq!(twin.model.num_adapter_params(), 0, "{name}: twin serves dense, no adapter");
+        let mut ws2 = Workspace::new();
+        let (l_merged, _) = native::evaluate_into(&twin.model, &batch, &mut twin.bufs, &mut ws2);
+
+        let tol = pinned_tolerance(method);
+        assert!(
+            (l_adapted - l_merged).abs() <= 100.0 * tol * (1.0 + l_adapted.abs()),
+            "{name}: merged eval loss drifted past the pinned tolerance: \
+             adapted {l_adapted} vs merged {l_merged} (tol {tol})"
+        );
+
+        // Fold determinism: a second twin evaluates bit-identically.
+        let mut twin2 = be.merged_twin().unwrap();
+        let mut ws3 = Workspace::new();
+        let (l_again, _) = native::evaluate_into(&twin2.model, &batch, &mut twin2.bufs, &mut ws3);
+        assert_eq!(l_merged, l_again, "{name}: repeated folds must be bit-identical");
+    }
+}
+
+fn submit_gen(
+    core: &ServeCore,
+    id: psoft::peft::AdapterId,
+    prompt: &Arc<Vec<i32>>,
+    max_new: usize,
+    greedy: bool,
+) -> Ticket {
+    let t = Ticket::new(max_new);
+    core.submit(
+        id,
+        Request::Generate { prompt: Arc::clone(prompt), max_new_tokens: max_new, greedy },
+        &t,
+        SubmitOptions::default(),
+    )
+    .into_result()
+    .unwrap();
+    t
+}
+
+fn stream_of(t: &Ticket) -> Vec<i32> {
+    t.wait().unwrap();
+    t.with_tokens(|tok| tok.to_vec())
+}
+
+/// Greedy and sampled decode streams through the serve core are identical
+/// before and after slot promotion, for every method. Sampling is seeded
+/// from the prompt (`sample_seed`), so both paths draw the same stream.
+#[test]
+fn merged_decode_streams_match_adapted_for_all_12_methods() {
+    let cfg = dec_cfg();
+    let mut rng = Rng::new(8201);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let batch = lm_batch(&cfg, 23);
+    let prompt = Arc::new(vec![1i32, 2, 3]);
+    let max_new = 5usize;
+
+    for method in MethodKind::ALL {
+        let name = method.name();
+        let be = trained_backend(&bb, method, 8300 + method as u64, &batch);
+        let opts = ServeOptions { workers: 1, ..Default::default() };
+        let core = ServeCore::new(Arc::clone(&bb), opts);
+        let id = core.register_backend(&format!("{name}_m"), be);
+
+        let tg = submit_gen(&core, id, &prompt, max_new, true);
+        let ts = submit_gen(&core, id, &prompt, max_new, false);
+        core.drain();
+        let (greedy_adapted, sampled_adapted) = (stream_of(&tg), stream_of(&ts));
+
+        core.promote(id).unwrap_or_else(|e| panic!("{name}: promote failed: {e:#}"));
+        assert_eq!(core.is_merged(id), Some(true), "{name}: slot must report merged");
+
+        let tg2 = submit_gen(&core, id, &prompt, max_new, true);
+        let ts2 = submit_gen(&core, id, &prompt, max_new, false);
+        core.drain();
+        assert_eq!(stream_of(&tg2), greedy_adapted, "{name}: greedy stream changed under merge");
+        assert_eq!(stream_of(&ts2), sampled_adapted, "{name}: sampled stream changed under merge");
+
+        let stats = core.stats(id).unwrap();
+        assert!(stats.merged, "{name}: stats must flag merged serving");
+        assert_eq!(
+            stats.merged_tokens,
+            2 * max_new as u64,
+            "{name}: only post-promotion tokens count as merged"
+        );
+        assert_eq!(stats.tokens_generated, 4 * max_new as u64, "{name}: total stream length");
+    }
+}
+
+/// `to_merged_artifact` → bytes → `from_merged_artifact` reproduces the
+/// merged twin's eval bit-exactly (merged sections are raw f32), and the
+/// adapter-state loader refuses merged artifacts with a typed error.
+#[test]
+fn merged_artifact_roundtrips_bit_exactly_for_all_12_methods() {
+    let cfg = enc_cfg();
+    let mut rng = Rng::new(8401);
+    let bb = Backbone::random(&cfg, &mut rng);
+    let batch = class_batch(&cfg, 29);
+
+    for method in MethodKind::ALL {
+        let name = method.name();
+        let be = trained_backend(&bb, method, 8500 + method as u64, &batch);
+        let label = format!("{name}_merged");
+
+        let art = be
+            .to_merged_artifact(&label, &bb)
+            .unwrap_or_else(|e| panic!("{name}: merged export failed: {e:#}"));
+        assert!(art.merged && art.inference_only, "{name}: merged artifacts set both flags");
+        assert!(!art.f16_sections, "{name}: merged sections stay f32 for bit-exact round-trips");
+        // 2 adapted modules per layer × 2 layers, plus head.w/head.b.
+        assert_eq!(art.sections.len(), 6, "{name}: folded section count");
+
+        let art2 = AdapterArtifact::from_bytes(&art.to_bytes())
+            .unwrap_or_else(|e| panic!("{name}: reparse failed: {e}"));
+        assert_eq!(art2, art, "{name}: byte round-trip");
+
+        // The adapter-state loader refuses merged artifacts typed.
+        assert!(
+            matches!(
+                NativeBackend::from_artifact(&bb, &art2),
+                Err(ArtifactError::ModelMismatch(_))
+            ),
+            "{name}: from_artifact must refuse merged artifacts"
+        );
+
+        let mut twin = be.merged_twin().unwrap();
+        let mut restored = NativeBackend::from_merged_artifact(&bb, &art2)
+            .unwrap_or_else(|e| panic!("{name}: merged import failed: {e:#}"));
+        assert_eq!(restored.model.num_adapter_params(), 0, "{name}: restored model is dense");
+        let mut ws = Workspace::new();
+        let mut ws2 = Workspace::new();
+        let (l_twin, m_twin) = native::evaluate_into(&twin.model, &batch, &mut twin.bufs, &mut ws);
+        let (l_art, m_art) =
+            native::evaluate_into(&restored.model, &batch, &mut restored.bufs, &mut ws2);
+        assert_eq!(l_twin, l_art, "{name}: merged artifact eval must be bit-exact");
+        assert_eq!(m_twin, m_art, "{name}: merged artifact metric must be bit-exact");
+    }
+}
+
+/// Merged slots refuse train submissions typed until demoted; demotion
+/// restores the trainable path.
+#[test]
+fn merged_slot_refuses_train_until_demoted() {
+    let cfg = enc_cfg();
+    let mut rng = Rng::new(8601);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let batch = Arc::new(class_batch(&cfg, 31));
+    let core = ServeCore::new(Arc::clone(&bb), ServeOptions { workers: 1, ..Default::default() });
+    let peft = peft_for(MethodKind::Psoft);
+    let id = core.register("psoft_m", &peft, 41);
+    let hyper = Hyper::default();
+
+    core.promote(id).unwrap();
+    let t = Ticket::new(batch.batch);
+    let adm = core.submit(
+        id,
+        Request::Train { batch: Arc::clone(&batch), hyper },
+        &t,
+        SubmitOptions::default(),
+    );
+    assert_eq!(adm.into_result(), Err(ServeError::MergedAdapter));
+    // Eval still serves (on the merged twin).
+    let te = Ticket::new(batch.batch);
+    core.submit(id, Request::Eval { batch: Arc::clone(&batch) }, &te, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+    core.drain();
+    te.wait().unwrap();
+
+    core.demote(id).unwrap();
+    assert_eq!(core.is_merged(id), Some(false));
+    let t2 = Ticket::new(batch.batch);
+    core.submit(
+        id,
+        Request::Train { batch: Arc::clone(&batch), hyper },
+        &t2,
+        SubmitOptions::default(),
+    )
+    .into_result()
+    .unwrap();
+    core.drain();
+    t2.wait().unwrap();
+}
+
+/// A merged slot spilled to disk re-promotes on reload: the merged flag
+/// survives the spill, the twin is re-derived from the restored adapter
+/// state, and — because folds are deterministic — the reloaded slot's
+/// eval is bit-identical to the pre-spill merged eval.
+#[test]
+fn merged_slot_spills_and_reloads_merged() {
+    let cfg = enc_cfg();
+    let mut rng = Rng::new(8701);
+    let bb = Arc::new(Backbone::random(&cfg, &mut rng));
+    let batch = Arc::new(class_batch(&cfg, 37));
+    let opts = ServeOptions { workers: 1, max_resident: 1, ..Default::default() };
+    let core = ServeCore::new(Arc::clone(&bb), opts);
+    let peft = peft_for(MethodKind::Lora);
+    let a = core.register("lora_a", &peft, 51);
+    core.promote(a).unwrap();
+
+    let te = Ticket::new(batch.batch);
+    core.submit(a, Request::Eval { batch: Arc::clone(&batch) }, &te, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+    core.drain();
+    let (loss_merged, _) = te.wait().unwrap();
+
+    // Registering a second adapter past the resident budget spills the
+    // idle merged slot; the flag survives, the twin is dropped with it.
+    let b = core.register("lora_b", &peft, 52);
+    assert_eq!(core.is_merged(a), Some(true), "merged flag must survive the spill");
+
+    // Next submit reloads the adapter state and re-promotes off-lock.
+    let t2 = Ticket::new(batch.batch);
+    core.submit(a, Request::Eval { batch: Arc::clone(&batch) }, &t2, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+    core.drain();
+    let (loss_reloaded, _) = t2.wait().unwrap();
+    assert_eq!(
+        loss_merged, loss_reloaded,
+        "re-derived twin must evaluate bit-identically to the pre-spill twin"
+    );
+    assert_eq!(core.is_merged(a), Some(true), "reload must re-promote the slot");
+    assert!(core.stats(a).unwrap().merged);
+
+    // The untouched neighbour still serves adapted.
+    assert_eq!(core.is_merged(b), Some(false));
+    let t3 = Ticket::new(batch.batch);
+    core.submit(b, Request::Eval { batch: Arc::clone(&batch) }, &t3, SubmitOptions::default())
+        .into_result()
+        .unwrap();
+    core.drain();
+    t3.wait().unwrap();
+}
